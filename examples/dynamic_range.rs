@@ -1,0 +1,37 @@
+//! Dynamic range demo — why floating point (paper §5.3 / Fig. 11).
+//!
+//! Sweeps the input dynamic-range parameter r and prints the SNR of the
+//! 32-bit fixed-point rotator of ref [20] against the paper's FP-HUB
+//! unit, reproducing Fig. 11's crossover and slump interactively.
+//!
+//! Run: `cargo run --release --example dynamic_range [-- --nmat 500]`
+
+use fp_givens::analysis::{run_mc, EngineSpec};
+use fp_givens::fp::FpFormat;
+use fp_givens::rotator::RotatorConfig;
+use fp_givens::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    let nmat = args.get_as("nmat", 400usize);
+    let fixed = EngineSpec::Fixed { n: 32, niter: 27, hub: false };
+    let hub = EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+
+    println!("SNR (dB) vs dynamic range r — {nmat} random 4x4 matrices per point\n");
+    println!("{:>3} | {:>12} | {:>12} | {}", "r", "FixP(32)", "FP-HUB(26)", "winner");
+    let mut crossed = false;
+    for r in [1u32, 2, 4, 6, 8, 10, 12, 14, 16, 20, 25, 30, 40] {
+        let f = run_mc(fixed, 4, r, nmat, 1234).snr_db;
+        let h = run_mc(hub, 4, r, nmat, 1234).snr_db;
+        let winner = if f > h { "fixed" } else { "FP-HUB" };
+        if !crossed && h > f {
+            crossed = true;
+            println!("{r:>3} | {f:>12.1} | {h:>12.1} | {winner}   <-- crossover");
+        } else {
+            println!("{r:>3} | {f:>12.1} | {h:>12.1} | {winner}");
+        }
+    }
+    println!("\nfixed point wins at small r (more effective bits), floating point");
+    println!("holds ~135 dB over the whole range; the fixed line collapses once");
+    println!("small matrices quantize below the 2^-30 grid (paper Fig. 11).");
+}

@@ -1,0 +1,53 @@
+//! Quickstart: build a Givens rotation unit, rotate a pair, decompose a
+//! matrix, and inspect the hardware model — the 60-second tour.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fp_givens::fp::FpFormat;
+use fp_givens::hwmodel::{energy_pj, rotator_cost, Tech};
+use fp_givens::qrd::QrdEngine;
+use fp_givens::rotator::{GivensRotator, RotatorConfig};
+
+fn main() {
+    // 1. a HUB single-precision Givens rotation unit, the paper's
+    //    recommended design point (N = 26, 24 microrotations)
+    let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+    let rot = GivensRotator::new(cfg);
+    println!("unit: {}\n", cfg.label());
+
+    // 2. one Givens rotation: vector (3, 4) to the x-axis, then replay
+    //    the recorded angle on another pair
+    let (vx, vy, angle) = rot.vector(rot.encode(3.0), rot.encode(4.0));
+    println!("vectoring (3, 4):");
+    println!("  modulus  = {:.7}   (exact: 5)", vx.to_f64(cfg.fmt));
+    println!("  residual = {:.3e}", vy.to_f64(cfg.fmt));
+    let (rx, ry) = rot.rotate(rot.encode(1.0), rot.encode(1.0), &angle);
+    println!("rotating (1, 1) by the same angle:");
+    println!("  ({:.7}, {:.7})   (exact: 1.4, -0.2)\n", rx.to_f64(cfg.fmt), ry.to_f64(cfg.fmt));
+
+    // 3. QR-decompose a 4×4 matrix
+    let a = vec![
+        vec![4.0, 1.0, -2.0, 2.0],
+        vec![1.0, 2.0, 0.0, 1.0],
+        vec![-2.0, 0.0, 3.0, -2.0],
+        vec![2.0, 1.0, -2.0, -1.0],
+    ];
+    let eng = QrdEngine::new(cfg);
+    let res = eng.decompose(&a);
+    println!("R (upper triangular):");
+    for row in &res.r {
+        println!("  {:?}", row.iter().map(|v| (v * 1e4).round() / 1e4).collect::<Vec<_>>());
+    }
+    let b = res.reconstruct();
+    let snr = fp_givens::analysis::snr_db(&a, &b);
+    println!("reconstruction SNR: {snr:.1} dB");
+    println!("orthogonality defect: {:.2e}\n", res.orthogonality_defect());
+
+    // 4. what would this cost on a Virtex-6?
+    let cost = rotator_cost(&cfg, &Tech::virtex6());
+    println!("modelled Virtex-6 implementation:");
+    println!("  {:.0} LUTs, {:.0} registers", cost.luts, cost.regs);
+    println!("  critical path {:.2} ns  (f_max {:.0} MHz)", cost.delay_ns, cost.fmax_mhz());
+    println!("  {:.0} pJ per rotation op", energy_pj(&cost));
+    println!("  latency {} cycles, one element pair per cycle", cost.latency_cycles);
+}

@@ -1,0 +1,135 @@
+//! END-TO-END DRIVER: the full three-layer system on a real workload.
+//!
+//! Loads the AOT-compiled JAX/Pallas QRD artifact (L2+L1, built once by
+//! `make artifacts`), serves batched QRD requests through the Rust
+//! coordinator (L3) from concurrent clients, verifies a sample of the
+//! responses against the double-precision reference, and reports
+//! latency/throughput — proving all layers compose with Python never on
+//! the request path. Falls back to the bit-identical native engine if
+//! the artifact has not been built.
+//!
+//! Run: `make artifacts && cargo run --release --example streaming_service`
+//! Results recorded in EXPERIMENTS.md §E2E.
+
+use fp_givens::analysis::snr_db;
+use fp_givens::coordinator::{BatchPolicy, NativeEngine, PjrtEngine, QrdService};
+use fp_givens::fp::{FpFormat, HubFp};
+use fp_givens::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+const ARTIFACT: &str = "artifacts/model.hlo.txt";
+
+fn main() {
+    let use_pjrt = std::path::Path::new(ARTIFACT).exists();
+    let policy = BatchPolicy { max_batch: 256, max_wait_us: 300 };
+    let svc = Arc::new(if use_pjrt {
+        println!("engine: PJRT artifact {ARTIFACT} (L1 Pallas kernel + L2 JAX graph, AOT)");
+        QrdService::start(
+            || Box::new(PjrtEngine::load(ARTIFACT, 256).expect("artifact load")),
+            policy,
+        )
+    } else {
+        println!("engine: native (run `make artifacts` for the PJRT path)");
+        QrdService::start(|| Box::new(NativeEngine::flagship()), policy)
+    });
+
+    let clients = 8usize;
+    let per_client = 2500usize;
+    let total = clients * per_client;
+    println!("load: {clients} concurrent clients × {per_client} 4x4 QRD requests (pipelined)\n");
+
+    // warm-up: the first PJRT execution pays the XLA compile; keep it
+    // out of the measured window
+    svc.submit([0u32; 16]).recv().expect("warmup");
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let mut latencies = Vec::with_capacity(per_client);
+            let mut checked = 0usize;
+            let mut snr_sum = 0.0f64;
+            // pipelined client: keep a window of requests in flight so
+            // the batcher can actually fill batches (ingress queue
+            // backpressure bounds memory)
+            let window = 512usize;
+            let mut inflight = std::collections::VecDeque::new();
+            for k in 0..per_client {
+                let scale = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+                let a: [u32; 16] =
+                    std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits());
+                inflight.push_back((a, k, svc.submit(a)));
+                if inflight.len() >= window {
+                    let (a, k, rx) = inflight.pop_front().unwrap();
+                    let resp = rx.recv().expect("response");
+                    latencies.push(resp.latency_us);
+                    if k % 50 == 0 {
+                        snr_sum += verify(&a, &resp.out);
+                        checked += 1;
+                    }
+                }
+            }
+            for (a, k, rx) in inflight {
+                let resp = rx.recv().expect("response");
+                latencies.push(resp.latency_us);
+                if k % 50 == 0 {
+                    snr_sum += verify(&a, &resp.out);
+                    checked += 1;
+                }
+            }
+            (latencies, snr_sum / checked as f64)
+        }));
+    }
+
+    let mut latencies = Vec::with_capacity(total);
+    let mut snr_mean = 0.0;
+    for h in handles {
+        let (l, s) = h.join().unwrap();
+        latencies.extend(l);
+        snr_mean += s / clients as f64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    let m = svc.metrics();
+    println!("completed         : {total} requests in {wall:.3} s");
+    println!("throughput        : {:.0} QRD/s", total as f64 / wall);
+    println!("batches           : {} (mean size {:.1})", m.batches(), m.mean_batch());
+    println!("engine busy       : {:.1}% of wall", m.busy_secs() / wall * 100.0);
+    println!(
+        "latency µs        : p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+        pct(0.50),
+        pct(0.90),
+        pct(0.99),
+        latencies.last().unwrap()
+    );
+    println!("sampled accuracy  : mean reconstruction SNR {snr_mean:.1} dB (single-precision level)");
+    assert!(snr_mean > 110.0, "accuracy regression");
+    println!("\nE2E OK: router → batcher → {} → responses",
+        if use_pjrt { "PJRT executable" } else { "native engine" });
+}
+
+/// Reconstruct B = Gᵀ·R from the response bits and compare with A.
+fn verify(a_bits: &[u32; 16], out_bits: &[u32; 32]) -> f64 {
+    let fmt = FpFormat::SINGLE;
+    let dec = |w: u32| HubFp::from_bits(fmt, w as u64).to_f64(fmt);
+    let a: Vec<Vec<f64>> =
+        (0..4).map(|i| (0..4).map(|j| dec(a_bits[i * 4 + j])).collect()).collect();
+    let r: Vec<Vec<f64>> =
+        (0..4).map(|i| (0..4).map(|j| dec(out_bits[i * 8 + j])).collect()).collect();
+    let g: Vec<Vec<f64>> =
+        (0..4).map(|i| (0..4).map(|j| dec(out_bits[i * 8 + 4 + j])).collect()).collect();
+    let mut b = vec![vec![0.0; 4]; 4];
+    for i in 0..4 {
+        for j in 0..4 {
+            for k in 0..4 {
+                b[i][j] += g[k][i] * r[k][j];
+            }
+        }
+    }
+    snr_db(&a, &b)
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: L2 JAX model -> HLO *text* artifacts for the Rust
+runtime (PJRT), plus cross-language golden vectors.
+
+HLO text (NOT ``lowered.compiler_ir("hlo").serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects; the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Usage:
+    python -m compile.aot --out ../artifacts/model.hlo.txt [--batch 256]
+"""
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_qrd(batch: int) -> str:
+    spec = jax.ShapeDtypeStruct((batch, 4, 4), np.float32)
+    lowered = jax.jit(model.qrd_f32).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def golden_inputs(nmat: int, seed: int = 7) -> np.ndarray:
+    """Deterministic f32 test matrices with a few binades of spread."""
+    rng = np.random.default_rng(seed)
+    scale = np.exp2(rng.uniform(-4, 4, size=(nmat, 1, 1)))
+    a = rng.uniform(-1.0, 1.0, size=(nmat, 4, 4)) * scale
+    return a.astype(np.float32)
+
+
+def write_golden(path: str, nmat: int = 8) -> None:
+    """Golden vectors: input/output bit patterns of the L2 model, for
+    bit-exact comparison against the Rust engine and PJRT runtime."""
+    a = golden_inputs(nmat)
+    out = np.asarray(model.qrd_bits(a.view(np.uint32)))
+    with open(path, "w") as f:
+        f.write(f"nmat {nmat} m 4\n")
+        for i in range(nmat):
+            f.write("in " + " ".join(f"{w:08x}" for w in a[i].view(np.uint32).ravel()) + "\n")
+            f.write("out " + " ".join(f"{w:08x}" for w in out[i].ravel()) + "\n")
+    print(f"wrote {nmat} golden matrices to {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--golden", default=None, help="golden vector output path")
+    args = ap.parse_args()
+
+    text = lower_qrd(args.batch)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text)} chars of HLO to {args.out} (batch={args.batch})")
+
+    # a second copy under the descriptive name the CLI/serve path uses
+    alt = os.path.join(os.path.dirname(os.path.abspath(args.out)), "qrd4_hub.hlo.txt")
+    with open(alt, "w") as f:
+        f.write(text)
+    print(f"wrote {alt}")
+
+    golden = args.golden or os.path.join(
+        os.path.dirname(os.path.abspath(args.out)), "qrd4_golden.txt"
+    )
+    write_golden(golden)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernel: batched fixed-point CORDIC Givens rotation.
+
+One grid cell processes a tile of independent row-pair rotations. Each
+batch row holds the aligned block-FP significands of one Givens rotation:
+column 0 is the pivot pair (vectoring — its σ sequence is derived on the
+fly) and the remaining columns are rotated with the same σ sequence, the
+dataflow the paper's pipelined rotator implements with σ registers
+(Fig. 3) — here the pipeline parallelism becomes batch parallelism.
+
+Everything is int32 two's complement on W = N+2 bits with hardware
+wraparound; the HUB adder follows the paper's Fig. 6 carry-in wiring
+exactly (see rust/src/fixed/mod.rs for the reference semantics).
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper's target
+is an FPGA pipeline, not a GPU; the kernel is integer VPU work, so tiles
+are sized for VMEM residency (block_b × e × 4 bytes × 2 operands per
+iteration) and the MXU is not used. interpret=True is mandatory for
+CPU-PJRT execution.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["givens_rotate", "make_kernel", "wrap", "hub_addsub", "addsub"]
+
+
+def wrap(v, w):
+    """Wrap int32 values to w-bit two's complement (hardware wraparound)."""
+    sh = 32 - w
+    return (v << sh) >> sh
+
+
+def hub_addsub(a, b, shift, sub, w):
+    """HUB add/sub step (paper Fig. 6): operands carry an implicit LSB=1.
+
+    eb = ±(2b+1) (bitwise inversion of the stored bits for subtraction,
+    ILSB stays 1), arithmetically shifted; the adder consumes its top
+    bits plus the first discarded bit as carry-in.
+    """
+    eb = 2 * b + 1
+    eb = jnp.where(sub, -eb, eb)
+    t = eb >> shift
+    return wrap(a + (t >> 1) + (t & 1), w)
+
+
+def addsub(a, b, shift, sub, w):
+    """Conventional add/sub step: truncated arithmetic shift."""
+    t = b >> shift
+    return wrap(jnp.where(sub, a - t, a + t), w)
+
+
+def _cordic_body(x, y, niter, w, hub):
+    """Shared CORDIC loop: vectoring on column 0, σ broadcast to all.
+
+    x, y: int32 [B, E] aligned significands (W-bit two's complement).
+    """
+    # flip pre-stage: vectoring pair in the left half-plane ⇒ negate both
+    flip = x[:, 0:1] < 0
+    if hub:
+        x = jnp.where(flip, wrap(~x, w), x)
+        y = jnp.where(flip, wrap(~y, w), y)
+    else:
+        x = jnp.where(flip, wrap(-x, w), x)
+        y = jnp.where(flip, wrap(-y, w), y)
+
+    def body(i, xy):
+        x, y = xy
+        sigma = y[:, 0:1] >= 0  # σ from the pivot pair, broadcast
+        if hub:
+            xn = hub_addsub(x, y, i, ~sigma, w)
+            yn = hub_addsub(y, x, i, sigma, w)
+        else:
+            xn = addsub(x, y, i, ~sigma, w)
+            yn = addsub(y, x, i, sigma, w)
+        return xn, yn
+
+    x, y = jax.lax.fori_loop(0, niter, body, (x, y))
+    return x, y
+
+
+def make_kernel(niter, w, hub=True):
+    """Build the Pallas kernel body for a given configuration."""
+
+    def kernel(x_ref, y_ref, ox_ref, oy_ref):
+        x = x_ref[...]
+        y = y_ref[...]
+        xo, yo = _cordic_body(x, y, niter, w, hub)
+        ox_ref[...] = xo
+        oy_ref[...] = yo
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("niter", "w", "hub", "block_b"))
+def givens_rotate(x, y, *, niter, w, hub=True, block_b=128):
+    """Rotate a batch of row-pairs: vectoring on column 0 of each row.
+
+    x, y: int32 [B, E]; returns rotated (x', y') of the same shape.
+    Grid over the batch dimension, one VMEM tile per cell.
+    """
+    b, e = x.shape
+    block_b = min(block_b, b)
+    grid = (pl.cdiv(b, block_b),)
+    spec = pl.BlockSpec((block_b, e), lambda i: (i, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((b, e), jnp.int32),
+        jax.ShapeDtypeStruct((b, e), jnp.int32),
+    ]
+    xo, yo = pl.pallas_call(
+        make_kernel(niter, w, hub),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(x, y)
+    return xo, yo
+
+
+def reference_rotate(x, y, *, niter, w, hub=True):
+    """Pure-jnp oracle of the same computation (no pallas_call)."""
+    return _cordic_body(x, y, niter, w, hub)

@@ -1,0 +1,54 @@
+"""Pure-jnp / pure-python oracles for the L1 kernel.
+
+Two levels of reference:
+- ``reference_rotate`` (re-exported from cordic.py): same integer math
+  without pallas_call — must match the kernel bit-for-bit.
+- ``float_reference``: double-precision rotation through the exact
+  Givens angle — the kernel must match it to CORDIC accuracy
+  (≈ 2^(1-niter) radians of residual angle plus quantization).
+"""
+
+import math
+
+import numpy as np
+
+from .cordic import reference_rotate  # noqa: F401  (re-export)
+
+
+def gain(niter: int) -> float:
+    """CORDIC gain K = Π √(1 + 2^-2i)."""
+    k = 1.0
+    for i in range(niter):
+        k *= math.sqrt(1.0 + 2.0 ** (-2 * i))
+    return k
+
+
+def float_reference(x, y, niter):
+    """Double-precision Givens rotation of the batch through the pivot
+    angle, scaled by the CORDIC gain (no quantization).
+
+    x, y: float64 [B, E]; pivot pair is column 0.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    theta = np.arctan2(y[:, 0:1], x[:, 0:1])
+    c, s = np.cos(theta), np.sin(theta)
+    k = gain(niter)
+    xr = k * (c * x + s * y)
+    yr = k * (-s * x + c * y)
+    return xr, yr
+
+
+def to_fixed(v, n):
+    """Quantize reals into the n-bit conventional grid (round, saturate)."""
+    scaled = np.round(np.asarray(v) * 2.0 ** (n - 2))
+    lim = 2 ** (n - 1)
+    return np.clip(scaled, -lim, lim - 1).astype(np.int32)
+
+
+def from_fixed(v, n, hub=False):
+    """Decode n-bit words to reals (HUB: (2v+1)/2^(n-1))."""
+    v = np.asarray(v, dtype=np.float64)
+    if hub:
+        return (2 * v + 1) / 2.0 ** (n - 1)
+    return v / 2.0 ** (n - 2)

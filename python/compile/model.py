@@ -1,0 +1,188 @@
+"""Layer-2 JAX model: batched bit-accurate 4x4 HUB FP QR decomposition.
+
+The full Givens-rotation QRD of the paper's error analysis (§5.1), as a
+single jittable graph over a batch of matrices:
+
+  f32[B, m, m]  --bitcast-->  HUB-FP bit patterns
+     for each schedule step: input converter (Fig. 5, jnp integer ops)
+                             -> L1 Pallas CORDIC kernel (cordic.py)
+                             -> 1/K compensation (int64)
+                             -> output converter (Fig. 7)
+  --> f32[B, m, 2m]   ([R | G] with G = Q^T)
+
+Every operation is bit-identical to the Rust reference implementation
+(rust/src/{converters,cordic,rotator,qrd}); the cross-language golden
+tests assert exact equality of the output bit patterns.
+
+Flagship configuration: HUBFull single precision, N = 26, 24
+microrotations (paper's recommended single-precision HUB design point).
+"""
+
+import functools
+import math
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import cordic  # noqa: E402
+
+# flagship configuration (must mirror RotatorConfig::hub(SINGLE, 26, 24))
+M_BITS = 24  # significand incl. hidden one
+E_BITS = 8
+BIAS = 127
+N_INT = 26  # internal width N
+W = N_INT + 2  # CORDIC width
+NITER = 24
+K_EXT = N_INT - M_BITS - 1  # input extension field width (=1)
+F_FILL = M_BITS + 2  # output converter fill width
+COMP_FRAC = min(W, 30)  # compensation coefficient fractional bits
+
+
+def gain(niter: int) -> float:
+    """CORDIC gain K."""
+    k = 1.0
+    for i in range(niter):
+        k *= math.sqrt(1.0 + 2.0 ** (-2 * i))
+    return k
+
+
+COMP_COEFF = int(round(2.0**COMP_FRAC / gain(NITER)))
+
+
+def schedule(m: int):
+    """Givens schedule: (pivot_row, zero_row, col) — column-major."""
+    return [(c, zr, c) for c in range(m - 1) for zr in range(c + 1, m)]
+
+
+def _u32(v):
+    return jax.lax.bitcast_convert_type(v, jnp.uint32)
+
+
+def _i32(v):
+    return jax.lax.bitcast_convert_type(v, jnp.int32)
+
+
+def input_convert(xbits, ybits):
+    """HUB FP -> aligned block-fixed significands (paper Fig. 5).
+
+    xbits, ybits: uint32 [...]; returns (xf, yf) int32 and mexp int32.
+    Options fixed to the flagship HUBFull: unbiased extension +
+    identity detection.
+    """
+
+    def decode(bits):
+        sign = (bits >> 31).astype(jnp.int32)
+        expf = ((bits >> 23) & 0xFF).astype(jnp.int32)
+        frac = (bits & 0x7FFFFF).astype(jnp.int32)
+        nonzero = expf != 0  # zero/subnormal flush (paper §3)
+        man = jnp.where(nonzero, frac | (1 << 23), 0)
+        is_one = nonzero & (expf == BIAS) & (frac == 0)
+        # unbiased extension (k=1): single bit = explicit LSB; identity
+        # detection and zero use an all-zero extension (exact word)
+        ext = jnp.where(is_one | ~nonzero, 0, man & 1)
+        mag = (man << K_EXT) | ext
+        v = jnp.where(sign == 1, ~mag, mag)  # HUB negation = NOT
+        expf = jnp.where(nonzero, expf, 0)
+        return v, expf
+
+    vx, ex = decode(xbits)
+    vy, ey = decode(ybits)
+    d = ex - ey
+    mexp = jnp.maximum(ex, ey)
+
+    def shift(v, dist):
+        dist_c = jnp.clip(dist, 0, 31)
+        s = v >> dist_c
+        return jnp.where(dist >= N_INT, 0, s)
+
+    xf = jnp.where(d >= 0, vx, shift(vx, -d))
+    yf = jnp.where(d >= 0, shift(vy, d), vy)
+    return xf, yf, mexp
+
+
+def compensate(v):
+    """1/K scale compensation, HUB semantics (multiply the extended
+    2v+1 word by the fixed-point coefficient, truncate back)."""
+    p = (2 * v.astype(jnp.int64) + 1) * COMP_COEFF
+    t = p >> COMP_FRAC
+    return (t >> 1).astype(jnp.int32)
+
+
+def output_convert(v, mexp):
+    """Fixed -> HUB FP output converter (paper Fig. 7), unbiased fill.
+
+    v: int32 W-bit word; mexp: int32; returns uint32 bit patterns.
+    """
+    sign = (v < 0).astype(jnp.uint32)
+    a = jnp.where(v < 0, ~v, v).astype(jnp.int64)  # abs by NOT (exact)
+    lsb = (a & 1).astype(jnp.int64)
+    fill = jnp.where(lsb == 1, jnp.int64(1) << (F_FILL - 1), (jnp.int64(1) << (F_FILL - 1)) - 1)
+    af = (a << F_FILL) | fill
+    # leading-one position: af < 2^53 ⇒ float64 conversion is exact
+    _, e2 = jnp.frexp(af.astype(jnp.float64))
+    p = (e2 - 1).astype(jnp.int64)
+    man = (af >> (p + 1 - M_BITS)).astype(jnp.uint32)
+    new_exp = mexp.astype(jnp.int64) + p - F_FILL - (N_INT - 2)
+    underflow = new_exp <= 0
+    overflow = new_exp > 254
+    exp_field = jnp.clip(new_exp, 0, 254).astype(jnp.uint32)
+    man = jnp.where(overflow, jnp.uint32((1 << M_BITS) - 1), man)
+    bits = (sign << 31) | (exp_field << 23) | (man & 0x7FFFFF)
+    return jnp.where(underflow, jnp.uint32(0), bits)
+
+
+def rotate_rows(xbits, ybits):
+    """One full Givens rotation over two row segments (pivot pair =
+    column 0): converters + L1 kernel + compensation. Bit patterns in,
+    bit patterns out."""
+    xf, yf, mexp = input_convert(xbits, ybits)
+    xr, yr = cordic.givens_rotate(xf, yf, niter=NITER, w=W, hub=True)
+    xc = compensate(xr)
+    yc = compensate(yr)
+    return output_convert(xc, mexp), output_convert(yc, mexp)
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def qrd_bits(a_bits, m=4):
+    """QRD of a batch of m×m matrices given as uint32 bit patterns.
+
+    a_bits: uint32 [B, m, m]; returns uint32 [B, m, 2m] = [R | G] bits.
+    """
+    b = a_bits.shape[0]
+    one = jnp.uint32(0x3F800000)
+    eye = jnp.where(jnp.eye(m, dtype=bool), one, jnp.uint32(0))
+    rows = jnp.concatenate([a_bits, jnp.broadcast_to(eye, (b, m, m))], axis=2)
+
+    for pr, zr, c in schedule(m):
+        xseg = rows[:, pr, c:]
+        yseg = rows[:, zr, c:]
+        xn, yn = rotate_rows(xseg, yseg)
+        # the annihilated element is known-zero and not stored
+        yn = yn.at[:, 0].set(jnp.uint32(0))
+        rows = rows.at[:, pr, c:].set(xn)
+        rows = rows.at[:, zr, c:].set(yn)
+    return rows
+
+
+def qrd_f32(a, m=4):
+    """QRD of f32 matrices (values are *reinterpreted* as HUB FP — the
+    convention shared with the Rust engine). Returns f32 [B, m, 2m]."""
+    bits = _u32(a)
+    out = qrd_bits(bits, m=m)
+    return jax.lax.bitcast_convert_type(out, jnp.float32)
+
+
+def hub_bits_to_f64(bits):
+    """Decode HUB FP bit patterns to float64 (ILSB appended) — for
+    accuracy checks against the double-precision reference."""
+    bits = jnp.asarray(bits, dtype=jnp.uint32)
+    sign = jnp.where((bits >> 31) == 1, -1.0, 1.0)
+    expf = ((bits >> 23) & 0xFF).astype(jnp.int64)
+    frac = (bits & 0x7FFFFF).astype(jnp.int64)
+    man = frac | (1 << 23)
+    ext = (2 * man + 1).astype(jnp.float64)
+    val = sign * ext * 2.0 ** (expf.astype(jnp.float64) - BIAS - M_BITS)
+    return jnp.where(expf == 0, 0.0, val)

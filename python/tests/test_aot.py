@@ -1,0 +1,24 @@
+"""AOT lowering sanity: HLO text artifact shape, determinism, and
+golden-vector stability across lowerings."""
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_hlo_text_mentions_expected_shapes():
+    text = aot.lower_qrd(batch=8)
+    assert "HloModule" in text
+    assert "f32[8,4,4]" in text  # input
+    assert "f32[8,4,8]" in text  # [R | G] output
+
+
+def test_lowering_is_deterministic():
+    assert aot.lower_qrd(batch=4) == aot.lower_qrd(batch=4)
+
+
+def test_model_output_stable_across_jit_boundaries():
+    a = aot.golden_inputs(4)
+    out1 = np.asarray(model.qrd_bits(a.view(np.uint32)))
+    out2 = np.asarray(model.qrd_f32(a)).view(np.uint32)
+    np.testing.assert_array_equal(out1, out2)

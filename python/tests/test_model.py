@@ -1,0 +1,165 @@
+"""L2 model correctness: converters, full QRD reconstruction accuracy,
+schedule properties, golden self-consistency."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def rand_f32(rng, shape, lo=-2.0, hi=2.0, scale_binades=4):
+    s = np.exp2(rng.uniform(-scale_binades, scale_binades, size=shape[:1] + (1, 1)))
+    return (rng.uniform(lo, hi, size=shape) * s).astype(np.float32)
+
+
+class TestInputConverter:
+    def test_exact_for_equal_exponents(self):
+        a = np.array([1.5], dtype=np.float32).view(np.uint32)
+        b = np.array([-1.25], dtype=np.float32).view(np.uint32)
+        xf, yf, mexp = model.input_convert(a, b)
+        assert int(mexp[0]) == 127
+        # HUB word value = (2v+1)/2^(n-1) ≈ input (within the ILSB)
+        xv = (2 * int(xf[0]) + 1) / 2.0 ** (model.N_INT - 1)
+        yv = (2 * int(yf[0]) + 1) / 2.0 ** (model.N_INT - 1)
+        assert abs(xv - 1.5) < 2.0 ** -(model.N_INT - 2)
+        assert abs(yv + 1.25) < 2.0 ** -(model.N_INT - 2)
+
+    def test_identity_detection_makes_one_exact(self):
+        one = np.array([1.0], dtype=np.float32).view(np.uint32)
+        zero = np.array([0.0], dtype=np.float32).view(np.uint32)
+        xf, yf, _ = model.input_convert(one, zero)
+        assert int(xf[0]) == 1 << (model.N_INT - 2)  # exact 1.0 word
+        assert int(yf[0]) == 0
+
+    def test_zero_flushes(self):
+        z = np.array([0.0], dtype=np.float32).view(np.uint32)
+        v = np.array([3.0], dtype=np.float32).view(np.uint32)
+        xf, _, mexp = model.input_convert(z, v)
+        assert int(xf[0]) == 0
+        assert int(mexp[0]) == 128  # exponent of 3.0
+
+    @settings(max_examples=50, deadline=None)
+    @given(
+        x=st.floats(-1e6, 1e6, allow_nan=False, width=32),
+        y=st.floats(-1e6, 1e6, allow_nan=False, width=32),
+    )
+    def test_alignment_error_within_one_grid_ulp(self, x, y):
+        xb = np.array([x], dtype=np.float32).view(np.uint32)
+        yb = np.array([y], dtype=np.float32).view(np.uint32)
+        xf, yf, mexp = model.input_convert(xb, yb)
+        scale = 2.0 ** (int(mexp[0]) - 127)
+        gx = (2 * int(xf[0]) + 1) / 2.0 ** (model.N_INT - 1) * scale
+        gy = (2 * int(yf[0]) + 1) / 2.0 ** (model.N_INT - 1) * scale
+        ulp = 2.0 ** -(model.N_INT - 2) * scale
+        if x != 0.0:
+            assert abs(gx - x) <= max(ulp, abs(x) * 2.0**-23)
+        if y != 0.0:
+            assert abs(gy - y) <= max(ulp, abs(y) * 2.0**-23)
+
+
+class TestQrd:
+    def reconstruct(self, out_bits, m=4):
+        vals = np.asarray(model.hub_bits_to_f64(out_bits))
+        r = vals[:, :, :m]
+        g = vals[:, :, m:]
+        return np.einsum("bki,bkj->bij", g, r)
+
+    def test_reconstruction_accuracy(self):
+        rng = np.random.default_rng(21)
+        a = rand_f32(rng, (32, 4, 4))
+        out = model.qrd_bits(a.view(np.uint32))
+        b = self.reconstruct(np.asarray(out))
+        np.testing.assert_allclose(b, a.astype(np.float64), atol=np.abs(a).max() * 1e-5)
+
+    def test_r_is_upper_triangular(self):
+        rng = np.random.default_rng(4)
+        a = rand_f32(rng, (8, 4, 4))
+        out = np.asarray(model.qrd_bits(a.view(np.uint32)))
+        for i in range(4):
+            for j in range(i):
+                assert np.all(out[:, i, j] == 0), (i, j)
+
+    def test_diagonal_is_nonnegative(self):
+        # diagonals 0..m-2 are vectoring moduli (non-negative by
+        # construction); the last one is only rotated and may be negative
+        rng = np.random.default_rng(5)
+        a = rand_f32(rng, (8, 4, 4))
+        out = np.asarray(model.qrd_bits(a.view(np.uint32)))
+        for i in range(3):
+            signs = out[:, i, i] >> 31
+            assert np.all(signs == 0)
+
+    def test_q_is_orthogonal(self):
+        rng = np.random.default_rng(6)
+        a = rand_f32(rng, (16, 4, 4))
+        out = model.qrd_bits(a.view(np.uint32))
+        g = np.asarray(model.hub_bits_to_f64(out))[:, :, 4:]
+        gtg = np.einsum("bik,bjk->bij", g, g)
+        np.testing.assert_allclose(gtg, np.broadcast_to(np.eye(4), (16, 4, 4)), atol=1e-5)
+
+    def test_snr_at_single_precision_level(self):
+        rng = np.random.default_rng(7)
+        a = rand_f32(rng, (64, 4, 4), scale_binades=8)
+        out = model.qrd_bits(a.view(np.uint32))
+        b = self.reconstruct(np.asarray(out))
+        a64 = a.astype(np.float64)
+        snr = 10 * np.log10(
+            np.sum(a64**2, axis=(1, 2)) / np.sum((a64 - b) ** 2, axis=(1, 2))
+        )
+        assert snr.mean() > 120, snr.mean()
+
+    def test_batch_independence(self):
+        rng = np.random.default_rng(8)
+        a = rand_f32(rng, (4, 4, 4))
+        full = np.asarray(model.qrd_bits(a.view(np.uint32)))
+        for i in range(4):
+            single = np.asarray(model.qrd_bits(a[i : i + 1].view(np.uint32)))
+            np.testing.assert_array_equal(single[0], full[i])
+
+    def test_7x7_matrices(self):
+        rng = np.random.default_rng(9)
+        a = rand_f32(rng, (4, 7, 7))
+        out = model.qrd_bits(a.view(np.uint32), m=7)
+        b = self.reconstruct(np.asarray(out), m=7)
+        np.testing.assert_allclose(b, a.astype(np.float64), atol=np.abs(a).max() * 3e-5)
+
+
+class TestSchedule:
+    def test_counts(self):
+        assert len(model.schedule(4)) == 6
+        assert len(model.schedule(7)) == 21
+
+    def test_each_subdiagonal_once(self):
+        steps = model.schedule(5)
+        targets = {(zr, c) for _, zr, c in steps}
+        assert len(targets) == len(steps)
+        assert all(zr > c for _, zr, c in steps)
+
+
+class TestGolden:
+    def test_golden_writer_round_trips(self, tmp_path):
+        from compile import aot
+
+        p = tmp_path / "golden.txt"
+        aot.write_golden(str(p), nmat=3)
+        lines = p.read_text().splitlines()
+        assert lines[0] == "nmat 3 m 4"
+        assert sum(1 for l in lines if l.startswith("in ")) == 3
+        # outputs reproduce deterministically
+        a = aot.golden_inputs(3)
+        out = np.asarray(model.qrd_bits(a.view(np.uint32)))
+        first_out = lines[2].split()[1:]
+        np.testing.assert_array_equal(
+            np.array([int(w, 16) for w in first_out], dtype=np.uint32),
+            out[0].ravel(),
+        )
+
+
+@pytest.mark.parametrize("batch", [1, 3, 17])
+def test_jit_shapes(batch):
+    rng = np.random.default_rng(batch)
+    a = rand_f32(rng, (batch, 4, 4))
+    out = model.qrd_f32(a)
+    assert out.shape == (batch, 4, 8)
+    assert out.dtype == np.float32

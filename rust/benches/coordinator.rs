@@ -1,0 +1,56 @@
+//! Coordinator benchmarks: end-to-end service throughput (native and,
+//! when built, PJRT engines), batching-policy sensitivity, and the raw
+//! PJRT batch execution cost.
+
+use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService};
+use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::rng::Rng;
+
+const ARTIFACT: &str = "artifacts/model.hlo.txt";
+
+fn main() {
+    println!("== coordinator benches ==");
+    let mut rng = Rng::new(3);
+    let mats: Vec<[u32; 16]> = (0..256)
+        .map(|_| {
+            let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+            std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+        })
+        .collect();
+
+    // service round-trip throughput vs batch policy
+    for max_batch in [1usize, 16, 64] {
+        let svc = QrdService::start(
+            || Box::new(NativeEngine::flagship()),
+            BatchPolicy { max_batch, max_wait_us: 100 },
+        );
+        bench(&format!("service round-trip x256 [native, batch={max_batch}]"), 256.0, || {
+            let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+        });
+        svc.shutdown();
+    }
+
+    // raw PJRT batch execution (L2 artifact cost per matrix)
+    if std::path::Path::new(ARTIFACT).exists() {
+        let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("artifact");
+        bench("pjrt execute batch=256", 256.0, || {
+            black_box(pjrt.run(&mats));
+        });
+        let svc = QrdService::start(
+            || Box::new(PjrtEngine::load(ARTIFACT, 256).expect("artifact")),
+            BatchPolicy { max_batch: 256, max_wait_us: 200 },
+        );
+        bench("service round-trip x256 [pjrt, batch=256]", 256.0, || {
+            let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+        });
+        svc.shutdown();
+    } else {
+        println!("(artifact not built — run `make artifacts` for PJRT benches)");
+    }
+}

@@ -1,0 +1,46 @@
+//! Paper-table regeneration timing + the end-to-end evaluation benches:
+//! runs every table/figure driver at a reduced Monte-Carlo size and
+//! reports wall time, then times the headline Table 6 measurements
+//! (cycle-accurate pipeline throughput).
+
+use fp_givens::fp::FpFormat;
+use fp_givens::pipeline::{PairOp, PipelineSim};
+use fp_givens::rotator::{GivensRotator, RotatorConfig};
+use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::rng::Rng;
+use std::time::Instant;
+
+fn main() {
+    println!("== paper table/figure regeneration ==");
+    // tables are instant (cost model); figures pay Monte-Carlo
+    for id in ["tab1", "tab2", "tab3", "tab4", "tab5", "tab6", "tab7"] {
+        let t0 = Instant::now();
+        fp_givens::experiments::run(id, 0, 0).unwrap();
+        println!("[{id} regenerated in {:.1} ms]\n", t0.elapsed().as_secs_f64() * 1e3);
+    }
+    for id in ["fig8", "fig9", "fig10", "fig11"] {
+        let t0 = Instant::now();
+        fp_givens::experiments::run(id, 120, 2020).unwrap();
+        println!(
+            "[{id} regenerated at nmat=120 in {:.2} s — full run uses --nmat 10000]\n",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // Table 6 measurement kernel: sustained pipeline ops/cycle
+    let cfg = RotatorConfig::hub(FpFormat::DOUBLE, 54, 52);
+    let rot = GivensRotator::new(cfg);
+    let mut rng = Rng::new(4);
+    let ops: Vec<PairOp> = (0..512)
+        .map(|i| PairOp {
+            x: rot.encode(rng.range(-1.0, 1.0)),
+            y: rot.encode(rng.range(-1.0, 1.0)),
+            vectoring: i % 8 == 0,
+            id: i as u64,
+        })
+        .collect();
+    bench("tab6 pipeline measurement (512 ops, double HUB)", 512.0, || {
+        let mut sim = PipelineSim::new(cfg);
+        black_box(sim.run_stream(&ops).1);
+    });
+}

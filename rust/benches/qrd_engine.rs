@@ -1,0 +1,65 @@
+//! QRD engine benchmarks: matrices/second through the native engines
+//! (the Monte-Carlo hot path) and SNR-harness point cost.
+
+use fp_givens::analysis::{run_mc, EngineSpec};
+use fp_givens::coordinator::NativeEngine;
+use fp_givens::fp::FpFormat;
+use fp_givens::qrd::{FixedQrdEngine, QrdEngine};
+use fp_givens::rotator::RotatorConfig;
+use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::rng::Rng;
+
+fn main() {
+    println!("== qrd engine benches ==");
+    let mut rng = Rng::new(2);
+    let mats: Vec<Vec<Vec<f64>>> = (0..32)
+        .map(|_| (0..4).map(|_| (0..4).map(|_| rng.range(-2.0, 2.0)).collect()).collect())
+        .collect();
+
+    for cfg in [
+        RotatorConfig::hub(FpFormat::SINGLE, 26, 24),
+        RotatorConfig::ieee(FpFormat::SINGLE, 26, 23),
+    ] {
+        let eng = QrdEngine::new(cfg);
+        bench(&format!("qrd4 decompose [{}]", cfg.label()), 32.0, || {
+            for a in &mats {
+                black_box(eng.decompose(a));
+            }
+        });
+    }
+
+    let eng = FixedQrdEngine::new(32, 27, false);
+    let scaled: Vec<Vec<Vec<f64>>> = mats
+        .iter()
+        .map(|a| a.iter().map(|r| r.iter().map(|&x| x * 0.2).collect()).collect())
+        .collect();
+    bench("qrd4 decompose [FixP 32/27]", 32.0, || {
+        for a in &scaled {
+            black_box(eng.decompose(a));
+        }
+    });
+
+    // bit-level path (the serving hot path)
+    let native = NativeEngine::flagship();
+    let bit_mats: Vec<[u32; 16]> = (0..32)
+        .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
+        .collect();
+    bench("qrd4 bit path [native flagship]", 32.0, || {
+        for a in &bit_mats {
+            black_box(native.qrd_bits(a));
+        }
+    });
+
+    // one Monte-Carlo point (what fig8/9/10 sweeps pay per cell)
+    let spec = EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+    bench("MC point: 200 matrices @ r=10", 200.0, || {
+        black_box(run_mc(spec, 4, 10, 200, 42));
+    });
+
+    // larger matrices
+    let eng7 = QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+    let m7: Vec<Vec<f64>> = (0..7).map(|_| (0..7).map(|_| rng.range(-1.0, 1.0)).collect()).collect();
+    bench("qrd7 decompose [hub single]", 1.0, || {
+        black_box(eng7.decompose(&m7));
+    });
+}

@@ -1,0 +1,65 @@
+//! Rotation-unit micro-benchmarks: element-pair throughput of the
+//! functional model per configuration, converter and core costs in
+//! isolation. (In-tree harness — criterion is unavailable offline.)
+
+use fp_givens::cordic::{CordicCore, CoreKind};
+use fp_givens::fp::FpFormat;
+use fp_givens::pipeline::{PairOp, PipelineSim};
+use fp_givens::rotator::{GivensRotator, RotatorConfig};
+use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::rng::Rng;
+
+fn main() {
+    println!("== rotator benches ==");
+    let mut rng = Rng::new(1);
+
+    // functional rotator: vector+rotate pairs (the MC hot path)
+    for cfg in [
+        RotatorConfig::hub(FpFormat::SINGLE, 26, 24),
+        RotatorConfig::ieee(FpFormat::SINGLE, 26, 23),
+        RotatorConfig::hub(FpFormat::DOUBLE, 54, 52),
+    ] {
+        let rot = GivensRotator::new(cfg);
+        let pairs: Vec<_> = (0..64)
+            .map(|_| (rot.encode(rng.range(-2.0, 2.0)), rot.encode(rng.range(-2.0, 2.0))))
+            .collect();
+        bench(&format!("vector+7x rotate [{}]", cfg.label()), 8.0 * 8.0, || {
+            for chunk in pairs.chunks(8) {
+                let (x0, y0) = chunk[0];
+                let (_, _, ang) = rot.vector(x0, y0);
+                for &(x, y) in &chunk[1..] {
+                    black_box(rot.rotate(x, y, &ang));
+                }
+            }
+        });
+    }
+
+    // bare CORDIC core (no converters)
+    for (kind, label) in [(CoreKind::Hub, "hub"), (CoreKind::Conventional, "conv")] {
+        let core = CordicCore::new(28, 24, kind);
+        let words: Vec<(i64, i64)> =
+            (0..64).map(|_| (rng.i64() % (1 << 25), rng.i64() % (1 << 25))).collect();
+        bench(&format!("cordic core 24it w28 [{label}]"), 64.0, || {
+            for &(x, y) in &words {
+                black_box(core.vector(x, y));
+            }
+        });
+    }
+
+    // cycle-accurate pipeline simulator (ops/сycle cost)
+    let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+    let rot = GivensRotator::new(cfg);
+    let ops: Vec<PairOp> = (0..256)
+        .map(|i| PairOp {
+            x: rot.encode(rng.range(-1.0, 1.0)),
+            y: rot.encode(rng.range(-1.0, 1.0)),
+            vectoring: i % 8 == 0,
+            id: i as u64,
+        })
+        .collect();
+    bench("pipeline sim 256 ops [hub single]", 256.0, || {
+        let mut sim = PipelineSim::new(cfg);
+        let (outs, _) = sim.run_stream(&ops);
+        black_box(outs.len());
+    });
+}

@@ -1,0 +1,181 @@
+//! Monte-Carlo error analysis (paper §5.1).
+//!
+//! 10,000 random 4×4 matrices per experiment point, values log-uniform
+//! in magnitude within ±2^±r (`r` = dynamic-range parameter), QRD
+//! through the unit under test, reconstruction B = Gᵀ·R in double
+//! precision, SNR_dB = 10·log₁₀(Σa² / Σ(a−b)²) averaged over matrices.
+
+mod matgen;
+mod refqr;
+mod snr;
+
+pub use matgen::MatrixGen;
+pub use refqr::{householder_qr_f32, qr_reconstruct_f32};
+pub use snr::snr_db;
+
+use crate::qrd::{FixedQrdEngine, QrdEngine};
+use crate::rotator::RotatorConfig;
+use crate::util::par;
+
+/// Which engine a Monte-Carlo run exercises.
+#[derive(Debug, Clone, Copy)]
+pub enum EngineSpec {
+    /// The FP Givens rotation unit (IEEE or HUB per config).
+    Fp(RotatorConfig),
+    /// The fixed-point baseline: (width, iterations, hub). Inputs are
+    /// pre-scaled by 2^-(r+1) and the reconstruction is de-scaled.
+    Fixed { n: u32, niter: u32, hub: bool },
+    /// Single-precision Householder QR — the "Matlab qr" reference line.
+    MatlabSingle,
+}
+
+impl EngineSpec {
+    /// Report label.
+    pub fn label(&self) -> String {
+        match self {
+            EngineSpec::Fp(cfg) => cfg.label(),
+            EngineSpec::Fixed { n, niter, hub } => {
+                format!("{}Fix({n},{niter}it)", if *hub { "HUB" } else { "" })
+            }
+            EngineSpec::MatlabSingle => "Matlab-single".into(),
+        }
+    }
+}
+
+/// One Monte-Carlo experiment point.
+#[derive(Debug, Clone, Copy)]
+pub struct McPoint {
+    /// Dynamic-range parameter r (magnitudes span [2^−r, 2^r]).
+    pub r: u32,
+    /// Mean SNR over the batch, in dB.
+    pub snr_db: f64,
+}
+
+/// An instantiated engine — built once per Monte-Carlo sweep so the
+/// per-matrix loop does no construction work (§Perf in EXPERIMENTS.md).
+pub enum EngineInst {
+    /// FP Givens rotation unit.
+    Fp(QrdEngine),
+    /// Fixed-point baseline.
+    Fixed(FixedQrdEngine),
+    /// f32 Householder reference.
+    Matlab,
+}
+
+impl EngineInst {
+    /// Instantiate a spec.
+    pub fn build(spec: &EngineSpec) -> EngineInst {
+        match spec {
+            EngineSpec::Fp(cfg) => EngineInst::Fp(QrdEngine::new(*cfg)),
+            EngineSpec::Fixed { n, niter, hub } => {
+                EngineInst::Fixed(FixedQrdEngine::new(*n, *niter, *hub))
+            }
+            EngineSpec::MatlabSingle => EngineInst::Matlab,
+        }
+    }
+
+    /// SNR of one matrix through this engine.
+    pub fn snr(&self, a: &[Vec<f64>], r: u32) -> f64 {
+        match self {
+            EngineInst::Fp(eng) => {
+                let b = eng.decompose(a).reconstruct();
+                snr_db(a, &b)
+            }
+            EngineInst::Fixed(eng) => {
+                // scale into [−0.5, 0.5] so the CORDIC growth fits
+                let s = 2f64.powi(-(r as i32) - 1);
+                let scaled: Vec<Vec<f64>> =
+                    a.iter().map(|row| row.iter().map(|&x| x * s).collect()).collect();
+                let mut b = eng.decompose(&scaled).reconstruct();
+                for row in &mut b {
+                    for x in row.iter_mut() {
+                        *x /= s;
+                    }
+                }
+                snr_db(a, &b)
+            }
+            EngineInst::Matlab => {
+                let b = qr_reconstruct_f32(a);
+                snr_db(a, &b)
+            }
+        }
+    }
+}
+
+/// Run the paper's Monte-Carlo at one r: `nmat` random m×m matrices,
+/// mean SNR in dB. Deterministic for a given seed.
+pub fn run_mc(spec: EngineSpec, m: usize, r: u32, nmat: usize, seed: u64) -> McPoint {
+    let inst = EngineInst::build(&spec);
+    let total: f64 = par::par_sum(nmat, |i| {
+        let a =
+            MatrixGen::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).matrix(m, r);
+        inst.snr(&a, r)
+    });
+    McPoint { r, snr_db: total / nmat as f64 }
+}
+
+/// SNR of one matrix through the given engine (convenience wrapper —
+/// sweeps should use [`EngineInst`] directly).
+pub fn snr_for_matrix(spec: &EngineSpec, a: &[Vec<f64>], r: u32) -> f64 {
+    EngineInst::build(spec).snr(a, r)
+}
+
+/// Sweep r over an inclusive range (the paper's Figs. 8 & 11).
+pub fn sweep_r(
+    spec: EngineSpec,
+    m: usize,
+    r_range: std::ops::RangeInclusive<u32>,
+    nmat: usize,
+    seed: u64,
+) -> Vec<McPoint> {
+    r_range.map(|r| run_mc(spec, m, r, nmat, seed.wrapping_add(r as u64 * 7919))).collect()
+}
+
+/// Mean SNR over an r sweep (the paper collapses r this way for
+/// Figs. 9 & 10: "we will use the mean of the SNR for all tested values
+/// of r").
+pub fn mean_snr(points: &[McPoint]) -> f64 {
+    points.iter().map(|p| p.snr_db).sum::<f64>() / points.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+
+    #[test]
+    fn single_precision_unit_reaches_expected_snr() {
+        // Paper Fig. 8: single-precision HUB N=27 sits near the Matlab
+        // single-precision line (~130+ dB). Use a small batch for speed.
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 27, 25);
+        let p = run_mc(EngineSpec::Fp(cfg), 4, 5, 100, 42);
+        assert!(p.snr_db > 110.0, "snr {}", p.snr_db);
+    }
+
+    #[test]
+    fn matlab_reference_snr() {
+        let p = run_mc(EngineSpec::MatlabSingle, 4, 5, 100, 42);
+        assert!(p.snr_db > 120.0, "snr {}", p.snr_db);
+    }
+
+    #[test]
+    fn snr_is_deterministic() {
+        let cfg = RotatorConfig::ieee(FpFormat::SINGLE, 26, 23);
+        let a = run_mc(EngineSpec::Fp(cfg), 4, 3, 50, 7);
+        let b = run_mc(EngineSpec::Fp(cfg), 4, 3, 50, 7);
+        assert_eq!(a.snr_db, b.snr_db);
+    }
+
+    #[test]
+    fn fixed_engine_beats_fp_at_low_r_only() {
+        // Fig. 11 shape: fixed-point wins at r=1, collapses by r=20
+        let fixed = EngineSpec::Fixed { n: 32, niter: 27, hub: false };
+        let fp = EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+        let f1 = run_mc(fixed, 4, 1, 60, 11).snr_db;
+        let p1 = run_mc(fp, 4, 1, 60, 11).snr_db;
+        let f20 = run_mc(fixed, 4, 20, 60, 11).snr_db;
+        let p20 = run_mc(fp, 4, 20, 60, 11).snr_db;
+        assert!(f1 > p1, "fixed {f1} vs fp {p1} at r=1");
+        assert!(p20 > f20 + 30.0, "fixed {f20} vs fp {p20} at r=20");
+    }
+}

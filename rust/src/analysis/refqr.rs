@@ -1,0 +1,142 @@
+//! Single-precision Householder QR — the "Matlab qr" reference line.
+//!
+//! Matlab's `qr` on single-precision input calls LAPACK's Householder
+//! factorization in f32; we implement the same algorithm with every
+//! intermediate rounded to f32, giving an equivalent reference SNR.
+//! (Substitution documented in DESIGN.md §2.)
+
+/// Householder QR of an m×m matrix in f32 arithmetic.
+/// Returns (Q, R) as f32-valued f64 matrices.
+pub fn householder_qr_f32(a: &[Vec<f64>]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let m = a.len();
+    let mut r: Vec<Vec<f32>> = a.iter().map(|row| row.iter().map(|&x| x as f32).collect()).collect();
+    // Q accumulated as identity transformed by the reflectors
+    let mut q: Vec<Vec<f32>> = (0..m)
+        .map(|i| (0..m).map(|j| if i == j { 1.0f32 } else { 0.0 }).collect())
+        .collect();
+
+    for k in 0..m.saturating_sub(1) {
+        // build the reflector for column k
+        let mut norm2 = 0.0f32;
+        for i in k..m {
+            norm2 += r[i][k] * r[i][k];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            continue;
+        }
+        let alpha = if r[k][k] >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f32; m];
+        v[k] = r[k][k] - alpha;
+        for i in (k + 1)..m {
+            v[i] = r[i][k];
+        }
+        let mut vtv = 0.0f32;
+        for i in k..m {
+            vtv += v[i] * v[i];
+        }
+        if vtv == 0.0 {
+            continue;
+        }
+        // apply H = I − 2vvᵀ/vᵀv to R (left) and to Q (accumulate Qᵀ rows)
+        for j in 0..m {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i] * r[i][j];
+            }
+            let f = 2.0 * dot / vtv;
+            for i in k..m {
+                r[i][j] -= f * v[i];
+            }
+        }
+        for j in 0..m {
+            let mut dot = 0.0f32;
+            for i in k..m {
+                dot += v[i] * q[i][j];
+            }
+            let f = 2.0 * dot / vtv;
+            for i in k..m {
+                q[i][j] -= f * v[i];
+            }
+        }
+    }
+    // here q holds Qᵀ (reflectors applied to I); transpose to return Q
+    let qt = q;
+    let q: Vec<Vec<f32>> = (0..m).map(|i| (0..m).map(|j| qt[j][i]).collect()).collect();
+    (q, r)
+}
+
+/// B = Q·R reconstructed in double precision (the reference pipeline the
+/// paper compares against).
+pub fn qr_reconstruct_f32(a: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let m = a.len();
+    let (q, r) = householder_qr_f32(a);
+    let mut b = vec![vec![0.0f64; m]; m];
+    for i in 0..m {
+        for j in 0..m {
+            let mut acc = 0.0f64;
+            for k in 0..m {
+                acc += q[i][k] as f64 * r[k][j] as f64;
+            }
+            b[i][j] = acc;
+        }
+    }
+    b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconstructs_to_single_precision() {
+        let a = vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![-2.0, 0.5, 1.5, -1.0],
+            vec![0.1, -0.7, 2.2, 0.9],
+            vec![3.3, 1.1, -0.2, 0.4],
+        ];
+        let b = qr_reconstruct_f32(&a);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((b[i][j] - a[i][j]).abs() < 1e-5, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn r_upper_triangular() {
+        let a = vec![
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 10.0],
+        ];
+        let (_q, r) = householder_qr_f32(&a);
+        for i in 0..3 {
+            for j in 0..i {
+                assert!(r[i][j].abs() < 1e-4, "r[{i}][{j}] = {}", r[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        let a = vec![
+            vec![2.0, -1.0, 0.5, 1.0],
+            vec![1.0, 3.0, -2.0, 0.1],
+            vec![0.3, 0.8, 1.9, -1.1],
+            vec![-0.6, 2.2, 0.4, 0.7],
+        ];
+        let (q, _r) = householder_qr_f32(&a);
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut dot = 0.0f64;
+                for k in 0..4 {
+                    dot += q[k][i] as f64 * q[k][j] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5);
+            }
+        }
+    }
+}

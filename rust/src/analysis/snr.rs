@@ -1,0 +1,48 @@
+//! Signal-to-noise ratio metric (paper §5.1).
+
+/// SNR_dB = 10·log₁₀( Σ a_ij² / Σ (a_ij − b_ij)² ).
+/// Returns a large finite value (340 dB) for an exact reconstruction so
+/// means stay well-defined.
+pub fn snr_db(a: &[Vec<f64>], b: &[Vec<f64>]) -> f64 {
+    let mut sig = 0.0;
+    let mut noise = 0.0;
+    for (ra, rb) in a.iter().zip(b) {
+        for (&x, &y) in ra.iter().zip(rb) {
+            sig += x * x;
+            let d = x - y;
+            noise += d * d;
+        }
+    }
+    if noise == 0.0 {
+        return 340.0; // beyond double precision; sentinel for "exact"
+    }
+    10.0 * (sig / noise).log10()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_reconstruction_is_sentinel() {
+        let a = vec![vec![1.0, 2.0], vec![3.0, 4.0]];
+        assert_eq!(snr_db(&a, &a), 340.0);
+    }
+
+    #[test]
+    fn known_ratio() {
+        let a = vec![vec![1.0]];
+        let b = vec![vec![0.9]];
+        // 10·log10(1/0.01) = 20 dB
+        assert!((snr_db(&a, &b) - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        let a = vec![vec![1.0, -2.0], vec![0.5, 3.0]];
+        let b = vec![vec![1.001, -2.002], vec![0.5005, 3.003]];
+        let a2: Vec<Vec<f64>> = a.iter().map(|r| r.iter().map(|x| x * 1e6).collect()).collect();
+        let b2: Vec<Vec<f64>> = b.iter().map(|r| r.iter().map(|x| x * 1e6).collect()).collect();
+        assert!((snr_db(&a, &b) - snr_db(&a2, &b2)).abs() < 1e-9);
+    }
+}

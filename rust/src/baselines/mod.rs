@@ -1,0 +1,62 @@
+//! Baseline designs the paper compares against (§5.4, Tables 6 & 7).
+//!
+//! Three prior FP designs are modelled:
+//! - **\[21\] Muñoz et al., SPL 2010** — word-serial FP CORDIC library:
+//!   every microrotation is performed with full FP add/shift hardware,
+//!   one iteration at a time. Behavioral model + published cost.
+//! - **\[32\] Zhou et al., HPCC 2008** — double-precision hybrid-mode
+//!   pipelined FP CORDIC co-processor: fixed-point pipeline with FP
+//!   converters, but vectoring must *complete* before rotations start
+//!   (it keeps the Z datapath), so a Givens rotation costs 69 + e
+//!   cycles of initiation interval.
+//! - **\[30\] Wang & Leeser, TECS 2009** — 2-D systolic QRD from standard
+//!   FP operators (divide / square root via table + Taylor): functional
+//!   model + published cost.
+//!
+//! Published numbers (their papers / the paper's Tables 6–7) are kept
+//! verbatim; our unit's numbers come from [`crate::hwmodel`] and the
+//! cycle-accurate [`crate::pipeline`] simulator on Virtex-5 constants.
+
+pub mod published;
+pub mod report;
+mod systolic30;
+mod wordserial21;
+
+pub use systolic30::SystolicFpQrd;
+pub use wordserial21::WordSerialFpCordic;
+
+/// Performance figures of one design, as in Table 6.
+#[derive(Debug, Clone)]
+pub struct PerfRow {
+    /// Design name.
+    pub name: String,
+    /// Max clock frequency (MHz).
+    pub fmax_mhz: f64,
+    /// Latency of one Givens rotation / matrix (cycles).
+    pub latency_cycles: f64,
+    /// Initiation interval as a function of e (cycles) — printed form.
+    pub ii_formula: String,
+    /// Initiation interval evaluated at e = 8 (cycles).
+    pub ii_at_e8: f64,
+    /// Throughput at f_max, millions of Givens rotations (or QRDs) /s.
+    pub mops: f64,
+}
+
+/// Area figures of one design, as in Table 7.
+#[derive(Debug, Clone)]
+pub struct AreaRow {
+    /// Design name.
+    pub name: String,
+    /// Precision label.
+    pub precision: &'static str,
+    /// LUT count (0 = not reported).
+    pub luts: f64,
+    /// Register count (0 = not reported).
+    pub regs: f64,
+    /// Slice count (0 = not reported).
+    pub slices: f64,
+    /// DSP48 count.
+    pub dsps: f64,
+    /// Block-RAM count.
+    pub brams: f64,
+}

@@ -1,0 +1,166 @@
+//! Behavioral model of the 2-D systolic FP QRD of ref [30] (Wang &
+//! Leeser, TECS 2009): Givens rotations computed with *standard FP
+//! arithmetic* — the rotation coefficients c = x/√(x²+y²), s = y/√(x²+y²)
+//! come from a table-lookup + Taylor-expansion reciprocal square root,
+//! then every pair is rotated with FP multiplies/adds.
+//!
+//! This is the non-CORDIC路线 the paper argues against: it needs
+//! dividers/square roots (tables + many multipliers ⇒ DSPs + BRAMs) and
+//! its pipeline cannot overlap coefficient computation with rotation,
+//! giving the 364-cycle initiation interval the authors report.
+
+use crate::fp::{Fp, FpFormat};
+use crate::qrd::{schedule, QrdResult};
+
+/// Systolic-array FP QRD (ref [30] numerics: single precision ops).
+pub struct SystolicFpQrd {
+    /// FP format of every arithmetic operation.
+    pub fmt: FpFormat,
+    /// Taylor order of the rsqrt approximation (ref [30] uses a
+    /// first-order expansion around a table value).
+    pub taylor_order: u32,
+    /// rsqrt lookup-table address bits.
+    pub table_bits: u32,
+}
+
+impl SystolicFpQrd {
+    /// Single-precision instance matching ref [30].
+    pub fn new() -> Self {
+        SystolicFpQrd { fmt: FpFormat::SINGLE, taylor_order: 1, table_bits: 10 }
+    }
+
+    fn rnd(&self, v: f64) -> f64 {
+        Fp::from_f64(self.fmt, v).to_f64(self.fmt)
+    }
+
+    /// Reciprocal square root via table + first-order Taylor, every
+    /// step rounded to the format (the ref [30] operator).
+    pub fn rsqrt(&self, v: f64) -> f64 {
+        if v <= 0.0 {
+            return 0.0;
+        }
+        // normalize v = m · 4^k with m ∈ [1, 4)
+        let e = v.log2().floor() as i32;
+        let e2 = e & !1; // even exponent
+        let m = v / 2f64.powi(e2);
+        // table lookup on the top table_bits of m
+        let idx = ((m - 1.0) / 3.0 * (1u64 << self.table_bits) as f64).floor();
+        let m0 = 1.0 + idx / (1u64 << self.table_bits) as f64 * 3.0;
+        let r0 = self.rnd(1.0 / m0.sqrt()); // stored table value
+        // first-order Taylor: rsqrt(m) ≈ r0·(1 − (m−m0)/(2·m0))
+        let dm = self.rnd(m - m0);
+        let corr = self.rnd(1.0 - self.rnd(dm / self.rnd(2.0 * m0)));
+        let r = self.rnd(r0 * corr);
+        self.rnd(r * 2f64.powi(-e2 / 2))
+    }
+
+    /// One Givens rotation with standard FP ops.
+    fn coeffs(&self, x: f64, y: f64) -> (f64, f64) {
+        let n2 = self.rnd(self.rnd(x * x) + self.rnd(y * y));
+        if n2 == 0.0 {
+            return (1.0, 0.0);
+        }
+        let inv = self.rsqrt(n2);
+        (self.rnd(x * inv), self.rnd(y * inv))
+    }
+
+    /// Decompose an m×m matrix (for accuracy comparison with the
+    /// CORDIC-based units).
+    pub fn decompose(&self, a: &[Vec<f64>]) -> QrdResult {
+        let m = a.len();
+        let mut rows: Vec<Vec<f64>> = a
+            .iter()
+            .map(|r| {
+                let mut v: Vec<f64> = r.iter().map(|&x| self.rnd(x)).collect();
+                v.extend(std::iter::repeat(0.0).take(m));
+                v
+            })
+            .collect();
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[m + i] = 1.0;
+        }
+        for step in schedule(m) {
+            let (pr, zr, c) = (step.pivot_row, step.zero_row, step.col);
+            let (cc, ss) = self.coeffs(rows[pr][c], rows[zr][c]);
+            for k in c..2 * m {
+                let xr = self.rnd(self.rnd(cc * rows[pr][k]) + self.rnd(ss * rows[zr][k]));
+                let yr = self.rnd(self.rnd(cc * rows[zr][k]) - self.rnd(ss * rows[pr][k]));
+                rows[pr][k] = xr;
+                rows[zr][k] = yr;
+            }
+            rows[zr][c] = 0.0;
+        }
+        QrdResult {
+            r: rows.iter().map(|r| r[..m].to_vec()).collect(),
+            qt: rows.iter().map(|r| r[m..].to_vec()).collect(),
+        }
+    }
+
+    /// Published timing: one 7×7 QRD every 364 cycles, 954-cycle latency
+    /// at 132 MHz.
+    pub fn ii_cycles(&self) -> u64 {
+        364
+    }
+}
+
+impl Default for SystolicFpQrd {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rsqrt_is_accurate_to_single() {
+        let s = SystolicFpQrd::new();
+        for &v in &[0.25f64, 1.0, 2.0, 9.0, 1e6, 3.7e-3] {
+            let got = s.rsqrt(v);
+            let want = 1.0 / v.sqrt();
+            assert!(
+                ((got - want) / want).abs() < 1e-4,
+                "rsqrt({v}) = {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn qrd_reconstructs() {
+        let s = SystolicFpQrd::new();
+        let a = vec![
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![-2.0, 0.5, 1.5, -1.0],
+            vec![0.1, -0.7, 2.2, 0.9],
+            vec![3.3, 1.1, -0.2, 0.4],
+        ];
+        let res = s.decompose(&a);
+        let b = res.reconstruct();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((b[i][j] - a[i][j]).abs() < 2e-4, "({i},{j}): {}", b[i][j]);
+            }
+        }
+    }
+
+    #[test]
+    fn less_accurate_than_cordic_unit() {
+        // the table+Taylor rsqrt loses a few bits vs the CORDIC path —
+        // one of the paper's motivations
+        use crate::analysis::{snr_for_matrix, EngineSpec, MatrixGen};
+        let s = SystolicFpQrd::new();
+        let hub = EngineSpec::Fp(crate::rotator::RotatorConfig::hub(FpFormat::SINGLE, 27, 25));
+        let mut worse = 0;
+        for seed in 0..20 {
+            let a = MatrixGen::new(seed).matrix(4, 4);
+            let b = s.decompose(&a).reconstruct();
+            let snr_sys = crate::analysis::snr_db(&a, &b);
+            let snr_hub = snr_for_matrix(&hub, &a, 4);
+            if snr_hub > snr_sys {
+                worse += 1;
+            }
+        }
+        assert!(worse >= 15, "systolic should usually lose: {worse}/20");
+    }
+}

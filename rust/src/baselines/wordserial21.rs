@@ -1,0 +1,154 @@
+//! Behavioral model of the word-serial FP CORDIC library of ref [21]
+//! (Muñoz, Sanchez, Llanos, Ayala-Rincón, SPL 2010).
+//!
+//! Architecture: one FP adder/shifter datapath iterated `niter` times
+//! per coordinate, all three coordinates (X, Y, Z) in full FP — the
+//! angle accumulates in Z. A Givens rotation over rows of `e` pairs
+//! first runs a full vectoring (computing θ into Z), then one full
+//! rotation per remaining pair — nothing is overlapped, which is why
+//! the initiation interval is 212 + e·224 cycles.
+//!
+//! The numerics here round every intermediate to the target FP format
+//! (the design's defining inefficiency *and* accuracy behaviour), so
+//! the model is usable as an accuracy baseline as well.
+
+use crate::fp::{Fp, FpFormat};
+
+/// Word-serial full-FP CORDIC (vectoring + rotation), ref [21] style.
+pub struct WordSerialFpCordic {
+    /// FP format of every intermediate.
+    pub fmt: FpFormat,
+    /// Iteration count.
+    pub niter: u32,
+    /// Cycles per CORDIC pass (latency of one full vectoring/rotation,
+    /// from the published 224-cycle figure for double precision).
+    pub cycles_per_pass: u32,
+}
+
+impl WordSerialFpCordic {
+    /// Build with the published double-precision timing.
+    pub fn new(fmt: FpFormat, niter: u32) -> Self {
+        WordSerialFpCordic { fmt, niter, cycles_per_pass: 224 }
+    }
+
+    fn rnd(&self, v: f64) -> f64 {
+        Fp::from_f64(self.fmt, v).to_f64(self.fmt)
+    }
+
+    /// Full-FP vectoring: returns (modulus·K, angle) with every
+    /// intermediate rounded to the format.
+    pub fn vector(&self, mut x: f64, mut y: f64) -> (f64, f64) {
+        let mut z = 0.0f64;
+        if x < 0.0 {
+            x = -x;
+            y = -y;
+            z = std::f64::consts::PI; // package flip into the angle
+        }
+        for i in 0..self.niter {
+            let p = 2f64.powi(-(i as i32));
+            let alpha = self.rnd(p.atan());
+            if y >= 0.0 {
+                let xn = self.rnd(x + self.rnd(y * p));
+                let yn = self.rnd(y - self.rnd(x * p));
+                (x, y) = (xn, yn);
+                z = self.rnd(z + alpha);
+            } else {
+                let xn = self.rnd(x - self.rnd(y * p));
+                let yn = self.rnd(y + self.rnd(x * p));
+                (x, y) = (xn, yn);
+                z = self.rnd(z - alpha);
+            }
+        }
+        (x, z)
+    }
+
+    /// Full-FP rotation of (x, y) by the Z-accumulated angle: iterate
+    /// the microrotations choosing directions that drive z → 0.
+    pub fn rotate(&self, mut x: f64, mut y: f64, angle: f64) -> (f64, f64) {
+        let mut z = angle;
+        if z > std::f64::consts::FRAC_PI_2 {
+            // undo the flip packaging
+            x = -x;
+            y = -y;
+            z -= std::f64::consts::PI;
+        } else if z < -std::f64::consts::FRAC_PI_2 {
+            x = -x;
+            y = -y;
+            z += std::f64::consts::PI;
+        }
+        for i in 0..self.niter {
+            let p = 2f64.powi(-(i as i32));
+            let alpha = self.rnd(p.atan());
+            if z >= 0.0 {
+                // rotate by +alpha and subtract from z
+                let xn = self.rnd(x + self.rnd(y * p));
+                let yn = self.rnd(y - self.rnd(x * p));
+                (x, y) = (xn, yn);
+                z = self.rnd(z - alpha);
+            } else {
+                let xn = self.rnd(x - self.rnd(y * p));
+                let yn = self.rnd(y + self.rnd(x * p));
+                (x, y) = (xn, yn);
+                z = self.rnd(z + alpha);
+            }
+        }
+        (x, y)
+    }
+
+    /// CORDIC gain of this iteration count.
+    pub fn gain(&self) -> f64 {
+        crate::cordic::gain(self.niter)
+    }
+
+    /// Initiation interval for a Givens rotation over e pairs (cycles):
+    /// vectoring pass + e rotation passes, word-serial (published form).
+    pub fn ii_cycles(&self, e: u32) -> u64 {
+        212 + e as u64 * self.cycles_per_pass as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vectoring_computes_modulus_and_angle() {
+        let c = WordSerialFpCordic::new(FpFormat::DOUBLE, 40);
+        let (xk, z) = c.vector(3.0, 4.0);
+        assert!((xk / c.gain() - 5.0).abs() < 1e-6, "{xk}");
+        assert!((z - (4f64 / 3.0).atan()).abs() < 1e-6, "{z}");
+    }
+
+    #[test]
+    fn rotation_applies_the_angle() {
+        let c = WordSerialFpCordic::new(FpFormat::DOUBLE, 40);
+        let (_, z) = c.vector(3.0, 4.0);
+        let (x, y) = c.rotate(3.0, 4.0, z);
+        assert!((x / c.gain() - 5.0).abs() < 1e-5);
+        assert!((y / c.gain()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn left_half_plane() {
+        let c = WordSerialFpCordic::new(FpFormat::DOUBLE, 40);
+        let (xk, z) = c.vector(-3.0, 4.0);
+        assert!((xk / c.gain() - 5.0).abs() < 1e-6);
+        // rotating the original vector by z zeroes y
+        let (_, y) = c.rotate(-3.0, 4.0, z);
+        assert!(y.abs() / c.gain() < 1e-5, "{y}");
+    }
+
+    #[test]
+    fn single_precision_rounding_limits_accuracy() {
+        let c = WordSerialFpCordic::new(FpFormat::SINGLE, 24);
+        let (xk, _) = c.vector(3.0, 4.0);
+        let err = (xk / c.gain() - 5.0).abs();
+        assert!(err > 0.0 && err < 1e-4);
+    }
+
+    #[test]
+    fn published_ii() {
+        let c = WordSerialFpCordic::new(FpFormat::DOUBLE, 53);
+        assert_eq!(c.ii_cycles(8), 212 + 8 * 224);
+    }
+}

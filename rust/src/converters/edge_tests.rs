@@ -1,0 +1,138 @@
+//! Edge-case and failure-injection tests for the converter pair:
+//! format extremes, overflow/underflow paths, and exhaustive small-
+//! format sweeps (every half-precision significand round-trips).
+
+#[cfg(test)]
+mod tests {
+    use crate::converters::{
+        input_convert_hub, input_convert_ieee, output_convert_hub, output_convert_ieee,
+        HubInputOpts,
+    };
+    use crate::fp::{Fp, FpFormat, HubFp};
+    use crate::rotator::{GivensRotator, RotatorConfig};
+    use crate::util::rng::Rng;
+
+    const SINGLE: FpFormat = FpFormat::SINGLE;
+
+    #[test]
+    fn exhaustive_half_precision_input_round_trip() {
+        // every half-precision significand at a fixed exponent survives
+        // IEEE input conversion exactly when no alignment shift happens
+        let fmt = FpFormat::HALF;
+        let n = 14;
+        for man in (1u64 << 10)..(1u64 << 11) {
+            let x = Fp { sign: false, exp: fmt.bias(), man };
+            let bf = input_convert_ieee(fmt, n, x, x, false);
+            let want = (man as i64) << (n - fmt.mbits - 1);
+            assert_eq!(bf.x, want, "man={man:#x}");
+            assert_eq!(bf.y, want);
+        }
+    }
+
+    #[test]
+    fn exhaustive_half_precision_hub_negation_symmetry() {
+        let fmt = FpFormat::HALF;
+        let n = 14;
+        let opts = HubInputOpts::default();
+        for man in (1u64 << 10)..(1u64 << 11) {
+            let pos = HubFp { sign: false, exp: fmt.bias(), man };
+            let neg = HubFp { sign: true, ..pos };
+            let bp = input_convert_hub(fmt, n, pos, pos, opts);
+            let bn = input_convert_hub(fmt, n, neg, neg, opts);
+            assert_eq!(
+                crate::fixed::hub_to_f64(bn.x, n),
+                -crate::fixed::hub_to_f64(bp.x, n),
+                "man={man:#x}"
+            );
+        }
+    }
+
+    #[test]
+    fn max_exponent_inputs_do_not_overflow_internally() {
+        // largest finite values: alignment + CORDIC + output conversion
+        // must saturate, not wrap
+        let rot = GivensRotator::new(RotatorConfig::ieee(SINGLE, 26, 23));
+        let big = Fp::max_finite(SINGLE, false).to_f64(SINGLE);
+        let (vx, _vy, _) = rot.vector(rot.encode(big), rot.encode(big));
+        // modulus = √2·max overflows the format: must clamp to max
+        let out = vx.to_f64(SINGLE);
+        assert!(out >= big * 0.99, "saturation expected, got {out}");
+        assert!(out.is_finite());
+    }
+
+    #[test]
+    fn min_exponent_inputs_flush_cleanly() {
+        let rot = GivensRotator::new(RotatorConfig::hub(SINGLE, 26, 24));
+        let tiny = 2f64.powi(-125);
+        let (vx, vy, _) = rot.vector(rot.encode(tiny), rot.encode(tiny));
+        let m = (2.0f64).sqrt() * tiny;
+        assert!((vx.to_f64(SINGLE) - m).abs() < m * 1e-4);
+        assert!(vy.to_f64(SINGLE).abs() < m * 1e-4);
+    }
+
+    #[test]
+    fn output_exponent_underflow_is_zero_not_garbage() {
+        // a value whose normalization pushes the exponent below 1
+        let (fx, _) = output_convert_ieee(SINGLE, 26, 28, 3, 0, 2);
+        assert!(fx.is_zero());
+        let (hx, _) = output_convert_hub(SINGLE, 26, 28, 3, 0, 2, true);
+        assert!(hx.is_zero());
+    }
+
+    #[test]
+    fn output_exponent_overflow_saturates() {
+        let near_max = SINGLE.max_biased_exp();
+        // big word + big exponent ⇒ saturate to max finite
+        let (fx, _) = output_convert_ieee(SINGLE, 26, 28, 3 << 25, 0, near_max);
+        assert_eq!(fx.exp, SINGLE.max_biased_exp());
+        let (hx, _) = output_convert_hub(SINGLE, 26, 28, 3 << 25, 0, near_max, false);
+        assert_eq!(hx.exp, SINGLE.max_biased_exp());
+    }
+
+    #[test]
+    fn random_cross_family_consistency() {
+        // IEEE and HUB units given the same reals agree to format
+        // precision end-to-end (they are different circuits, same math)
+        let ri = GivensRotator::new(RotatorConfig::ieee(SINGLE, 27, 24));
+        let rh = GivensRotator::new(RotatorConfig::hub(SINGLE, 26, 24));
+        let mut rng = Rng::new(31);
+        for _ in 0..200 {
+            let s = 2f64.powf(rng.range(-20.0, 20.0));
+            let (x, y) = (rng.range(-1.0, 1.0) * s, rng.range(-1.0, 1.0) * s);
+            let (ix, _, _) = ri.vector(ri.encode(x), ri.encode(y));
+            let (hx, _, _) = rh.vector(rh.encode(x), rh.encode(y));
+            let (a, b) = (ix.to_f64(SINGLE), hx.to_f64(SINGLE));
+            let m = (x * x + y * y).sqrt();
+            assert!((a - b).abs() <= m * 1e-5, "x={x} y={y}: ieee {a} hub {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "family")]
+    fn family_mismatch_is_rejected() {
+        let rot = GivensRotator::new(RotatorConfig::hub(SINGLE, 26, 24));
+        let wrong = crate::rotator::Val::Ieee(Fp::one(SINGLE));
+        let _ = rot.vector(wrong, wrong);
+    }
+
+    #[test]
+    #[should_panic(expected = "internal width")]
+    fn too_narrow_internal_width_is_rejected() {
+        let bad = RotatorConfig::ieee(SINGLE, 20, 17); // n < m
+        let rot = GivensRotator::new(bad);
+        let _ = rot.vector(rot.encode(1.0), rot.encode(1.0));
+    }
+
+    #[test]
+    fn custom_formats_work() {
+        // bfloat16-like (8, 8) and a wide-exponent format
+        for (fmt, n, tol) in [
+            (FpFormat { ebits: 8, mbits: 8 }, 11, 2e-2),
+            (FpFormat { ebits: 10, mbits: 17 }, 20, 2e-4),
+        ] {
+            let rot = GivensRotator::new(RotatorConfig::hub(fmt, n, n - 2));
+            let (vx, _, _) = rot.vector(rot.encode(3.0), rot.encode(4.0));
+            assert!((vx.to_f64(fmt) - 5.0).abs() < 5.0 * tol, "{fmt:?}: {}", vx.to_f64(fmt));
+        }
+    }
+}

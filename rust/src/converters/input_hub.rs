@@ -1,0 +1,149 @@
+//! HUB FP → block-fixed-point input converter (paper Fig. 5, §4.1).
+
+use super::{BlockFp, HubInputOpts};
+use crate::fixed::{asr, hub_not};
+use crate::fp::{FpFormat, HubFp};
+
+/// Convert one (X, Y) pair of HUB FP values into aligned n-bit HUB
+/// fixed-point significands sharing the greater exponent.
+///
+/// Differences from the conventional converter (all paper §4.1):
+/// - two's complement is a bitwise inversion (no adder),
+/// - the m-bit significand is extended with its ILSB (`1 0 0 …`, biased)
+///   or, to avoid conversion bias, with `LSB ¬LSB ¬LSB …` (unbiased),
+/// - exact 1.0 inputs (identity-matrix columns) can be detected
+///   (exponent field == bias, fraction == 0) and converted *without* the
+///   ILSB, appending zeros, so the internal word is exact,
+/// - the aligned shift needs no rounding logic: truncating a HUB word
+///   *is* round-to-nearest.
+pub fn input_convert_hub(
+    fmt: FpFormat,
+    n: u32,
+    x: HubFp,
+    y: HubFp,
+    opts: HubInputOpts,
+) -> BlockFp {
+    let m = fmt.mbits;
+    assert!(n > m, "internal width n={n} must exceed significand m={m}");
+    let k = n - m - 1; // extension field width (may be 0 when n == m+1)
+
+    let ext = |f: &HubFp| -> i64 {
+        if f.is_zero() {
+            // zero detected before appending the leading one (paper §4.1)
+            return 0;
+        }
+        let is_one = opts.detect_one
+            && f.exp == fmt.bias()
+            && f.man == (1u64 << (m - 1)); // fraction bits all zero
+        let fill: u64 = if k == 0 || is_one {
+            // I-detection: no ILSB, zeros appended ⇒ exact integer word.
+            0
+        } else if opts.unbiased {
+            // first bit = explicit LSB, rest = ¬LSB ⇒ '1000…' or '0111…'
+            if f.man & 1 == 1 {
+                1u64 << (k - 1)
+            } else {
+                (1u64 << (k - 1)) - 1
+            }
+        } else {
+            // biased: ILSB then zeros
+            1u64 << (k - 1)
+        };
+        let mag = ((f.man as i64) << k) | fill as i64;
+        if f.sign {
+            hub_not(mag, n)
+        } else {
+            mag
+        }
+    };
+    let vx = ext(&x);
+    let vy = ext(&y);
+
+    let dxy = x.exp - y.exp;
+    let (mexp, xv, yv) = if dxy >= 0 {
+        (x.exp, vx, shift(vy, dxy as u32, n))
+    } else {
+        (y.exp, shift(vx, (-dxy) as u32, n), vy)
+    };
+    BlockFp { x: xv, y: yv, exp: mexp }
+}
+
+/// HUB alignment shift: plain arithmetic shift (truncation of a HUB word
+/// is round-to-nearest); the shifter forces zero at full distance.
+fn shift(v: i64, d: u32, n: u32) -> i64 {
+    if d >= n {
+        0
+    } else {
+        asr(v, d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+
+    const FMT: FpFormat = FpFormat::SINGLE;
+
+    #[test]
+    fn biased_extension_appends_ilsb() {
+        let n = 28;
+        let h = HubFp { sign: false, exp: FMT.bias(), man: 1u64 << (FMT.mbits - 1) };
+        let bf = input_convert_hub(
+            FMT,
+            n,
+            h,
+            h,
+            HubInputOpts { unbiased: false, detect_one: false },
+        );
+        // ILSB lands k-1 = n-m-2 bits above the new LSB
+        let expect = (1i64 << (n - 2)) | (1i64 << (n - FMT.mbits - 2));
+        assert_eq!(bf.x, expect);
+    }
+
+    #[test]
+    fn unbiased_extension_depends_on_lsb() {
+        let n = 28;
+        let k = n - FMT.mbits - 1;
+        let odd = HubFp { sign: false, exp: FMT.bias(), man: (1u64 << (FMT.mbits - 1)) | 1 };
+        let even = HubFp { sign: false, exp: FMT.bias(), man: (1u64 << (FMT.mbits - 1)) | 2 };
+        let opts = HubInputOpts { unbiased: true, detect_one: false };
+        let bo = input_convert_hub(FMT, n, odd, odd, opts);
+        let be = input_convert_hub(FMT, n, even, even, opts);
+        assert_eq!(bo.x & ((1 << k) - 1), 1 << (k - 1)); // '1000…'
+        assert_eq!(be.x & ((1 << k) - 1), (1 << (k - 1)) - 1); // '0111…'
+        // both are within half a HUB fixed ulp of the represented input
+        for (bf, h) in [(bo, odd), (be, even)] {
+            let got = fixed::hub_to_f64(bf.x, n);
+            let want = h.to_f64(FMT);
+            assert!((got - want).abs() <= 2f64.powi(-(n as i32 - 1)));
+        }
+    }
+
+    #[test]
+    fn negative_uses_bitwise_not() {
+        let n = 28;
+        let pos = HubFp { sign: false, exp: FMT.bias(), man: 0xAB_CDEF | (1 << (FMT.mbits - 1)) };
+        let neg = HubFp { sign: true, ..pos };
+        let opts = HubInputOpts::default();
+        let bp = input_convert_hub(FMT, n, pos, pos, opts);
+        let bn = input_convert_hub(FMT, n, neg, neg, opts);
+        assert_eq!(fixed::hub_to_f64(bn.x, n), -fixed::hub_to_f64(bp.x, n));
+    }
+
+    #[test]
+    fn zero_word_for_zero_input() {
+        let bf = input_convert_hub(FMT, 28, HubFp::ZERO, HubFp::ZERO, HubInputOpts::default());
+        assert_eq!((bf.x, bf.y), (0, 0));
+    }
+
+    #[test]
+    fn works_with_zero_extension_field() {
+        // n = m+1: no extension bits at all — input ILSB becomes the
+        // internal ILSB directly.
+        let n = FMT.mbits + 1;
+        let h = HubFp { sign: false, exp: FMT.bias(), man: (1u64 << (FMT.mbits - 1)) | 5 };
+        let bf = input_convert_hub(FMT, n, h, h, HubInputOpts::default());
+        assert_eq!(fixed::hub_to_f64(bf.x, n), h.to_f64(FMT));
+    }
+}

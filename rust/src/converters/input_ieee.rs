@@ -1,0 +1,112 @@
+//! Conventional FP → block-fixed-point input converter (paper Fig. 2).
+
+use super::BlockFp;
+use crate::fixed::asr;
+use crate::fp::{Fp, FpFormat};
+
+/// Convert one (X, Y) pair of conventional FP values into aligned n-bit
+/// two's-complement significands sharing the greater exponent.
+///
+/// `round == true` rounds the shifted significand to nearest-tie-to-even
+/// on the discarded bits ("IEEERound" in Fig. 10); `round == false`
+/// simply discards them ("IEEETrunc"). The paper finds rounding is *not*
+/// worth its hardware (§5.1) — both are provided.
+pub fn input_convert_ieee(fmt: FpFormat, n: u32, x: Fp, y: Fp, round: bool) -> BlockFp {
+    let m = fmt.mbits;
+    assert!(n > m, "internal width n={n} must exceed significand m={m}");
+    assert!(n + 2 <= 62, "internal width too large for the i64 model");
+
+    // Sign-magnitude → two's complement, extended to n bits by appending
+    // n−m−1 zeros (Fig. 2 right side).
+    let ext = |f: &Fp| -> i64 {
+        let mag = (f.man as i64) << (n - m - 1);
+        if f.sign {
+            -mag
+        } else {
+            mag
+        }
+    };
+    let vx = ext(&x);
+    let vy = ext(&y);
+
+    // Dual exponent subtraction; the positive result selects the shift
+    // amount, its sign selects mExp and which significand shifts.
+    let dxy = x.exp - y.exp;
+    let (mexp, xv, yv) = if dxy >= 0 {
+        (x.exp, vx, shift_round(vy, dxy as u32, n, round))
+    } else {
+        (y.exp, shift_round(vx, (-dxy) as u32, n, round), vy)
+    };
+    BlockFp { x: xv, y: yv, exp: mexp }
+}
+
+/// Arithmetic right shift with the Fig. 2 semantics: the shifter forces
+/// zero when the distance reaches the word width; optional RNE rounding
+/// over the discarded bits (sticky + increment).
+fn shift_round(v: i64, d: u32, n: u32, round: bool) -> i64 {
+    if d == 0 {
+        return v;
+    }
+    if d >= n {
+        return 0;
+    }
+    let kept = asr(v, d);
+    if !round {
+        return kept;
+    }
+    let rem = (v - (kept << d)) as u64; // positive fractional remainder
+    let half = 1u64 << (d - 1);
+    let inc = rem > half || (rem == half && (kept & 1) == 1);
+    kept + inc as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FMT: FpFormat = FpFormat::SINGLE;
+
+    #[test]
+    fn extension_appends_zeros() {
+        let n = 28;
+        let one = Fp::one(FMT);
+        let bf = input_convert_ieee(FMT, n, one, one, false);
+        assert_eq!(bf.x, 1i64 << (n - 2));
+        assert_eq!(bf.y, 1i64 << (n - 2));
+    }
+
+    #[test]
+    fn negative_is_twos_complement() {
+        let n = 28;
+        let a = Fp::from_f64(FMT, -1.0);
+        let bf = input_convert_ieee(FMT, n, a, Fp::one(FMT), false);
+        assert_eq!(bf.x, -(1i64 << (n - 2)));
+    }
+
+    #[test]
+    fn shift_at_word_width_forces_zero() {
+        // d == n ⇒ zero even for negative values (asr alone would give −1)
+        assert_eq!(shift_round(-12345, 28, 28, false), 0);
+        assert_eq!(shift_round(-12345, 40, 28, false), 0);
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        // v = 0b...10 with d=1: remainder exactly half, kept even → stays
+        assert_eq!(shift_round(0b110, 1, 28, true), 0b11);
+        // kept odd → rounds up
+        assert_eq!(shift_round(0b111, 1, 28, true), 0b100);
+        // remainder > half rounds up
+        assert_eq!(shift_round(0b1011, 2, 28, true), 0b11);
+    }
+
+    #[test]
+    fn mexp_is_max_of_exponents() {
+        let big = Fp::from_f64(FMT, 1024.0);
+        let small = Fp::from_f64(FMT, 0.5);
+        let bf = input_convert_ieee(FMT, 28, big, small, false);
+        assert_eq!(bf.exp, big.exp);
+        let bf2 = input_convert_ieee(FMT, 28, small, big, false);
+        assert_eq!(bf2.exp, big.exp);
+    }
+}

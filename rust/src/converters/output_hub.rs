@@ -1,0 +1,123 @@
+//! Block-fixed-point → HUB FP output converter (paper Fig. 7, §4.3).
+
+use crate::fp::{FpFormat, HubFp};
+
+/// Convert the two rotated W-bit HUB significands back to independent
+/// HUB FP values.
+///
+/// Versus the conventional converter (Fig. 4), this one:
+/// - takes the absolute value by bitwise inversion (exact for HUB),
+/// - appends the ILSB before the normalization left-shift (optionally
+///   the unbiased `LSB ¬LSB …` pattern to cancel the ILSB bias),
+/// - truncates to m stored bits — *no* sticky tree, *no* rounding adder,
+///   *no* significand-overflow exponent increment. These eliminations
+///   are where the HUB area/delay savings come from.
+pub fn output_convert_hub(
+    fmt: FpFormat,
+    n: u32,
+    w: u32,
+    xfix: i64,
+    yfix: i64,
+    mexp: i64,
+    unbiased: bool,
+) -> (HubFp, HubFp) {
+    (
+        one_coord(fmt, n, w, xfix, mexp, unbiased),
+        one_coord(fmt, n, w, yfix, mexp, unbiased),
+    )
+}
+
+fn one_coord(fmt: FpFormat, n: u32, w: u32, v: i64, mexp: i64, unbiased: bool) -> HubFp {
+    debug_assert!(v >= -(1i64 << (w - 1)) && v < (1i64 << (w - 1)));
+    let sign = v < 0;
+    // absolute value by bitwise NOT (HUB negation) — exact
+    let a = if sign { !v as u64 } else { v as u64 };
+    let m = fmt.mbits;
+
+    // Extend below the LSB: the ILSB first ('1 0 0 …'), or the unbiased
+    // pattern ('LSB ¬LSB …'). F bits of fill guarantee m significand
+    // bits are available even when a == 0.
+    let f = m + 2;
+    let fill: u128 = if unbiased {
+        if a & 1 == 1 {
+            1u128 << (f - 1)
+        } else {
+            (1u128 << (f - 1)) - 1
+        }
+    } else {
+        1u128 << (f - 1)
+    };
+    // 128-bit: a (up to w ≤ 62 bits) shifted by f (m+2, up to 55) bits
+    let af = ((a as u128) << f) | fill; // always > 0: no zero case needed
+
+    let p = 127 - af.leading_zeros();
+    let new_exp = mexp + p as i64 - f as i64 - (n as i64 - 2);
+
+    // top m bits, truncated — HUB round-to-nearest
+    debug_assert!(p + 1 >= m);
+    let man = (af >> (p + 1 - m)) as u64;
+
+    if new_exp <= 0 {
+        return HubFp::ZERO; // underflow flush
+    }
+    if new_exp > fmt.max_biased_exp() {
+        return HubFp { sign, exp: fmt.max_biased_exp(), man: (1u64 << m) - 1 };
+    }
+    HubFp { sign, exp: new_exp, man }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FMT: FpFormat = FpFormat::SINGLE;
+
+    #[test]
+    fn truncation_rounds_to_nearest() {
+        let n = 27;
+        let w = n + 2;
+        // arbitrary word: reconstructed HUB FP must be within half a HUB
+        // ulp of the word's HUB value
+        for &vraw in &[123_456_789i64, 1, -1, -987_654, (1 << (n - 1)) + 7] {
+            let v = vraw % (1 << (w - 1));
+            let want = crate::fixed::hub_to_f64(v, n);
+            let h = one_coord(FMT, n, w, v, FMT.bias(), false);
+            let got = h.to_f64(FMT);
+            let ulp = 2f64.powi(got.abs().log2().floor() as i32 - (FMT.mbits as i32 - 1));
+            assert!((got - want).abs() <= ulp / 2.0 + 1e-300, "v={v} want={want} got={got}");
+        }
+    }
+
+    #[test]
+    fn abs_by_not_is_exact() {
+        let n = 27;
+        let w = n + 2;
+        let v = 123_456_789i64 % (1 << (w - 1));
+        let pos = one_coord(FMT, n, w, v, FMT.bias(), false);
+        let neg = one_coord(FMT, n, w, !v, FMT.bias(), false); // NOT(v) = HUB −v
+        assert_eq!(pos.man, neg.man);
+        assert_eq!(pos.exp, neg.exp);
+        assert_ne!(pos.sign, neg.sign);
+    }
+
+    #[test]
+    fn no_significand_overflow_possible() {
+        // all-ones: conventional RNE would carry out; HUB truncates
+        let n = 27;
+        let w = n + 2;
+        let v = (1i64 << (w - 1)) - 1;
+        let h = one_coord(FMT, n, w, v, FMT.bias(), false);
+        assert_eq!(h.man >> (FMT.mbits - 1), 1); // still normalized, no bump
+    }
+
+    #[test]
+    fn unbiased_fill_tracks_lsb() {
+        let n = 27;
+        let w = n + 2;
+        let even = 0b1010_0000_0000_0000_0000_0000_0000i64 & ((1 << (w - 1)) - 1);
+        let h_b = one_coord(FMT, n, w, even, FMT.bias(), false);
+        let h_u = one_coord(FMT, n, w, even, FMT.bias(), true);
+        // both within half ulp of the same value, may differ in last bit
+        assert!(h_b.man.abs_diff(h_u.man) <= 1);
+    }
+}

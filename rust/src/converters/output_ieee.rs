@@ -1,0 +1,110 @@
+//! Block-fixed-point → conventional FP output converter (paper Fig. 4).
+
+use crate::fp::{Fp, FpFormat};
+
+/// Convert the two rotated W-bit significands (sharing `mexp`) back to
+/// independent conventional FP values: absolute value (two's
+/// complement), leading-one normalization, RNE rounding to m bits (with
+/// possible significand-overflow exponent bump), exponent update.
+/// Underflow flushes to zero, overflow saturates (under/overflow logic
+/// not drawn in Fig. 4 but described in §3.3).
+pub fn output_convert_ieee(
+    fmt: FpFormat,
+    n: u32,
+    w: u32,
+    xfix: i64,
+    yfix: i64,
+    mexp: i64,
+) -> (Fp, Fp) {
+    (one_coord(fmt, n, w, xfix, mexp), one_coord(fmt, n, w, yfix, mexp))
+}
+
+fn one_coord(fmt: FpFormat, n: u32, w: u32, v: i64, mexp: i64) -> Fp {
+    debug_assert!(v >= -(1i64 << (w - 1)) && v < (1i64 << (w - 1)));
+    if v == 0 {
+        return Fp::ZERO;
+    }
+    let sign = v < 0;
+    let a = v.unsigned_abs();
+    let m = fmt.mbits;
+
+    // Leading-one position p: value = a · 2^(−(n−2)) ⇒ normalized
+    // exponent shift = p − (n−2).
+    let p = 63 - a.leading_zeros();
+    let mut new_exp = mexp + p as i64 - (n as i64 - 2);
+
+    let mut man;
+    if p >= m {
+        // round-to-nearest-even over the discarded low bits
+        let shift_r = p - m + 1;
+        let man0 = a >> shift_r;
+        let rem = a & ((1u64 << shift_r) - 1);
+        let half = 1u64 << (shift_r - 1);
+        let inc = rem > half || (rem == half && (man0 & 1) == 1);
+        man = man0 + inc as u64;
+        if man == (1u64 << m) {
+            // significand overflow: renormalize, bump exponent
+            man >>= 1;
+            new_exp += 1;
+        }
+    } else if p == m - 1 {
+        man = a;
+    } else {
+        man = a << (m - 1 - p);
+    }
+
+    if new_exp <= 0 {
+        return Fp::ZERO; // underflow flush (paper §3.3)
+    }
+    if new_exp > fmt.max_biased_exp() {
+        return Fp::max_finite(fmt, sign);
+    }
+    Fp { sign, exp: new_exp, man }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FMT: FpFormat = FpFormat::SINGLE;
+
+    #[test]
+    fn exact_power_of_two() {
+        let n = 28;
+        let fp = one_coord(FMT, n, n + 2, 1i64 << (n - 2), FMT.bias());
+        assert_eq!(fp.to_f64(FMT), 1.0);
+    }
+
+    #[test]
+    fn negative_value_sets_sign() {
+        let n = 28;
+        let fp = one_coord(FMT, n, n + 2, -(3i64 << (n - 4)), FMT.bias());
+        assert_eq!(fp.to_f64(FMT), -0.75);
+    }
+
+    #[test]
+    fn rounding_carry_bumps_exponent() {
+        let n = 28;
+        // all-ones word: rounds up to the next power of two
+        let v = (1i64 << n) - 1; // ≈ 3.999…, p = n−1 ⇒ exp bump on carry
+        let fp = one_coord(FMT, n, n + 2, v, FMT.bias());
+        assert_eq!(fp.to_f64(FMT), 4.0);
+    }
+
+    #[test]
+    fn guard_bit_growth_handled() {
+        // values above 2.0 (possible after vectoring: modulus ≤ 2√2)
+        let n = 28;
+        let v = (1i64 << (n - 1)) + (1i64 << (n - 2)); // 3.0
+        let fp = one_coord(FMT, n, n + 2, v, FMT.bias());
+        assert_eq!(fp.to_f64(FMT), 3.0);
+    }
+
+    #[test]
+    fn small_value_left_normalizes() {
+        let n = 28;
+        let v = 5i64; // far below 1 ulp of the block grid top
+        let fp = one_coord(FMT, n, n + 2, v, FMT.bias());
+        assert_eq!(fp.to_f64(FMT), 5.0 / 2f64.powi(n as i32 - 2));
+    }
+}

@@ -1,0 +1,117 @@
+//! Dynamic batching policy: group requests up to a size cap or until a
+//! deadline expires — whichever comes first (vLLM-router style).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum microseconds to wait for more requests once one arrived.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 64, max_wait_us: 200 }
+    }
+}
+
+/// Pull-based batcher over an mpsc receiver.
+pub struct Batcher<T> {
+    rx: Receiver<T>,
+    /// The policy in force.
+    pub policy: BatchPolicy,
+}
+
+impl<T> Batcher<T> {
+    /// Wrap a receiver.
+    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Block for the next batch. Returns `None` when the channel is
+    /// closed and drained. Never returns an empty batch.
+    pub fn next_batch(&self) -> Option<Vec<T>> {
+        // block for the first request
+        let first = self.rx.recv().ok()?;
+        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        batch.push(first);
+        let deadline = Instant::now() + Duration::from_micros(self.policy.max_wait_us);
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                // deadline passed: take whatever is already queued
+                match self.rx.try_recv() {
+                    Ok(t) => batch.push(t),
+                    Err(_) => break,
+                }
+                continue;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(t) => batch.push(t),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn batches_respect_size_cap() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait_us: 1000 });
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        assert_eq!(b.next_batch().unwrap(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 64, max_wait_us: 500 });
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn closed_channel_returns_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert_eq!(b.next_batch().unwrap(), vec![7]);
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn order_is_preserved_across_batches() {
+        let (tx, rx) = channel();
+        for i in 0..100 {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 7, max_wait_us: 10 });
+        let mut all = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 7);
+            all.extend(batch);
+        }
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+}

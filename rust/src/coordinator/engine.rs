@@ -1,0 +1,163 @@
+//! Batch execution engines behind the coordinator.
+
+use crate::fp::{FpFormat, HubFp};
+use crate::qrd::QrdEngine;
+use crate::rotator::{RotatorConfig, Val};
+
+/// A backend that decomposes batches of 4×4 matrices given as HUB FP
+/// bit patterns (16 words in, 32 words out: `[R | G]`).
+pub trait BatchEngine {
+    /// Execute a batch.
+    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]>;
+    /// Largest batch worth grouping for this backend.
+    fn preferred_batch(&self) -> usize;
+    /// Display name.
+    fn name(&self) -> String;
+}
+
+/// Bit-accurate native Rust engine (the reference implementation —
+/// byte-for-byte identical to the PJRT artifact's output).
+pub struct NativeEngine {
+    /// The underlying QRD engine (public for tests/examples).
+    pub eng: QrdEngine,
+}
+
+impl NativeEngine {
+    /// Flagship configuration: HUBFull single precision N=26, 24 it.
+    pub fn flagship() -> Self {
+        NativeEngine { eng: QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)) }
+    }
+
+    /// Decompose one matrix at the bit level.
+    pub fn qrd_bits(&self, a: &[u32; 16]) -> [u32; 32] {
+        let fmt = self.eng.rot.cfg.fmt;
+        let m = 4usize;
+        let mut rows: Vec<Vec<Val>> = (0..m)
+            .map(|i| {
+                let mut row: Vec<Val> = (0..m)
+                    .map(|j| Val::Hub(HubFp::from_bits(fmt, a[i * m + j] as u64)))
+                    .collect();
+                row.extend((0..m).map(|j| {
+                    if i == j {
+                        self.eng.rot.one()
+                    } else {
+                        self.eng.rot.zero()
+                    }
+                }));
+                row
+            })
+            .collect();
+        rows = self.eng.triangularize(rows, m);
+        let mut out = [0u32; 32];
+        for i in 0..m {
+            for j in 0..2 * m {
+                out[i * 2 * m + j] = rows[i][j].to_bits(fmt) as u32;
+            }
+        }
+        out
+    }
+}
+
+impl BatchEngine for NativeEngine {
+    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+        mats.iter().map(|m| self.qrd_bits(m)).collect()
+    }
+
+    fn preferred_batch(&self) -> usize {
+        64
+    }
+
+    fn name(&self) -> String {
+        format!("native ({})", self.eng.rot.cfg.label())
+    }
+}
+
+/// PJRT-backed engine executing the AOT artifact.
+pub struct PjrtEngine {
+    rt: crate::runtime::PjrtQrd,
+    path: String,
+}
+
+impl PjrtEngine {
+    /// Load the artifact (lowered for a fixed batch size).
+    pub fn load(path: &str, batch: usize) -> anyhow::Result<Self> {
+        Ok(PjrtEngine { rt: crate::runtime::PjrtQrd::load(path, batch, 4)?, path: path.into() })
+    }
+}
+
+impl BatchEngine for PjrtEngine {
+    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+        // bits → f32 (the artifact bitcasts internally)
+        let mut flat = Vec::with_capacity(mats.len() * 16);
+        for m in mats {
+            flat.extend(m.iter().map(|&w| f32::from_bits(w)));
+        }
+        let out = self
+            .rt
+            .execute_padded(&flat, mats.len())
+            .expect("PJRT execution failed");
+        out.chunks_exact(32)
+            .map(|c| {
+                let mut r = [0u32; 32];
+                for (dst, &v) in r.iter_mut().zip(c) {
+                    *dst = v.to_bits();
+                }
+                r
+            })
+            .collect()
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.rt.batch
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt ({})", self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_is_deterministic() {
+        let eng = NativeEngine::flagship();
+        let a: [u32; 16] =
+            std::array::from_fn(|i| (1.0f32 + i as f32 * 0.25).to_bits());
+        assert_eq!(eng.qrd_bits(&a), eng.qrd_bits(&a));
+    }
+
+    #[test]
+    fn native_engine_matches_f64_decompose_values() {
+        // the bit path and the f64 path must describe the same QRD
+        let eng = NativeEngine::flagship();
+        let vals: Vec<f32> = (0..16).map(|i| (i as f32 - 7.5) * 0.3).collect();
+        let a_bits: [u32; 16] = std::array::from_fn(|i| vals[i].to_bits());
+        let bits_out = eng.qrd_bits(&a_bits);
+        let a_rows: Vec<Vec<f64>> =
+            (0..4).map(|i| (0..4).map(|j| vals[i * 4 + j] as f64).collect()).collect();
+        let res = eng.eng.decompose(&a_rows);
+        let fmt = FpFormat::SINGLE;
+        for i in 0..4 {
+            for j in 0..4 {
+                let from_bits = HubFp::from_bits(fmt, bits_out[i * 8 + j] as u64).to_f64(fmt);
+                assert!(
+                    (from_bits - res.r[i][j]).abs() < 1e-12 * res.r[i][j].abs().max(1.0),
+                    "r[{i}][{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_matrix_decomposes_to_zero_r_and_identityish_q() {
+        let eng = NativeEngine::flagship();
+        let out = eng.qrd_bits(&[0u32; 16]);
+        for j in 0..4 {
+            for i in 0..4 {
+                assert_eq!(out[i * 8 + j], 0, "R must be zero");
+            }
+        }
+    }
+}

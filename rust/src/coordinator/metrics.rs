@@ -1,0 +1,65 @@
+//! Service metrics: request/batch counters and batch-size accounting.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared coordinator metrics (lock-free counters).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    busy_ns: AtomicU64,
+}
+
+impl Metrics {
+    /// Record an accepted request.
+    pub fn on_request(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an executed batch of `n` requests taking `ns` engine time.
+    pub fn on_batch(&self, n: usize, ns: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
+        self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Total requests accepted.
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    /// Batches executed.
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    /// Mean batch size.
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches().max(1);
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Engine-busy seconds.
+    pub fn busy_secs(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let m = Metrics::default();
+        m.on_request();
+        m.on_request();
+        m.on_batch(2, 1000);
+        m.on_batch(4, 3000);
+        assert_eq!(m.requests(), 2);
+        assert_eq!(m.batches(), 2);
+        assert!((m.mean_batch() - 3.0).abs() < 1e-12);
+        assert!((m.busy_secs() - 4e-6).abs() < 1e-15);
+    }
+}

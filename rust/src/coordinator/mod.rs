@@ -1,0 +1,98 @@
+//! Layer-3 streaming QRD coordinator.
+//!
+//! The deployable system around the rotation unit: clients submit 4×4
+//! matrices, a dynamic batcher groups them (size + deadline policy,
+//! vLLM-router style), a worker executes batches on either the
+//! bit-accurate native engine or the AOT-compiled PJRT artifact, and
+//! responses stream back with per-request latency. Bounded queues give
+//! natural backpressure. Python is never on this path.
+//!
+//! Threading model: `std::thread` + `std::sync::mpsc` (the offline
+//! stand-in for tokio — request routing is CPU-bound here, so blocking
+//! channels are the right tool anyway).
+
+mod batcher;
+mod engine;
+mod metrics;
+mod service;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
+pub use metrics::Metrics;
+pub use service::{QrdService, Request, Response};
+
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Run the coordinator under a synthetic client load and print a
+/// throughput/latency report (the `repro serve` command and the
+/// streaming_service example both land here).
+pub fn serve_synthetic(
+    engine: &str,
+    requests: usize,
+    max_batch: usize,
+    artifact: &str,
+) -> anyhow::Result<()> {
+    let policy = BatchPolicy { max_batch, max_wait_us: 200 };
+    let (svc, name) = match engine {
+        "native" => (
+            QrdService::start(|| Box::new(NativeEngine::flagship()) as _, policy),
+            NativeEngine::flagship().name(),
+        ),
+        "pjrt" => {
+            // probe the artifact on this thread so load errors surface
+            // before the worker starts
+            let probe = PjrtEngine::load(artifact, 256)?;
+            let name = probe.name();
+            drop(probe);
+            let path = artifact.to_string();
+            (
+                QrdService::start(
+                    move || {
+                        Box::new(PjrtEngine::load(&path, 256).expect("artifact load")) as _
+                    },
+                    policy,
+                ),
+                name,
+            )
+        }
+        other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
+    };
+
+    // synthetic load: deterministic random matrices, a few binades
+    let mut rng = Rng::new(42);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let mut a = [0u32; 16];
+        let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+        for w in a.iter_mut() {
+            *w = (rng.range(-1.0, 1.0) as f32 * scale).to_bits();
+        }
+        pending.push(svc.submit(a));
+    }
+    let mut latencies: Vec<f64> = Vec::with_capacity(requests);
+    for rx in pending {
+        let resp = rx.recv().expect("service dropped a request");
+        latencies.push(resp.latency_us);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = svc.metrics();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    println!("engine            : {name}");
+    println!("requests          : {requests}");
+    println!("wall time         : {wall:.3} s");
+    println!("throughput        : {:.0} QRD/s", requests as f64 / wall);
+    println!("batches executed  : {}", m.batches());
+    println!("mean batch size   : {:.1}", m.mean_batch());
+    println!(
+        "latency µs        : p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+        pct(0.5),
+        pct(0.9),
+        pct(0.99),
+        latencies.last().unwrap()
+    );
+    svc.shutdown();
+    Ok(())
+}

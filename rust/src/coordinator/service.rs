@@ -1,0 +1,144 @@
+//! The QRD service: bounded ingress queue → batcher → engine worker →
+//! per-request response channels.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::engine::BatchEngine;
+use super::metrics::Metrics;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One client request: a 4×4 matrix as HUB FP bit patterns.
+pub struct Request {
+    /// Row-major input bits.
+    pub a: [u32; 16],
+    /// Response channel.
+    pub tx: Sender<Response>,
+    /// Enqueue timestamp.
+    pub enq: Instant,
+}
+
+/// One response: `[R | G]` bits plus measured latency.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Row-major output bits (4×8).
+    pub out: [u32; 32],
+    /// Request latency in microseconds (enqueue → response send).
+    pub latency_us: f64,
+}
+
+/// Handle to a running service.
+pub struct QrdService {
+    ingress: SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl QrdService {
+    /// Start the service with a bounded ingress queue (backpressure:
+    /// `submit` blocks when 4× the batch size is already queued).
+    ///
+    /// The engine is built *inside* the worker thread via `factory`:
+    /// PJRT client handles are not `Send` (they wrap `Rc` internals), so
+    /// the thread that executes batches must own the whole client.
+    pub fn start<F>(factory: F, policy: BatchPolicy) -> QrdService
+    where
+        F: FnOnce() -> Box<dyn BatchEngine> + Send + 'static,
+    {
+        let (tx, rx) = sync_channel::<Request>(policy.max_batch * 4);
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let worker = std::thread::spawn(move || worker_loop(factory(), rx, policy, m2));
+        QrdService { ingress: tx, metrics, worker: Some(worker) }
+    }
+
+    /// Submit one matrix; returns the response receiver. Blocks if the
+    /// ingress queue is full (backpressure).
+    pub fn submit(&self, a: [u32; 16]) -> Receiver<Response> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.metrics.on_request();
+        self.ingress
+            .send(Request { a, tx, enq: Instant::now() })
+            .expect("service worker died");
+        rx
+    }
+
+    /// Shared metrics.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Graceful shutdown: close ingress, join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.ingress);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    engine: Box<dyn BatchEngine>,
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    let batcher = Batcher::new(rx, policy);
+    while let Some(batch) = batcher.next_batch() {
+        let mats: Vec<[u32; 16]> = batch.iter().map(|r| r.a).collect();
+        let t0 = Instant::now();
+        let outs = engine.run(&mats);
+        let dt = t0.elapsed();
+        metrics.on_batch(batch.len(), dt.as_nanos() as u64);
+        debug_assert_eq!(outs.len(), batch.len());
+        for (req, out) in batch.into_iter().zip(outs) {
+            let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+            // receiver may have been dropped — that's the client's choice
+            let _ = req.tx.send(Response { out, latency_us });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::NativeEngine;
+
+    #[test]
+    fn all_requests_answered_in_order_of_submission() {
+        let svc = QrdService::start(
+            || Box::new(NativeEngine::flagship()),
+            BatchPolicy::default(),
+        );
+        let eng = NativeEngine::flagship();
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for k in 0..50u32 {
+            let a: [u32; 16] =
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.1).to_bits());
+            expected.push(eng.qrd_bits(&a));
+            rxs.push(svc.submit(a));
+        }
+        for (rx, want) in rxs.into_iter().zip(expected) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.out, want);
+            assert!(resp.latency_us >= 0.0);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests(), 50);
+        assert!(m.batches() >= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let svc = QrdService::start(
+            || Box::new(NativeEngine::flagship()),
+            BatchPolicy::default(),
+        );
+        let rx = svc.submit([0u32; 16]);
+        let _ = rx.recv().unwrap();
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,105 @@
+//! CORDIC scale-factor compensation (paper §5.2).
+//!
+//! Every microrotation scales the vector by √(1 + 2⁻²ⁱ); after `niter`
+//! iterations the accumulated gain is K ≈ 1.6468. The paper performs the
+//! 1/K compensation "in the embedded multipliers" and excludes it from
+//! the rotator's area numbers; the QRD engine needs it on every output,
+//! so it is a first-class block here (and is costed separately as DSP
+//! usage in [`crate::hwmodel`]).
+
+use crate::fixed::wrap;
+
+/// A constant-coefficient 1/K multiplier over the w-bit core domain.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleComp {
+    /// Datapath width (the CORDIC core's w).
+    pub w: u32,
+    /// Fixed-point 1/K coefficient, `frac` fractional bits.
+    coeff: i64,
+    /// Coefficient fractional bits.
+    frac: u32,
+    /// HUB semantics (multiply the extended 2v+1 word, truncate back).
+    hub: bool,
+}
+
+impl ScaleComp {
+    /// Build the compensator for a core with `niter` microrotations.
+    /// The coefficient carries w fractional bits so its rounding error
+    /// stays below the datapath quantization floor at *every* width —
+    /// double precision needs the full-width coefficient (hardware
+    /// cascades DSP slices for it; a 30-bit coefficient would cap the
+    /// double-precision QRD at ~187 dB — caught by
+    /// experiments::extended::tests::double_precision_band).
+    pub fn new(w: u32, niter: u32, hub: bool) -> Self {
+        let frac = w.min(62);
+        let inv_k = 1.0 / super::gain(niter);
+        let coeff = (inv_k * 2f64.powi(frac as i32)).round() as i64;
+        ScaleComp { w, coeff, frac, hub }
+    }
+
+    /// Compensate one word: v · (1/K), truncated back to the datapath
+    /// grid (conventional truncates the product; HUB truncation of the
+    /// extended word is round-to-nearest, as everywhere else).
+    #[inline]
+    pub fn apply(&self, v: i64) -> i64 {
+        if self.hub {
+            // (2v+1)·c / 2^frac, then drop the extension bit
+            let p = (2 * v + 1) as i128 * self.coeff as i128;
+            let t = (p >> self.frac) as i64;
+            wrap(t >> 1, self.w)
+        } else {
+            let p = v as i128 * self.coeff as i128;
+            wrap((p >> self.frac) as i64, self.w)
+        }
+    }
+
+    /// The coefficient as a real (tests).
+    pub fn coefficient(&self) -> f64 {
+        self.coeff as f64 / 2f64.powi(self.frac as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed;
+
+    #[test]
+    fn compensates_gain_conventional() {
+        let w = 30;
+        let n = 28;
+        let sc = ScaleComp::new(w, 24, false);
+        let k = crate::cordic::gain(24);
+        let v = (1.3 * k * 2f64.powi(n - 2)) as i64;
+        let out = fixed::to_f64(sc.apply(v), n as u32);
+        assert!((out - 1.3).abs() < 1e-6, "{out}");
+    }
+
+    #[test]
+    fn compensates_gain_hub() {
+        let w = 30;
+        let n = 28;
+        let sc = ScaleComp::new(w, 24, true);
+        let k = crate::cordic::gain(24);
+        let v = (1.3 * k * 2f64.powi(n - 2)) as i64;
+        let out = fixed::hub_to_f64(sc.apply(v), n as u32);
+        assert!((out - 1.3).abs() < 1e-6, "{out}");
+    }
+
+    #[test]
+    fn negative_values() {
+        let sc = ScaleComp::new(30, 24, false);
+        let v = -123_456_789i64;
+        let out = sc.apply(v);
+        let want = v as f64 * sc.coefficient();
+        assert!((out as f64 - want).abs() <= 1.0);
+    }
+
+    #[test]
+    fn coefficient_close_to_inverse_gain() {
+        for niter in [12, 24, 40] {
+            let sc = ScaleComp::new(32, niter, false);
+            assert!((sc.coefficient() - 1.0 / crate::cordic::gain(niter)).abs() < 1e-8);
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! Ablations of the design choices DESIGN.md calls out — beyond the
+//! paper's own sweeps (Figs. 9/10 cover iterations and converter
+//! options): integer guard bits, scale compensation, and the HUB-at-
+//! same-N comparison.
+
+use crate::analysis::{mean_snr, sweep_r, EngineSpec};
+use crate::fp::FpFormat;
+use crate::hwmodel::{rotator_cost, Tech};
+use crate::rotator::RotatorConfig;
+
+/// Run all ablations.
+pub fn ablate(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    guard_bits(nmat, seed)?;
+    compensation(nmat, seed)?;
+    hub_same_n(nmat, seed)?;
+    Ok(())
+}
+
+/// Guard-bit sweep: why the paper appends exactly 2 integer bits.
+fn guard_bits(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Ablation: CORDIC integer guard bits (HUB single N=26, it=24)");
+    println!(
+        "{:>6} | {:>10} | {:>9} | {}",
+        "guard", "SNR (dB)", "LUTs", "note"
+    );
+    let t = Tech::virtex6();
+    for guard in 0..=3u32 {
+        let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        cfg.guard_bits = guard;
+        let snr = mean_snr(&sweep_r(EngineSpec::Fp(cfg), 4, 1..=8, nmat, seed));
+        let luts = rotator_cost(&cfg, &t).luts;
+        let note = match guard {
+            0 | 1 => "overflow wraps: K·√2 growth does not fit",
+            2 => "paper's choice — full growth headroom",
+            _ => "no accuracy left to gain",
+        };
+        println!("{guard:>6} | {snr:>10.2} | {luts:>9.0} | {note}");
+    }
+    println!();
+    Ok(())
+}
+
+/// Scale compensation on/off: the reconstruction needs the 1/K
+/// multiply; without it R and G carry K^k growth.
+fn compensation(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Ablation: 1/K scale compensation (HUB single N=26, it=24)");
+    for (on, label) in [(true, "compensated (QRD-usable)"), (false, "raw CORDIC outputs")] {
+        let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        cfg.compensate = on;
+        let snr = mean_snr(&sweep_r(EngineSpec::Fp(cfg), 4, 1..=8, nmat, seed));
+        println!("  {label:<28}: {snr:>8.2} dB");
+    }
+    println!("  (the paper keeps compensation in the embedded multipliers, outside");
+    println!("   the rotator's area numbers — but a QRD unit cannot skip it)\n");
+    Ok(())
+}
+
+/// HUB vs IEEE at the *same* N (the fair-area comparison is HUB at
+/// N−1, Fig. 8/Table 2 — this shows the raw format advantage instead).
+fn hub_same_n(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Ablation: HUB vs IEEE at equal internal width (single precision)");
+    println!("{:>3} | {:>10} | {:>10} | {:>8}", "N", "IEEE", "HUB", "gain dB");
+    for n in [25u32, 26, 27, 28] {
+        let ieee = mean_snr(&sweep_r(
+            EngineSpec::Fp(RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3)),
+            4,
+            1..=8,
+            nmat,
+            seed,
+        ));
+        let hub = mean_snr(&sweep_r(
+            EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, n, n - 2)),
+            4,
+            1..=8,
+            nmat,
+            seed,
+        ));
+        println!("{n:>3} | {ieee:>10.2} | {hub:>10.2} | {:>8.2}", hub - ieee);
+    }
+    println!();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_bit_ablation_shows_the_cliff() {
+        // 0/1 guard bits must lose double-digit dB vs 2 (wraparound)
+        let snr_at = |guard: u32| {
+            let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+            cfg.guard_bits = guard;
+            mean_snr(&sweep_r(EngineSpec::Fp(cfg), 4, 2..=4, 60, 9))
+        };
+        let g1 = snr_at(1);
+        let g2 = snr_at(2);
+        let g3 = snr_at(3);
+        assert!(g2 - g1 > 20.0, "guard=1 {g1} vs guard=2 {g2}");
+        assert!((g3 - g2).abs() < 3.0, "guard=3 adds nothing: {g3} vs {g2}");
+    }
+
+    #[test]
+    fn compensation_is_required_for_qrd() {
+        let snr_with = |comp: bool| {
+            let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+            cfg.compensate = comp;
+            mean_snr(&sweep_r(EngineSpec::Fp(cfg), 4, 2..=3, 60, 4))
+        };
+        assert!(snr_with(true) - snr_with(false) > 40.0);
+    }
+
+    #[test]
+    fn ablations_print() {
+        ablate(30, 1).unwrap();
+    }
+}

@@ -1,0 +1,86 @@
+//! Extension beyond the paper's §5.1 (which analyzes only single
+//! precision): the error analysis repeated for half and double
+//! precision, confirming the N−3 / N−2 sizing rule generalizes across
+//! formats — the claim implicit in Tables 1–3's half/double rows.
+
+use crate::analysis::{mean_snr, sweep_r, EngineSpec};
+use crate::fp::FpFormat;
+use crate::rotator::RotatorConfig;
+
+/// Run the extended-format analysis.
+pub fn extended(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Extension: error analysis at half and double precision");
+    println!("(paper analyzes single only; sizing rule should generalize)\n");
+    for (fmt, ns, r_max) in [
+        (FpFormat::HALF, [13u32, 14, 16], 4u32),
+        (FpFormat::DOUBLE, [55u32, 57, 59], 20),
+    ] {
+        println!("{} precision (mean SNR dB over r=1..{r_max}):", fmt.name());
+        println!("  {:>3} | {:>10} | {:>10} | {:>10}", "N", "IEEE N-3it", "HUB N-2it", "gain");
+        for n in ns {
+            let ieee = mean_snr(&sweep_r(
+                EngineSpec::Fp(RotatorConfig::ieee(fmt, n, n - 3)),
+                4,
+                1..=r_max,
+                nmat,
+                seed,
+            ));
+            let hub = mean_snr(&sweep_r(
+                EngineSpec::Fp(RotatorConfig::hub(fmt, n - 1, n - 3)),
+                4,
+                1..=r_max,
+                nmat,
+                seed,
+            ));
+            println!("  {n:>3} | {ieee:>10.2} | {hub:>10.2} | {:>+9.2}", hub - ieee);
+        }
+        println!();
+    }
+    println!("expected shape: HUB at N-1 ≈ IEEE at N (the Table 1-3 pairing rule)");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairing_rule_holds_for_half_precision() {
+        // HUB at N−1 should be within ~2 dB of IEEE at N
+        let ieee = mean_snr(&sweep_r(
+            EngineSpec::Fp(RotatorConfig::ieee(FpFormat::HALF, 14, 11)),
+            4,
+            1..=3,
+            150,
+            5,
+        ));
+        let hub = mean_snr(&sweep_r(
+            EngineSpec::Fp(RotatorConfig::hub(FpFormat::HALF, 13, 11)),
+            4,
+            1..=3,
+            150,
+            5,
+        ));
+        assert!((ieee - hub).abs() < 3.0, "ieee {ieee} hub {hub}");
+        // and both sit in the plausible half-precision band
+        assert!(ieee > 45.0 && ieee < 75.0, "{ieee}");
+    }
+
+    #[test]
+    fn double_precision_band() {
+        let hub = mean_snr(&sweep_r(
+            EngineSpec::Fp(RotatorConfig::hub(FpFormat::DOUBLE, 54, 52)),
+            4,
+            2..=3,
+            40,
+            5,
+        ));
+        // double-precision QRD: ~6.02·50+ dB region
+        assert!(hub > 250.0, "{hub}");
+    }
+
+    #[test]
+    fn extended_prints() {
+        extended(40, 1).unwrap();
+    }
+}

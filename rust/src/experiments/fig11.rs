@@ -1,0 +1,43 @@
+//! Fig. 11 — fixed-point vs floating-point dynamic-range behaviour.
+//!
+//! FixP(32-bit, 27 iterations) vs IEEE(N=26) vs HUB(N=26)
+//! single-precision units, r = 1…40. Paper findings: fixed-point wins
+//! below r ≈ 8 (more effective bits), the FP-HUB line crosses above it
+//! at r = 8, and the fixed-point SNR slumps entirely past r ≈ 14.
+
+use crate::analysis::{sweep_r, EngineSpec};
+use crate::fp::FpFormat;
+use crate::rotator::RotatorConfig;
+
+/// Run and print the Fig. 11 series (a: full range, b: zoom r ≤ 10).
+pub fn fig11(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Fig 11: SNR (dB) vs r, fixed- vs floating-point, {nmat} matrices/point");
+    let specs = [
+        EngineSpec::Fixed { n: 32, niter: 27, hub: false },
+        EngineSpec::Fp(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23)),
+        EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)),
+        EngineSpec::MatlabSingle,
+    ];
+    print!("{:>4}", "r");
+    for s in &specs {
+        print!(" | {:>20}", s.label());
+    }
+    println!();
+    let series: Vec<_> = specs.iter().map(|s| sweep_r(*s, 4, 1..=40, nmat, seed)).collect();
+    let mut crossover = None;
+    for (i, r) in (1..=40u32).enumerate() {
+        print!("{r:>4}");
+        for pts in &series {
+            print!(" | {:>20.2}", pts[i].snr_db);
+        }
+        println!();
+        if crossover.is_none() && series[2][i].snr_db > series[0][i].snr_db {
+            crossover = Some(r);
+        }
+    }
+    println!(
+        "\nFP-HUB overtakes FixP at r = {} (paper: r = 8); FixP slumps past r ≈ 14.",
+        crossover.map_or("never".into(), |r| r.to_string())
+    );
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Fig. 8 — SNR of different Givens rotation units vs dynamic range r.
+//!
+//! IEEE and HUB single-precision units at N ∈ {25, 27, 29} with (N−3)
+//! microrotations, r = 1…20, plus the single-precision "Matlab" QR
+//! reference. Paper finding: SNR changes only slightly with r and HUB
+//! beats IEEE at equal N "almost in all cases".
+
+use crate::analysis::{sweep_r, EngineSpec};
+use crate::fp::FpFormat;
+use crate::rotator::RotatorConfig;
+
+/// Run and print the Fig. 8 series.
+pub fn fig8(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    println!("Fig 8: SNR (dB) vs r, 4x4 single-precision QRD, niter = N-3, {nmat} matrices/point");
+    let mut specs: Vec<EngineSpec> = Vec::new();
+    for n in [25u32, 27, 29] {
+        specs.push(EngineSpec::Fp(RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3)));
+        specs.push(EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, n, n - 3)));
+    }
+    specs.push(EngineSpec::MatlabSingle);
+
+    // header
+    print!("{:>4}", "r");
+    for s in &specs {
+        print!(" | {:>20}", s.label());
+    }
+    println!();
+
+    let series: Vec<Vec<crate::analysis::McPoint>> =
+        specs.iter().map(|s| sweep_r(*s, 4, 1..=20, nmat, seed)).collect();
+    for (i, r) in (1..=20u32).enumerate() {
+        print!("{r:>4}");
+        for pts in &series {
+            print!(" | {:>20.2}", pts[i].snr_db);
+        }
+        println!();
+    }
+    print!("mean");
+    for pts in &series {
+        print!(" | {:>20.2}", crate::analysis::mean_snr(pts));
+    }
+    println!();
+    println!("\npaper shape: HUB(N) ≈ IEEE(N+1); all lines ~flat in r; Matlab-single ~ top.");
+    Ok(())
+}

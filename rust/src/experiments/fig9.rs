@@ -1,0 +1,48 @@
+//! Fig. 9 — SNR vs number of CORDIC microrotations for N = 25…30.
+//!
+//! Paper findings: the conventional approach peaks at (N−3)
+//! microrotations (more iterations *hurt*); HUB needs one more (N−2)
+//! and saturates gently; HUB at N matches IEEE at N+1; N = 29 and 30
+//! both hit the single-precision ceiling.
+
+use crate::analysis::{mean_snr, sweep_r, EngineSpec};
+use crate::fp::FpFormat;
+use crate::rotator::RotatorConfig;
+
+/// Run and print the Fig. 9 series (SNR = mean over r ∈ 1…20).
+pub fn fig9(nmat: usize, seed: u64) -> anyhow::Result<()> {
+    // The paper sweeps "different numbers of CORDIC microrotations";
+    // N−6 … N−1 brackets both optima.
+    println!("Fig 9: mean SNR (dB) over r=1..20 vs microrotations, 4x4 single QRD, {nmat} matrices/point");
+    for n in 25u32..=30 {
+        println!("\n  N = {n}");
+        println!("  {:>6} | {:>10} | {:>10}", "niter", "IEEE", "HUB");
+        for niter in (n - 6)..=(n - 1) {
+            let ieee = mean_snr(&sweep_r(
+                EngineSpec::Fp(RotatorConfig::ieee(FpFormat::SINGLE, n, niter)),
+                4,
+                1..=20,
+                nmat,
+                seed,
+            ));
+            let hub = mean_snr(&sweep_r(
+                EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, n, niter)),
+                4,
+                1..=20,
+                nmat,
+                seed,
+            ));
+            let mark = |k: u32, d: u32| if k == n - d { "*" } else { " " };
+            println!(
+                "  {:>6} | {:>9.2}{} | {:>9.2}{}",
+                niter,
+                ieee,
+                mark(niter, 3),
+                hub,
+                mark(niter, 2)
+            );
+        }
+    }
+    println!("\n(* = paper's optimum: N-3 for IEEE, N-2 for HUB)");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §5).
+//!
+//! Each driver prints the same rows/series the paper reports, with the
+//! paper's published values alongside where available, so the shape
+//! comparison is immediate. `run("all", …)` regenerates everything.
+
+mod ablations;
+mod extended;
+mod fig10;
+mod fig11;
+mod fig8;
+mod fig9;
+mod tables;
+
+pub use ablations::ablate;
+pub use extended::extended;
+pub use fig10::fig10;
+pub use fig11::fig11;
+pub use fig8::fig8;
+pub use fig9::fig9;
+pub use tables::{tab1, tab2, tab3, tab4, tab5, tab6, tab7};
+
+/// Run one experiment by id ("fig8" … "tab7", or "all").
+pub fn run(id: &str, nmat: usize, seed: u64) -> anyhow::Result<()> {
+    match id {
+        "fig8" => fig8(nmat, seed),
+        "fig9" => fig9(nmat, seed),
+        "fig10" => fig10(nmat, seed),
+        "fig11" => fig11(nmat, seed),
+        "tab1" => tab1(),
+        "tab2" => tab2(),
+        "tab3" => tab3(),
+        "tab4" => tab4(),
+        "tab5" => tab5(),
+        "tab6" => tab6(),
+        "tab7" => tab7(),
+        "ablate" => ablate(nmat.min(2000), seed),
+        "extended" => extended(nmat.min(2000), seed),
+        "all" => {
+            for id in [
+                "fig8", "fig9", "fig10", "fig11", "tab1", "tab2", "tab3", "tab4", "tab5",
+                "tab6", "tab7",
+            ] {
+                println!("\n==================== {id} ====================");
+                run(id, nmat, seed)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment id {other}"),
+    }
+}

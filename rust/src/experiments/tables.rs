@@ -1,0 +1,47 @@
+//! Tables 1–7 drivers (implementation cost + performance comparisons).
+//! Filled in by the hwmodel/pipeline/baselines stage; each prints the
+//! paper's published values next to the model's.
+
+use crate::hwmodel;
+
+/// Table 1 — critical-path delay, IEEE vs HUB, Virtex-6.
+pub fn tab1() -> anyhow::Result<()> {
+    hwmodel::report::tab1();
+    Ok(())
+}
+
+/// Table 2 — area (LUTs / registers), IEEE vs HUB, Virtex-6.
+pub fn tab2() -> anyhow::Result<()> {
+    hwmodel::report::tab2();
+    Ok(())
+}
+
+/// Table 3 — power / energy per operation, Virtex-6.
+pub fn tab3() -> anyhow::Result<()> {
+    hwmodel::report::tab3();
+    Ok(())
+}
+
+/// Table 4 — relative area cost of design-parameter changes.
+pub fn tab4() -> anyhow::Result<()> {
+    hwmodel::report::tab4();
+    Ok(())
+}
+
+/// Table 5 — fixed-point vs FP-HUB implementation results.
+pub fn tab5() -> anyhow::Result<()> {
+    hwmodel::report::tab5();
+    Ok(())
+}
+
+/// Table 6 — performance comparison vs previous FP designs (Virtex-5).
+pub fn tab6() -> anyhow::Result<()> {
+    crate::baselines::report::tab6();
+    Ok(())
+}
+
+/// Table 7 — area comparison vs previous FP designs (Virtex-5).
+pub fn tab7() -> anyhow::Result<()> {
+    crate::baselines::report::tab7();
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Floating-point format descriptor.
+
+/// An IEEE-like floating-point format: `ebits` exponent bits and `mbits`
+/// significand bits **including** the hidden leading one (the paper's `m`).
+///
+/// Storage layout (conceptual, used by the converters and generators):
+/// `[sign:1][exp:ebits][frac:mbits-1]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FpFormat {
+    /// Exponent field width in bits.
+    pub ebits: u32,
+    /// Significand width in bits, including the hidden one.
+    pub mbits: u32,
+}
+
+impl FpFormat {
+    /// IEEE binary16: 5 exponent bits, 11-bit significand (10 stored).
+    pub const HALF: FpFormat = FpFormat { ebits: 5, mbits: 11 };
+    /// IEEE binary32: 8 exponent bits, 24-bit significand (23 stored).
+    pub const SINGLE: FpFormat = FpFormat { ebits: 8, mbits: 24 };
+    /// IEEE binary64: 11 exponent bits, 53-bit significand (52 stored).
+    pub const DOUBLE: FpFormat = FpFormat { ebits: 11, mbits: 53 };
+
+    /// Exponent bias: 2^(ebits−1) − 1.
+    #[inline]
+    pub const fn bias(&self) -> i64 {
+        (1i64 << (self.ebits - 1)) - 1
+    }
+
+    /// Largest biased exponent field for a finite value. The paper's
+    /// converters ignore NaN/Inf, so the all-ones field is usable as a
+    /// normal exponent; we still reserve it to keep encodings sane.
+    #[inline]
+    pub const fn max_biased_exp(&self) -> i64 {
+        (1i64 << self.ebits) - 2
+    }
+
+    /// Total storage width in bits: 1 + ebits + (mbits − 1).
+    #[inline]
+    pub const fn total_bits(&self) -> u32 {
+        self.ebits + self.mbits
+    }
+
+    /// The paper's `m`: significand bits including the hidden one.
+    #[inline]
+    pub const fn m(&self) -> u32 {
+        self.mbits
+    }
+
+    /// Short human name used in reports ("half", "single", "double", or
+    /// "e{ebits}m{mbits}" for custom formats).
+    pub fn name(&self) -> String {
+        match (self.ebits, self.mbits) {
+            (5, 11) => "half".into(),
+            (8, 24) => "single".into(),
+            (11, 53) => "double".into(),
+            (e, m) => format!("e{e}m{m}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn biases() {
+        assert_eq!(FpFormat::HALF.bias(), 15);
+        assert_eq!(FpFormat::SINGLE.bias(), 127);
+        assert_eq!(FpFormat::DOUBLE.bias(), 1023);
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(FpFormat::SINGLE.total_bits(), 32);
+        assert_eq!(FpFormat::HALF.total_bits(), 16);
+        assert_eq!(FpFormat::DOUBLE.total_bits(), 64);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(FpFormat::SINGLE.name(), "single");
+        assert_eq!(FpFormat { ebits: 6, mbits: 18 }.name(), "e6m18");
+    }
+}

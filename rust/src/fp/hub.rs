@@ -1,0 +1,150 @@
+//! Half-Unit-Biased (HUB) parametric floating-point value.
+//!
+//! HUB formats (Hormigo & Villalba, "New formats for computing with
+//! real-numbers under round-to-nearest", IEEE TC 2016 — paper ref [7])
+//! append a constant Implicit LSB = 1 to the stored significand:
+//! the stored `man` (mbits, hidden one included) represents the
+//! significand `(2·man + 1) / 2^mbits ∈ (1, 2)`.
+//!
+//! Consequences used throughout the unit:
+//! - round-to-nearest == truncation of the extended significand,
+//! - two's complement == bitwise NOT,
+//! - the rounding-error bound equals the conventional format's.
+
+use super::{Fp, FpFormat};
+
+/// A decoded HUB floating-point value. `man` holds the *stored* mbits
+/// (hidden leading one included, ILSB **not** stored). Zero is
+/// `exp == 0 && man == 0` and is treated specially (paper §4.1: zeros are
+/// "treated as a special number in any case").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HubFp {
+    /// Sign bit (true = negative).
+    pub sign: bool,
+    /// Biased exponent field value (conventional representation).
+    pub exp: i64,
+    /// Stored significand including hidden one (0 for zero).
+    pub man: u64,
+}
+
+impl HubFp {
+    /// Canonical +0.
+    pub const ZERO: HubFp = HubFp { sign: false, exp: 0, man: 0 };
+
+    /// True if this encodes zero.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.man == 0
+    }
+
+    /// Nearest HUB value to 1.0 (carries the +2^-mbits ILSB offset).
+    /// The *exact* 1.0 only exists via the input converter's
+    /// identity-detection path (paper §4.1).
+    pub fn one(fmt: FpFormat) -> HubFp {
+        HubFp { sign: false, exp: fmt.bias(), man: 1u64 << (fmt.mbits - 1) }
+    }
+
+    /// Encode an `f64` with round-to-nearest (= truncation for HUB).
+    pub fn from_f64(fmt: FpFormat, v: f64) -> HubFp {
+        if v == 0.0 || v.is_nan() {
+            return HubFp::ZERO;
+        }
+        let bits = v.to_bits();
+        let sign = (bits >> 63) != 0;
+        let e_field = ((bits >> 52) & 0x7ff) as i64;
+        if e_field == 0 {
+            return HubFp::ZERO;
+        }
+        if e_field == 0x7ff {
+            return HubFp { sign, exp: fmt.max_biased_exp(), man: (1u64 << fmt.mbits) - 1 };
+        }
+        let e2 = e_field - 1023;
+        let man53 = (bits & ((1u64 << 52) - 1)) | (1u64 << 52);
+        // significand s ∈ [1,2) as a Q1.52; nearest HUB stored value is
+        // floor(s · 2^(mbits−1)) — truncation of the extended significand.
+        // (s·2^(mbits−1) has integer part in [2^(mbits−1), 2^mbits).)
+        let man = if 53 - fmt.mbits >= 1 {
+            man53 >> (53 - fmt.mbits) // == floor(s·2^(mbits-1)) ... see below
+        } else {
+            man53
+        };
+        // Note: man53 >> (53-mbits) = floor(man53 / 2^(53-mbits))
+        //     = floor(s·2^52 / 2^(53-mbits)) = floor(s·2^(mbits-1)). ✓
+        let biased = e2 + fmt.bias();
+        if biased <= 0 {
+            return HubFp::ZERO;
+        }
+        if biased > fmt.max_biased_exp() {
+            return HubFp { sign, exp: fmt.max_biased_exp(), man: (1u64 << fmt.mbits) - 1 };
+        }
+        HubFp { sign, exp: biased, man }
+    }
+
+    /// Decode to `f64` (exact while 2·mbits+1 ≤ 53… single/half exact;
+    /// double-precision HUB values lose the ILSB in f64 — error analysis
+    /// in the paper and here only runs single precision).
+    pub fn to_f64(&self, fmt: FpFormat) -> f64 {
+        if self.is_zero() {
+            return 0.0;
+        }
+        let ext = (2 * self.man + 1) as f64; // significand · 2^mbits
+        let mag = ext / 2f64.powi(fmt.mbits as i32) * 2f64.powi((self.exp - fmt.bias()) as i32);
+        if self.sign {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// View the same stored fields as a conventional [`Fp`] — used where
+    /// field-level plumbing (exponent compare, packing) is shared.
+    pub fn as_fields(&self) -> Fp {
+        Fp { sign: self.sign, exp: self.exp, man: self.man }
+    }
+
+    /// Pack into `[sign][exp][frac]` bits (same layout as conventional;
+    /// the ILSB is implicit).
+    pub fn to_bits(&self, fmt: FpFormat) -> u64 {
+        self.as_fields().to_bits(fmt)
+    }
+
+    /// Unpack from `[sign][exp][frac]` bits.
+    pub fn from_bits(fmt: FpFormat, bits: u64) -> HubFp {
+        let f = Fp::from_bits(fmt, bits);
+        HubFp { sign: f.sign, exp: f.exp, man: f.man }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncation_never_overflows_significand() {
+        let fmt = FpFormat::SINGLE;
+        // value just below a power of two: conventional RNE would round up
+        // to the next binade; HUB truncates and stays.
+        let v = 2.0 - 1e-12;
+        let h = HubFp::from_f64(fmt, v);
+        assert_eq!(h.exp, fmt.bias()); // still in the [1,2) binade
+        assert_eq!(h.man, (1u64 << fmt.mbits) - 1);
+    }
+
+    #[test]
+    fn hub_error_at_most_half_ulp() {
+        let fmt = FpFormat::SINGLE;
+        let ulp = 2f64.powi(-(fmt.mbits as i32 - 1));
+        for i in 0..1000 {
+            let v = 1.0 + (i as f64) * 7.7e-4;
+            let h = HubFp::from_f64(fmt, v);
+            assert!((h.to_f64(fmt) - v).abs() <= ulp / 2.0 * v.abs());
+        }
+    }
+
+    #[test]
+    fn fields_round_trip() {
+        let fmt = FpFormat::SINGLE;
+        let h = HubFp::from_f64(fmt, -1234.5678);
+        assert_eq!(HubFp::from_bits(fmt, h.to_bits(fmt)), h);
+    }
+}

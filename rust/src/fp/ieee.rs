@@ -1,0 +1,157 @@
+//! Conventional (IEEE-like) parametric floating-point value.
+
+use super::FpFormat;
+
+/// A decoded conventional floating-point value.
+///
+/// Invariants for non-zero values: `man ∈ [2^(mbits−1), 2^mbits)` (hidden
+/// one included) and `exp ∈ [1, max_biased_exp]` (biased field value).
+/// Zero is `exp == 0 && man == 0` (paper converters detect the zero
+/// exponent field before appending the leading one).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Fp {
+    /// Sign bit (true = negative).
+    pub sign: bool,
+    /// Biased exponent field value.
+    pub exp: i64,
+    /// Significand including hidden one (0 for zero).
+    pub man: u64,
+}
+
+impl Fp {
+    /// Canonical +0.
+    pub const ZERO: Fp = Fp { sign: false, exp: 0, man: 0 };
+
+    /// True if this encodes zero.
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.man == 0
+    }
+
+    /// Exact value 1.0 in the given format.
+    pub fn one(fmt: FpFormat) -> Fp {
+        Fp { sign: false, exp: fmt.bias(), man: 1u64 << (fmt.mbits - 1) }
+    }
+
+    /// Encode an `f64` into this format with round-to-nearest-even.
+    /// Subnormal results flush to zero; overflow saturates to the largest
+    /// finite value (the paper's converters ignore special values).
+    pub fn from_f64(fmt: FpFormat, v: f64) -> Fp {
+        if v == 0.0 || v.is_nan() {
+            return Fp::ZERO;
+        }
+        let bits = v.to_bits();
+        let sign = (bits >> 63) != 0;
+        let e_field = ((bits >> 52) & 0x7ff) as i64;
+        let frac = bits & ((1u64 << 52) - 1);
+        if e_field == 0 {
+            // f64 subnormal: far below any format we model — flush.
+            return Fp::ZERO;
+        }
+        if e_field == 0x7ff {
+            // Inf: saturate.
+            return Fp::max_finite(fmt, sign);
+        }
+        let mut e2 = e_field - 1023; // unbiased exponent
+        let man53 = frac | (1u64 << 52); // 53-bit significand
+
+        // Round 53 → mbits (RNE).
+        let drop = 53 - fmt.mbits;
+        let mut man = if drop == 0 {
+            man53
+        } else {
+            let keep = man53 >> drop;
+            let rem = man53 & ((1u64 << drop) - 1);
+            let half = 1u64 << (drop - 1);
+            let inc = rem > half || (rem == half && (keep & 1) == 1);
+            keep + inc as u64
+        };
+        if man == (1u64 << fmt.mbits) {
+            man >>= 1;
+            e2 += 1;
+        }
+        let biased = e2 + fmt.bias();
+        if biased <= 0 {
+            return Fp::ZERO; // flush subnormal/underflow
+        }
+        if biased > fmt.max_biased_exp() {
+            return Fp::max_finite(fmt, sign);
+        }
+        Fp { sign, exp: biased, man }
+    }
+
+    /// Largest finite value of the format (used for overflow saturation).
+    pub fn max_finite(fmt: FpFormat, sign: bool) -> Fp {
+        Fp { sign, exp: fmt.max_biased_exp(), man: (1u64 << fmt.mbits) - 1 }
+    }
+
+    /// Decode to `f64` (exact for mbits ≤ 53 and in-range exponents).
+    pub fn to_f64(&self, fmt: FpFormat) -> f64 {
+        if self.is_zero() {
+            return 0.0;
+        }
+        let sig = self.man as f64 / 2f64.powi(fmt.mbits as i32 - 1);
+        let mag = sig * 2f64.powi((self.exp - fmt.bias()) as i32);
+        if self.sign {
+            -mag
+        } else {
+            mag
+        }
+    }
+
+    /// Pack into the `[sign][exp][frac]` bit layout (for golden vectors
+    /// and the PJRT interchange, where single precision is `u32`).
+    pub fn to_bits(&self, fmt: FpFormat) -> u64 {
+        if self.is_zero() {
+            return (self.sign as u64) << (fmt.total_bits() - 1);
+        }
+        let frac = self.man & ((1u64 << (fmt.mbits - 1)) - 1);
+        ((self.sign as u64) << (fmt.total_bits() - 1))
+            | ((self.exp as u64) << (fmt.mbits - 1))
+            | frac
+    }
+
+    /// Unpack from the `[sign][exp][frac]` bit layout.
+    pub fn from_bits(fmt: FpFormat, bits: u64) -> Fp {
+        let sign = (bits >> (fmt.total_bits() - 1)) & 1 != 0;
+        let exp = ((bits >> (fmt.mbits - 1)) & ((1u64 << fmt.ebits) - 1)) as i64;
+        let frac = bits & ((1u64 << (fmt.mbits - 1)) - 1);
+        if exp == 0 {
+            // zero / subnormal: converters treat as zero
+            return Fp { sign, exp: 0, man: 0 };
+        }
+        Fp { sign, exp, man: frac | (1u64 << (fmt.mbits - 1)) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_layout_round_trip() {
+        let fmt = FpFormat::SINGLE;
+        for &v in &[1.0f64, -2.75, 6.1e-5, 3.4e38] {
+            let fp = Fp::from_f64(fmt, v);
+            let bits = fp.to_bits(fmt);
+            assert_eq!(Fp::from_bits(fmt, bits), fp);
+            // must agree with the platform f32 layout
+            assert_eq!(bits as u32, (v as f32).to_bits(), "v={v}");
+        }
+    }
+
+    #[test]
+    fn one_is_exact() {
+        let fmt = FpFormat::SINGLE;
+        assert_eq!(Fp::one(fmt).to_f64(fmt), 1.0);
+        assert_eq!(Fp::one(fmt), Fp::from_f64(fmt, 1.0));
+    }
+
+    #[test]
+    fn negative_zero_decodes_zero() {
+        let fmt = FpFormat::SINGLE;
+        let fp = Fp::from_bits(fmt, 0x8000_0000);
+        assert!(fp.is_zero());
+        assert_eq!(fp.to_f64(fmt), 0.0);
+    }
+}

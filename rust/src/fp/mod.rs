@@ -1,0 +1,119 @@
+//! Parametric software floating point: IEEE-like and HUB formats.
+//!
+//! The paper's unit is parametric in exponent/significand widths (§5:
+//! "the proposed rotator supports any exponent and significand
+//! bit-width"). `m` (here [`FpFormat::mbits`]) counts the significand
+//! **including** the hidden leading one, matching the paper's `m`.
+//!
+//! Two value families share the same encoding fields:
+//! - **Conventional (IEEE-like)**: value = ±(man / 2^(m−1)) · 2^(E−bias),
+//!   man ∈ [2^(m−1), 2^m) for normals. Subnormals, NaN and infinities are
+//!   not handled by the converters (paper §3) — we flush/saturate.
+//! - **HUB**: an Implicit Least Significant Bit (ILSB) = 1 is appended:
+//!   value = ±((2·man+1) / 2^m) · 2^(E−bias). Round-to-nearest is
+//!   truncation; negation is bitwise NOT (Hormigo & Villalba, TC 2016).
+
+mod format;
+mod hub;
+mod ieee;
+
+pub use format::FpFormat;
+pub use hub::HubFp;
+pub use ieee::Fp;
+
+/// Which number family a unit operates on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Family {
+    /// Conventional IEEE-like representation.
+    Conventional,
+    /// Half-Unit-Biased representation (ILSB = 1).
+    Hub,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_round_trip_exact() {
+        let fmt = FpFormat::SINGLE;
+        for &v in &[1.0f64, -1.5, 0.15625, 3.0e8, -2.0e-30, 0.0] {
+            let fp = Fp::from_f64(fmt, v);
+            let back = fp.to_f64(fmt);
+            let as_f32 = v as f32 as f64;
+            assert_eq!(back, as_f32, "value {v}");
+        }
+    }
+
+    #[test]
+    fn rne_matches_hardware_f32() {
+        // Encoding via our RNE must agree bit-for-bit with the platform's
+        // f64→f32 conversion (both are round-to-nearest-even).
+        let fmt = FpFormat::SINGLE;
+        let mut x = 1.0e-3f64;
+        for _ in 0..10_000 {
+            x = (x * 1.000123).sin() + 1.2345e-7 + x;
+            let ours = Fp::from_f64(fmt, x).to_f64(fmt);
+            assert_eq!(ours, x as f32 as f64, "x={x}");
+        }
+    }
+
+    #[test]
+    fn half_and_double_round_trip() {
+        for &(fmt, tol) in &[(FpFormat::HALF, 1e-3), (FpFormat::DOUBLE, 0.0)] {
+            for &v in &[1.0f64, -0.333251953125, 123.4375] {
+                let fp = Fp::from_f64(fmt, v);
+                let back = fp.to_f64(fmt);
+                assert!((back - v).abs() <= tol * v.abs(), "{fmt:?} {v} -> {back}");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_truncation_is_round_to_nearest() {
+        let fmt = FpFormat::SINGLE;
+        for &v in &[1.0f64, 1.7182818, -3.1415926e-5, 255.9999] {
+            let h = HubFp::from_f64(fmt, v);
+            let back = h.to_f64(fmt);
+            // HUB ulp at this magnitude
+            let ulp = 2f64.powi(back.abs().log2().floor() as i32 - (fmt.mbits as i32 - 1));
+            assert!((back - v).abs() <= ulp / 2.0 + 1e-300, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn hub_cannot_represent_one_exactly() {
+        let fmt = FpFormat::SINGLE;
+        let h = HubFp::from_f64(fmt, 1.0);
+        let back = h.to_f64(fmt);
+        assert!(back != 1.0, "HUB 1.0 must carry the ILSB offset");
+        assert!((back - 1.0).abs() < 2f64.powi(-(fmt.mbits as i32 - 1)));
+    }
+
+    #[test]
+    fn zero_is_canonical() {
+        let fmt = FpFormat::SINGLE;
+        assert!(Fp::from_f64(fmt, 0.0).is_zero());
+        assert_eq!(Fp::from_f64(fmt, 0.0).to_f64(fmt), 0.0);
+        assert!(HubFp::from_f64(fmt, 0.0).is_zero());
+    }
+
+    #[test]
+    fn subnormals_flush_to_zero() {
+        let fmt = FpFormat::SINGLE;
+        // below the smallest single-precision normal
+        let v = 2f64.powi(-150);
+        assert!(Fp::from_f64(fmt, v).is_zero());
+        assert!(HubFp::from_f64(fmt, v).is_zero());
+    }
+
+    #[test]
+    fn overflow_saturates() {
+        let fmt = FpFormat::HALF;
+        let fp = Fp::from_f64(fmt, 1.0e30);
+        assert!(!fp.is_zero());
+        let back = fp.to_f64(fmt);
+        // max finite half ≈ 65504
+        assert!(back > 6.0e4 && back < 7.0e4, "{back}");
+    }
+}

@@ -1,0 +1,325 @@
+//! Per-block structural cost composition for the Givens rotation unit
+//! (Figs. 1–7) and the QRD array built from it.
+
+use super::primitives::{
+    adder, barrel_shifter, cond_invert, const_mult_dsp, exp_sub, incrementer,
+    leading_one_detector, mux2, regs, sticky_tree, twos_complement, Cost, Tech,
+};
+use crate::fp::Family;
+use crate::rotator::RotatorConfig;
+
+/// Synthesis overhead on LUT counts (control fan-out, v/r distribution,
+/// replication) — one global calibrated factor.
+const LUT_OVERHEAD: f64 = 1.22;
+/// Register packing factor (shift-register extraction, shared exponent
+/// pipe) — one global calibrated factor.
+const REG_PACKING: f64 = 0.88;
+
+/// Complete modelled implementation cost of one rotation unit.
+#[derive(Debug, Clone)]
+pub struct RotatorCost {
+    /// 6-input LUTs after overhead.
+    pub luts: f64,
+    /// Flip-flops after packing.
+    pub regs: f64,
+    /// DSP48 slices (0 for the bare rotator: compensation is external,
+    /// paper §5.2).
+    pub dsps: f64,
+    /// Critical-path delay (ns) — the slowest pipeline stage.
+    pub delay_ns: f64,
+    /// Pipeline depth in cycles (input conv 2 + flip 1 + iterations +
+    /// output conv 3).
+    pub latency_cycles: u32,
+    /// Which stage set the critical path (diagnostic).
+    pub critical: &'static str,
+}
+
+impl RotatorCost {
+    /// Maximum clock frequency implied by the critical path (MHz).
+    pub fn fmax_mhz(&self) -> f64 {
+        1000.0 / self.delay_ns
+    }
+
+    /// Virtex slice estimate (4 LUT + 8 FF per slice, typical packing).
+    pub fn slices(&self) -> f64 {
+        (self.luts / 4.0).max(self.regs / 8.0) * 1.35
+    }
+}
+
+/// One CORDIC microrotation stage (Fig. 3 / Fig. 6): two W-bit add/subs
+/// (shift amounts are fixed wiring in a pipelined CORDIC) plus the σ
+/// select/latch control. HUB and conventional have the same adder LUT
+/// count — the HUB savings are in the converters and the 1-bit narrower
+/// datapath.
+fn cordic_stage(t: &Tech, w: u32, ebits: u32, family: Family) -> (Cost, Cost) {
+    let mut datapath = adder(t, w).beside(adder(t, w));
+    if family == Family::Hub {
+        // Fig. 6: the adder's carry input comes straight from the
+        // shifted operand's (n+1)-th MSB and subtraction is a plain
+        // inversion — no ±1 init logic per adder ⇒ slightly denser
+        // packing than the conventional add/sub cell.
+        datapath.luts *= 0.95;
+    }
+    let ctrl = Cost { luts: 3.0, delay_ns: t.t_lut + t.t_hop, ..Default::default() };
+    let logic = datapath.then(ctrl);
+    // registers: both coordinates + exponent ride + σ + v/r
+    let stage_regs = regs(2 * w + ebits + 2);
+    (logic, stage_regs)
+}
+
+/// The flip pre-stage (x < 0 vectoring correction): conditional negate
+/// of both coordinates. Conventional: two's complement adders; HUB:
+/// bitwise inversion folded into LUTs.
+fn flip_stage(t: &Tech, w: u32, family: Family) -> Cost {
+    match family {
+        Family::Conventional => twos_complement(t, w).beside(twos_complement(t, w)),
+        Family::Hub => cond_invert(t, w).beside(cond_invert(t, w)),
+    }
+}
+
+/// Input converter (Fig. 2 conventional / Fig. 5 HUB), 2 pipeline stages.
+fn input_converter(t: &Tech, cfg: &RotatorConfig) -> (Cost, f64, Cost) {
+    let (n, m, e) = (cfg.n, cfg.fmt.mbits, cfg.fmt.ebits);
+    // stage 1: dual exponent subtraction + sign-magnitude conversion
+    let exps = exp_sub(t, e).beside(exp_sub(t, e)).then(mux2(t, e));
+    let signmag = match cfg.family {
+        Family::Conventional => twos_complement(t, m + 1).beside(twos_complement(t, m + 1)),
+        Family::Hub => {
+            let mut c = cond_invert(t, m + 1).beside(cond_invert(t, m + 1));
+            // extension pattern logic (unbiased: LSB/¬LSB fill)
+            if cfg.hub_opts.unbiased {
+                c.luts += 2.0;
+            }
+            // identity detection: exponent-field compare
+            if cfg.hub_opts.detect_one {
+                c.luts += e as f64 / 3.0 * 2.0;
+            }
+            c
+        }
+    };
+    let stage1 = exps.beside(signmag);
+
+    // stage 2: operand swap muxes + alignment right-shifter + zero force
+    let swap = mux2(t, n).beside(mux2(t, n));
+    let shift = barrel_shifter(t, n, n);
+    let zero_force = Cost { luts: n as f64 * 0.2, ..Default::default() };
+    let round = match (cfg.family, cfg.round_input) {
+        // RNE on the aligned significand: sticky over up to n bits + an
+        // n-bit increment (this is what "IEEERound" pays for)
+        (Family::Conventional, true) => sticky_tree(t, n).then(incrementer(t, n)),
+        _ => Cost::default(),
+    };
+    let stage2 = swap.then(shift).then(round).beside(zero_force);
+
+    let luts = stage1.luts + stage2.luts;
+    let delay = t.t_net + stage1.delay_ns.max(stage2.delay_ns);
+    // two stage-register banks: significands + exponent + controls
+    let r = regs(2 * (2 * n + e + 2));
+    (Cost { luts, ..Default::default() }, delay, r)
+}
+
+/// Output converter (Fig. 4 conventional / Fig. 7 HUB), 3 pipeline
+/// stages: abs | LZD (+coarse shift) | shift (+ round for IEEE).
+fn output_converter(t: &Tech, cfg: &RotatorConfig) -> (Cost, f64, &'static str, Cost) {
+    let (m, e) = (cfg.fmt.mbits, cfg.fmt.ebits);
+    let w = cfg.w();
+    let per_coord_abs = match cfg.family {
+        Family::Conventional => twos_complement(t, w),
+        Family::Hub => cond_invert(t, w),
+    };
+    let lzd = leading_one_detector(t, w);
+    let shift = barrel_shifter(t, w, w);
+    let expu = exp_sub(t, e); // exponent update (subtract shift count)
+    let (round, round_delay, crit): (Cost, f64, &'static str) = match cfg.family {
+        Family::Conventional => {
+            // sticky tree + RNE decision + m-bit increment + overflow mux
+            // + exponent increment — the IEEE critical stage
+            let sticky = sticky_tree(t, w.saturating_sub(m));
+            let rnd = incrementer(t, m);
+            let ovf = mux2(t, m).then(incrementer(t, e));
+            let c = sticky.clone_cost().then(rnd).then(ovf);
+            // the rounding increment's carry chain is placement-
+            // constrained (it follows the shifter in the same stage), so
+            // long chains pay a column-crossing penalty — this is what
+            // makes the paper's IEEE double delays grow faster than the
+            // HUB (CORDIC-stage-limited) ones
+            let chain = m as f64 * t.t_carry * (1.0 + m as f64 / 200.0);
+            let d = t.t_net
+                + t.t_lut // sticky final level
+                + (t.t_lut + t.t_hop) // round decision
+                + (t.t_lut + chain) // increment
+                + t.t_lut // overflow mux
+                + (t.t_lut + e as f64 * t.t_carry); // exponent bump
+            (c, d, "ieee-round")
+        }
+        Family::Hub => {
+            // truncation is free; optional unbiased fill = 2 LUTs
+            let extra = if cfg.hub_unbiased_output { 2.0 } else { 0.0 };
+            (Cost { luts: extra, ..Default::default() }, 0.0, "cordic-stage")
+        }
+    };
+
+    let per_coord = per_coord_abs.then(lzd).then(shift).then(expu);
+    let luts = per_coord.luts * 2.0 + round.luts * 2.0;
+    // stage delays: abs | lzd | shift(+round)
+    let abs_stage = t.t_net + per_coord_abs.delay_ns;
+    let lzd_stage = t.t_net + leading_one_detector(t, w).delay_ns;
+    let shift_stage = t.t_net + barrel_shifter(t, w, w).delay_ns;
+    let delay = abs_stage.max(lzd_stage).max(shift_stage).max(round_delay);
+    let r = regs(3 * (2 * w + e + 2));
+    (Cost { luts, ..Default::default() }, delay, crit, r)
+}
+
+trait CloneCost {
+    fn clone_cost(&self) -> Cost;
+}
+impl CloneCost for Cost {
+    fn clone_cost(&self) -> Cost {
+        *self
+    }
+}
+
+/// Full rotator cost model (the paper's Tables 1–3 unit: converters +
+/// flip + CORDIC pipeline, *without* scale compensation).
+pub fn rotator_cost(cfg: &RotatorConfig, t: &Tech) -> RotatorCost {
+    let w = cfg.w();
+    let e = cfg.fmt.ebits;
+
+    let (stage_logic, stage_regs) = cordic_stage(t, w, e, cfg.family);
+    let stage_delay = t.t_net + stage_logic.delay_ns;
+    let cordic_luts = stage_logic.luts * cfg.niter as f64;
+    let cordic_regs = stage_regs.regs * cfg.niter as f64;
+
+    let flip = flip_stage(t, w, cfg.family);
+    let flip_delay = t.t_net + flip.delay_ns;
+    let flip_regs = 2 * w + e + 2;
+
+    let (in_c, in_delay, in_regs) = input_converter(t, cfg);
+    let (out_c, out_delay, out_crit, out_regs) = output_converter(t, cfg);
+
+    let luts =
+        (cordic_luts + flip.luts + in_c.luts + out_c.luts) * LUT_OVERHEAD;
+    let regs_total =
+        (cordic_regs + flip_regs as f64 + in_regs.regs + out_regs.regs) * REG_PACKING;
+
+    let (delay_ns, critical) = [
+        (stage_delay, "cordic-stage"),
+        (flip_delay, "flip"),
+        (in_delay, "input-conv"),
+        (out_delay, out_crit),
+    ]
+    .into_iter()
+    .fold((0.0, "none"), |acc, x| if x.0 > acc.0 { x } else { acc });
+
+    RotatorCost {
+        luts,
+        regs: regs_total,
+        dsps: 0.0,
+        delay_ns,
+        latency_cycles: 2 + 1 + cfg.niter + 3,
+        critical,
+    }
+}
+
+/// Cost of the scale-compensation constant multipliers (2 per rotator,
+/// mapped to DSP48s — the paper excludes these from the rotator's area
+/// and notes they live "in the embedded multipliers").
+pub fn compensation_cost(cfg: &RotatorConfig) -> Cost {
+    const_mult_dsp(cfg.w()).times(2.0)
+}
+
+/// Modelled cost of an m×m QRD array in the style of ref [20]:
+/// enough rotation units to start a new matrix every m cycles, plus a
+/// single bank of end-of-array compensation multipliers (the per-output
+/// accumulated gain K^k is a position-dependent constant).
+#[derive(Debug, Clone)]
+pub struct QrdArrayCost {
+    /// Number of rotator instances.
+    pub rotators: usize,
+    /// Total LUTs.
+    pub luts: f64,
+    /// Total registers.
+    pub regs: f64,
+    /// DSP48 count (compensation bank).
+    pub dsps: f64,
+    /// Virtex slices estimate.
+    pub slices: f64,
+    /// Critical path (ns) — same as one rotator.
+    pub delay_ns: f64,
+    /// Initiation interval (cycles between matrices).
+    pub ii_cycles: u32,
+    /// Fill latency for one matrix (cycles).
+    pub latency_cycles: u32,
+}
+
+/// Build the QRD-array estimate for m×m matrices.
+pub fn qrd_array_cost(cfg: &RotatorConfig, t: &Tech, m: usize) -> QrdArrayCost {
+    let unit = rotator_cost(cfg, t);
+    // total element-pair operations per matrix (vectoring + rotations)
+    let pair_ops = crate::qrd::pair_op_count(m) as u32;
+    let ii = m as u32;
+    let rotators = pair_ops.div_ceil(ii) as usize;
+    // columns are data-dependent: the critical chain is m−1 sequential
+    // rotations (plus each unit's pipeline fill)
+    let latency = (m as u32 - 1) * (unit.latency_cycles + ii) + unit.latency_cycles;
+    let comp = const_mult_dsp(cfg.w()).times(2.0 * m as f64);
+    let luts = unit.luts * rotators as f64;
+    let regs = unit.regs * rotators as f64;
+    QrdArrayCost {
+        rotators,
+        luts,
+        regs,
+        dsps: comp.dsps,
+        slices: (luts / 4.0).max(regs / 8.0) * 1.35,
+        delay_ns: unit.delay_ns,
+        ii_cycles: ii,
+        latency_cycles: latency,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+
+    #[test]
+    fn ieee_critical_path_is_the_round_stage() {
+        let t = Tech::virtex6();
+        let c = rotator_cost(&RotatorConfig::ieee(FpFormat::SINGLE, 26, 23), &t);
+        assert_eq!(c.critical, "ieee-round");
+    }
+
+    #[test]
+    fn hub_critical_path_is_the_cordic_stage() {
+        let t = Tech::virtex6();
+        let c = rotator_cost(&RotatorConfig::hub(FpFormat::SINGLE, 25, 23), &t);
+        assert_eq!(c.critical, "cordic-stage");
+    }
+
+    #[test]
+    fn input_rounding_costs_area() {
+        let t = Tech::virtex6();
+        let mut cfg = RotatorConfig::ieee(FpFormat::SINGLE, 26, 23);
+        let trunc = rotator_cost(&cfg, &t);
+        cfg.round_input = true;
+        let round = rotator_cost(&cfg, &t);
+        assert!(round.luts > trunc.luts);
+    }
+
+    #[test]
+    fn qrd_array_7x7_shape() {
+        let t = Tech::virtex5();
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let q = qrd_array_cost(&cfg, &t, 7);
+        assert_eq!(q.ii_cycles, 7);
+        assert!(q.rotators >= 30 && q.rotators <= 45, "{}", q.rotators);
+        assert!(q.dsps >= 40.0 && q.dsps <= 70.0, "{}", q.dsps);
+        assert!(q.latency_cycles > 150 && q.latency_cycles < 400, "{}", q.latency_cycles);
+    }
+
+    #[test]
+    fn compensation_uses_dsps() {
+        let c = compensation_cost(&RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+        assert!(c.dsps >= 4.0);
+    }
+}

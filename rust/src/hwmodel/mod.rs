@@ -1,0 +1,162 @@
+//! Analytical FPGA implementation-cost model (paper §5.2 substitute).
+//!
+//! The paper reports Xilinx ISE synthesis results on Virtex-6/-5. With
+//! no FPGA toolchain available, this module estimates area (LUTs,
+//! registers, DSPs), critical-path delay, power and energy from the
+//! *structure* of each circuit: every block in Figs. 2–7 is decomposed
+//! into primitives (carry-chain adders, barrel shifters, leading-one
+//! detectors, sticky trees, muxes, pipeline registers) whose costs use
+//! technology constants calibrated once against the paper's published
+//! single-precision points. The HUB savings are *structural* — deleted
+//! rounding adders, sticky trees and two's-complement stages — so the
+//! HUB/IEEE ratios are a genuine model output, not curve fitting.
+//!
+//! Accuracy target (verified in tests): within ~15% of every published
+//! Table 1/2 number, with ratios and trends preserved.
+
+mod blocks;
+mod power;
+mod primitives;
+pub mod report;
+
+pub use blocks::{compensation_cost, qrd_array_cost, rotator_cost, QrdArrayCost, RotatorCost};
+pub use power::{energy_pj, power_w};
+pub use primitives::{Cost, Tech};
+
+use crate::fp::Family;
+use crate::rotator::RotatorConfig;
+
+/// Convenience: cost of a rotator in the paper's Table 1–3 configuration
+/// (IEEE at N with N−3 iterations; HUB at N−1 with the *same* iteration
+/// count as its IEEE pair, per §5.2).
+pub fn table_config(family: Family, fmt: crate::fp::FpFormat, n: u32, niter: u32) -> RotatorConfig {
+    match family {
+        Family::Conventional => RotatorConfig::ieee(fmt, n, niter),
+        Family::Hub => RotatorConfig::hub(fmt, n, niter),
+    }
+}
+
+/// Paper Table 1 + 2 published Virtex-6 points: (fmt, N_ieee, N_hub,
+/// delay IEEE, delay HUB, LUT IEEE, LUT HUB, REG IEEE, REG HUB).
+pub const PAPER_V6: &[(crate::fp::FpFormat, u32, u32, f64, f64, f64, f64, f64, f64)] = &[
+    (crate::fp::FpFormat::HALF, 14, 13, 2.863, 2.180, 839.0, 689.0, 536.0, 513.0),
+    (crate::fp::FpFormat::HALF, 16, 15, 3.134, 2.315, 1030.0, 825.0, 680.0, 645.0),
+    (crate::fp::FpFormat::SINGLE, 26, 25, 3.306, 2.337, 2365.0, 2057.0, 1632.0, 1587.0),
+    (crate::fp::FpFormat::SINGLE, 28, 27, 3.373, 2.458, 2631.0, 2300.0, 1856.0, 1845.0),
+    (crate::fp::FpFormat::SINGLE, 30, 29, 3.463, 2.678, 2957.0, 2550.0, 2134.0, 2060.0),
+    (crate::fp::FpFormat::DOUBLE, 55, 54, 4.355, 2.932, 8052.0, 7400.0, 6484.0, 6461.0),
+    (crate::fp::FpFormat::DOUBLE, 57, 56, 4.650, 2.865, 8508.0, 7766.0, 6960.0, 6853.0),
+    (crate::fp::FpFormat::DOUBLE, 59, 58, 4.506, 2.999, 9012.0, 8226.0, 7426.0, 7313.0),
+];
+
+/// Paper Table 3 published energies (pJ/op): (fmt, N_ieee, N_hub,
+/// E IEEE, E HUB).
+pub const PAPER_ENERGY: &[(crate::fp::FpFormat, u32, u32, f64, f64)] = &[
+    (crate::fp::FpFormat::HALF, 14, 13, 195.1, 184.5),
+    (crate::fp::FpFormat::HALF, 16, 15, 225.1, 209.7),
+    (crate::fp::FpFormat::SINGLE, 26, 25, 434.0, 415.8),
+    (crate::fp::FpFormat::SINGLE, 28, 27, 478.9, 464.1),
+    (crate::fp::FpFormat::SINGLE, 30, 29, 534.4, 508.1),
+    (crate::fp::FpFormat::DOUBLE, 55, 54, 1440.8, 1409.1),
+    (crate::fp::FpFormat::DOUBLE, 57, 56, 1530.4, 1483.4),
+    (crate::fp::FpFormat::DOUBLE, 59, 58, 1622.7, 1573.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{Family, FpFormat};
+
+    fn rel_err(model: f64, paper: f64) -> f64 {
+        (model - paper).abs() / paper
+    }
+
+    #[test]
+    fn calibration_within_15_percent_of_paper() {
+        let tech = Tech::virtex6();
+        for &(fmt, ni, nh, d_i, d_h, l_i, l_h, r_i, r_h) in PAPER_V6 {
+            let niter = ni - 3;
+            let ci = rotator_cost(&table_config(Family::Conventional, fmt, ni, niter), &tech);
+            let ch = rotator_cost(&table_config(Family::Hub, fmt, nh, niter), &tech);
+            for (what, model, paper) in [
+                ("ieee delay", ci.delay_ns, d_i),
+                ("hub delay", ch.delay_ns, d_h),
+                ("ieee luts", ci.luts, l_i),
+                ("hub luts", ch.luts, l_h),
+                ("ieee regs", ci.regs, r_i),
+                ("hub regs", ch.regs, r_h),
+            ] {
+                assert!(
+                    rel_err(model, paper) < 0.15,
+                    "{what} {fmt:?} N={ni}/{nh}: model {model:.1} vs paper {paper:.1}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hub_ratios_match_paper_trends() {
+        let tech = Tech::virtex6();
+        for &(fmt, ni, nh, d_i, d_h, l_i, l_h, ..) in PAPER_V6 {
+            let niter = ni - 3;
+            let ci = rotator_cost(&table_config(Family::Conventional, fmt, ni, niter), &tech);
+            let ch = rotator_cost(&table_config(Family::Hub, fmt, nh, niter), &tech);
+            // delay ratio: paper 0.62–0.77
+            let ratio_model = ch.delay_ns / ci.delay_ns;
+            let ratio_paper = d_h / d_i;
+            // the paper's double-precision delays are noisy (4.355 /
+            // 4.650 / 4.506 ns, non-monotonic); allow ±0.12 on the ratio
+            assert!(
+                (ratio_model - ratio_paper).abs() < 0.12,
+                "delay ratio {fmt:?}: model {ratio_model:.2} paper {ratio_paper:.2}"
+            );
+            // LUT ratio: paper 0.80–0.92
+            let lr_model = ch.luts / ci.luts;
+            let lr_paper = l_h / l_i;
+            assert!(
+                (lr_model - lr_paper).abs() < 0.08,
+                "lut ratio {fmt:?}: model {lr_model:.2} paper {lr_paper:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_close_to_paper() {
+        let tech = Tech::virtex6();
+        for &(fmt, n_i, n_h, e_i, e_h) in PAPER_ENERGY {
+            let niter = n_i - 3;
+            let ci = rotator_cost(&table_config(Family::Conventional, fmt, n_i, niter), &tech);
+            let ch = rotator_cost(&table_config(Family::Hub, fmt, n_h, niter), &tech);
+            assert!(
+                rel_err(energy_pj(&ci), e_i) < 0.15,
+                "{fmt:?} ieee energy {:.1} vs {e_i}",
+                energy_pj(&ci)
+            );
+            assert!(
+                rel_err(energy_pj(&ch), e_h) < 0.15,
+                "{fmt:?} hub energy {:.1} vs {e_h}",
+                energy_pj(&ch)
+            );
+        }
+    }
+
+    #[test]
+    fn virtex5_is_slower_than_virtex6() {
+        // the paper re-synthesizes on Virtex-5 for Tables 6/7; V5 fabric
+        // is one generation older ⇒ longer critical path, same structure
+        let cfg = table_config(Family::Hub, FpFormat::DOUBLE, 54, 52);
+        let v5 = rotator_cost(&cfg, &Tech::virtex5());
+        let v6 = rotator_cost(&cfg, &Tech::virtex6());
+        assert!(v5.delay_ns > v6.delay_ns);
+        assert_eq!(v5.luts, v6.luts); // structure is identical
+    }
+
+    #[test]
+    fn more_iterations_cost_more_area_not_much_delay() {
+        let tech = Tech::virtex6();
+        let a = rotator_cost(&table_config(Family::Hub, FpFormat::SINGLE, 25, 22), &tech);
+        let b = rotator_cost(&table_config(Family::Hub, FpFormat::SINGLE, 25, 23), &tech);
+        assert!(b.luts > a.luts);
+        assert!((b.delay_ns - a.delay_ns).abs() < 0.01); // pipelined
+    }
+}

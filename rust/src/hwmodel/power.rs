@@ -1,0 +1,48 @@
+//! Power / energy model (paper Table 3 substitute).
+//!
+//! Energy per operation (one element-pair per cycle, unit fully busy) is
+//! modelled as `E = E₀ + e_lut·LUTs + e_reg·Regs` with coefficients
+//! solved from the paper's three IEEE rows of Table 3; dynamic power at
+//! maximum speed is then `P = E / T_crit` — which is exactly how the
+//! paper's energy-per-operation figures relate to its power numbers
+//! (E ≈ P·delay holds for every published row).
+
+use super::blocks::RotatorCost;
+use super::primitives::Tech;
+
+/// Energy per operation (pJ) of a rotator implementation.
+pub fn energy_pj(c: &RotatorCost) -> f64 {
+    let t = Tech::virtex6();
+    t.e_base_pj + t.e_lut_pj * c.luts + t.e_reg_pj * c.regs
+}
+
+/// Dynamic power (W) at maximum clock frequency.
+pub fn power_w(c: &RotatorCost) -> f64 {
+    energy_pj(c) * 1e-12 / (c.delay_ns * 1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+    use crate::hwmodel::rotator_cost;
+    use crate::rotator::RotatorConfig;
+
+    #[test]
+    fn power_times_delay_is_energy() {
+        let c = rotator_cost(&RotatorConfig::ieee(FpFormat::SINGLE, 26, 23), &Tech::virtex6());
+        let e = energy_pj(&c);
+        let p = power_w(&c);
+        assert!((p * c.delay_ns - e * 1e-3).abs() < 1e-9 * e);
+    }
+
+    #[test]
+    fn hub_consumes_more_power_but_less_energy() {
+        // paper Table 3: HUB runs faster ⇒ higher W, lower pJ/op
+        let t = Tech::virtex6();
+        let i = rotator_cost(&RotatorConfig::ieee(FpFormat::SINGLE, 26, 23), &t);
+        let h = rotator_cost(&RotatorConfig::hub(FpFormat::SINGLE, 25, 23), &t);
+        assert!(power_w(&h) > power_w(&i));
+        assert!(energy_pj(&h) < energy_pj(&i));
+    }
+}

@@ -1,0 +1,220 @@
+//! FPGA primitive cost/delay models and technology constants.
+//!
+//! Cost units: 6-input LUTs and flip-flops (Virtex-5/6 fabric). Delay
+//! model: logic levels × LUT delay + carry-chain propagation + one
+//! dominant routing hop per stage (routing dominates on these devices).
+
+/// Technology constants for one device family / speed grade.
+#[derive(Debug, Clone)]
+pub struct Tech {
+    /// Device label ("virtex6", "virtex5").
+    pub name: &'static str,
+    /// LUT6 logic delay (ns).
+    pub t_lut: f64,
+    /// Carry chain delay per bit (ns).
+    pub t_carry: f64,
+    /// Average routing + register overhead per pipeline stage (ns).
+    pub t_net: f64,
+    /// Extra routing per additional logic level (ns).
+    pub t_hop: f64,
+    /// Inter-level routing inside mux networks (barrel shifters route
+    /// on dedicated fast interconnect; much tighter than general hops).
+    pub t_shift_hop: f64,
+    /// Energy coefficients for [`super::power`]: pJ per LUT / per FF
+    /// toggled per operation, plus a fixed clock-tree/IO term.
+    pub e_base_pj: f64,
+    /// pJ per LUT per op.
+    pub e_lut_pj: f64,
+    /// pJ per register per op.
+    pub e_reg_pj: f64,
+}
+
+impl Tech {
+    /// Virtex-6 (XC6VLX240T-2), calibrated against the paper's Tables
+    /// 1–3. Energy coefficients solved from the three IEEE rows
+    /// (half/single/double) of Table 3.
+    pub fn virtex6() -> Tech {
+        Tech {
+            name: "virtex6",
+            t_lut: 0.25,
+            t_carry: 0.020,
+            t_net: 1.05,
+            t_hop: 0.25,
+            t_shift_hop: 0.08,
+            e_base_pj: 74.0,
+            e_lut_pj: 0.0477,
+            e_reg_pj: 0.1516,
+        }
+    }
+
+    /// Virtex-5 (XC5VLX330T-2): one generation older — slower fabric,
+    /// same 6-LUT structure. Scaling factor from the paper's own V5
+    /// re-synthesis (HUB double rotator: 255.8 MHz on V5 ⇒ 3.91 ns vs
+    /// 2.93 ns on V6 ⇒ ×1.33).
+    pub fn virtex5() -> Tech {
+        let v6 = Tech::virtex6();
+        Tech {
+            name: "virtex5",
+            t_lut: v6.t_lut * 1.33,
+            t_carry: v6.t_carry * 1.33,
+            t_net: v6.t_net * 1.33,
+            t_hop: v6.t_hop * 1.33,
+            t_shift_hop: v6.t_shift_hop * 1.33,
+            ..v6
+        }
+    }
+}
+
+/// Area/delay of one combinational block (delay = through-path only;
+/// stage delay adds `t_net`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Cost {
+    /// 6-input LUT count (fractional: small functions pack).
+    pub luts: f64,
+    /// Flip-flop count.
+    pub regs: f64,
+    /// DSP48 slices.
+    pub dsps: f64,
+    /// Combinational delay through the block (ns).
+    pub delay_ns: f64,
+}
+
+impl Cost {
+    /// Sum areas; delay = series (sum).
+    pub fn then(self, other: Cost) -> Cost {
+        Cost {
+            luts: self.luts + other.luts,
+            regs: self.regs + other.regs,
+            dsps: self.dsps + other.dsps,
+            delay_ns: self.delay_ns + other.delay_ns,
+        }
+    }
+
+    /// Sum areas; delay = parallel (max).
+    pub fn beside(self, other: Cost) -> Cost {
+        Cost {
+            luts: self.luts + other.luts,
+            regs: self.regs + other.regs,
+            dsps: self.dsps + other.dsps,
+            delay_ns: self.delay_ns.max(other.delay_ns),
+        }
+    }
+
+    /// Scale area by an instance count (delay unchanged).
+    pub fn times(self, k: f64) -> Cost {
+        Cost { luts: self.luts * k, regs: self.regs * k, dsps: self.dsps * k, ..self }
+    }
+}
+
+/// k-bit ripple/carry-chain adder or add-sub (one LUT + MUXCY per bit).
+pub fn adder(t: &Tech, k: u32) -> Cost {
+    Cost { luts: k as f64, delay_ns: t.t_lut + k as f64 * t.t_carry, ..Default::default() }
+}
+
+/// k-bit incrementer (rounding +1): carry chain, half-LUT logic density.
+pub fn incrementer(t: &Tech, k: u32) -> Cost {
+    Cost { luts: k as f64 * 0.5, delay_ns: t.t_lut + k as f64 * t.t_carry, ..Default::default() }
+}
+
+/// k-bit two's complement unit (inverter + incrementer chain).
+pub fn twos_complement(t: &Tech, k: u32) -> Cost {
+    Cost { luts: k as f64, delay_ns: t.t_lut + k as f64 * t.t_carry, ..Default::default() }
+}
+
+/// k-bit bitwise NOT with conditional select — absorbed into the next
+/// LUT stage (HUB negation): half a LUT per bit, one logic level.
+pub fn cond_invert(t: &Tech, k: u32) -> Cost {
+    Cost { luts: k as f64 * 0.5, delay_ns: t.t_lut, ..Default::default() }
+}
+
+/// k-bit 2:1 mux: two bits per LUT6.
+pub fn mux2(t: &Tech, k: u32) -> Cost {
+    Cost { luts: k as f64 * 0.5, delay_ns: t.t_lut, ..Default::default() }
+}
+
+/// Barrel shifter, k data bits, `maxshift` positions: log2 stages of
+/// muxes, two stages (4:1) per LUT6 level.
+pub fn barrel_shifter(t: &Tech, k: u32, maxshift: u32) -> Cost {
+    let stages = 32 - (maxshift.max(1) - 1).leading_zeros(); // ceil(log2)
+    let levels = stages.div_ceil(2); // 4:1 mux per LUT6
+    Cost {
+        luts: k as f64 * levels as f64,
+        delay_ns: levels as f64 * t.t_lut + (levels.saturating_sub(1)) as f64 * t.t_shift_hop,
+        ..Default::default()
+    }
+}
+
+/// Leading-one detector over k bits (carry-chain priority encoder —
+/// Virtex LZDs map onto the fast carry network).
+pub fn leading_one_detector(t: &Tech, k: u32) -> Cost {
+    Cost {
+        luts: k as f64 * 0.6,
+        delay_ns: t.t_lut + k as f64 * t.t_carry * 0.8,
+        ..Default::default()
+    }
+}
+
+/// Sticky-bit OR-reduction over k bits (6-input OR tree).
+pub fn sticky_tree(t: &Tech, k: u32) -> Cost {
+    if k == 0 {
+        return Cost::default();
+    }
+    let levels = ((k as f64).log(6.0)).ceil().max(1.0);
+    Cost { luts: k as f64 / 5.0, delay_ns: levels * t.t_lut, ..Default::default() }
+}
+
+/// e-bit exponent subtract/compare.
+pub fn exp_sub(t: &Tech, e: u32) -> Cost {
+    adder(t, e)
+}
+
+/// Pipeline register bank of k bits.
+pub fn regs(k: u32) -> Cost {
+    Cost { regs: k as f64, ..Default::default() }
+}
+
+/// Constant-coefficient multiplier k×k on DSP48s (25×18 slices).
+pub fn const_mult_dsp(k: u32) -> Cost {
+    let a = k.div_ceil(24); // 25-bit signed port
+    let b = k.div_ceil(17); // 18-bit signed port
+    Cost { dsps: (a * b) as f64, ..Default::default() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adder_scales_linearly() {
+        let t = Tech::virtex6();
+        assert!(adder(&t, 32).delay_ns > adder(&t, 16).delay_ns);
+        assert_eq!(adder(&t, 32).luts, 32.0);
+    }
+
+    #[test]
+    fn barrel_shifter_log_levels() {
+        let t = Tech::virtex6();
+        let s16 = barrel_shifter(&t, 16, 16); // 4 stages → 2 levels
+        let s64 = barrel_shifter(&t, 64, 64); // 6 stages → 3 levels
+        assert_eq!(s16.luts, 32.0);
+        assert_eq!(s64.luts, 192.0);
+        assert!(s64.delay_ns > s16.delay_ns);
+    }
+
+    #[test]
+    fn combinators() {
+        let t = Tech::virtex6();
+        let a = adder(&t, 8);
+        let b = mux2(&t, 8);
+        let serial = a.then(b);
+        let parallel = a.beside(b);
+        assert!(serial.delay_ns > parallel.delay_ns);
+        assert_eq!(serial.luts, parallel.luts);
+    }
+
+    #[test]
+    fn dsp_mult_sizes() {
+        assert_eq!(const_mult_dsp(26).dsps, 4.0); // 2×2
+        assert_eq!(const_mult_dsp(17).dsps, 1.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Printers for paper Tables 1–5: model values next to published ones.
+
+use super::{energy_pj, power_w, rotator_cost, Tech, PAPER_V6};
+use crate::fp::{Family, FpFormat};
+use crate::qrd::FixedQrdEngine;
+use crate::rotator::RotatorConfig;
+
+fn fmt_rows() -> Vec<(FpFormat, u32, u32, usize)> {
+    // (format, N_ieee, N_hub, index into PAPER_V6)
+    PAPER_V6.iter().enumerate().map(|(i, &(f, ni, nh, ..))| (f, ni, nh, i)).collect()
+}
+
+/// Table 1 — critical-path delay (ns), Virtex-6.
+pub fn tab1() {
+    let t = Tech::virtex6();
+    println!("Table 1: critical path (ns), Virtex-6  [model | paper]");
+    println!(
+        "{:<8} {:>3}/{:<3} | {:>8} {:>8} | {:>8} {:>8} | {:>6} {:>6}",
+        "FP", "Ni", "Nh", "IEEE", "(paper)", "HUB", "(paper)", "ratio", "(ppr)"
+    );
+    for (fmt, ni, nh, idx) in fmt_rows() {
+        let (_, _, _, d_i, d_h, ..) = PAPER_V6[idx];
+        let ci = rotator_cost(&RotatorConfig::ieee(fmt, ni, ni - 3), &t);
+        let ch = rotator_cost(&RotatorConfig::hub(fmt, nh, ni - 3), &t);
+        println!(
+            "{:<8} {:>3}/{:<3} | {:>8.3} {:>8.3} | {:>8.3} {:>8.3} | {:>6.2} {:>6.2}",
+            fmt.name(),
+            ni,
+            nh,
+            ci.delay_ns,
+            d_i,
+            ch.delay_ns,
+            d_h,
+            ch.delay_ns / ci.delay_ns,
+            d_h / d_i
+        );
+    }
+}
+
+/// Table 2 — area (LUTs / registers), Virtex-6.
+pub fn tab2() {
+    let t = Tech::virtex6();
+    println!("Table 2: area, Virtex-6  [model | paper]");
+    println!(
+        "{:<8} {:>3}/{:<3} | {:>7} {:>7} {:>7} {:>7} {:>5} | {:>7} {:>7} {:>7} {:>7} {:>5}",
+        "FP", "Ni", "Nh", "L.IEEE", "(ppr)", "L.HUB", "(ppr)", "ratio", "R.IEEE", "(ppr)",
+        "R.HUB", "(ppr)", "ratio"
+    );
+    for (fmt, ni, nh, idx) in fmt_rows() {
+        let (.., l_i, l_h, r_i, r_h) = PAPER_V6[idx];
+        let ci = rotator_cost(&RotatorConfig::ieee(fmt, ni, ni - 3), &t);
+        let ch = rotator_cost(&RotatorConfig::hub(fmt, nh, ni - 3), &t);
+        println!(
+            "{:<8} {:>3}/{:<3} | {:>7.0} {:>7.0} {:>7.0} {:>7.0} {:>5.2} | {:>7.0} {:>7.0} {:>7.0} {:>7.0} {:>5.2}",
+            fmt.name(), ni, nh,
+            ci.luts, l_i, ch.luts, l_h, ch.luts / ci.luts,
+            ci.regs, r_i, ch.regs, r_h, ch.regs / ci.regs,
+        );
+    }
+}
+
+/// Table 3 — power (W at f_max) and energy (pJ/op), Virtex-6.
+pub fn tab3() {
+    let t = Tech::virtex6();
+    println!("Table 3: power & energy, Virtex-6  [model | paper]");
+    println!(
+        "{:<8} {:>3}/{:<3} | {:>7} {:>7} | {:>8} {:>8} {:>8} {:>8}",
+        "FP", "Ni", "Nh", "P.IEEE", "P.HUB", "E.IEEE", "(ppr)", "E.HUB", "(ppr)"
+    );
+    for &(fmt, ni, nh, e_i, e_h) in super::PAPER_ENERGY {
+        let ci = rotator_cost(&RotatorConfig::ieee(fmt, ni, ni - 3), &t);
+        let ch = rotator_cost(&RotatorConfig::hub(fmt, nh, ni - 3), &t);
+        println!(
+            "{:<8} {:>3}/{:<3} | {:>7.3} {:>7.3} | {:>8.1} {:>8.1} {:>8.1} {:>8.1}",
+            fmt.name(),
+            ni,
+            nh,
+            power_w(&ci),
+            power_w(&ch),
+            energy_pj(&ci),
+            e_i,
+            energy_pj(&ch),
+            e_h
+        );
+    }
+}
+
+/// Table 4 — relative area increments when changing design parameters.
+pub fn tab4() {
+    let t = Tech::virtex6();
+    println!("Table 4: relative LUT cost of design changes  [model | paper]");
+    println!(
+        "{:<8} | {:>11} {:>11} | {:>11} {:>11} | {:>9} | {:>9}",
+        "FP", "+1 it IEEE", "+1 it HUB", "+1N IEEE", "+1N HUB", "unbiased", "I-detect"
+    );
+    let paper = [
+        ("half", 4.4, 5.3, 10.0, 12.8, 0.3, 1.0),
+        ("single", 3.1, 2.8, 5.3, 6.0, 2.0, 0.3),
+        ("double", 1.4, 1.6, 3.1, 3.1, 0.2, 0.1),
+    ];
+    for (i, (fmt, n_i, n_h)) in
+        [(FpFormat::HALF, 14u32, 13u32), (FpFormat::SINGLE, 26, 25), (FpFormat::DOUBLE, 55, 54)]
+            .iter()
+            .enumerate()
+    {
+        let pct = |a: f64, b: f64| (b / a - 1.0) * 100.0;
+        let base_i = rotator_cost(&RotatorConfig::ieee(*fmt, *n_i, n_i - 3), &t).luts;
+        let it_i = rotator_cost(&RotatorConfig::ieee(*fmt, *n_i, n_i - 2), &t).luts;
+        let base_h = rotator_cost(&RotatorConfig::hub(*fmt, *n_h, n_i - 3), &t).luts;
+        let it_h = rotator_cost(&RotatorConfig::hub(*fmt, *n_h, n_i - 2), &t).luts;
+        // +1 N also adds one microrotation (paper: "increasing N also
+        // means increasing the number of microrotations"; the column is
+        // per bit of N — the paper's own Table 2 steps of 2 bits give
+        // twice this)
+        let n2_i = rotator_cost(&RotatorConfig::ieee(*fmt, *n_i + 1, n_i - 2), &t).luts;
+        let n2_h = rotator_cost(&RotatorConfig::hub(*fmt, *n_h + 1, n_i - 2), &t).luts;
+        // HUB options
+        let mut c = RotatorConfig::hub(*fmt, *n_h, n_i - 3);
+        c.hub_opts = crate::converters::HubInputOpts { unbiased: false, detect_one: false };
+        c.hub_unbiased_output = false;
+        let basic = rotator_cost(&c, &t).luts;
+        let mut cu = c;
+        cu.hub_opts.unbiased = true;
+        cu.hub_unbiased_output = true;
+        let unb = rotator_cost(&cu, &t).luts;
+        let mut cd = c;
+        cd.hub_opts.detect_one = true;
+        let det = rotator_cost(&cd, &t).luts;
+        let p = paper[i];
+        println!(
+            "{:<8} | {:>5.1}% {:>4.1}% {:>5.1}% {:>4.1}% | {:>5.1}% {:>4.1}% {:>5.1}% {:>4.1}% | {:>4.1}% {:>3.1}% | {:>4.1}% {:>3.1}%",
+            fmt.name(),
+            pct(base_i, it_i), p.1,
+            pct(base_h, it_h), p.2,
+            pct(base_i, n2_i), p.3,
+            pct(base_h, n2_h), p.4,
+            pct(basic, unb), p.5,
+            pct(basic, det), p.6,
+        );
+    }
+    println!("(each pair: model% paper%)");
+}
+
+/// Table 5 — fixed-point (32-bit, 27 it) vs FP-HUB 32(26) rotator.
+pub fn tab5() {
+    let t = Tech::virtex6();
+    println!("Table 5: fixed-point vs FP implementation, Virtex-6  [model | paper]");
+    // fixed-point rotator = CORDIC pipeline + flip, no converters
+    let fixed = fixed_rotator_cost(&t, 32, 27);
+    let hub = rotator_cost(&RotatorConfig::hub(FpFormat::SINGLE, 26, 24), &t);
+    let e_fx = energy_pj(&fixed);
+    let e_hub = energy_pj(&hub);
+    println!(
+        "{:<14} {:>9} {:>7} {:>10} {:>8} {:>9}",
+        "Format", "Delay", "LUTs", "Registers", "Power", "Energy"
+    );
+    println!(
+        "{:<14} {:>7.2}ns {:>7.0} {:>10.0} {:>6.3} W {:>7.0}pJ   (paper: 3.26ns 1947 1914 0.132W 430pJ)",
+        "FixP(32)",
+        fixed.delay_ns,
+        fixed.luts,
+        fixed.regs,
+        power_w(&fixed),
+        e_fx
+    );
+    println!(
+        "{:<14} {:>7.2}ns {:>7.0} {:>10.0} {:>6.3} W {:>7.0}pJ   (paper: 2.66ns 2182 1785 0.168W 448pJ)",
+        "FPHUB 32(26)",
+        hub.delay_ns,
+        hub.luts,
+        hub.regs,
+        power_w(&hub),
+        e_hub
+    );
+    println!(
+        "FP/FixP        {:>7.1}% {:>6.1}% {:>9.1}% {:>7.1}% {:>8.1}%   (paper: -18.4% +12.1% -6.7% +27.3% +4.2%)",
+        (hub.delay_ns / fixed.delay_ns - 1.0) * 100.0,
+        (hub.luts / fixed.luts - 1.0) * 100.0,
+        (hub.regs / fixed.regs - 1.0) * 100.0,
+        (power_w(&hub) / power_w(&fixed) - 1.0) * 100.0,
+        (e_hub / e_fx - 1.0) * 100.0
+    );
+    let _ = FixedQrdEngine::new(32, 27, false); // the functional twin used in Fig. 11
+}
+
+/// Cost of the bare fixed-point rotator of ref [20] (no converters; the
+/// v/r control and σ pipeline are the same as the FP unit's core).
+pub fn fixed_rotator_cost(t: &Tech, n: u32, niter: u32) -> super::RotatorCost {
+    // reuse the core model: a conventional-core rotator minus converters.
+    let cfg = RotatorConfig::ieee(FpFormat::SINGLE, n.saturating_sub(2).max(26), niter);
+    let w = n + 2;
+    let _ = cfg;
+    let stage_luts = (2 * w + 3) as f64;
+    let stage_regs = (2 * w + 2) as f64;
+    let flip = (2 * w) as f64;
+    // no converters and a single-signal control ⇒ none of the FP unit's
+    // replication/packing overheads apply (matches the paper's 1947
+    // LUT / 1914 reg point within ~2%)
+    let luts = stage_luts * niter as f64 + flip;
+    let regs = stage_regs * niter as f64 + (2 * w + 2) as f64;
+    let delay = t.t_net + t.t_lut + w as f64 * t.t_carry + (t.t_lut + t.t_hop);
+    super::RotatorCost {
+        luts,
+        regs,
+        dsps: 0.0,
+        delay_ns: delay,
+        latency_cycles: 1 + niter,
+        critical: "cordic-stage",
+    }
+}
+
+/// The paper's Family enum is re-exported for table drivers.
+pub fn family_label(f: Family) -> &'static str {
+    match f {
+        Family::Conventional => "IEEE",
+        Family::Hub => "HUB",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_rotator_close_to_paper_table5() {
+        let t = Tech::virtex6();
+        let c = fixed_rotator_cost(&t, 32, 27);
+        // paper: 3.26 ns, 1947 LUTs, 1914 regs
+        // model underestimates the fixed rotator critical path (the paper
+        // fixed design has a longer select path); shape (FP faster) holds
+        assert!((c.delay_ns - 3.26).abs() / 3.26 < 0.35, "delay {}", c.delay_ns);
+        assert!((c.luts - 1947.0).abs() / 1947.0 < 0.2, "luts {}", c.luts);
+        assert!((c.regs - 1914.0).abs() / 1914.0 < 0.2, "regs {}", c.regs);
+    }
+
+    #[test]
+    fn tables_print_without_panicking() {
+        tab1();
+        tab2();
+        tab3();
+        tab4();
+        tab5();
+    }
+}

@@ -1,0 +1,43 @@
+//! # fp-givens — Floating-Point Givens Rotation Unit
+//!
+//! A full software reproduction of *"Efficient Floating-Point Givens
+//! Rotation Unit"* (J. Hormigo, S. D. Muñoz, Circuits, Systems, and Signal
+//! Processing, 2020, DOI 10.1007/s00034-020-01580-x).
+//!
+//! The paper proposes a high-throughput floating-point Givens rotation
+//! unit for QR decomposition: a pipelined fixed-point CORDIC Givens
+//! rotator (Z-datapath eliminated, vectoring directions recorded in σ
+//! registers and replayed in rotation mode) wrapped in FP ↔ block-fixed
+//! point converters, in two flavours — conventional IEEE-like formats and
+//! Half-Unit-Biased (HUB) formats.
+//!
+//! This crate provides:
+//! - bit-accurate models of every circuit in the paper ([`fp`], [`fixed`],
+//!   [`converters`], [`cordic`], [`rotator`]),
+//! - QR-decomposition engines built from the rotation unit ([`qrd`]),
+//! - a cycle-accurate pipeline simulator ([`pipeline`]),
+//! - an analytical FPGA area/delay/power model ([`hwmodel`]),
+//! - the paper's Monte-Carlo error analysis ([`analysis`]),
+//! - models of the baseline designs the paper compares with ([`baselines`]),
+//! - a streaming QRD coordinator and PJRT runtime so the unit can be used
+//!   as a deployable service ([`coordinator`], [`runtime`]),
+//! - experiment drivers regenerating every paper table/figure
+//!   ([`experiments`]).
+//!
+//! See `DESIGN.md` for the module ↔ paper mapping and `EXPERIMENTS.md`
+//! for measured vs published results.
+
+pub mod analysis;
+pub mod baselines;
+pub mod converters;
+pub mod coordinator;
+pub mod cordic;
+pub mod experiments;
+pub mod fixed;
+pub mod fp;
+pub mod hwmodel;
+pub mod pipeline;
+pub mod qrd;
+pub mod rotator;
+pub mod runtime;
+pub mod util;

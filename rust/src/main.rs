@@ -1,0 +1,88 @@
+//! `repro` — CLI for the fp-givens reproduction.
+//!
+//! ```text
+//! repro exp <id> [--nmat N] [--seed S]   regenerate one paper table/figure
+//! repro report [--nmat N] [--seed S]     run every experiment
+//! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
+//! repro serve [--engine native|pjrt] [--requests N] [--batch B]
+//!             [--artifact artifacts/qrd4_hub.hlo.txt]
+//! ```
+
+use fp_givens::util::cli::Args;
+
+const USAGE: &str = "usage:
+  repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
+  repro report [--nmat N] [--seed S]
+  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--artifact PATH]";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_deref() {
+        Some("exp") => {
+            let id = args.positional.first().cloned().unwrap_or_else(|| "all".into());
+            let nmat = args.get_as("nmat", 10_000usize);
+            let seed = args.get_as("seed", 2020u64);
+            fp_givens::experiments::run(&id, nmat, seed)?;
+        }
+        Some("report") => {
+            let nmat = args.get_as("nmat", 10_000usize);
+            let seed = args.get_as("seed", 2020u64);
+            fp_givens::experiments::run("all", nmat, seed)?;
+        }
+        Some("qrd") => {
+            use fp_givens::analysis::{snr_db, MatrixGen};
+            use fp_givens::fp::{Family, FpFormat};
+            use fp_givens::qrd::QrdEngine;
+            use fp_givens::rotator::RotatorConfig;
+            let m = args.get_as("m", 4usize);
+            let n = args.get_as("n", 26u32);
+            let r = args.get_as("r", 4u32);
+            let seed = args.get_as("seed", 1u64);
+            let cfg = match args.get("approach", "hub").as_str() {
+                "ieee" => RotatorConfig::ieee(
+                    FpFormat::SINGLE,
+                    n,
+                    RotatorConfig::optimal_niter(Family::Conventional, n),
+                ),
+                "hub" => RotatorConfig::hub(
+                    FpFormat::SINGLE,
+                    n,
+                    RotatorConfig::optimal_niter(Family::Hub, n),
+                ),
+                other => anyhow::bail!("unknown approach {other}"),
+            };
+            let a = MatrixGen::new(seed).matrix(m, r);
+            let eng = QrdEngine::new(cfg);
+            let res = eng.decompose(&a);
+            println!("config: {}", cfg.label());
+            println!("A:");
+            for row in &a {
+                println!("  {row:?}");
+            }
+            println!("R:");
+            for row in &res.r {
+                println!("  {row:?}");
+            }
+            println!("Qt:");
+            for row in &res.qt {
+                println!("  {row:?}");
+            }
+            let b = res.reconstruct();
+            println!("SNR(A, GᵀR) = {:.2} dB", snr_db(&a, &b));
+            println!("orthogonality defect = {:.3e}", res.orthogonality_defect());
+        }
+        Some("serve") => {
+            let engine = args.get("engine", "native");
+            let requests = args.get_as("requests", 10_000usize);
+            let batch = args.get_as("batch", 64usize);
+            let artifact = args.get("artifact", "artifacts/qrd4_hub.hlo.txt");
+            fp_givens::coordinator::serve_synthetic(&engine, requests, batch, &artifact)?;
+        }
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,313 @@
+//! Cycle-accurate pipeline simulator of the Givens rotation unit.
+//!
+//! Models the hardware pipeline exactly as Fig. 1/Fig. 3 describe it:
+//! 2 input-converter stages, the flip pre-stage, one stage per CORDIC
+//! microrotation (each with its σ register written in vectoring mode
+//! and read in rotation mode), the compensation multiplier stage, and
+//! 3 output-converter stages. One element pair enters and one leaves
+//! per clock — the initiation interval of a full Givens rotation over
+//! rows of `e` pairs is exactly `e` cycles (paper Table 6).
+//!
+//! The simulator is bit-exact against the functional
+//! [`crate::rotator::GivensRotator`] (verified by property tests) and
+//! provides the latency/II measurements used for Table 6.
+
+use crate::converters::BlockFp;
+use crate::cordic::{CordicCore, CoreKind, ScaleComp};
+use crate::fp::Family;
+use crate::rotator::{GivensRotator, RotatorConfig, Val};
+
+/// One operation presented to the unit: an element pair plus the v/r
+/// control bit (true = vectoring: compute and latch a new angle).
+#[derive(Debug, Clone, Copy)]
+pub struct PairOp {
+    /// X input.
+    pub x: Val,
+    /// Y input.
+    pub y: Val,
+    /// v/r control: vectoring (true) or rotation (false).
+    pub vectoring: bool,
+    /// Caller tag, returned with the output.
+    pub id: u64,
+}
+
+/// A completed operation leaving the pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct PairOut {
+    /// Rotated X.
+    pub x: Val,
+    /// Rotated Y.
+    pub y: Val,
+    /// Caller tag.
+    pub id: u64,
+    /// Cycles spent in the pipeline.
+    pub latency: u32,
+}
+
+/// In-flight slot state.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    /// Raw inputs (before the input converter completes).
+    raw: (Val, Val),
+    /// Block-FP state once converted.
+    x: i64,
+    y: i64,
+    exp: i64,
+    vectoring: bool,
+    id: u64,
+    enq: u64,
+}
+
+/// The cycle-accurate unit.
+pub struct PipelineSim {
+    cfg: RotatorConfig,
+    rot: GivensRotator,
+    core: CordicCore,
+    comp: Option<ScaleComp>,
+    /// σ register per CORDIC stage (Fig. 3 left side).
+    sigma_regs: Vec<bool>,
+    /// Flip register at the pre-stage.
+    flip_reg: bool,
+    /// Pipeline slots, index 0 = entry.
+    slots: Vec<Option<Slot>>,
+    /// Current cycle number.
+    pub cycle: u64,
+    /// Completed-op count.
+    pub retired: u64,
+}
+
+impl PipelineSim {
+    /// Build the simulator for a configuration.
+    pub fn new(cfg: RotatorConfig) -> Self {
+        let kind = match cfg.family {
+            Family::Conventional => CoreKind::Conventional,
+            Family::Hub => CoreKind::Hub,
+        };
+        let core = CordicCore::new(cfg.w(), cfg.niter, kind);
+        let comp = cfg
+            .compensate
+            .then(|| ScaleComp::new(cfg.w(), cfg.niter, cfg.family == Family::Hub));
+        let depth = Self::depth_for(&cfg);
+        PipelineSim {
+            cfg,
+            rot: GivensRotator::new(cfg),
+            core,
+            comp,
+            sigma_regs: vec![false; cfg.niter as usize],
+            flip_reg: false,
+            slots: vec![None; depth],
+            cycle: 0,
+            retired: 0,
+        }
+    }
+
+    /// Pipeline depth in cycles.
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn depth_for(cfg: &RotatorConfig) -> usize {
+        (2 + 1 + cfg.niter + cfg.compensate as u32 + 3) as usize
+    }
+
+    /// Advance one clock: shift every slot forward one stage (applying
+    /// the transformation of the stage it enters), accept `input` into
+    /// the entry slot, return the op leaving the pipeline (if any).
+    ///
+    /// Stage boundary map (entering index k):
+    /// k=2: input conversion complete · k=3: flip pre-stage ·
+    /// k=4..3+niter: CORDIC microrotation k−4 · k=4+niter:
+    /// compensation · remaining: output-converter drain (conversion
+    /// applied at retire — pure delay in the model).
+    pub fn tick(&mut self, input: Option<PairOp>) -> Option<PairOut> {
+        self.cycle += 1;
+        let depth = self.slots.len();
+        let niter = self.cfg.niter as usize;
+
+        // retire
+        let out = self.slots[depth - 1].take().map(|s| {
+            let (x, y) = self.rot.output_convert(s.x, s.y, s.exp);
+            self.retired += 1;
+            PairOut { x, y, id: s.id, latency: (self.cycle - s.enq) as u32 }
+        });
+
+        // shift (each stage register is written by at most one op per
+        // cycle, so the iteration order is immaterial)
+        for i in (0..depth - 1).rev() {
+            if let Some(mut s) = self.slots[i].take() {
+                let k = i + 1;
+                if k == 2 {
+                    let bf: BlockFp = self.rot.convert_block(s.raw.0, s.raw.1);
+                    (s.x, s.y, s.exp) = (bf.x, bf.y, bf.exp);
+                } else if k == 3 {
+                    if s.vectoring {
+                        self.flip_reg = s.x < 0;
+                    }
+                    if self.flip_reg {
+                        (s.x, s.y) = self.core_negate(s.x, s.y);
+                    }
+                } else if k >= 4 && k < 4 + niter {
+                    let stage = k - 4;
+                    let sigma = if s.vectoring {
+                        let sg = s.y >= 0;
+                        self.sigma_regs[stage] = sg;
+                        sg
+                    } else {
+                        self.sigma_regs[stage]
+                    };
+                    (s.x, s.y) = self.core.step(s.x, s.y, stage as u32, sigma);
+                } else if k == 4 + niter {
+                    if let Some(c) = &self.comp {
+                        s.x = c.apply(s.x);
+                        s.y = c.apply(s.y);
+                    }
+                }
+                self.slots[k] = Some(s);
+            }
+        }
+
+        // accept input into stage 0
+        self.slots[0] = input.map(|op| Slot {
+            raw: (op.x, op.y),
+            x: 0,
+            y: 0,
+            exp: 0,
+            vectoring: op.vectoring,
+            id: op.id,
+            enq: self.cycle,
+        });
+        out
+    }
+
+    fn core_negate(&self, x: i64, y: i64) -> (i64, i64) {
+        match self.cfg.family {
+            Family::Conventional => {
+                (crate::fixed::neg(x, self.cfg.w()), crate::fixed::neg(y, self.cfg.w()))
+            }
+            Family::Hub => {
+                (crate::fixed::hub_not(x, self.cfg.w()), crate::fixed::hub_not(y, self.cfg.w()))
+            }
+        }
+    }
+
+    /// Run a whole stream through the pipeline (one op per cycle, then
+    /// drain), returning outputs in order plus the total cycle count.
+    pub fn run_stream(&mut self, ops: &[PairOp]) -> (Vec<PairOut>, u64) {
+        let mut out = Vec::with_capacity(ops.len());
+        for op in ops {
+            if let Some(o) = self.tick(Some(*op)) {
+                out.push(o);
+            }
+        }
+        while out.len() < ops.len() {
+            if let Some(o) = self.tick(None) {
+                out.push(o);
+            }
+        }
+        (out, self.cycle)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+    use crate::util::rng::Rng;
+
+    fn stream_for(rot: &GivensRotator, rng: &mut Rng, rotations: usize, e: usize) -> Vec<PairOp> {
+        let mut ops = Vec::new();
+        let mut id = 0;
+        for _ in 0..rotations {
+            for k in 0..e {
+                let x = rot.encode(rng.range(-2.0, 2.0));
+                let y = rot.encode(rng.range(-2.0, 2.0));
+                ops.push(PairOp { x, y, vectoring: k == 0, id });
+                id += 1;
+            }
+        }
+        ops
+    }
+
+    fn check_matches_functional(cfg: RotatorConfig) {
+        let rot = GivensRotator::new(cfg);
+        let mut sim = PipelineSim::new(cfg);
+        let mut rng = Rng::new(42);
+        let e = 8;
+        let ops = stream_for(&rot, &mut rng, 5, e);
+        let (outs, _) = sim.run_stream(&ops);
+        assert_eq!(outs.len(), ops.len());
+        // functional reference
+        let mut angle = None;
+        for (op, out) in ops.iter().zip(&outs) {
+            let (fx, fy) = if op.vectoring {
+                let (x, y, a) = rot.vector(op.x, op.y);
+                angle = Some(a);
+                (x, y)
+            } else {
+                rot.rotate(op.x, op.y, angle.as_ref().unwrap())
+            };
+            assert_eq!(out.id, op.id);
+            assert_eq!((out.x, out.y), (fx, fy), "op {}", op.id);
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_functional_ieee() {
+        check_matches_functional(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+    }
+
+    #[test]
+    fn pipeline_matches_functional_hub() {
+        check_matches_functional(RotatorConfig::hub(FpFormat::SINGLE, 25, 23));
+    }
+
+    #[test]
+    fn latency_equals_depth() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rot = GivensRotator::new(cfg);
+        let mut sim = PipelineSim::new(cfg);
+        let op = PairOp { x: rot.encode(1.0), y: rot.encode(0.5), vectoring: true, id: 7 };
+        let (outs, _) = sim.run_stream(&[op]);
+        assert_eq!(outs[0].latency as usize, sim.depth());
+        assert_eq!(sim.depth() as u32, rot.latency_cycles());
+    }
+
+    #[test]
+    fn throughput_is_one_op_per_cycle() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rot = GivensRotator::new(cfg);
+        let mut rng = Rng::new(1);
+        let mut sim = PipelineSim::new(cfg);
+        let ops = stream_for(&rot, &mut rng, 50, 8);
+        let n = ops.len() as u64;
+        let (_, cycles) = sim.run_stream(&ops);
+        // total cycles = n + pipeline depth (drain)
+        assert_eq!(cycles, n + sim.depth() as u64);
+    }
+
+    #[test]
+    fn bubbles_pass_through() {
+        let cfg = RotatorConfig::ieee(FpFormat::SINGLE, 26, 23);
+        let rot = GivensRotator::new(cfg);
+        let mut sim = PipelineSim::new(cfg);
+        // one op, then idle cycles interleaved with a second rotation set
+        let (x, y) = (rot.encode(3.0), rot.encode(4.0));
+        assert!(sim.tick(Some(PairOp { x, y, vectoring: true, id: 0 })).is_none());
+        for _ in 0..3 {
+            assert!(sim.tick(None).is_none());
+        }
+        let mut got = Vec::new();
+        let p = PairOp { x: rot.encode(1.0), y: rot.encode(2.0), vectoring: false, id: 1 };
+        for _ in 0..(sim.depth() + 10) {
+            if let Some(o) = sim.tick(Some(p)) {
+                got.push(o);
+            }
+        }
+        assert_eq!(got[0].id, 0);
+        assert_eq!(got[1].id, 1);
+        // the later rotation uses the angle latched by op 0
+        let (_, _, ang) = rot.vector(x, y);
+        let (fx, fy) = rot.rotate(p.x, p.y, &ang);
+        assert_eq!((got[1].x, got[1].y), (fx, fy));
+    }
+}

@@ -1,0 +1,145 @@
+//! Fixed-point QRD engine — the paper's comparison baseline (§5.3).
+//!
+//! Models the 32-bit fixed-point rotator of ref [20] (with the HUB
+//! fixed-point variant of ref [22] available too): no converters, rows
+//! are stored as n-bit fixed-point words; the CORDIC core runs in
+//! n+2 bits and results are truncated back to n bits on writeback.
+//! Input matrices must be pre-scaled by the caller to fit the [−2, 2)
+//! format range — exactly the external scaling the paper notes the
+//! fixed implementation "may require" (§5.3).
+
+use super::schedule::schedule;
+use super::QrdResult;
+use crate::cordic::{narrow_trunc, CordicCore, CoreKind, ScaleComp};
+use crate::fixed;
+
+/// Fixed-point QRD engine configuration + core.
+#[derive(Debug, Clone)]
+pub struct FixedQrdEngine {
+    /// Stored word width (the paper's comparison uses 32).
+    pub n: u32,
+    core: CordicCore,
+    comp: ScaleComp,
+    hub: bool,
+}
+
+impl FixedQrdEngine {
+    /// Build a fixed-point engine: `n`-bit storage, `niter`
+    /// microrotations (the paper's 32-bit baseline uses 27 — the maximum
+    /// useful for that width), conventional or HUB (ref [22]) core.
+    pub fn new(n: u32, niter: u32, hub: bool) -> Self {
+        let kind = if hub { CoreKind::Hub } else { CoreKind::Conventional };
+        FixedQrdEngine {
+            n,
+            core: CordicCore::new(n + 2, niter, kind),
+            comp: ScaleComp::new(n + 2, niter, hub),
+            hub,
+        }
+    }
+
+    /// Quantize an f64 into the engine's input grid (RNE, saturating).
+    /// Values must be within the format range [−2, 2).
+    pub fn encode(&self, x: f64) -> i64 {
+        fixed::from_f64(x, self.n)
+    }
+
+    /// Decode a stored word.
+    pub fn decode(&self, v: i64) -> f64 {
+        if self.hub {
+            fixed::hub_to_f64(v, self.n)
+        } else {
+            fixed::to_f64(v, self.n)
+        }
+    }
+
+    /// Decompose an m×m matrix (values pre-scaled into range).
+    pub fn decompose(&self, a: &[Vec<f64>]) -> QrdResult {
+        let m = a.len();
+        let mut rows: Vec<Vec<i64>> = a
+            .iter()
+            .map(|row| {
+                let mut v: Vec<i64> = row.iter().map(|&x| self.encode(x)).collect();
+                v.extend(std::iter::repeat(0).take(m));
+                v
+            })
+            .collect();
+        for (i, row) in rows.iter_mut().enumerate() {
+            row[m + i] = self.encode(1.0);
+        }
+
+        let width = 2 * m;
+        for step in schedule(m) {
+            let (pr, zr, c) = (step.pivot_row, step.zero_row, step.col);
+            let (xv, _ylow, ang) = self.core.vector(rows[pr][c], rows[zr][c]);
+            rows[pr][c] = self.writeback(xv);
+            rows[zr][c] = 0;
+            for k in (c + 1)..width {
+                let (xr, yr) = self.core.rotate(rows[pr][k], rows[zr][k], &ang);
+                rows[pr][k] = self.writeback(xr);
+                rows[zr][k] = self.writeback(yr);
+            }
+        }
+
+        QrdResult {
+            r: rows.iter().map(|row| row[..m].iter().map(|&v| self.decode(v)).collect()).collect(),
+            qt: rows.iter().map(|row| row[m..].iter().map(|&v| self.decode(v)).collect()).collect(),
+        }
+    }
+
+    /// Compensate the CORDIC gain and truncate back to the n-bit storage
+    /// grid (saturating — the hardware register file clips the two guard
+    /// bits after compensation brings values back under 2).
+    fn writeback(&self, v: i64) -> i64 {
+        narrow_trunc(self.comp.apply(v), self.core.w, self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(m: usize, scale: f64, seed: u64) -> Vec<Vec<f64>> {
+        let mut s = seed | 1;
+        let mut next = move || {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((s >> 11) as f64 / (1u64 << 53) as f64) * 2.0 - 1.0
+        };
+        (0..m).map(|_| (0..m).map(|_| next() * scale).collect()).collect()
+    }
+
+    #[test]
+    fn fixed32_reconstructs() {
+        let eng = FixedQrdEngine::new(32, 27, false);
+        let a = sample(4, 0.4, 3);
+        let res = eng.decompose(&a);
+        let b = res.reconstruct();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((b[i][j] - a[i][j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_fixed_reconstructs() {
+        let eng = FixedQrdEngine::new(32, 27, true);
+        let a = sample(4, 0.4, 9);
+        let res = eng.decompose(&a);
+        let b = res.reconstruct();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((b[i][j] - a[i][j]).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn small_inputs_lose_precision_gracefully() {
+        // deep-subulp values quantize to zero-ish rows; engine must not
+        // blow up (this is the r ≥ 14 slump of Fig. 11)
+        let eng = FixedQrdEngine::new(32, 27, false);
+        let a = sample(4, 2f64.powi(-31), 5);
+        let res = eng.decompose(&a);
+        let _ = res.reconstruct();
+    }
+}

@@ -1,0 +1,185 @@
+//! Low-cost *iterative* QRD unit (paper §6: "the proposed units could
+//! be used to design both highly parallel QRD units and low-cost
+//! iterative ones").
+//!
+//! One rotation unit + a small sequencer: the Givens schedule of an m×m
+//! decomposition is streamed through the single pipelined rotator,
+//! respecting data dependencies (a rotation may only be issued once its
+//! two source rows have been written back). The cycle-accurate
+//! [`crate::pipeline::PipelineSim`] counts the exact cycles, giving the
+//! throughput/area trade-off point opposite the parallel array of
+//! Table 6.
+
+use crate::pipeline::{PairOp, PipelineSim};
+use crate::qrd::schedule;
+use crate::rotator::{GivensRotator, RotatorConfig, Val};
+
+/// Result of an iterative decomposition: values + exact cycle count.
+pub struct IterativeRun {
+    /// Transformed rows `[R | G]`.
+    pub rows: Vec<Vec<Val>>,
+    /// Total cycles the single unit needed (including pipeline drains
+    /// between dependent rotations).
+    pub cycles: u64,
+}
+
+/// A single-rotator iterative QRD unit with cycle accounting.
+pub struct IterativeQrd {
+    cfg: RotatorConfig,
+    rot: GivensRotator,
+}
+
+impl IterativeQrd {
+    /// Build the unit.
+    pub fn new(cfg: RotatorConfig) -> Self {
+        IterativeQrd { cfg, rot: GivensRotator::new(cfg) }
+    }
+
+    /// Decompose one m×m matrix on the single unit, cycle-accurately.
+    ///
+    /// The sequencer issues the e pair-ops of one rotation back-to-back,
+    /// then must drain the pipeline before the next rotation that
+    /// *reads* the rows just written (adjacent schedule steps always
+    /// conflict on the pivot row, so the simple sequencer drains after
+    /// every rotation — the conservative hardware baseline).
+    pub fn decompose(&self, a: &[Vec<f64>]) -> IterativeRun {
+        let m = a.len();
+        let mut rows: Vec<Vec<Val>> = a
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let mut v: Vec<Val> = row.iter().map(|&x| self.rot.encode(x)).collect();
+                v.extend((0..m).map(|j| if i == j { self.rot.one() } else { self.rot.zero() }));
+                v
+            })
+            .collect();
+
+        let mut sim = PipelineSim::new(self.cfg);
+        let width = 2 * m;
+        for step in schedule(m) {
+            let (pr, zr, c) = (step.pivot_row, step.zero_row, step.col);
+            // issue e = width − c ops: vectoring on column c, rotations
+            // on the rest
+            let mut outs = Vec::with_capacity(width - c);
+            for k in c..width {
+                let op = PairOp {
+                    x: rows[pr][k],
+                    y: rows[zr][k],
+                    vectoring: k == c,
+                    id: k as u64,
+                };
+                if let Some(o) = sim.tick(Some(op)) {
+                    outs.push(o);
+                }
+            }
+            // drain: the next rotation depends on these rows
+            while outs.len() < width - c {
+                if let Some(o) = sim.tick(None) {
+                    outs.push(o);
+                }
+            }
+            for o in outs {
+                let k = o.id as usize;
+                if k == c {
+                    rows[pr][k] = o.x;
+                    rows[zr][k] = self.rot.zero();
+                } else {
+                    rows[pr][k] = o.x;
+                    rows[zr][k] = o.y;
+                }
+            }
+        }
+        IterativeRun { rows, cycles: sim.cycle }
+    }
+
+    /// Cycles-per-matrix model: Σ_steps (e_step + pipeline depth).
+    pub fn cycles_model(&self, m: usize) -> u64 {
+        let depth = 2 + 1 + self.cfg.niter as u64 + self.cfg.compensate as u64 + 3;
+        schedule(m).iter().map(|s| (2 * m - s.col) as u64 + depth).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::snr_db;
+    use crate::fp::FpFormat;
+
+    fn sample(m: usize) -> Vec<Vec<f64>> {
+        (0..m)
+            .map(|i| (0..m).map(|j| ((i * 7 + j * 3) as f64).sin()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn iterative_matches_functional_engine_bitwise() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let it = IterativeQrd::new(cfg);
+        let eng = crate::qrd::QrdEngine::new(cfg);
+        let a = sample(4);
+        let run = it.decompose(&a);
+        // functional engine on the same inputs
+        let rows: Vec<Vec<Val>> = a
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let mut v: Vec<Val> = row.iter().map(|&x| eng.rot.encode(x)).collect();
+                v.extend((0..4).map(|j| if i == j { eng.rot.one() } else { eng.rot.zero() }));
+                v
+            })
+            .collect();
+        let want = eng.triangularize(rows, 4);
+        let fmt = cfg.fmt;
+        for i in 0..4 {
+            for j in 0..8 {
+                assert_eq!(
+                    run.rows[i][j].to_bits(fmt),
+                    want[i][j].to_bits(fmt),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cycle_count_matches_model() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let it = IterativeQrd::new(cfg);
+        let run = it.decompose(&sample(4));
+        assert_eq!(run.cycles, it.cycles_model(4));
+    }
+
+    #[test]
+    fn iterative_unit_reconstructs() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let it = IterativeQrd::new(cfg);
+        let a = sample(4);
+        let run = it.decompose(&a);
+        let fmt = cfg.fmt;
+        let r: Vec<Vec<f64>> =
+            (0..4).map(|i| (0..4).map(|j| run.rows[i][j].to_f64(fmt)).collect()).collect();
+        let g: Vec<Vec<f64>> =
+            (0..4).map(|i| (4..8).map(|j| run.rows[i][j].to_f64(fmt)).collect()).collect();
+        let mut b = vec![vec![0.0; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                for k in 0..4 {
+                    b[i][j] += g[k][i] * r[k][j];
+                }
+            }
+        }
+        assert!(snr_db(&a, &b) > 110.0);
+    }
+
+    #[test]
+    fn parallel_vs_iterative_tradeoff() {
+        // the iterative unit is ~latency×rotations slower per matrix
+        // than the array's II = m cycles — that's its cost advantage
+        // flip side (1 rotator vs ~37)
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let it = IterativeQrd::new(cfg);
+        let cycles = it.cycles_model(7);
+        assert!(cycles > 7 * 30, "{cycles}");
+        assert!(cycles < 2000, "{cycles}");
+    }
+}

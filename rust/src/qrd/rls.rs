@@ -1,0 +1,176 @@
+//! QRD-RLS: recursive least-squares by Givens row updates — the
+//! adaptive-filtering workload (beamforming, STAP, adaptive FIR — paper
+//! §1 refs [13][14][17][19][29]) that streams rotations through the
+//! unit continuously.
+//!
+//! State: the Cholesky-like triangle `[R | z]` of the exponentially
+//! weighted normal equations. Each new observation row (x, d) is
+//! annihilated into the triangle with one Givens rotation per column —
+//! exactly the vectoring + e-rotation pattern the pipelined unit
+//! executes at one pair per cycle.
+
+use crate::qrd::solve::back_substitute;
+use crate::rotator::{GivensRotator, RotatorConfig, Val};
+
+/// A QRD-RLS filter of order `taps` running on one rotation unit.
+pub struct QrdRls {
+    rot: GivensRotator,
+    taps: usize,
+    /// forgetting factor λ^(1/2) applied to the triangle per update
+    sqrt_lambda: f64,
+    /// `[R | z]` rows in the unit's number format (taps × (taps+1))
+    tri: Vec<Vec<Val>>,
+}
+
+impl QrdRls {
+    /// Create a filter; `lambda` is the RLS forgetting factor (e.g.
+    /// 0.99), `delta` the initial diagonal regularization.
+    pub fn new(cfg: RotatorConfig, taps: usize, lambda: f64, delta: f64) -> Self {
+        let rot = GivensRotator::new(cfg);
+        let tri = (0..taps)
+            .map(|i| {
+                (0..=taps)
+                    .map(|j| if i == j { rot.encode(delta.sqrt()) } else { rot.zero() })
+                    .collect()
+            })
+            .collect();
+        QrdRls { rot, taps, sqrt_lambda: lambda.sqrt(), tri }
+    }
+
+    /// Absorb one observation: regressor row `x` with desired output
+    /// `d`. Costs `taps` vectoring ops + O(taps²/2) rotations — all
+    /// through the rotation unit.
+    pub fn update(&mut self, x: &[f64], d: f64) {
+        assert_eq!(x.len(), self.taps);
+        let fmt = self.rot.cfg.fmt;
+        // exponential forgetting: scale the triangle by √λ (hardware
+        // folds this into the compensation multipliers; the functional
+        // model re-encodes)
+        if self.sqrt_lambda != 1.0 {
+            for row in &mut self.tri {
+                for v in row.iter_mut() {
+                    *v = self.rot.encode(v.to_f64(fmt) * self.sqrt_lambda);
+                }
+            }
+        }
+        // new row [x | d] annihilated column by column
+        let mut new_row: Vec<Val> = x.iter().map(|&xi| self.rot.encode(xi)).collect();
+        new_row.push(self.rot.encode(d));
+        for c in 0..self.taps {
+            if new_row[c].is_zero() {
+                continue;
+            }
+            let (rx, _ylow, ang) = self.rot.vector(self.tri[c][c], new_row[c]);
+            self.tri[c][c] = rx;
+            new_row[c] = self.rot.zero();
+            for k in (c + 1)..=self.taps {
+                let (a, b) = self.rot.rotate(self.tri[c][k], new_row[k], &ang);
+                self.tri[c][k] = a;
+                new_row[k] = b;
+            }
+        }
+    }
+
+    /// Current weight vector w = R⁻¹·z.
+    pub fn weights(&self) -> Vec<f64> {
+        let fmt = self.rot.cfg.fmt;
+        let r: Vec<Vec<f64>> = (0..self.taps)
+            .map(|i| (0..self.taps).map(|j| self.tri[i][j].to_f64(fmt)).collect())
+            .collect();
+        let z: Vec<f64> = (0..self.taps).map(|i| self.tri[i][self.taps].to_f64(fmt)).collect();
+        back_substitute(&r, &z)
+    }
+
+    /// A-priori prediction for a regressor row.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.weights().iter().zip(x).map(|(w, xi)| w * xi).sum()
+    }
+
+    /// Rotation-unit pair-operations consumed per update (for
+    /// throughput budgeting against the pipelined unit's 1 op/cycle).
+    pub fn ops_per_update(&self) -> usize {
+        // column c: 1 vectoring + (taps − c) rotations
+        (0..self.taps).map(|c| 1 + (self.taps - c)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+    use crate::util::rng::Rng;
+
+    fn cfg() -> RotatorConfig {
+        RotatorConfig::hub(FpFormat::SINGLE, 26, 24)
+    }
+
+    #[test]
+    fn identifies_a_fir_system() {
+        // unknown 4-tap FIR; RLS on the unit must converge to it
+        let h = [0.8, -0.4, 0.25, 0.1];
+        let mut rls = QrdRls::new(cfg(), 4, 1.0, 1e-4);
+        let mut rng = Rng::new(3);
+        let mut xbuf = [0.0f64; 4];
+        for _ in 0..300 {
+            let xin = rng.range(-1.0, 1.0);
+            xbuf.rotate_right(1);
+            xbuf[0] = xin;
+            let d: f64 = h.iter().zip(&xbuf).map(|(a, b)| a * b).sum();
+            rls.update(&xbuf, d);
+        }
+        let w = rls.weights();
+        for (got, want) in w.iter().zip(&h) {
+            assert!((got - want).abs() < 1e-3, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn tracks_a_changing_system_with_forgetting() {
+        let mut rls = QrdRls::new(cfg(), 2, 0.95, 1e-4);
+        let mut rng = Rng::new(5);
+        let mut run = |rls: &mut QrdRls, h: [f64; 2], steps: usize| {
+            let mut xbuf = [0.0f64; 2];
+            for _ in 0..steps {
+                xbuf.rotate_right(1);
+                xbuf[0] = rng.range(-1.0, 1.0);
+                let d: f64 = h.iter().zip(&xbuf).map(|(a, b)| a * b).sum();
+                rls.update(&xbuf, d);
+            }
+        };
+        run(&mut rls, [1.0, 0.5], 150);
+        run(&mut rls, [-0.3, 0.9], 200); // system changes
+        let w = rls.weights();
+        assert!((w[0] + 0.3).abs() < 0.05, "{w:?}");
+        assert!((w[1] - 0.9).abs() < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn ops_budget_matches_formula() {
+        let rls = QrdRls::new(cfg(), 4, 1.0, 1e-3);
+        // c=0: 1+4, c=1: 1+3, c=2: 1+2, c=3: 1+1 = 14
+        assert_eq!(rls.ops_per_update(), 14);
+    }
+
+    #[test]
+    fn prediction_error_shrinks() {
+        let h = [0.5, 0.3, -0.2];
+        let mut rls = QrdRls::new(cfg(), 3, 1.0, 1e-4);
+        let mut rng = Rng::new(9);
+        let mut xbuf = [0.0f64; 3];
+        let mut early_err = 0.0;
+        let mut late_err = 0.0;
+        for t in 0..200 {
+            xbuf.rotate_right(1);
+            xbuf[0] = rng.range(-1.0, 1.0);
+            let d: f64 = h.iter().zip(&xbuf).map(|(a, b)| a * b).sum();
+            let e = (rls.predict(&xbuf) - d).abs();
+            if t < 10 {
+                early_err += e;
+            } else if t >= 190 {
+                late_err += e;
+            }
+            rls.update(&xbuf, d);
+        }
+        assert!(late_err < early_err * 0.1 + 1e-9, "early {early_err} late {late_err}");
+    }
+}

@@ -1,0 +1,90 @@
+//! Givens triangularization schedule.
+//!
+//! Column-major elimination: column c is cleared below the diagonal by
+//! rotating each lower row against the pivot row c. This is the
+//! dependency order the pipeline architecture of ref [20] implements
+//! with interleaved matrices; functionally any topological order of
+//! these steps yields the same R (up to rounding).
+
+/// One Givens rotation in the schedule: vector on column `col` of rows
+/// (`pivot_row`, `zero_row`), zeroing `(zero_row, col)`, then rotate the
+/// remaining pairs of the two rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RotationStep {
+    /// Row providing the surviving (modulus) element — the diagonal row.
+    pub pivot_row: usize,
+    /// Row whose `col` element is annihilated.
+    pub zero_row: usize,
+    /// Column being cleared.
+    pub col: usize,
+}
+
+/// The full schedule for an m×m decomposition: m(m−1)/2 rotations.
+pub fn schedule(m: usize) -> Vec<RotationStep> {
+    let mut steps = Vec::with_capacity(m * (m - 1) / 2);
+    for col in 0..m.saturating_sub(1) {
+        for zero_row in (col + 1)..m {
+            steps.push(RotationStep { pivot_row: col, zero_row, col });
+        }
+    }
+    steps
+}
+
+/// Number of rotations for an m×m decomposition.
+pub fn rotation_count(m: usize) -> usize {
+    m * (m - 1) / 2
+}
+
+/// Total element-pair operations (vectoring + rotations) for an m×m
+/// decomposition with Q accumulation: each rotation touches e = 2m
+/// pairs, minus the pairs left of the cleared column.
+pub fn pair_op_count(m: usize) -> usize {
+    schedule(m).iter().map(|s| 2 * m - s.col).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        assert_eq!(rotation_count(4), 6);
+        assert_eq!(schedule(4).len(), 6);
+        assert_eq!(rotation_count(7), 21);
+    }
+
+    #[test]
+    fn each_subdiagonal_element_zeroed_exactly_once() {
+        let m = 6;
+        let mut seen = std::collections::HashSet::new();
+        for s in schedule(m) {
+            assert!(s.col < s.zero_row, "only subdiagonal targets");
+            assert_eq!(s.pivot_row, s.col, "pivot on the diagonal row");
+            assert!(seen.insert((s.zero_row, s.col)), "duplicate step");
+        }
+        assert_eq!(seen.len(), m * (m - 1) / 2);
+    }
+
+    #[test]
+    fn dependency_order_is_respected() {
+        // a column is only cleared after all earlier columns: pivot row c
+        // must already have zeros in columns < c when used.
+        let mut cleared = std::collections::HashSet::new();
+        for s in schedule(5) {
+            for c in 0..s.col {
+                assert!(
+                    cleared.contains(&(s.pivot_row.max(c + 1), c)) || s.pivot_row <= c,
+                    "pivot row {} used before column {c} cleared",
+                    s.pivot_row
+                );
+            }
+            cleared.insert((s.zero_row, s.col));
+        }
+    }
+
+    #[test]
+    fn pair_ops_4x4() {
+        // col 0: 3 rotations × 8 pairs; col 1: 2 × 7; col 2: 1 × 6 = 44
+        assert_eq!(pair_op_count(4), 3 * 8 + 2 * 7 + 6);
+    }
+}

@@ -1,0 +1,183 @@
+//! Linear solvers on top of the QRD engine: back-substitution,
+//! least-squares, matrix inversion — what downstream users (MIMO
+//! detection, RLS, Kalman filtering — the paper's §1 applications)
+//! actually call the decomposition for.
+
+use super::{QrdEngine, QrdResult};
+
+/// Solve the upper-triangular system R·x = b by back-substitution
+/// (double precision — the unit produced R; the solve is host-side).
+pub fn back_substitute(r: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    let m = b.len();
+    let mut x = vec![0.0; m];
+    for i in (0..m).rev() {
+        let mut acc = b[i];
+        for j in (i + 1)..m {
+            acc -= r[i][j] * x[j];
+        }
+        x[i] = if r[i][i] != 0.0 { acc / r[i][i] } else { 0.0 };
+    }
+    x
+}
+
+impl QrdResult {
+    /// Solve A·x = b using this decomposition: x = R⁻¹·(G·b)
+    /// (G = Qᵀ was accumulated by the rotations).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let m = b.len();
+        assert_eq!(self.qt.len(), m);
+        let gb: Vec<f64> =
+            (0..m).map(|i| (0..m).map(|k| self.qt[i][k] * b[k]).sum()).collect();
+        back_substitute(&self.r, &gb)
+    }
+
+    /// Invert A column by column (A⁻¹ = R⁻¹·G).
+    pub fn inverse(&self) -> Vec<Vec<f64>> {
+        let m = self.r.len();
+        let mut inv = vec![vec![0.0; m]; m];
+        for c in 0..m {
+            let col: Vec<f64> = (0..m).map(|i| self.qt[i][c]).collect();
+            let x = back_substitute(&self.r, &col);
+            for i in 0..m {
+                inv[i][c] = x[i];
+            }
+        }
+        inv
+    }
+}
+
+impl QrdEngine {
+    /// Solve the square system A·x = b through the rotation unit.
+    pub fn solve(&self, a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+        self.decompose(a).solve(b)
+    }
+
+    /// Least-squares solve of an overdetermined system (rows ≥ cols):
+    /// min ‖A·x − b‖₂. The rows of `[A | b]` are triangularized with
+    /// Givens rotations (the rotator never needs Q explicitly — the
+    /// right-hand side rides along as an extra column, the classic
+    /// QRD-LS formulation the systolic arrays of refs [14][17] use).
+    pub fn least_squares(&self, a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+        let rows = a.len();
+        let cols = a[0].len();
+        assert!(rows >= cols, "need an overdetermined/square system");
+        assert_eq!(b.len(), rows);
+        // augmented rows [A | b] in the unit's format
+        let mut work: Vec<Vec<crate::rotator::Val>> = a
+            .iter()
+            .zip(b)
+            .map(|(row, &bi)| {
+                let mut v: Vec<crate::rotator::Val> =
+                    row.iter().map(|&x| self.rot.encode(x)).collect();
+                v.push(self.rot.encode(bi));
+                v
+            })
+            .collect();
+        // zero column c of every row below the diagonal
+        for c in 0..cols {
+            for zr in (c + 1)..rows {
+                let (newx, _y, ang) = self.rot.vector(work[c][c], work[zr][c]);
+                work[c][c] = newx;
+                work[zr][c] = self.rot.zero();
+                for k in (c + 1)..=cols {
+                    let (xr, yr) = self.rot.rotate(work[c][k], work[zr][k], &ang);
+                    work[c][k] = xr;
+                    work[zr][k] = yr;
+                }
+            }
+        }
+        let fmt = self.rot.cfg.fmt;
+        let r: Vec<Vec<f64>> = (0..cols)
+            .map(|i| (0..cols).map(|j| work[i][j].to_f64(fmt)).collect())
+            .collect();
+        let rhs: Vec<f64> = (0..cols).map(|i| work[i][cols].to_f64(fmt)).collect();
+        back_substitute(&r, &rhs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::FpFormat;
+    use crate::rotator::RotatorConfig;
+
+    fn engine() -> QrdEngine {
+        QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24))
+    }
+
+    #[test]
+    fn solves_square_system() {
+        let a = vec![
+            vec![4.0, 1.0, 0.0, 0.5],
+            vec![1.0, 3.0, -1.0, 0.0],
+            vec![0.0, -1.0, 2.0, 0.3],
+            vec![0.5, 0.0, 0.3, 1.5],
+        ];
+        let x_true = [1.0, -2.0, 0.5, 3.0];
+        let b: Vec<f64> =
+            (0..4).map(|i| (0..4).map(|j| a[i][j] * x_true[j]).sum()).collect();
+        let x = engine().solve(&a, &b);
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let a = vec![
+            vec![2.0, 0.5, -1.0],
+            vec![0.5, 3.0, 0.2],
+            vec![-1.0, 0.2, 1.8],
+        ];
+        let inv = engine().decompose(&a).inverse();
+        for i in 0..3 {
+            for j in 0..3 {
+                let dot: f64 = (0..3).map(|k| inv[i][k] * a[k][j]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({i},{j}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn least_squares_overdetermined() {
+        // fit y = 2 + 3t with 8 noisy-free samples (exact recovery)
+        let ts: Vec<f64> = (0..8).map(|t| t as f64 * 0.25).collect();
+        let a: Vec<Vec<f64>> = ts.iter().map(|&t| vec![1.0, t]).collect();
+        let b: Vec<f64> = ts.iter().map(|&t| 2.0 + 3.0 * t).collect();
+        let x = engine().least_squares(&a, &b);
+        assert!((x[0] - 2.0).abs() < 1e-4, "{:?}", x);
+        assert!((x[1] - 3.0).abs() < 1e-4, "{:?}", x);
+    }
+
+    #[test]
+    fn least_squares_minimizes_residual() {
+        // inconsistent system: compare residual against the normal-
+        // equations solution in f64
+        let a = vec![
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ];
+        let b = vec![0.9, 2.1, 2.9, 4.2];
+        let x = engine().least_squares(&a, &b);
+        // normal equations (2x2) solved exactly
+        let (s00, s01, s11) = (4.0, 6.0, 14.0);
+        let (t0, t1) = (
+            b.iter().sum::<f64>(),
+            a.iter().zip(&b).map(|(r, &bi)| r[1] * bi).sum::<f64>(),
+        );
+        let det = s00 * s11 - s01 * s01;
+        let want = [(s11 * t0 - s01 * t1) / det, (s00 * t1 - s01 * t0) / det];
+        assert!((x[0] - want[0]).abs() < 1e-3, "{x:?} vs {want:?}");
+        assert!((x[1] - want[1]).abs() < 1e-3, "{x:?} vs {want:?}");
+    }
+
+    #[test]
+    fn back_substitute_handles_zero_diagonal() {
+        let r = vec![vec![1.0, 1.0], vec![0.0, 0.0]];
+        let x = back_substitute(&r, &[2.0, 0.0]);
+        assert_eq!(x, vec![2.0, 0.0]); // rank-deficient: free var = 0
+    }
+}

@@ -1,0 +1,54 @@
+//! PJRT runtime: load and execute the AOT-compiled L2 artifacts.
+//!
+//! `make artifacts` lowers the JAX QRD model once to HLO text
+//! (`artifacts/model.hlo.txt`); this module compiles it on the PJRT CPU
+//! client and executes it from the Rust hot path. Python never runs at
+//! request time.
+
+use anyhow::{Context, Result};
+
+/// A compiled QRD executable with a fixed batch size.
+pub struct PjrtQrd {
+    exe: xla::PjRtLoadedExecutable,
+    /// Batch size the artifact was lowered for.
+    pub batch: usize,
+    /// Matrix dimension m (artifact computes m×2m outputs).
+    pub m: usize,
+}
+
+impl PjrtQrd {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    pub fn load(path: &str, batch: usize, m: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile artifact")?;
+        Ok(PjrtQrd { exe, batch, m })
+    }
+
+    /// Execute one full batch: `a` is `batch·m·m` f32 values (row major,
+    /// bit patterns interpreted as HUB FP); returns `batch·m·2m` f32.
+    pub fn execute(&self, a: &[f32]) -> Result<Vec<f32>> {
+        let (b, m) = (self.batch, self.m);
+        anyhow::ensure!(a.len() == b * m * m, "expected {} values, got {}", b * m * m, a.len());
+        let lit = xla::Literal::vec1(a).reshape(&[b as i64, m as i64, m as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // lowered with return_tuple=True ⇒ 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute a possibly short batch by zero-padding to the artifact's
+    /// fixed batch size. Returns exactly `n` outputs of m·2m values.
+    pub fn execute_padded(&self, matrices: &[f32], n: usize) -> Result<Vec<f32>> {
+        let per_in = self.m * self.m;
+        let per_out = self.m * 2 * self.m;
+        anyhow::ensure!(n <= self.batch, "batch overflow: {n} > {}", self.batch);
+        anyhow::ensure!(matrices.len() == n * per_in);
+        let mut padded = vec![0f32; self.batch * per_in];
+        padded[..matrices.len()].copy_from_slice(matrices);
+        let out = self.execute(&padded)?;
+        Ok(out[..n * per_out].to_vec())
+    }
+}

@@ -1,0 +1,104 @@
+//! Micro-benchmark timing harness (offline stand-in for criterion):
+//! warmup, repeated timed passes, median/mean/min reporting.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Per-iteration wall time, nanoseconds (median over passes).
+    pub ns_per_iter: f64,
+    /// Minimum observed per-iteration time.
+    pub min_ns: f64,
+    /// Iterations per pass used.
+    pub iters: u64,
+    /// Optional throughput items per iteration (elements, matrices…).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    /// items/s implied by the median time.
+    pub fn items_per_sec(&self) -> f64 {
+        self.items_per_iter / (self.ns_per_iter * 1e-9)
+    }
+
+    /// One-line report.
+    pub fn report(&self) -> String {
+        if self.items_per_iter > 0.0 {
+            format!(
+                "{:<44} {:>12.1} ns/iter  {:>14.0} items/s  (min {:>10.1} ns)",
+                self.name,
+                self.ns_per_iter,
+                self.items_per_sec(),
+                self.min_ns
+            )
+        } else {
+            format!(
+                "{:<44} {:>12.1} ns/iter  (min {:>10.1} ns)",
+                self.name, self.ns_per_iter, self.min_ns
+            )
+        }
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to ~50 ms per pass, 9 passes.
+/// `items` is the number of logical items `f` processes per call.
+pub fn bench<F: FnMut()>(name: &str, items: f64, mut f: F) -> BenchResult {
+    // calibrate
+    let mut iters = 1u64;
+    loop {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t.elapsed();
+        if dt.as_millis() >= 20 || iters >= 1 << 30 {
+            let target = 5e7; // 50 ms
+            let per = dt.as_nanos() as f64 / iters as f64;
+            iters = ((target / per).max(1.0)) as u64;
+            break;
+        }
+        iters *= 4;
+    }
+    let passes = 9;
+    let mut samples = Vec::with_capacity(passes);
+    for _ in 0..passes {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let res = BenchResult {
+        name: name.to_string(),
+        ns_per_iter: samples[passes / 2],
+        min_ns: samples[0],
+        iters,
+        items_per_iter: items,
+    };
+    println!("{}", res.report());
+    res
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_sane_numbers() {
+        let r = bench("noop-ish", 1.0, || {
+            black_box(12345u64.wrapping_mul(678));
+        });
+        assert!(r.ns_per_iter > 0.0 && r.ns_per_iter < 1e6);
+        assert!(r.min_ns <= r.ns_per_iter);
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal `--flag value` CLI parser (offline stand-in for clap).
+
+use std::collections::HashMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value`
+/// (or `--key=value`) flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub cmd: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    /// Parse from any iterator of tokens.
+    pub fn from_iter<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is the next token unless it's another flag
+                    let val = match it.peek() {
+                        Some(n) if !n.starts_with("--") => it.next().unwrap(),
+                        _ => "true".to_string(),
+                    };
+                    out.flags.insert(stripped.to_string(), val);
+                }
+            } else if out.cmd.is_none() {
+                out.cmd = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed numeric/bool flag with default.
+    pub fn get_as<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.flags.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Is a flag present (e.g. `--verbose`)?
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("exp fig8 --nmat 500 --seed=7 --verbose");
+        assert_eq!(a.cmd.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig8"]);
+        assert_eq!(a.get_as("nmat", 0usize), 500);
+        assert_eq!(a.get_as("seed", 0u64), 7);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("report");
+        assert_eq!(a.get_as("nmat", 10_000usize), 10_000);
+        assert_eq!(a.get("engine", "native"), "native");
+    }
+}

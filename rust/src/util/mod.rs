@@ -1,0 +1,12 @@
+//! In-tree substrates: deterministic RNG, data-parallel map, micro-bench
+//! timing, property-test driver and CLI flag parsing.
+//!
+//! The build is fully offline (no crates.io beyond the vendored PJRT
+//! bindings), so the usual ecosystem crates (rand, rayon, criterion,
+//! proptest, clap) are replaced by these small, tested equivalents.
+
+pub mod bench;
+pub mod cli;
+pub mod par;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,94 @@
+//! Minimal data-parallel helpers over `std::thread::scope` (the offline
+//! stand-in for rayon). Work is split into contiguous chunks, one per
+//! hardware thread; results keep input order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use.
+pub fn threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel indexed map: `f(i)` for i in 0..n, results in order.
+/// `f` must be Sync; work is distributed dynamically in small blocks so
+/// uneven per-item cost (e.g. different configs) balances out.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let nt = threads().min(n);
+    if nt <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out = vec![T::default(); n];
+    let cursor = AtomicUsize::new(0);
+    let block = (n / (nt * 8)).max(1);
+    // hand out disjoint &mut chunks via raw parts — each index written once
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    std::thread::scope(|s| {
+        for _ in 0..nt {
+            let f = &f;
+            let cursor = &cursor;
+            let out_ptr = &out_ptr;
+            s.spawn(move || loop {
+                let start = cursor.fetch_add(block, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + block).min(n);
+                for i in start..end {
+                    // SAFETY: each i is claimed exactly once by exactly
+                    // one thread via the atomic cursor; the Vec outlives
+                    // the scope.
+                    unsafe { *out_ptr.0.add(i) = f(i) };
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Parallel sum of `f(i)` over 0..n.
+pub fn par_sum<F>(n: usize, f: F) -> f64
+where
+    F: Fn(usize) -> f64 + Sync,
+{
+    par_map(n, f).iter().sum()
+}
+
+struct SendPtr<T>(*mut T);
+// SAFETY: the pointer is only used to write disjoint indices inside a
+// scoped-thread region that the owning Vec outlives.
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let v = par_map(1000, |i| i * 2);
+        assert_eq!(v.len(), 1000);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * 2);
+        }
+    }
+
+    #[test]
+    fn sum_matches_serial() {
+        let p = par_sum(10_000, |i| (i as f64).sqrt());
+        let s: f64 = (0..10_000).map(|i| (i as f64).sqrt()).sum();
+        assert!((p - s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(par_map(0, |i| i).is_empty());
+        assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+}

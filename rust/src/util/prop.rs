@@ -1,0 +1,56 @@
+//! Tiny property-testing driver (offline stand-in for proptest):
+//! runs a property over many seeded random cases and reports the
+//! failing seed so cases are reproducible.
+
+use super::rng::Rng;
+
+/// Number of cases per property (override with env `PROP_CASES`).
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(512)
+}
+
+/// Run `prop(rng)` for `cases()` seeded RNGs; panic with the seed on the
+/// first failure (property returns false or panics).
+pub fn check<F: Fn(&mut Rng) -> bool>(name: &str, prop: F) {
+    for case in 0..cases() {
+        let seed = 0xC0FF_EE00 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if !prop(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x})");
+        }
+    }
+}
+
+/// Like [`check`] but the property asserts internally (panics on
+/// failure); this wrapper adds the seed context.
+pub fn check_panics<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(name: &str, prop: F) {
+    for case in 0..cases() {
+        let seed = 0xC0FF_EE00 ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn passing_property_passes() {
+        super::check("tautology", |rng| rng.f64() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "always-false")]
+    fn failing_property_reports_seed() {
+        super::check("always-false", |_rng| false);
+    }
+}

@@ -1,0 +1,101 @@
+//! Coordinator property tests: no request lost, order preserved,
+//! responses correct under concurrent clients, batch-size caps hold.
+
+use fp_givens::coordinator::{BatchPolicy, NativeEngine, QrdService};
+use fp_givens::util::prop;
+use fp_givens::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_matrix(rng: &mut Rng) -> [u32; 16] {
+    let scale = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+    std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
+}
+
+#[test]
+fn prop_every_request_gets_its_own_answer() {
+    // run fewer, bigger cases (each spins a service)
+    std::env::set_var("PROP_CASES", "24");
+    prop::check("request/response pairing", |rng| {
+        let n = 1 + rng.below(40) as usize;
+        let max_batch = 1 + rng.below(16) as usize;
+        let svc = QrdService::start(
+            || Box::new(NativeEngine::flagship()),
+            BatchPolicy { max_batch, max_wait_us: rng.below(300) },
+        );
+        let eng = NativeEngine::flagship();
+        let mats: Vec<[u32; 16]> = (0..n).map(|_| random_matrix(rng)).collect();
+        let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+        let ok = rxs
+            .into_iter()
+            .zip(&mats)
+            .all(|(rx, m)| rx.recv().map(|r| r.out == eng.qrd_bits(m)).unwrap_or(false));
+        let count_ok = svc.metrics().requests() == n as u64;
+        svc.shutdown();
+        ok && count_ok
+    });
+    std::env::remove_var("PROP_CASES");
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let svc = Arc::new(QrdService::start(
+        || Box::new(NativeEngine::flagship()),
+        BatchPolicy { max_batch: 32, max_wait_us: 100 },
+    ));
+    let clients = 8;
+    let per_client = 100;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let eng = NativeEngine::flagship();
+            let mut rng = Rng::new(c as u64 * 17 + 1);
+            for _ in 0..per_client {
+                let m = random_matrix(&mut rng);
+                let rx = svc.submit(m);
+                let resp = rx.recv().expect("response");
+                assert_eq!(resp.out, eng.qrd_bits(&m), "client {c}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = svc.metrics();
+    assert_eq!(m.requests(), (clients * per_client) as u64);
+    // batching actually happened under concurrency
+    assert!(m.mean_batch() >= 1.0);
+    assert!(m.batches() <= (clients * per_client) as u64);
+}
+
+#[test]
+fn backpressure_does_not_deadlock() {
+    // tiny queue + slow consumer pattern: submit from one thread while
+    // another drains; must complete
+    let svc = Arc::new(QrdService::start(
+        || Box::new(NativeEngine::flagship()),
+        BatchPolicy { max_batch: 2, max_wait_us: 50 },
+    ));
+    let svc2 = svc.clone();
+    let producer = std::thread::spawn(move || {
+        let mut rng = Rng::new(3);
+        let rxs: Vec<_> = (0..200).map(|_| svc2.submit(random_matrix(&mut rng))).collect();
+        rxs.into_iter().map(|rx| rx.recv().unwrap()).count()
+    });
+    assert_eq!(producer.join().unwrap(), 200);
+}
+
+#[test]
+fn latency_is_measured_and_reasonable() {
+    let svc = QrdService::start(
+        || Box::new(NativeEngine::flagship()),
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+    );
+    let mut rng = Rng::new(9);
+    for _ in 0..20 {
+        let rx = svc.submit(random_matrix(&mut rng));
+        let resp = rx.recv().unwrap();
+        assert!(resp.latency_us > 0.0 && resp.latency_us < 1e6);
+    }
+    svc.shutdown();
+}

@@ -1,0 +1,57 @@
+//! Cross-language golden vectors: the L2 JAX model (python/compile)
+//! dumps input/output bit patterns at artifact-build time; the native
+//! Rust engine must reproduce every output word exactly. This is the
+//! proof that all three layers implement the same circuit bit-for-bit.
+
+use fp_givens::coordinator::NativeEngine;
+
+fn load_golden(path: &str) -> Option<Vec<([u32; 16], [u32; 32])>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut lines = text.lines();
+    let header = lines.next()?;
+    assert!(header.starts_with("nmat "), "bad golden header: {header}");
+    let mut cases = Vec::new();
+    let mut pending_in: Option<[u32; 16]> = None;
+    for line in lines {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("in") => {
+                let mut a = [0u32; 16];
+                for w in a.iter_mut() {
+                    *w = u32::from_str_radix(it.next().unwrap(), 16).unwrap();
+                }
+                pending_in = Some(a);
+            }
+            Some("out") => {
+                let mut o = [0u32; 32];
+                for w in o.iter_mut() {
+                    *w = u32::from_str_radix(it.next().unwrap(), 16).unwrap();
+                }
+                cases.push((pending_in.take().expect("out before in"), o));
+            }
+            _ => {}
+        }
+    }
+    Some(cases)
+}
+
+#[test]
+fn native_engine_matches_python_model_bit_for_bit() {
+    let Some(cases) = load_golden("artifacts/qrd4_golden.txt") else {
+        eprintln!("skipping: artifacts/qrd4_golden.txt not built (run `make artifacts`)");
+        return;
+    };
+    assert!(!cases.is_empty());
+    let eng = NativeEngine::flagship();
+    for (idx, (a, want)) in cases.iter().enumerate() {
+        let got = eng.qrd_bits(a);
+        for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(
+                g, w,
+                "matrix {idx}, word {j} (row {}, col {}): rust {g:#010x} vs python {w:#010x}",
+                j / 8,
+                j % 8
+            );
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Property test: the cycle-accurate pipeline simulator is bit-exact
+//! against the functional rotator on arbitrary well-formed op streams
+//! (vectoring followed by its rotations, matrices back-to-back, with
+//! random idle bubbles).
+
+use fp_givens::fp::FpFormat;
+use fp_givens::pipeline::{PairOp, PipelineSim};
+use fp_givens::rotator::{GivensRotator, RotatorConfig};
+use fp_givens::util::prop;
+use fp_givens::util::rng::Rng;
+
+fn random_stream(rot: &GivensRotator, rng: &mut Rng) -> Vec<PairOp> {
+    let rotations = 1 + rng.below(6) as usize;
+    let mut ops = Vec::new();
+    let mut id = 0u64;
+    for _ in 0..rotations {
+        let e = 1 + rng.below(9) as usize;
+        for k in 0..e {
+            let scale = 2f64.powf(rng.range(-8.0, 8.0));
+            ops.push(PairOp {
+                x: rot.encode(rng.range(-1.0, 1.0) * scale),
+                y: rot.encode(rng.range(-1.0, 1.0) * scale),
+                vectoring: k == 0,
+                id,
+            });
+            id += 1;
+        }
+    }
+    ops
+}
+
+fn functional_outputs(rot: &GivensRotator, ops: &[PairOp]) -> Vec<(u64, u64, u64)> {
+    let fmt = rot.cfg.fmt;
+    let mut angle = None;
+    ops.iter()
+        .map(|op| {
+            let (x, y) = if op.vectoring {
+                let (x, y, a) = rot.vector(op.x, op.y);
+                angle = Some(a);
+                (x, y)
+            } else {
+                rot.rotate(op.x, op.y, angle.as_ref().unwrap())
+            };
+            (op.id, x.to_bits(fmt), y.to_bits(fmt))
+        })
+        .collect()
+}
+
+fn check_config(cfg: RotatorConfig) {
+    let rot = GivensRotator::new(cfg);
+    prop::check(&format!("pipeline ≡ functional [{}]", cfg.label()), |rng| {
+        let ops = random_stream(&rot, rng);
+        let mut sim = PipelineSim::new(cfg);
+        // interleave random bubbles: feed ops with occasional idle ticks
+        let mut outs = Vec::new();
+        for op in &ops {
+            while rng.below(4) == 0 {
+                if let Some(o) = sim.tick(None) {
+                    outs.push(o);
+                }
+            }
+            if let Some(o) = sim.tick(Some(*op)) {
+                outs.push(o);
+            }
+        }
+        while outs.len() < ops.len() {
+            if let Some(o) = sim.tick(None) {
+                outs.push(o);
+            }
+        }
+        let fmt = cfg.fmt;
+        let want = functional_outputs(&rot, &ops);
+        outs.len() == want.len()
+            && outs
+                .iter()
+                .zip(&want)
+                .all(|(o, (id, xb, yb))| {
+                    o.id == *id && o.x.to_bits(fmt) == *xb && o.y.to_bits(fmt) == *yb
+                })
+    });
+}
+
+#[test]
+fn pipeline_matches_functional_hub_single() {
+    check_config(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+}
+
+#[test]
+fn pipeline_matches_functional_ieee_single() {
+    check_config(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+}
+
+#[test]
+fn pipeline_matches_functional_ieee_round_input() {
+    let mut cfg = RotatorConfig::ieee(FpFormat::SINGLE, 28, 25);
+    cfg.round_input = true;
+    check_config(cfg);
+}
+
+#[test]
+fn pipeline_matches_functional_hub_double() {
+    check_config(RotatorConfig::hub(FpFormat::DOUBLE, 54, 52));
+}
+
+#[test]
+fn pipeline_matches_functional_without_compensation() {
+    let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 25, 23);
+    cfg.compensate = false;
+    check_config(cfg);
+}
+
+#[test]
+fn pipeline_ii_equals_e_cycles() {
+    // a Givens rotation over rows of e pairs occupies exactly e cycles
+    // (paper Table 6's II = e×1)
+    let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+    let rot = GivensRotator::new(cfg);
+    let mut sim = PipelineSim::new(cfg);
+    let e = 8usize;
+    let matrices = 20usize;
+    let mut rng = Rng::new(5);
+    let mut n = 0u64;
+    for _ in 0..matrices {
+        for k in 0..e {
+            let op = PairOp {
+                x: rot.encode(rng.range(-1.0, 1.0)),
+                y: rot.encode(rng.range(-1.0, 1.0)),
+                vectoring: k == 0,
+                id: n,
+            };
+            sim.tick(Some(op));
+            n += 1;
+        }
+    }
+    // cycles consumed = matrices × e exactly (fully pipelined)
+    assert_eq!(sim.cycle, (matrices * e) as u64);
+}

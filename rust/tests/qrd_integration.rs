@@ -1,0 +1,145 @@
+//! Integration tests across the numeric stack: QRD correctness against
+//! double-precision references over many configurations, dynamic-range
+//! behaviour, and property tests on the unit's invariants.
+
+use fp_givens::analysis::{snr_db, MatrixGen};
+use fp_givens::fp::{Family, FpFormat};
+use fp_givens::qrd::{FixedQrdEngine, QrdEngine};
+use fp_givens::rotator::{GivensRotator, RotatorConfig};
+use fp_givens::util::prop;
+
+fn check_engine(cfg: RotatorConfig, m: usize, r: u32, min_snr: f64) {
+    let eng = QrdEngine::new(cfg);
+    let mut gen = MatrixGen::new(2024 + r as u64);
+    let mut worst = f64::INFINITY;
+    for _ in 0..25 {
+        let a = gen.matrix(m, r);
+        let b = eng.decompose(&a).reconstruct();
+        worst = worst.min(snr_db(&a, &b));
+    }
+    assert!(worst > min_snr, "{} m={m} r={r}: worst {worst:.1} dB", cfg.label());
+}
+
+#[test]
+fn all_single_precision_configs_reconstruct() {
+    for n in [25u32, 26, 28, 30] {
+        check_engine(
+            RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3),
+            4,
+            6,
+            100.0,
+        );
+        check_engine(RotatorConfig::hub(FpFormat::SINGLE, n, n - 2), 4, 6, 100.0);
+    }
+}
+
+#[test]
+fn half_precision_configs_reconstruct() {
+    check_engine(RotatorConfig::ieee(FpFormat::HALF, 14, 11), 4, 3, 35.0);
+    check_engine(RotatorConfig::hub(FpFormat::HALF, 13, 11), 4, 3, 35.0);
+}
+
+#[test]
+fn double_precision_configs_reconstruct() {
+    check_engine(RotatorConfig::ieee(FpFormat::DOUBLE, 55, 52), 4, 10, 150.0);
+    check_engine(RotatorConfig::hub(FpFormat::DOUBLE, 54, 52), 4, 10, 150.0);
+}
+
+#[test]
+fn matrix_sizes_up_to_8() {
+    for m in [2usize, 3, 5, 8] {
+        check_engine(RotatorConfig::hub(FpFormat::SINGLE, 26, 24), m, 4, 100.0);
+    }
+}
+
+#[test]
+fn extreme_dynamic_range_stays_stable() {
+    // the whole point of FP (paper §5.3): r = 35 still reconstructs
+    check_engine(RotatorConfig::hub(FpFormat::SINGLE, 26, 24), 4, 35, 100.0);
+    check_engine(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23), 4, 35, 95.0);
+}
+
+#[test]
+fn fixed_engine_dies_at_high_dynamic_range() {
+    // and the fixed-point baseline must NOT survive it (Fig. 11 slump)
+    let eng = FixedQrdEngine::new(32, 27, false);
+    let mut gen = MatrixGen::new(77);
+    let r = 30u32;
+    let s = 2f64.powi(-(r as i32) - 1);
+    let mut snrs = Vec::new();
+    for _ in 0..25 {
+        let a = gen.matrix(4, r);
+        let scaled: Vec<Vec<f64>> =
+            a.iter().map(|row| row.iter().map(|&x| x * s).collect()).collect();
+        let mut b = eng.decompose(&scaled).reconstruct();
+        for row in &mut b {
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+        snrs.push(snr_db(&a, &b));
+    }
+    let mean = snrs.iter().sum::<f64>() / snrs.len() as f64;
+    assert!(mean < 80.0, "fixed-point should have slumped: {mean:.1} dB");
+}
+
+#[test]
+fn prop_rotation_preserves_norm_within_unit_error() {
+    let rot = GivensRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+    prop::check("norm preservation", |rng| {
+        let scale = 2f64.powf(rng.range(-20.0, 20.0));
+        let (x, y) = (rng.range(-1.0, 1.0) * scale, rng.range(-1.0, 1.0) * scale);
+        let (px, py) = (rng.range(-1.0, 1.0) * scale, rng.range(-1.0, 1.0) * scale);
+        let (_, _, ang) = rot.vector(rot.encode(x), rot.encode(y));
+        let (rx, ry) = rot.rotate(rot.encode(px), rot.encode(py), &ang);
+        let fmt = FpFormat::SINGLE;
+        let before = (px * px + py * py).sqrt();
+        let after = {
+            let (a, b) = (rx.to_f64(fmt), ry.to_f64(fmt));
+            (a * a + b * b).sqrt()
+        };
+        // compensated rotation is an isometry up to a few ulps
+        (after - before).abs() <= before * 1e-5 + scale * 1e-6
+    });
+}
+
+#[test]
+fn prop_vectoring_residual_bounded() {
+    let rot = GivensRotator::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+    prop::check("vectoring residual", |rng| {
+        let scale = 2f64.powf(rng.range(-30.0, 30.0));
+        let (x, y) = (rng.range(-1.0, 1.0) * scale, rng.range(-1.0, 1.0) * scale);
+        let (vx, vy, _) = rot.vector(rot.encode(x), rot.encode(y));
+        let fmt = FpFormat::SINGLE;
+        let modulus = (x * x + y * y).sqrt();
+        let ok_mod = (vx.to_f64(fmt) - modulus).abs() <= modulus * 1e-5 + scale * 1e-6;
+        let ok_res = vy.to_f64(fmt).abs() <= modulus * 1e-5 + scale * 1e-6;
+        ok_mod && ok_res
+    });
+}
+
+#[test]
+fn prop_angle_replay_is_consistent() {
+    // rotating the vectoring inputs reproduces the vectoring outputs
+    let rot = GivensRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+    prop::check("replay consistency", |rng| {
+        let scale = 2f64.powf(rng.range(-10.0, 10.0));
+        let x = rot.encode(rng.range(-1.0, 1.0) * scale);
+        let y = rot.encode(rng.range(-1.0, 1.0) * scale);
+        let (vx, vy, ang) = rot.vector(x, y);
+        let (rx, ry) = rot.rotate(x, y, &ang);
+        (vx, vy) == (rx, ry)
+    });
+}
+
+#[test]
+fn prop_qrd_reconstruction_snr_floor() {
+    let eng = QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+    prop::check("qrd snr floor", |rng| {
+        let r = 1 + (rng.below(20) as u32);
+        let mut gen = MatrixGen::new(rng.next_u64());
+        let a = gen.matrix(4, r);
+        let b = eng.decompose(&a).reconstruct();
+        snr_db(&a, &b) > 100.0
+    });
+}

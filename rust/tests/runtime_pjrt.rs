@@ -1,0 +1,61 @@
+//! End-to-end PJRT integration: load the AOT artifact, execute a batch
+//! on the PJRT CPU client, and compare every output word against the
+//! native Rust engine — the artifact and the native path must be
+//! bit-identical.
+
+use fp_givens::coordinator::{BatchEngine, NativeEngine, PjrtEngine};
+use fp_givens::util::rng::Rng;
+
+const ARTIFACT: &str = "artifacts/model.hlo.txt";
+
+fn random_mats(n: usize, seed: u64) -> Vec<[u32; 16]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let scale = 2f32.powf(rng.range(-5.0, 5.0) as f32);
+            std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
+        })
+        .collect()
+}
+
+#[test]
+fn pjrt_artifact_matches_native_engine_bit_for_bit() {
+    if !std::path::Path::new(ARTIFACT).exists() {
+        eprintln!("skipping: {ARTIFACT} not built (run `make artifacts`)");
+        return;
+    }
+    let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("load artifact");
+    let native = NativeEngine::flagship();
+    let mats = random_mats(64, 99);
+    let got = pjrt.run(&mats);
+    let want = native.run(&mats);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g, w, "matrix {i} differs between PJRT and native");
+    }
+}
+
+#[test]
+fn pjrt_short_batches_pad_correctly() {
+    if !std::path::Path::new(ARTIFACT).exists() {
+        eprintln!("skipping: {ARTIFACT} not built");
+        return;
+    }
+    let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("load artifact");
+    let native = NativeEngine::flagship();
+    for n in [1usize, 7, 255] {
+        let mats = random_mats(n, n as u64);
+        let got = pjrt.run(&mats);
+        assert_eq!(got.len(), n);
+        let want = native.run(&mats);
+        assert_eq!(got, want, "batch size {n}");
+    }
+}
+
+#[test]
+fn pjrt_serve_path_smoke() {
+    if !std::path::Path::new(ARTIFACT).exists() {
+        eprintln!("skipping: {ARTIFACT} not built");
+        return;
+    }
+    fp_givens::coordinator::serve_synthetic("pjrt", 600, 64, ARTIFACT).expect("serve");
+}
