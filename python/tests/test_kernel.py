@@ -4,6 +4,10 @@ hypothesis sweeping shapes and configurations."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not available in the offline image"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import cordic, ref

@@ -3,6 +3,10 @@ schedule properties, golden self-consistency."""
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not available in the offline image"
+)
 from hypothesis import given, settings, strategies as st
 
 from compile import model

@@ -33,6 +33,22 @@ fn main() {
         svc.shutdown();
     }
 
+    // data-parallel batch execution inside the worker (--threads knob)
+    for threads in [1usize, 0] {
+        let svc = QrdService::start(
+            move || Box::new(NativeEngine::flagship().with_threads(threads)),
+            BatchPolicy { max_batch: 256, max_wait_us: 100 },
+        );
+        let label = if threads == 0 { "auto".to_string() } else { threads.to_string() };
+        bench(&format!("service round-trip x256 [native, batch=256, threads={label}]"), 256.0, || {
+            let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+        });
+        svc.shutdown();
+    }
+
     // raw PJRT batch execution (L2 artifact cost per matrix)
     if std::path::Path::new(ARTIFACT).exists() {
         let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("artifact");

@@ -1,16 +1,20 @@
 //! QRD engine benchmarks: matrices/second through the native engines
-//! (the Monte-Carlo hot path) and SNR-harness point cost.
+//! (the Monte-Carlo hot path) and SNR-harness point cost. Emits
+//! `BENCH_qrd.json` (name, ns/iter, items/s) so the perf trajectory is
+//! machine-readable PR over PR.
 
 use fp_givens::analysis::{run_mc, EngineSpec};
-use fp_givens::coordinator::NativeEngine;
+use fp_givens::coordinator::{BatchEngine, NativeEngine};
 use fp_givens::fp::FpFormat;
 use fp_givens::qrd::{FixedQrdEngine, QrdEngine};
 use fp_givens::rotator::RotatorConfig;
-use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::bench::{bench, black_box, write_json, BenchResult};
+use fp_givens::util::par;
 use fp_givens::util::rng::Rng;
 
 fn main() {
     println!("== qrd engine benches ==");
+    let mut results: Vec<BenchResult> = Vec::new();
     let mut rng = Rng::new(2);
     let mats: Vec<Vec<Vec<f64>>> = (0..32)
         .map(|_| (0..4).map(|_| (0..4).map(|_| rng.range(-2.0, 2.0)).collect()).collect())
@@ -21,11 +25,20 @@ fn main() {
         RotatorConfig::ieee(FpFormat::SINGLE, 26, 23),
     ] {
         let eng = QrdEngine::new(cfg);
-        bench(&format!("qrd4 decompose [{}]", cfg.label()), 32.0, || {
+        results.push(bench(&format!("qrd4 decompose [{}]", cfg.label()), 32.0, || {
             for a in &mats {
                 black_box(eng.decompose(a));
             }
-        });
+        }));
+        results.push(bench(
+            &format!("qrd4 decompose reference [{}]", cfg.label()),
+            32.0,
+            || {
+                for a in &mats {
+                    black_box(eng.decompose_reference(a));
+                }
+            },
+        ));
     }
 
     let eng = FixedQrdEngine::new(32, 27, false);
@@ -33,33 +46,60 @@ fn main() {
         .iter()
         .map(|a| a.iter().map(|r| r.iter().map(|&x| x * 0.2).collect()).collect())
         .collect();
-    bench("qrd4 decompose [FixP 32/27]", 32.0, || {
+    results.push(bench("qrd4 decompose [FixP 32/27]", 32.0, || {
         for a in &scaled {
             black_box(eng.decompose(a));
         }
-    });
+    }));
 
-    // bit-level path (the serving hot path)
+    // bit-level path (the serving hot path): flat-workspace fast path
+    // vs the pre-refactor reference path
     let native = NativeEngine::flagship();
     let bit_mats: Vec<[u32; 16]> = (0..32)
         .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
         .collect();
-    bench("qrd4 bit path [native flagship]", 32.0, || {
+    results.push(bench("qrd4 bit path [native flagship]", 32.0, || {
         for a in &bit_mats {
             black_box(native.qrd_bits(a));
         }
-    });
+    }));
+    results.push(bench("qrd4 bit path reference [native flagship]", 32.0, || {
+        for a in &bit_mats {
+            black_box(native.qrd_bits_reference(a));
+        }
+    }));
+
+    // batch throughput scaling across cores (matrices are independent)
+    let big_batch: Vec<[u32; 16]> = (0..1024)
+        .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
+        .collect();
+    let cores = par::threads();
+    for nt in [1usize, 2, cores].into_iter().collect::<std::collections::BTreeSet<_>>() {
+        let eng = NativeEngine::flagship().with_threads(nt);
+        results.push(bench(
+            &format!("qrd4 batch x1024 [native, threads={nt}]"),
+            1024.0,
+            || {
+                black_box(eng.run(&big_batch));
+            },
+        ));
+    }
 
     // one Monte-Carlo point (what fig8/9/10 sweeps pay per cell)
     let spec = EngineSpec::Fp(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
-    bench("MC point: 200 matrices @ r=10", 200.0, || {
+    results.push(bench("MC point: 200 matrices @ r=10", 200.0, || {
         black_box(run_mc(spec, 4, 10, 200, 42));
-    });
+    }));
 
     // larger matrices
     let eng7 = QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
     let m7: Vec<Vec<f64>> = (0..7).map(|_| (0..7).map(|_| rng.range(-1.0, 1.0)).collect()).collect();
-    bench("qrd7 decompose [hub single]", 1.0, || {
+    results.push(bench("qrd7 decompose [hub single]", 1.0, || {
         black_box(eng7.decompose(&m7));
-    });
+    }));
+
+    match write_json("BENCH_qrd.json", &results) {
+        Ok(()) => println!("\nwrote BENCH_qrd.json ({} entries)", results.len()),
+        Err(e) => eprintln!("\ncould not write BENCH_qrd.json: {e}"),
+    }
 }

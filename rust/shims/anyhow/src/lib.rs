@@ -1,0 +1,164 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The repo builds with no crates.io access, so the tiny subset of
+//! `anyhow` the codebase actually uses is reproduced here with the same
+//! names and semantics: a type-erased [`Error`], the [`Result`] alias,
+//! the [`anyhow!`]/[`bail!`]/[`ensure!`] macros and the [`Context`]
+//! extension trait. Swapping back to the real crate is a one-line
+//! `Cargo.toml` change; no call sites would move.
+
+use std::fmt;
+
+/// Type-erased error: a message plus the chain of added contexts.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn push_context<C: fmt::Display>(mut self, c: C) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // outermost context first, like anyhow's report rendering
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+// Mirrors anyhow: any std error converts via `?`. `Error` itself does
+// NOT implement `std::error::Error`, which is what makes this blanket
+// impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Err` defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// Context-attachment extension for `Result`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().push_context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn might_fail(fail: bool) -> Result<u32> {
+        ensure!(!fail, "failed with {}", 42);
+        Ok(7)
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(might_fail(false).unwrap(), 7);
+        let e = might_fail(true).unwrap_err();
+        assert_eq!(e.to_string(), "failed with 42");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("mid").context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: mid: inner");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).with_context(|| "never built").unwrap(), 3);
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn check(x: u32) -> Result<()> {
+            ensure!(x < 10);
+            Ok(())
+        }
+        assert!(check(3).is_ok());
+        assert!(check(30).unwrap_err().to_string().contains("x < 10"));
+    }
+}

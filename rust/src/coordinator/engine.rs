@@ -1,8 +1,9 @@
 //! Batch execution engines behind the coordinator.
 
-use crate::fp::{FpFormat, HubFp};
-use crate::qrd::QrdEngine;
-use crate::rotator::{RotatorConfig, Val};
+use crate::fp::{Family, Fp, FpFormat, HubFp};
+use crate::qrd::{triangularize_ws, workspace, FastQrd, QrdEngine, QrdWorkspace};
+use crate::rotator::{FamilyOps, RotatorConfig, Val};
+use crate::util::par;
 
 /// A backend that decomposes batches of 4×4 matrices given as HUB FP
 /// bit patterns (16 words in, 32 words out: `[R | G]`).
@@ -20,23 +21,57 @@ pub trait BatchEngine {
 pub struct NativeEngine {
     /// The underlying QRD engine (public for tests/examples).
     pub eng: QrdEngine,
+    /// Worker threads for batch execution (1 = serial). Matrices are
+    /// independent, so batches scale near-linearly across cores.
+    pub threads: usize,
 }
 
 impl NativeEngine {
     /// Flagship configuration: HUBFull single precision N=26, 24 it.
+    /// Serial batch execution (the deterministic single-core baseline);
+    /// see [`Self::with_threads`] for data-parallel batches.
     pub fn flagship() -> Self {
-        NativeEngine { eng: QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)) }
+        NativeEngine {
+            eng: QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)),
+            threads: 1,
+        }
     }
 
-    /// Decompose one matrix at the bit level.
+    /// Set the batch-execution thread count. `0` selects one worker per
+    /// available core. Results are bit-identical regardless of the
+    /// thread count (each matrix is independent and outputs keep input
+    /// order).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = if threads == 0 { par::threads() } else { threads };
+        self
+    }
+
+    /// Decompose one matrix at the bit level on the allocation-free
+    /// monomorphized fast path (this thread's reusable workspace).
+    /// Bit-identical to [`Self::qrd_bits_reference`], which the
+    /// `fastpath_bitexact` suite enforces.
     pub fn qrd_bits(&self, a: &[u32; 16]) -> [u32; 32] {
+        match self.eng.fast() {
+            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| qrd_bits_flat(r, a, ws)),
+            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| qrd_bits_flat(r, a, ws)),
+        }
+    }
+
+    /// The pre-refactor bit-level path (`Vec<Vec<Val>>` rows through the
+    /// reference triangularization). Kept as the golden anchor for the
+    /// fast path and the cross-language golden vectors.
+    pub fn qrd_bits_reference(&self, a: &[u32; 16]) -> [u32; 32] {
         let fmt = self.eng.rot.cfg.fmt;
+        let family = self.eng.rot.cfg.family;
+        let mk = |bits: u64| match family {
+            Family::Hub => Val::Hub(HubFp::from_bits(fmt, bits)),
+            Family::Conventional => Val::Ieee(Fp::from_bits(fmt, bits)),
+        };
         let m = 4usize;
         let mut rows: Vec<Vec<Val>> = (0..m)
             .map(|i| {
-                let mut row: Vec<Val> = (0..m)
-                    .map(|j| Val::Hub(HubFp::from_bits(fmt, a[i * m + j] as u64)))
-                    .collect();
+                let mut row: Vec<Val> =
+                    (0..m).map(|j| mk(a[i * m + j] as u64)).collect();
                 row.extend((0..m).map(|j| {
                     if i == j {
                         self.eng.rot.one()
@@ -58,9 +93,42 @@ impl NativeEngine {
     }
 }
 
+/// Load one 4×4 `[A | I]` into the workspace, triangularize on the fast
+/// path, pack `[R | G]` bits. No heap allocation after warm-up.
+fn qrd_bits_flat<F: FamilyOps>(
+    rot: &F,
+    a: &[u32; 16],
+    ws: &mut QrdWorkspace<F::Scalar>,
+) -> [u32; 32] {
+    let m = 4usize;
+    let width = 2 * m;
+    let buf = ws.prepare(m, width);
+    for i in 0..m {
+        for j in 0..m {
+            buf[i * width + j] = rot.from_bits(a[i * m + j] as u64);
+        }
+        buf[i * width + m + i] = rot.one();
+    }
+    triangularize_ws(rot, ws);
+    let mut out = [0u32; 32];
+    for (o, &v) in out.iter_mut().zip(ws.buf().iter()) {
+        *o = rot.to_bits(v) as u32;
+    }
+    out
+}
+
 impl BatchEngine for NativeEngine {
     fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
-        mats.iter().map(|m| self.qrd_bits(m)).collect()
+        // One matrix is a few µs; a scoped-thread spawn is tens of µs
+        // and fresh threads re-warm their thread-local workspaces, so
+        // only fan out when every worker gets a meaty chunk. (A
+        // persistent worker pool would amortize this — see ROADMAP.)
+        let nt = self.threads.min(mats.len() / 16).max(1);
+        if nt <= 1 {
+            mats.iter().map(|m| self.qrd_bits(m)).collect()
+        } else {
+            par::par_map_with(nt, mats.len(), |i| self.qrd_bits(&mats[i]))
+        }
     }
 
     fn preferred_batch(&self) -> usize {
@@ -68,7 +136,8 @@ impl BatchEngine for NativeEngine {
     }
 
     fn name(&self) -> String {
-        format!("native ({})", self.eng.rot.cfg.label())
+        format!("native ({}, {} thread{})", self.eng.rot.cfg.label(), self.threads,
+            if self.threads == 1 { "" } else { "s" })
     }
 }
 
@@ -159,5 +228,29 @@ mod tests {
                 assert_eq!(out[i * 8 + j], 0, "R must be zero");
             }
         }
+    }
+
+    #[test]
+    fn fast_bit_path_matches_reference_bit_path() {
+        let eng = NativeEngine::flagship();
+        let mut rng = crate::util::rng::Rng::new(321);
+        for _ in 0..100 {
+            let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+            let a: [u32; 16] =
+                std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits());
+            assert_eq!(eng.qrd_bits(&a), eng.qrd_bits_reference(&a));
+        }
+    }
+
+    #[test]
+    fn parallel_batch_matches_serial_batch_in_order() {
+        let serial = NativeEngine::flagship();
+        let parallel = NativeEngine::flagship().with_threads(0);
+        assert!(parallel.threads >= 1);
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mats: Vec<[u32; 16]> = (0..200)
+            .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
+            .collect();
+        assert_eq!(serial.run(&mats), parallel.run(&mats));
     }
 }

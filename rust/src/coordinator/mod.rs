@@ -26,19 +26,34 @@ use std::time::Instant;
 
 /// Run the coordinator under a synthetic client load and print a
 /// throughput/latency report (the `repro serve` command and the
-/// streaming_service example both land here).
+/// streaming_service example both land here). Single-threaded batch
+/// execution; see [`serve_synthetic_with`] for the thread knob.
 pub fn serve_synthetic(
     engine: &str,
     requests: usize,
     max_batch: usize,
     artifact: &str,
 ) -> anyhow::Result<()> {
+    serve_synthetic_with(engine, requests, max_batch, artifact, 1)
+}
+
+/// [`serve_synthetic`] with an explicit batch-execution thread count
+/// for the native engine (`0` = one worker per core). Surfaced on the
+/// CLI as `repro serve --threads N`.
+pub fn serve_synthetic_with(
+    engine: &str,
+    requests: usize,
+    max_batch: usize,
+    artifact: &str,
+    threads: usize,
+) -> anyhow::Result<()> {
     let policy = BatchPolicy { max_batch, max_wait_us: 200 };
     let (svc, name) = match engine {
-        "native" => (
-            QrdService::start(|| Box::new(NativeEngine::flagship()) as _, policy),
-            NativeEngine::flagship().name(),
-        ),
+        "native" => {
+            let eng = NativeEngine::flagship().with_threads(threads);
+            let name = eng.name();
+            (QrdService::start(move || Box::new(eng) as _, policy), name)
+        }
         "pjrt" => {
             // probe the artifact on this thread so load errors surface
             // before the worker starts

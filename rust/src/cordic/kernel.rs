@@ -1,0 +1,237 @@
+//! Monomorphized CORDIC kernels — the serving hot path's inner loop.
+//!
+//! [`super::CordicCore`] is the *reference* model: one enum dispatch on
+//! the number family per microrotation step. These kernels are the
+//! same arithmetic with the family fixed at the type level, the wrap
+//! shift precomputed once at construction, the `asr` width branch
+//! removed (step shifts are always < 63), and a *row-replay* entry
+//! point ([`ConvKernel::rotate_lanes`] / [`HubKernel::rotate_lanes`])
+//! that applies one recorded angle to many element pairs in a single
+//! stage-outer pass. Stage-outer iteration turns the 2·niter dependent
+//! adds of one pair into `lanes` independent chains per stage — the
+//! software analogue of the paper's pipelined unit accepting one pair
+//! per cycle, and exactly what the autovectorizer wants.
+//!
+//! Every operation is bit-identical to the reference core; the kernel
+//! tests below and the `fastpath_bitexact` suite lock this down.
+
+use super::Angle;
+
+/// Wrap to the w-bit two's-complement range with a precomputed shift
+/// (`sh = 64 − w`); bit-identical to [`crate::fixed::wrap`].
+#[inline(always)]
+fn wrapw(v: i64, sh: u32) -> i64 {
+    (v << sh) >> sh
+}
+
+/// One conventional microrotation, reference semantics
+/// (`fixed::addsub` pair) with the width branch hoisted out.
+#[inline(always)]
+fn conv_step(x: i64, y: i64, i: u32, sigma: bool, sh: u32) -> (i64, i64) {
+    // i ≤ 62 always (niter ≤ 63), so `>>` is the full asr
+    let (xs, ys) = (x >> i, y >> i);
+    if sigma {
+        (wrapw(x + ys, sh), wrapw(y - xs, sh))
+    } else {
+        (wrapw(x - ys, sh), wrapw(y + xs, sh))
+    }
+}
+
+/// One HUB microrotation, reference semantics (`fixed::hub_addsub`
+/// pair: extend with the ILSB, shift, carry-in from the first dropped
+/// bit) with the width branch hoisted out.
+#[inline(always)]
+fn hub_step(x: i64, y: i64, i: u32, sigma: bool, sh: u32) -> (i64, i64) {
+    let (ex, ey) = (2 * x + 1, 2 * y + 1);
+    // σ: x ← x + (y ≫ i), y ← y − (x ≫ i); HUB subtraction extends the
+    // negated word (−(2v+1)), matching hub_addsub's `sub` branch.
+    let (tx, ty) = if sigma { (ey >> i, (-ex) >> i) } else { ((-ey) >> i, ex >> i) };
+    (wrapw(x + ((tx + 1) >> 1), sh), wrapw(y + ((ty + 1) >> 1), sh))
+}
+
+macro_rules! kernel {
+    ($name:ident, $step:ident, $negate:expr, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone, Copy)]
+        pub struct $name {
+            /// Datapath width.
+            pub w: u32,
+            /// Microrotation count.
+            pub niter: u32,
+            /// Precomputed wrap shift (64 − w).
+            sh: u32,
+        }
+
+        impl $name {
+            /// Build the kernel (same invariants as `CordicCore::new`).
+            pub fn new(w: u32, niter: u32) -> Self {
+                assert!(niter <= 63, "σ register model holds ≤ 63 microrotations");
+                assert!(w >= 4 && w <= 62);
+                $name { w, niter, sh: 64 - w }
+            }
+
+            /// Vectoring mode — bit-identical to `CordicCore::vector`.
+            #[inline]
+            pub fn vector(&self, mut x: i64, mut y: i64) -> (i64, i64, Angle) {
+                let mut ang = Angle::default();
+                if x < 0 {
+                    ang.flip = true;
+                    x = $negate(x, self.sh);
+                    y = $negate(y, self.sh);
+                }
+                for i in 0..self.niter {
+                    let sigma = y >= 0;
+                    if sigma {
+                        ang.sigmas |= 1u64 << i;
+                    }
+                    (x, y) = $step(x, y, i, sigma, self.sh);
+                }
+                (x, y, ang)
+            }
+
+            /// Rotation mode — bit-identical to `CordicCore::rotate`.
+            #[inline]
+            pub fn rotate(&self, mut x: i64, mut y: i64, ang: &Angle) -> (i64, i64) {
+                if ang.flip {
+                    x = $negate(x, self.sh);
+                    y = $negate(y, self.sh);
+                }
+                let mut sig = ang.sigmas;
+                for i in 0..self.niter {
+                    (x, y) = $step(x, y, i, sig & 1 == 1, self.sh);
+                    sig >>= 1;
+                }
+                (x, y)
+            }
+
+            /// Row replay: apply one recorded angle to `lanes` pairs in a
+            /// single stage-outer pass. Per lane this performs exactly
+            /// the [`Self::rotate`] operation sequence (lanes are
+            /// independent), so results are bit-identical to rotating
+            /// each pair on its own.
+            pub fn rotate_lanes(&self, xs: &mut [i64], ys: &mut [i64], ang: &Angle) {
+                debug_assert_eq!(xs.len(), ys.len());
+                let sh = self.sh;
+                if ang.flip {
+                    for (x, y) in xs.iter_mut().zip(ys.iter_mut()) {
+                        *x = $negate(*x, sh);
+                        *y = $negate(*y, sh);
+                    }
+                }
+                let mut sig = ang.sigmas;
+                for i in 0..self.niter {
+                    let sigma = sig & 1 == 1;
+                    sig >>= 1;
+                    for (x, y) in xs.iter_mut().zip(ys.iter_mut()) {
+                        (*x, *y) = $step(*x, *y, i, sigma, sh);
+                    }
+                }
+            }
+        }
+    };
+}
+
+#[inline(always)]
+fn conv_negate(v: i64, sh: u32) -> i64 {
+    wrapw(v.wrapping_neg(), sh)
+}
+
+#[inline(always)]
+fn hub_negate(v: i64, sh: u32) -> i64 {
+    wrapw(!v, sh)
+}
+
+kernel!(
+    ConvKernel,
+    conv_step,
+    conv_negate,
+    "Conventional (two's-complement) CORDIC kernel, family fixed at compile time."
+);
+kernel!(
+    HubKernel,
+    hub_step,
+    hub_negate,
+    "HUB CORDIC kernel (Fig. 6 carry-in adders), family fixed at compile time."
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{CordicCore, CoreKind};
+    use crate::util::rng::Rng;
+
+    fn random_word(rng: &mut Rng, w: u32) -> i64 {
+        // anywhere in the w-bit range, including the wrap-prone extremes
+        crate::fixed::wrap(rng.i64(), w)
+    }
+
+    #[test]
+    fn conv_kernel_matches_reference_core() {
+        let mut rng = Rng::new(11);
+        for (w, niter) in [(30u32, 24u32), (16, 12), (58, 55)] {
+            let refc = CordicCore::new(w, niter, CoreKind::Conventional);
+            let k = ConvKernel::new(w, niter);
+            for _ in 0..500 {
+                let (x, y) = (random_word(&mut rng, w), random_word(&mut rng, w));
+                let (rx, ry, ra) = refc.vector(x, y);
+                let (kx, ky, ka) = k.vector(x, y);
+                assert_eq!((rx, ry, ra), (kx, ky, ka), "vector w={w} it={niter}");
+                let (p, q) = (random_word(&mut rng, w), random_word(&mut rng, w));
+                assert_eq!(refc.rotate(p, q, &ra), k.rotate(p, q, &ka), "rotate");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_kernel_matches_reference_core() {
+        let mut rng = Rng::new(12);
+        for (w, niter) in [(30u32, 24u32), (16, 12), (58, 55)] {
+            let refc = CordicCore::new(w, niter, CoreKind::Hub);
+            let k = HubKernel::new(w, niter);
+            for _ in 0..500 {
+                let (x, y) = (random_word(&mut rng, w), random_word(&mut rng, w));
+                let (rx, ry, ra) = refc.vector(x, y);
+                let (kx, ky, ka) = k.vector(x, y);
+                assert_eq!((rx, ry, ra), (kx, ky, ka), "vector w={w} it={niter}");
+                let (p, q) = (random_word(&mut rng, w), random_word(&mut rng, w));
+                assert_eq!(refc.rotate(p, q, &ra), k.rotate(p, q, &ka), "rotate");
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_lanes_matches_per_pair_rotate() {
+        let mut rng = Rng::new(13);
+        let w = 28;
+        let hub = HubKernel::new(w, 24);
+        let conv = ConvKernel::new(w, 24);
+        for _ in 0..200 {
+            let (ax, ay) = (random_word(&mut rng, w), random_word(&mut rng, w));
+            let (_, _, ang) = hub.vector(ax, ay);
+            let lanes = 1 + rng.below(9) as usize;
+            let mut xs: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+            let mut ys: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+            let want: Vec<(i64, i64)> =
+                xs.iter().zip(&ys).map(|(&x, &y)| hub.rotate(x, y, &ang)).collect();
+            hub.rotate_lanes(&mut xs, &mut ys, &ang);
+            for (l, &(wx, wy)) in want.iter().enumerate() {
+                assert_eq!((xs[l], ys[l]), (wx, wy), "hub lane {l}");
+            }
+            // conventional, reusing the same random data
+            let (_, _, ang) = conv.vector(ax, ay);
+            let want: Vec<(i64, i64)> =
+                xs.iter().zip(&ys).map(|(&x, &y)| conv.rotate(x, y, &ang)).collect();
+            conv.rotate_lanes(&mut xs, &mut ys, &ang);
+            for (l, &(wx, wy)) in want.iter().enumerate() {
+                assert_eq!((xs[l], ys[l]), (wx, wy), "conv lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_lane_set_is_a_no_op() {
+        let k = HubKernel::new(20, 16);
+        let (_, _, ang) = k.vector(1000, -3000);
+        k.rotate_lanes(&mut [], &mut [], &ang);
+    }
+}

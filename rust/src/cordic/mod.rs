@@ -12,8 +12,10 @@
 //! per element pair. The cycle-accurate stage/latency model lives in
 //! [`crate::pipeline`]; both share these step functions.
 
+mod kernel;
 mod scale;
 
+pub use kernel::{ConvKernel, HubKernel};
 pub use scale::ScaleComp;
 
 use crate::fixed::{addsub, asr, hub_addsub, hub_not, neg, wrap};
@@ -56,6 +58,10 @@ pub struct CordicCore {
 impl CordicCore {
     /// Build a core; `niter ≤ 63` so σ bits fit one machine word
     /// (double precision tops out at ~57 iterations in the paper).
+    ///
+    /// This is the reference core (per-step family dispatch). The hot
+    /// path uses [`ConvKernel`]/[`HubKernel`], whose constructors
+    /// precompute the wrap shift once so no step recomputes it.
     pub fn new(w: u32, niter: u32, kind: CoreKind) -> Self {
         assert!(niter <= 63, "σ register model holds ≤ 63 microrotations");
         assert!(w >= 4 && w <= 62);

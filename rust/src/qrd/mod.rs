@@ -12,13 +12,16 @@ mod iterative;
 mod rls;
 mod schedule;
 pub mod solve;
+pub mod workspace;
 
 pub use fixed_engine::FixedQrdEngine;
 pub use iterative::{IterativeQrd, IterativeRun};
 pub use rls::QrdRls;
 pub use schedule::{pair_op_count, rotation_count, schedule, RotationStep};
+pub use workspace::{triangularize_ws, QrdWorkspace};
 
-use crate::rotator::{GivensRotator, RotatorConfig, Val};
+use crate::fp::Family;
+use crate::rotator::{FamilyOps, GivensRotator, HubRotator, IeeeRotator, RotatorConfig, Val};
 
 /// Result of a QR decomposition, decoded to f64 for analysis.
 #[derive(Debug, Clone)]
@@ -67,25 +70,59 @@ impl QrdResult {
     }
 }
 
+/// The engine's monomorphized fast path: one variant per number
+/// family, each carrying a rotator specialized over the family's bare
+/// scalar type (no `Val` enum in the inner loop).
+#[derive(Debug, Clone)]
+pub enum FastQrd {
+    /// Conventional fast path over [`crate::fp::Fp`].
+    Ieee(IeeeRotator),
+    /// HUB fast path over [`crate::fp::HubFp`].
+    Hub(HubRotator),
+}
+
 /// A QRD computation unit for m×m matrices built from one FP Givens
 /// rotation unit (the paper's §5.1 evaluation vehicle: a 4×4 QRD
 /// following the pipeline architecture of ref [20]).
 #[derive(Debug, Clone)]
 pub struct QrdEngine {
-    /// The underlying rotation unit.
+    /// The underlying rotation unit (reference path).
     pub rot: GivensRotator,
+    fast: FastQrd,
 }
 
 impl QrdEngine {
     /// Build an engine from a rotator configuration.
     pub fn new(cfg: RotatorConfig) -> Self {
-        QrdEngine { rot: GivensRotator::new(cfg) }
+        let fast = match cfg.family {
+            Family::Conventional => FastQrd::Ieee(IeeeRotator::new(cfg)),
+            Family::Hub => FastQrd::Hub(HubRotator::new(cfg)),
+        };
+        QrdEngine { rot: GivensRotator::new(cfg), fast }
+    }
+
+    /// The monomorphized fast path for this engine's family.
+    pub fn fast(&self) -> &FastQrd {
+        &self.fast
     }
 
     /// Decompose an m×m matrix given as f64 rows (each value is first
     /// rounded into the unit's input format, as the paper does when
-    /// generating test matrices).
+    /// generating test matrices). Runs the allocation-free fast path —
+    /// bit-identical to [`Self::decompose_reference`] (locked by the
+    /// `fastpath_bitexact` suite); only the returned `QrdResult`
+    /// vectors allocate.
     pub fn decompose(&self, a: &[Vec<f64>]) -> QrdResult {
+        match &self.fast {
+            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| decompose_flat(r, a, ws)),
+            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| decompose_flat(r, a, ws)),
+        }
+    }
+
+    /// The pre-refactor reference decomposition (`Vec<Vec<Val>>` rows,
+    /// per-pair enum dispatch). Kept as the bit-exactness anchor for
+    /// the fast path.
+    pub fn decompose_reference(&self, a: &[Vec<f64>]) -> QrdResult {
         let m = a.len();
         let rows = a
             .iter()
@@ -109,8 +146,11 @@ impl QrdEngine {
     }
 
     /// Run the Givens schedule over augmented rows (m×2m), returning the
-    /// transformed rows `[R | G]`. Exposed for the pipeline simulator
-    /// and golden-vector tests.
+    /// transformed rows `[R | G]`. This is the *reference* path (per-pair
+    /// `Val` dispatch, fresh row vectors); the serving hot path is
+    /// [`triangularize_ws`] over a [`QrdWorkspace`]. Exposed for the
+    /// pipeline simulator, golden-vector tests and the bit-exactness
+    /// suite that locks the two paths together.
     pub fn triangularize(&self, mut rows: Vec<Vec<Val>>, m: usize) -> Vec<Vec<Val>> {
         let width = rows[0].len();
         for step in schedule(m) {
@@ -137,6 +177,35 @@ impl QrdEngine {
     /// accumulation (the paper's `e`; 4×4 ⇒ e = 8).
     pub fn elements_per_row(m: usize) -> usize {
         2 * m
+    }
+}
+
+/// Load `[A | I]` into the workspace, triangularize on the fast path,
+/// decode `[R | G]`. Generic over the family so the whole loop
+/// monomorphizes; the workspace (thread-local in [`QrdEngine`]'s use)
+/// makes the triangularization allocation-free after warm-up.
+fn decompose_flat<F: FamilyOps>(
+    rot: &F,
+    a: &[Vec<f64>],
+    ws: &mut QrdWorkspace<F::Scalar>,
+) -> QrdResult {
+    let m = a.len();
+    assert!(m > 0, "square input expected (got an empty matrix)");
+    let width = 2 * m;
+    let buf = ws.prepare(m, width);
+    for (i, row) in a.iter().enumerate() {
+        assert_eq!(row.len(), m, "square input expected");
+        for (j, &v) in row.iter().enumerate() {
+            buf[i * width + j] = rot.encode(v);
+        }
+        // G starts as the identity; `prepare` zero-filled the rest and
+        // the family scalar's Default *is* its canonical zero
+        buf[i * width + m + i] = rot.one();
+    }
+    triangularize_ws(rot, ws);
+    QrdResult {
+        r: (0..m).map(|i| ws.row(i)[..m].iter().map(|&v| rot.decode(v)).collect()).collect(),
+        qt: (0..m).map(|i| ws.row(i)[m..].iter().map(|&v| rot.decode(v)).collect()).collect(),
     }
 }
 

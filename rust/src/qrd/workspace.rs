@@ -1,0 +1,162 @@
+//! Flat, reusable QRD workspace — the allocation-free triangularization
+//! hot path.
+//!
+//! The reference [`super::QrdEngine::triangularize`] builds a fresh
+//! `Vec<Vec<Val>>` per matrix. The serving path instead keeps one
+//! [`QrdWorkspace`] per thread: a flat row-major buffer of bare family
+//! scalars (`HubFp`/`Fp`, no enum tag) plus the per-row scratch the
+//! monomorphized [`rotate_row`](FamilyOps::rotate_row) replay needs.
+//! After warm-up, [`triangularize_ws`] performs no heap allocation.
+//!
+//! The Givens schedule is iterated inline (same column-major order as
+//! [`super::schedule`], which allocates a step vector and is kept for
+//! the reference path and the scheduling tests).
+
+use crate::fp::{Fp, HubFp};
+use crate::rotator::{FamilyOps, RowScratch};
+use std::cell::RefCell;
+
+thread_local! {
+    static HUB_WS: RefCell<QrdWorkspace<HubFp>> = RefCell::new(QrdWorkspace::new());
+    static IEEE_WS: RefCell<QrdWorkspace<Fp>> = RefCell::new(QrdWorkspace::new());
+}
+
+/// Run `f` with this thread's reusable HUB workspace. One workspace per
+/// thread means batch workers reuse their own buffers with no locking.
+pub fn with_hub_ws<R>(f: impl FnOnce(&mut QrdWorkspace<HubFp>) -> R) -> R {
+    HUB_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+/// Run `f` with this thread's reusable conventional workspace.
+pub fn with_ieee_ws<R>(f: impl FnOnce(&mut QrdWorkspace<Fp>) -> R) -> R {
+    IEEE_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+/// Reusable flat buffer for one m×width triangularization.
+#[derive(Debug, Clone, Default)]
+pub struct QrdWorkspace<T> {
+    buf: Vec<T>,
+    scratch: RowScratch,
+    m: usize,
+    width: usize,
+}
+
+impl<T: Copy + Default> QrdWorkspace<T> {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        QrdWorkspace { buf: Vec::new(), scratch: RowScratch::new(), m: 0, width: 0 }
+    }
+
+    /// Size the buffer for an m×width matrix (zero-filled) and return
+    /// it for loading. Reuses capacity — allocation-free once warm.
+    pub fn prepare(&mut self, m: usize, width: usize) -> &mut [T] {
+        assert!(width >= m, "augmented width must cover the matrix");
+        self.m = m;
+        self.width = width;
+        self.buf.clear();
+        self.buf.resize(m * width, T::default());
+        &mut self.buf
+    }
+
+    /// The flat row-major contents (valid after [`Self::prepare`]).
+    pub fn buf(&self) -> &[T] {
+        &self.buf
+    }
+
+    /// Matrix rows / augmented width currently prepared.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.m, self.width)
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, r: usize) -> &[T] {
+        &self.buf[r * self.width..(r + 1) * self.width]
+    }
+}
+
+/// Two disjoint rows of a flat row-major buffer, mutably (`a < b`).
+#[inline]
+fn row_pair_mut<T>(buf: &mut [T], width: usize, a: usize, b: usize) -> (&mut [T], &mut [T]) {
+    debug_assert!(a < b);
+    let (lo, hi) = buf.split_at_mut(b * width);
+    (&mut lo[a * width..(a + 1) * width], &mut hi[..width])
+}
+
+/// Run the Givens schedule over the prepared workspace in place,
+/// leaving `[R | G]` in the flat buffer. Bit-identical to the reference
+/// `QrdEngine::triangularize` (locked by `tests/fastpath_bitexact.rs`);
+/// performs no heap allocation after warm-up.
+pub fn triangularize_ws<F: FamilyOps>(rot: &F, ws: &mut QrdWorkspace<F::Scalar>) {
+    let QrdWorkspace { buf, scratch, m, width } = ws;
+    let (m, width) = (*m, *width);
+    for col in 0..m.saturating_sub(1) {
+        for zero_row in (col + 1)..m {
+            let (prow, zrow) = row_pair_mut(buf, width, col, zero_row);
+            // vectoring on the pivot pair
+            let (newx, _ylow, ang) = rot.vector(prow[col], zrow[col]);
+            prow[col] = newx;
+            // the zeroed element is known-zero by construction and is
+            // not stored (same as the reference path)
+            zrow[col] = rot.zero();
+            // one recorded angle replayed across the remaining pairs of
+            // the two rows in a single pass
+            rot.rotate_row(&mut prow[col + 1..], &mut zrow[col + 1..], scratch, &ang);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fp::{FpFormat, HubFp};
+    use crate::rotator::{HubRotator, RotatorConfig};
+
+    #[test]
+    fn scalar_default_is_the_canonical_zero() {
+        // `prepare` zero-fills with Default; the fast path relies on
+        // that being the families' exact zero encoding
+        assert_eq!(Fp::default(), Fp::ZERO);
+        assert_eq!(HubFp::default(), HubFp::ZERO);
+    }
+
+    #[test]
+    fn prepare_reuses_capacity() {
+        let mut ws: QrdWorkspace<HubFp> = QrdWorkspace::new();
+        ws.prepare(4, 8);
+        let cap = ws.buf.capacity();
+        for _ in 0..10 {
+            let buf = ws.prepare(4, 8);
+            assert_eq!(buf.len(), 32);
+        }
+        assert_eq!(ws.buf.capacity(), cap, "no reallocation across reuses");
+    }
+
+    #[test]
+    fn row_pair_is_disjoint_and_correct() {
+        let mut buf: Vec<u32> = (0..12).collect();
+        let (a, b) = row_pair_mut(&mut buf, 4, 0, 2);
+        assert_eq!(a, &[0, 1, 2, 3]);
+        assert_eq!(b, &[8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn triangularize_zeroes_the_subdiagonal() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rot = HubRotator::new(cfg);
+        let mut ws = QrdWorkspace::new();
+        let m = 4;
+        let buf = ws.prepare(m, 2 * m);
+        for i in 0..m {
+            for j in 0..m {
+                buf[i * 2 * m + j] = rot.encode(((i * m + j) as f64 - 7.5) * 0.25);
+            }
+            buf[i * 2 * m + m + i] = rot.one();
+        }
+        triangularize_ws(&rot, &mut ws);
+        for i in 1..m {
+            for j in 0..i {
+                assert!(ws.row(i)[j].is_zero(), "({i},{j}) must be exactly zero");
+            }
+        }
+    }
+}

@@ -1,0 +1,434 @@
+//! Monomorphized rotation-unit fast path.
+//!
+//! [`super::GivensRotator`] is the *reference* model: every element
+//! pair carries a [`Val`] family enum, every conversion matches on it,
+//! and every CORDIC step dispatches on the core kind. These types fix
+//! the family at compile time instead — [`IeeeRotator`] works on bare
+//! [`Fp`] values, [`HubRotator`] on bare [`HubFp`] — and add the
+//! row-granular [`FamilyOps::rotate_row`], which replays one recorded
+//! angle across all remaining pairs of a row pair in a single pass:
+//! per-pair input conversion into flat scratch, one stage-outer CORDIC
+//! sweep over all lanes ([`HubKernel::rotate_lanes`]), then per-pair
+//! compensation + output conversion.
+//!
+//! Both rotators are locked to the reference by construction (they call
+//! the *same* converter routines and arithmetically identical kernels)
+//! and by test (`tests/fastpath_bitexact.rs` asserts byte-identical
+//! `[R | G]` output across formats, families and edge inputs).
+
+use crate::converters::{
+    input_convert_hub, input_convert_ieee, output_convert_hub, output_convert_ieee, BlockFp,
+};
+use crate::cordic::{Angle, ConvKernel, HubKernel, ScaleComp};
+use crate::fp::{Family, Fp, FpFormat, HubFp};
+use crate::rotator::RotatorConfig;
+
+/// Reusable per-row scratch for [`FamilyOps::rotate_row`]: the aligned
+/// block-FP words of the non-skipped lanes plus their row positions.
+/// Lives in the QRD workspace so the hot path never allocates after
+/// warm-up.
+#[derive(Debug, Clone, Default)]
+pub struct RowScratch {
+    x: Vec<i64>,
+    y: Vec<i64>,
+    exp: Vec<i64>,
+    idx: Vec<u32>,
+}
+
+impl RowScratch {
+    /// Empty scratch (grows to row width on first use, then stays).
+    pub fn new() -> Self {
+        RowScratch::default()
+    }
+
+    #[inline]
+    fn clear(&mut self) {
+        self.x.clear();
+        self.y.clear();
+        self.exp.clear();
+        self.idx.clear();
+    }
+
+    #[inline]
+    fn push(&mut self, lane: usize, bf: BlockFp) {
+        self.x.push(bf.x);
+        self.y.push(bf.y);
+        self.exp.push(bf.exp);
+        self.idx.push(lane as u32);
+    }
+}
+
+/// A rotation unit with the number family fixed at the type level.
+/// `Scalar` is the family's bare value type ([`Fp`] or [`HubFp`]).
+pub trait FamilyOps: Clone + Send + Sync {
+    /// Bare element type flowing through the fast path.
+    type Scalar: Copy + PartialEq + Default + Send + Sync + std::fmt::Debug + 'static;
+
+    /// The unit's configuration.
+    fn cfg(&self) -> &RotatorConfig;
+    /// Encode an f64 (round to nearest in the family's sense).
+    fn encode(&self, v: f64) -> Self::Scalar;
+    /// Decode to f64.
+    fn decode(&self, v: Self::Scalar) -> f64;
+    /// The family's canonical zero.
+    fn zero(&self) -> Self::Scalar;
+    /// The family's encoding of 1.0 (see `GivensRotator::one`).
+    fn one(&self) -> Self::Scalar;
+    /// True if the encoding is zero.
+    fn is_zero(&self, v: Self::Scalar) -> bool;
+    /// Pack to `[sign][exp][frac]` bits.
+    fn to_bits(&self, v: Self::Scalar) -> u64;
+    /// Unpack from `[sign][exp][frac]` bits.
+    fn from_bits(&self, bits: u64) -> Self::Scalar;
+
+    /// Vectoring: compute the Givens angle for a pair (bit-identical to
+    /// `GivensRotator::vector`).
+    fn vector(&self, x: Self::Scalar, y: Self::Scalar) -> (Self::Scalar, Self::Scalar, Angle);
+
+    /// Rotation: apply a recorded angle to one pair (bit-identical to
+    /// `GivensRotator::rotate`).
+    fn rotate(&self, x: Self::Scalar, y: Self::Scalar, ang: &Angle)
+        -> (Self::Scalar, Self::Scalar);
+
+    /// Apply one recorded angle to every pair `(xs[k], ys[k])` in a
+    /// single pass, equivalent to calling [`Self::rotate`] on each pair
+    /// in order. Implementations may skip pairs whose inputs are both
+    /// zero only when the family guarantees the rotated outputs flush
+    /// to the canonical zero (see the rotator docs for the argument).
+    fn rotate_row(
+        &self,
+        xs: &mut [Self::Scalar],
+        ys: &mut [Self::Scalar],
+        scratch: &mut RowScratch,
+        ang: &Angle,
+    );
+}
+
+macro_rules! rotator {
+    ($name:ident, $scalar:ty, $family:path, $kernel:ty, $doc:literal) => {
+        #[doc = $doc]
+        #[derive(Debug, Clone)]
+        pub struct $name {
+            /// The unit's configuration (family must match the type).
+            pub cfg: RotatorConfig,
+            core: $kernel,
+            comp: Option<ScaleComp>,
+            /// Both-zero pairs may be skipped: their rotated outputs
+            /// provably flush to the canonical zero (always true for the
+            /// conventional core, which preserves exact zeros; for HUB
+            /// the near-zero words the core produces underflow the
+            /// block exponent 0 whenever n ≥ 10 — see `zero_pair_skip`).
+            skip_zero_pairs: bool,
+        }
+
+        impl $name {
+            /// Build from a configuration; panics if the configured
+            /// family does not match this monomorphization.
+            pub fn new(cfg: RotatorConfig) -> Self {
+                assert_eq!(cfg.family, $family, "config family must match rotator type");
+                let comp = cfg
+                    .compensate
+                    .then(|| ScaleComp::new(cfg.w(), cfg.niter, cfg.family == Family::Hub));
+                $name {
+                    cfg,
+                    core: <$kernel>::new(cfg.w(), cfg.niter),
+                    comp,
+                    skip_zero_pairs: zero_pair_skip(cfg),
+                }
+            }
+
+            /// Compensation + output conversion (reference semantics of
+            /// `GivensRotator::finish_block_comp`).
+            #[inline]
+            fn finish(&self, mut x: i64, mut y: i64, exp: i64) -> ($scalar, $scalar) {
+                if let Some(c) = &self.comp {
+                    x = c.apply(x);
+                    y = c.apply(y);
+                }
+                self.output(x, y, exp)
+            }
+        }
+    };
+}
+
+/// Whether both-zero pairs may bypass the datapath (outputs are the
+/// canonical zero either way).
+///
+/// Conventional: exact — zero words stay exactly zero through every
+/// step, compensation and output conversion, so the result is
+/// `Fp::ZERO` for any configuration.
+///
+/// HUB: a zero input converts to the stored word 0 at block exponent 0.
+/// Each microrotation adds at most `|v|·2⁻ⁱ + 1`, so after ≤ 63
+/// iterations the word magnitude is < 2·niter ≤ 126 < 2⁷; the output
+/// converter then sees `new_exp ≤ 7 − (n − 2) ≤ 0` for n ≥ 9 and
+/// flushes to `HubFp::ZERO` (compensation only shrinks the word). We
+/// require n ≥ 10 for margin; narrower configs take the full datapath.
+fn zero_pair_skip(cfg: RotatorConfig) -> bool {
+    match cfg.family {
+        Family::Conventional => true,
+        Family::Hub => cfg.n >= 10,
+    }
+}
+
+rotator!(
+    IeeeRotator,
+    Fp,
+    Family::Conventional,
+    ConvKernel,
+    "Conventional (IEEE-like) rotation unit monomorphized over [`Fp`]."
+);
+rotator!(
+    HubRotator,
+    HubFp,
+    Family::Hub,
+    HubKernel,
+    "HUB rotation unit monomorphized over [`HubFp`]."
+);
+
+impl IeeeRotator {
+    #[inline]
+    fn convert(&self, x: Fp, y: Fp) -> BlockFp {
+        input_convert_ieee(self.cfg.fmt, self.cfg.n, x, y, self.cfg.round_input)
+    }
+
+    #[inline]
+    fn output(&self, x: i64, y: i64, exp: i64) -> (Fp, Fp) {
+        output_convert_ieee(self.cfg.fmt, self.cfg.n, self.cfg.w(), x, y, exp)
+    }
+}
+
+impl HubRotator {
+    #[inline]
+    fn convert(&self, x: HubFp, y: HubFp) -> BlockFp {
+        input_convert_hub(self.cfg.fmt, self.cfg.n, x, y, self.cfg.hub_opts)
+    }
+
+    #[inline]
+    fn output(&self, x: i64, y: i64, exp: i64) -> (HubFp, HubFp) {
+        output_convert_hub(
+            self.cfg.fmt,
+            self.cfg.n,
+            self.cfg.w(),
+            x,
+            y,
+            exp,
+            self.cfg.hub_unbiased_output,
+        )
+    }
+}
+
+macro_rules! family_ops {
+    ($name:ident, $scalar:ty) => {
+        impl FamilyOps for $name {
+            type Scalar = $scalar;
+
+            #[inline]
+            fn cfg(&self) -> &RotatorConfig {
+                &self.cfg
+            }
+
+            #[inline]
+            fn encode(&self, v: f64) -> $scalar {
+                <$scalar>::from_f64(self.cfg.fmt, v)
+            }
+
+            #[inline]
+            fn decode(&self, v: $scalar) -> f64 {
+                v.to_f64(self.cfg.fmt)
+            }
+
+            #[inline]
+            fn zero(&self) -> $scalar {
+                <$scalar>::ZERO
+            }
+
+            #[inline]
+            fn one(&self) -> $scalar {
+                <$scalar>::one(self.cfg.fmt)
+            }
+
+            #[inline]
+            fn is_zero(&self, v: $scalar) -> bool {
+                v.is_zero()
+            }
+
+            #[inline]
+            fn to_bits(&self, v: $scalar) -> u64 {
+                v.to_bits(self.cfg.fmt)
+            }
+
+            #[inline]
+            fn from_bits(&self, bits: u64) -> $scalar {
+                <$scalar>::from_bits(self.cfg.fmt, bits)
+            }
+
+            #[inline]
+            fn vector(&self, x: $scalar, y: $scalar) -> ($scalar, $scalar, Angle) {
+                let bf = self.convert(x, y);
+                let (xr, yr, ang) = self.core.vector(bf.x, bf.y);
+                let (xo, yo) = self.finish(xr, yr, bf.exp);
+                (xo, yo, ang)
+            }
+
+            #[inline]
+            fn rotate(&self, x: $scalar, y: $scalar, ang: &Angle) -> ($scalar, $scalar) {
+                let bf = self.convert(x, y);
+                let (xr, yr) = self.core.rotate(bf.x, bf.y, ang);
+                self.finish(xr, yr, bf.exp)
+            }
+
+            fn rotate_row(
+                &self,
+                xs: &mut [$scalar],
+                ys: &mut [$scalar],
+                scratch: &mut RowScratch,
+                ang: &Angle,
+            ) {
+                debug_assert_eq!(xs.len(), ys.len());
+                scratch.clear();
+                let zero = self.zero();
+                for l in 0..xs.len() {
+                    if self.skip_zero_pairs && xs[l].is_zero() && ys[l].is_zero() {
+                        // rotated zeros flush to the canonical zero —
+                        // identical to the full datapath (see above)
+                        xs[l] = zero;
+                        ys[l] = zero;
+                    } else {
+                        scratch.push(l, self.convert(xs[l], ys[l]));
+                    }
+                }
+                let lanes = scratch.idx.len();
+                self.core.rotate_lanes(
+                    &mut scratch.x[..lanes],
+                    &mut scratch.y[..lanes],
+                    ang,
+                );
+                for k in 0..lanes {
+                    let (xo, yo) = self.finish(scratch.x[k], scratch.y[k], scratch.exp[k]);
+                    let l = scratch.idx[k] as usize;
+                    xs[l] = xo;
+                    ys[l] = yo;
+                }
+            }
+        }
+    };
+}
+
+family_ops!(IeeeRotator, Fp);
+family_ops!(HubRotator, HubFp);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rotator::{GivensRotator, Val};
+    use crate::util::rng::Rng;
+
+    fn random_val(rng: &mut Rng) -> f64 {
+        let scale = 2f64.powf(rng.range(-30.0, 30.0));
+        match rng.below(12) {
+            0 => 0.0,
+            1 => -0.0,
+            _ => rng.range(-1.0, 1.0) * scale,
+        }
+    }
+
+    #[test]
+    fn ieee_fast_matches_reference_unit() {
+        for (fmt, n) in [(FpFormat::HALF, 14u32), (FpFormat::SINGLE, 26), (FpFormat::DOUBLE, 55)] {
+            let cfg = RotatorConfig::ieee(fmt, n, n - 3);
+            let rf = GivensRotator::new(cfg);
+            let fast = IeeeRotator::new(cfg);
+            let mut rng = Rng::new(fmt.mbits as u64);
+            for _ in 0..300 {
+                let (x, y) = (random_val(&mut rng), random_val(&mut rng));
+                let (vx, vy, va) = rf.vector(rf.encode(x), rf.encode(y));
+                let (fx, fy, fa) = fast.vector(fast.encode(x), fast.encode(y));
+                assert_eq!((Val::Ieee(fx), Val::Ieee(fy)), (vx, vy), "vector {x} {y}");
+                assert_eq!(va, fa);
+                let (p, q) = (random_val(&mut rng), random_val(&mut rng));
+                let (rx, ry) = rf.rotate(rf.encode(p), rf.encode(q), &va);
+                let (gx, gy) = fast.rotate(fast.encode(p), fast.encode(q), &fa);
+                assert_eq!((Val::Ieee(gx), Val::Ieee(gy)), (rx, ry), "rotate {p} {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_fast_matches_reference_unit() {
+        for (fmt, n) in [(FpFormat::HALF, 13u32), (FpFormat::SINGLE, 26), (FpFormat::DOUBLE, 54)] {
+            let cfg = RotatorConfig::hub(fmt, n, n - 2);
+            let rf = GivensRotator::new(cfg);
+            let fast = HubRotator::new(cfg);
+            let mut rng = Rng::new(100 + fmt.mbits as u64);
+            for _ in 0..300 {
+                let (x, y) = (random_val(&mut rng), random_val(&mut rng));
+                let (vx, vy, va) = rf.vector(rf.encode(x), rf.encode(y));
+                let (fx, fy, fa) = fast.vector(fast.encode(x), fast.encode(y));
+                assert_eq!((Val::Hub(fx), Val::Hub(fy)), (vx, vy), "vector {x} {y}");
+                assert_eq!(va, fa);
+                let (p, q) = (random_val(&mut rng), random_val(&mut rng));
+                let (rx, ry) = rf.rotate(rf.encode(p), rf.encode(q), &va);
+                let (gx, gy) = fast.rotate(fast.encode(p), fast.encode(q), &fa);
+                assert_eq!((Val::Hub(gx), Val::Hub(gy)), (rx, ry), "rotate {p} {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_row_equals_per_pair_rotates_including_zero_pairs() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let fast = HubRotator::new(cfg);
+        let rf = GivensRotator::new(cfg);
+        let mut rng = Rng::new(5);
+        let mut scratch = RowScratch::new();
+        for _ in 0..200 {
+            let (ax, ay) = (random_val(&mut rng), random_val(&mut rng));
+            let (_, _, ang) = fast.vector(fast.encode(ax), fast.encode(ay));
+            let len = 1 + rng.below(10) as usize;
+            let mut xs: Vec<HubFp> = (0..len).map(|_| fast.encode(random_val(&mut rng))).collect();
+            let mut ys: Vec<HubFp> = (0..len).map(|_| fast.encode(random_val(&mut rng))).collect();
+            // force some all-zero pairs to exercise the skip
+            if len > 2 {
+                xs[1] = HubFp::ZERO;
+                ys[1] = HubFp::ZERO;
+            }
+            let want: Vec<(Val, Val)> = xs
+                .iter()
+                .zip(&ys)
+                .map(|(&x, &y)| rf.rotate(Val::Hub(x), Val::Hub(y), &ang))
+                .collect();
+            fast.rotate_row(&mut xs, &mut ys, &mut scratch, &ang);
+            for (l, &(wx, wy)) in want.iter().enumerate() {
+                assert_eq!((Val::Hub(xs[l]), Val::Hub(ys[l])), (wx, wy), "lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn hub_zero_pair_rotation_flushes_to_zero_on_full_datapath() {
+        // the skip's soundness argument, checked directly on a rotator
+        // with the skip disabled by construction (narrow n)
+        let cfg = RotatorConfig::hub(FpFormat { ebits: 8, mbits: 8 }, 9, 7);
+        let fast = HubRotator::new(cfg);
+        assert!(!fast.skip_zero_pairs);
+        // and on the flagship config by calling the reference unit
+        let flagship = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rf = GivensRotator::new(flagship);
+        for seed in 0..50u64 {
+            let mut rng = Rng::new(seed);
+            let (_, _, ang) = rf.vector(
+                rf.encode(rng.range(-2.0, 2.0)),
+                rf.encode(rng.range(-2.0, 2.0)),
+            );
+            let (zx, zy) = rf.rotate(rf.zero(), rf.zero(), &ang);
+            assert_eq!((zx, zy), (rf.zero(), rf.zero()), "seed {seed}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "family")]
+    fn family_mismatch_is_rejected() {
+        let _ = HubRotator::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+    }
+}

@@ -6,6 +6,10 @@
 //! chosen configuration (conventional IEEE-like vs HUB, FP format,
 //! internal width N, microrotation count, converter options).
 
+pub mod fast;
+
+pub use fast::{FamilyOps, HubRotator, IeeeRotator, RowScratch};
+
 use crate::converters::{
     input_convert_hub, input_convert_ieee, output_convert_hub, output_convert_ieee, BlockFp,
     HubInputOpts,
@@ -73,12 +77,15 @@ impl RotatorConfig {
     }
 
     /// Paper's rule of thumb for the optimal iteration count (§5.1):
-    /// N−3 for conventional, N−2 for HUB.
+    /// N−3 for conventional, N−2 for HUB. Saturates at one iteration
+    /// for degenerate widths (n ≤ 3 would otherwise underflow `u32`
+    /// and ask for billions of microrotations).
     pub fn optimal_niter(family: Family, n: u32) -> u32 {
-        match family {
-            Family::Conventional => n - 3,
-            Family::Hub => n - 2,
-        }
+        let rule = match family {
+            Family::Conventional => n.saturating_sub(3),
+            Family::Hub => n.saturating_sub(2),
+        };
+        rule.max(1)
     }
 
     /// Internal CORDIC width W = N + guard integer bits (§5.2).
@@ -351,5 +358,21 @@ mod tests {
     fn latency_matches_formula() {
         let rot = GivensRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
         assert_eq!(rot.latency_cycles(), 2 + 1 + 24 + 1 + 3);
+    }
+
+    #[test]
+    fn optimal_niter_saturates_for_tiny_n() {
+        // the paper's rule in its intended regime…
+        assert_eq!(RotatorConfig::optimal_niter(Family::Conventional, 26), 23);
+        assert_eq!(RotatorConfig::optimal_niter(Family::Hub, 26), 24);
+        // …and at the degenerate boundary: no u32 underflow, never 0
+        for n in 0..=4u32 {
+            let c = RotatorConfig::optimal_niter(Family::Conventional, n);
+            let h = RotatorConfig::optimal_niter(Family::Hub, n);
+            assert!(c >= 1 && c <= 63, "conventional n={n} -> {c}");
+            assert!(h >= 1 && h <= 63, "hub n={n} -> {h}");
+        }
+        assert_eq!(RotatorConfig::optimal_niter(Family::Conventional, 3), 1);
+        assert_eq!(RotatorConfig::optimal_niter(Family::Hub, 2), 1);
     }
 }

@@ -89,6 +89,46 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize results as machine-readable JSON so the perf trajectory
+/// can be tracked PR over PR (no serde offline — hand-rolled, schema:
+/// `{"benches": [{"name", "ns_per_iter", "min_ns", "iters",
+/// "items_per_iter", "items_per_sec"}]}`).
+pub fn to_json(results: &[BenchResult]) -> String {
+    let mut out = String::from("{\n  \"benches\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let ips = if r.items_per_iter > 0.0 { r.items_per_sec() } else { 0.0 };
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"min_ns\": {:.3}, \
+             \"iters\": {}, \"items_per_iter\": {}, \"items_per_sec\": {:.1}}}{}\n",
+            json_escape(&r.name),
+            r.ns_per_iter,
+            r.min_ns,
+            r.iters,
+            r.items_per_iter,
+            ips,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Write results to a JSON file (e.g. `BENCH_qrd.json`).
+pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, to_json(results))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +140,21 @@ mod tests {
         });
         assert!(r.ns_per_iter > 0.0 && r.ns_per_iter < 1e6);
         assert!(r.min_ns <= r.ns_per_iter);
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let r = BenchResult {
+            name: "qrd4 \"bit\" path\\x".into(),
+            ns_per_iter: 1234.5,
+            min_ns: 1200.0,
+            iters: 1000,
+            items_per_iter: 32.0,
+        };
+        let js = to_json(&[r]);
+        assert!(js.contains("\"benches\""));
+        assert!(js.contains("\\\"bit\\\""));
+        assert!(js.contains("\\\\x"));
+        assert!(js.contains("\"ns_per_iter\": 1234.500"));
     }
 }

@@ -17,10 +17,20 @@ where
     T: Send + Default + Clone,
     F: Fn(usize) -> T + Sync,
 {
+    par_map_with(threads(), n, f)
+}
+
+/// [`par_map`] with an explicit worker count (the batch engines'
+/// thread knob). `nt <= 1` runs inline on the caller's thread.
+pub fn par_map_with<T, F>(nt: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
-    let nt = threads().min(n);
+    let nt = nt.min(n);
     if nt <= 1 {
         return (0..n).map(f).collect();
     }
@@ -90,5 +100,13 @@ mod tests {
     fn empty_and_single() {
         assert!(par_map(0, |i| i).is_empty());
         assert_eq!(par_map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        let want: Vec<usize> = (0..500).map(|i| i * i).collect();
+        for nt in [1usize, 2, 3, 16, 64] {
+            assert_eq!(par_map_with(nt, 500, |i| i * i), want, "nt={nt}");
+        }
     }
 }

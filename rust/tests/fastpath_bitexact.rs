@@ -1,0 +1,204 @@
+//! Fast-path lock: the flat-workspace monomorphized triangularization
+//! must produce byte-identical `[R | G]` output to the pre-refactor
+//! reference path (`Vec<Vec<Val>>` + per-pair enum dispatch) across
+//! formats (HALF/SINGLE/DOUBLE), families (IEEE/HUB), matrix sizes and
+//! edge inputs (zeros, saturated maxima, flush-to-zero minima, huge
+//! exponent gaps). This is the switch-over proof demanded before any
+//! caller moved onto the fast path.
+
+use fp_givens::fp::FpFormat;
+use fp_givens::qrd::{triangularize_ws, QrdEngine, QrdWorkspace};
+use fp_givens::rotator::{FamilyOps, HubRotator, IeeeRotator, RotatorConfig, Val};
+use fp_givens::util::prop;
+use fp_givens::util::rng::Rng;
+
+/// Edge inputs in the spirit of `converters::edge_tests`: exact zeros
+/// (both signs), format extremes that saturate or flush, exact powers
+/// of two, and values that stress rounding carries.
+fn edge_pool() -> Vec<f64> {
+    vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        2.0 - 1e-12,
+        1.0e300,   // saturates every format
+        -1.0e300,
+        2f64.powi(-140), // flushes half/single, survives double
+        2f64.powi(-20),
+        1.0e20,    // huge exponent gap partner for the above
+        -3.0,
+        4.0,
+        0.15625,
+    ]
+}
+
+/// One random matrix entry: mostly scaled uniforms, sometimes an edge
+/// value — so every matrix mixes ordinary and pathological pairs.
+fn entry(rng: &mut Rng, pool: &[f64]) -> f64 {
+    if rng.below(5) == 0 {
+        pool[rng.below(pool.len() as u64) as usize]
+    } else {
+        let scale = 2f64.powf(rng.range(-25.0, 25.0));
+        rng.range(-1.0, 1.0) * scale
+    }
+}
+
+/// Triangularize one random augmented matrix on both paths and compare
+/// every output word. `wrap` lifts the family scalar into the
+/// reference path's `Val`.
+fn check_one<F: FamilyOps>(
+    rot: &F,
+    eng: &QrdEngine,
+    ws: &mut QrdWorkspace<F::Scalar>,
+    wrap: impl Fn(F::Scalar) -> Val,
+    rng: &mut Rng,
+) -> bool {
+    let fmt = rot.cfg().fmt;
+    let pool = edge_pool();
+    let m = 2 + rng.below(5) as usize; // 2..=6
+    let width = 2 * m;
+
+    // identical inputs into both paths
+    let scalars: Vec<F::Scalar> =
+        (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
+
+    let buf = ws.prepare(m, width);
+    for i in 0..m {
+        for j in 0..m {
+            buf[i * width + j] = scalars[i * m + j];
+        }
+        buf[i * width + m + i] = rot.one();
+    }
+    triangularize_ws(rot, ws);
+
+    let mut rows: Vec<Vec<Val>> = (0..m)
+        .map(|i| {
+            let mut row: Vec<Val> =
+                (0..m).map(|j| wrap(scalars[i * m + j])).collect();
+            row.extend((0..m).map(|j| if i == j { eng.rot.one() } else { eng.rot.zero() }));
+            row
+        })
+        .collect();
+    rows = eng.triangularize(rows, m);
+
+    for i in 0..m {
+        for j in 0..width {
+            let fast_bits = rot.to_bits(ws.row(i)[j]);
+            let ref_bits = rows[i][j].to_bits(fmt);
+            if fast_bits != ref_bits {
+                eprintln!(
+                    "{} m={m} ({i},{j}): fast {fast_bits:#x} vs reference {ref_bits:#x}",
+                    eng.rot.cfg.label()
+                );
+                return false;
+            }
+        }
+    }
+    true
+}
+
+fn ieee_configs() -> Vec<RotatorConfig> {
+    vec![
+        RotatorConfig::ieee(FpFormat::HALF, 14, 11),
+        RotatorConfig::ieee(FpFormat::SINGLE, 26, 23),
+        RotatorConfig::ieee(FpFormat::SINGLE, 27, 24),
+        RotatorConfig::ieee(FpFormat::DOUBLE, 55, 52),
+    ]
+}
+
+fn hub_configs() -> Vec<RotatorConfig> {
+    vec![
+        RotatorConfig::hub(FpFormat::HALF, 13, 11),
+        RotatorConfig::hub(FpFormat::SINGLE, 26, 24),
+        RotatorConfig::hub(FpFormat::SINGLE, 25, 23),
+        RotatorConfig::hub(FpFormat::DOUBLE, 54, 52),
+    ]
+}
+
+#[test]
+fn prop_ieee_fast_path_is_bit_identical_to_reference() {
+    for cfg in ieee_configs() {
+        let rot = IeeeRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        // one workspace reused across all cases (RefCell: prop closures
+        // are Fn) — also exercises stale-state reuse
+        let ws = std::cell::RefCell::new(QrdWorkspace::new());
+        prop::check(&format!("ieee bit-exact [{}]", cfg.label()), |rng| {
+            check_one(&rot, &eng, &mut ws.borrow_mut(), Val::Ieee, rng)
+        });
+    }
+}
+
+#[test]
+fn prop_hub_fast_path_is_bit_identical_to_reference() {
+    for cfg in hub_configs() {
+        let rot = HubRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        let ws = std::cell::RefCell::new(QrdWorkspace::new());
+        prop::check(&format!("hub bit-exact [{}]", cfg.label()), |rng| {
+            check_one(&rot, &eng, &mut ws.borrow_mut(), Val::Hub, rng)
+        });
+    }
+}
+
+#[test]
+fn decompose_matches_decompose_reference_exactly() {
+    // the f64 API must decode the very same bits on both paths
+    for cfg in [RotatorConfig::hub(FpFormat::SINGLE, 26, 24),
+                RotatorConfig::ieee(FpFormat::SINGLE, 26, 23)] {
+        let eng = QrdEngine::new(cfg);
+        let mut rng = Rng::new(cfg.n as u64);
+        let pool = edge_pool();
+        for _ in 0..50 {
+            let m = 2 + rng.below(6) as usize;
+            let a: Vec<Vec<f64>> = (0..m)
+                .map(|_| (0..m).map(|_| entry(&mut rng, &pool)).collect())
+                .collect();
+            let fast = eng.decompose(&a);
+            let reference = eng.decompose_reference(&a);
+            assert_eq!(fast.r, reference.r, "{} R", cfg.label());
+            assert_eq!(fast.qt, reference.qt, "{} G", cfg.label());
+        }
+    }
+}
+
+#[test]
+fn bit_level_serving_path_matches_reference_on_edge_patterns() {
+    use fp_givens::coordinator::NativeEngine;
+    let eng = NativeEngine::flagship();
+
+    // hand-picked bit patterns: zeros, negative zeros, max-exponent
+    // words, minimum-exponent words, identity-looking rows
+    let specials: Vec<u32> = vec![
+        0x0000_0000, // +0
+        0x8000_0000, // −0
+        0x3f80_0000, // 1.0
+        0xbf80_0000, // −1.0
+        0x7f7f_ffff, // max finite
+        0xff7f_ffff, // −max finite
+        0x0080_0000, // min normal
+        0x8080_0000, // −min normal
+        0x0000_0001, // subnormal (treated as zero)
+        0x7f00_0000,
+        0x0100_0000,
+    ];
+    let mut rng = Rng::new(9);
+    for case in 0..400 {
+        let a: [u32; 16] = std::array::from_fn(|_| {
+            if rng.below(3) == 0 {
+                specials[rng.below(specials.len() as u64) as usize]
+            } else {
+                let s = 2f32.powf(rng.range(-30.0, 30.0) as f32);
+                (rng.range(-1.0, 1.0) as f32 * s).to_bits()
+            }
+        });
+        assert_eq!(eng.qrd_bits(&a), eng.qrd_bits_reference(&a), "case {case}");
+    }
+
+    // the all-special corners, deterministically
+    for &w in &specials {
+        let a = [w; 16];
+        assert_eq!(eng.qrd_bits(&a), eng.qrd_bits_reference(&a), "uniform {w:#010x}");
+    }
+}
