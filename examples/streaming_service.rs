@@ -26,7 +26,7 @@ fn main() {
     let svc = Arc::new(if use_pjrt {
         println!("engine: PJRT artifact {ARTIFACT} (L1 Pallas kernel + L2 JAX graph, AOT)");
         QrdService::start(
-            || Box::new(PjrtEngine::load(ARTIFACT, 256).expect("artifact load")),
+            || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact load")),
             policy,
         )
     } else {
@@ -65,6 +65,7 @@ fn main() {
                 if inflight.len() >= window {
                     let (a, k, rx) = inflight.pop_front().unwrap();
                     let resp = rx.recv().expect("response");
+                    assert!(resp.error.is_none(), "service error: {:?}", resp.error);
                     latencies.push(resp.latency_us);
                     if k % 50 == 0 {
                         snr_sum += verify(&a, &resp.out);
@@ -74,6 +75,7 @@ fn main() {
             }
             for (a, k, rx) in inflight {
                 let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "service error: {:?}", resp.error);
                 latencies.push(resp.latency_us);
                 if k % 50 == 0 {
                     snr_sum += verify(&a, &resp.out);
@@ -94,7 +96,11 @@ fn main() {
     let wall = t0.elapsed().as_secs_f64();
 
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
+    // nearest-rank (ceil) — truncation would bias the tail percentiles low
+    let pct = |p: f64| {
+        let rank = ((p * latencies.len() as f64).ceil() as usize).clamp(1, latencies.len());
+        latencies[rank - 1]
+    };
     let m = svc.metrics();
     println!("completed         : {total} requests in {wall:.3} s");
     println!("throughput        : {:.0} QRD/s", total as f64 / wall);

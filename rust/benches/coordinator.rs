@@ -1,22 +1,57 @@
 //! Coordinator benchmarks: end-to-end service throughput (native and,
-//! when built, PJRT engines), batching-policy sensitivity, and the raw
-//! PJRT batch execution cost.
+//! when built, PJRT engines), batching-policy sensitivity, the raw PJRT
+//! batch execution cost, and the worker-pool scaling sweep whose
+//! entries are merged into `BENCH_qrd.json` (CI greps for them).
 
 use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService};
-use fp_givens::util::bench::{bench, black_box};
+use fp_givens::util::bench::{bench, black_box, merge_json, BenchResult};
 use fp_givens::util::rng::Rng;
+use std::collections::VecDeque;
+use std::time::Instant;
 
 const ARTIFACT: &str = "artifacts/model.hlo.txt";
 
-fn main() {
-    println!("== coordinator benches ==");
-    let mut rng = Rng::new(3);
-    let mats: Vec<[u32; 16]> = (0..256)
+fn random_mats(n: usize, seed: u64) -> Vec<[u32; 16]> {
+    let mut rng = Rng::new(seed);
+    (0..n)
         .map(|_| {
             let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
             std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
         })
-        .collect();
+        .collect()
+}
+
+/// Drive `clients` pipelined producers × `per_client` requests through
+/// the service (bounded in-flight window so the batcher can fill
+/// batches); returns the wall time of the whole run.
+fn run_load(svc: &QrdService, clients: usize, per_client: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                let mut inflight = VecDeque::with_capacity(256);
+                for _ in 0..per_client {
+                    let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+                    let a: [u32; 16] =
+                        std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits());
+                    inflight.push_back(svc.submit(a));
+                    if inflight.len() >= 256 {
+                        black_box(inflight.pop_front().unwrap().recv().unwrap());
+                    }
+                }
+                for rx in inflight {
+                    black_box(rx.recv().unwrap());
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    println!("== coordinator benches ==");
+    let mats = random_mats(256, 3);
 
     // service round-trip throughput vs batch policy
     for max_batch in [1usize, 16, 64] {
@@ -33,7 +68,7 @@ fn main() {
         svc.shutdown();
     }
 
-    // data-parallel batch execution inside the worker (--threads knob)
+    // data-parallel batch execution inside one worker (--threads knob)
     for threads in [1usize, 0] {
         let svc = QrdService::start(
             move || Box::new(NativeEngine::flagship().with_threads(threads)),
@@ -49,14 +84,54 @@ fn main() {
         svc.shutdown();
     }
 
+    // worker-pool scaling sweep (--workers knob): persistent engine
+    // threads behind the shared batcher. Merged into BENCH_qrd.json so
+    // the scaling trajectory is tracked PR over PR; CI fails if these
+    // entries go missing.
+    let mut results: Vec<BenchResult> = Vec::new();
+    let clients = 2usize;
+    let per_client = 8192usize;
+    let total = (clients * per_client) as f64;
+    for workers in [1usize, 2, 4] {
+        let factories: Vec<_> = (0..workers)
+            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+            .collect();
+        let svc = QrdService::start_pool(factories, BatchPolicy { max_batch: 64, max_wait_us: 100 });
+        // warm the pool (thread-local workspaces) before timing
+        run_load(&svc, clients, 512);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(run_load(&svc, clients, per_client));
+        }
+        let r = BenchResult::from_wall(
+            &format!("service throughput x{} [native, workers={workers}, batch=64]", total as u64),
+            total,
+            best,
+        );
+        println!("{}", r.report());
+        results.push(r);
+        let m = svc.metrics();
+        println!(
+            "    per-worker batches {:?}, p50 {:.0} µs  p99 {:.0} µs",
+            m.worker_batch_counts(),
+            m.latency().percentile_us(0.50).unwrap_or(f64::NAN),
+            m.latency().percentile_us(0.99).unwrap_or(f64::NAN),
+        );
+        svc.shutdown();
+    }
+    match merge_json("BENCH_qrd.json", &results) {
+        Ok(()) => println!("\nmerged {} worker-scaling entries into BENCH_qrd.json", results.len()),
+        Err(e) => eprintln!("\ncould not update BENCH_qrd.json: {e}"),
+    }
+
     // raw PJRT batch execution (L2 artifact cost per matrix)
     if std::path::Path::new(ARTIFACT).exists() {
-        let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("artifact");
+        let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact");
         bench("pjrt execute batch=256", 256.0, || {
             black_box(pjrt.run(&mats));
         });
         let svc = QrdService::start(
-            || Box::new(PjrtEngine::load(ARTIFACT, 256).expect("artifact")),
+            || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact")),
             BatchPolicy { max_batch: 256, max_wait_us: 200 },
         );
         bench("service round-trip x256 [pjrt, batch=256]", 256.0, || {

@@ -36,12 +36,21 @@ impl<T> Batcher<T> {
     /// Block for the next batch. Returns `None` when the channel is
     /// closed and drained. Never returns an empty batch.
     pub fn next_batch(&self) -> Option<Vec<T>> {
+        self.next_batch_with(self.policy.max_batch)
+    }
+
+    /// [`Self::next_batch`] with a caller-supplied size cap: the pool
+    /// clamps each worker's batches to its engine's `preferred_batch`
+    /// (a fixed-shape PJRT artifact must never see an oversized batch).
+    /// The effective cap is `min(cap, policy.max_batch)`, at least 1.
+    pub fn next_batch_with(&self, cap: usize) -> Option<Vec<T>> {
+        let max = self.policy.max_batch.min(cap).max(1);
         // block for the first request
         let first = self.rx.recv().ok()?;
-        let mut batch = Vec::with_capacity(self.policy.max_batch);
+        let mut batch = Vec::with_capacity(max);
         batch.push(first);
         let deadline = Instant::now() + Duration::from_micros(self.policy.max_wait_us);
-        while batch.len() < self.policy.max_batch {
+        while batch.len() < max {
             let now = Instant::now();
             if now >= deadline {
                 // deadline passed: take whatever is already queued
@@ -97,6 +106,46 @@ mod tests {
         let b = Batcher::new(rx, BatchPolicy::default());
         assert_eq!(b.next_batch().unwrap(), vec![7]);
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn caller_cap_clamps_batch_size() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 8, max_wait_us: 1000 });
+        // a tighter engine cap wins over the policy…
+        assert_eq!(b.next_batch_with(3).unwrap(), vec![0, 1, 2]);
+        // …but a looser one still honours the policy cap
+        assert_eq!(b.next_batch_with(100).unwrap(), vec![3, 4, 5, 6, 7, 8, 9]);
+        // a zero cap degrades to single-request batches, never empty
+        drop(tx);
+        assert!(b.next_batch_with(0).is_none());
+    }
+
+    #[test]
+    fn deadline_drains_partial_batches_under_a_slow_producer() {
+        // producer gaps (5 ms) dwarf the batching deadline (200 µs):
+        // every batch must drain well short of max_batch instead of
+        // stalling until the size cap fills
+        let (tx, rx) = channel();
+        let producer = std::thread::spawn(move || {
+            for i in 0..5 {
+                tx.send(i).unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 64, max_wait_us: 200 });
+        let mut batches = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            batches.push(batch);
+        }
+        producer.join().unwrap();
+        let all: Vec<i32> = batches.iter().flatten().copied().collect();
+        assert_eq!(all, vec![0, 1, 2, 3, 4], "no item lost or reordered");
+        assert!(batches.len() >= 3, "expected several partial drains, got {batches:?}");
+        assert!(batches.iter().all(|b| b.len() <= 2), "{batches:?}");
     }
 
     #[test]

@@ -10,7 +10,11 @@ use crate::util::par;
 pub trait BatchEngine {
     /// Execute a batch.
     fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]>;
-    /// Largest batch worth grouping for this backend.
+    /// Largest batch this backend can execute in one call. The service
+    /// clamps every worker's batches to `min(policy.max_batch, this)`,
+    /// so fixed-shape backends (an AOT PJRT artifact) report their
+    /// lowered batch size here; shape-free backends return
+    /// `usize::MAX` and let the batch policy govern alone.
     fn preferred_batch(&self) -> usize;
     /// Display name.
     fn name(&self) -> String;
@@ -121,8 +125,10 @@ impl BatchEngine for NativeEngine {
     fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
         // One matrix is a few µs; a scoped-thread spawn is tens of µs
         // and fresh threads re-warm their thread-local workspaces, so
-        // only fan out when every worker gets a meaty chunk. (A
-        // persistent worker pool would amortize this — see ROADMAP.)
+        // only fan out when every worker gets a meaty chunk. (For
+        // pool-level parallelism use `QrdService::start_pool`, whose
+        // persistent workers keep their workspaces warm across batches;
+        // this knob is the intra-batch fan-out within one worker.)
         let nt = self.threads.min(mats.len() / 16).max(1);
         if nt <= 1 {
             mats.iter().map(|m| self.qrd_bits(m)).collect()
@@ -132,7 +138,9 @@ impl BatchEngine for NativeEngine {
     }
 
     fn preferred_batch(&self) -> usize {
-        64
+        // no fixed shape: any batch the policy builds is executable, so
+        // the service's clamp must never bind here
+        usize::MAX
     }
 
     fn name(&self) -> String {
@@ -148,6 +156,12 @@ pub struct PjrtEngine {
 }
 
 impl PjrtEngine {
+    /// Batch size `make artifacts` lowers the default artifact for.
+    /// The single source of the magic number: the service clamps every
+    /// worker's batches to `preferred_batch()`, so nothing else needs
+    /// to repeat it.
+    pub const ARTIFACT_BATCH: usize = 256;
+
     /// Load the artifact (lowered for a fixed batch size).
     pub fn load(path: &str, batch: usize) -> anyhow::Result<Self> {
         Ok(PjrtEngine { rt: crate::runtime::PjrtQrd::load(path, batch, 4)?, path: path.into() })

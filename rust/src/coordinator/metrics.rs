@@ -1,27 +1,167 @@
-//! Service metrics: request/batch counters and batch-size accounting.
+//! Service metrics: request/batch counters, per-worker accounting, and
+//! a lock-free log-bucketed latency histogram so p50/p90/p99 come from
+//! the service itself rather than ad-hoc client-side math.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Shared coordinator metrics (lock-free counters).
-#[derive(Debug, Default)]
+/// Number of log-spaced histogram buckets (microsecond scale). Bucket 0
+/// holds everything ≤ 1 µs; bucket `i ≥ 1` holds `[2^((i−1)/4),
+/// 2^(i/4))` µs — four buckets per octave (±9% resolution), reaching
+/// ~2^31 µs (≈ 36 minutes) before saturating into the last bucket.
+const HIST_BUCKETS: usize = 128;
+
+/// Sub-octave resolution: buckets per factor-of-two of latency.
+const BUCKETS_PER_OCTAVE: f64 = 4.0;
+
+/// Lock-free fixed-bucket latency histogram (log-spaced boundaries).
+/// Recording is two relaxed atomic adds; readers may observe a sample
+/// in `count` slightly before its bucket (or vice versa) under
+/// concurrent recording — percentiles are monitoring data, not an
+/// ordering primitive.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    total: AtomicU64,
+    max_ns: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(us: f64) -> usize {
+        // NaN and sub-µs samples land in bucket 0
+        if !(us > 1.0) {
+            return 0;
+        }
+        (1 + (us.log2() * BUCKETS_PER_OCTAVE) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Representative value of a bucket: its geometric midpoint, µs.
+    fn bucket_value(i: usize) -> f64 {
+        if i == 0 {
+            1.0
+        } else {
+            ((i as f64 - 0.5) / BUCKETS_PER_OCTAVE).exp2()
+        }
+    }
+
+    /// Record one latency sample in microseconds.
+    pub fn record(&self, us: f64) {
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let ns = (us.max(0.0) * 1e3) as u64;
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value, µs (not bucket-quantized).
+    pub fn max_us(&self) -> f64 {
+        self.max_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Exact mean, µs; `None` when no samples were recorded.
+    pub fn mean_us(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3 / n as f64)
+    }
+
+    /// Nearest-rank percentile (`p` in `[0, 1]`); `None` when empty.
+    /// The rank is `ceil(p·N)` clamped to `[1, N]` — no truncation
+    /// bias — and the answer is the geometric midpoint of the bucket
+    /// holding that rank, so it is within the bucket resolution (±9%)
+    /// of the true order statistic.
+    pub fn percentile_us(&self, p: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            cum += c.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Some(Self::bucket_value(i));
+            }
+        }
+        Some(Self::bucket_value(HIST_BUCKETS - 1))
+    }
+}
+
+/// Shared coordinator metrics (lock-free counters + histogram).
+#[derive(Debug)]
 pub struct Metrics {
     requests: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
     busy_ns: AtomicU64,
+    worker_panics: AtomicU64,
+    per_worker_batches: Vec<AtomicU64>,
+    latency: LatencyHistogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(1)
+    }
 }
 
 impl Metrics {
+    /// Metrics for a pool of `workers` persistent engine threads.
+    pub fn new(workers: usize) -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            busy_ns: AtomicU64::new(0),
+            worker_panics: AtomicU64::new(0),
+            per_worker_batches: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            latency: LatencyHistogram::default(),
+        }
+    }
+
     /// Record an accepted request.
     pub fn on_request(&self) {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record an executed batch of `n` requests taking `ns` engine time.
-    pub fn on_batch(&self, n: usize, ns: u64) {
+    /// Record an executed batch of `n` requests taking `ns` engine time
+    /// on worker `worker` (ids past the pool size only update the
+    /// global counters).
+    pub fn on_batch(&self, worker: usize, n: usize, ns: u64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_requests.fetch_add(n as u64, Ordering::Relaxed);
         self.busy_ns.fetch_add(ns, Ordering::Relaxed);
+        if let Some(w) = self.per_worker_batches.get(worker) {
+            w.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one request latency (enqueue → response send), µs.
+    pub fn on_latency_us(&self, us: f64) {
+        self.latency.record(us);
+    }
+
+    /// Record a worker retired by an engine panic.
+    pub fn on_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Total requests accepted.
@@ -29,7 +169,7 @@ impl Metrics {
         self.requests.load(Ordering::Relaxed)
     }
 
-    /// Batches executed.
+    /// Batches executed (all workers).
     pub fn batches(&self) -> u64 {
         self.batches.load(Ordering::Relaxed)
     }
@@ -40,9 +180,34 @@ impl Metrics {
         self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
     }
 
-    /// Engine-busy seconds.
+    /// Engine-busy seconds summed over workers.
     pub fn busy_secs(&self) -> f64 {
         self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Engine panics observed (each retires one worker).
+    pub fn worker_panics(&self) -> u64 {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Pool size this metrics object was created for.
+    pub fn workers(&self) -> usize {
+        self.per_worker_batches.len()
+    }
+
+    /// Batches executed by one worker (0 for ids past the pool size).
+    pub fn worker_batches(&self, worker: usize) -> u64 {
+        self.per_worker_batches.get(worker).map(|w| w.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    /// Per-worker batch counts, indexed by worker id.
+    pub fn worker_batch_counts(&self) -> Vec<u64> {
+        self.per_worker_batches.iter().map(|w| w.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The request-latency histogram.
+    pub fn latency(&self) -> &LatencyHistogram {
+        &self.latency
     }
 }
 
@@ -55,11 +220,78 @@ mod tests {
         let m = Metrics::default();
         m.on_request();
         m.on_request();
-        m.on_batch(2, 1000);
-        m.on_batch(4, 3000);
+        m.on_batch(0, 2, 1000);
+        m.on_batch(0, 4, 3000);
         assert_eq!(m.requests(), 2);
         assert_eq!(m.batches(), 2);
         assert!((m.mean_batch() - 3.0).abs() < 1e-12);
         assert!((m.busy_secs() - 4e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn per_worker_accounting() {
+        let m = Metrics::new(3);
+        assert_eq!(m.workers(), 3);
+        m.on_batch(0, 1, 10);
+        m.on_batch(2, 1, 10);
+        m.on_batch(2, 1, 10);
+        assert_eq!(m.worker_batch_counts(), vec![1, 0, 2]);
+        assert_eq!(m.worker_batches(2), 2);
+        assert_eq!(m.batches(), 3);
+        // an id past the pool size must not panic, and still counts
+        // toward the global totals
+        m.on_batch(7, 1, 10);
+        assert_eq!(m.batches(), 4);
+        assert_eq!(m.worker_batches(7), 0);
+    }
+
+    #[test]
+    fn histogram_nearest_rank_percentiles() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.percentile_us(0.5), None);
+        for v in 1..=100 {
+            h.record(v as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.max_us() - 100.0).abs() < 1e-9);
+        let p50 = h.percentile_us(0.50).unwrap();
+        assert!((40.0..=60.0).contains(&p50), "p50 {p50}");
+        let p99 = h.percentile_us(0.99).unwrap();
+        assert!((85.0..=115.0).contains(&p99), "p99 {p99}");
+        let mean = h.mean_us().unwrap();
+        assert!((mean - 50.5).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    fn histogram_single_sample_and_edges() {
+        let h = LatencyHistogram::default();
+        h.record(7.0);
+        // p100 nearest-rank of one sample: the bucket holding 7 µs
+        let p = h.percentile_us(1.0).unwrap();
+        assert!((5.5..=8.5).contains(&p), "{p}");
+        // sub-µs and pathological samples land in bucket 0, no panic
+        h.record(0.0);
+        h.record(-3.0);
+        h.record(f64::NAN);
+        assert_eq!(h.count(), 4);
+        let p0 = h.percentile_us(0.0).unwrap();
+        assert!(p0 <= 1.0 + 1e-9, "{p0}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_monotone() {
+        // recording increasing values yields non-decreasing percentiles
+        let h = LatencyHistogram::default();
+        for v in [2.0, 20.0, 200.0, 2000.0, 20000.0] {
+            h.record(v);
+        }
+        let mut last = 0.0;
+        for p in [0.1, 0.3, 0.5, 0.7, 0.9, 1.0] {
+            let v = h.percentile_us(p).unwrap();
+            assert!(v >= last, "p{p} {v} < {last}");
+            last = v;
+        }
+        // the top sample is in the right octave
+        assert!((13000.0..=28000.0).contains(&last), "{last}");
     }
 }

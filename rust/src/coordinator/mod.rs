@@ -2,14 +2,18 @@
 //!
 //! The deployable system around the rotation unit: clients submit 4×4
 //! matrices, a dynamic batcher groups them (size + deadline policy,
-//! vLLM-router style), a worker executes batches on either the
-//! bit-accurate native engine or the AOT-compiled PJRT artifact, and
-//! responses stream back with per-request latency. Bounded queues give
-//! natural backpressure. Python is never on this path.
+//! vLLM-router style), a pool of persistent workers executes batches on
+//! either the bit-accurate native engine or the AOT-compiled PJRT
+//! artifact, and responses stream back with per-request latency.
+//! Bounded queues give natural backpressure. Python is never on this
+//! path.
 //!
 //! Threading model: `std::thread` + `std::sync::mpsc` (the offline
 //! stand-in for tokio — request routing is CPU-bound here, so blocking
-//! channels are the right tool anyway).
+//! channels are the right tool anyway). Two orthogonal knobs: `workers`
+//! is the number of persistent engine threads behind the shared
+//! batcher; `threads` is the intra-batch fan-out *inside* one native
+//! engine.
 
 mod batcher;
 mod engine;
@@ -18,58 +22,71 @@ mod service;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
-pub use metrics::Metrics;
+pub use metrics::{LatencyHistogram, Metrics};
 pub use service::{QrdService, Request, Response};
 
+use crate::util::par;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
 /// Run the coordinator under a synthetic client load and print a
 /// throughput/latency report (the `repro serve` command and the
-/// streaming_service example both land here). Single-threaded batch
-/// execution; see [`serve_synthetic_with`] for the thread knob.
+/// streaming_service example both land here). One worker, serial batch
+/// execution; see [`serve_synthetic_with`] for the knobs.
 pub fn serve_synthetic(
     engine: &str,
     requests: usize,
     max_batch: usize,
     artifact: &str,
 ) -> anyhow::Result<()> {
-    serve_synthetic_with(engine, requests, max_batch, artifact, 1)
+    serve_synthetic_with(engine, requests, max_batch, artifact, 1, 1)
 }
 
-/// [`serve_synthetic`] with an explicit batch-execution thread count
-/// for the native engine (`0` = one worker per core). Surfaced on the
-/// CLI as `repro serve --threads N`.
+/// [`serve_synthetic`] with explicit `threads` (intra-batch fan-out for
+/// the native engine) and `workers` (persistent engine threads in the
+/// pool). `0` means one per core for either knob. Surfaced on the CLI
+/// as `repro serve --threads N --workers W`.
 pub fn serve_synthetic_with(
     engine: &str,
     requests: usize,
     max_batch: usize,
     artifact: &str,
     threads: usize,
+    workers: usize,
 ) -> anyhow::Result<()> {
+    let workers = if workers == 0 { par::threads() } else { workers };
     let policy = BatchPolicy { max_batch, max_wait_us: 200 };
     let (svc, name) = match engine {
         "native" => {
-            let eng = NativeEngine::flagship().with_threads(threads);
-            let name = eng.name();
-            (QrdService::start(move || Box::new(eng) as _, policy), name)
+            let name = NativeEngine::flagship().with_threads(threads).name();
+            let factories: Vec<_> = (0..workers)
+                .map(|_| {
+                    move || {
+                        Box::new(NativeEngine::flagship().with_threads(threads))
+                            as Box<dyn BatchEngine>
+                    }
+                })
+                .collect();
+            (QrdService::start_pool(factories, policy), name)
         }
         "pjrt" => {
             // probe the artifact on this thread so load errors surface
-            // before the worker starts
-            let probe = PjrtEngine::load(artifact, 256)?;
+            // before the workers start
+            let probe = PjrtEngine::load(artifact, PjrtEngine::ARTIFACT_BATCH)?;
             let name = probe.name();
             drop(probe);
-            let path = artifact.to_string();
-            (
-                QrdService::start(
+            let factories: Vec<_> = (0..workers)
+                .map(|_| {
+                    let path = artifact.to_string();
                     move || {
-                        Box::new(PjrtEngine::load(&path, 256).expect("artifact load")) as _
-                    },
-                    policy,
-                ),
-                name,
-            )
+                        Box::new(
+                            PjrtEngine::load(&path, PjrtEngine::ARTIFACT_BATCH)
+                                .expect("artifact load"),
+                        ) as Box<dyn BatchEngine>
+                    }
+                })
+                .collect();
+            (QrdService::start_pool(factories, policy), name)
         }
         other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
     };
@@ -86,28 +103,43 @@ pub fn serve_synthetic_with(
         }
         pending.push(svc.submit(a));
     }
-    let mut latencies: Vec<f64> = Vec::with_capacity(requests);
+    let mut errors = 0usize;
     for rx in pending {
-        let resp = rx.recv().expect("service dropped a request");
-        latencies.push(resp.latency_us);
+        match rx.recv() {
+            Ok(resp) if resp.error.is_none() => {}
+            _ => errors += 1,
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[((latencies.len() - 1) as f64 * p) as usize];
     println!("engine            : {name}");
-    println!("requests          : {requests}");
+    println!("pool              : {} worker(s)", m.workers());
+    println!("requests          : {requests} ({errors} errored)");
     println!("wall time         : {wall:.3} s");
     println!("throughput        : {:.0} QRD/s", requests as f64 / wall);
-    println!("batches executed  : {}", m.batches());
-    println!("mean batch size   : {:.1}", m.mean_batch());
     println!(
-        "latency µs        : p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
-        pct(0.5),
-        pct(0.9),
-        pct(0.99),
-        latencies.last().unwrap()
+        "batches executed  : {} (per worker: {:?})",
+        m.batches(),
+        m.worker_batch_counts()
     );
+    println!("mean batch size   : {:.1}", m.mean_batch());
+    // service-side histogram percentiles (nearest-rank over log-spaced
+    // buckets) — no client-side latency math, and `--requests 0` is a
+    // report with no samples rather than a panic
+    let h = m.latency();
+    match (h.percentile_us(0.50), h.percentile_us(0.90), h.percentile_us(0.99)) {
+        (Some(p50), Some(p90), Some(p99)) => println!(
+            "latency µs        : p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
+            p50,
+            p90,
+            p99,
+            h.max_us()
+        ),
+        _ => println!("latency µs        : (no completed requests)"),
+    }
     svc.shutdown();
+    if errors > 0 {
+        anyhow::bail!("{errors} of {requests} requests failed");
+    }
     Ok(())
 }

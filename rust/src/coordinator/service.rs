@@ -1,11 +1,28 @@
-//! The QRD service: bounded ingress queue → batcher → engine worker →
-//! per-request response channels.
+//! The QRD service: bounded ingress queue → shared batcher → N
+//! persistent engine workers → per-request response channels.
+//!
+//! Pool shape: one `Batcher` behind a mutex, pulled by persistent
+//! worker threads. Whoever is idle grabs the lock, forms the next
+//! batch (capped at its own engine's `preferred_batch`), releases the
+//! lock and executes — so batch *formation* is serialized (it is
+//! microseconds of channel draining) while batch *execution* overlaps
+//! across workers. Persistent workers keep their thread-local
+//! `QrdWorkspace`s warm across batches, unlike the per-batch scoped
+//! threads inside `NativeEngine::run`.
+//!
+//! Failure containment: an engine panic retires only that worker (its
+//! in-flight batch is answered with error responses); the rest of the
+//! pool keeps serving. Once every worker has exited, `submit` degrades
+//! to immediate error responses instead of aborting the process.
+//! Global FIFO ordering across workers is explicitly not promised —
+//! each request carries its own response channel.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::BatchEngine;
 use super::metrics::Metrics;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -19,25 +36,47 @@ pub struct Request {
     pub enq: Instant,
 }
 
-/// One response: `[R | G]` bits plus measured latency.
+/// One response: `[R | G]` bits plus measured latency, or a
+/// service-side failure.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// Row-major output bits (4×8).
+    /// Row-major output bits (4×8); zeroed when `error` is set.
     pub out: [u32; 32],
     /// Request latency in microseconds (enqueue → response send).
     pub latency_us: f64,
+    /// `Some(reason)` when the service could not execute the request
+    /// (engine worker died, pool shut down).
+    pub error: Option<String>,
 }
 
-/// Handle to a running service.
+impl Response {
+    fn ok(out: [u32; 32], latency_us: f64) -> Response {
+        Response { out, latency_us, error: None }
+    }
+
+    fn failed(reason: &str, latency_us: f64) -> Response {
+        Response { out: [0u32; 32], latency_us, error: Some(reason.to_string()) }
+    }
+
+    /// The decomposition bits, or the service-side failure reason.
+    pub fn result(&self) -> Result<&[u32; 32], &str> {
+        match &self.error {
+            None => Ok(&self.out),
+            Some(e) => Err(e),
+        }
+    }
+}
+
+/// Handle to a running service (a pool of persistent engine workers).
 pub struct QrdService {
     ingress: SyncSender<Request>,
     metrics: Arc<Metrics>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 impl QrdService {
-    /// Start the service with a bounded ingress queue (backpressure:
-    /// `submit` blocks when 4× the batch size is already queued).
+    /// Start a single-worker service — [`Self::start_pool`] with one
+    /// engine. Kept as the simple entry point for tests and examples.
     ///
     /// The engine is built *inside* the worker thread via `factory`:
     /// PJRT client handles are not `Send` (they wrap `Rc` internals), so
@@ -46,21 +85,50 @@ impl QrdService {
     where
         F: FnOnce() -> Box<dyn BatchEngine> + Send + 'static,
     {
-        let (tx, rx) = sync_channel::<Request>(policy.max_batch * 4);
-        let metrics = Arc::new(Metrics::default());
-        let m2 = metrics.clone();
-        let worker = std::thread::spawn(move || worker_loop(factory(), rx, policy, m2));
-        QrdService { ingress: tx, metrics, worker: Some(worker) }
+        Self::start_pool(vec![factory], policy)
+    }
+
+    /// Start a pool with one persistent worker per factory, all pulling
+    /// from a shared bounded ingress queue (backpressure: `submit`
+    /// blocks when 4× the batch size is already queued). Each worker
+    /// clamps its batches to its own engine's `preferred_batch`, so a
+    /// fixed-shape backend never sees an oversized batch regardless of
+    /// the policy's `max_batch`.
+    pub fn start_pool<F>(factories: Vec<F>, policy: BatchPolicy) -> QrdService
+    where
+        F: FnOnce() -> Box<dyn BatchEngine> + Send + 'static,
+    {
+        assert!(!factories.is_empty(), "pool needs at least one engine factory");
+        let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
+        let metrics = Arc::new(Metrics::new(factories.len()));
+        let ingress = Arc::new(Mutex::new(Batcher::new(rx, policy)));
+        let workers = factories
+            .into_iter()
+            .enumerate()
+            .map(|(id, factory)| {
+                let ingress = ingress.clone();
+                let m = metrics.clone();
+                std::thread::Builder::new()
+                    .name(format!("qrd-worker-{id}"))
+                    .spawn(move || worker_loop(id, factory(), ingress, m))
+                    .expect("spawn qrd worker")
+            })
+            .collect();
+        QrdService { ingress: tx, metrics, workers }
     }
 
     /// Submit one matrix; returns the response receiver. Blocks if the
-    /// ingress queue is full (backpressure).
+    /// ingress queue is full (backpressure). If every worker has exited
+    /// (crash or shutdown race), the receiver yields an error
+    /// [`Response`] instead of the process aborting.
     pub fn submit(&self, a: [u32; 16]) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.metrics.on_request();
-        self.ingress
-            .send(Request { a, tx, enq: Instant::now() })
-            .expect("service worker died");
+        if let Err(dead) = self.ingress.send(Request { a, tx, enq: Instant::now() }) {
+            let req = dead.0;
+            let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+            let _ = req.tx.send(Response::failed("service workers have exited", latency_us));
+        }
         rx
     }
 
@@ -69,33 +137,67 @@ impl QrdService {
         self.metrics.clone()
     }
 
-    /// Graceful shutdown: close ingress, join the worker.
-    pub fn shutdown(mut self) {
-        drop(self.ingress);
-        if let Some(w) = self.worker.take() {
+    /// Number of workers the pool was started with.
+    pub fn pool_size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful shutdown: close ingress, join every worker.
+    pub fn shutdown(self) {
+        let QrdService { ingress, metrics: _, workers } = self;
+        drop(ingress);
+        for w in workers {
             let _ = w.join();
         }
     }
 }
 
 fn worker_loop(
+    id: usize,
     engine: Box<dyn BatchEngine>,
-    rx: Receiver<Request>,
-    policy: BatchPolicy,
+    ingress: Arc<Mutex<Batcher<Request>>>,
     metrics: Arc<Metrics>,
 ) {
-    let batcher = Batcher::new(rx, policy);
-    while let Some(batch) = batcher.next_batch() {
+    // never hand this engine more than it prefers (fixed-shape PJRT
+    // artifacts reject oversized batches)
+    let cap = engine.preferred_batch().max(1);
+    loop {
+        let batch = {
+            // a worker that panicked inside the engine never held this
+            // lock, but recover from poisoning anyway: the batcher's
+            // state is just a channel, always safe to keep draining
+            let batcher = ingress.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            batcher.next_batch_with(cap)
+        };
+        let Some(batch) = batch else { return };
         let mats: Vec<[u32; 16]> = batch.iter().map(|r| r.a).collect();
         let t0 = Instant::now();
-        let outs = engine.run(&mats);
-        let dt = t0.elapsed();
-        metrics.on_batch(batch.len(), dt.as_nanos() as u64);
-        debug_assert_eq!(outs.len(), batch.len());
-        for (req, out) in batch.into_iter().zip(outs) {
-            let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-            // receiver may have been dropped — that's the client's choice
-            let _ = req.tx.send(Response { out, latency_us });
+        match catch_unwind(AssertUnwindSafe(|| engine.run(&mats))) {
+            Ok(outs) => {
+                let dt = t0.elapsed();
+                metrics.on_batch(id, batch.len(), dt.as_nanos() as u64);
+                debug_assert_eq!(outs.len(), batch.len());
+                for (req, out) in batch.into_iter().zip(outs) {
+                    let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+                    metrics.on_latency_us(latency_us);
+                    // receiver may have been dropped — the client's choice
+                    let _ = req.tx.send(Response::ok(out, latency_us));
+                }
+            }
+            Err(_) => {
+                // the engine's state is unknown after a panic: fail this
+                // batch's clients and retire the worker; the rest of the
+                // pool keeps serving, and when the last worker exits
+                // `submit` degrades to error responses
+                metrics.on_worker_panic();
+                for req in batch {
+                    let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+                    let _ = req
+                        .tx
+                        .send(Response::failed("engine worker panicked", latency_us));
+                }
+                return;
+            }
         }
     }
 }
@@ -104,6 +206,7 @@ fn worker_loop(
 mod tests {
     use super::*;
     use crate::coordinator::NativeEngine;
+    use std::time::Duration;
 
     #[test]
     fn all_requests_answered_in_order_of_submission() {
@@ -123,6 +226,7 @@ mod tests {
         for (rx, want) in rxs.into_iter().zip(expected) {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.out, want);
+            assert!(resp.error.is_none());
             assert!(resp.latency_us >= 0.0);
         }
         let m = svc.metrics();
@@ -139,6 +243,122 @@ mod tests {
         );
         let rx = svc.submit([0u32; 16]);
         let _ = rx.recv().unwrap();
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pool_serves_correctly_and_accounts_per_worker() {
+        let factories: Vec<_> = (0..3)
+            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+            .collect();
+        let svc = QrdService::start_pool(
+            factories,
+            BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        );
+        assert_eq!(svc.pool_size(), 3);
+        let eng = NativeEngine::flagship();
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for k in 0..120u32 {
+            let a: [u32; 16] =
+                std::array::from_fn(|i| ((k as f32 + 0.5) * (i as f32 - 7.5) * 0.07).to_bits());
+            want.push(eng.qrd_bits(&a));
+            rxs.push(svc.submit(a));
+        }
+        for (rx, want) in rxs.into_iter().zip(want) {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none());
+            assert_eq!(resp.out, want);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests(), 120);
+        assert_eq!(m.workers(), 3);
+        // every batch is attributed to exactly one worker
+        let per_worker: u64 = m.worker_batch_counts().iter().sum();
+        assert_eq!(per_worker, m.batches());
+        // the histogram saw every completed request
+        assert_eq!(m.latency().count(), 120);
+        assert!(m.latency().percentile_us(0.5).unwrap() > 0.0);
+        svc.shutdown();
+    }
+
+    /// Engine that panics on its first batch — the "worker died"
+    /// injection for the hardened-lifecycle tests.
+    struct PanicEngine;
+
+    impl BatchEngine for PanicEngine {
+        fn run(&self, _mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+            panic!("engine failure injected by test");
+        }
+        fn preferred_batch(&self) -> usize {
+            8
+        }
+        fn name(&self) -> String {
+            "panic-test".into()
+        }
+    }
+
+    #[test]
+    fn dead_worker_surfaces_errors_instead_of_aborting() {
+        let svc = QrdService::start(
+            || Box::new(PanicEngine),
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+        );
+        // the first request reaches the engine, which panics: the client
+        // must see an error response — not a process abort
+        let resp = svc.submit([0u32; 16]).recv().expect("error response, not a dropped channel");
+        assert!(resp.error.is_some(), "{resp:?}");
+        assert!(resp.result().is_err());
+        assert_eq!(svc.metrics().worker_panics(), 1);
+        // once the dead worker's queue handle is gone, `submit` itself
+        // degrades to an immediate error response; until then a raced
+        // request may be dropped with the queue (RecvError) — either
+        // way the client sees an error, never an abort
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match svc.submit([0u32; 16]).recv() {
+                Ok(resp) => {
+                    assert!(resp.error.is_some(), "{resp:?}");
+                    break;
+                }
+                Err(_) => {}
+            }
+            assert!(
+                Instant::now() < deadline,
+                "submit never surfaced an error after the pool died"
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pool_survives_a_dead_worker() {
+        type Factory = Box<dyn FnOnce() -> Box<dyn BatchEngine> + Send>;
+        let factories: Vec<Factory> = vec![
+            Box::new(|| Box::new(PanicEngine) as Box<dyn BatchEngine>),
+            Box::new(|| Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>),
+        ];
+        let svc =
+            QrdService::start_pool(factories, BatchPolicy { max_batch: 4, max_wait_us: 50 });
+        let eng = NativeEngine::flagship();
+        let mut served = 0usize;
+        let mut errored = 0usize;
+        for k in 0..60u32 {
+            let a: [u32; 16] =
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.1).to_bits());
+            match svc.submit(a).recv() {
+                Ok(resp) if resp.error.is_none() => {
+                    assert_eq!(resp.out, eng.qrd_bits(&a));
+                    served += 1;
+                }
+                _ => errored += 1,
+            }
+        }
+        // the panicking engine can fail at most its own first batch; the
+        // surviving native worker keeps answering
+        assert!(served >= 40, "served {served}, errored {errored}");
+        assert!(svc.metrics().worker_panics() <= 1);
         svc.shutdown();
     }
 }

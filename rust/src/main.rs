@@ -5,8 +5,13 @@
 //! repro report [--nmat N] [--seed S]     run every experiment
 //! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
 //! repro serve [--engine native|pjrt] [--requests N] [--batch B]
-//!             [--threads T] [--artifact artifacts/qrd4_hub.hlo.txt]
+//!             [--workers W] [--threads T]
+//!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //! ```
+//!
+//! `--workers` is the number of persistent engine threads in the pool;
+//! `--threads` is the intra-batch fan-out inside one native engine.
+//! `0` means one per core for either knob.
 
 use fp_givens::util::cli::Args;
 
@@ -14,7 +19,7 @@ const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--threads T] [--artifact PATH]";
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--artifact PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -77,9 +82,10 @@ fn main() -> anyhow::Result<()> {
             let requests = args.get_as("requests", 10_000usize);
             let batch = args.get_as("batch", 64usize);
             let threads = args.get_as("threads", 1usize);
+            let workers = args.get_as("workers", 1usize);
             let artifact = args.get("artifact", "artifacts/qrd4_hub.hlo.txt");
             fp_givens::coordinator::serve_synthetic_with(
-                &engine, requests, batch, &artifact, threads,
+                &engine, requests, batch, &artifact, threads, workers,
             )?;
         }
         _ => {

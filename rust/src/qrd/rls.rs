@@ -45,10 +45,12 @@ impl QrdRls {
         let fmt = self.rot.cfg.fmt;
         // exponential forgetting: scale the triangle by √λ (hardware
         // folds this into the compensation multipliers; the functional
-        // model re-encodes)
+        // model re-encodes). Row i carries data only at columns j ≥ i:
+        // the sub-diagonal triangle is structurally zero and must stay
+        // exactly zero, so it is never decoded or re-encoded.
         if self.sqrt_lambda != 1.0 {
-            for row in &mut self.tri {
-                for v in row.iter_mut() {
+            for (i, row) in self.tri.iter_mut().enumerate() {
+                for v in row[i..].iter_mut() {
                     *v = self.rot.encode(v.to_f64(fmt) * self.sqrt_lambda);
                 }
             }
@@ -142,6 +144,28 @@ mod tests {
         let w = rls.weights();
         assert!((w[0] + 0.3).abs() < 0.05, "{w:?}");
         assert!((w[1] - 0.9).abs() < 0.05, "{w:?}");
+    }
+
+    #[test]
+    fn forgetting_keeps_lower_triangle_exactly_zero() {
+        // λ < 1 exercises the forgetting rescale every update; the
+        // structurally-zero sub-diagonal entries must never be touched
+        let mut rls = QrdRls::new(cfg(), 4, 0.97, 1e-3);
+        let mut rng = Rng::new(11);
+        let mut xbuf = [0.0f64; 4];
+        for _ in 0..64 {
+            xbuf.rotate_right(1);
+            xbuf[0] = rng.range(-1.0, 1.0);
+            let d: f64 = xbuf.iter().sum::<f64>() * 0.5;
+            rls.update(&xbuf, d);
+            for i in 0..4 {
+                for j in 0..i {
+                    assert!(rls.tri[i][j].is_zero(), "tri[{i}][{j}] drifted off zero");
+                }
+            }
+        }
+        // and the filter still converges on data it has seen
+        assert!(rls.weights().iter().all(|w| w.is_finite()));
     }
 
     #[test]

@@ -19,6 +19,21 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Build a result from one externally timed run: `items` processed
+    /// in `secs` of wall time. Used by service-level benches where the
+    /// workload (a pool round-trip with its own threads) cannot be
+    /// re-entered as a `bench()` closure; the whole run counts as one
+    /// iteration.
+    pub fn from_wall(name: &str, items: f64, secs: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            ns_per_iter: secs * 1e9,
+            min_ns: secs * 1e9,
+            iters: 1,
+            items_per_iter: items,
+        }
+    }
+
     /// items/s implied by the median time.
     pub fn items_per_sec(&self) -> f64 {
         self.items_per_iter / (self.ns_per_iter * 1e-9)
@@ -100,33 +115,72 @@ fn json_escape(s: &str) -> String {
         .collect()
 }
 
-/// Serialize results as machine-readable JSON so the perf trajectory
-/// can be tracked PR over PR (no serde offline — hand-rolled, schema:
-/// `{"benches": [{"name", "ns_per_iter", "min_ns", "iters",
-/// "items_per_iter", "items_per_sec"}]}`).
-pub fn to_json(results: &[BenchResult]) -> String {
+/// One serialized entry (no trailing comma, no indentation).
+fn entry_json(r: &BenchResult) -> String {
+    let ips = if r.items_per_iter > 0.0 { r.items_per_sec() } else { 0.0 };
+    format!(
+        "{{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"min_ns\": {:.3}, \
+         \"iters\": {}, \"items_per_iter\": {}, \"items_per_sec\": {:.1}}}",
+        json_escape(&r.name),
+        r.ns_per_iter,
+        r.min_ns,
+        r.iters,
+        r.items_per_iter,
+        ips,
+    )
+}
+
+fn entries_to_json(entries: &[String]) -> String {
     let mut out = String::from("{\n  \"benches\": [\n");
-    for (i, r) in results.iter().enumerate() {
-        let ips = if r.items_per_iter > 0.0 { r.items_per_sec() } else { 0.0 };
-        out.push_str(&format!(
-            "    {{\"name\": \"{}\", \"ns_per_iter\": {:.3}, \"min_ns\": {:.3}, \
-             \"iters\": {}, \"items_per_iter\": {}, \"items_per_sec\": {:.1}}}{}\n",
-            json_escape(&r.name),
-            r.ns_per_iter,
-            r.min_ns,
-            r.iters,
-            r.items_per_iter,
-            ips,
-            if i + 1 == results.len() { "" } else { "," }
-        ));
+    for (i, e) in entries.iter().enumerate() {
+        out.push_str("    ");
+        out.push_str(e);
+        out.push_str(if i + 1 == entries.len() { "\n" } else { ",\n" });
     }
     out.push_str("  ]\n}\n");
     out
 }
 
-/// Write results to a JSON file (e.g. `BENCH_qrd.json`).
+/// Serialize results as machine-readable JSON so the perf trajectory
+/// can be tracked PR over PR (no serde offline — hand-rolled, schema:
+/// `{"benches": [{"name", "ns_per_iter", "min_ns", "iters",
+/// "items_per_iter", "items_per_sec"}]}`).
+pub fn to_json(results: &[BenchResult]) -> String {
+    entries_to_json(&results.iter().map(entry_json).collect::<Vec<_>>())
+}
+
+/// Write results to a JSON file (e.g. `BENCH_qrd.json`), replacing
+/// whatever was there. The first bench of a run (`qrd_engine`) uses
+/// this; later benches append with [`merge_json`].
 pub fn write_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
     std::fs::write(path, to_json(results))
+}
+
+/// Merge results into an existing JSON file written by [`write_json`]
+/// (one entry per line, same schema): entries with a matching name are
+/// replaced, new ones appended, everything else kept. Lets several
+/// bench binaries (`qrd_engine`, then `coordinator`) contribute to one
+/// `BENCH_qrd.json`. A missing or unreadable file degrades to a fresh
+/// write.
+pub fn merge_json(path: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    // key = the serialized prefix up to the closing name quote, so
+    // escaped names compare exactly
+    let new_keys: Vec<String> = results
+        .iter()
+        .map(|r| format!("{{\"name\": \"{}\"", json_escape(&r.name)))
+        .collect();
+    let mut entries: Vec<String> = Vec::new();
+    if let Ok(existing) = std::fs::read_to_string(path) {
+        for line in existing.lines() {
+            let t = line.trim();
+            if t.starts_with("{\"name\": ") && !new_keys.iter().any(|k| t.starts_with(k.as_str()))
+            {
+                entries.push(t.trim_end_matches(',').to_string());
+            }
+        }
+    }
+    entries.extend(results.iter().map(entry_json));
+    std::fs::write(path, entries_to_json(&entries))
 }
 
 #[cfg(test)]
@@ -156,5 +210,46 @@ mod tests {
         assert!(js.contains("\\\"bit\\\""));
         assert!(js.contains("\\\\x"));
         assert!(js.contains("\"ns_per_iter\": 1234.500"));
+    }
+
+    #[test]
+    fn from_wall_reports_throughput() {
+        let r = BenchResult::from_wall("svc", 1000.0, 0.5);
+        assert_eq!(r.iters, 1);
+        assert!((r.items_per_sec() - 2000.0).abs() < 1e-6);
+        assert!((r.ns_per_iter - 5e8).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_json_replaces_and_appends() {
+        let mk = |name: &str, ns: f64| BenchResult {
+            name: name.into(),
+            ns_per_iter: ns,
+            min_ns: ns,
+            iters: 1,
+            items_per_iter: 1.0,
+        };
+        let path = std::env::temp_dir().join(format!(
+            "bench_merge_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        write_json(&path, &[mk("alpha", 1.0), mk("beta", 2.0)]).unwrap();
+        // replaces beta, appends gamma, keeps alpha
+        merge_json(&path, &[mk("beta", 9.0), mk("gamma", 3.0)]).unwrap();
+        let merged = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(merged.matches("\"name\": \"alpha\"").count(), 1);
+        assert_eq!(merged.matches("\"name\": \"beta\"").count(), 1);
+        assert_eq!(merged.matches("\"name\": \"gamma\"").count(), 1);
+        assert!(merged.contains("\"ns_per_iter\": 9.000"), "{merged}");
+        assert!(!merged.contains("\"ns_per_iter\": 2.000"), "{merged}");
+        // the merged file is still in the line-per-entry schema: a
+        // second merge keeps working
+        merge_json(&path, &[mk("alpha", 5.0)]).unwrap();
+        let again = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(again.matches("\"name\": \"alpha\"").count(), 1);
+        assert!(again.contains("\"ns_per_iter\": 5.000"));
+        assert_eq!(again.matches("\"name\": \"gamma\"").count(), 1);
     }
 }

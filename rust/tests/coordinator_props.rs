@@ -1,7 +1,7 @@
 //! Coordinator property tests: no request lost, order preserved,
 //! responses correct under concurrent clients, batch-size caps hold.
 
-use fp_givens::coordinator::{BatchPolicy, NativeEngine, QrdService};
+use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, QrdService};
 use fp_givens::util::prop;
 use fp_givens::util::rng::Rng;
 use std::sync::Arc;
@@ -66,6 +66,66 @@ fn concurrent_clients_all_served_correctly() {
     // batching actually happened under concurrency
     assert!(m.mean_batch() >= 1.0);
     assert!(m.batches() <= (clients * per_client) as u64);
+}
+
+#[test]
+fn pool_stress_concurrent_submitters_each_get_their_own_answer() {
+    // M client threads × K requests each against a 4-worker pool: every
+    // response must match qrd_bits of its *own* input (no cross-wiring
+    // under work-stealing), and the metrics must add up. Responses are
+    // drained through a pipelined window so several batches are in
+    // flight per client — global FIFO across workers is not promised,
+    // per-request pairing is.
+    let workers = 4usize;
+    let factories: Vec<_> = (0..workers)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc = Arc::new(QrdService::start_pool(
+        factories,
+        BatchPolicy { max_batch: 16, max_wait_us: 100 },
+    ));
+    let clients = 6usize;
+    let per_client = 250usize;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let eng = NativeEngine::flagship();
+            let mut rng = Rng::new(c as u64 * 91 + 7);
+            let mut inflight = std::collections::VecDeque::new();
+            for _ in 0..per_client {
+                let m = random_matrix(&mut rng);
+                inflight.push_back((m, svc.submit(m)));
+                if inflight.len() >= 32 {
+                    let (m, rx) = inflight.pop_front().unwrap();
+                    let resp = rx.recv().expect("response");
+                    assert!(resp.error.is_none(), "client {c}: {:?}", resp.error);
+                    assert_eq!(resp.out, eng.qrd_bits(&m), "client {c}");
+                }
+            }
+            for (m, rx) in inflight {
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "client {c}: {:?}", resp.error);
+                assert_eq!(resp.out, eng.qrd_bits(&m), "client {c}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (clients * per_client) as u64;
+    let m = svc.metrics();
+    assert_eq!(m.requests(), total);
+    // every request was batched exactly once, every batch is attributed
+    // to exactly one worker, and every completed request hit the
+    // latency histogram
+    let batched: f64 = m.mean_batch() * m.batches() as f64;
+    assert_eq!(batched.round() as u64, total);
+    assert_eq!(m.worker_batch_counts().iter().sum::<u64>(), m.batches());
+    assert_eq!(m.latency().count(), total);
+    assert_eq!(m.worker_panics(), 0);
+    let svc = Arc::try_unwrap(svc).ok().expect("all clients joined");
+    svc.shutdown();
 }
 
 #[test]

@@ -24,7 +24,7 @@ fn pjrt_artifact_matches_native_engine_bit_for_bit() {
         eprintln!("skipping: {ARTIFACT} not built (run `make artifacts`)");
         return;
     }
-    let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("load artifact");
+    let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("load artifact");
     let native = NativeEngine::flagship();
     let mats = random_mats(64, 99);
     let got = pjrt.run(&mats);
@@ -40,7 +40,7 @@ fn pjrt_short_batches_pad_correctly() {
         eprintln!("skipping: {ARTIFACT} not built");
         return;
     }
-    let pjrt = PjrtEngine::load(ARTIFACT, 256).expect("load artifact");
+    let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("load artifact");
     let native = NativeEngine::flagship();
     for n in [1usize, 7, 255] {
         let mats = random_mats(n, n as u64);
