@@ -12,7 +12,9 @@
 //! Results recorded in EXPERIMENTS.md §E2E.
 
 use fp_givens::analysis::snr_db;
-use fp_givens::coordinator::{BatchPolicy, NativeEngine, PjrtEngine, QrdService};
+use fp_givens::coordinator::{
+    BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService, RestartPolicy,
+};
 use fp_givens::fp::{FpFormat, HubFp};
 use fp_givens::util::rng::Rng;
 use std::sync::Arc;
@@ -20,19 +22,39 @@ use std::time::Instant;
 
 const ARTIFACT: &str = "artifacts/model.hlo.txt";
 
+/// Worker slots in the sharded pool (one ingress shard + engine each).
+const WORKERS: usize = 4;
+
 fn main() {
     let use_pjrt = std::path::Path::new(ARTIFACT).exists();
     let policy = BatchPolicy { max_batch: 256, max_wait_us: 300 };
+    // sharded/supervised topology: per-worker ingress queues with work
+    // stealing, and an engine panic costs one batch, not a pool slot
+    let restart = RestartPolicy::default();
     let svc = Arc::new(if use_pjrt {
         println!("engine: PJRT artifact {ARTIFACT} (L1 Pallas kernel + L2 JAX graph, AOT)");
-        QrdService::start(
-            || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact load")),
-            policy,
-        )
+        let factories: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                || {
+                    Box::new(
+                        PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH)
+                            .expect("artifact load"),
+                    ) as Box<dyn BatchEngine>
+                }
+            })
+            .collect();
+        QrdService::start_sharded(factories, policy, restart)
     } else {
         println!("engine: native (run `make artifacts` for the PJRT path)");
-        QrdService::start(|| Box::new(NativeEngine::flagship()), policy)
+        let factories: Vec<_> = (0..WORKERS)
+            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+            .collect();
+        QrdService::start_sharded(factories, policy, restart)
     });
+    println!(
+        "topology: sharded ingress x{WORKERS}, work stealing, <={} restarts/worker",
+        restart.max_restarts
+    );
 
     let clients = 8usize;
     let per_client = 2500usize;
@@ -104,7 +126,13 @@ fn main() {
     let m = svc.metrics();
     println!("completed         : {total} requests in {wall:.3} s");
     println!("throughput        : {:.0} QRD/s", total as f64 / wall);
-    println!("batches           : {} (mean size {:.1})", m.batches(), m.mean_batch());
+    println!(
+        "batches           : {} (mean size {:.1}, per worker {:?}, {} stolen)",
+        m.batches(),
+        m.mean_batch(),
+        m.worker_batch_counts(),
+        m.stolen_requests()
+    );
     println!("engine busy       : {:.1}% of wall", m.busy_secs() / wall * 100.0);
     println!(
         "latency µs        : p50 {:.0}  p90 {:.0}  p99 {:.0}  max {:.0}",
@@ -115,8 +143,8 @@ fn main() {
     );
     println!("sampled accuracy  : mean reconstruction SNR {snr_mean:.1} dB (single-precision level)");
     assert!(snr_mean > 110.0, "accuracy regression");
-    println!("\nE2E OK: router → batcher → {} → responses",
-        if use_pjrt { "PJRT executable" } else { "native engine" });
+    println!("\nE2E OK: router → ingress shards → {} → responses",
+        if use_pjrt { "PJRT executables" } else { "native engines" });
 }
 
 /// Reconstruct B = Gᵀ·R from the response bits and compare with A.

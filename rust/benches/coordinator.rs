@@ -3,7 +3,9 @@
 //! batch execution cost, and the worker-pool scaling sweep whose
 //! entries are merged into `BENCH_qrd.json` (CI greps for them).
 
-use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService};
+use fp_givens::coordinator::{
+    BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService, RestartPolicy,
+};
 use fp_givens::util::bench::{bench, black_box, merge_json, BenchResult};
 use fp_givens::util::rng::Rng;
 use std::collections::VecDeque;
@@ -84,43 +86,57 @@ fn main() {
         svc.shutdown();
     }
 
-    // worker-pool scaling sweep (--workers knob): persistent engine
-    // threads behind the shared batcher. Merged into BENCH_qrd.json so
-    // the scaling trajectory is tracked PR over PR; CI fails if these
-    // entries go missing.
+    // topology × worker-pool scaling sweep: the legacy shared-lock
+    // batcher vs the sharded/supervised ingress at workers=1/2/4.
+    // Merged into BENCH_qrd.json so the scaling trajectory is tracked
+    // PR over PR; CI fails if any of these entries go missing.
     let mut results: Vec<BenchResult> = Vec::new();
     let clients = 2usize;
     let per_client = 8192usize;
     let total = (clients * per_client) as f64;
     for workers in [1usize, 2, 4] {
-        let factories: Vec<_> = (0..workers)
-            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
-            .collect();
-        let svc = QrdService::start_pool(factories, BatchPolicy { max_batch: 64, max_wait_us: 100 });
-        // warm the pool (thread-local workspaces) before timing
-        run_load(&svc, clients, 512);
-        let mut best = f64::INFINITY;
-        for _ in 0..3 {
-            best = best.min(run_load(&svc, clients, per_client));
+        for sharded in [false, true] {
+            let policy = BatchPolicy { max_batch: 64, max_wait_us: 100 };
+            // same factory Vec either way: both topologies bench
+            // byte-identical engine setups
+            let factories: Vec<_> = (0..workers)
+                .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+                .collect();
+            let svc = if sharded {
+                QrdService::start_sharded(factories, policy, RestartPolicy::default())
+            } else {
+                QrdService::start_pool(factories, policy)
+            };
+            // warm the pool (thread-local workspaces) before timing
+            run_load(&svc, clients, 512);
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                best = best.min(run_load(&svc, clients, per_client));
+            }
+            let topo = if sharded { "sharded" } else { "shared-lock" };
+            let r = BenchResult::from_wall(
+                &format!(
+                    "service throughput x{} [native, {topo}, workers={workers}, batch=64]",
+                    total as u64
+                ),
+                total,
+                best,
+            );
+            println!("{}", r.report());
+            results.push(r);
+            let m = svc.metrics();
+            println!(
+                "    per-worker batches {:?}, stolen {}, p50 {:.0} µs  p99 {:.0} µs",
+                m.worker_batch_counts(),
+                m.stolen_requests(),
+                m.latency().percentile_us(0.50).unwrap_or(f64::NAN),
+                m.latency().percentile_us(0.99).unwrap_or(f64::NAN),
+            );
+            svc.shutdown();
         }
-        let r = BenchResult::from_wall(
-            &format!("service throughput x{} [native, workers={workers}, batch=64]", total as u64),
-            total,
-            best,
-        );
-        println!("{}", r.report());
-        results.push(r);
-        let m = svc.metrics();
-        println!(
-            "    per-worker batches {:?}, p50 {:.0} µs  p99 {:.0} µs",
-            m.worker_batch_counts(),
-            m.latency().percentile_us(0.50).unwrap_or(f64::NAN),
-            m.latency().percentile_us(0.99).unwrap_or(f64::NAN),
-        );
-        svc.shutdown();
     }
     match merge_json("BENCH_qrd.json", &results) {
-        Ok(()) => println!("\nmerged {} worker-scaling entries into BENCH_qrd.json", results.len()),
+        Ok(()) => println!("\nmerged {} topology-scaling entries into BENCH_qrd.json", results.len()),
         Err(e) => eprintln!("\ncould not update BENCH_qrd.json: {e}"),
     }
 
@@ -128,7 +144,7 @@ fn main() {
     if std::path::Path::new(ARTIFACT).exists() {
         let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact");
         bench("pjrt execute batch=256", 256.0, || {
-            black_box(pjrt.run(&mats));
+            black_box(pjrt.run(&mats).expect("pjrt batch"));
         });
         let svc = QrdService::start(
             || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact")),

@@ -80,7 +80,7 @@ fn main() {
             &format!("qrd4 batch x1024 [native, threads={nt}]"),
             1024.0,
             || {
-                black_box(eng.run(&big_batch));
+                black_box(eng.run(&big_batch).unwrap());
             },
         ));
     }

@@ -68,6 +68,18 @@ impl<T> Batcher<T> {
         }
         Some(batch)
     }
+
+    /// Non-blocking sweep of everything currently queued. The service
+    /// uses this when the last worker dies or at shutdown to answer
+    /// stranded requests with error responses instead of dropping their
+    /// channels (which clients would see as a bare `RecvError`).
+    pub fn drain(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        while let Ok(t) = self.rx.try_recv() {
+            out.push(t);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +158,19 @@ mod tests {
         assert_eq!(all, vec![0, 1, 2, 3, 4], "no item lost or reordered");
         assert!(batches.len() >= 3, "expected several partial drains, got {batches:?}");
         assert!(batches.iter().all(|b| b.len() <= 2), "{batches:?}");
+    }
+
+    #[test]
+    fn drain_sweeps_queued_items_without_blocking() {
+        let (tx, rx) = channel();
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert_eq!(b.drain(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(b.drain(), Vec::<i32>::new());
+        drop(tx);
+        assert_eq!(b.drain(), Vec::<i32>::new(), "disconnected channel drains empty");
     }
 
     #[test]

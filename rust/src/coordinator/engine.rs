@@ -8,8 +8,11 @@ use crate::util::par;
 /// A backend that decomposes batches of 4×4 matrices given as HUB FP
 /// bit patterns (16 words in, 32 words out: `[R | G]`).
 pub trait BatchEngine {
-    /// Execute a batch.
-    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]>;
+    /// Execute a batch. `Err` is a *recoverable* backend failure (e.g.
+    /// a PJRT execute error): the service answers the batch with error
+    /// responses and keeps the worker — only a panic retires/respawns
+    /// it. The native engine is infallible and always returns `Ok`.
+    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String>;
     /// Largest batch this backend can execute in one call. The service
     /// clamps every worker's batches to `min(policy.max_batch, this)`,
     /// so fixed-shape backends (an AOT PJRT artifact) report their
@@ -122,7 +125,7 @@ fn qrd_bits_flat<F: FamilyOps>(
 }
 
 impl BatchEngine for NativeEngine {
-    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
         // One matrix is a few µs; a scoped-thread spawn is tens of µs
         // and fresh threads re-warm their thread-local workspaces, so
         // only fan out when every worker gets a meaty chunk. (For
@@ -130,11 +133,11 @@ impl BatchEngine for NativeEngine {
         // persistent workers keep their workspaces warm across batches;
         // this knob is the intra-batch fan-out within one worker.)
         let nt = self.threads.min(mats.len() / 16).max(1);
-        if nt <= 1 {
+        Ok(if nt <= 1 {
             mats.iter().map(|m| self.qrd_bits(m)).collect()
         } else {
             par::par_map_with(nt, mats.len(), |i| self.qrd_bits(&mats[i]))
-        }
+        })
     }
 
     fn preferred_batch(&self) -> usize {
@@ -169,17 +172,21 @@ impl PjrtEngine {
 }
 
 impl BatchEngine for PjrtEngine {
-    fn run(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
         // bits → f32 (the artifact bitcasts internally)
         let mut flat = Vec::with_capacity(mats.len() * 16);
         for m in mats {
             flat.extend(m.iter().map(|&w| f32::from_bits(w)));
         }
+        // a failed execute is recoverable — surface it as error
+        // responses for this batch instead of panicking the worker
+        // (which would burn a supervised restart for a transient fault)
         let out = self
             .rt
             .execute_padded(&flat, mats.len())
-            .expect("PJRT execution failed");
-        out.chunks_exact(32)
+            .map_err(|e| format!("PJRT execution failed: {e}"))?;
+        Ok(out
+            .chunks_exact(32)
             .map(|c| {
                 let mut r = [0u32; 32];
                 for (dst, &v) in r.iter_mut().zip(c) {
@@ -187,7 +194,7 @@ impl BatchEngine for PjrtEngine {
                 }
                 r
             })
-            .collect()
+            .collect())
     }
 
     fn preferred_batch(&self) -> usize {
@@ -265,6 +272,6 @@ mod tests {
         let mats: Vec<[u32; 16]> = (0..200)
             .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
             .collect();
-        assert_eq!(serial.run(&mats), parallel.run(&mats));
+        assert_eq!(serial.run(&mats).unwrap(), parallel.run(&mats).unwrap());
     }
 }

@@ -113,6 +113,9 @@ pub struct Metrics {
     batched_requests: AtomicU64,
     busy_ns: AtomicU64,
     worker_panics: AtomicU64,
+    worker_respawns: AtomicU64,
+    engine_errors: AtomicU64,
+    stolen_requests: AtomicU64,
     per_worker_batches: Vec<AtomicU64>,
     latency: LatencyHistogram,
 }
@@ -132,6 +135,9 @@ impl Metrics {
             batched_requests: AtomicU64::new(0),
             busy_ns: AtomicU64::new(0),
             worker_panics: AtomicU64::new(0),
+            worker_respawns: AtomicU64::new(0),
+            engine_errors: AtomicU64::new(0),
+            stolen_requests: AtomicU64::new(0),
             per_worker_batches: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
         }
@@ -164,6 +170,21 @@ impl Metrics {
         self.worker_panics.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a supervised respawn replacing a panicked worker.
+    pub fn on_worker_respawn(&self) {
+        self.worker_respawns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a recoverable engine error (batch failed, worker kept).
+    pub fn on_engine_error(&self) {
+        self.engine_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` requests stolen from a sibling shard.
+    pub fn on_steal(&self, n: usize) {
+        self.stolen_requests.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     /// Total requests accepted.
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
@@ -185,9 +206,26 @@ impl Metrics {
         self.busy_ns.load(Ordering::Relaxed) as f64 * 1e-9
     }
 
-    /// Engine panics observed (each retires one worker).
+    /// Engine panics observed (each retires or respawns one worker).
     pub fn worker_panics(&self) -> u64 {
         self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Supervised respawns performed after engine panics.
+    pub fn worker_respawns(&self) -> u64 {
+        self.worker_respawns.load(Ordering::Relaxed)
+    }
+
+    /// Recoverable engine errors (batches answered with error
+    /// responses without retiring the worker).
+    pub fn engine_errors(&self) -> u64 {
+        self.engine_errors.load(Ordering::Relaxed)
+    }
+
+    /// Requests executed by a worker that stole them from a sibling
+    /// shard's queue.
+    pub fn stolen_requests(&self) -> u64 {
+        self.stolen_requests.load(Ordering::Relaxed)
     }
 
     /// Pool size this metrics object was created for.
@@ -243,6 +281,20 @@ mod tests {
         m.on_batch(7, 1, 10);
         assert_eq!(m.batches(), 4);
         assert_eq!(m.worker_batches(7), 0);
+    }
+
+    #[test]
+    fn lifecycle_counters() {
+        let m = Metrics::new(2);
+        m.on_worker_panic();
+        m.on_worker_respawn();
+        m.on_engine_error();
+        m.on_steal(3);
+        m.on_steal(2);
+        assert_eq!(m.worker_panics(), 1);
+        assert_eq!(m.worker_respawns(), 1);
+        assert_eq!(m.engine_errors(), 1);
+        assert_eq!(m.stolen_requests(), 5);
     }
 
     #[test]

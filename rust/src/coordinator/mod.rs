@@ -8,31 +8,77 @@
 //! Bounded queues give natural backpressure. Python is never on this
 //! path.
 //!
-//! Threading model: `std::thread` + `std::sync::mpsc` (the offline
+//! Two pool topologies (see `service`): the baseline **shared-lock**
+//! pool (one `Batcher` behind a mutex) and the **sharded** pool
+//! (per-worker `ShardQueue`s, round-robin routing, work stealing,
+//! supervised respawn of panicked workers) — the sharded topology
+//! mirrors the paper's fully pipelined datapath: no central arbiter on
+//! the request path, like the per-lane queues of the systolic QRD
+//! arrays (Rong '18; Merchant et al. '18).
+//!
+//! Threading model: `std::thread` + blocking queues (the offline
 //! stand-in for tokio — request routing is CPU-bound here, so blocking
-//! channels are the right tool anyway). Two orthogonal knobs: `workers`
-//! is the number of persistent engine threads behind the shared
-//! batcher; `threads` is the intra-batch fan-out *inside* one native
-//! engine.
+//! channels are the right tool anyway). Three orthogonal knobs:
+//! `workers`/`shards` is the number of persistent engine threads;
+//! `threads` is the intra-batch fan-out *inside* one native engine;
+//! `max_restarts` bounds supervised respawn per worker slot.
 
 mod batcher;
 mod engine;
 mod metrics;
 mod service;
+mod shard;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
 pub use metrics::{LatencyHistogram, Metrics};
-pub use service::{QrdService, Request, Response};
+pub use service::{QrdService, Request, Response, RestartPolicy};
+pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
+/// Knobs for [`serve_with`] (the `repro serve` command).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Backend: `"native"` or `"pjrt"`.
+    pub engine: String,
+    /// Synthetic requests to drive through the pool.
+    pub requests: usize,
+    /// Batching policy size cap.
+    pub max_batch: usize,
+    /// PJRT artifact path (`engine == "pjrt"` only).
+    pub artifact: String,
+    /// Intra-batch fan-out inside one native engine (0 = one per core).
+    pub threads: usize,
+    /// Worker slots in the pool (0 = one per core).
+    pub workers: usize,
+    /// true = sharded ingress + supervision (the default topology);
+    /// false = the legacy shared-lock batcher.
+    pub sharded: bool,
+    /// Per-slot engine-panic restart budget (sharded topology only).
+    pub max_restarts: u32,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            engine: "native".into(),
+            requests: 10_000,
+            max_batch: 64,
+            artifact: "artifacts/qrd4_hub.hlo.txt".into(),
+            threads: 1,
+            workers: 1,
+            sharded: true,
+            max_restarts: 2,
+        }
+    }
+}
+
 /// Run the coordinator under a synthetic client load and print a
-/// throughput/latency report (the `repro serve` command and the
-/// streaming_service example both land here). One worker, serial batch
-/// execution; see [`serve_synthetic_with`] for the knobs.
+/// throughput/latency report. One worker, serial batch execution,
+/// sharded topology; see [`ServeConfig`] for the knobs.
 pub fn serve_synthetic(
     engine: &str,
     requests: usize,
@@ -43,9 +89,10 @@ pub fn serve_synthetic(
 }
 
 /// [`serve_synthetic`] with explicit `threads` (intra-batch fan-out for
-/// the native engine) and `workers` (persistent engine threads in the
-/// pool). `0` means one per core for either knob. Surfaced on the CLI
-/// as `repro serve --threads N --workers W`.
+/// the native engine) and `workers` (persistent engine threads). `0`
+/// means one per core for either knob. Uses the sharded/supervised
+/// topology with default restart budget; [`serve_with`] exposes the
+/// rest.
 pub fn serve_synthetic_with(
     engine: &str,
     requests: usize,
@@ -54,11 +101,29 @@ pub fn serve_synthetic_with(
     threads: usize,
     workers: usize,
 ) -> anyhow::Result<()> {
-    let workers = if workers == 0 { par::threads() } else { workers };
-    let policy = BatchPolicy { max_batch, max_wait_us: 200 };
-    let (svc, name) = match engine {
+    serve_with(&ServeConfig {
+        engine: engine.into(),
+        requests,
+        max_batch,
+        artifact: artifact.into(),
+        threads,
+        workers,
+        ..ServeConfig::default()
+    })
+}
+
+/// Drive a synthetic client load through the configured pool topology
+/// and print a throughput/latency report (the `repro serve` command and
+/// the streaming_service example both land here).
+pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
+    let workers = if cfg.workers == 0 { par::threads() } else { cfg.workers };
+    let policy = BatchPolicy { max_batch: cfg.max_batch, max_wait_us: 200 };
+    let restart = RestartPolicy { max_restarts: cfg.max_restarts };
+    let (svc, name) = match cfg.engine.as_str() {
         "native" => {
+            let threads = cfg.threads;
             let name = NativeEngine::flagship().with_threads(threads).name();
+            // the factories are Fn, so one Vec serves either topology
             let factories: Vec<_> = (0..workers)
                 .map(|_| {
                     move || {
@@ -67,17 +132,22 @@ pub fn serve_synthetic_with(
                     }
                 })
                 .collect();
-            (QrdService::start_pool(factories, policy), name)
+            let svc = if cfg.sharded {
+                QrdService::start_sharded(factories, policy, restart)
+            } else {
+                QrdService::start_pool(factories, policy)
+            };
+            (svc, name)
         }
         "pjrt" => {
             // probe the artifact on this thread so load errors surface
             // before the workers start
-            let probe = PjrtEngine::load(artifact, PjrtEngine::ARTIFACT_BATCH)?;
+            let probe = PjrtEngine::load(&cfg.artifact, PjrtEngine::ARTIFACT_BATCH)?;
             let name = probe.name();
             drop(probe);
             let factories: Vec<_> = (0..workers)
                 .map(|_| {
-                    let path = artifact.to_string();
+                    let path = cfg.artifact.clone();
                     move || {
                         Box::new(
                             PjrtEngine::load(&path, PjrtEngine::ARTIFACT_BATCH)
@@ -86,7 +156,12 @@ pub fn serve_synthetic_with(
                     }
                 })
                 .collect();
-            (QrdService::start_pool(factories, policy), name)
+            let svc = if cfg.sharded {
+                QrdService::start_sharded(factories, policy, restart)
+            } else {
+                QrdService::start_pool(factories, policy)
+            };
+            (svc, name)
         }
         other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
     };
@@ -94,8 +169,8 @@ pub fn serve_synthetic_with(
     // synthetic load: deterministic random matrices, a few binades
     let mut rng = Rng::new(42);
     let t0 = Instant::now();
-    let mut pending = Vec::with_capacity(requests);
-    for _ in 0..requests {
+    let mut pending = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
         let mut a = [0u32; 16];
         let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
         for w in a.iter_mut() {
@@ -113,16 +188,38 @@ pub fn serve_synthetic_with(
     let wall = t0.elapsed().as_secs_f64();
     let m = svc.metrics();
     println!("engine            : {name}");
-    println!("pool              : {} worker(s)", m.workers());
-    println!("requests          : {requests} ({errors} errored)");
+    println!(
+        "topology          : {}",
+        if cfg.sharded {
+            format!(
+                "sharded ingress × {} (work stealing, ≤{} restarts/worker)",
+                m.workers(),
+                cfg.max_restarts
+            )
+        } else {
+            format!("shared-lock batcher, {} worker(s)", m.workers())
+        }
+    );
+    println!("requests          : {} ({errors} errored)", cfg.requests);
     println!("wall time         : {wall:.3} s");
-    println!("throughput        : {:.0} QRD/s", requests as f64 / wall);
+    println!("throughput        : {:.0} QRD/s", cfg.requests as f64 / wall);
     println!(
         "batches executed  : {} (per worker: {:?})",
         m.batches(),
         m.worker_batch_counts()
     );
     println!("mean batch size   : {:.1}", m.mean_batch());
+    if m.stolen_requests() > 0 {
+        println!("work stealing     : {} requests stolen", m.stolen_requests());
+    }
+    if m.worker_panics() > 0 || m.worker_respawns() > 0 {
+        println!(
+            "lifecycle         : {} engine panics, {} respawns, {} engine errors",
+            m.worker_panics(),
+            m.worker_respawns(),
+            m.engine_errors()
+        );
+    }
     // service-side histogram percentiles (nearest-rank over log-spaced
     // buckets) — no client-side latency math, and `--requests 0` is a
     // report with no samples rather than a panic
@@ -139,7 +236,7 @@ pub fn serve_synthetic_with(
     }
     svc.shutdown();
     if errors > 0 {
-        anyhow::bail!("{errors} of {requests} requests failed");
+        anyhow::bail!("{errors} of {} requests failed", cfg.requests);
     }
     Ok(())
 }

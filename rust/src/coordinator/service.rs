@@ -1,30 +1,43 @@
-//! The QRD service: bounded ingress queue → shared batcher → N
-//! persistent engine workers → per-request response channels.
+//! The QRD service: two pool topologies behind one `QrdService` handle.
 //!
-//! Pool shape: one `Batcher` behind a mutex, pulled by persistent
-//! worker threads. Whoever is idle grabs the lock, forms the next
-//! batch (capped at its own engine's `preferred_batch`), releases the
-//! lock and executes — so batch *formation* is serialized (it is
-//! microseconds of channel draining) while batch *execution* overlaps
-//! across workers. Persistent workers keep their thread-local
-//! `QrdWorkspace`s warm across batches, unlike the per-batch scoped
-//! threads inside `NativeEngine::run`.
+//! **Shared-lock** (`start`/`start_pool`): one bounded ingress queue →
+//! one `Batcher` behind a mutex → N persistent workers. Batch
+//! *formation* is serialized (microseconds of channel draining), batch
+//! *execution* overlaps. Kept as the baseline topology the benches
+//! compare against.
 //!
-//! Failure containment: an engine panic retires only that worker (its
-//! in-flight batch is answered with error responses); the rest of the
-//! pool keeps serving. Once every worker has exited, `submit` degrades
-//! to immediate error responses instead of aborting the process.
-//! Global FIFO ordering across workers is explicitly not promised —
-//! each request carries its own response channel.
+//! **Sharded** (`start_sharded`): a lock-free round-robin router in
+//! `submit` feeds one bounded `ShardQueue` per worker; every worker
+//! forms batches from its own shard with zero shared locking, and an
+//! idle worker steals from a loaded sibling's queue so a slow shard
+//! cannot strand requests. A supervisor retains the engine factories
+//! and respawns a worker after an engine panic (bounded per-slot
+//! restarts, `Metrics::worker_respawns`), so a transient failure costs
+//! one batch instead of a pool slot.
+//!
+//! Failure containment, both topologies: an engine panic fails only the
+//! in-flight batch (error `Response`s); a recoverable engine error
+//! (`BatchEngine::run` returning `Err`) fails the batch without
+//! retiring the worker. When the last worker exits — and at shutdown —
+//! every queued request is drained and answered with an error
+//! `Response`: **no client can ever observe a `RecvError`** from a
+//! live-then-dying pool. Global FIFO ordering across workers is
+//! explicitly not promised — each request carries its own response
+//! channel. Per-shard batch formation is FIFO per producer.
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::engine::BatchEngine;
 use super::metrics::Metrics;
+use super::shard::{Pop, ShardQueue};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+const DEAD_POOL_MSG: &str = "service workers have exited";
+const SHUTDOWN_MSG: &str = "service shut down before the request was served";
 
 /// One client request: a 4×4 matrix as HUB FP bit patterns.
 pub struct Request {
@@ -45,7 +58,7 @@ pub struct Response {
     /// Request latency in microseconds (enqueue → response send).
     pub latency_us: f64,
     /// `Some(reason)` when the service could not execute the request
-    /// (engine worker died, pool shut down).
+    /// (engine failure, worker died, pool shut down).
     pub error: Option<String>,
 }
 
@@ -67,16 +80,74 @@ impl Response {
     }
 }
 
-/// Handle to a running service (a pool of persistent engine workers).
-pub struct QrdService {
+/// Answer a request with an error `Response` (never drop the channel).
+fn answer_failed(req: Request, reason: &str) {
+    let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+    let _ = req.tx.send(Response::failed(reason, latency_us));
+}
+
+/// Restart budget for supervised (sharded-topology) workers.
+#[derive(Debug, Clone, Copy)]
+pub struct RestartPolicy {
+    /// Engine panics each worker slot survives before it is retired
+    /// for good (0 = never respawn).
+    pub max_restarts: u32,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy { max_restarts: 2 }
+    }
+}
+
+/// Liveness shared by the shared-lock pool's workers and `submit`.
+struct PoolState {
+    alive: AtomicUsize,
+    dead: AtomicBool,
+}
+
+struct SharedPool {
     ingress: SyncSender<Request>,
-    metrics: Arc<Metrics>,
+    /// The service handle keeps the batcher (and its receiver) alive so
+    /// `ingress.send` cannot start failing while queued requests are
+    /// still being drained — and so `submit`/`shutdown` can sweep
+    /// stranded requests into error responses.
+    batcher: Arc<Mutex<Batcher<Request>>>,
+    state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
 }
 
+/// Supervisor for the sharded topology: owns the shards, the
+/// re-callable engine factories and the restart bookkeeping.
+struct Supervisor {
+    shards: Vec<Arc<ShardQueue<Request>>>,
+    factories: Vec<Arc<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>>,
+    slot_alive: Vec<AtomicBool>,
+    restarts_used: Vec<AtomicU32>,
+    restart: RestartPolicy,
+    alive: AtomicUsize,
+    dead: AtomicBool,
+    next: AtomicUsize,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+enum Pool {
+    Shared(SharedPool),
+    Sharded(Arc<Supervisor>),
+}
+
+/// Handle to a running service (a pool of persistent engine workers).
+pub struct QrdService {
+    metrics: Arc<Metrics>,
+    pool: Pool,
+}
+
 impl QrdService {
-    /// Start a single-worker service — [`Self::start_pool`] with one
-    /// engine. Kept as the simple entry point for tests and examples.
+    /// Start a single-worker shared-lock service — [`Self::start_pool`]
+    /// with one engine. Kept as the simple entry point for tests and
+    /// examples.
     ///
     /// The engine is built *inside* the worker thread via `factory`:
     /// PJRT client handles are not `Send` (they wrap `Rc` internals), so
@@ -88,12 +159,12 @@ impl QrdService {
         Self::start_pool(vec![factory], policy)
     }
 
-    /// Start a pool with one persistent worker per factory, all pulling
-    /// from a shared bounded ingress queue (backpressure: `submit`
-    /// blocks when 4× the batch size is already queued). Each worker
-    /// clamps its batches to its own engine's `preferred_batch`, so a
-    /// fixed-shape backend never sees an oversized batch regardless of
-    /// the policy's `max_batch`.
+    /// Start a shared-lock pool: one persistent worker per factory, all
+    /// pulling from a shared bounded ingress queue (backpressure:
+    /// `submit` blocks when 4× the batch size is already queued). Each
+    /// worker clamps its batches to its own engine's `preferred_batch`,
+    /// so a fixed-shape backend never sees an oversized batch regardless
+    /// of the policy's `max_batch`.
     pub fn start_pool<F>(factories: Vec<F>, policy: BatchPolicy) -> QrdService
     where
         F: FnOnce() -> Box<dyn BatchEngine> + Send + 'static,
@@ -101,33 +172,102 @@ impl QrdService {
         assert!(!factories.is_empty(), "pool needs at least one engine factory");
         let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
         let metrics = Arc::new(Metrics::new(factories.len()));
-        let ingress = Arc::new(Mutex::new(Batcher::new(rx, policy)));
+        let batcher = Arc::new(Mutex::new(Batcher::new(rx, policy)));
+        let state = Arc::new(PoolState {
+            alive: AtomicUsize::new(factories.len()),
+            dead: AtomicBool::new(false),
+        });
         let workers = factories
             .into_iter()
             .enumerate()
             .map(|(id, factory)| {
-                let ingress = ingress.clone();
+                let batcher = batcher.clone();
                 let m = metrics.clone();
+                let state = state.clone();
                 std::thread::Builder::new()
                     .name(format!("qrd-worker-{id}"))
-                    .spawn(move || worker_loop(id, factory(), ingress, m))
+                    .spawn(move || shared_worker_loop(id, factory(), batcher, state, m))
                     .expect("spawn qrd worker")
             })
             .collect();
-        QrdService { ingress: tx, metrics, workers }
+        QrdService {
+            metrics,
+            pool: Pool::Shared(SharedPool { ingress: tx, batcher, state, workers }),
+        }
+    }
+
+    /// Start a sharded, supervised pool: one bounded ingress shard per
+    /// factory, one persistent worker per shard, round-robin routing in
+    /// `submit`, work stealing between shards, and bounded respawn of
+    /// panicked workers (`restart`). Factories are `Fn` (not `FnOnce`)
+    /// because the supervisor calls them again — always inside the new
+    /// worker thread, so non-`Send` engines keep working.
+    pub fn start_sharded<F>(
+        factories: Vec<F>,
+        policy: BatchPolicy,
+        restart: RestartPolicy,
+    ) -> QrdService
+    where
+        F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
+    {
+        assert!(!factories.is_empty(), "pool needs at least one engine factory");
+        let n = factories.len();
+        let metrics = Arc::new(Metrics::new(n));
+        let bound = policy.max_batch.max(1) * 4;
+        let sup = Arc::new(Supervisor {
+            shards: (0..n).map(|_| Arc::new(ShardQueue::bounded(bound))).collect(),
+            factories: factories
+                .into_iter()
+                .map(|f| Arc::new(f) as Arc<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>)
+                .collect(),
+            slot_alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            restarts_used: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            restart,
+            alive: AtomicUsize::new(n),
+            dead: AtomicBool::new(false),
+            next: AtomicUsize::new(0),
+            policy,
+            metrics: metrics.clone(),
+            handles: Mutex::new(Vec::with_capacity(n)),
+        });
+        for slot in 0..n {
+            spawn_worker(&sup, slot, 0).expect("spawn qrd shard worker");
+        }
+        QrdService { metrics, pool: Pool::Sharded(sup) }
     }
 
     /// Submit one matrix; returns the response receiver. Blocks if the
-    /// ingress queue is full (backpressure). If every worker has exited
-    /// (crash or shutdown race), the receiver yields an error
-    /// [`Response`] instead of the process aborting.
+    /// target queue is full (backpressure). Every submitted request is
+    /// answered with a `Response` — an error `Response` if the pool has
+    /// died or dies while the request is queued — never a dropped
+    /// channel.
     pub fn submit(&self, a: [u32; 16]) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
         self.metrics.on_request();
-        if let Err(dead) = self.ingress.send(Request { a, tx, enq: Instant::now() }) {
-            let req = dead.0;
-            let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-            let _ = req.tx.send(Response::failed("service workers have exited", latency_us));
+        let req = Request { a, tx, enq: Instant::now() };
+        match &self.pool {
+            Pool::Shared(p) => {
+                if p.state.dead.load(Ordering::SeqCst) {
+                    answer_failed(req, DEAD_POOL_MSG);
+                    return rx;
+                }
+                match p.ingress.send(req) {
+                    Err(dead) => answer_failed(dead.0, DEAD_POOL_MSG),
+                    Ok(()) => {
+                        // The pool may have died while we were
+                        // enqueueing. The dying worker sets `dead`
+                        // *before* its drain (both SeqCst), so either
+                        // its sweep saw our request, or this re-check
+                        // sees `dead` and we sweep it ourselves —
+                        // either way the client gets a Response, never
+                        // a RecvError.
+                        if p.state.dead.load(Ordering::SeqCst) {
+                            drain_batcher(&p.batcher, DEAD_POOL_MSG);
+                        }
+                    }
+                }
+            }
+            Pool::Sharded(sup) => sup.submit(req),
         }
         rx
     }
@@ -137,25 +277,136 @@ impl QrdService {
         self.metrics.clone()
     }
 
-    /// Number of workers the pool was started with.
+    /// Number of worker slots the pool was started with.
     pub fn pool_size(&self) -> usize {
-        self.workers.len()
+        match &self.pool {
+            Pool::Shared(p) => p.workers.len(),
+            Pool::Sharded(sup) => sup.shards.len(),
+        }
     }
 
-    /// Graceful shutdown: close ingress, join every worker.
+    /// Worker slots currently served by a live worker (supervised
+    /// respawn keeps this at `pool_size` across transient panics).
+    pub fn alive_workers(&self) -> usize {
+        match &self.pool {
+            Pool::Shared(p) => p.state.alive.load(Ordering::SeqCst),
+            Pool::Sharded(sup) => sup.alive.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Graceful shutdown: stop ingress, let workers drain what is
+    /// already queued, join them, then answer anything still stranded
+    /// (e.g. behind a dead slot) with error responses.
     pub fn shutdown(self) {
-        let QrdService { ingress, metrics: _, workers } = self;
-        drop(ingress);
-        for w in workers {
-            let _ = w.join();
+        let QrdService { metrics: _, pool } = self;
+        match pool {
+            Pool::Shared(p) => {
+                let SharedPool { ingress, batcher, state: _, workers } = p;
+                drop(ingress);
+                for w in workers {
+                    let _ = w.join();
+                }
+                drain_batcher(&batcher, SHUTDOWN_MSG);
+            }
+            Pool::Sharded(sup) => {
+                sup.dead.store(true, Ordering::SeqCst);
+                for q in &sup.shards {
+                    q.close();
+                }
+                loop {
+                    let h = sup.handles.lock().unwrap_or_else(|e| e.into_inner()).pop();
+                    match h {
+                        Some(h) => {
+                            let _ = h.join();
+                        }
+                        None => break,
+                    }
+                }
+                for q in &sup.shards {
+                    for req in q.drain() {
+                        answer_failed(req, SHUTDOWN_MSG);
+                    }
+                }
+            }
         }
     }
 }
 
-fn worker_loop(
+/// Sweep the shared batcher's queue into error responses.
+fn drain_batcher(batcher: &Mutex<Batcher<Request>>, reason: &str) {
+    let stranded = batcher.lock().unwrap_or_else(|p| p.into_inner()).drain();
+    for req in stranded {
+        answer_failed(req, reason);
+    }
+}
+
+/// Execute one batch and answer its requests. Returns `false` when the
+/// engine panicked — the caller must retire (or respawn) the worker; a
+/// recoverable `Err` from the engine fails the batch but keeps the
+/// worker.
+fn execute_batch(
+    id: usize,
+    engine: &dyn BatchEngine,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) -> bool {
+    let mats: Vec<[u32; 16]> = batch.iter().map(|r| r.a).collect();
+    let t0 = Instant::now();
+    match catch_unwind(AssertUnwindSafe(|| engine.run(&mats))) {
+        Ok(Ok(outs)) => {
+            if outs.len() != batch.len() {
+                // a backend shape bug must not strand the unmatched
+                // tail of the batch (zip would silently drop those
+                // requests' channels — the RecvError this service
+                // promises never to produce)
+                metrics.on_engine_error();
+                let reason = format!(
+                    "engine error: returned {} outputs for {} requests",
+                    outs.len(),
+                    batch.len()
+                );
+                for req in batch {
+                    answer_failed(req, &reason);
+                }
+                return true;
+            }
+            let dt = t0.elapsed();
+            metrics.on_batch(id, batch.len(), dt.as_nanos() as u64);
+            for (req, out) in batch.into_iter().zip(outs) {
+                let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+                metrics.on_latency_us(latency_us);
+                // receiver may have been dropped — the client's choice
+                let _ = req.tx.send(Response::ok(out, latency_us));
+            }
+            true
+        }
+        Ok(Err(e)) => {
+            // recoverable backend failure: this batch fails, the worker
+            // and its engine keep serving
+            metrics.on_engine_error();
+            let reason = format!("engine error: {e}");
+            for req in batch {
+                answer_failed(req, &reason);
+            }
+            true
+        }
+        Err(_) => {
+            // the engine's state is unknown after a panic: fail this
+            // batch's clients and let the caller retire/respawn
+            metrics.on_worker_panic();
+            for req in batch {
+                answer_failed(req, "engine worker panicked");
+            }
+            false
+        }
+    }
+}
+
+fn shared_worker_loop(
     id: usize,
     engine: Box<dyn BatchEngine>,
-    ingress: Arc<Mutex<Batcher<Request>>>,
+    batcher: Arc<Mutex<Batcher<Request>>>,
+    state: Arc<PoolState>,
     metrics: Arc<Metrics>,
 ) {
     // never hand this engine more than it prefers (fixed-shape PJRT
@@ -166,47 +417,209 @@ fn worker_loop(
             // a worker that panicked inside the engine never held this
             // lock, but recover from poisoning anyway: the batcher's
             // state is just a channel, always safe to keep draining
-            let batcher = ingress.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
-            batcher.next_batch_with(cap)
+            let b = batcher.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            b.next_batch_with(cap)
         };
-        let Some(batch) = batch else { return };
-        let mats: Vec<[u32; 16]> = batch.iter().map(|r| r.a).collect();
-        let t0 = Instant::now();
-        match catch_unwind(AssertUnwindSafe(|| engine.run(&mats))) {
-            Ok(outs) => {
-                let dt = t0.elapsed();
-                metrics.on_batch(id, batch.len(), dt.as_nanos() as u64);
-                debug_assert_eq!(outs.len(), batch.len());
-                for (req, out) in batch.into_iter().zip(outs) {
-                    let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-                    metrics.on_latency_us(latency_us);
-                    // receiver may have been dropped — the client's choice
-                    let _ = req.tx.send(Response::ok(out, latency_us));
-                }
-            }
-            Err(_) => {
-                // the engine's state is unknown after a panic: fail this
-                // batch's clients and retire the worker; the rest of the
-                // pool keeps serving, and when the last worker exits
-                // `submit` degrades to error responses
-                metrics.on_worker_panic();
-                for req in batch {
-                    let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-                    let _ = req
-                        .tx
-                        .send(Response::failed("engine worker panicked", latency_us));
-                }
+        let Some(batch) = batch else {
+            // ingress closed and drained: clean exit (shutdown)
+            retire_shared(&state, &batcher);
+            return;
+        };
+        if !execute_batch(id, engine.as_ref(), batch, &metrics) {
+            retire_shared(&state, &batcher);
+            return;
+        }
+    }
+}
+
+/// One shared-lock worker is gone; if it was the last, mark the pool
+/// dead (so `submit` fails fast) and answer everything still queued.
+/// The flag is set and the sweep runs under the batcher lock, so a
+/// submitter whose post-send re-check observes `dead` (and sweeps via
+/// the same lock) cannot interleave between them; `shutdown`'s final
+/// drain backstops any request that slips past both sweeps.
+fn retire_shared(state: &PoolState, batcher: &Mutex<Batcher<Request>>) {
+    if state.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+        let b = batcher.lock().unwrap_or_else(|p| p.into_inner());
+        state.dead.store(true, Ordering::SeqCst);
+        for req in b.drain() {
+            answer_failed(req, DEAD_POOL_MSG);
+        }
+    }
+}
+
+/// Spawn (or respawn) the worker for `slot`; the engine is built
+/// inside the new thread by the slot's retained factory. Startup
+/// `expect`s the error; the respawn path must not — see
+/// [`on_worker_death`].
+fn spawn_worker(sup: &Arc<Supervisor>, slot: usize, generation: u32) -> std::io::Result<()> {
+    let sup2 = sup.clone();
+    let h = std::thread::Builder::new()
+        .name(format!("qrd-shard-{slot}.{generation}"))
+        .spawn(move || sharded_worker(slot, sup2))?;
+    sup.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+    Ok(())
+}
+
+/// A worker died from an engine (or factory) panic: respawn it while
+/// the slot's restart budget lasts, else retire the slot. A failed
+/// *spawn* (OS thread exhaustion) also retires — panicking here would
+/// unwind the dying worker's thread with the slot still marked alive,
+/// leaking it and its queue forever.
+fn on_worker_death(sup: &Arc<Supervisor>, slot: usize) {
+    if !sup.dead.load(Ordering::SeqCst) {
+        let used = sup.restarts_used[slot].fetch_add(1, Ordering::SeqCst);
+        if used < sup.restart.max_restarts {
+            // count before spawning so the counter is visible by the
+            // time the replacement serves anything (overcounts by one
+            // only if the spawn itself fails — the pool is in thread
+            // exhaustion at that point anyway)
+            sup.metrics.on_worker_respawn();
+            if spawn_worker(sup, slot, used + 1).is_ok() {
                 return;
             }
         }
     }
+    sup.retire_slot(slot);
+}
+
+impl Supervisor {
+    /// Round-robin a request onto a live shard; blocking on a full
+    /// queue is the backpressure. A closed queue (the pool died under
+    /// us) hands the request back, and we try the remaining slots
+    /// before answering with an error — never dropping the channel.
+    fn submit(&self, mut req: Request) {
+        if self.dead.load(Ordering::SeqCst) {
+            answer_failed(req, DEAD_POOL_MSG);
+            return;
+        }
+        let n = self.shards.len();
+        let mut k = self.next.fetch_add(1, Ordering::Relaxed);
+        for _ in 0..n {
+            let slot = k % n;
+            k = k.wrapping_add(1);
+            if !self.slot_alive[slot].load(Ordering::SeqCst) {
+                continue;
+            }
+            match self.shards[slot].push(req) {
+                Ok(()) => return,
+                Err(r) => req = r,
+            }
+        }
+        answer_failed(req, DEAD_POOL_MSG);
+    }
+
+    /// Permanently retire a slot. The last retirement closes every
+    /// shard (pushes start failing, which `submit` converts to error
+    /// responses) and answers everything still queued; a non-last
+    /// retirement closes only its own shard — waking any pusher
+    /// blocked on it — and rehomes the queued requests onto live
+    /// slots, so they are served instead of stranding behind a dead
+    /// worker until a sibling happens to go idle and steal them.
+    /// Queues only admit pushes *before* `close`, so neither drain
+    /// misses anything.
+    fn retire_slot(&self, slot: usize) {
+        self.slot_alive[slot].store(false, Ordering::SeqCst);
+        if self.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+            self.dead.store(true, Ordering::SeqCst);
+            for q in &self.shards {
+                q.close();
+            }
+            for q in &self.shards {
+                for req in q.drain() {
+                    answer_failed(req, DEAD_POOL_MSG);
+                }
+            }
+            return;
+        }
+        self.shards[slot].close();
+        for req in self.shards[slot].drain() {
+            // same routing as a fresh submit: live slots round-robin,
+            // error response if the pool dies under us (terminates —
+            // each rehoming hop loses at least one live slot)
+            self.submit(req);
+        }
+    }
+}
+
+enum WorkerExit {
+    Clean,
+    Died,
+}
+
+fn sharded_worker(slot: usize, sup: Arc<Supervisor>) {
+    match run_sharded_worker(slot, &sup) {
+        WorkerExit::Clean => sup.retire_slot(slot),
+        WorkerExit::Died => on_worker_death(&sup, slot),
+    }
+}
+
+fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
+    // the engine is built in-thread (PJRT clients are not Send); a
+    // panicking factory counts as a death so the restart budget bounds
+    // a persistently failing backend
+    let engine = match catch_unwind(AssertUnwindSafe(|| (sup.factories[slot])())) {
+        Ok(engine) => engine,
+        Err(_) => {
+            sup.metrics.on_worker_panic();
+            return WorkerExit::Died;
+        }
+    };
+    let cap = engine.preferred_batch().max(1).min(sup.policy.max_batch.max(1));
+    let max_wait = Duration::from_micros(sup.policy.max_wait_us);
+    // how long to block on the own shard before sweeping siblings for
+    // stealable work. A push to the own shard wakes the worker
+    // immediately regardless (condvar notify); the wait only bounds
+    // steal latency, so it backs off exponentially while both the own
+    // shard and the sweep stay empty — an idle pool settles at ~20
+    // wakeups/s per worker instead of busy-polling every 100 µs.
+    let steal_base = Duration::from_micros(sup.policy.max_wait_us.clamp(100, 1000));
+    let steal_max = Duration::from_millis(50);
+    let mut idle_streak = 0u32;
+    let own = &sup.shards[slot];
+    loop {
+        let first_wait = steal_base.saturating_mul(1u32 << idle_streak.min(9)).min(steal_max);
+        let batch = match own.pop_batch(cap, max_wait, first_wait) {
+            Pop::Batch(b) => b,
+            Pop::TimedOut => match steal_from_siblings(slot, sup, cap) {
+                Some(b) => b,
+                None => {
+                    idle_streak = idle_streak.saturating_add(1);
+                    continue;
+                }
+            },
+            // own shard closed (shutdown, pool death, or this slot was
+            // retired): sweep the siblings' leftovers, then exit
+            Pop::Closed => match steal_from_siblings(slot, sup, cap) {
+                Some(b) => b,
+                None => return WorkerExit::Clean,
+            },
+        };
+        idle_streak = 0;
+        if !execute_batch(slot, engine.as_ref(), batch, &sup.metrics) {
+            return WorkerExit::Died;
+        }
+    }
+}
+
+fn steal_from_siblings(slot: usize, sup: &Supervisor, cap: usize) -> Option<Vec<Request>> {
+    let n = sup.shards.len();
+    for off in 1..n {
+        let j = (slot + off) % n;
+        let stolen = sup.shards[j].steal(cap);
+        if !stolen.is_empty() {
+            sup.metrics.on_steal(stolen.len());
+            return Some(stolen);
+        }
+    }
+    None
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::NativeEngine;
-    use std::time::Duration;
+    use std::sync::Condvar;
 
     #[test]
     fn all_requests_answered_in_order_of_submission() {
@@ -282,12 +695,48 @@ mod tests {
         svc.shutdown();
     }
 
-    /// Engine that panics on its first batch — the "worker died"
-    /// injection for the hardened-lifecycle tests.
+    #[test]
+    fn sharded_pool_serves_correctly_and_accounts() {
+        let factories: Vec<_> = (0..3)
+            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+            .collect();
+        let svc = QrdService::start_sharded(
+            factories,
+            BatchPolicy { max_batch: 8, max_wait_us: 100 },
+            RestartPolicy::default(),
+        );
+        assert_eq!(svc.pool_size(), 3);
+        assert_eq!(svc.alive_workers(), 3);
+        let eng = NativeEngine::flagship();
+        let mut rxs = Vec::new();
+        let mut want = Vec::new();
+        for k in 0..120u32 {
+            let a: [u32; 16] =
+                std::array::from_fn(|i| ((k as f32 + 0.5) * (i as f32 - 7.5) * 0.07).to_bits());
+            want.push(eng.qrd_bits(&a));
+            rxs.push(svc.submit(a));
+        }
+        for (rx, want) in rxs.into_iter().zip(want) {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(resp.out, want);
+        }
+        let m = svc.metrics();
+        assert_eq!(m.requests(), 120);
+        assert_eq!(m.workers(), 3);
+        let per_worker: u64 = m.worker_batch_counts().iter().sum();
+        assert_eq!(per_worker, m.batches());
+        assert_eq!(m.latency().count(), 120);
+        assert_eq!(m.worker_panics(), 0);
+        svc.shutdown();
+    }
+
+    /// Engine that panics on every batch — the "worker died" injection
+    /// for the lifecycle tests.
     struct PanicEngine;
 
     impl BatchEngine for PanicEngine {
-        fn run(&self, _mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+        fn run(&self, _mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
             panic!("engine failure injected by test");
         }
         fn preferred_batch(&self) -> usize {
@@ -295,6 +744,21 @@ mod tests {
         }
         fn name(&self) -> String {
             "panic-test".into()
+        }
+    }
+
+    /// Engine that reports a recoverable failure on every batch.
+    struct FailEngine;
+
+    impl BatchEngine for FailEngine {
+        fn run(&self, _mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+            Err("injected backend failure".into())
+        }
+        fn preferred_batch(&self) -> usize {
+            8
+        }
+        fn name(&self) -> String {
+            "fail-test".into()
         }
     }
 
@@ -310,24 +774,16 @@ mod tests {
         assert!(resp.error.is_some(), "{resp:?}");
         assert!(resp.result().is_err());
         assert_eq!(svc.metrics().worker_panics(), 1);
-        // once the dead worker's queue handle is gone, `submit` itself
-        // degrades to an immediate error response; until then a raced
-        // request may be dropped with the queue (RecvError) — either
-        // way the client sees an error, never an abort
-        let deadline = Instant::now() + Duration::from_secs(10);
-        loop {
-            match svc.submit([0u32; 16]).recv() {
-                Ok(resp) => {
-                    assert!(resp.error.is_some(), "{resp:?}");
-                    break;
-                }
-                Err(_) => {}
-            }
-            assert!(
-                Instant::now() < deadline,
-                "submit never surfaced an error after the pool died"
-            );
-            std::thread::sleep(Duration::from_millis(1));
+        // the dying (last) worker marks the pool dead before draining
+        // the queue, and `submit` re-checks the flag after enqueueing:
+        // the Err(RecvError) arm is unreachable — every subsequent
+        // request gets an error Response, no retry loop needed
+        for _ in 0..50 {
+            let resp = svc
+                .submit([0u32; 16])
+                .recv()
+                .expect("every request gets a Response — RecvError is unreachable");
+            assert!(resp.error.is_some(), "{resp:?}");
         }
         svc.shutdown();
     }
@@ -359,6 +815,243 @@ mod tests {
         // surviving native worker keeps answering
         assert!(served >= 40, "served {served}, errored {errored}");
         assert!(svc.metrics().worker_panics() <= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn supervision_respawns_a_panicked_worker() {
+        // first factory call yields a panicking engine; the respawned
+        // worker (same slot, fresh factory call) gets a native one
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls2 = calls.clone();
+        let factory = move || {
+            if calls2.fetch_add(1, Ordering::SeqCst) == 0 {
+                Box::new(PanicEngine) as Box<dyn BatchEngine>
+            } else {
+                Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>
+            }
+        };
+        let svc = QrdService::start_sharded(
+            vec![factory],
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 2 },
+        );
+        // the first request hits the panicking engine: its batch fails…
+        let resp = svc.submit([0u32; 16]).recv().expect("response");
+        assert!(resp.error.is_some(), "{resp:?}");
+        // …but the slot is respawned, and the next request is served by
+        // the fresh engine pulled from the same queue
+        let eng = NativeEngine::flagship();
+        let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.3 + 1.0).to_bits());
+        let resp = svc
+            .submit(a)
+            .recv_timeout(Duration::from_secs(30))
+            .expect("respawned worker serves the queue");
+        assert_eq!(resp.result().expect("served, not errored"), &eng.qrd_bits(&a));
+        let m = svc.metrics();
+        assert_eq!(m.worker_panics(), 1);
+        assert_eq!(m.worker_respawns(), 1);
+        assert_eq!(svc.alive_workers(), 1, "pool size restored by supervision");
+        assert_eq!(calls.load(Ordering::SeqCst), 2, "factory called once per spawn");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn exhausted_restart_budget_drains_queued_requests_with_errors() {
+        // every engine panics and the budget is zero: the only worker
+        // dies on its first batch and the supervisor must answer every
+        // queued request — no client can ever see a RecvError
+        let svc = QrdService::start_sharded(
+            vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
+            BatchPolicy { max_batch: 2, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 0 },
+        );
+        let rxs: Vec<_> = (0..32).map(|_| svc.submit([0u32; 16])).collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("drained with an error Response, not a RecvError");
+            assert!(resp.error.is_some(), "{resp:?}");
+        }
+        assert_eq!(svc.metrics().worker_panics(), 1);
+        assert_eq!(svc.metrics().worker_respawns(), 0);
+        assert_eq!(svc.alive_workers(), 0);
+        // a dead pool answers immediately
+        let resp = svc.submit([0u32; 16]).recv().expect("response");
+        assert!(resp.error.is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn retired_slot_rehomes_queued_requests_to_live_workers() {
+        // slot 0's engine panics with a zero restart budget; under a
+        // sustained burst, requests already routed to shard 0 must be
+        // rehomed to the surviving native worker (or stolen) instead of
+        // stranding behind the dead slot — every request is answered,
+        // and only the panicking worker's single batch may error
+        type Factory = Box<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>;
+        let factories: Vec<Factory> = vec![
+            Box::new(|| Box::new(PanicEngine) as Box<dyn BatchEngine>),
+            Box::new(|| Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>),
+        ];
+        let svc = QrdService::start_sharded(
+            factories,
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 0 },
+        );
+        let eng = NativeEngine::flagship();
+        let mats: Vec<[u32; 16]> = (0..80)
+            .map(|k| {
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.1).to_bits())
+            })
+            .collect();
+        let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+        let mut served = 0usize;
+        let mut errored = 0usize;
+        for (rx, m) in rxs.into_iter().zip(&mats) {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("every request answered despite the retired slot");
+            match resp.result() {
+                Ok(out) => {
+                    assert_eq!(out, &eng.qrd_bits(m));
+                    served += 1;
+                }
+                Err(_) => errored += 1,
+            }
+        }
+        // at most the dead worker's one batch (cap 4) errors
+        assert!(errored <= 4, "served {served}, errored {errored}");
+        assert!(served >= 76, "served {served}, errored {errored}");
+        assert!(svc.metrics().worker_panics() <= 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn recoverable_engine_error_fails_batch_but_keeps_worker() {
+        let svc = QrdService::start_sharded(
+            vec![|| Box::new(FailEngine) as Box<dyn BatchEngine>],
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 0 },
+        );
+        for _ in 0..3 {
+            let resp = svc.submit([0u32; 16]).recv().expect("response");
+            let err = resp.result().expect_err("engine error must surface");
+            assert!(err.contains("injected backend failure"), "{err}");
+        }
+        let m = svc.metrics();
+        assert_eq!(m.worker_panics(), 0, "an engine error must not trip the panic path");
+        assert_eq!(m.worker_respawns(), 0);
+        assert_eq!(m.engine_errors(), 3);
+        assert_eq!(svc.alive_workers(), 1, "worker survives recoverable errors");
+        svc.shutdown();
+    }
+
+    /// Engine whose batches block until the test opens the gate, then
+    /// serve natively — the "stalled shard" injection. `entered` flips
+    /// when a batch is provably trapped inside `run`.
+    struct GateEngine {
+        gate: Arc<(Mutex<bool>, Condvar)>,
+        entered: Arc<(Mutex<bool>, Condvar)>,
+        inner: NativeEngine,
+    }
+
+    impl BatchEngine for GateEngine {
+        fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+            {
+                let (lock, cv) = &*self.entered;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            let (lock, cv) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            drop(open);
+            self.inner.run(mats)
+        }
+        fn preferred_batch(&self) -> usize {
+            1
+        }
+        fn name(&self) -> String {
+            "gate-test".into()
+        }
+    }
+
+    #[test]
+    fn idle_worker_steals_from_a_stalled_shard() {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new((Mutex::new(false), Condvar::new()));
+        let (g, e) = (gate.clone(), entered.clone());
+        type Factory = Box<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>;
+        let factories: Vec<Factory> = vec![
+            Box::new(move || {
+                Box::new(GateEngine {
+                    gate: g.clone(),
+                    entered: e.clone(),
+                    inner: NativeEngine::flagship(),
+                }) as Box<dyn BatchEngine>
+            }),
+            Box::new(|| Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>),
+        ];
+        let svc = QrdService::start_sharded(
+            factories,
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy::default(),
+        );
+        let eng = NativeEngine::flagship();
+        // occupy worker 0: keep probing until one probe is trapped
+        // inside the gated engine (an early probe may be stolen and
+        // served by worker 1 first — harmless, it just gets answered)
+        let probe: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.1 + 0.5).to_bits());
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut probe_rxs = vec![svc.submit(probe)];
+        loop {
+            let (lock, cv) = &*entered;
+            let guard = lock.lock().unwrap();
+            let (guard, _) = cv
+                .wait_timeout_while(guard, Duration::from_millis(50), |in_gate| !*in_gate)
+                .unwrap();
+            if *guard {
+                break;
+            }
+            drop(guard);
+            assert!(Instant::now() < deadline, "worker 0 never entered the gated engine");
+            probe_rxs.push(svc.submit(probe));
+        }
+        // worker 0 is now provably stuck inside run(); requests routed
+        // to shard 0 from here on can only complete if worker 1 steals
+        // them — receiving them all *before* the gate opens proves the
+        // steal path end to end
+        let mats: Vec<[u32; 16]> = (0..20)
+            .map(|k| {
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.05).to_bits())
+            })
+            .collect();
+        let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+        for (rx, m) in rxs.into_iter().zip(&mats) {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("served while shard 0 is stalled");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.out, &eng.qrd_bits(m));
+        }
+        assert!(
+            svc.metrics().stolen_requests() > 0,
+            "worker 1 must have stolen from the stalled shard 0"
+        );
+        // open the gate; the trapped probe (and any stragglers) finish
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for rx in probe_rxs {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("every probe answered after the gate opens");
+            assert!(resp.error.is_none());
+            assert_eq!(&resp.out, &eng.qrd_bits(&probe));
+        }
         svc.shutdown();
     }
 }

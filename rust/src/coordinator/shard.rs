@@ -1,0 +1,299 @@
+//! Per-worker ingress shard: a bounded MPMC queue with batch-forming
+//! pops and work stealing, built on `Mutex<VecDeque>` + condvars (no
+//! external deps offline).
+//!
+//! Each sharded-topology worker owns one `ShardQueue` and forms batches
+//! from it with zero shared locking against its siblings; an idle
+//! sibling may `steal` from the *front* (oldest requests first, so a
+//! stalled shard's longest-waiting clients are served soonest). Pushes
+//! block while the queue is at its bound (backpressure) and fail fast
+//! once the queue is closed — after `close`, the contents can only
+//! shrink, which is what lets shutdown drain deterministically.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Outcome of [`ShardQueue::pop_batch`].
+pub enum Pop<T> {
+    /// A non-empty batch, in FIFO order.
+    Batch(Vec<T>),
+    /// No item arrived within the caller's wait window (time to check
+    /// the sibling shards for stealable work).
+    TimedOut,
+    /// Closed *and* empty — this shard will never yield work again.
+    Closed,
+}
+
+struct State<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPMC queue for one ingress shard.
+pub struct ShardQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    bound: usize,
+}
+
+impl<T> ShardQueue<T> {
+    /// A queue admitting at most `bound` queued items (≥ 1).
+    pub fn bounded(bound: usize) -> Self {
+        ShardQueue {
+            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            bound: bound.max(1),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        // a consumer that panicked inside its engine never held this
+        // lock, but recover from poisoning anyway: the state is just a
+        // queue + flag, always safe to keep using
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Blocking push (backpressure while at the bound). `Err(t)` hands
+    /// the item back when the queue is closed — the caller answers the
+    /// request itself, so nothing is silently dropped.
+    pub fn push(&self, t: T) -> Result<(), T> {
+        let mut st = self.lock();
+        loop {
+            if st.closed {
+                return Err(t);
+            }
+            if st.q.len() < self.bound {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap_or_else(|p| p.into_inner());
+        }
+        st.q.push_back(t);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.lock().q.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.lock().q.is_empty()
+    }
+
+    /// Close the queue: pushes fail from now on; queued items remain
+    /// poppable/stealable until drained.
+    pub fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Take everything queued right now (shutdown / last-worker-death
+    /// sweep: the caller answers each item with an error `Response`).
+    pub fn drain(&self) -> Vec<T> {
+        let mut st = self.lock();
+        let out: Vec<T> = st.q.drain(..).collect();
+        drop(st);
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Steal up to `max` items from the front (oldest first) without
+    /// blocking. Empty result means nothing to steal.
+    pub fn steal(&self, max: usize) -> Vec<T> {
+        let mut st = self.lock();
+        let n = st.q.len().min(max);
+        let out: Vec<T> = st.q.drain(..n).collect();
+        drop(st);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Form one batch: wait up to `first_wait` for the first item, then
+    /// gather up to `cap` items until `max_wait` expires (the dynamic
+    /// batching deadline, same policy the shared `Batcher` applies).
+    pub fn pop_batch(&self, cap: usize, max_wait: Duration, first_wait: Duration) -> Pop<T> {
+        let cap = cap.max(1);
+        let mut st = self.lock();
+        // phase 1: the first item (or closed / timed out)
+        let wait_deadline = Instant::now() + first_wait;
+        while st.q.is_empty() {
+            if st.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= wait_deadline {
+                return Pop::TimedOut;
+            }
+            let (g, _) = self
+                .not_empty
+                .wait_timeout(st, wait_deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+        // phase 2: fill toward the cap until the batching deadline
+        let mut batch = Vec::with_capacity(cap.min(st.q.len().max(1)));
+        let batch_deadline = Instant::now() + max_wait;
+        loop {
+            while batch.len() < cap {
+                match st.q.pop_front() {
+                    Some(t) => batch.push(t),
+                    None => break,
+                }
+            }
+            if batch.len() >= cap || st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= batch_deadline {
+                break;
+            }
+            let (g, _) = self
+                .not_empty
+                .wait_timeout(st, batch_deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            st = g;
+        }
+        drop(st);
+        self.not_full.notify_all();
+        Pop::Batch(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    fn batch_of(p: Pop<i32>) -> Vec<i32> {
+        match p {
+            Pop::Batch(b) => b,
+            Pop::TimedOut => panic!("timed out"),
+            Pop::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    fn fifo_and_cap() {
+        let q = ShardQueue::bounded(64);
+        for i in 0..10 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(batch_of(q.pop_batch(4, MS, MS)), vec![0, 1, 2, 3]);
+        assert_eq!(batch_of(q.pop_batch(4, MS, MS)), vec![4, 5, 6, 7]);
+        assert_eq!(batch_of(q.pop_batch(4, MS, MS)), vec![8, 9]);
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn empty_queue_times_out_then_closes() {
+        let q: ShardQueue<i32> = ShardQueue::bounded(4);
+        assert!(matches!(q.pop_batch(4, MS, MS), Pop::TimedOut));
+        q.close();
+        assert!(matches!(q.pop_batch(4, MS, MS), Pop::Closed));
+        assert!(q.push(1).is_err(), "push after close must hand the item back");
+    }
+
+    #[test]
+    fn closed_queue_still_drains_queued_items() {
+        let q = ShardQueue::bounded(8);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        q.close();
+        assert_eq!(batch_of(q.pop_batch(8, MS, MS)), vec![1, 2]);
+        assert!(matches!(q.pop_batch(8, MS, MS), Pop::Closed));
+    }
+
+    #[test]
+    fn steal_takes_oldest_first() {
+        let q = ShardQueue::bounded(16);
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.steal(2), vec![0, 1]);
+        assert_eq!(q.steal(10), vec![2, 3, 4, 5]);
+        assert!(q.steal(4).is_empty());
+    }
+
+    #[test]
+    fn drain_empties_the_queue() {
+        let q = ShardQueue::bounded(16);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.drain(), vec![0, 1, 2, 3, 4]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn bound_applies_backpressure_until_a_pop() {
+        let q = Arc::new(ShardQueue::bounded(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(3));
+        // give the pusher time to block on the full queue
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 2, "third push must be blocked at the bound");
+        assert_eq!(batch_of(q.pop_batch(1, MS, MS)), vec![1]);
+        pusher.join().unwrap().unwrap();
+        assert_eq!(q.drain(), vec![2, 3]);
+    }
+
+    #[test]
+    fn close_wakes_a_blocked_pusher() {
+        let q = Arc::new(ShardQueue::bounded(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(pusher.join().unwrap(), Err(2), "blocked push must fail on close");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch_quickly() {
+        let q = ShardQueue::bounded(8);
+        q.push(7).unwrap();
+        let t0 = Instant::now();
+        let b = batch_of(q.pop_batch(64, Duration::from_micros(500), Duration::from_secs(5)));
+        assert_eq!(b, vec![7]);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn producers_preserve_their_own_order() {
+        // per-producer FIFO: each pusher's items appear in push order
+        let q = Arc::new(ShardQueue::bounded(1024));
+        std::thread::scope(|s| {
+            for p in 0..4u32 {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..100u32 {
+                        q.push((p << 16) | i).unwrap();
+                    }
+                });
+            }
+        });
+        let all = q.drain();
+        assert_eq!(all.len(), 400);
+        let mut last = [None::<u32>; 4];
+        for v in all {
+            let (p, i) = ((v >> 16) as usize, v & 0xffff);
+            assert!(last[p].map_or(true, |prev| i > prev), "producer {p} reordered");
+            last[p] = Some(i);
+        }
+    }
+}

@@ -5,13 +5,17 @@
 //! repro report [--nmat N] [--seed S]     run every experiment
 //! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
 //! repro serve [--engine native|pjrt] [--requests N] [--batch B]
-//!             [--workers W] [--threads T]
+//!             [--workers W] [--threads T] [--shards S] [--max-restarts R]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //! ```
 //!
 //! `--workers` is the number of persistent engine threads in the pool;
 //! `--threads` is the intra-batch fan-out inside one native engine.
-//! `0` means one per core for either knob.
+//! `0` means one per core for either knob. The default topology is
+//! sharded ingress (one bounded queue per worker, work stealing,
+//! supervised respawn bounded by `--max-restarts`); `--shards S`
+//! overrides the slot count, and `--shards 0` selects the legacy
+//! shared-lock batcher.
 
 use fp_givens::util::cli::Args;
 
@@ -19,7 +23,7 @@ const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--artifact PATH]";
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--shards S] [--max-restarts R] [--artifact PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -84,9 +88,22 @@ fn main() -> anyhow::Result<()> {
             let threads = args.get_as("threads", 1usize);
             let workers = args.get_as("workers", 1usize);
             let artifact = args.get("artifact", "artifacts/qrd4_hub.hlo.txt");
-            fp_givens::coordinator::serve_synthetic_with(
-                &engine, requests, batch, &artifact, threads, workers,
-            )?;
+            // --shards S>0: sharded ingress with S worker slots;
+            // --shards 0: legacy shared-lock batcher with --workers
+            // slots; no --shards: sharded with --workers slots.
+            let shards = args.get_as("shards", 0usize);
+            let sharded = !args.has("shards") || shards > 0;
+            let max_restarts = args.get_as("max-restarts", 2u32);
+            fp_givens::coordinator::serve_with(&fp_givens::coordinator::ServeConfig {
+                engine,
+                requests,
+                max_batch: batch,
+                artifact,
+                threads,
+                workers: if shards > 0 { shards } else { workers },
+                sharded,
+                max_restarts,
+            })?;
         }
         _ => {
             eprintln!("{USAGE}");

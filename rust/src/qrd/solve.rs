@@ -25,7 +25,20 @@ impl QrdResult {
     /// (G = Qᵀ was accumulated by the rotations).
     pub fn solve(&self, b: &[f64]) -> Vec<f64> {
         let m = b.len();
-        assert_eq!(self.qt.len(), m);
+        assert_eq!(
+            self.r.len(),
+            m,
+            "solve: R is {}×{} but the rhs has {m} entries",
+            self.r.len(),
+            self.r.len()
+        );
+        assert_eq!(
+            self.qt.len(),
+            m,
+            "solve: Qᵀ is {}×{} but the rhs has {m} entries",
+            self.qt.len(),
+            self.qt.len()
+        );
         let gb: Vec<f64> =
             (0..m).map(|i| (0..m).map(|k| self.qt[i][k] * b[k]).sum()).collect();
         back_substitute(&self.r, &gb)
@@ -59,9 +72,22 @@ impl QrdEngine {
     /// QRD-LS formulation the systolic arrays of refs [14][17] use).
     pub fn least_squares(&self, a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
         let rows = a.len();
+        assert!(rows > 0, "least_squares: system has no rows");
         let cols = a[0].len();
-        assert!(rows >= cols, "need an overdetermined/square system");
-        assert_eq!(b.len(), rows);
+        assert!(cols > 0, "least_squares: system has no columns");
+        for (i, row) in a.iter().enumerate() {
+            assert_eq!(
+                row.len(),
+                cols,
+                "least_squares: ragged system — row {i} has {} columns, expected {cols}",
+                row.len()
+            );
+        }
+        assert!(
+            rows >= cols,
+            "least_squares: need an overdetermined/square system (rows {rows} < cols {cols})"
+        );
+        assert_eq!(b.len(), rows, "least_squares: rhs has {} entries for {rows} rows", b.len());
         // augmented rows [A | b] in the unit's format
         let mut work: Vec<Vec<crate::rotator::Val>> = a
             .iter()
@@ -179,5 +205,46 @@ mod tests {
         let r = vec![vec![1.0, 1.0], vec![0.0, 0.0]];
         let x = back_substitute(&r, &[2.0, 0.0]);
         assert_eq!(x, vec![2.0, 0.0]); // rank-deficient: free var = 0
+    }
+
+    // Dimension guards: malformed systems must fail loudly with a
+    // descriptive message, not index-panic (`a[0]`) or silently
+    // misbehave on ragged rows.
+
+    #[test]
+    #[should_panic(expected = "system has no rows")]
+    fn least_squares_rejects_empty_system() {
+        engine().least_squares(&[], &[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged system")]
+    fn least_squares_rejects_ragged_rows() {
+        let a = vec![vec![1.0, 2.0], vec![3.0]];
+        engine().least_squares(&a, &[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rows 1 < cols 2")]
+    fn least_squares_rejects_underdetermined_system() {
+        engine().least_squares(&[vec![1.0, 2.0]], &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rhs has 3 entries for 2 rows")]
+    fn least_squares_rejects_mismatched_rhs() {
+        let a = vec![vec![1.0], vec![2.0]];
+        engine().least_squares(&a, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "solve: R is 3×3 but the rhs has 2 entries")]
+    fn solve_rejects_mismatched_rhs_length() {
+        let a = vec![
+            vec![2.0, 0.5, -1.0],
+            vec![0.5, 3.0, 0.2],
+            vec![-1.0, 0.2, 1.8],
+        ];
+        engine().decompose(&a).solve(&[1.0, 2.0]);
     }
 }

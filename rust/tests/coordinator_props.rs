@@ -1,10 +1,10 @@
 //! Coordinator property tests: no request lost, order preserved,
 //! responses correct under concurrent clients, batch-size caps hold.
 
-use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, QrdService};
+use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, QrdService, RestartPolicy};
 use fp_givens::util::prop;
 use fp_givens::util::rng::Rng;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 fn random_matrix(rng: &mut Rng) -> [u32; 16] {
     let scale = 2f32.powf(rng.range(-6.0, 6.0) as f32);
@@ -125,6 +125,124 @@ fn pool_stress_concurrent_submitters_each_get_their_own_answer() {
     assert_eq!(m.latency().count(), total);
     assert_eq!(m.worker_panics(), 0);
     let svc = Arc::try_unwrap(svc).ok().expect("all clients joined");
+    svc.shutdown();
+}
+
+#[test]
+fn sharded_pool_stress_concurrent_submitters_each_get_their_own_answer() {
+    // Same contract as the shared-lock stress test above, on the
+    // sharded topology: per-request pairing must survive round-robin
+    // routing and work stealing, and the metrics must add up.
+    let workers = 4usize;
+    let factories: Vec<_> = (0..workers)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc = Arc::new(QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 16, max_wait_us: 100 },
+        RestartPolicy::default(),
+    ));
+    let clients = 6usize;
+    let per_client = 250usize;
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let eng = NativeEngine::flagship();
+            let mut rng = Rng::new(c as u64 * 131 + 5);
+            let mut inflight = std::collections::VecDeque::new();
+            for _ in 0..per_client {
+                let m = random_matrix(&mut rng);
+                inflight.push_back((m, svc.submit(m)));
+                if inflight.len() >= 32 {
+                    let (m, rx) = inflight.pop_front().unwrap();
+                    let resp = rx.recv().expect("response");
+                    assert!(resp.error.is_none(), "client {c}: {:?}", resp.error);
+                    assert_eq!(resp.out, eng.qrd_bits(&m), "client {c}");
+                }
+            }
+            for (m, rx) in inflight {
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "client {c}: {:?}", resp.error);
+                assert_eq!(resp.out, eng.qrd_bits(&m), "client {c}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let total = (clients * per_client) as u64;
+    let m = svc.metrics();
+    assert_eq!(m.requests(), total);
+    let batched: f64 = m.mean_batch() * m.batches() as f64;
+    assert_eq!(batched.round() as u64, total);
+    assert_eq!(m.worker_batch_counts().iter().sum::<u64>(), m.batches());
+    assert_eq!(m.latency().count(), total);
+    assert_eq!(m.worker_panics(), 0);
+    assert_eq!(m.worker_respawns(), 0);
+    let svc = Arc::try_unwrap(svc).ok().expect("all clients joined");
+    svc.shutdown();
+}
+
+#[test]
+fn per_shard_fifo_batch_formation_under_concurrent_submitters() {
+    // Single shard + recording engine: the order requests reach the
+    // engine must preserve each submitter's own submission order
+    // (per-producer FIFO; the global interleaving is unspecified).
+    struct RecordingEngine(Arc<Mutex<Vec<u32>>>);
+    impl BatchEngine for RecordingEngine {
+        fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+            let mut log = self.0.lock().unwrap();
+            for m in mats {
+                log.push(m[0]);
+            }
+            Ok(vec![[0u32; 32]; mats.len()])
+        }
+        fn preferred_batch(&self) -> usize {
+            8
+        }
+        fn name(&self) -> String {
+            "recording".into()
+        }
+    }
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let log2 = log.clone();
+    let svc = QrdService::start_sharded(
+        vec![move || Box::new(RecordingEngine(log2.clone())) as Box<dyn BatchEngine>],
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy::default(),
+    );
+    let clients = 4u32;
+    let per_client = 200u32;
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = &svc;
+            s.spawn(move || {
+                let mut rxs = Vec::new();
+                for i in 0..per_client {
+                    let mut a = [0u32; 16];
+                    a[0] = (c << 16) | i;
+                    rxs.push(svc.submit(a));
+                }
+                for rx in rxs {
+                    rx.recv().expect("response");
+                }
+            });
+        }
+    });
+    let seen = log.lock().unwrap();
+    assert_eq!(seen.len(), (clients * per_client) as usize);
+    let mut last = vec![None::<u32>; clients as usize];
+    for v in seen.iter() {
+        let (c, i) = ((v >> 16) as usize, v & 0xffff);
+        assert!(
+            last[c].map_or(true, |prev| i > prev),
+            "client {c} reordered: {i} after {:?}",
+            last[c]
+        );
+        last[c] = Some(i);
+    }
+    drop(seen);
     svc.shutdown();
 }
 

@@ -27,8 +27,8 @@ fn pjrt_artifact_matches_native_engine_bit_for_bit() {
     let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("load artifact");
     let native = NativeEngine::flagship();
     let mats = random_mats(64, 99);
-    let got = pjrt.run(&mats);
-    let want = native.run(&mats);
+    let got = pjrt.run(&mats).expect("pjrt batch");
+    let want = native.run(&mats).expect("native batch");
     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
         assert_eq!(g, w, "matrix {i} differs between PJRT and native");
     }
@@ -44,9 +44,9 @@ fn pjrt_short_batches_pad_correctly() {
     let native = NativeEngine::flagship();
     for n in [1usize, 7, 255] {
         let mats = random_mats(n, n as u64);
-        let got = pjrt.run(&mats);
+        let got = pjrt.run(&mats).expect("pjrt batch");
         assert_eq!(got.len(), n);
-        let want = native.run(&mats);
+        let want = native.run(&mats).expect("native batch");
         assert_eq!(got, want, "batch size {n}");
     }
 }
