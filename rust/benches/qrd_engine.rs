@@ -69,10 +69,31 @@ fn main() {
         }
     }));
 
-    // batch throughput scaling across cores (matrices are independent)
+    // single-thread batch throughput: the per-matrix scalar path vs the
+    // batch-interleaved lane-major tile path, swept over tile sizes.
+    // This is the headline interleaving win (ref [20]'s pipeline
+    // schedule in software): one schedule step per tile, so the CORDIC
+    // lane sweeps span tile×(row tail) contiguous pairs.
     let big_batch: Vec<[u32; 16]> = (0..1024)
         .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
         .collect();
+    let per_matrix = NativeEngine::flagship().with_tile(1);
+    results.push(bench("qrd4 batch x1024 [native 1T, per-matrix]", 1024.0, || {
+        black_box(per_matrix.run(&big_batch).unwrap());
+    }));
+    for tile in [4usize, 16, 64] {
+        let eng = NativeEngine::flagship().with_tile(tile);
+        results.push(bench(
+            &format!("qrd4 batch x1024 [native 1T, interleaved tile={tile}]"),
+            1024.0,
+            || {
+                black_box(eng.run(&big_batch).unwrap());
+            },
+        ));
+    }
+
+    // batch throughput scaling across cores (matrices are independent;
+    // tiles fan out over the thread pool at the engine default tile)
     let cores = par::threads();
     for nt in [1usize, 2, cores].into_iter().collect::<std::collections::BTreeSet<_>>() {
         let eng = NativeEngine::flagship().with_threads(nt);

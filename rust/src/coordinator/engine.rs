@@ -1,7 +1,10 @@
 //! Batch execution engines behind the coordinator.
 
 use crate::fp::{Family, Fp, FpFormat, HubFp};
-use crate::qrd::{triangularize_ws, workspace, FastQrd, QrdEngine, QrdWorkspace};
+use crate::qrd::{
+    triangularize_tile, triangularize_ws, workspace, BatchWorkspace, FastQrd, QrdEngine,
+    QrdWorkspace,
+};
 use crate::rotator::{FamilyOps, RotatorConfig, Val};
 use crate::util::par;
 
@@ -31,16 +34,29 @@ pub struct NativeEngine {
     /// Worker threads for batch execution (1 = serial). Matrices are
     /// independent, so batches scale near-linearly across cores.
     pub threads: usize,
+    /// Batch-interleave tile size: [`BatchEngine::run`] decomposes
+    /// matrices `tile` at a time through the lane-major tile path
+    /// ([`Self::qrd_bits_tile`]); `0`/`1` selects the per-matrix scalar
+    /// path. Results are bit-identical for every setting.
+    pub tile: usize,
 }
 
 impl NativeEngine {
+    /// Default batch-interleave tile size: big enough that each lane
+    /// sweep spans ≥ 16·(2m−1) contiguous pairs, small enough that a
+    /// tile's working set (B·2m² words + scratch) stays L1-resident.
+    pub const DEFAULT_TILE: usize = 16;
+
     /// Flagship configuration: HUBFull single precision N=26, 24 it.
-    /// Serial batch execution (the deterministic single-core baseline);
-    /// see [`Self::with_threads`] for data-parallel batches.
+    /// Serial batch execution (the deterministic single-core baseline)
+    /// on the batch-interleaved tile path; see [`Self::with_threads`]
+    /// for data-parallel batches and [`Self::with_tile`] for the tile
+    /// knob.
     pub fn flagship() -> Self {
         NativeEngine {
             eng: QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)),
             threads: 1,
+            tile: Self::DEFAULT_TILE,
         }
     }
 
@@ -53,6 +69,14 @@ impl NativeEngine {
         self
     }
 
+    /// Set the batch-interleave tile size for [`BatchEngine::run`]
+    /// (`0`/`1` = per-matrix scalar path). Results are bit-identical
+    /// regardless of the tile size; only throughput changes.
+    pub fn with_tile(mut self, tile: usize) -> Self {
+        self.tile = tile;
+        self
+    }
+
     /// Decompose one matrix at the bit level on the allocation-free
     /// monomorphized fast path (this thread's reusable workspace).
     /// Bit-identical to [`Self::qrd_bits_reference`], which the
@@ -61,6 +85,20 @@ impl NativeEngine {
         match self.eng.fast() {
             FastQrd::Hub(r) => workspace::with_hub_ws(|ws| qrd_bits_flat(r, a, ws)),
             FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| qrd_bits_flat(r, a, ws)),
+        }
+    }
+
+    /// Decompose one tile of matrices on the batch-interleaved
+    /// lane-major path (this thread's reusable tile workspace): every
+    /// schedule step runs once across the whole tile, so the CORDIC
+    /// lane sweeps span `tile × (row tail)` contiguous pairs instead of
+    /// ≤ 2m−1. Per matrix the output is bit-identical to
+    /// [`Self::qrd_bits`] / [`Self::qrd_bits_reference`] (matrices are
+    /// independent; locked by the `fastpath_bitexact` suite).
+    pub fn qrd_bits_tile(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+        match self.eng.fast() {
+            FastQrd::Hub(r) => workspace::with_hub_tile_ws(|ws| qrd_bits_tile_flat(r, mats, ws)),
+            FastQrd::Ieee(r) => workspace::with_ieee_tile_ws(|ws| qrd_bits_tile_flat(r, mats, ws)),
         }
     }
 
@@ -124,19 +162,79 @@ fn qrd_bits_flat<F: FamilyOps>(
     out
 }
 
+/// Load one tile of 4×4 `[A | I]` matrices into the lane-major
+/// workspace (the interleaving transpose of the `[u32; 16]` wire
+/// format), triangularize on the batch-interleaved path, transpose the
+/// interleaved `[R | G]` back out. No heap allocation after warm-up
+/// except the returned output vector.
+fn qrd_bits_tile_flat<F: FamilyOps>(
+    rot: &F,
+    mats: &[[u32; 16]],
+    ws: &mut BatchWorkspace<F::Scalar>,
+) -> Vec<[u32; 32]> {
+    if mats.is_empty() {
+        return Vec::new();
+    }
+    let b = mats.len();
+    let m = 4usize;
+    let width = 2 * m;
+    ws.prepare(b, m, width);
+    let one = rot.one();
+    for (lane, a) in mats.iter().enumerate() {
+        ws.load_augmented_with(lane, one, |i, j| rot.from_bits(a[i * m + j] as u64));
+    }
+    triangularize_tile(rot, ws);
+    let mut out = vec![[0u32; 32]; b];
+    for (pos, lanes) in ws.buf().chunks_exact(b).enumerate() {
+        for (lane, &v) in lanes.iter().enumerate() {
+            out[lane][pos] = rot.to_bits(v) as u32;
+        }
+    }
+    out
+}
+
 impl BatchEngine for NativeEngine {
     fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+        let n = mats.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
         // One matrix is a few µs; a scoped-thread spawn is tens of µs
         // and fresh threads re-warm their thread-local workspaces, so
         // only fan out when every worker gets a meaty chunk. (For
         // pool-level parallelism use `QrdService::start_pool`, whose
         // persistent workers keep their workspaces warm across batches;
         // this knob is the intra-batch fan-out within one worker.)
-        let nt = self.threads.min(mats.len() / 16).max(1);
+        let nt = self.threads.min(n / 16).max(1);
+        if self.tile <= 1 {
+            // per-matrix scalar path
+            return Ok(if nt <= 1 {
+                mats.iter().map(|m| self.qrd_bits(m)).collect()
+            } else {
+                par::par_map_with(nt, n, |i| self.qrd_bits(&mats[i]))
+            });
+        }
+        // batch-interleaved path: chunk the batch into lane-major tiles
+        // (the last tile may be partial) and fan the *tiles* out across
+        // the worker threads; outputs keep input order either way
+        let tile = self.tile;
+        let tiles = (n + tile - 1) / tile;
+        let nt = nt.min(tiles);
         Ok(if nt <= 1 {
-            mats.iter().map(|m| self.qrd_bits(m)).collect()
+            let mut out = Vec::with_capacity(n);
+            for chunk in mats.chunks(tile) {
+                out.extend(self.qrd_bits_tile(chunk));
+            }
+            out
         } else {
-            par::par_map_with(nt, mats.len(), |i| self.qrd_bits(&mats[i]))
+            par::par_map_with(nt, tiles, |t| {
+                let lo = t * tile;
+                let hi = (lo + tile).min(n);
+                self.qrd_bits_tile(&mats[lo..hi])
+            })
+            .into_iter()
+            .flatten()
+            .collect()
         })
     }
 
@@ -147,8 +245,17 @@ impl BatchEngine for NativeEngine {
     }
 
     fn name(&self) -> String {
-        format!("native ({}, {} thread{})", self.eng.rot.cfg.label(), self.threads,
-            if self.threads == 1 { "" } else { "s" })
+        format!(
+            "native ({}, {} thread{}, {})",
+            self.eng.rot.cfg.label(),
+            self.threads,
+            if self.threads == 1 { "" } else { "s" },
+            if self.tile <= 1 {
+                "per-matrix".to_string()
+            } else {
+                format!("tile {}", self.tile)
+            }
+        )
     }
 }
 
@@ -273,5 +380,61 @@ mod tests {
             .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
             .collect();
         assert_eq!(serial.run(&mats).unwrap(), parallel.run(&mats).unwrap());
+    }
+
+    #[test]
+    fn tile_path_matches_per_matrix_path() {
+        let eng = NativeEngine::flagship();
+        let mut rng = crate::util::rng::Rng::new(404);
+        let mats: Vec<[u32; 16]> = (0..37)
+            .map(|_| {
+                let s = 2f32.powf(rng.range(-8.0, 8.0) as f32);
+                std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+            })
+            .collect();
+        let want: Vec<[u32; 32]> = mats.iter().map(|m| eng.qrd_bits(m)).collect();
+        // whole-batch tile, partial tiles, single-matrix tiles
+        for lo in [0usize, 3, 36] {
+            let got = eng.qrd_bits_tile(&mats[lo..]);
+            assert_eq!(got.len(), 37 - lo);
+            for (k, out) in got.iter().enumerate() {
+                assert_eq!(out, &want[lo + k], "tile started at {lo}, matrix {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_output_order_is_invariant_across_threads_and_tiles() {
+        // the batch API contract: outputs keep input order and exact
+        // bits for every (threads × tile) combination, including batch
+        // sizes that are not tile multiples, the empty batch and a
+        // batch of one
+        let reference = NativeEngine::flagship().with_tile(1);
+        let mut rng = crate::util::rng::Rng::new(505);
+        for &n in &[0usize, 1, 3, 37, 100] {
+            let mats: Vec<[u32; 16]> = (0..n)
+                .map(|_| {
+                    let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+                    std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+                })
+                .collect();
+            let want: Vec<[u32; 32]> = mats.iter().map(|m| reference.qrd_bits(m)).collect();
+            for &threads in &[1usize, 2, 5] {
+                for &tile in &[0usize, 1, 3, 4, 16, 64] {
+                    let eng = NativeEngine::flagship().with_threads(threads).with_tile(tile);
+                    assert_eq!(
+                        eng.run(&mats).unwrap(),
+                        want,
+                        "n={n} threads={threads} tile={tile}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn engine_name_reports_the_execution_path() {
+        assert!(NativeEngine::flagship().name().contains("tile 16"));
+        assert!(NativeEngine::flagship().with_tile(0).name().contains("per-matrix"));
     }
 }

@@ -32,7 +32,7 @@ mod shard;
 pub use batcher::{BatchPolicy, Batcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
 pub use metrics::{LatencyHistogram, Metrics};
-pub use service::{QrdService, Request, Response, RestartPolicy};
+pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy};
 pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
@@ -59,6 +59,9 @@ pub struct ServeConfig {
     pub sharded: bool,
     /// Per-slot engine-panic restart budget (sharded topology only).
     pub max_restarts: u32,
+    /// Batch-interleave tile size inside each native engine
+    /// (`NativeEngine::with_tile`; 0/1 = per-matrix scalar path).
+    pub tile: usize,
 }
 
 impl Default for ServeConfig {
@@ -72,6 +75,7 @@ impl Default for ServeConfig {
             workers: 1,
             sharded: true,
             max_restarts: 2,
+            tile: NativeEngine::DEFAULT_TILE,
         }
     }
 }
@@ -122,12 +126,13 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
     let (svc, name) = match cfg.engine.as_str() {
         "native" => {
             let threads = cfg.threads;
-            let name = NativeEngine::flagship().with_threads(threads).name();
+            let tile = cfg.tile;
+            let name = NativeEngine::flagship().with_threads(threads).with_tile(tile).name();
             // the factories are Fn, so one Vec serves either topology
             let factories: Vec<_> = (0..workers)
                 .map(|_| {
                     move || {
-                        Box::new(NativeEngine::flagship().with_threads(threads))
+                        Box::new(NativeEngine::flagship().with_threads(threads).with_tile(tile))
                             as Box<dyn BatchEngine>
                     }
                 })

@@ -80,6 +80,77 @@ impl Response {
     }
 }
 
+/// A submitted request's response slot, pollable without blocking —
+/// the first step of the async client API: one client thread can
+/// multiplex any number of in-flight requests by polling instead of
+/// parking a thread per `Receiver::recv`.
+///
+/// Once a poll observes the response it is cached: every later
+/// [`Self::try_result`] / [`Self::wait`] returns the same `Response`.
+/// Because the service answers every submitted request (live pools
+/// respond, dying pools drain error responses), a pending poll always
+/// eventually turns ready.
+pub struct PendingResponse {
+    rx: Receiver<Response>,
+    got: Option<Response>,
+}
+
+impl PendingResponse {
+    /// Wrap a submitted request's receiver (see
+    /// [`QrdService::submit_async`]).
+    pub fn new(rx: Receiver<Response>) -> PendingResponse {
+        PendingResponse { rx, got: None }
+    }
+
+    #[inline]
+    fn poll(&mut self) {
+        if self.got.is_none() {
+            match self.rx.try_recv() {
+                Ok(resp) => self.got = Some(resp),
+                Err(std::sync::mpsc::TryRecvError::Empty) => {}
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    // the service promises a Response before dropping
+                    // the sender; keep the promise even against a bug
+                    self.got = Some(Response::failed(DEAD_POOL_MSG, 0.0));
+                }
+            }
+        }
+    }
+
+    /// Has the response arrived? Non-blocking.
+    pub fn is_ready(&mut self) -> bool {
+        self.poll();
+        self.got.is_some()
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight,
+    /// `Some(response)` once served (then stable across calls — the
+    /// response is cached, not consumed).
+    pub fn try_result(&mut self) -> Option<&Response> {
+        self.poll();
+        self.got.as_ref()
+    }
+
+    /// Block until the response arrives (the escape hatch back to
+    /// synchronous waiting).
+    pub fn wait(mut self) -> Response {
+        self.poll();
+        match self.got {
+            Some(resp) => resp,
+            None => self
+                .rx
+                .recv()
+                .unwrap_or_else(|_| Response::failed(DEAD_POOL_MSG, 0.0)),
+        }
+    }
+}
+
+impl From<Receiver<Response>> for PendingResponse {
+    fn from(rx: Receiver<Response>) -> PendingResponse {
+        PendingResponse::new(rx)
+    }
+}
+
 /// Answer a request with an error `Response` (never drop the channel).
 fn answer_failed(req: Request, reason: &str) {
     let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
@@ -270,6 +341,14 @@ impl QrdService {
             Pool::Sharded(sup) => sup.submit(req),
         }
         rx
+    }
+
+    /// [`Self::submit`] returning a pollable [`PendingResponse`]
+    /// instead of a bare channel — clients multiplexing many in-flight
+    /// requests poll [`PendingResponse::try_result`] from one thread
+    /// rather than parking a thread per request.
+    pub fn submit_async(&self, a: [u32; 16]) -> PendingResponse {
+        PendingResponse::new(self.submit(a))
     }
 
     /// Shared metrics.
@@ -1051,6 +1130,87 @@ mod tests {
                 .expect("every probe answered after the gate opens");
             assert!(resp.error.is_none());
             assert_eq!(&resp.out, &eng.qrd_bits(&probe));
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pending_response_polls_pending_then_ready() {
+        // single gated worker: the response provably cannot arrive
+        // before the gate opens, so the pending state is observable
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new((Mutex::new(false), Condvar::new()));
+        let (g, e) = (gate.clone(), entered.clone());
+        let svc = QrdService::start(
+            move || {
+                Box::new(GateEngine {
+                    gate: g.clone(),
+                    entered: e.clone(),
+                    inner: NativeEngine::flagship(),
+                }) as Box<dyn BatchEngine>
+            },
+            BatchPolicy { max_batch: 1, max_wait_us: 50 },
+        );
+        let eng = NativeEngine::flagship();
+        let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.2 - 1.1).to_bits());
+        let mut pending = svc.submit_async(a);
+        // wait until the batch is trapped inside the gated engine, then
+        // the request is in flight and unanswerable: polls stay pending
+        {
+            let (lock, cv) = &*entered;
+            let guard = lock.lock().unwrap();
+            let (guard, timeout) = cv
+                .wait_timeout_while(guard, Duration::from_secs(30), |in_gate| !*in_gate)
+                .unwrap();
+            assert!(!timeout.timed_out() && *guard, "worker never entered the engine");
+        }
+        assert!(!pending.is_ready(), "gated request must poll as pending");
+        assert!(pending.try_result().is_none(), "pending poll returns None");
+        // open the gate: pending → ready without ever blocking
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while !pending.is_ready() {
+            assert!(Instant::now() < deadline, "response never became ready");
+            std::thread::yield_now();
+        }
+        let resp = pending.try_result().expect("ready");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(&resp.out, &eng.qrd_bits(&a));
+        // the cached response is stable across polls, and wait() hands
+        // out the very same response
+        let again = pending.try_result().expect("still ready").out;
+        assert_eq!(again, eng.qrd_bits(&a));
+        assert_eq!(pending.wait().out, eng.qrd_bits(&a));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pending_response_surfaces_service_errors() {
+        // a panicking engine with no restart budget: the poll API must
+        // deliver the error Response, completing pending → ready →
+        // error without a blocking recv anywhere
+        let svc = QrdService::start_sharded(
+            vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
+            BatchPolicy { max_batch: 2, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 0 },
+        );
+        let mut pendings: Vec<_> = (0..8).map(|_| svc.submit_async([0u32; 16])).collect();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if pendings.iter_mut().all(|p| p.is_ready()) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "error responses never arrived");
+            std::thread::yield_now();
+        }
+        for p in &mut pendings {
+            let resp = p.try_result().expect("ready");
+            assert!(resp.error.is_some(), "{resp:?}");
+            assert!(resp.result().is_err());
         }
         svc.shutdown();
     }

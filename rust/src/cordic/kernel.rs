@@ -49,8 +49,31 @@ fn hub_step(x: i64, y: i64, i: u32, sigma: bool, sh: u32) -> (i64, i64) {
     (wrapw(x + ((tx + 1) >> 1), sh), wrapw(y + ((ty + 1) >> 1), sh))
 }
 
+/// [`conv_step`] with the σ branch turned into a ±1 multiplier so the
+/// lane sweeps stay select-free for the autovectorizer: `s = +1` is the
+/// σ branch, `s = −1` the ¬σ branch. `x + s·(y ≫ i)` and `x − (y ≫ i)`
+/// are the same exact i64 arithmetic (|values| < 2⁶², no overflow), so
+/// this is bit-identical to [`conv_step`] — locked by
+/// `branchless_steps_match_branchy`.
+#[inline(always)]
+fn conv_step_s(x: i64, y: i64, i: u32, s: i64, sh: u32) -> (i64, i64) {
+    let (xs, ys) = (x >> i, y >> i);
+    (wrapw(x + s * ys, sh), wrapw(y - s * xs, sh))
+}
+
+/// [`hub_step`] with the σ branch as a ±1 multiplier. The select must
+/// happen *before* the arithmetic shift (`(−v) ≫ i ≠ −(v ≫ i)`), which
+/// `(s·ey) ≫ i` does exactly; bit-identical to [`hub_step`].
+#[inline(always)]
+fn hub_step_s(x: i64, y: i64, i: u32, s: i64, sh: u32) -> (i64, i64) {
+    let (ex, ey) = (2 * x + 1, 2 * y + 1);
+    let tx = (s * ey) >> i;
+    let ty = (-s * ex) >> i;
+    (wrapw(x + ((tx + 1) >> 1), sh), wrapw(y + ((ty + 1) >> 1), sh))
+}
+
 macro_rules! kernel {
-    ($name:ident, $step:ident, $negate:expr, $doc:literal) => {
+    ($name:ident, $step:ident, $step_s:ident, $negate:expr, $doc:literal) => {
         #[doc = $doc]
         #[derive(Debug, Clone, Copy)]
         pub struct $name {
@@ -127,6 +150,64 @@ macro_rules! kernel {
                     }
                 }
             }
+
+            /// Negate one word — the angle's π pre-rotation, reference
+            /// semantics. Exposed so tile callers can fold a per-matrix
+            /// flip into their scatter/gather pass and feed
+            /// [`Self::rotate_lanes_each`] flip-free words.
+            #[inline(always)]
+            pub fn neg(&self, v: i64) -> i64 {
+                $negate(v, self.sh)
+            }
+
+            /// Batched vectoring: one stage-outer sweep over `lanes`
+            /// *independent* pairs, producing one recorded angle per
+            /// lane. Per lane this performs exactly the [`Self::vector`]
+            /// operation sequence (the σ decision and the flip are both
+            /// per lane), so each `(xs[k], ys[k], angs[k])` is
+            /// bit-identical to vectoring that pair on its own — while
+            /// every stage runs as `lanes` independent add chains
+            /// instead of one 2·niter-deep dependent chain.
+            pub fn vector_lanes(&self, xs: &mut [i64], ys: &mut [i64], angs: &mut [Angle]) {
+                debug_assert_eq!(xs.len(), ys.len());
+                debug_assert_eq!(xs.len(), angs.len());
+                let sh = self.sh;
+                for ((x, y), a) in xs.iter_mut().zip(ys.iter_mut()).zip(angs.iter_mut()) {
+                    *a = Angle::default();
+                    if *x < 0 {
+                        a.flip = true;
+                        *x = $negate(*x, sh);
+                        *y = $negate(*y, sh);
+                    }
+                }
+                for i in 0..self.niter {
+                    for ((x, y), a) in xs.iter_mut().zip(ys.iter_mut()).zip(angs.iter_mut()) {
+                        let bit = (*y >= 0) as u64;
+                        a.sigmas |= bit << i;
+                        let s = (2 * bit as i64) - 1;
+                        (*x, *y) = $step_s(*x, *y, i, s, sh);
+                    }
+                }
+            }
+
+            /// Tile replay with a *per-lane* angle: lane k applies the σ
+            /// register `sigs[k]` (its flip must already be folded into
+            /// `xs[k]`/`ys[k]` via [`Self::neg`]). One stage-outer sweep
+            /// over the whole tile; per lane bit-identical to the
+            /// post-flip stages of [`Self::rotate`]. This is the long
+            /// contiguous lane sweep the batch-interleaved QRD path
+            /// executes once per schedule step.
+            pub fn rotate_lanes_each(&self, xs: &mut [i64], ys: &mut [i64], sigs: &[u64]) {
+                debug_assert_eq!(xs.len(), ys.len());
+                debug_assert_eq!(xs.len(), sigs.len());
+                let sh = self.sh;
+                for i in 0..self.niter {
+                    for ((x, y), &sg) in xs.iter_mut().zip(ys.iter_mut()).zip(sigs.iter()) {
+                        let s = (2 * ((sg >> i) & 1) as i64) - 1;
+                        (*x, *y) = $step_s(*x, *y, i, s, sh);
+                    }
+                }
+            }
         }
     };
 }
@@ -144,12 +225,14 @@ fn hub_negate(v: i64, sh: u32) -> i64 {
 kernel!(
     ConvKernel,
     conv_step,
+    conv_step_s,
     conv_negate,
     "Conventional (two's-complement) CORDIC kernel, family fixed at compile time."
 );
 kernel!(
     HubKernel,
     hub_step,
+    hub_step_s,
     hub_negate,
     "HUB CORDIC kernel (Fig. 6 carry-in adders), family fixed at compile time."
 );
@@ -233,5 +316,145 @@ mod tests {
         let k = HubKernel::new(20, 16);
         let (_, _, ang) = k.vector(1000, -3000);
         k.rotate_lanes(&mut [], &mut [], &ang);
+        k.vector_lanes(&mut [], &mut [], &mut []);
+        k.rotate_lanes_each(&mut [], &mut [], &[]);
+    }
+
+    #[test]
+    fn branchless_steps_match_branchy() {
+        // the ±1-select forms are the tile sweeps' inner loop; lock them
+        // to the reference branchy steps over widths, stages and the
+        // wrap-prone extremes, for both σ values
+        let mut rng = Rng::new(21);
+        for w in [4u32, 16, 30, 58, 62] {
+            let sh = 64 - w;
+            let extremes =
+                [crate::fixed::wrap(i64::MIN, w), crate::fixed::wrap(i64::MAX, w), 0, -1, 1];
+            for i in 0..w.min(60) {
+                for _ in 0..40 {
+                    let mut x = random_word(&mut rng, w);
+                    let mut y = random_word(&mut rng, w);
+                    if rng.below(4) == 0 {
+                        x = extremes[rng.below(extremes.len() as u64) as usize];
+                    }
+                    if rng.below(4) == 0 {
+                        y = extremes[rng.below(extremes.len() as u64) as usize];
+                    }
+                    for sigma in [false, true] {
+                        let s = if sigma { 1i64 } else { -1 };
+                        assert_eq!(
+                            conv_step(x, y, i, sigma, sh),
+                            conv_step_s(x, y, i, s, sh),
+                            "conv w={w} i={i} σ={sigma} x={x} y={y}"
+                        );
+                        assert_eq!(
+                            hub_step(x, y, i, sigma, sh),
+                            hub_step_s(x, y, i, s, sh),
+                            "hub w={w} i={i} σ={sigma} x={x} y={y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vector_lanes_matches_per_pair_vector() {
+        let mut rng = Rng::new(22);
+        for (w, niter) in [(30u32, 24u32), (16, 12), (58, 55)] {
+            let conv = ConvKernel::new(w, niter);
+            let hub = HubKernel::new(w, niter);
+            for _ in 0..100 {
+                let lanes = 1 + rng.below(17) as usize;
+                let xs: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+                let ys: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+                for_each_kernel(&conv, &hub, &xs, &ys, lanes, w, niter);
+            }
+        }
+
+        fn for_each_kernel(
+            conv: &ConvKernel,
+            hub: &HubKernel,
+            xs: &[i64],
+            ys: &[i64],
+            lanes: usize,
+            w: u32,
+            niter: u32,
+        ) {
+            let mut cx = xs.to_vec();
+            let mut cy = ys.to_vec();
+            let mut ca = vec![Angle::default(); lanes];
+            conv.vector_lanes(&mut cx, &mut cy, &mut ca);
+            for l in 0..lanes {
+                let (wx, wy, wa) = conv.vector(xs[l], ys[l]);
+                assert_eq!((cx[l], cy[l], ca[l]), (wx, wy, wa), "conv lane {l} w={w} it={niter}");
+            }
+            let mut hx = xs.to_vec();
+            let mut hy = ys.to_vec();
+            let mut ha = vec![Angle::default(); lanes];
+            hub.vector_lanes(&mut hx, &mut hy, &mut ha);
+            for l in 0..lanes {
+                let (wx, wy, wa) = hub.vector(xs[l], ys[l]);
+                assert_eq!((hx[l], hy[l], ha[l]), (wx, wy, wa), "hub lane {l} w={w} it={niter}");
+            }
+        }
+    }
+
+    #[test]
+    fn vector_lanes_resets_stale_angles() {
+        // reused angle buffers must not leak previous flips/σ bits
+        let k = ConvKernel::new(24, 20);
+        let mut angs = vec![Angle { flip: true, sigmas: u64::MAX }; 3];
+        let mut xs = vec![1000i64, -2000, 0];
+        let mut ys = vec![-5i64, 700, 0];
+        k.vector_lanes(&mut xs, &mut ys, &mut angs);
+        for (l, a) in angs.iter().enumerate() {
+            let (_, _, want) = k.vector([1000i64, -2000, 0][l], [-5i64, 700, 0][l]);
+            assert_eq!(*a, want, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn rotate_lanes_each_matches_per_pair_rotate() {
+        let mut rng = Rng::new(23);
+        for (w, niter) in [(28u32, 24u32), (16, 12), (58, 55)] {
+            let conv = ConvKernel::new(w, niter);
+            let hub = HubKernel::new(w, niter);
+            for _ in 0..100 {
+                let lanes = 1 + rng.below(24) as usize;
+                // one independent angle per lane (the tile case: lane k
+                // of a B-chunk carries matrix k's angle)
+                let angs: Vec<Angle> = (0..lanes)
+                    .map(|_| {
+                        let (_, _, a) =
+                            hub.vector(random_word(&mut rng, w), random_word(&mut rng, w));
+                        a
+                    })
+                    .collect();
+                let xs: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+                let ys: Vec<i64> = (0..lanes).map(|_| random_word(&mut rng, w)).collect();
+                // caller contract: flip folded in before the sweep
+                let fold = |k: &dyn Fn(i64) -> i64, v: &[i64], a: &[Angle]| -> Vec<i64> {
+                    v.iter().zip(a).map(|(&v, a)| if a.flip { k(v) } else { v }).collect()
+                };
+                let sigs: Vec<u64> = angs.iter().map(|a| a.sigmas).collect();
+
+                let mut hx = fold(&|v| hub.neg(v), &xs, &angs);
+                let mut hy = fold(&|v| hub.neg(v), &ys, &angs);
+                hub.rotate_lanes_each(&mut hx, &mut hy, &sigs);
+                for l in 0..lanes {
+                    let want = hub.rotate(xs[l], ys[l], &angs[l]);
+                    assert_eq!((hx[l], hy[l]), want, "hub lane {l} w={w}");
+                }
+
+                let mut cx = fold(&|v| conv.neg(v), &xs, &angs);
+                let mut cy = fold(&|v| conv.neg(v), &ys, &angs);
+                conv.rotate_lanes_each(&mut cx, &mut cy, &sigs);
+                for l in 0..lanes {
+                    let want = conv.rotate(xs[l], ys[l], &angs[l]);
+                    assert_eq!((cx[l], cy[l]), want, "conv lane {l} w={w}");
+                }
+            }
+        }
     }
 }

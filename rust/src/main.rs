@@ -4,26 +4,33 @@
 //! repro exp <id> [--nmat N] [--seed S]   regenerate one paper table/figure
 //! repro report [--nmat N] [--seed S]     run every experiment
 //! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
+//!           [--batch B] [--tile T] [--threads T]
 //! repro serve [--engine native|pjrt] [--requests N] [--batch B]
-//!             [--workers W] [--threads T] [--shards S] [--max-restarts R]
+//!             [--workers W] [--threads T] [--tile T]
+//!             [--shards S] [--max-restarts R]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //! ```
 //!
 //! `--workers` is the number of persistent engine threads in the pool;
-//! `--threads` is the intra-batch fan-out inside one native engine.
-//! `0` means one per core for either knob. The default topology is
-//! sharded ingress (one bounded queue per worker, work stealing,
-//! supervised respawn bounded by `--max-restarts`); `--shards S`
-//! overrides the slot count, and `--shards 0` selects the legacy
-//! shared-lock batcher.
+//! `--threads` is the intra-batch fan-out inside one native engine;
+//! `--tile` is the batch-interleave tile size inside each native
+//! engine (lane-major SoA execution, `0`/`1` = per-matrix scalar
+//! path). `0` means one per core for the worker/thread knobs. The
+//! default topology is sharded ingress (one bounded queue per worker,
+//! work stealing, supervised respawn bounded by `--max-restarts`);
+//! `--shards S` overrides the slot count, and `--shards 0` selects the
+//! legacy shared-lock batcher.
+//!
+//! `repro qrd --batch B` switches from the single-matrix walkthrough to
+//! a batch-interleaved throughput demo over B random 4×4 matrices.
 
 use fp_givens::util::cli::Args;
 
 const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
-  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--shards S] [--max-restarts R] [--artifact PATH]";
+  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--artifact PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -61,6 +68,41 @@ fn main() -> anyhow::Result<()> {
                 ),
                 other => anyhow::bail!("unknown approach {other}"),
             };
+            let batch = args.get_as("batch", 0usize);
+            if batch > 0 {
+                // batch-interleaved throughput demo on the bit-level
+                // serving path (lane-major tiles through NativeEngine)
+                use fp_givens::coordinator::{BatchEngine, NativeEngine};
+                use fp_givens::util::rng::Rng;
+                anyhow::ensure!(m == 4, "--batch drives the 4×4 bit-level wire format");
+                let tile = args.get_as("tile", NativeEngine::DEFAULT_TILE);
+                let threads = args.get_as("threads", 1usize);
+                let native = NativeEngine { eng: QrdEngine::new(cfg), threads: 1, tile }
+                    .with_threads(threads);
+                let mut rng = Rng::new(seed);
+                let mats: Vec<[u32; 16]> = (0..batch)
+                    .map(|_| {
+                        let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+                        std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+                    })
+                    .collect();
+                let t0 = std::time::Instant::now();
+                let out = native.run(&mats).map_err(anyhow::Error::msg)?;
+                let wall = t0.elapsed().as_secs_f64();
+                println!("engine    : {}", native.name());
+                println!(
+                    "decomposed {batch} matrices in {:.3} ms  ({:.0} QRD/s)",
+                    wall * 1e3,
+                    batch as f64 / wall
+                );
+                let spot = batch - 1;
+                anyhow::ensure!(
+                    out[spot] == native.qrd_bits_reference(&mats[spot]),
+                    "interleaved output diverged from the reference bit path"
+                );
+                println!("spot check vs reference bit path: ok");
+                return Ok(());
+            }
             let a = MatrixGen::new(seed).matrix(m, r);
             let eng = QrdEngine::new(cfg);
             let res = eng.decompose(&a);
@@ -94,6 +136,10 @@ fn main() -> anyhow::Result<()> {
             let shards = args.get_as("shards", 0usize);
             let sharded = !args.has("shards") || shards > 0;
             let max_restarts = args.get_as("max-restarts", 2u32);
+            let tile = args.get_as(
+                "tile",
+                fp_givens::coordinator::NativeEngine::DEFAULT_TILE,
+            );
             fp_givens::coordinator::serve_with(&fp_givens::coordinator::ServeConfig {
                 engine,
                 requests,
@@ -103,6 +149,7 @@ fn main() -> anyhow::Result<()> {
                 workers: if shards > 0 { shards } else { workers },
                 sharded,
                 max_restarts,
+                tile,
             })?;
         }
         _ => {

@@ -18,7 +18,7 @@ pub use fixed_engine::FixedQrdEngine;
 pub use iterative::{IterativeQrd, IterativeRun};
 pub use rls::QrdRls;
 pub use schedule::{pair_op_count, rotation_count, schedule, RotationStep};
-pub use workspace::{triangularize_ws, QrdWorkspace};
+pub use workspace::{triangularize_tile, triangularize_ws, BatchWorkspace, QrdWorkspace};
 
 use crate::fp::Family;
 use crate::rotator::{FamilyOps, GivensRotator, HubRotator, IeeeRotator, RotatorConfig, Val};

@@ -20,8 +20,9 @@ pub struct RotationStep {
 }
 
 /// The full schedule for an m×m decomposition: m(m−1)/2 rotations.
+/// Total over all `m` (empty for m ≤ 1: nothing to eliminate).
 pub fn schedule(m: usize) -> Vec<RotationStep> {
-    let mut steps = Vec::with_capacity(m * (m - 1) / 2);
+    let mut steps = Vec::with_capacity(rotation_count(m));
     for col in 0..m.saturating_sub(1) {
         for zero_row in (col + 1)..m {
             steps.push(RotationStep { pivot_row: col, zero_row, col });
@@ -30,16 +31,21 @@ pub fn schedule(m: usize) -> Vec<RotationStep> {
     steps
 }
 
-/// Number of rotations for an m×m decomposition.
+/// Number of rotations for an m×m decomposition: m(m−1)/2. Total over
+/// all `m` (0 for m ≤ 1 — `m·(m−1)` must not be evaluated naively,
+/// which underflows for m = 0 in debug builds).
 pub fn rotation_count(m: usize) -> usize {
-    m * (m - 1) / 2
+    m * m.saturating_sub(1) / 2
 }
 
 /// Total element-pair operations (vectoring + rotations) for an m×m
 /// decomposition with Q accumulation: each rotation touches e = 2m
-/// pairs, minus the pairs left of the cleared column.
+/// pairs, minus the pairs left of the cleared column. Closed form
+/// (no schedule allocation): Σ_{c=0}^{m−2} (m−1−c)(2m−c)
+/// = m(m−1)(5m+2)/6, which is always an integer (m(m−1) is even and
+/// one of m, m−1, 5m+2 is divisible by 3). Total over all `m`.
 pub fn pair_op_count(m: usize) -> usize {
-    schedule(m).iter().map(|s| 2 * m - s.col).sum()
+    m * m.saturating_sub(1) * (5 * m + 2) / 6
 }
 
 #[cfg(test)]
@@ -86,5 +92,28 @@ mod tests {
     fn pair_ops_4x4() {
         // col 0: 3 rotations × 8 pairs; col 1: 2 × 7; col 2: 1 × 6 = 44
         assert_eq!(pair_op_count(4), 3 * 8 + 2 * 7 + 6);
+    }
+
+    #[test]
+    fn closed_form_matches_the_schedule_sum() {
+        for m in 0..12 {
+            let from_schedule: usize = schedule(m).iter().map(|s| 2 * m - s.col).sum();
+            assert_eq!(pair_op_count(m), from_schedule, "m={m}");
+        }
+    }
+
+    #[test]
+    fn degenerate_sizes_are_total() {
+        // m = 0 used to evaluate 0 * (0 - 1): subtract-with-overflow
+        // panic in debug builds; all three functions must be total
+        assert_eq!(rotation_count(0), 0);
+        assert_eq!(rotation_count(1), 0);
+        assert!(schedule(0).is_empty());
+        assert!(schedule(1).is_empty());
+        assert_eq!(pair_op_count(0), 0);
+        assert_eq!(pair_op_count(1), 0);
+        // first non-degenerate size: one rotation over 2m = 4 pairs
+        assert_eq!(rotation_count(2), 1);
+        assert_eq!(pair_op_count(2), 4);
     }
 }

@@ -1,24 +1,38 @@
-//! Flat, reusable QRD workspace — the allocation-free triangularization
-//! hot path.
+//! Flat, reusable QRD workspaces — the allocation-free triangularization
+//! hot paths.
 //!
 //! The reference [`super::QrdEngine::triangularize`] builds a fresh
-//! `Vec<Vec<Val>>` per matrix. The serving path instead keeps one
-//! [`QrdWorkspace`] per thread: a flat row-major buffer of bare family
-//! scalars (`HubFp`/`Fp`, no enum tag) plus the per-row scratch the
-//! monomorphized [`rotate_row`](FamilyOps::rotate_row) replay needs.
-//! After warm-up, [`triangularize_ws`] performs no heap allocation.
+//! `Vec<Vec<Val>>` per matrix. The serving path instead keeps reusable
+//! per-thread workspaces of bare family scalars (`HubFp`/`Fp`, no enum
+//! tag) in two layouts:
 //!
-//! The Givens schedule is iterated inline (same column-major order as
+//! * [`QrdWorkspace`] — **row-major, one matrix**: the per-matrix fast
+//!   path ([`triangularize_ws`]), where each schedule step replays one
+//!   recorded angle across the ≤ 2m−1 remaining pairs of a row pair.
+//! * [`BatchWorkspace`] — **lane-major, B matrices interleaved** (the
+//!   SoA analogue of the paper's pipeline interleaving independent
+//!   matrices, ref [20]): all B copies of one element position are
+//!   adjacent (`buf[(row·width + col)·B + b]` is matrix `b`'s element),
+//!   so each of the m(m−1)/2 schedule steps executes *once for the
+//!   whole tile* ([`triangularize_tile`]): B vectorings in one batched
+//!   sweep, then one contiguous B×(row-tail) lane sweep — long enough
+//!   for the stage-outer autovectorized kernels to pay off.
+//!
+//! After warm-up neither path performs heap allocation. Both iterate
+//! the Givens schedule inline (same column-major order as
 //! [`super::schedule`], which allocates a step vector and is kept for
-//! the reference path and the scheduling tests).
+//! the reference path and the scheduling tests), and both are locked
+//! bit-identical to the reference by `tests/fastpath_bitexact.rs`.
 
 use crate::fp::{Fp, HubFp};
-use crate::rotator::{FamilyOps, RowScratch};
+use crate::rotator::{FamilyOps, RowScratch, TileScratch};
 use std::cell::RefCell;
 
 thread_local! {
     static HUB_WS: RefCell<QrdWorkspace<HubFp>> = RefCell::new(QrdWorkspace::new());
     static IEEE_WS: RefCell<QrdWorkspace<Fp>> = RefCell::new(QrdWorkspace::new());
+    static HUB_TILE_WS: RefCell<BatchWorkspace<HubFp>> = RefCell::new(BatchWorkspace::new());
+    static IEEE_TILE_WS: RefCell<BatchWorkspace<Fp>> = RefCell::new(BatchWorkspace::new());
 }
 
 /// Run `f` with this thread's reusable HUB workspace. One workspace per
@@ -30,6 +44,17 @@ pub fn with_hub_ws<R>(f: impl FnOnce(&mut QrdWorkspace<HubFp>) -> R) -> R {
 /// Run `f` with this thread's reusable conventional workspace.
 pub fn with_ieee_ws<R>(f: impl FnOnce(&mut QrdWorkspace<Fp>) -> R) -> R {
     IEEE_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+/// Run `f` with this thread's reusable HUB *tile* workspace (the
+/// batch-interleaved path's per-thread buffers).
+pub fn with_hub_tile_ws<R>(f: impl FnOnce(&mut BatchWorkspace<HubFp>) -> R) -> R {
+    HUB_TILE_WS.with(|ws| f(&mut ws.borrow_mut()))
+}
+
+/// Run `f` with this thread's reusable conventional *tile* workspace.
+pub fn with_ieee_tile_ws<R>(f: impl FnOnce(&mut BatchWorkspace<Fp>) -> R) -> R {
+    IEEE_TILE_WS.with(|ws| f(&mut ws.borrow_mut()))
 }
 
 /// Reusable flat buffer for one m×width triangularization.
@@ -74,12 +99,112 @@ impl<T: Copy + Default> QrdWorkspace<T> {
     }
 }
 
+/// Reusable lane-major buffer for one tile of B interleaved m×width
+/// triangularizations. Element `(row, col)` of tile matrix `b` lives at
+/// `buf[(row * width + col) * B + b]`, so the B copies of every element
+/// position are contiguous — the layout the batched kernels sweep.
+#[derive(Debug, Clone, Default)]
+pub struct BatchWorkspace<T> {
+    buf: Vec<T>,
+    scratch: TileScratch,
+    batch: usize,
+    m: usize,
+    width: usize,
+}
+
+impl<T: Copy + Default> BatchWorkspace<T> {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        BatchWorkspace {
+            buf: Vec::new(),
+            scratch: TileScratch::new(),
+            batch: 0,
+            m: 0,
+            width: 0,
+        }
+    }
+
+    /// Size the buffer for `batch` interleaved m×width matrices
+    /// (zero-filled) and return it for loading. Reuses capacity —
+    /// allocation-free once warm.
+    pub fn prepare(&mut self, batch: usize, m: usize, width: usize) -> &mut [T] {
+        assert!(width >= m, "augmented width must cover the matrix");
+        self.batch = batch;
+        self.m = m;
+        self.width = width;
+        self.buf.clear();
+        self.buf.resize(batch * m * width, T::default());
+        &mut self.buf
+    }
+
+    /// The flat lane-major contents (valid after [`Self::prepare`]).
+    pub fn buf(&self) -> &[T] {
+        &self.buf
+    }
+
+    /// Tile batch / matrix rows / augmented width currently prepared.
+    pub fn dims(&self) -> (usize, usize, usize) {
+        (self.batch, self.m, self.width)
+    }
+
+    /// The B lanes of one element position, as a slice.
+    pub fn lanes(&self, row: usize, col: usize) -> &[T] {
+        let p = (row * self.width + col) * self.batch;
+        &self.buf[p..p + self.batch]
+    }
+
+    /// Load matrix `lane`'s augmented rows `[A | I]` into the tile:
+    /// `elem(i, j)` supplies element (i, j) of the m×m matrix and
+    /// `one` goes on the identity diagonal of the augmented half (the
+    /// rest keeps [`Self::prepare`]'s zero fill). The single source of
+    /// the lane-major index formula — every tile loader goes through
+    /// here.
+    pub fn load_augmented_with(
+        &mut self,
+        lane: usize,
+        one: T,
+        mut elem: impl FnMut(usize, usize) -> T,
+    ) {
+        let (b, m, width) = (self.batch, self.m, self.width);
+        debug_assert!(lane < b, "lane outside the prepared tile");
+        debug_assert!(width >= 2 * m, "no room for the augmented identity");
+        for i in 0..m {
+            for j in 0..m {
+                self.buf[(i * width + j) * b + lane] = elem(i, j);
+            }
+            self.buf[(i * width + m + i) * b + lane] = one;
+        }
+    }
+}
+
 /// Two disjoint rows of a flat row-major buffer, mutably (`a < b`).
 #[inline]
 fn row_pair_mut<T>(buf: &mut [T], width: usize, a: usize, b: usize) -> (&mut [T], &mut [T]) {
     debug_assert!(a < b);
     let (lo, hi) = buf.split_at_mut(b * width);
     (&mut lo[a * width..(a + 1) * width], &mut hi[..width])
+}
+
+/// The four disjoint lane-major regions one schedule step touches:
+/// pivot-column lanes and row-tail lanes of the pivot row `prow` and
+/// the zeroed row `zrow` (`prow < zrow`), all starting at column `col`.
+#[inline]
+#[allow(clippy::type_complexity)]
+fn tile_step_mut<T>(
+    buf: &mut [T],
+    width: usize,
+    b: usize,
+    prow: usize,
+    zrow: usize,
+    col: usize,
+) -> (&mut [T], &mut [T], &mut [T], &mut [T]) {
+    debug_assert!(prow < zrow);
+    let (lo, hi) = buf.split_at_mut(zrow * width * b);
+    let p = &mut lo[(prow * width + col) * b..(prow * width + width) * b];
+    let z = &mut hi[col * b..width * b];
+    let (pe, pt) = p.split_at_mut(b);
+    let (ze, zt) = z.split_at_mut(b);
+    (pe, pt, ze, zt)
 }
 
 /// Run the Givens schedule over the prepared workspace in place,
@@ -101,6 +226,35 @@ pub fn triangularize_ws<F: FamilyOps>(rot: &F, ws: &mut QrdWorkspace<F::Scalar>)
             // one recorded angle replayed across the remaining pairs of
             // the two rows in a single pass
             rot.rotate_row(&mut prow[col + 1..], &mut zrow[col + 1..], scratch, &ang);
+        }
+    }
+}
+
+/// Run the Givens schedule over a prepared lane-major tile in place,
+/// leaving `[R | G]` of all B matrices interleaved in the flat buffer.
+/// Each schedule step executes **once across the whole tile**: one
+/// batched vectoring sweep over the B pivot pairs, then one contiguous
+/// B×(row-tail) rotation sweep. Matrices are independent, so every
+/// matrix's result is bit-identical to running [`triangularize_ws`]
+/// (and hence the reference `QrdEngine::triangularize`) on it alone —
+/// locked by `tests/fastpath_bitexact.rs` across formats, families and
+/// tile shapes. No heap allocation after warm-up.
+pub fn triangularize_tile<F: FamilyOps>(rot: &F, ws: &mut BatchWorkspace<F::Scalar>) {
+    let BatchWorkspace { buf, scratch, batch, m, width } = ws;
+    let (b, m, width) = (*batch, *m, *width);
+    if b == 0 {
+        return;
+    }
+    for col in 0..m.saturating_sub(1) {
+        for zero_row in (col + 1)..m {
+            let (pivot, ptail, zelem, ztail) =
+                tile_step_mut(buf, width, b, col, zero_row, col);
+            // B vectorings in one stage-outer sweep; records one angle
+            // per matrix in the scratch and zeroes the eliminated lanes
+            rot.vector_tile(pivot, zelem, scratch);
+            // the whole tile's row tails in one lane sweep, each lane
+            // rotated by its own matrix's recorded angle
+            rot.rotate_tile(ptail, ztail, scratch);
         }
     }
 }
@@ -158,5 +312,105 @@ mod tests {
                 assert!(ws.row(i)[j].is_zero(), "({i},{j}) must be exactly zero");
             }
         }
+    }
+
+    #[test]
+    fn batch_prepare_reuses_capacity_and_zero_fills() {
+        let mut ws: BatchWorkspace<HubFp> = BatchWorkspace::new();
+        ws.prepare(16, 4, 8);
+        let cap = ws.buf.capacity();
+        for _ in 0..10 {
+            let buf = ws.prepare(16, 4, 8);
+            assert_eq!(buf.len(), 16 * 32);
+            assert!(buf.iter().all(|v| *v == HubFp::ZERO));
+            buf[5] = HubFp::from_bits(FpFormat::SINGLE, 0x3f80_0000);
+        }
+        assert_eq!(ws.buf.capacity(), cap, "no reallocation across reuses");
+        assert_eq!(ws.dims(), (16, 4, 8));
+    }
+
+    #[test]
+    fn load_augmented_places_matrix_and_identity_lane_major() {
+        let mut ws: BatchWorkspace<u32> = BatchWorkspace::new();
+        ws.prepare(3, 2, 4); // B=3, m=2, width=4
+        ws.load_augmented_with(1, 99, |i, j| (10 * i + j + 1) as u32);
+        // matrix half lands at lane 1, other lanes keep the zero fill
+        assert_eq!(ws.lanes(0, 0), &[0, 1, 0]);
+        assert_eq!(ws.lanes(0, 1), &[0, 2, 0]);
+        assert_eq!(ws.lanes(1, 0), &[0, 11, 0]);
+        assert_eq!(ws.lanes(1, 1), &[0, 12, 0]);
+        // identity diagonal of the augmented half, zeros elsewhere
+        assert_eq!(ws.lanes(0, 2), &[0, 99, 0]);
+        assert_eq!(ws.lanes(1, 3), &[0, 99, 0]);
+        assert_eq!(ws.lanes(0, 3), &[0, 0, 0]);
+        assert_eq!(ws.lanes(1, 2), &[0, 0, 0]);
+    }
+
+    #[test]
+    fn tile_step_regions_are_disjoint_and_lane_major() {
+        // width 4, batch 2, rows: pivot 0, zero 2, col 1
+        let mut buf: Vec<u32> = (0..24).collect(); // 3 rows × 4 cols × 2 lanes
+        let (pe, pt, ze, zt) = tile_step_mut(&mut buf, 4, 2, 0, 2, 1);
+        assert_eq!(pe, &[2, 3], "pivot element lanes (pos 0*4+1)");
+        assert_eq!(pt, &[4, 5, 6, 7], "pivot tail lanes (pos 2..4)");
+        assert_eq!(ze, &[18, 19], "zero element lanes (pos 2*4+1)");
+        assert_eq!(zt, &[20, 21, 22, 23], "zero tail lanes");
+    }
+
+    #[test]
+    fn triangularize_tile_matches_scalar_path_per_matrix() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rot = HubRotator::new(cfg);
+        let m = 4;
+        let width = 2 * m;
+        // 5 matrices (an odd, non-power-of-two tile)
+        let b = 5usize;
+        let mats: Vec<Vec<HubFp>> = (0..b)
+            .map(|k| {
+                (0..m * m)
+                    .map(|e| rot.encode(((e + k) as f64 - 7.5) * 0.31 * if e % 3 == 0 { -1.0 } else { 1.0 }))
+                    .collect()
+            })
+            .collect();
+
+        let mut tws = BatchWorkspace::new();
+        tws.prepare(b, m, width);
+        for (lane, mat) in mats.iter().enumerate() {
+            tws.load_augmented_with(lane, rot.one(), |i, j| mat[i * m + j]);
+        }
+        triangularize_tile(&rot, &mut tws);
+
+        let mut ws = QrdWorkspace::new();
+        for (lane, mat) in mats.iter().enumerate() {
+            let buf = ws.prepare(m, width);
+            for i in 0..m {
+                for j in 0..m {
+                    buf[i * width + j] = mat[i * m + j];
+                }
+                buf[i * width + m + i] = rot.one();
+            }
+            triangularize_ws(&rot, &mut ws);
+            for i in 0..m {
+                for j in 0..width {
+                    assert_eq!(
+                        tws.lanes(i, j)[lane],
+                        ws.row(i)[j],
+                        "matrix {lane} ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_tiles_are_no_ops() {
+        let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+        let rot = HubRotator::new(cfg);
+        let mut tws: BatchWorkspace<HubFp> = BatchWorkspace::new();
+        tws.prepare(0, 4, 8);
+        triangularize_tile(&rot, &mut tws); // B = 0
+        tws.prepare(3, 1, 2);
+        triangularize_tile(&rot, &mut tws); // m = 1: nothing to eliminate
+        assert!(tws.buf().iter().all(|v| v.is_zero()));
     }
 }

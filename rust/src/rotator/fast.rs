@@ -11,10 +11,19 @@
 //! sweep over all lanes ([`HubKernel::rotate_lanes`]), then per-pair
 //! compensation + output conversion.
 //!
-//! Both rotators are locked to the reference by construction (they call
+//! On top of that sits the **tile granularity** for batch-interleaved
+//! execution ([`FamilyOps::vector_tile`] / [`FamilyOps::rotate_tile`]
+//! over a [`TileScratch`]): one schedule step's vectoring runs as a
+//! single batched sweep over a whole tile of B independent matrices
+//! ([`HubKernel::vector_lanes`]), and the row replay becomes one
+//! contiguous B×(row-tail) sweep where every lane carries its own
+//! matrix's angle ([`HubKernel::rotate_lanes_each`]).
+//!
+//! All paths are locked to the reference by construction (they call
 //! the *same* converter routines and arithmetically identical kernels)
 //! and by test (`tests/fastpath_bitexact.rs` asserts byte-identical
-//! `[R | G]` output across formats, families and edge inputs).
+//! `[R | G]` output across formats, families, tile shapes and edge
+//! inputs).
 
 use crate::converters::{
     input_convert_hub, input_convert_ieee, output_convert_hub, output_convert_ieee, BlockFp,
@@ -55,6 +64,51 @@ impl RowScratch {
         self.y.push(bf.y);
         self.exp.push(bf.exp);
         self.idx.push(lane as u32);
+    }
+}
+
+/// Reusable scratch for the batch-interleaved tile path
+/// ([`FamilyOps::vector_tile`] / [`FamilyOps::rotate_tile`]): the
+/// recorded per-matrix angles of the current schedule step, the
+/// block-FP words of the non-skipped tile lanes with their positions
+/// and σ registers, and the vectoring staging buffers. Lives in the
+/// QRD batch workspace so the tile path never allocates after warm-up.
+#[derive(Debug, Clone, Default)]
+pub struct TileScratch {
+    /// One recorded angle per tile matrix, written by `vector_tile`
+    /// and replayed by `rotate_tile` (lane k of each B-chunk uses
+    /// `angs[k]`).
+    angs: Vec<Angle>,
+    // rotate_tile: compacted non-skipped lanes (flip already folded in)
+    x: Vec<i64>,
+    y: Vec<i64>,
+    exp: Vec<i64>,
+    idx: Vec<u32>,
+    sig: Vec<u64>,
+    // vector_tile: the B pivot pairs as block-FP words
+    vx: Vec<i64>,
+    vy: Vec<i64>,
+    vexp: Vec<i64>,
+}
+
+impl TileScratch {
+    /// Empty scratch (grows to tile width on first use, then stays).
+    pub fn new() -> Self {
+        TileScratch::default()
+    }
+
+    /// Matrices in the tile whose angles are currently recorded.
+    pub fn tile_batch(&self) -> usize {
+        self.angs.len()
+    }
+
+    #[inline]
+    fn clear_lanes(&mut self) {
+        self.x.clear();
+        self.y.clear();
+        self.exp.clear();
+        self.idx.clear();
+        self.sig.clear();
     }
 }
 
@@ -102,6 +156,26 @@ pub trait FamilyOps: Clone + Send + Sync {
         scratch: &mut RowScratch,
         ang: &Angle,
     );
+
+    /// Batch-interleaved vectoring: `(xs[b], ys[b])` is the pivot pair
+    /// of tile matrix `b`. One stage-outer sweep over all B pairs
+    /// records one angle per matrix into `scratch` (consumed by
+    /// [`Self::rotate_tile`]), leaves each modulus in `xs[b]` and the
+    /// family's canonical zero in `ys[b]`. Per matrix this is
+    /// bit-identical to [`Self::vector`] followed by zeroing `ys[b]` —
+    /// exactly what one schedule step does to the pivot column.
+    fn vector_tile(&self, xs: &mut [Self::Scalar], ys: &mut [Self::Scalar], scratch: &mut TileScratch);
+
+    /// Batch-interleaved row replay: `xs`/`ys` hold the two rows' tail
+    /// elements of the whole tile in lane-major order (all B copies of
+    /// one element position are adjacent: lane `j·B + b` is position
+    /// `j` of matrix `b`), and lane `j·B + b` is rotated by matrix
+    /// `b`'s angle recorded by the preceding [`Self::vector_tile`].
+    /// `xs.len()` must be a multiple of that tile batch B. Per lane
+    /// this is bit-identical to [`Self::rotate`] (with the same
+    /// both-zero skip rule as [`Self::rotate_row`]), executed as one
+    /// contiguous B×tail stage-outer sweep.
+    fn rotate_tile(&self, xs: &mut [Self::Scalar], ys: &mut [Self::Scalar], scratch: &mut TileScratch);
 }
 
 macro_rules! rotator {
@@ -311,6 +385,85 @@ macro_rules! family_ops {
                     ys[l] = yo;
                 }
             }
+
+            fn vector_tile(
+                &self,
+                xs: &mut [$scalar],
+                ys: &mut [$scalar],
+                sc: &mut TileScratch,
+            ) {
+                debug_assert_eq!(xs.len(), ys.len());
+                let b = xs.len();
+                sc.vx.clear();
+                sc.vy.clear();
+                sc.vexp.clear();
+                for k in 0..b {
+                    let bf = self.convert(xs[k], ys[k]);
+                    sc.vx.push(bf.x);
+                    sc.vy.push(bf.y);
+                    sc.vexp.push(bf.exp);
+                }
+                sc.angs.clear();
+                sc.angs.resize(b, Angle::default());
+                self.core.vector_lanes(&mut sc.vx, &mut sc.vy, &mut sc.angs);
+                let zero = self.zero();
+                for k in 0..b {
+                    // the low output is known-zero by construction and
+                    // not stored — same as the scalar schedule step
+                    let (xo, _ylow) = self.finish(sc.vx[k], sc.vy[k], sc.vexp[k]);
+                    xs[k] = xo;
+                    ys[k] = zero;
+                }
+            }
+
+            fn rotate_tile(
+                &self,
+                xs: &mut [$scalar],
+                ys: &mut [$scalar],
+                sc: &mut TileScratch,
+            ) {
+                debug_assert_eq!(xs.len(), ys.len());
+                let b = sc.angs.len();
+                if b == 0 || xs.is_empty() {
+                    return;
+                }
+                debug_assert_eq!(xs.len() % b, 0, "tail must be whole B-chunks");
+                sc.clear_lanes();
+                let zero = self.zero();
+                for (chunk, (xc, yc)) in
+                    xs.chunks_mut(b).zip(ys.chunks_mut(b)).enumerate()
+                {
+                    for k in 0..b {
+                        let ang = &sc.angs[k];
+                        if self.skip_zero_pairs && xc[k].is_zero() && yc[k].is_zero() {
+                            // rotated zeros flush to the canonical zero —
+                            // identical to the full datapath (see above)
+                            xc[k] = zero;
+                            yc[k] = zero;
+                        } else {
+                            let mut bf = self.convert(xc[k], yc[k]);
+                            if ang.flip {
+                                // fold the π pre-rotation in here so the
+                                // tile sweep below is flip-free
+                                bf.x = self.core.neg(bf.x);
+                                bf.y = self.core.neg(bf.y);
+                            }
+                            sc.x.push(bf.x);
+                            sc.y.push(bf.y);
+                            sc.exp.push(bf.exp);
+                            sc.idx.push((chunk * b + k) as u32);
+                            sc.sig.push(ang.sigmas);
+                        }
+                    }
+                }
+                self.core.rotate_lanes_each(&mut sc.x, &mut sc.y, &sc.sig);
+                for k in 0..sc.idx.len() {
+                    let (xo, yo) = self.finish(sc.x[k], sc.y[k], sc.exp[k]);
+                    let l = sc.idx[k] as usize;
+                    xs[l] = xo;
+                    ys[l] = yo;
+                }
+            }
         }
     };
 }
@@ -430,5 +583,93 @@ mod tests {
     #[should_panic(expected = "family")]
     fn family_mismatch_is_rejected() {
         let _ = HubRotator::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+    }
+
+    /// vector_tile across B matrices must equal B scalar vectorings
+    /// (modulus in x, canonical zero in y, same recorded angle).
+    fn check_vector_tile<F: FamilyOps>(fast: &F, rng: &mut Rng) {
+        let b = 1 + rng.below(9) as usize;
+        let mut sc = TileScratch::new();
+        let xs: Vec<F::Scalar> = (0..b).map(|_| fast.encode(random_val(rng))).collect();
+        let ys: Vec<F::Scalar> = (0..b).map(|_| fast.encode(random_val(rng))).collect();
+        let mut tx = xs.clone();
+        let mut ty = ys.clone();
+        fast.vector_tile(&mut tx, &mut ty, &mut sc);
+        assert_eq!(sc.tile_batch(), b);
+        for l in 0..b {
+            let (wx, _wy, wa) = fast.vector(xs[l], ys[l]);
+            assert_eq!(fast.to_bits(tx[l]), fast.to_bits(wx), "modulus lane {l}");
+            assert!(fast.is_zero(ty[l]), "low lane {l} must be the canonical zero");
+            assert_eq!(sc.angs[l], wa, "angle lane {l}");
+        }
+    }
+
+    /// rotate_tile over a lane-major tail must equal per-pair rotates
+    /// with each lane's own matrix angle (zero pairs included).
+    fn check_rotate_tile<F: FamilyOps>(fast: &F, rng: &mut Rng) {
+        let b = 1 + rng.below(9) as usize;
+        let tail = rng.below(7) as usize; // 0..=6 positions, incl. empty
+        let mut sc = TileScratch::new();
+        // record B angles (mixed flips arise from random signs)
+        let px: Vec<F::Scalar> = (0..b).map(|_| fast.encode(random_val(rng))).collect();
+        let py: Vec<F::Scalar> = (0..b).map(|_| fast.encode(random_val(rng))).collect();
+        let mut vx = px.clone();
+        let mut vy = py.clone();
+        fast.vector_tile(&mut vx, &mut vy, &mut sc);
+        let angs = sc.angs.clone();
+
+        let mut xs: Vec<F::Scalar> = (0..b * tail)
+            .map(|_| {
+                if rng.below(4) == 0 { fast.encode(0.0) } else { fast.encode(random_val(rng)) }
+            })
+            .collect();
+        let mut ys: Vec<F::Scalar> = (0..b * tail)
+            .map(|l| {
+                // correlate with xs so some lanes are both-zero
+                if fast.is_zero(xs[l]) && rng.below(2) == 0 {
+                    fast.encode(0.0)
+                } else {
+                    fast.encode(random_val(rng))
+                }
+            })
+            .collect();
+        let want: Vec<(u64, u64)> = xs
+            .iter()
+            .zip(&ys)
+            .enumerate()
+            .map(|(l, (&x, &y))| {
+                let (wx, wy) = fast.rotate(x, y, &angs[l % b]);
+                (fast.to_bits(wx), fast.to_bits(wy))
+            })
+            .collect();
+        fast.rotate_tile(&mut xs, &mut ys, &mut sc);
+        for (l, &(wx, wy)) in want.iter().enumerate() {
+            assert_eq!(
+                (fast.to_bits(xs[l]), fast.to_bits(ys[l])),
+                (wx, wy),
+                "lane {l} (matrix {})",
+                l % b
+            );
+        }
+    }
+
+    #[test]
+    fn tile_api_matches_scalar_path_for_both_families() {
+        let hub = HubRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+        let ieee = IeeeRotator::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23));
+        let mut rng = Rng::new(31);
+        for _ in 0..150 {
+            check_vector_tile(&hub, &mut rng);
+            check_vector_tile(&ieee, &mut rng);
+            check_rotate_tile(&hub, &mut rng);
+            check_rotate_tile(&ieee, &mut rng);
+        }
+        // narrow-n HUB takes the full datapath for zero pairs (no skip):
+        // the tile path must agree there too
+        let narrow = HubRotator::new(RotatorConfig::hub(FpFormat { ebits: 8, mbits: 8 }, 9, 7));
+        assert!(!narrow.skip_zero_pairs);
+        for _ in 0..50 {
+            check_rotate_tile(&narrow, &mut rng);
+        }
     }
 }

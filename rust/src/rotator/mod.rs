@@ -8,7 +8,7 @@
 
 pub mod fast;
 
-pub use fast::{FamilyOps, HubRotator, IeeeRotator, RowScratch};
+pub use fast::{FamilyOps, HubRotator, IeeeRotator, RowScratch, TileScratch};
 
 use crate::converters::{
     input_convert_hub, input_convert_ieee, output_convert_hub, output_convert_ieee, BlockFp,

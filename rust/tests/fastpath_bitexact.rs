@@ -5,9 +5,19 @@
 //! edge inputs (zeros, saturated maxima, flush-to-zero minima, huge
 //! exponent gaps). This is the switch-over proof demanded before any
 //! caller moved onto the fast path.
+//!
+//! The same lock covers the **batch-interleaved tile path**
+//! (`triangularize_tile` over the lane-major `BatchWorkspace`): every
+//! matrix of every tile — full, partial, and B = 1 — must be
+//! byte-identical to the reference triangularization of that matrix
+//! alone, across all formats and families, and the engine-level wire
+//! format (`NativeEngine::run` with any tile size) must match
+//! `qrd_bits_reference` on edge bit patterns.
 
 use fp_givens::fp::FpFormat;
-use fp_givens::qrd::{triangularize_ws, QrdEngine, QrdWorkspace};
+use fp_givens::qrd::{
+    triangularize_tile, triangularize_ws, BatchWorkspace, QrdEngine, QrdWorkspace,
+};
 use fp_givens::rotator::{FamilyOps, HubRotator, IeeeRotator, RotatorConfig, Val};
 use fp_givens::util::prop;
 use fp_givens::util::rng::Rng;
@@ -98,6 +108,61 @@ fn check_one<F: FamilyOps>(
     true
 }
 
+/// Triangularize one random *tile* of B augmented matrices on the
+/// batch-interleaved lane-major path and compare every matrix, element
+/// by element, against the reference path run on that matrix alone.
+/// Exercises partial/odd tiles (B is random, including 1) and mixed
+/// ordinary/edge inputs per lane.
+fn check_tile<F: FamilyOps>(
+    rot: &F,
+    eng: &QrdEngine,
+    tws: &mut BatchWorkspace<F::Scalar>,
+    wrap: impl Fn(F::Scalar) -> Val,
+    rng: &mut Rng,
+) -> bool {
+    let fmt = rot.cfg().fmt;
+    let pool = edge_pool();
+    let m = 2 + rng.below(5) as usize; // 2..=6
+    let width = 2 * m;
+    let b = 1 + rng.below(9) as usize; // 1..=9: partial, odd, degenerate tiles
+
+    let mats: Vec<Vec<F::Scalar>> = (0..b)
+        .map(|_| (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect())
+        .collect();
+
+    tws.prepare(b, m, width);
+    for (lane, mat) in mats.iter().enumerate() {
+        tws.load_augmented_with(lane, rot.one(), |i, j| mat[i * m + j]);
+    }
+    triangularize_tile(rot, tws);
+
+    for (lane, mat) in mats.iter().enumerate() {
+        let mut rows: Vec<Vec<Val>> = (0..m)
+            .map(|i| {
+                let mut row: Vec<Val> = (0..m).map(|j| wrap(mat[i * m + j])).collect();
+                row.extend((0..m).map(|j| if i == j { eng.rot.one() } else { eng.rot.zero() }));
+                row
+            })
+            .collect();
+        rows = eng.triangularize(rows, m);
+        for i in 0..m {
+            for j in 0..width {
+                let tile_bits = rot.to_bits(tws.lanes(i, j)[lane]);
+                let ref_bits = rows[i][j].to_bits(fmt);
+                if tile_bits != ref_bits {
+                    eprintln!(
+                        "{} tile B={b} m={m} matrix {lane} ({i},{j}): \
+                         tile {tile_bits:#x} vs reference {ref_bits:#x}",
+                        eng.rot.cfg.label()
+                    );
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
 fn ieee_configs() -> Vec<RotatorConfig> {
     vec![
         RotatorConfig::ieee(FpFormat::HALF, 14, 11),
@@ -138,6 +203,32 @@ fn prop_hub_fast_path_is_bit_identical_to_reference() {
         let ws = std::cell::RefCell::new(QrdWorkspace::new());
         prop::check(&format!("hub bit-exact [{}]", cfg.label()), |rng| {
             check_one(&rot, &eng, &mut ws.borrow_mut(), Val::Hub, rng)
+        });
+    }
+}
+
+#[test]
+fn prop_ieee_tile_path_is_bit_identical_to_reference() {
+    for cfg in ieee_configs() {
+        let rot = IeeeRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        // one tile workspace reused across all cases — also exercises
+        // stale-state reuse across differently shaped tiles
+        let tws = std::cell::RefCell::new(BatchWorkspace::new());
+        prop::check(&format!("ieee tile bit-exact [{}]", cfg.label()), |rng| {
+            check_tile(&rot, &eng, &mut tws.borrow_mut(), Val::Ieee, rng)
+        });
+    }
+}
+
+#[test]
+fn prop_hub_tile_path_is_bit_identical_to_reference() {
+    for cfg in hub_configs() {
+        let rot = HubRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        let tws = std::cell::RefCell::new(BatchWorkspace::new());
+        prop::check(&format!("hub tile bit-exact [{}]", cfg.label()), |rng| {
+            check_tile(&rot, &eng, &mut tws.borrow_mut(), Val::Hub, rng)
         });
     }
 }
@@ -200,5 +291,69 @@ fn bit_level_serving_path_matches_reference_on_edge_patterns() {
     for &w in &specials {
         let a = [w; 16];
         assert_eq!(eng.qrd_bits(&a), eng.qrd_bits_reference(&a), "uniform {w:#010x}");
+    }
+}
+
+#[test]
+fn interleaved_wire_path_matches_reference_across_tile_sizes() {
+    use fp_givens::coordinator::{BatchEngine, NativeEngine};
+
+    // the flagship HUB engine and a conventional-family engine, both
+    // on the 4×4 u32 wire format the service speaks
+    let engines = vec![
+        NativeEngine::flagship(),
+        NativeEngine {
+            eng: QrdEngine::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23)),
+            threads: 1,
+            tile: NativeEngine::DEFAULT_TILE,
+        },
+    ];
+    let specials: Vec<u32> = vec![
+        0x0000_0000, // +0
+        0x8000_0000, // −0
+        0x3f80_0000, // 1.0
+        0xbf80_0000, // −1.0
+        0x7f7f_ffff, // max finite
+        0xff7f_ffff, // −max finite
+        0x0080_0000, // min normal
+        0x8080_0000, // −min normal
+        0x0000_0001, // subnormal (treated as zero)
+        0x7f00_0000,
+        0x0100_0000,
+    ];
+    for base in engines {
+        let mut rng = Rng::new(77 + base.tile as u64);
+        // edge-heavy batch: random matrices, special-laden matrices, a
+        // whole-zero matrix and uniform-special matrices
+        let mut mats: Vec<[u32; 16]> = (0..61)
+            .map(|_| {
+                std::array::from_fn(|_| {
+                    if rng.below(3) == 0 {
+                        specials[rng.below(specials.len() as u64) as usize]
+                    } else {
+                        let s = 2f32.powf(rng.range(-30.0, 30.0) as f32);
+                        (rng.range(-1.0, 1.0) as f32 * s).to_bits()
+                    }
+                })
+            })
+            .collect();
+        mats.push([0u32; 16]);
+        for &w in &specials {
+            mats.push([w; 16]);
+        }
+        let want: Vec<[u32; 32]> = mats.iter().map(|m| base.qrd_bits_reference(m)).collect();
+        // every tile size must reproduce the reference bits for every
+        // matrix — 73 matrices ⇒ tiles 2/3/16/64 all hit a partial tail
+        for tile in [1usize, 2, 3, 4, 16, 64, 128] {
+            let eng = NativeEngine {
+                eng: base.eng.clone(),
+                threads: 1,
+                tile,
+            };
+            let got = eng.run(&mats).unwrap();
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g, w, "tile={tile} matrix {k} [{}]", eng.eng.rot.cfg.label());
+            }
+        }
     }
 }
