@@ -143,8 +143,9 @@ fn main() {
     // raw PJRT batch execution (L2 artifact cost per matrix)
     if std::path::Path::new(ARTIFACT).exists() {
         let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact");
+        let mats_v2: Vec<Vec<u32>> = mats.iter().map(|a| a.to_vec()).collect();
         bench("pjrt execute batch=256", 256.0, || {
-            black_box(pjrt.run(&mats).expect("pjrt batch"));
+            black_box(pjrt.run(4, &mats_v2).expect("pjrt batch"));
         });
         let svc = QrdService::start(
             || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact")),

@@ -74,12 +74,12 @@ fn main() {
     // This is the headline interleaving win (ref [20]'s pipeline
     // schedule in software): one schedule step per tile, so the CORDIC
     // lane sweeps span tile×(row tail) contiguous pairs.
-    let big_batch: Vec<[u32; 16]> = (0..1024)
-        .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
+    let big_batch: Vec<Vec<u32>> = (0..1024)
+        .map(|_| (0..16).map(|_| (rng.range(-2.0, 2.0) as f32).to_bits()).collect())
         .collect();
     let per_matrix = NativeEngine::flagship().with_tile(1);
     results.push(bench("qrd4 batch x1024 [native 1T, per-matrix]", 1024.0, || {
-        black_box(per_matrix.run(&big_batch).unwrap());
+        black_box(per_matrix.run(4, &big_batch).unwrap());
     }));
     for tile in [4usize, 16, 64] {
         let eng = NativeEngine::flagship().with_tile(tile);
@@ -87,7 +87,7 @@ fn main() {
             &format!("qrd4 batch x1024 [native 1T, interleaved tile={tile}]"),
             1024.0,
             || {
-                black_box(eng.run(&big_batch).unwrap());
+                black_box(eng.run(4, &big_batch).unwrap());
             },
         ));
     }
@@ -101,7 +101,35 @@ fn main() {
             &format!("qrd4 batch x1024 [native, threads={nt}]"),
             1024.0,
             || {
-                black_box(eng.run(&big_batch).unwrap());
+                black_box(eng.run(4, &big_batch).unwrap());
+            },
+        ));
+    }
+
+    // larger-m schedules: the flat column-major elimination vs the
+    // blocked anti-diagonal waves (qrd::blocked) on the per-matrix
+    // serving path. Same bits either way (the waves are a pure
+    // reordering of commuting rotations); this entry tracks which sweep
+    // shape wins per m — CI greps for every row.
+    for m in [8usize, 16, 32] {
+        let nb = (256 / m).max(4);
+        let mats: Vec<Vec<u32>> = (0..nb)
+            .map(|_| (0..m * m).map(|_| (rng.range(-2.0, 2.0) as f32).to_bits()).collect())
+            .collect();
+        let flat = NativeEngine::flagship().with_tile(1).with_blocked(usize::MAX);
+        let blocked = NativeEngine::flagship().with_tile(1).with_blocked(1);
+        results.push(bench(
+            &format!("qrd{m} batch x{nb} [native 1T, flat schedule]"),
+            nb as f64,
+            || {
+                black_box(flat.run(m, &mats).unwrap());
+            },
+        ));
+        results.push(bench(
+            &format!("qrd{m} batch x{nb} [native 1T, blocked waves]"),
+            nb as f64,
+            || {
+                black_box(blocked.run(m, &mats).unwrap());
             },
         ));
     }

@@ -1,7 +1,17 @@
 //! Dynamic batching policy: group requests up to a size cap or until a
 //! deadline expires — whichever comes first (vLLM-router style).
+//!
+//! Two batchers live here: the [`KeyedBatcher`], which bins items by a
+//! caller-supplied key (the matrix size `m` in the service) and only
+//! ever emits **uniform-key batches** — mixed-m traffic on one ingress
+//! queue comes out as per-m batches, each clamped to its own per-bin
+//! cap — and the homogeneous [`Batcher`], a constant-key wrapper over
+//! it (every item batch-compatible with every other; the 4×4-only v1
+//! service shape, kept as the simple single-shape API).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -19,24 +29,32 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Pull-based batcher over an mpsc receiver.
+/// Pull-based homogeneous batcher over an mpsc receiver: a
+/// [`KeyedBatcher`] with a constant key, so every item is
+/// batch-compatible with every other and the fill/deadline logic lives
+/// in exactly one place. Kept for workloads with a single shape (and
+/// as the simplest API); the `RefCell` trades `Sync` away — callers
+/// wanting cross-thread batch formation wrap a batcher in a `Mutex`
+/// anyway, which is how the service uses the keyed form.
 pub struct Batcher<T> {
-    rx: Receiver<T>,
-    /// The policy in force.
-    pub policy: BatchPolicy,
+    inner: std::cell::RefCell<KeyedBatcher<T>>,
 }
 
 impl<T> Batcher<T> {
     /// Wrap a receiver.
     pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
-        assert!(policy.max_batch >= 1);
-        Batcher { rx, policy }
+        Batcher { inner: std::cell::RefCell::new(KeyedBatcher::new(rx, |_| 0, policy)) }
+    }
+
+    /// The policy in force.
+    pub fn policy(&self) -> BatchPolicy {
+        self.inner.borrow().policy
     }
 
     /// Block for the next batch. Returns `None` when the channel is
     /// closed and drained. Never returns an empty batch.
     pub fn next_batch(&self) -> Option<Vec<T>> {
-        self.next_batch_with(self.policy.max_batch)
+        self.next_batch_with(usize::MAX)
     }
 
     /// [`Self::next_batch`] with a caller-supplied size cap: the pool
@@ -44,29 +62,7 @@ impl<T> Batcher<T> {
     /// (a fixed-shape PJRT artifact must never see an oversized batch).
     /// The effective cap is `min(cap, policy.max_batch)`, at least 1.
     pub fn next_batch_with(&self, cap: usize) -> Option<Vec<T>> {
-        let max = self.policy.max_batch.min(cap).max(1);
-        // block for the first request
-        let first = self.rx.recv().ok()?;
-        let mut batch = Vec::with_capacity(max);
-        batch.push(first);
-        let deadline = Instant::now() + Duration::from_micros(self.policy.max_wait_us);
-        while batch.len() < max {
-            let now = Instant::now();
-            if now >= deadline {
-                // deadline passed: take whatever is already queued
-                match self.rx.try_recv() {
-                    Ok(t) => batch.push(t),
-                    Err(_) => break,
-                }
-                continue;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(t) => batch.push(t),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        Some(batch)
+        self.inner.borrow_mut().next_batch_with(|_| cap).map(|(_, batch)| batch)
     }
 
     /// Non-blocking sweep of everything currently queued. The service
@@ -74,11 +70,148 @@ impl<T> Batcher<T> {
     /// stranded requests with error responses instead of dropping their
     /// channels (which clients would see as a bare `RecvError`).
     pub fn drain(&self) -> Vec<T> {
-        let mut out = Vec::new();
-        while let Ok(t) = self.rx.try_recv() {
-            out.push(t);
+        self.inner.borrow_mut().drain()
+    }
+}
+
+/// Pull-based batcher that bins items by a key and emits uniform-key
+/// batches. Items whose key does not match the batch being formed are
+/// stashed in per-key FIFO bins and served by later calls — nothing is
+/// ever dropped: [`Self::drain`] sweeps the channel *and* every bin, so
+/// shutdown/death sweeps answer stashed requests too.
+///
+/// Bin selection is oldest-first: each call serves the bin whose front
+/// item has waited longest (arrival order is tracked per item), so a
+/// rare-m request cannot starve behind a busy majority bin.
+pub struct KeyedBatcher<T> {
+    rx: Receiver<T>,
+    key: fn(&T) -> usize,
+    /// Per-key FIFO bins of (arrival sequence, arrival time, item).
+    bins: BTreeMap<usize, VecDeque<(u64, Instant, T)>>,
+    /// Monotone arrival counter (assigns each item its age).
+    seq: u64,
+    /// Stashed-item ceiling: once this many items sit in bins, batch
+    /// formation stops draining the ingress channel, so the channel's
+    /// own bound re-applies backpressure to submitters (bins + channel
+    /// together stay bounded).
+    stash_bound: usize,
+    /// The policy in force.
+    pub policy: BatchPolicy,
+}
+
+impl<T> KeyedBatcher<T> {
+    /// Wrap a receiver; `key` maps an item to its bin (the service uses
+    /// the request's matrix size `m`).
+    pub fn new(rx: Receiver<T>, key: fn(&T) -> usize, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        let stash_bound = policy.max_batch.max(1) * 4;
+        KeyedBatcher { rx, key, bins: BTreeMap::new(), seq: 0, stash_bound, policy }
+    }
+
+    fn stash(&mut self, t: T) {
+        let k = (self.key)(&t);
+        let seq = self.seq;
+        self.seq += 1;
+        self.bins.entry(k).or_default().push_back((seq, Instant::now(), t));
+    }
+
+    /// Key of the bin whose front item has waited longest.
+    fn oldest_bin(&self) -> Option<usize> {
+        self.bins
+            .iter()
+            .filter_map(|(k, q)| q.front().map(|(s, _, _)| (*s, *k)))
+            .min()
+            .map(|(_, k)| k)
+    }
+
+    /// Items currently stashed across all bins (not yet batched).
+    pub fn pending(&self) -> usize {
+        self.bins.values().map(|q| q.len()).sum()
+    }
+
+    /// Block for the next **uniform-key** batch; returns the key and
+    /// the batch. `cap_of(key)` is the per-bin size cap (the engine's
+    /// `preferred_batch(m)`): the effective cap is
+    /// `min(policy.max_batch, cap_of(key))`, at least 1. Returns `None`
+    /// only when the channel is closed *and* every bin is empty. Never
+    /// returns an empty batch.
+    ///
+    /// The batching deadline is anchored at the batch's **oldest
+    /// item's stash time**, so a request that sat in a bin across an
+    /// earlier call is emitted without paying a second full window
+    /// from scratch. (The stash time of an item drained late in
+    /// another bin's fill window trails its true channel arrival by up
+    /// to one window, so worst-case formation latency is bounded by
+    /// ~2× `max_wait_us`, not 1× — an age accessor on `T` would close
+    /// that gap if the tail ever matters.)
+    pub fn next_batch_with(&mut self, cap_of: impl Fn(usize) -> usize) -> Option<(usize, Vec<T>)> {
+        if self.bins.values().all(|q| q.is_empty()) {
+            // nothing stashed: block for the first item
+            let first = self.rx.recv().ok()?;
+            self.stash(first);
         }
-        out
+        let k = self.oldest_bin().expect("a bin is non-empty here");
+        let cap = self.policy.max_batch.min(cap_of(k)).max(1);
+        let mut batch = Vec::with_capacity(cap);
+        let bin = self.bins.get_mut(&k).expect("oldest bin exists");
+        let anchor = bin.front().map(|(_, at, _)| *at).unwrap_or_else(Instant::now);
+        while batch.len() < cap {
+            match bin.pop_front() {
+                Some((_, _, t)) => batch.push(t),
+                None => break,
+            }
+        }
+        // fill toward the cap until the batching deadline (measured
+        // from the oldest item's arrival); non-matching arrivals are
+        // stashed for later calls. Two hard stops keep this loop — and
+        // the mutex the service holds around it — bounded under
+        // adversarial mixed-key traffic: the stash ceiling (past it the
+        // channel is left to its own bound, restoring submitter
+        // backpressure) and a no-foreign-drain rule once the deadline
+        // has passed.
+        let deadline = anchor + Duration::from_micros(self.policy.max_wait_us);
+        while batch.len() < cap && self.pending() < self.stash_bound {
+            let now = Instant::now();
+            let expired = now >= deadline;
+            let got = if expired {
+                // deadline passed: take whatever is already queued
+                match self.rx.try_recv() {
+                    Ok(t) => t,
+                    Err(TryRecvError::Empty | TryRecvError::Disconnected) => break,
+                }
+            } else {
+                match self.rx.recv_timeout(deadline - now) {
+                    Ok(t) => t,
+                    Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => break,
+                }
+            };
+            if (self.key)(&got) == k {
+                batch.push(got);
+            } else {
+                self.stash(got);
+                if expired {
+                    // past the deadline a foreign key ends the sweep:
+                    // producers pushing other bins must not hold this
+                    // batch (and the batcher lock) hostage
+                    break;
+                }
+            }
+        }
+        Some((k, batch))
+    }
+
+    /// Non-blocking sweep of everything currently queued — the channel
+    /// *and* every per-key bin, in arrival order. The service uses this
+    /// when the last worker dies or at shutdown: a request stashed in a
+    /// bin is answered exactly like one still in the channel.
+    pub fn drain(&mut self) -> Vec<T> {
+        while let Ok(t) = self.rx.try_recv() {
+            self.stash(t);
+        }
+        let mut all: Vec<(u64, Instant, T)> =
+            self.bins.iter_mut().flat_map(|(_, q)| q.drain(..)).collect();
+        all.sort_by_key(|(s, _, _)| *s);
+        all.into_iter().map(|(_, _, t)| t).collect()
     }
 }
 
@@ -171,6 +304,81 @@ mod tests {
         assert_eq!(b.drain(), Vec::<i32>::new());
         drop(tx);
         assert_eq!(b.drain(), Vec::<i32>::new(), "disconnected channel drains empty");
+    }
+
+    /// Key for the keyed-batcher tests: the item's hundreds digit
+    /// (so 2xx and 3xx model m=2 and m=3 traffic).
+    fn kb_key(t: &i32) -> usize {
+        (*t / 100) as usize
+    }
+
+    #[test]
+    fn keyed_batches_are_uniform_and_respect_per_bin_caps() {
+        // everything pre-queued and the sender dropped: batch formation
+        // never waits (disconnects end each fill), and the generous
+        // deadline keeps the expired-foreign-key break unreachable even
+        // if CI deschedules this thread mid-test
+        let (tx, rx) = channel();
+        for t in [201, 301, 202, 302, 203, 303, 204] {
+            tx.send(t).unwrap();
+        }
+        drop(tx);
+        let mut b =
+            KeyedBatcher::new(rx, kb_key, BatchPolicy { max_batch: 8, max_wait_us: 500_000 });
+        // bin 2 arrived first and gets a tighter cap than bin 3
+        let caps = |k: usize| if k == 2 { 3 } else { 8 };
+        let (k, batch) = b.next_batch_with(caps).unwrap();
+        assert_eq!((k, batch), (2, vec![201, 202, 203]));
+        // bin 3's front (301) is now the oldest pending item
+        let (k, batch) = b.next_batch_with(caps).unwrap();
+        assert_eq!((k, batch), (3, vec![301, 302, 303]));
+        let (k, batch) = b.next_batch_with(caps).unwrap();
+        assert_eq!((k, batch), (2, vec![204]));
+        assert!(b.next_batch_with(caps).is_none());
+    }
+
+    #[test]
+    fn keyed_batcher_never_mixes_keys_under_interleaved_arrivals() {
+        let (tx, rx) = channel();
+        for i in 0..30 {
+            tx.send(100 * (2 + i % 3) + i).unwrap(); // keys 2, 3, 4 interleaved
+        }
+        drop(tx);
+        let mut b = KeyedBatcher::new(rx, kb_key, BatchPolicy { max_batch: 4, max_wait_us: 50 });
+        let mut per_key: std::collections::BTreeMap<usize, Vec<i32>> = Default::default();
+        while let Some((k, batch)) = b.next_batch_with(|_| usize::MAX) {
+            assert!(!batch.is_empty());
+            assert!(batch.len() <= 4);
+            assert!(batch.iter().all(|t| kb_key(t) == k), "mixed batch: {batch:?}");
+            per_key.entry(k).or_default().extend(batch);
+        }
+        // per-key FIFO: each bin's items come out in arrival order
+        for (k, items) in per_key {
+            let want: Vec<i32> =
+                (0..30).filter(|i| (2 + i % 3) as usize == k).map(|i| 100 * k as i32 + i).collect();
+            assert_eq!(items, want, "key {k}");
+        }
+    }
+
+    #[test]
+    fn keyed_drain_sweeps_channel_and_stashed_bins_in_arrival_order() {
+        // pre-queued + dropped sender, generous deadline: no real-time
+        // dependence (see keyed_batches_are_uniform…)
+        let (tx, rx) = channel();
+        for t in [201, 301, 401, 202, 302] {
+            tx.send(t).unwrap();
+        }
+        drop(tx);
+        let mut b =
+            KeyedBatcher::new(rx, kb_key, BatchPolicy { max_batch: 8, max_wait_us: 500_000 });
+        // forming the key-2 batch stashes 301, 401 and 302 into bins
+        let (k, batch) = b.next_batch_with(|_| usize::MAX).unwrap();
+        assert_eq!((k, batch), (2, vec![201, 202]));
+        assert_eq!(b.pending(), 3, "foreign keys must be stashed, not lost");
+        // drain sweeps the stashed bins in arrival order
+        assert_eq!(b.drain(), vec![301, 401, 302]);
+        assert_eq!(b.pending(), 0);
+        assert!(b.next_batch_with(|_| usize::MAX).is_none());
     }
 
     #[test]

@@ -2,32 +2,38 @@
 
 use crate::fp::{Family, Fp, FpFormat, HubFp};
 use crate::qrd::{
-    triangularize_tile, triangularize_ws, workspace, BatchWorkspace, FastQrd, QrdEngine,
-    QrdWorkspace,
+    triangularize_blocked_ws, triangularize_tile, triangularize_ws, workspace, BatchWorkspace,
+    FastQrd, QrdEngine, QrdWorkspace,
 };
 use crate::rotator::{FamilyOps, RotatorConfig, Val};
 use crate::util::par;
 
-/// A backend that decomposes batches of 4×4 matrices given as HUB FP
-/// bit patterns (16 words in, 32 words out: `[R | G]`).
+/// A backend that decomposes **uniform-m batches** of m×m matrices
+/// given as FP bit patterns (wire format v2: `m*m` words in, `m*2m`
+/// words out per matrix, `[R | G]` row-major).
 pub trait BatchEngine {
-    /// Execute a batch. `Err` is a *recoverable* backend failure (e.g.
-    /// a PJRT execute error): the service answers the batch with error
-    /// responses and keeps the worker — only a panic retires/respawns
-    /// it. The native engine is infallible and always returns `Ok`.
-    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String>;
-    /// Largest batch this backend can execute in one call. The service
-    /// clamps every worker's batches to `min(policy.max_batch, this)`,
-    /// so fixed-shape backends (an AOT PJRT artifact) report their
-    /// lowered batch size here; shape-free backends return
-    /// `usize::MAX` and let the batch policy govern alone.
-    fn preferred_batch(&self) -> usize;
+    /// Execute one uniform-m batch. Every matrix must carry exactly
+    /// `m*m` words — a mixed-size batch reaching an engine is a
+    /// batching bug upstream and MUST be answered with `Err` (never
+    /// truncated or zero-padded). `Err` is a *recoverable* backend
+    /// failure (e.g. a PJRT execute error, an unsupported `m`): the
+    /// service answers the batch with error responses and keeps the
+    /// worker — only a panic retires/respawns it. The native engine is
+    /// infallible for well-formed batches of any `m ≥ 1`.
+    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+    /// Largest batch this backend can execute in one call **for the
+    /// given m** (the per-bin cap: the service clamps every worker's
+    /// batches to `min(policy.max_batch, this)`). Fixed-shape backends
+    /// (an AOT PJRT artifact) report their lowered batch size for the
+    /// `m` they were built for; shape-free backends return `usize::MAX`
+    /// and let the batch policy govern alone.
+    fn preferred_batch(&self, m: usize) -> usize;
     /// Display name.
     fn name(&self) -> String;
 }
 
 /// Bit-accurate native Rust engine (the reference implementation —
-/// byte-for-byte identical to the PJRT artifact's output).
+/// byte-for-byte identical to the PJRT artifact's output on 4×4).
 pub struct NativeEngine {
     /// The underlying QRD engine (public for tests/examples).
     pub eng: QrdEngine,
@@ -36,9 +42,15 @@ pub struct NativeEngine {
     pub threads: usize,
     /// Batch-interleave tile size: [`BatchEngine::run`] decomposes
     /// matrices `tile` at a time through the lane-major tile path
-    /// ([`Self::qrd_bits_tile`]); `0`/`1` selects the per-matrix scalar
-    /// path. Results are bit-identical for every setting.
+    /// ([`Self::qrd_bits_tile_m`]); `0`/`1` selects the per-matrix
+    /// scalar path. Results are bit-identical for every setting.
     pub tile: usize,
+    /// Smallest `m` decomposed through the blocked wave schedule
+    /// (`qrd::blocked`) on the per-matrix path; below it the flat
+    /// column-major schedule runs. Results are bit-identical either way
+    /// (the waves are a pure reordering of commuting rotations); only
+    /// the sweep shapes change.
+    pub blocked_min: usize,
 }
 
 impl NativeEngine {
@@ -47,16 +59,31 @@ impl NativeEngine {
     /// tile's working set (B·2m² words + scratch) stays L1-resident.
     pub const DEFAULT_TILE: usize = 16;
 
+    /// Default blocked-schedule threshold: at m ≥ 16 a wave's batched
+    /// sweep (up to ⌊m/2⌋ lanes × row tail) outgrows the flat path's
+    /// single-row replays; below that the gather/scatter overhead wins.
+    /// `cargo bench --bench qrd_engine` tracks the crossover.
+    pub const DEFAULT_BLOCKED_MIN: usize = 16;
+
     /// Flagship configuration: HUBFull single precision N=26, 24 it.
     /// Serial batch execution (the deterministic single-core baseline)
     /// on the batch-interleaved tile path; see [`Self::with_threads`]
-    /// for data-parallel batches and [`Self::with_tile`] for the tile
-    /// knob.
+    /// for data-parallel batches, [`Self::with_tile`] for the tile
+    /// knob and [`Self::with_blocked`] for the blocked-schedule
+    /// threshold.
     pub fn flagship() -> Self {
+        Self::with_engine(QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)))
+    }
+
+    /// An engine over a custom [`QrdEngine`] with the default knobs —
+    /// the single place fields get defaulted, so custom configurations
+    /// never spell them out (and never build a throwaway flagship).
+    pub fn with_engine(eng: QrdEngine) -> Self {
         NativeEngine {
-            eng: QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24)),
+            eng,
             threads: 1,
             tile: Self::DEFAULT_TILE,
+            blocked_min: Self::DEFAULT_BLOCKED_MIN,
         }
     }
 
@@ -77,42 +104,69 @@ impl NativeEngine {
         self
     }
 
-    /// Decompose one matrix at the bit level on the allocation-free
-    /// monomorphized fast path (this thread's reusable workspace).
-    /// Bit-identical to [`Self::qrd_bits_reference`], which the
-    /// `fastpath_bitexact` suite enforces.
-    pub fn qrd_bits(&self, a: &[u32; 16]) -> [u32; 32] {
+    /// Set the smallest `m` decomposed through the blocked wave
+    /// schedule (`usize::MAX` = never, `1` = always). Batches with
+    /// `m ≥ blocked_min` take the per-matrix blocked path even when a
+    /// tile size is configured — the tile knob governs the small-m
+    /// regime, this knob the large-m one. Results are bit-identical
+    /// regardless.
+    pub fn with_blocked(mut self, blocked_min: usize) -> Self {
+        self.blocked_min = blocked_min;
+        self
+    }
+
+    /// Decompose one m×m matrix at the bit level on the allocation-free
+    /// monomorphized fast path (this thread's reusable workspace); `a`
+    /// is `m*m` row-major words, the result `m*2m` words `[R | G]`.
+    /// Uses the blocked wave schedule for `m ≥ blocked_min`, the flat
+    /// schedule below — bit-identical either way, and bit-identical to
+    /// [`Self::qrd_bits_reference_m`] (enforced by the
+    /// `fastpath_bitexact` suite).
+    pub fn qrd_bits_m(&self, m: usize, a: &[u32]) -> Vec<u32> {
+        let blocked = m >= self.blocked_min;
         match self.eng.fast() {
-            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| qrd_bits_flat(r, a, ws)),
-            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| qrd_bits_flat(r, a, ws)),
+            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked)),
+            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked)),
         }
     }
 
-    /// Decompose one tile of matrices on the batch-interleaved
+    /// The 4×4 wire-format v1 entry point ([`Self::qrd_bits_m`] with
+    /// `m = 4`, array in/out). Kept because the golden-vector and
+    /// artifact toolchains speak fixed 4×4.
+    pub fn qrd_bits(&self, a: &[u32; 16]) -> [u32; 32] {
+        let out = self.qrd_bits_m(4, a);
+        let mut packed = [0u32; 32];
+        packed.copy_from_slice(&out);
+        packed
+    }
+
+    /// Decompose one uniform-m tile of matrices on the batch-interleaved
     /// lane-major path (this thread's reusable tile workspace): every
     /// schedule step runs once across the whole tile, so the CORDIC
     /// lane sweeps span `tile × (row tail)` contiguous pairs instead of
     /// ≤ 2m−1. Per matrix the output is bit-identical to
-    /// [`Self::qrd_bits`] / [`Self::qrd_bits_reference`] (matrices are
-    /// independent; locked by the `fastpath_bitexact` suite).
-    pub fn qrd_bits_tile(&self, mats: &[[u32; 16]]) -> Vec<[u32; 32]> {
+    /// [`Self::qrd_bits_m`] / [`Self::qrd_bits_reference_m`] (matrices
+    /// are independent; locked by the `fastpath_bitexact` suite).
+    pub fn qrd_bits_tile_m(&self, m: usize, mats: &[Vec<u32>]) -> Vec<Vec<u32>> {
         match self.eng.fast() {
-            FastQrd::Hub(r) => workspace::with_hub_tile_ws(|ws| qrd_bits_tile_flat(r, mats, ws)),
-            FastQrd::Ieee(r) => workspace::with_ieee_tile_ws(|ws| qrd_bits_tile_flat(r, mats, ws)),
+            FastQrd::Hub(r) => workspace::with_hub_tile_ws(|ws| qrd_bits_tile_flat(r, m, mats, ws)),
+            FastQrd::Ieee(r) => {
+                workspace::with_ieee_tile_ws(|ws| qrd_bits_tile_flat(r, m, mats, ws))
+            }
         }
     }
 
     /// The pre-refactor bit-level path (`Vec<Vec<Val>>` rows through the
-    /// reference triangularization). Kept as the golden anchor for the
-    /// fast path and the cross-language golden vectors.
-    pub fn qrd_bits_reference(&self, a: &[u32; 16]) -> [u32; 32] {
+    /// reference triangularization), generalized to any m. Kept as the
+    /// golden anchor for the fast, tile and blocked paths.
+    pub fn qrd_bits_reference_m(&self, m: usize, a: &[u32]) -> Vec<u32> {
+        assert_eq!(a.len(), m * m, "expected {} words for m={m}", m * m);
         let fmt = self.eng.rot.cfg.fmt;
         let family = self.eng.rot.cfg.family;
         let mk = |bits: u64| match family {
             Family::Hub => Val::Hub(HubFp::from_bits(fmt, bits)),
             Family::Conventional => Val::Ieee(Fp::from_bits(fmt, bits)),
         };
-        let m = 4usize;
         let mut rows: Vec<Vec<Val>> = (0..m)
             .map(|i| {
                 let mut row: Vec<Val> =
@@ -128,7 +182,7 @@ impl NativeEngine {
             })
             .collect();
         rows = self.eng.triangularize(rows, m);
-        let mut out = [0u32; 32];
+        let mut out = vec![0u32; m * 2 * m];
         for i in 0..m {
             for j in 0..2 * m {
                 out[i * 2 * m + j] = rows[i][j].to_bits(fmt) as u32;
@@ -136,16 +190,45 @@ impl NativeEngine {
         }
         out
     }
+
+    /// [`Self::qrd_bits_reference_m`] on the 4×4 v1 wire format.
+    pub fn qrd_bits_reference(&self, a: &[u32; 16]) -> [u32; 32] {
+        let out = self.qrd_bits_reference_m(4, a);
+        let mut packed = [0u32; 32];
+        packed.copy_from_slice(&out);
+        packed
+    }
 }
 
-/// Load one 4×4 `[A | I]` into the workspace, triangularize on the fast
-/// path, pack `[R | G]` bits. No heap allocation after warm-up.
+/// The homogeneity audit shared by every engine: a batch reaching an
+/// engine must be uniform in m (exactly `m*m` words per matrix). A
+/// violation is a batching bug upstream and is reported as a
+/// recoverable `Err` naming the offender — never truncated or padded.
+fn check_uniform(m: usize, mats: &[Vec<u32>]) -> Result<(), String> {
+    if m == 0 {
+        return Err("m must be at least 1".into());
+    }
+    match mats.iter().position(|a| a.len() != m * m) {
+        None => Ok(()),
+        Some(i) => Err(format!(
+            "mixed-size batch: matrix {i} carries {} words, expected {} for m={m}",
+            mats[i].len(),
+            m * m
+        )),
+    }
+}
+
+/// Load one m×m `[A | I]` into the workspace, triangularize on the fast
+/// path (flat schedule, or blocked waves when `blocked`), pack `[R | G]`
+/// bits. No heap allocation after warm-up except the returned vector.
 fn qrd_bits_flat<F: FamilyOps>(
     rot: &F,
-    a: &[u32; 16],
+    m: usize,
+    a: &[u32],
     ws: &mut QrdWorkspace<F::Scalar>,
-) -> [u32; 32] {
-    let m = 4usize;
+    blocked: bool,
+) -> Vec<u32> {
+    assert_eq!(a.len(), m * m, "expected {} words for m={m}", m * m);
     let width = 2 * m;
     let buf = ws.prepare(m, width);
     for i in 0..m {
@@ -154,37 +237,42 @@ fn qrd_bits_flat<F: FamilyOps>(
         }
         buf[i * width + m + i] = rot.one();
     }
-    triangularize_ws(rot, ws);
-    let mut out = [0u32; 32];
+    if blocked {
+        triangularize_blocked_ws(rot, ws);
+    } else {
+        triangularize_ws(rot, ws);
+    }
+    let mut out = vec![0u32; m * width];
     for (o, &v) in out.iter_mut().zip(ws.buf().iter()) {
         *o = rot.to_bits(v) as u32;
     }
     out
 }
 
-/// Load one tile of 4×4 `[A | I]` matrices into the lane-major
-/// workspace (the interleaving transpose of the `[u32; 16]` wire
-/// format), triangularize on the batch-interleaved path, transpose the
+/// Load one uniform-m tile of `[A | I]` matrices into the lane-major
+/// workspace (the interleaving transpose of the row-major wire format),
+/// triangularize on the batch-interleaved path, transpose the
 /// interleaved `[R | G]` back out. No heap allocation after warm-up
-/// except the returned output vector.
+/// except the returned output vectors.
 fn qrd_bits_tile_flat<F: FamilyOps>(
     rot: &F,
-    mats: &[[u32; 16]],
+    m: usize,
+    mats: &[Vec<u32>],
     ws: &mut BatchWorkspace<F::Scalar>,
-) -> Vec<[u32; 32]> {
+) -> Vec<Vec<u32>> {
     if mats.is_empty() {
         return Vec::new();
     }
     let b = mats.len();
-    let m = 4usize;
     let width = 2 * m;
     ws.prepare(b, m, width);
     let one = rot.one();
     for (lane, a) in mats.iter().enumerate() {
+        assert_eq!(a.len(), m * m, "expected {} words for m={m}", m * m);
         ws.load_augmented_with(lane, one, |i, j| rot.from_bits(a[i * m + j] as u64));
     }
     triangularize_tile(rot, ws);
-    let mut out = vec![[0u32; 32]; b];
+    let mut out = vec![vec![0u32; m * width]; b];
     for (pos, lanes) in ws.buf().chunks_exact(b).enumerate() {
         for (lane, &v) in lanes.iter().enumerate() {
             out[lane][pos] = rot.to_bits(v) as u32;
@@ -194,24 +282,34 @@ fn qrd_bits_tile_flat<F: FamilyOps>(
 }
 
 impl BatchEngine for NativeEngine {
-    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
         let n = mats.len();
         if n == 0 {
             return Ok(Vec::new());
         }
-        // One matrix is a few µs; a scoped-thread spawn is tens of µs
+        check_uniform(m, mats)?;
+        // A 4×4 matrix is a few µs; a scoped-thread spawn is tens of µs
         // and fresh threads re-warm their thread-local workspaces, so
-        // only fan out when every worker gets a meaty chunk. (For
-        // pool-level parallelism use `QrdService::start_pool`, whose
-        // persistent workers keep their workspaces warm across batches;
-        // this knob is the intra-batch fan-out within one worker.)
-        let nt = self.threads.min(n / 16).max(1);
-        if self.tile <= 1 {
-            // per-matrix scalar path
+        // only fan out when every worker gets a meaty chunk. The gate
+        // is measured in 4×4-equivalents of datapath work (pair ops
+        // grow ~m³), not request count — a batch of a dozen m=32
+        // matrices is already hundreds of 4×4s. (For pool-level
+        // parallelism use `QrdService::start_pool`, whose persistent
+        // workers keep their workspaces warm across batches; this knob
+        // is the intra-batch fan-out within one worker.)
+        let eq4 = n.saturating_mul(crate::qrd::pair_op_count(m)) / crate::qrd::pair_op_count(4);
+        let nt = self.threads.min(eq4 / 16).max(1);
+        if self.tile <= 1 || m >= self.blocked_min {
+            // per-matrix path: flat schedule below blocked_min, blocked
+            // waves at or above it. Large m routes here even when a
+            // tile size is set — per wave the blocked path already
+            // sweeps up to ⌊m/2⌋×(row tail) lanes, and a tile of
+            // several large matrices would blow the L1 working set the
+            // tile default was sized for.
             return Ok(if nt <= 1 {
-                mats.iter().map(|m| self.qrd_bits(m)).collect()
+                mats.iter().map(|a| self.qrd_bits_m(m, a)).collect()
             } else {
-                par::par_map_with(nt, n, |i| self.qrd_bits(&mats[i]))
+                par::par_map_with(nt, n, |i| self.qrd_bits_m(m, &mats[i]))
             });
         }
         // batch-interleaved path: chunk the batch into lane-major tiles
@@ -223,14 +321,14 @@ impl BatchEngine for NativeEngine {
         Ok(if nt <= 1 {
             let mut out = Vec::with_capacity(n);
             for chunk in mats.chunks(tile) {
-                out.extend(self.qrd_bits_tile(chunk));
+                out.extend(self.qrd_bits_tile_m(m, chunk));
             }
             out
         } else {
             par::par_map_with(nt, tiles, |t| {
                 let lo = t * tile;
                 let hi = (lo + tile).min(n);
-                self.qrd_bits_tile(&mats[lo..hi])
+                self.qrd_bits_tile_m(m, &mats[lo..hi])
             })
             .into_iter()
             .flatten()
@@ -238,15 +336,15 @@ impl BatchEngine for NativeEngine {
         })
     }
 
-    fn preferred_batch(&self) -> usize {
-        // no fixed shape: any batch the policy builds is executable, so
-        // the service's clamp must never bind here
+    fn preferred_batch(&self, _m: usize) -> usize {
+        // no fixed shape: any batch the policy builds is executable at
+        // any m, so the service's per-bin clamp must never bind here
         usize::MAX
     }
 
     fn name(&self) -> String {
         format!(
-            "native ({}, {} thread{}, {})",
+            "native ({}, {} thread{}, {}, blocked m≥{})",
             self.eng.rot.cfg.label(),
             self.threads,
             if self.threads == 1 { "" } else { "s" },
@@ -254,7 +352,8 @@ impl BatchEngine for NativeEngine {
                 "per-matrix".to_string()
             } else {
                 format!("tile {}", self.tile)
-            }
+            },
+            self.blocked_min,
         )
     }
 }
@@ -266,24 +365,44 @@ pub struct PjrtEngine {
 }
 
 impl PjrtEngine {
+    /// Matrix size the AOT artifacts are lowered for. The PJRT path is
+    /// shape-locked: any other `m` is a recoverable per-batch error.
+    pub const ARTIFACT_M: usize = 4;
+
     /// Batch size `make artifacts` lowers the default artifact for.
     /// The single source of the magic number: the service clamps every
-    /// worker's batches to `preferred_batch()`, so nothing else needs
-    /// to repeat it.
+    /// worker's batches per bin to `preferred_batch(m)` — which reports
+    /// this value for the artifact's own m and 1 for every other bin
+    /// (those batches fail fast with per-request errors) — so nothing
+    /// else needs to repeat it.
     pub const ARTIFACT_BATCH: usize = 256;
 
     /// Load the artifact (lowered for a fixed batch size).
     pub fn load(path: &str, batch: usize) -> anyhow::Result<Self> {
-        Ok(PjrtEngine { rt: crate::runtime::PjrtQrd::load(path, batch, 4)?, path: path.into() })
+        Ok(PjrtEngine {
+            rt: crate::runtime::PjrtQrd::load(path, batch, Self::ARTIFACT_M)?,
+            path: path.into(),
+        })
     }
 }
 
 impl BatchEngine for PjrtEngine {
-    fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        // the artifact is lowered for one shape: refuse every other m
+        // (recoverable — the bin fails, the worker keeps serving m=4)
+        if m != Self::ARTIFACT_M {
+            return Err(format!(
+                "pjrt artifact {} is lowered for m={}, cannot serve m={m}",
+                self.path,
+                Self::ARTIFACT_M
+            ));
+        }
+        check_uniform(m, mats)?;
+        let words = m * m;
         // bits → f32 (the artifact bitcasts internally)
-        let mut flat = Vec::with_capacity(mats.len() * 16);
-        for m in mats {
-            flat.extend(m.iter().map(|&w| f32::from_bits(w)));
+        let mut flat = Vec::with_capacity(mats.len() * words);
+        for a in mats {
+            flat.extend(a.iter().map(|&w| f32::from_bits(w)));
         }
         // a failed execute is recoverable — surface it as error
         // responses for this batch instead of panicking the worker
@@ -293,19 +412,19 @@ impl BatchEngine for PjrtEngine {
             .execute_padded(&flat, mats.len())
             .map_err(|e| format!("PJRT execution failed: {e}"))?;
         Ok(out
-            .chunks_exact(32)
-            .map(|c| {
-                let mut r = [0u32; 32];
-                for (dst, &v) in r.iter_mut().zip(c) {
-                    *dst = v.to_bits();
-                }
-                r
-            })
+            .chunks_exact(2 * words)
+            .map(|c| c.iter().map(|v| v.to_bits()).collect())
             .collect())
     }
 
-    fn preferred_batch(&self) -> usize {
-        self.rt.batch
+    fn preferred_batch(&self, m: usize) -> usize {
+        if m == Self::ARTIFACT_M {
+            self.rt.batch
+        } else {
+            // unsupported bins degrade to single-request batches so the
+            // error responses name every affected request cheaply
+            1
+        }
     }
 
     fn name(&self) -> String {
@@ -316,6 +435,10 @@ impl BatchEngine for PjrtEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn mats_to_vecs(mats: &[[u32; 16]]) -> Vec<Vec<u32>> {
+        mats.iter().map(|a| a.to_vec()).collect()
+    }
 
     #[test]
     fn native_engine_is_deterministic() {
@@ -371,15 +494,51 @@ mod tests {
     }
 
     #[test]
+    fn variable_m_bit_path_matches_reference_for_every_schedule() {
+        // flat (blocked_min = MAX), blocked (blocked_min = 1) and the
+        // default threshold must all reproduce the reference bits
+        let mut rng = crate::util::rng::Rng::new(654);
+        for m in [1usize, 2, 3, 5, 9] {
+            let a: Vec<u32> = (0..m * m)
+                .map(|_| {
+                    let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+                    (rng.range(-1.0, 1.0) as f32 * s).to_bits()
+                })
+                .collect();
+            let want = NativeEngine::flagship().qrd_bits_reference_m(m, &a);
+            assert_eq!(want.len(), m * 2 * m);
+            for blocked_min in [1usize, 4, usize::MAX] {
+                let eng = NativeEngine::flagship().with_blocked(blocked_min);
+                assert_eq!(eng.qrd_bits_m(m, &a), want, "m={m} blocked_min={blocked_min}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_size_batches_error_instead_of_truncating() {
+        let eng = NativeEngine::flagship();
+        // one 3×3 matrix smuggled into an m=4 batch
+        let mats = vec![vec![0u32; 16], vec![0u32; 9], vec![0u32; 16]];
+        let err = eng.run(4, &mats).expect_err("mixed batch must be rejected");
+        assert!(err.contains("matrix 1") && err.contains("9 words"), "{err}");
+        // m = 0 is malformed, not a panic
+        assert!(eng.run(0, &[vec![]]).is_err());
+        // the PJRT engine rejects every m but the artifact's
+        // (constructing one needs the artifact, so assert the constant
+        // the service relies on instead)
+        assert_eq!(PjrtEngine::ARTIFACT_M, 4);
+    }
+
+    #[test]
     fn parallel_batch_matches_serial_batch_in_order() {
         let serial = NativeEngine::flagship();
         let parallel = NativeEngine::flagship().with_threads(0);
         assert!(parallel.threads >= 1);
         let mut rng = crate::util::rng::Rng::new(77);
-        let mats: Vec<[u32; 16]> = (0..200)
-            .map(|_| std::array::from_fn(|_| (rng.range(-2.0, 2.0) as f32).to_bits()))
+        let mats: Vec<Vec<u32>> = (0..200)
+            .map(|_| (0..16).map(|_| (rng.range(-2.0, 2.0) as f32).to_bits()).collect())
             .collect();
-        assert_eq!(serial.run(&mats).unwrap(), parallel.run(&mats).unwrap());
+        assert_eq!(serial.run(4, &mats).unwrap(), parallel.run(4, &mats).unwrap());
     }
 
     #[test]
@@ -393,9 +552,10 @@ mod tests {
             })
             .collect();
         let want: Vec<[u32; 32]> = mats.iter().map(|m| eng.qrd_bits(m)).collect();
+        let vecs = mats_to_vecs(&mats);
         // whole-batch tile, partial tiles, single-matrix tiles
         for lo in [0usize, 3, 36] {
-            let got = eng.qrd_bits_tile(&mats[lo..]);
+            let got = eng.qrd_bits_tile_m(4, &vecs[lo..]);
             assert_eq!(got.len(), 37 - lo);
             for (k, out) in got.iter().enumerate() {
                 assert_eq!(out, &want[lo + k], "tile started at {lo}, matrix {k}");
@@ -412,18 +572,18 @@ mod tests {
         let reference = NativeEngine::flagship().with_tile(1);
         let mut rng = crate::util::rng::Rng::new(505);
         for &n in &[0usize, 1, 3, 37, 100] {
-            let mats: Vec<[u32; 16]> = (0..n)
+            let mats: Vec<Vec<u32>> = (0..n)
                 .map(|_| {
                     let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
-                    std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+                    (0..16).map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits()).collect()
                 })
                 .collect();
-            let want: Vec<[u32; 32]> = mats.iter().map(|m| reference.qrd_bits(m)).collect();
+            let want: Vec<Vec<u32>> = mats.iter().map(|a| reference.qrd_bits_m(4, a)).collect();
             for &threads in &[1usize, 2, 5] {
                 for &tile in &[0usize, 1, 3, 4, 16, 64] {
                     let eng = NativeEngine::flagship().with_threads(threads).with_tile(tile);
                     assert_eq!(
-                        eng.run(&mats).unwrap(),
+                        eng.run(4, &mats).unwrap(),
                         want,
                         "n={n} threads={threads} tile={tile}"
                     );
@@ -436,5 +596,6 @@ mod tests {
     fn engine_name_reports_the_execution_path() {
         assert!(NativeEngine::flagship().name().contains("tile 16"));
         assert!(NativeEngine::flagship().with_tile(0).name().contains("per-matrix"));
+        assert!(NativeEngine::flagship().name().contains("blocked m≥16"));
     }
 }

@@ -105,6 +105,12 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-m bin index cap: matrix sizes up to this get their own counter
+/// slot; anything larger shares the last slot. The service keeps this
+/// from ever binding: `QrdService::with_max_m` clamps its accept gate
+/// to [`Metrics::MAX_TRACKED_M`], so every accepted m has its own bin.
+const M_BINS: usize = 65;
+
 /// Shared coordinator metrics (lock-free counters + histogram).
 #[derive(Debug)]
 pub struct Metrics {
@@ -117,6 +123,12 @@ pub struct Metrics {
     engine_errors: AtomicU64,
     stolen_requests: AtomicU64,
     per_worker_batches: Vec<AtomicU64>,
+    /// Requests accepted per matrix size (wire format v2 bins).
+    m_requests: Vec<AtomicU64>,
+    /// Requests served with an ok response per matrix size.
+    m_served: Vec<AtomicU64>,
+    /// Batches executed per matrix size.
+    m_batches: Vec<AtomicU64>,
     latency: LatencyHistogram,
 }
 
@@ -127,6 +139,11 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Largest matrix size with its own per-m bin (larger sizes would
+    /// alias into one shared slot, so the service's `with_max_m` gate
+    /// clamps here).
+    pub const MAX_TRACKED_M: usize = M_BINS - 1;
+
     /// Metrics for a pool of `workers` persistent engine threads.
     pub fn new(workers: usize) -> Self {
         Metrics {
@@ -139,8 +156,16 @@ impl Metrics {
             engine_errors: AtomicU64::new(0),
             stolen_requests: AtomicU64::new(0),
             per_worker_batches: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            m_requests: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            m_served: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            m_batches: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
         }
+    }
+
+    #[inline]
+    fn m_bin(m: usize) -> usize {
+        m.min(M_BINS - 1)
     }
 
     /// Record an accepted request.
@@ -163,6 +188,47 @@ impl Metrics {
     /// Record one request latency (enqueue → response send), µs.
     pub fn on_latency_us(&self, us: f64) {
         self.latency.record(us);
+    }
+
+    /// Record an accepted request for matrix size `m` (its bin).
+    pub fn on_m_request(&self, m: usize) {
+        self.m_requests[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed uniform-m batch serving `n` ok responses.
+    pub fn on_m_batch(&self, m: usize, n: usize) {
+        let bin = Self::m_bin(m);
+        self.m_batches[bin].fetch_add(1, Ordering::Relaxed);
+        self.m_served[bin].fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Requests accepted for matrix size `m`.
+    pub fn m_requests(&self, m: usize) -> u64 {
+        self.m_requests[Self::m_bin(m)].load(Ordering::Relaxed)
+    }
+
+    /// Requests served with an ok response for matrix size `m`.
+    pub fn m_served(&self, m: usize) -> u64 {
+        self.m_served[Self::m_bin(m)].load(Ordering::Relaxed)
+    }
+
+    /// Uniform-m batches executed for matrix size `m`.
+    pub fn m_batches(&self, m: usize) -> u64 {
+        self.m_batches[Self::m_bin(m)].load(Ordering::Relaxed)
+    }
+
+    /// Non-empty per-m bins as `(m, requests, served, batches)` rows —
+    /// the reconciliation view: a clean run has `requests == served`
+    /// in every row, and the served totals sum to `requests()`.
+    pub fn per_m_bins(&self) -> Vec<(usize, u64, u64, u64)> {
+        (0..M_BINS)
+            .filter_map(|m| {
+                let req = self.m_requests[m].load(Ordering::Relaxed);
+                let srv = self.m_served[m].load(Ordering::Relaxed);
+                let bat = self.m_batches[m].load(Ordering::Relaxed);
+                (req != 0 || srv != 0 || bat != 0).then_some((m, req, srv, bat))
+            })
+            .collect()
     }
 
     /// Record a worker retired by an engine panic.
@@ -295,6 +361,26 @@ mod tests {
         assert_eq!(m.worker_respawns(), 1);
         assert_eq!(m.engine_errors(), 1);
         assert_eq!(m.stolen_requests(), 5);
+    }
+
+    #[test]
+    fn per_m_bins_reconcile() {
+        let m = Metrics::new(2);
+        m.on_m_request(2);
+        m.on_m_request(2);
+        m.on_m_request(8);
+        m.on_m_batch(2, 2);
+        m.on_m_batch(8, 1);
+        assert_eq!(m.m_requests(2), 2);
+        assert_eq!(m.m_served(2), 2);
+        assert_eq!(m.m_batches(2), 1);
+        assert_eq!(m.m_requests(8), 1);
+        assert_eq!(m.per_m_bins(), vec![(2, 2, 2, 1), (8, 1, 1, 1)]);
+        assert_eq!(m.m_requests(5), 0);
+        // oversized bins clamp instead of panicking
+        m.on_m_request(10_000);
+        assert_eq!(m.m_requests(10_000), 1);
+        assert_eq!(m.m_requests(M_BINS - 1), 1);
     }
 
     #[test]

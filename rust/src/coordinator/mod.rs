@@ -1,17 +1,20 @@
 //! Layer-3 streaming QRD coordinator.
 //!
-//! The deployable system around the rotation unit: clients submit 4×4
-//! matrices, a dynamic batcher groups them (size + deadline policy,
-//! vLLM-router style), a pool of persistent workers executes batches on
-//! either the bit-accurate native engine or the AOT-compiled PJRT
-//! artifact, and responses stream back with per-request latency.
-//! Bounded queues give natural backpressure. Python is never on this
-//! path.
+//! The deployable system around the rotation unit: clients submit m×m
+//! matrices (wire format v2 — the request carries its dimension, mixed
+//! sizes share one service), a dynamic batcher groups them (size +
+//! deadline policy, vLLM-router style) into **uniform-m bins**, a pool
+//! of persistent workers executes batches on either the bit-accurate
+//! native engine (any m; blocked wave schedules for large m) or the
+//! AOT-compiled PJRT artifact (shape-locked to 4×4), and responses
+//! stream back with per-request latency. Bounded queues give natural
+//! backpressure. Python is never on this path.
 //!
 //! Two pool topologies (see `service`): the baseline **shared-lock**
-//! pool (one `Batcher` behind a mutex) and the **sharded** pool
-//! (per-worker `ShardQueue`s, round-robin routing, work stealing,
-//! supervised respawn of panicked workers) — the sharded topology
+//! pool (one per-m-binning `KeyedBatcher` behind a mutex) and the
+//! **sharded** pool (per-worker `ShardQueue`s with keyed batch
+//! formation, round-robin routing, work stealing, supervised respawn
+//! of panicked workers) — the sharded topology
 //! mirrors the paper's fully pipelined datapath: no central arbiter on
 //! the request path, like the per-lane queues of the systolic QRD
 //! arrays (Rong '18; Merchant et al. '18).
@@ -29,7 +32,7 @@ mod metrics;
 mod service;
 mod shard;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{BatchPolicy, Batcher, KeyedBatcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy};
@@ -62,6 +65,14 @@ pub struct ServeConfig {
     /// Batch-interleave tile size inside each native engine
     /// (`NativeEngine::with_tile`; 0/1 = per-matrix scalar path).
     pub tile: usize,
+    /// Largest matrix dimension the service accepts (wire format v2).
+    /// The synthetic load mixes m uniformly in `2..=max_m` (so the
+    /// default of 4 exercises m ∈ {2, 3, 4}); every per-m bin is
+    /// spot-checked bit-exact against `qrd_bits_reference_m`.
+    pub max_m: usize,
+    /// Smallest m decomposed through the blocked wave schedule inside
+    /// each native engine (`NativeEngine::with_blocked`).
+    pub blocked_m: usize,
 }
 
 impl Default for ServeConfig {
@@ -76,6 +87,8 @@ impl Default for ServeConfig {
             sharded: true,
             max_restarts: 2,
             tile: NativeEngine::DEFAULT_TILE,
+            max_m: 4,
+            blocked_m: NativeEngine::DEFAULT_BLOCKED_MIN,
         }
     }
 }
@@ -127,13 +140,22 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
         "native" => {
             let threads = cfg.threads;
             let tile = cfg.tile;
-            let name = NativeEngine::flagship().with_threads(threads).with_tile(tile).name();
+            let blocked_m = cfg.blocked_m;
+            let name = NativeEngine::flagship()
+                .with_threads(threads)
+                .with_tile(tile)
+                .with_blocked(blocked_m)
+                .name();
             // the factories are Fn, so one Vec serves either topology
             let factories: Vec<_> = (0..workers)
                 .map(|_| {
                     move || {
-                        Box::new(NativeEngine::flagship().with_threads(threads).with_tile(tile))
-                            as Box<dyn BatchEngine>
+                        Box::new(
+                            NativeEngine::flagship()
+                                .with_threads(threads)
+                                .with_tile(tile)
+                                .with_blocked(blocked_m),
+                        ) as Box<dyn BatchEngine>
                     }
                 })
                 .collect();
@@ -170,27 +192,73 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
     };
+    // the PJRT artifact serves exactly m=4, so its gate must admit 4;
+    // the native gate honours the operator's --max-m verbatim (the
+    // builder still clamps to Metrics::MAX_TRACKED_M)
+    let svc = if cfg.engine == "pjrt" {
+        svc.with_max_m(cfg.max_m.max(4))
+    } else {
+        svc.with_max_m(cfg.max_m)
+    };
 
-    // synthetic load: deterministic random matrices, a few binades
+    // synthetic load: deterministic random matrices, a few binades,
+    // mixed m ∈ [2, max_m] (the PJRT artifact is shape-locked to 4×4,
+    // so that engine keeps a uniform m=4 load). Every ~101st request
+    // is retained and spot-checked bit-exact against the reference
+    // path, so a serve run doubles as an end-to-end wire-format check.
+    // m_hi follows the service's *effective* gate (with_max_m clamps to
+    // Metrics::MAX_TRACKED_M), so an over-asked --max-m degrades to the
+    // clamped cap instead of a load loop that submits only-rejectable
+    // sizes
+    let (m_lo, m_hi) = if cfg.engine == "pjrt" {
+        (4usize, 4usize)
+    } else {
+        (2usize.min(svc.max_m()), svc.max_m())
+    };
+    let check_native = cfg.engine == "native";
     let mut rng = Rng::new(42);
     let t0 = Instant::now();
     let mut pending = Vec::with_capacity(cfg.requests);
-    for _ in 0..cfg.requests {
-        let mut a = [0u32; 16];
+    let mut spot = Vec::new();
+    for k in 0..cfg.requests {
+        let m = m_lo + (rng.below((m_hi - m_lo + 1) as u64) as usize);
         let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
-        for w in a.iter_mut() {
-            *w = (rng.range(-1.0, 1.0) as f32 * scale).to_bits();
+        let a: Vec<u32> =
+            (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits()).collect();
+        if check_native && k % 101 == 0 {
+            spot.push((k, m, a.clone()));
         }
-        pending.push(svc.submit(a));
+        pending.push(svc.submit_m(m, a));
     }
     let mut errors = 0usize;
-    for rx in pending {
-        match rx.recv() {
-            Ok(resp) if resp.error.is_none() => {}
+    let mut spot_it = spot.into_iter().peekable();
+    let mut spot_outs = Vec::new();
+    for (k, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv();
+        let sampled = spot_it.next_if(|(sk, _, _)| *sk == k);
+        match resp {
+            Ok(resp) if resp.error.is_none() => {
+                if let Some((_, m, a)) = sampled {
+                    spot_outs.push((m, a, resp.out));
+                }
+            }
             _ => errors += 1,
         }
     }
     let wall = t0.elapsed().as_secs_f64();
+    // bit-exactness spot check against the reference path (outside the
+    // timed window — the reference triangularization is deliberately
+    // slow)
+    let spot_checked = spot_outs.len();
+    let mut spot_failures = 0usize;
+    if spot_checked > 0 {
+        let reference = NativeEngine::flagship();
+        for (m, a, out) in spot_outs {
+            if out != reference.qrd_bits_reference_m(m, &a) {
+                spot_failures += 1;
+            }
+        }
+    }
     let m = svc.metrics();
     println!("engine            : {name}");
     println!(
@@ -205,7 +273,10 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
             format!("shared-lock batcher, {} worker(s)", m.workers())
         }
     );
-    println!("requests          : {} ({errors} errored)", cfg.requests);
+    println!(
+        "requests          : {} ({errors} errored), m ∈ [{m_lo}, {m_hi}]",
+        cfg.requests
+    );
     println!("wall time         : {wall:.3} s");
     println!("throughput        : {:.0} QRD/s", cfg.requests as f64 / wall);
     println!(
@@ -214,6 +285,18 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
         m.worker_batch_counts()
     );
     println!("mean batch size   : {:.1}", m.mean_batch());
+    // per-m bin reconciliation: accepted vs served per matrix size
+    for (bin_m, req, srv, bat) in m.per_m_bins() {
+        println!(
+            "  m={bin_m:<3} bin       : {req} accepted, {srv} served, {bat} batches{}",
+            if req == srv { "" } else { "  ← MISMATCH" }
+        );
+    }
+    if spot_checked > 0 {
+        println!(
+            "bit-exactness     : {spot_checked} spot checks vs reference path, {spot_failures} failures"
+        );
+    }
     if m.stolen_requests() > 0 {
         println!("work stealing     : {} requests stolen", m.stolen_requests());
     }
@@ -242,6 +325,9 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
     svc.shutdown();
     if errors > 0 {
         anyhow::bail!("{errors} of {} requests failed", cfg.requests);
+    }
+    if spot_failures > 0 {
+        anyhow::bail!("{spot_failures} of {spot_checked} spot checks diverged from the reference");
     }
     Ok(())
 }

@@ -1,7 +1,8 @@
 //! The QRD service: two pool topologies behind one `QrdService` handle.
 //!
 //! **Shared-lock** (`start`/`start_pool`): one bounded ingress queue →
-//! one `Batcher` behind a mutex → N persistent workers. Batch
+//! one `KeyedBatcher` behind a mutex (binning requests by their matrix
+//! size, so every batch is uniform-m) → N persistent workers. Batch
 //! *formation* is serialized (microseconds of channel draining), batch
 //! *execution* overlaps. Kept as the baseline topology the benches
 //! compare against.
@@ -25,7 +26,7 @@
 //! explicitly not promised — each request carries its own response
 //! channel. Per-shard batch formation is FIFO per producer.
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::{BatchPolicy, KeyedBatcher};
 use super::engine::BatchEngine;
 use super::metrics::Metrics;
 use super::shard::{Pop, ShardQueue};
@@ -39,40 +40,51 @@ use std::time::{Duration, Instant};
 const DEAD_POOL_MSG: &str = "service workers have exited";
 const SHUTDOWN_MSG: &str = "service shut down before the request was served";
 
-/// One client request: a 4×4 matrix as HUB FP bit patterns.
+/// One client request (wire format v2): an m×m matrix as row-major FP
+/// bit patterns, with the dimension carried alongside. Mixed-m traffic
+/// shares one service; the batchers bin by `m` so engines only ever see
+/// uniform-m batches.
 pub struct Request {
-    /// Row-major input bits.
-    pub a: [u32; 16],
+    /// Matrix dimension (the wire carries it; nothing is hard-coded).
+    pub m: usize,
+    /// Row-major input bits, exactly `m*m` words.
+    pub a: Vec<u32>,
     /// Response channel.
     pub tx: Sender<Response>,
     /// Enqueue timestamp.
     pub enq: Instant,
 }
 
-/// One response: `[R | G]` bits plus measured latency, or a
-/// service-side failure.
+/// One response (wire format v2): `[R | G]` bits plus measured latency,
+/// or a service-side failure.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// Row-major output bits (4×8); zeroed when `error` is set.
-    pub out: [u32; 32],
+    /// Matrix dimension of the request this answers (0 only when the
+    /// request never reached the service — e.g. a dropped channel).
+    pub m: usize,
+    /// Row-major output bits, `m` rows × `2m` columns; empty when
+    /// `error` is set.
+    pub out: Vec<u32>,
     /// Request latency in microseconds (enqueue → response send).
     pub latency_us: f64,
     /// `Some(reason)` when the service could not execute the request
-    /// (engine failure, worker died, pool shut down).
+    /// (engine failure, malformed request, worker died, pool shut
+    /// down).
     pub error: Option<String>,
 }
 
 impl Response {
-    fn ok(out: [u32; 32], latency_us: f64) -> Response {
-        Response { out, latency_us, error: None }
+    fn ok(m: usize, out: Vec<u32>, latency_us: f64) -> Response {
+        Response { m, out, latency_us, error: None }
     }
 
-    fn failed(reason: &str, latency_us: f64) -> Response {
-        Response { out: [0u32; 32], latency_us, error: Some(reason.to_string()) }
+    fn failed(m: usize, reason: &str, latency_us: f64) -> Response {
+        Response { m, out: Vec::new(), latency_us, error: Some(reason.to_string()) }
     }
 
-    /// The decomposition bits, or the service-side failure reason.
-    pub fn result(&self) -> Result<&[u32; 32], &str> {
+    /// The decomposition bits (`m × 2m` words), or the service-side
+    /// failure reason.
+    pub fn result(&self) -> Result<&[u32], &str> {
         match &self.error {
             None => Ok(&self.out),
             Some(e) => Err(e),
@@ -111,7 +123,7 @@ impl PendingResponse {
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                     // the service promises a Response before dropping
                     // the sender; keep the promise even against a bug
-                    self.got = Some(Response::failed(DEAD_POOL_MSG, 0.0));
+                    self.got = Some(Response::failed(0, DEAD_POOL_MSG, 0.0));
                 }
             }
         }
@@ -140,7 +152,7 @@ impl PendingResponse {
             None => self
                 .rx
                 .recv()
-                .unwrap_or_else(|_| Response::failed(DEAD_POOL_MSG, 0.0)),
+                .unwrap_or_else(|_| Response::failed(0, DEAD_POOL_MSG, 0.0)),
         }
     }
 }
@@ -154,7 +166,7 @@ impl From<Receiver<Response>> for PendingResponse {
 /// Answer a request with an error `Response` (never drop the channel).
 fn answer_failed(req: Request, reason: &str) {
     let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-    let _ = req.tx.send(Response::failed(reason, latency_us));
+    let _ = req.tx.send(Response::failed(req.m, reason, latency_us));
 }
 
 /// Restart budget for supervised (sharded-topology) workers.
@@ -182,8 +194,9 @@ struct SharedPool {
     /// The service handle keeps the batcher (and its receiver) alive so
     /// `ingress.send` cannot start failing while queued requests are
     /// still being drained — and so `submit`/`shutdown` can sweep
-    /// stranded requests into error responses.
-    batcher: Arc<Mutex<Batcher<Request>>>,
+    /// stranded requests (channel *and* per-m bins) into error
+    /// responses.
+    batcher: Arc<Mutex<KeyedBatcher<Request>>>,
     state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -213,9 +226,29 @@ enum Pool {
 pub struct QrdService {
     metrics: Arc<Metrics>,
     pool: Pool,
+    /// Largest matrix dimension `submit_m` accepts; oversized requests
+    /// get an immediate error `Response` (they never reach a queue).
+    max_m: usize,
 }
 
 impl QrdService {
+    /// Default [`Self::max_m`] cap: the largest matrix dimension a
+    /// service accepts unless raised with [`Self::with_max_m`].
+    pub const DEFAULT_MAX_M: usize = 32;
+
+    /// Raise (or lower) the accepted matrix-size cap. Purely a submit
+    /// gate — engines and batchers are dimension-agnostic. Clamped to
+    /// [`Metrics::MAX_TRACKED_M`] so every accepted size keeps its own
+    /// reconciliation bin (no aliasing in `per_m_bins`).
+    pub fn with_max_m(mut self, max_m: usize) -> Self {
+        self.max_m = max_m.clamp(1, Metrics::MAX_TRACKED_M);
+        self
+    }
+
+    /// Largest matrix dimension [`Self::submit_m`] accepts.
+    pub fn max_m(&self) -> usize {
+        self.max_m
+    }
     /// Start a single-worker shared-lock service — [`Self::start_pool`]
     /// with one engine. Kept as the simple entry point for tests and
     /// examples.
@@ -243,7 +276,7 @@ impl QrdService {
         assert!(!factories.is_empty(), "pool needs at least one engine factory");
         let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
         let metrics = Arc::new(Metrics::new(factories.len()));
-        let batcher = Arc::new(Mutex::new(Batcher::new(rx, policy)));
+        let batcher = Arc::new(Mutex::new(KeyedBatcher::new(rx, |r: &Request| r.m, policy)));
         let state = Arc::new(PoolState {
             alive: AtomicUsize::new(factories.len()),
             dead: AtomicBool::new(false),
@@ -264,6 +297,7 @@ impl QrdService {
         QrdService {
             metrics,
             pool: Pool::Shared(SharedPool { ingress: tx, batcher, state, workers }),
+            max_m: Self::DEFAULT_MAX_M,
         }
     }
 
@@ -304,18 +338,43 @@ impl QrdService {
         for slot in 0..n {
             spawn_worker(&sup, slot, 0).expect("spawn qrd shard worker");
         }
-        QrdService { metrics, pool: Pool::Sharded(sup) }
+        QrdService { metrics, pool: Pool::Sharded(sup), max_m: Self::DEFAULT_MAX_M }
     }
 
-    /// Submit one matrix; returns the response receiver. Blocks if the
-    /// target queue is full (backpressure). Every submitted request is
+    /// Submit one 4×4 matrix on the v1 wire shape ([`Self::submit_m`]
+    /// with `m = 4`). Kept as the ergonomic entry point for the
+    /// fixed-shape toolchain and tests.
+    pub fn submit(&self, a: [u32; 16]) -> Receiver<Response> {
+        self.submit_m(4, a.to_vec())
+    }
+
+    /// Submit one m×m matrix (wire format v2); returns the response
+    /// receiver. Blocks if the target queue is full (backpressure). A
+    /// malformed request (`m` of 0, over [`Self::max_m`], or a payload
+    /// that is not `m*m` words) is answered immediately with an error
+    /// `Response` and never reaches a queue. Every submitted request is
     /// answered with a `Response` — an error `Response` if the pool has
     /// died or dies while the request is queued — never a dropped
     /// channel.
-    pub fn submit(&self, a: [u32; 16]) -> Receiver<Response> {
+    pub fn submit_m(&self, m: usize, a: Vec<u32>) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
+        let req = Request { m, a, tx, enq: Instant::now() };
+        // validate before counting: `requests()` and the per-m bins
+        // only see *accepted* requests, so accepted == served holds
+        // bin by bin on a clean run (rejects get their error Response
+        // but touch no counter)
+        if m == 0 || m > self.max_m {
+            answer_failed(req, &format!("m={m} outside the accepted range 1..={}", self.max_m));
+            return rx;
+        }
+        if req.a.len() != m * m {
+            let reason =
+                format!("payload carries {} words, m={m} needs {}", req.a.len(), m * m);
+            answer_failed(req, &reason);
+            return rx;
+        }
         self.metrics.on_request();
-        let req = Request { a, tx, enq: Instant::now() };
+        self.metrics.on_m_request(m);
         match &self.pool {
             Pool::Shared(p) => {
                 if p.state.dead.load(Ordering::SeqCst) {
@@ -351,6 +410,11 @@ impl QrdService {
         PendingResponse::new(self.submit(a))
     }
 
+    /// [`Self::submit_m`] returning a pollable [`PendingResponse`].
+    pub fn submit_async_m(&self, m: usize, a: Vec<u32>) -> PendingResponse {
+        PendingResponse::new(self.submit_m(m, a))
+    }
+
     /// Shared metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
@@ -377,7 +441,7 @@ impl QrdService {
     /// already queued, join them, then answer anything still stranded
     /// (e.g. behind a dead slot) with error responses.
     pub fn shutdown(self) {
-        let QrdService { metrics: _, pool } = self;
+        let QrdService { metrics: _, pool, max_m: _ } = self;
         match pool {
             Pool::Shared(p) => {
                 let SharedPool { ingress, batcher, state: _, workers } = p;
@@ -411,29 +475,46 @@ impl QrdService {
     }
 }
 
-/// Sweep the shared batcher's queue into error responses.
-fn drain_batcher(batcher: &Mutex<Batcher<Request>>, reason: &str) {
+/// Sweep the shared batcher's queue — channel and per-m bins — into
+/// error responses.
+fn drain_batcher(batcher: &Mutex<KeyedBatcher<Request>>, reason: &str) {
     let stranded = batcher.lock().unwrap_or_else(|p| p.into_inner()).drain();
     for req in stranded {
         answer_failed(req, reason);
     }
 }
 
-/// Execute one batch and answer its requests. Returns `false` when the
-/// engine panicked — the caller must retire (or respawn) the worker; a
-/// recoverable `Err` from the engine fails the batch but keeps the
-/// worker.
+/// Execute one **uniform-m** batch and answer its requests. The batchers
+/// guarantee uniformity; the engine's own homogeneity audit backstops it
+/// (a mixed batch comes back as `Err`, answered with error responses —
+/// never truncated). Returns `false` when the engine panicked — the
+/// caller must retire (or respawn) the worker; a recoverable `Err` from
+/// the engine fails the batch but keeps the worker.
 fn execute_batch(
     id: usize,
     engine: &dyn BatchEngine,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) -> bool {
-    let mats: Vec<[u32; 16]> = batch.iter().map(|r| r.a).collect();
+    let m = batch.first().map_or(0, |r| r.m);
+    // split payloads from repliers so the engine borrows the matrices
+    // without cloning the wire words
+    let mut mats = Vec::with_capacity(batch.len());
+    let mut repliers = Vec::with_capacity(batch.len());
+    for req in batch {
+        mats.push(req.a);
+        repliers.push((req.m, req.tx, req.enq));
+    }
+    let answer_all = |repliers: Vec<(usize, Sender<Response>, Instant)>, reason: &str| {
+        for (m, tx, enq) in repliers {
+            let latency_us = enq.elapsed().as_secs_f64() * 1e6;
+            let _ = tx.send(Response::failed(m, reason, latency_us));
+        }
+    };
     let t0 = Instant::now();
-    match catch_unwind(AssertUnwindSafe(|| engine.run(&mats))) {
+    match catch_unwind(AssertUnwindSafe(|| engine.run(m, &mats))) {
         Ok(Ok(outs)) => {
-            if outs.len() != batch.len() {
+            if outs.len() != repliers.len() {
                 // a backend shape bug must not strand the unmatched
                 // tail of the batch (zip would silently drop those
                 // requests' channels — the RecvError this service
@@ -442,40 +523,35 @@ fn execute_batch(
                 let reason = format!(
                     "engine error: returned {} outputs for {} requests",
                     outs.len(),
-                    batch.len()
+                    repliers.len()
                 );
-                for req in batch {
-                    answer_failed(req, &reason);
-                }
+                answer_all(repliers, &reason);
                 return true;
             }
             let dt = t0.elapsed();
-            metrics.on_batch(id, batch.len(), dt.as_nanos() as u64);
-            for (req, out) in batch.into_iter().zip(outs) {
-                let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+            metrics.on_batch(id, repliers.len(), dt.as_nanos() as u64);
+            metrics.on_m_batch(m, repliers.len());
+            for ((m, tx, enq), out) in repliers.into_iter().zip(outs) {
+                let latency_us = enq.elapsed().as_secs_f64() * 1e6;
                 metrics.on_latency_us(latency_us);
                 // receiver may have been dropped — the client's choice
-                let _ = req.tx.send(Response::ok(out, latency_us));
+                let _ = tx.send(Response::ok(m, out, latency_us));
             }
             true
         }
         Ok(Err(e)) => {
-            // recoverable backend failure: this batch fails, the worker
-            // and its engine keep serving
+            // recoverable backend failure (execute error, unsupported
+            // or mixed m): this batch fails, the worker and its engine
+            // keep serving
             metrics.on_engine_error();
-            let reason = format!("engine error: {e}");
-            for req in batch {
-                answer_failed(req, &reason);
-            }
+            answer_all(repliers, &format!("engine error: {e}"));
             true
         }
         Err(_) => {
             // the engine's state is unknown after a panic: fail this
             // batch's clients and let the caller retire/respawn
             metrics.on_worker_panic();
-            for req in batch {
-                answer_failed(req, "engine worker panicked");
-            }
+            answer_all(repliers, "engine worker panicked");
             false
         }
     }
@@ -484,22 +560,23 @@ fn execute_batch(
 fn shared_worker_loop(
     id: usize,
     engine: Box<dyn BatchEngine>,
-    batcher: Arc<Mutex<Batcher<Request>>>,
+    batcher: Arc<Mutex<KeyedBatcher<Request>>>,
     state: Arc<PoolState>,
     metrics: Arc<Metrics>,
 ) {
-    // never hand this engine more than it prefers (fixed-shape PJRT
-    // artifacts reject oversized batches)
-    let cap = engine.preferred_batch().max(1);
     loop {
         let batch = {
             // a worker that panicked inside the engine never held this
             // lock, but recover from poisoning anyway: the batcher's
-            // state is just a channel, always safe to keep draining
-            let b = batcher.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
-            b.next_batch_with(cap)
+            // state is just a channel + bins, always safe to keep
+            // draining
+            let mut b = batcher.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+            // never hand this engine more than it prefers for the
+            // batch's bin (fixed-shape PJRT artifacts reject oversized
+            // batches; the cap is per-m now)
+            b.next_batch_with(|m| engine.preferred_batch(m))
         };
-        let Some(batch) = batch else {
+        let Some((_m, batch)) = batch else {
             // ingress closed and drained: clean exit (shutdown)
             retire_shared(&state, &batcher);
             return;
@@ -512,14 +589,16 @@ fn shared_worker_loop(
 }
 
 /// One shared-lock worker is gone; if it was the last, mark the pool
-/// dead (so `submit` fails fast) and answer everything still queued.
-/// The flag is set and the sweep runs under the batcher lock, so a
-/// submitter whose post-send re-check observes `dead` (and sweeps via
-/// the same lock) cannot interleave between them; `shutdown`'s final
-/// drain backstops any request that slips past both sweeps.
-fn retire_shared(state: &PoolState, batcher: &Mutex<Batcher<Request>>) {
+/// dead (so `submit` fails fast) and answer everything still queued —
+/// the channel *and* the per-m bins a batch-forming worker may have
+/// stashed into. The flag is set and the sweep runs under the batcher
+/// lock, so a submitter whose post-send re-check observes `dead` (and
+/// sweeps via the same lock) cannot interleave between them;
+/// `shutdown`'s final drain backstops any request that slips past both
+/// sweeps.
+fn retire_shared(state: &PoolState, batcher: &Mutex<KeyedBatcher<Request>>) {
     if state.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
-        let b = batcher.lock().unwrap_or_else(|p| p.into_inner());
+        let mut b = batcher.lock().unwrap_or_else(|p| p.into_inner());
         state.dead.store(true, Ordering::SeqCst);
         for req in b.drain() {
             answer_failed(req, DEAD_POOL_MSG);
@@ -644,7 +723,11 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
             return WorkerExit::Died;
         }
     };
-    let cap = engine.preferred_batch().max(1).min(sup.policy.max_batch.max(1));
+    // per-bin batch cap: the engine's preference for the bin's m,
+    // clamped by the policy (evaluated per batch — mixed-m traffic
+    // means the cap can differ batch to batch)
+    let max_batch = sup.policy.max_batch.max(1);
+    let cap_of = |m: usize| engine.preferred_batch(m).max(1).min(max_batch);
     let max_wait = Duration::from_micros(sup.policy.max_wait_us);
     // how long to block on the own shard before sweeping siblings for
     // stealable work. A push to the own shard wakes the worker
@@ -658,9 +741,9 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     let own = &sup.shards[slot];
     loop {
         let first_wait = steal_base.saturating_mul(1u32 << idle_streak.min(9)).min(steal_max);
-        let batch = match own.pop_batch(cap, max_wait, first_wait) {
+        let batch = match own.pop_batch_by(|r: &Request| r.m, &cap_of, max_wait, first_wait) {
             Pop::Batch(b) => b,
-            Pop::TimedOut => match steal_from_siblings(slot, sup, cap) {
+            Pop::TimedOut => match steal_from_siblings(slot, sup, &cap_of) {
                 Some(b) => b,
                 None => {
                     idle_streak = idle_streak.saturating_add(1);
@@ -669,7 +752,7 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
             },
             // own shard closed (shutdown, pool death, or this slot was
             // retired): sweep the siblings' leftovers, then exit
-            Pop::Closed => match steal_from_siblings(slot, sup, cap) {
+            Pop::Closed => match steal_from_siblings(slot, sup, &cap_of) {
                 Some(b) => b,
                 None => return WorkerExit::Clean,
             },
@@ -681,11 +764,17 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     }
 }
 
-fn steal_from_siblings(slot: usize, sup: &Supervisor, cap: usize) -> Option<Vec<Request>> {
+/// Steal one uniform-m batch from the first loaded sibling shard (the
+/// keyed steal takes the sibling's oldest key, capped per bin).
+fn steal_from_siblings(
+    slot: usize,
+    sup: &Supervisor,
+    cap_of: &impl Fn(usize) -> usize,
+) -> Option<Vec<Request>> {
     let n = sup.shards.len();
     for off in 1..n {
         let j = (slot + off) % n;
-        let stolen = sup.shards[j].steal(cap);
+        let stolen = sup.shards[j].steal_by(|r: &Request| r.m, cap_of);
         if !stolen.is_empty() {
             sup.metrics.on_steal(stolen.len());
             return Some(stolen);
@@ -815,10 +904,10 @@ mod tests {
     struct PanicEngine;
 
     impl BatchEngine for PanicEngine {
-        fn run(&self, _mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             panic!("engine failure injected by test");
         }
-        fn preferred_batch(&self) -> usize {
+        fn preferred_batch(&self, _m: usize) -> usize {
             8
         }
         fn name(&self) -> String {
@@ -830,15 +919,78 @@ mod tests {
     struct FailEngine;
 
     impl BatchEngine for FailEngine {
-        fn run(&self, _mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             Err("injected backend failure".into())
         }
-        fn preferred_batch(&self) -> usize {
+        fn preferred_batch(&self, _m: usize) -> usize {
             8
         }
         fn name(&self) -> String {
             "fail-test".into()
         }
+    }
+
+    #[test]
+    fn submit_m_serves_mixed_sizes_on_both_topologies() {
+        let eng = NativeEngine::flagship();
+        for sharded in [false, true] {
+            let factories: Vec<_> = (0..2)
+                .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+                .collect();
+            let policy = BatchPolicy { max_batch: 8, max_wait_us: 100 };
+            let svc = if sharded {
+                QrdService::start_sharded(factories, policy, RestartPolicy::default())
+            } else {
+                QrdService::start_pool(factories, policy)
+            };
+            let mut rxs = Vec::new();
+            let mut want = Vec::new();
+            for k in 0..60u32 {
+                let m = 2 + (k % 5) as usize; // 2..=6 interleaved
+                let a: Vec<u32> = (0..m * m)
+                    .map(|i| ((k as f32 + 1.0) * (i as f32 - 3.5) * 0.11).to_bits())
+                    .collect();
+                want.push((m, eng.qrd_bits_m(m, &a)));
+                rxs.push(svc.submit_m(m, a));
+            }
+            for (rx, (m, want)) in rxs.into_iter().zip(want) {
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "sharded={sharded}: {:?}", resp.error);
+                assert_eq!(resp.m, m);
+                assert_eq!(resp.out, want, "sharded={sharded} m={m}");
+            }
+            let metrics = svc.metrics();
+            for m in 2..=6usize {
+                assert_eq!(metrics.m_requests(m), 12, "sharded={sharded} m={m}");
+                assert_eq!(metrics.m_served(m), 12, "sharded={sharded} m={m}");
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn malformed_submissions_get_immediate_error_responses() {
+        let svc = QrdService::start(
+            || Box::new(NativeEngine::flagship()),
+            BatchPolicy::default(),
+        )
+        .with_max_m(8);
+        assert_eq!(svc.max_m(), 8);
+        // m over the cap, m = 0, and a payload/m mismatch: all answered,
+        // none reaches a queue (no worker involvement needed)
+        let resp = svc.submit_m(9, vec![0u32; 81]).recv().expect("response");
+        assert!(resp.result().unwrap_err().contains("outside the accepted range"), "{resp:?}");
+        let resp = svc.submit_m(0, Vec::new()).recv().expect("response");
+        assert!(resp.error.is_some());
+        let resp = svc.submit_m(3, vec![0u32; 8]).recv().expect("response");
+        assert!(resp.result().unwrap_err().contains("8 words"), "{resp:?}");
+        // valid traffic still flows afterwards
+        let resp = svc.submit_m(2, vec![0u32; 4]).recv().expect("response");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        // rejected requests never hit the per-m accepted bins
+        assert_eq!(svc.metrics().m_requests(9), 0);
+        assert_eq!(svc.metrics().m_requests(2), 1);
+        svc.shutdown();
     }
 
     #[test]
@@ -1034,7 +1186,7 @@ mod tests {
     }
 
     impl BatchEngine for GateEngine {
-        fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+        fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             {
                 let (lock, cv) = &*self.entered;
                 *lock.lock().unwrap() = true;
@@ -1046,9 +1198,9 @@ mod tests {
                 open = cv.wait(open).unwrap();
             }
             drop(open);
-            self.inner.run(mats)
+            self.inner.run(m, mats)
         }
-        fn preferred_batch(&self) -> usize {
+        fn preferred_batch(&self, _m: usize) -> usize {
             1
         }
         fn name(&self) -> String {
@@ -1182,7 +1334,7 @@ mod tests {
         assert_eq!(&resp.out, &eng.qrd_bits(&a));
         // the cached response is stable across polls, and wait() hands
         // out the very same response
-        let again = pending.try_result().expect("still ready").out;
+        let again = pending.try_result().expect("still ready").out.clone();
         assert_eq!(again, eng.qrd_bits(&a));
         assert_eq!(pending.wait().out, eng.qrd_bits(&a));
         svc.shutdown();

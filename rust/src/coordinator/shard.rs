@@ -27,6 +27,15 @@ pub enum Pop<T> {
 
 struct State<T> {
     q: VecDeque<T>,
+    /// Reusable partition buffer for the keyed extraction (swapped with
+    /// `q` each pass, so keyed pops are O(queue) moves and
+    /// allocation-free after warm-up).
+    scratch: VecDeque<T>,
+    /// Bumped whenever a *sibling* path removes items (steal/drain):
+    /// invalidates the batch former's scanned-prefix cursor, since a
+    /// removal can shift unclassified items into the skipped prefix.
+    /// Pushes only append and never invalidate.
+    removals: u64,
     closed: bool,
 }
 
@@ -42,7 +51,12 @@ impl<T> ShardQueue<T> {
     /// A queue admitting at most `bound` queued items (≥ 1).
     pub fn bounded(bound: usize) -> Self {
         ShardQueue {
-            state: Mutex::new(State { q: VecDeque::new(), closed: false }),
+            state: Mutex::new(State {
+                q: VecDeque::new(),
+                scratch: VecDeque::new(),
+                removals: 0,
+                closed: false,
+            }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             bound: bound.max(1),
@@ -101,6 +115,9 @@ impl<T> ShardQueue<T> {
     pub fn drain(&self) -> Vec<T> {
         let mut st = self.lock();
         let out: Vec<T> = st.q.drain(..).collect();
+        if !out.is_empty() {
+            st.removals += 1;
+        }
         drop(st);
         self.not_full.notify_all();
         out
@@ -109,9 +126,32 @@ impl<T> ShardQueue<T> {
     /// Steal up to `max` items from the front (oldest first) without
     /// blocking. Empty result means nothing to steal.
     pub fn steal(&self, max: usize) -> Vec<T> {
+        self.steal_by(|_| 0, |_| max)
+    }
+
+    /// Keyed steal: take the key of the *oldest* queued item, then
+    /// collect up to `cap_of(key)` items of that key from the front
+    /// (FIFO within the key; other keys stay queued untouched). The
+    /// stolen batch is uniform in key — executable by the thief's
+    /// engine in one call. Empty result means nothing to steal; a cap
+    /// of 0 steals nothing (stealing is optional, unlike batch
+    /// formation — callers may use 0 to decline a key).
+    pub fn steal_by<K, C>(&self, key: K, cap_of: C) -> Vec<T>
+    where
+        K: Fn(&T) -> usize,
+        C: Fn(usize) -> usize,
+    {
         let mut st = self.lock();
-        let n = st.q.len().min(max);
-        let out: Vec<T> = st.q.drain(..n).collect();
+        let Some(front) = st.q.front() else {
+            return Vec::new();
+        };
+        let k = key(front);
+        let cap = cap_of(k);
+        if cap == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        take_matching(&mut st, &key, k, cap, 0, &mut out);
         drop(st);
         if !out.is_empty() {
             self.not_full.notify_all();
@@ -123,7 +163,34 @@ impl<T> ShardQueue<T> {
     /// gather up to `cap` items until `max_wait` expires (the dynamic
     /// batching deadline, same policy the shared `Batcher` applies).
     pub fn pop_batch(&self, cap: usize, max_wait: Duration, first_wait: Duration) -> Pop<T> {
-        let cap = cap.max(1);
+        self.pop_batch_by(|_| 0, |_| cap, max_wait, first_wait)
+    }
+
+    /// Keyed batch formation: the first item (FIFO front) fixes the
+    /// batch's key; the batch then gathers only matching items — up to
+    /// `cap_of(key)`, waiting out the batching deadline — while items
+    /// of other keys stay queued in order for later pops. This is the
+    /// per-m binning of the sharded topology: one ingress queue per
+    /// worker, uniform-m batches out, nothing dropped and nothing
+    /// reordered within a key.
+    ///
+    /// The deadline is anchored at batch-formation start (the queue is
+    /// generic and carries no arrival times), so a minority-key item
+    /// that already waited behind another key's batch pays up to one
+    /// extra window — formation latency is bounded by ~2×`max_wait`
+    /// per key transition, the same bound as the keyed shared-lock
+    /// batcher.
+    pub fn pop_batch_by<K, C>(
+        &self,
+        key: K,
+        cap_of: C,
+        max_wait: Duration,
+        first_wait: Duration,
+    ) -> Pop<T>
+    where
+        K: Fn(&T) -> usize,
+        C: Fn(usize) -> usize,
+    {
         let mut st = self.lock();
         // phase 1: the first item (or closed / timed out)
         let wait_deadline = Instant::now() + first_wait;
@@ -141,15 +208,33 @@ impl<T> ShardQueue<T> {
                 .unwrap_or_else(|p| p.into_inner());
             st = g;
         }
-        // phase 2: fill toward the cap until the batching deadline
+        let k = key(st.q.front().expect("non-empty after phase 1"));
+        let cap = cap_of(k).max(1);
+        // phase 2: fill toward the cap with matching items until the
+        // batching deadline; other keys stay queued in order. The queue
+        // is left whole at every wait point (parking extracted items
+        // aside would blind the drain/steal/close sweeps that share
+        // this lock), so each pass re-walks the foreign prefix — but
+        // `scanned` skips passes with nothing new (a wakeup classifies
+        // only the arrivals since the last pass, never re-keying the
+        // prefix).
         let mut batch = Vec::with_capacity(cap.min(st.q.len().max(1)));
+        let mut scanned = 0usize;
+        let mut removals_seen = st.removals;
         let batch_deadline = Instant::now() + max_wait;
         loop {
-            while batch.len() < cap {
-                match st.q.pop_front() {
-                    Some(t) => batch.push(t),
-                    None => break,
-                }
+            if st.removals != removals_seen {
+                // a steal/drain removed items under a wait: the prefix
+                // composition changed, so reclassify from the front
+                scanned = 0;
+                removals_seen = st.removals;
+            }
+            if st.q.len() > scanned {
+                take_matching(&mut st, &key, k, cap, scanned, &mut batch);
+                // our own extraction bumped the counter; resync so only
+                // *sibling* removals reset the cursor
+                scanned = st.q.len();
+                removals_seen = st.removals;
             }
             if batch.len() >= cap || st.closed {
                 break;
@@ -167,6 +252,38 @@ impl<T> ShardQueue<T> {
         drop(st);
         self.not_full.notify_all();
         Pop::Batch(batch)
+    }
+}
+
+/// Move up to `cap − out.len()` items with key `k` from the queue into
+/// `out`, front to back, leaving every other item queued in order. The
+/// first `skip` items are a prefix already classified as non-matching
+/// by an earlier pass and are carried over without re-keying. One
+/// O(queue) partition pass through the reusable scratch buffer — no
+/// per-item shifting, no allocation once the scratch is warm.
+fn take_matching<T>(
+    st: &mut State<T>,
+    key: &impl Fn(&T) -> usize,
+    k: usize,
+    cap: usize,
+    skip: usize,
+    out: &mut Vec<T>,
+) {
+    let State { q, scratch, removals, .. } = st;
+    scratch.clear();
+    scratch.extend(q.drain(..skip.min(q.len())));
+    let before = out.len();
+    for t in q.drain(..) {
+        if out.len() < cap && key(&t) == k {
+            out.push(t);
+        } else {
+            scratch.push_back(t);
+        }
+    }
+    std::mem::swap(q, scratch);
+    if out.len() > before {
+        // removals invalidate any in-progress scanned-prefix cursor
+        *removals += 1;
     }
 }
 
@@ -225,6 +342,64 @@ mod tests {
         assert_eq!(q.steal(2), vec![0, 1]);
         assert_eq!(q.steal(10), vec![2, 3, 4, 5]);
         assert!(q.steal(4).is_empty());
+    }
+
+    /// Key for the keyed tests: hundreds digit (2xx / 3xx model m=2 /
+    /// m=3 requests).
+    fn k(t: &i32) -> usize {
+        (*t / 100) as usize
+    }
+
+    #[test]
+    fn keyed_pop_forms_uniform_batches_and_preserves_other_keys() {
+        let q = ShardQueue::bounded(64);
+        for t in [201, 301, 202, 302, 203] {
+            q.push(t).unwrap();
+        }
+        // front is key 2: only 2xx items come out, 3xx stay queued
+        let b = match q.pop_batch_by(k, |_| 8, MS, MS) {
+            Pop::Batch(b) => b,
+            _ => panic!("expected batch"),
+        };
+        assert_eq!(b, vec![201, 202, 203]);
+        assert_eq!(q.len(), 2, "other-key items must stay queued");
+        // now the front is key 3, in original order
+        let b = match q.pop_batch_by(k, |_| 8, MS, MS) {
+            Pop::Batch(b) => b,
+            _ => panic!("expected batch"),
+        };
+        assert_eq!(b, vec![301, 302]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn keyed_pop_honours_per_key_caps() {
+        let q = ShardQueue::bounded(64);
+        for t in [201, 202, 203, 204, 301] {
+            q.push(t).unwrap();
+        }
+        let cap_of = |key: usize| if key == 2 { 3 } else { 8 };
+        let b = match q.pop_batch_by(k, cap_of, MS, MS) {
+            Pop::Batch(b) => b,
+            _ => panic!("expected batch"),
+        };
+        assert_eq!(b, vec![201, 202, 203], "key-2 cap is 3");
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn keyed_steal_takes_the_oldest_key_only() {
+        let q = ShardQueue::bounded(64);
+        for t in [301, 201, 302, 202] {
+            q.push(t).unwrap();
+        }
+        assert!(q.steal(0).is_empty(), "zero cap steals nothing");
+        assert!(q.steal_by(k, |_| 0).is_empty(), "a declined key steals nothing");
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.steal_by(k, |_| 10), vec![301, 302], "oldest key wins");
+        assert_eq!(q.steal_by(k, |_| 1), vec![201], "cap respected");
+        assert_eq!(q.steal_by(k, |_| 10), vec![202]);
+        assert!(q.steal_by(k, |_| 10).is_empty());
     }
 
     #[test]

@@ -4,10 +4,11 @@
 //! repro exp <id> [--nmat N] [--seed S]   regenerate one paper table/figure
 //! repro report [--nmat N] [--seed S]     run every experiment
 //! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
-//!           [--batch B] [--tile T] [--threads T]
+//!           [--batch B] [--tile T] [--threads T] [--blocked-m M]
 //! repro serve [--engine native|pjrt] [--requests N] [--batch B]
 //!             [--workers W] [--threads T] [--tile T]
 //!             [--shards S] [--max-restarts R]
+//!             [--max-m M] [--blocked-m M]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //! ```
 //!
@@ -21,16 +22,24 @@
 //! `--shards S` overrides the slot count, and `--shards 0` selects the
 //! legacy shared-lock batcher.
 //!
+//! Variable-m serving (wire format v2): `--max-m M` raises the accepted
+//! matrix-size cap and the synthetic load mixes m uniformly in
+//! `[2, M]`; per-m bins are batched separately and reconciled in the
+//! report, with spot checks bit-exact against the reference path.
+//! `--blocked-m M` sets the smallest m decomposed through the blocked
+//! wave schedule (`qrd::blocked`) inside each native engine.
+//!
 //! `repro qrd --batch B` switches from the single-matrix walkthrough to
-//! a batch-interleaved throughput demo over B random 4×4 matrices.
+//! a batch-interleaved throughput demo over B random m×m matrices
+//! (`--m` picks the size; the wire format is no longer 4×4-only).
 
 use fp_givens::util::cli::Args;
 
 const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
-  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--artifact PATH]";
+  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--artifact PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -71,33 +80,40 @@ fn main() -> anyhow::Result<()> {
             let batch = args.get_as("batch", 0usize);
             if batch > 0 {
                 // batch-interleaved throughput demo on the bit-level
-                // serving path (lane-major tiles through NativeEngine)
+                // serving path (lane-major tiles through NativeEngine;
+                // any m — the wire format carries the dimension)
                 use fp_givens::coordinator::{BatchEngine, NativeEngine};
                 use fp_givens::util::rng::Rng;
-                anyhow::ensure!(m == 4, "--batch drives the 4×4 bit-level wire format");
+                anyhow::ensure!(m >= 1, "--m must be at least 1");
                 let tile = args.get_as("tile", NativeEngine::DEFAULT_TILE);
                 let threads = args.get_as("threads", 1usize);
-                let native = NativeEngine { eng: QrdEngine::new(cfg), threads: 1, tile }
-                    .with_threads(threads);
+                let blocked_m =
+                    args.get_as("blocked-m", NativeEngine::DEFAULT_BLOCKED_MIN);
+                let native = NativeEngine::with_engine(QrdEngine::new(cfg))
+                    .with_threads(threads)
+                    .with_tile(tile)
+                    .with_blocked(blocked_m);
                 let mut rng = Rng::new(seed);
-                let mats: Vec<[u32; 16]> = (0..batch)
+                let mats: Vec<Vec<u32>> = (0..batch)
                     .map(|_| {
                         let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
-                        std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+                        (0..m * m)
+                            .map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
+                            .collect()
                     })
                     .collect();
                 let t0 = std::time::Instant::now();
-                let out = native.run(&mats).map_err(anyhow::Error::msg)?;
+                let out = native.run(m, &mats).map_err(anyhow::Error::msg)?;
                 let wall = t0.elapsed().as_secs_f64();
                 println!("engine    : {}", native.name());
                 println!(
-                    "decomposed {batch} matrices in {:.3} ms  ({:.0} QRD/s)",
+                    "decomposed {batch} {m}x{m} matrices in {:.3} ms  ({:.0} QRD/s)",
                     wall * 1e3,
                     batch as f64 / wall
                 );
                 let spot = batch - 1;
                 anyhow::ensure!(
-                    out[spot] == native.qrd_bits_reference(&mats[spot]),
+                    out[spot] == native.qrd_bits_reference_m(m, &mats[spot]),
                     "interleaved output diverged from the reference bit path"
                 );
                 println!("spot check vs reference bit path: ok");
@@ -140,6 +156,11 @@ fn main() -> anyhow::Result<()> {
                 "tile",
                 fp_givens::coordinator::NativeEngine::DEFAULT_TILE,
             );
+            let max_m = args.get_as("max-m", 4usize);
+            let blocked_m = args.get_as(
+                "blocked-m",
+                fp_givens::coordinator::NativeEngine::DEFAULT_BLOCKED_MIN,
+            );
             fp_givens::coordinator::serve_with(&fp_givens::coordinator::ServeConfig {
                 engine,
                 requests,
@@ -150,6 +171,8 @@ fn main() -> anyhow::Result<()> {
                 sharded,
                 max_restarts,
                 tile,
+                max_m,
+                blocked_m,
             })?;
         }
         _ => {

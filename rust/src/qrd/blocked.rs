@@ -1,0 +1,316 @@
+//! Blocked Givens schedules: the flat column-major elimination
+//! reordered into **waves** of pairwise row-disjoint rotations.
+//!
+//! The flat schedule ([`super::schedule`]) serializes everything through
+//! the pivot row; hardware QRD arrays instead fire independent rotations
+//! concurrently — the systolic anti-diagonal ordering (Rong '18) and the
+//! column/block-parallel restructurings of Merchant et al. '18. The same
+//! wavefront exists in software: step `(c, z)` may fire as soon as
+//! `(c, z−1)` and `(c−1, z)` are done, which puts it in wave
+//! `c + z − 1`. Every wave's steps touch pairwise-disjoint row pairs, so
+//! within a wave they are *independent blocks of one matrix* and can be
+//! executed through the same batched tile kernels
+//! ([`FamilyOps::vector_tile`] / [`FamilyOps::rotate_tile`]) that
+//! interleave tiles of independent matrices — waves are to one big
+//! matrix what tiles are to a batch of small ones.
+//!
+//! Soundness: two rotation steps commute **exactly** (bit-for-bit, in
+//! any arithmetic, including this crate's CORDIC datapaths) iff their
+//! row pairs are disjoint — each step reads and writes only its own two
+//! rows ([`RotationStep::commutes_with`]). [`waves`]/[`panel_waves`]
+//! emit a linear extension of the flat schedule's conflict DAG (only
+//! commuting steps are ever reordered), so the blocked execution is a
+//! *pure reordering of commuting rotations*: byte-identical `[R | G]`
+//! to the flat schedule for every input. The
+//! `tests/fastpath_bitexact.rs` property suite locks this across
+//! formats, families and matrix sizes; the unit tests below prove the
+//! schedule-level invariants directly.
+
+use super::schedule::RotationStep;
+use crate::rotator::{FamilyOps, TileScratch};
+
+/// The full-wavefront blocked schedule for an m×m decomposition:
+/// step `(c, z)` lands in wave `c + z − 1`, giving `2m − 3` waves (for
+/// m ≥ 2; empty for m ≤ 1) of up to ⌊m/2⌋ pairwise row-disjoint
+/// rotations each. Concatenated, the waves are a conflict-respecting
+/// permutation of [`super::schedule`].
+pub fn waves(m: usize) -> Vec<Vec<RotationStep>> {
+    panel_waves(m, m)
+}
+
+/// Panel-wise blocked schedule: columns are zeroed panel by panel
+/// (`panel` columns at a time, left to right), and within each panel
+/// the eliminations run as anti-diagonal waves. `panel = 0` or
+/// `panel ≥ m − 1` degenerates to the full wavefront ([`waves`]);
+/// `panel = 1` degenerates to the flat column-major order (singleton
+/// waves). Narrow panels trade wave width for a smaller working set —
+/// the software knob mirroring the blocked/systolic array shapes of
+/// Merchant et al. Schedule-level for now: the engine always executes
+/// the full wavefront ([`waves`]); every panel width is locked
+/// bit-identical on the real datapath by the unit tests below, so
+/// wiring a panel knob upward is pure plumbing.
+pub fn panel_waves(m: usize, panel: usize) -> Vec<Vec<RotationStep>> {
+    if m < 2 {
+        return Vec::new();
+    }
+    let panel = if panel == 0 { m } else { panel };
+    let mut out: Vec<Vec<RotationStep>> = Vec::new();
+    let mut p0 = 0usize;
+    while p0 < m - 1 {
+        let p1 = (p0 + panel).min(m - 1); // panel columns [p0, p1)
+        // wave index within the panel: col + zero_row − 1, offset so the
+        // panel's first wave is the one containing (p0, p0+1)
+        let first = 2 * p0; // p0 + (p0 + 1) − 1
+        let last = (p1 - 1) + (m - 1) - 1;
+        let base = out.len();
+        out.resize(base + (last - first + 1), Vec::new());
+        for col in p0..p1 {
+            for zero_row in (col + 1)..m {
+                out[base + col + zero_row - 1 - first]
+                    .push(RotationStep { pivot_row: col, zero_row, col });
+            }
+        }
+        p0 = p1;
+    }
+    out
+}
+
+/// Reusable scratch for the blocked wave executor: per-wave gathers of
+/// the pivot pairs and the (padded) lane-major row tails, the batched
+/// kernels' [`TileScratch`], and a cache of the wave list keyed by the
+/// last matrix size — so repeated decompositions at one size are
+/// allocation-free after warm-up.
+#[derive(Debug, Clone, Default)]
+pub struct BlockedScratch<T> {
+    tile: TileScratch,
+    px: Vec<T>,
+    pz: Vec<T>,
+    xs: Vec<T>,
+    ys: Vec<T>,
+    waves: Vec<Vec<RotationStep>>,
+    waves_m: usize,
+}
+
+impl<T: Copy + Default> BlockedScratch<T> {
+    /// Empty scratch (buffers grow on first use, then stay).
+    pub fn new() -> Self {
+        BlockedScratch::default()
+    }
+
+    fn waves_for(&mut self, m: usize) -> &[Vec<RotationStep>] {
+        if self.waves_m != m || (m >= 2 && self.waves.is_empty()) {
+            self.waves = waves(m);
+            self.waves_m = m;
+        }
+        &self.waves
+    }
+}
+
+/// Execute a blocked wave schedule over a flat row-major m×width buffer
+/// in place (the same `[A | I] → [R | G]` contract as
+/// `triangularize_ws`). Each wave runs as **one batched vectoring sweep
+/// over its pivot pairs plus one lane-major rotation sweep over its row
+/// tails** — the wave's independent rotations feed the tile kernels
+/// exactly like a tile of independent matrices would. Byte-identical to
+/// the flat schedule for every input (see the module docs for the
+/// commutation argument; locked by `tests/fastpath_bitexact.rs`).
+pub fn triangularize_waves<F: FamilyOps>(
+    rot: &F,
+    buf: &mut [F::Scalar],
+    m: usize,
+    width: usize,
+    sc: &mut BlockedScratch<F::Scalar>,
+) {
+    assert!(width >= m, "augmented width must cover the matrix");
+    assert_eq!(buf.len(), m * width, "buffer must be m×width");
+    sc.waves_for(m);
+    // split the borrow: the cached wave list is read-only while the
+    // gather buffers and tile scratch are mutated
+    let BlockedScratch { tile, px, pz, xs, ys, waves, .. } = sc;
+    let zero = rot.zero();
+    for wave in waves.iter() {
+        let b = wave.len();
+        if b == 0 {
+            continue;
+        }
+        // gather the wave's pivot pairs and vector them in one batched
+        // sweep; vector_tile records one angle per step in the scratch,
+        // leaves each modulus in px and the canonical zero in pz
+        px.clear();
+        pz.clear();
+        for s in wave {
+            px.push(buf[s.pivot_row * width + s.col]);
+            pz.push(buf[s.zero_row * width + s.col]);
+        }
+        rot.vector_tile(px, pz, tile);
+        for (k, s) in wave.iter().enumerate() {
+            buf[s.pivot_row * width + s.col] = px[k];
+            buf[s.zero_row * width + s.col] = pz[k];
+        }
+        // gather the row tails lane-major (lane j·B + k is tail
+        // position j of step k). Steps in one wave clear different
+        // columns, so tails differ in length: shorter lanes are padded
+        // with canonical-zero pairs, which are never scattered back —
+        // the kernels' output for a pad is irrelevant.
+        let maxlen = wave.iter().map(|s| width - s.col - 1).max().unwrap_or(0);
+        xs.clear();
+        xs.resize(maxlen * b, zero);
+        ys.clear();
+        ys.resize(maxlen * b, zero);
+        for (k, s) in wave.iter().enumerate() {
+            let (p0, z0) = (s.pivot_row * width + s.col + 1, s.zero_row * width + s.col + 1);
+            for j in 0..(width - s.col - 1) {
+                xs[j * b + k] = buf[p0 + j];
+                ys[j * b + k] = buf[z0 + j];
+            }
+        }
+        rot.rotate_tile(xs, ys, tile);
+        for (k, s) in wave.iter().enumerate() {
+            let (p0, z0) = (s.pivot_row * width + s.col + 1, s.zero_row * width + s.col + 1);
+            for j in 0..(width - s.col - 1) {
+                buf[p0 + j] = xs[j * b + k];
+                buf[z0 + j] = ys[j * b + k];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qrd::schedule::{rotation_count, schedule};
+    use std::collections::HashMap;
+
+    fn assert_valid_blocked(m: usize, wv: &[Vec<RotationStep>]) {
+        // 1. exact coverage: the concatenation is a permutation of the
+        //    flat schedule
+        let concat: Vec<RotationStep> = wv.iter().flatten().copied().collect();
+        let mut sorted = concat.clone();
+        sorted.sort();
+        let mut flat = schedule(m);
+        flat.sort();
+        assert_eq!(sorted, flat, "m={m}: waves must cover the schedule exactly");
+        assert_eq!(concat.len(), rotation_count(m));
+        // 2. independence: steps within one wave pairwise commute
+        for (w, wave) in wv.iter().enumerate() {
+            for i in 0..wave.len() {
+                for j in (i + 1)..wave.len() {
+                    assert!(
+                        wave[i].commutes_with(&wave[j]),
+                        "m={m} wave {w}: {:?} conflicts with {:?}",
+                        wave[i],
+                        wave[j]
+                    );
+                }
+            }
+        }
+        // 3. linear extension: every conflicting pair keeps its flat
+        //    relative order — only commuting steps are ever reordered
+        let flat = schedule(m);
+        let pos_flat: HashMap<RotationStep, usize> =
+            flat.iter().enumerate().map(|(i, s)| (*s, i)).collect();
+        let pos_blk: HashMap<RotationStep, usize> =
+            concat.iter().enumerate().map(|(i, s)| (*s, i)).collect();
+        for i in 0..flat.len() {
+            for j in (i + 1)..flat.len() {
+                let (a, b) = (flat[i], flat[j]);
+                if !a.commutes_with(&b) {
+                    assert!(
+                        pos_blk[&a] < pos_blk[&b],
+                        "m={m}: conflicting pair {a:?} → {b:?} reordered"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_wavefront_is_a_valid_commuting_reordering() {
+        for m in 0..=12 {
+            assert_valid_blocked(m, &waves(m));
+        }
+        // spot-check the big sizes the service bins actually carry
+        assert_valid_blocked(16, &waves(16));
+        assert_valid_blocked(32, &waves(32));
+    }
+
+    #[test]
+    fn panel_waves_are_valid_for_every_panel_width() {
+        for m in 0..=10 {
+            for panel in 0..=m + 1 {
+                assert_valid_blocked(m, &panel_waves(m, panel));
+            }
+        }
+        assert_valid_blocked(32, &panel_waves(32, 8));
+    }
+
+    #[test]
+    fn wavefront_shape() {
+        // 2m − 3 waves, width up to ⌊m/2⌋
+        for m in [2usize, 5, 8, 16, 32] {
+            let wv = waves(m);
+            assert_eq!(wv.len(), 2 * m - 3, "m={m}");
+            assert!(wv.iter().all(|w| !w.is_empty()), "m={m}: no empty wave");
+            let widest = wv.iter().map(|w| w.len()).max().unwrap();
+            assert_eq!(widest, m / 2, "m={m}");
+        }
+        // degenerate sizes are total and empty
+        assert!(waves(0).is_empty());
+        assert!(waves(1).is_empty());
+        // m=2 is the single flat rotation
+        assert_eq!(waves(2), vec![vec![RotationStep { pivot_row: 0, zero_row: 1, col: 0 }]]);
+    }
+
+    #[test]
+    fn panel_schedules_run_bit_identical_on_the_real_datapath() {
+        // not just schedule algebra: execute every panel width through
+        // the actual CORDIC kernels and require byte-identity with the
+        // full wavefront (itself locked to the flat/reference paths by
+        // the fastpath_bitexact suite)
+        use crate::fp::{FpFormat, HubFp};
+        use crate::rotator::{HubRotator, RotatorConfig};
+        let rot = HubRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
+        let run = |wv: Vec<Vec<RotationStep>>, m: usize, init: &[HubFp]| -> Vec<u64> {
+            let mut sc: BlockedScratch<HubFp> =
+                BlockedScratch { waves: wv, waves_m: m, ..Default::default() };
+            let mut buf = init.to_vec();
+            triangularize_waves(&rot, &mut buf, m, 2 * m, &mut sc);
+            buf.iter().map(|&v| rot.to_bits(v)).collect()
+        };
+        for m in [2usize, 5, 9] {
+            let width = 2 * m;
+            let mut init = vec![rot.zero(); m * width];
+            for i in 0..m {
+                for j in 0..m {
+                    init[i * width + j] =
+                        rot.encode(((i * m + j) as f64 - (m * m) as f64 * 0.5) * 0.23);
+                }
+                init[i * width + m + i] = rot.one();
+            }
+            let full = run(waves(m), m, &init);
+            for panel in 1..=m {
+                assert_eq!(run(panel_waves(m, panel), m, &init), full, "m={m} panel={panel}");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_width_one_degenerates_to_the_flat_order() {
+        for m in [2usize, 3, 6, 9] {
+            let concat: Vec<RotationStep> =
+                panel_waves(m, 1).into_iter().flatten().collect();
+            assert_eq!(concat, schedule(m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn scratch_caches_waves_per_size() {
+        let mut sc: BlockedScratch<crate::fp::HubFp> = BlockedScratch::new();
+        assert_eq!(sc.waves_for(6).len(), 9);
+        let ptr = sc.waves.as_ptr();
+        assert_eq!(sc.waves_for(6).len(), 9);
+        assert_eq!(sc.waves.as_ptr(), ptr, "same size must reuse the cached list");
+        assert_eq!(sc.waves_for(4).len(), 5);
+        assert!(sc.waves_for(1).is_empty());
+    }
+}

@@ -7,6 +7,7 @@
 //! the two rows. Feeding the identity alongside (`[A | I]`) accumulates
 //! G = Q^T (paper §5.1: the same rotations over the identity produce Q).
 
+pub mod blocked;
 mod fixed_engine;
 mod iterative;
 mod rls;
@@ -14,11 +15,14 @@ mod schedule;
 pub mod solve;
 pub mod workspace;
 
+pub use blocked::{panel_waves, waves, BlockedScratch};
 pub use fixed_engine::FixedQrdEngine;
 pub use iterative::{IterativeQrd, IterativeRun};
 pub use rls::QrdRls;
 pub use schedule::{pair_op_count, rotation_count, schedule, RotationStep};
-pub use workspace::{triangularize_tile, triangularize_ws, BatchWorkspace, QrdWorkspace};
+pub use workspace::{
+    triangularize_blocked_ws, triangularize_tile, triangularize_ws, BatchWorkspace, QrdWorkspace,
+};
 
 use crate::fp::Family;
 use crate::rotator::{FamilyOps, GivensRotator, HubRotator, IeeeRotator, RotatorConfig, Val};
@@ -114,8 +118,23 @@ impl QrdEngine {
     /// vectors allocate.
     pub fn decompose(&self, a: &[Vec<f64>]) -> QrdResult {
         match &self.fast {
-            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| decompose_flat(r, a, ws)),
-            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| decompose_flat(r, a, ws)),
+            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| decompose_with(r, a, ws, false)),
+            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| decompose_with(r, a, ws, false)),
+        }
+    }
+
+    /// [`Self::decompose`] through the **blocked wave schedule**
+    /// ([`blocked`]): anti-diagonal waves of independent rotations
+    /// executed via the batched tile kernels. A pure reordering of
+    /// commuting rotations, so the result is bit-identical to
+    /// [`Self::decompose`]/[`Self::decompose_reference`] today; kept as
+    /// a separate entry point (and regression surface — see
+    /// `tests/qrd_numerics.rs`) for when a future schedule trades exact
+    /// ordering for speed.
+    pub fn decompose_blocked(&self, a: &[Vec<f64>]) -> QrdResult {
+        match &self.fast {
+            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| decompose_with(r, a, ws, true)),
+            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| decompose_with(r, a, ws, true)),
         }
     }
 
@@ -180,14 +199,16 @@ impl QrdEngine {
     }
 }
 
-/// Load `[A | I]` into the workspace, triangularize on the fast path,
-/// decode `[R | G]`. Generic over the family so the whole loop
-/// monomorphizes; the workspace (thread-local in [`QrdEngine`]'s use)
-/// makes the triangularization allocation-free after warm-up.
-fn decompose_flat<F: FamilyOps>(
+/// Load `[A | I]` into the workspace, triangularize on the fast path
+/// (flat schedule, or the blocked wave schedule when `blocked`), decode
+/// `[R | G]`. Generic over the family so the whole loop monomorphizes;
+/// the workspace (thread-local in [`QrdEngine`]'s use) makes the
+/// triangularization allocation-free after warm-up.
+fn decompose_with<F: FamilyOps>(
     rot: &F,
     a: &[Vec<f64>],
     ws: &mut QrdWorkspace<F::Scalar>,
+    blocked: bool,
 ) -> QrdResult {
     let m = a.len();
     assert!(m > 0, "square input expected (got an empty matrix)");
@@ -202,7 +223,11 @@ fn decompose_flat<F: FamilyOps>(
         // the family scalar's Default *is* its canonical zero
         buf[i * width + m + i] = rot.one();
     }
-    triangularize_ws(rot, ws);
+    if blocked {
+        triangularize_blocked_ws(rot, ws);
+    } else {
+        triangularize_ws(rot, ws);
+    }
     QrdResult {
         r: (0..m).map(|i| ws.row(i)[..m].iter().map(|&v| rot.decode(v)).collect()).collect(),
         qt: (0..m).map(|i| ws.row(i)[m..].iter().map(|&v| rot.decode(v)).collect()).collect(),
@@ -267,6 +292,23 @@ mod tests {
             }
             for j in 0..i {
                 assert_eq!(res.r[i][j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_decompose_equals_flat_decompose() {
+        for cfg in [
+            RotatorConfig::hub(FpFormat::SINGLE, 26, 24),
+            RotatorConfig::ieee(FpFormat::SINGLE, 27, 24),
+        ] {
+            let eng = QrdEngine::new(cfg);
+            for m in [2usize, 4, 7, 11] {
+                let a = sample_matrix(m, 13 + m as u64);
+                let flat = eng.decompose(&a);
+                let blocked = eng.decompose_blocked(&a);
+                assert_eq!(flat.r, blocked.r, "{} m={m} R", cfg.label());
+                assert_eq!(flat.qt, blocked.qt, "{} m={m} G", cfg.label());
             }
         }
     }

@@ -9,7 +9,7 @@
 /// One Givens rotation in the schedule: vector on column `col` of rows
 /// (`pivot_row`, `zero_row`), zeroing `(zero_row, col)`, then rotate the
 /// remaining pairs of the two rows.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RotationStep {
     /// Row providing the surviving (modulus) element — the diagonal row.
     pub pivot_row: usize,
@@ -17,6 +17,22 @@ pub struct RotationStep {
     pub zero_row: usize,
     /// Column being cleared.
     pub col: usize,
+}
+
+impl RotationStep {
+    /// True when the step reads or writes `row`.
+    pub fn touches(&self, row: usize) -> bool {
+        self.pivot_row == row || self.zero_row == row
+    }
+
+    /// Two steps commute exactly (bit-for-bit, in any arithmetic) iff
+    /// their row pairs are disjoint: each step reads and writes only
+    /// its own two rows, so disjoint steps see identical inputs in
+    /// either order. This is the whole soundness argument behind the
+    /// blocked wave schedules in [`super::blocked`].
+    pub fn commutes_with(&self, other: &RotationStep) -> bool {
+        !(other.touches(self.pivot_row) || other.touches(self.zero_row))
+    }
 }
 
 /// The full schedule for an m×m decomposition: m(m−1)/2 rotations.
@@ -100,6 +116,17 @@ mod tests {
             let from_schedule: usize = schedule(m).iter().map(|s| 2 * m - s.col).sum();
             assert_eq!(pair_op_count(m), from_schedule, "m={m}");
         }
+    }
+
+    #[test]
+    fn commutation_is_exactly_row_disjointness() {
+        let a = RotationStep { pivot_row: 0, zero_row: 3, col: 0 };
+        let b = RotationStep { pivot_row: 1, zero_row: 2, col: 1 };
+        let c = RotationStep { pivot_row: 1, zero_row: 3, col: 1 };
+        assert!(a.commutes_with(&b) && b.commutes_with(&a));
+        assert!(!a.commutes_with(&c), "shared row 3");
+        assert!(!b.commutes_with(&c), "shared row 1");
+        assert!(a.touches(0) && a.touches(3) && !a.touches(1));
     }
 
     #[test]

@@ -191,14 +191,14 @@ fn per_shard_fifo_batch_formation_under_concurrent_submitters() {
     // (per-producer FIFO; the global interleaving is unspecified).
     struct RecordingEngine(Arc<Mutex<Vec<u32>>>);
     impl BatchEngine for RecordingEngine {
-        fn run(&self, mats: &[[u32; 16]]) -> Result<Vec<[u32; 32]>, String> {
+        fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             let mut log = self.0.lock().unwrap();
-            for m in mats {
-                log.push(m[0]);
+            for a in mats {
+                log.push(a[0]);
             }
-            Ok(vec![[0u32; 32]; mats.len()])
+            Ok(vec![vec![0u32; m * 2 * m]; mats.len()])
         }
-        fn preferred_batch(&self) -> usize {
+        fn preferred_batch(&self, _m: usize) -> usize {
             8
         }
         fn name(&self) -> String {
@@ -244,6 +244,178 @@ fn per_shard_fifo_batch_formation_under_concurrent_submitters() {
     }
     drop(seen);
     svc.shutdown();
+}
+
+/// Satellite suite: M concurrent submitters with a random m per request
+/// against one topology. Every response must pair with its own request
+/// (right m, right bits — the oracle is the fast path, itself locked to
+/// the reference by `fastpath_bitexact`), and the per-m bin metrics
+/// must reconcile: accepted == served in every bin, bins sum to the
+/// request total.
+fn mixed_m_stress(sharded: bool) {
+    let workers = 3usize;
+    let factories: Vec<_> = (0..workers)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let policy = BatchPolicy { max_batch: 16, max_wait_us: 100 };
+    let svc = if sharded {
+        QrdService::start_sharded(factories, policy, RestartPolicy::default())
+    } else {
+        QrdService::start_pool(factories, policy)
+    };
+    let svc = Arc::new(svc.with_max_m(16));
+    let clients = 5usize;
+    let per_client = 200usize;
+    let m_pool = [2usize, 3, 4, 5, 8, 11, 16];
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let eng = NativeEngine::flagship();
+            let mut rng = Rng::new(c as u64 * 7919 + 3);
+            let mut counts = vec![0u64; 17];
+            let mut inflight = std::collections::VecDeque::new();
+            let mut check = |(m, a, rx): (usize, Vec<u32>, _)| {
+                let rx: std::sync::mpsc::Receiver<fp_givens::coordinator::Response> = rx;
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "client {c} m={m}: {:?}", resp.error);
+                assert_eq!(resp.m, m, "client {c}");
+                assert_eq!(resp.out, eng.qrd_bits_m(m, &a), "client {c} m={m}");
+            };
+            for _ in 0..per_client {
+                let m = m_pool[rng.below(m_pool.len() as u64) as usize];
+                let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+                let a: Vec<u32> =
+                    (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits()).collect();
+                counts[m] += 1;
+                inflight.push_back((m, a.clone(), svc.submit_m(m, a)));
+                if inflight.len() >= 24 {
+                    check(inflight.pop_front().unwrap());
+                }
+            }
+            for item in inflight {
+                check(item);
+            }
+            counts
+        }));
+    }
+    let mut submitted = vec![0u64; 17];
+    for h in handles {
+        for (m, n) in h.join().unwrap().into_iter().enumerate() {
+            submitted[m] += n;
+        }
+    }
+    let total = (clients * per_client) as u64;
+    let metrics = svc.metrics();
+    assert_eq!(metrics.requests(), total);
+    assert_eq!(metrics.latency().count(), total);
+    assert_eq!(metrics.worker_batch_counts().iter().sum::<u64>(), metrics.batches());
+    // per-m reconciliation: every bin's accepted == served == what the
+    // clients actually submitted, and the bins sum to the total
+    let bins = metrics.per_m_bins();
+    let mut bin_sum = 0u64;
+    for (m, req, srv, batches) in bins {
+        assert_eq!(req, submitted[m], "bin m={m} accepted");
+        assert_eq!(srv, submitted[m], "bin m={m} served");
+        assert!(batches >= 1 && batches <= req, "bin m={m} batches");
+        bin_sum += srv;
+    }
+    assert_eq!(bin_sum, total, "bins must cover every request");
+    assert_eq!(metrics.worker_panics(), 0);
+    let svc = Arc::try_unwrap(svc).ok().expect("all clients joined");
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_m_stress_shared_lock_topology() {
+    mixed_m_stress(false);
+}
+
+#[test]
+fn mixed_m_stress_sharded_topology() {
+    mixed_m_stress(true);
+}
+
+/// Shutdown (and pool death) must drain **every per-m bin**: requests
+/// stashed in a non-matching bin while a batch was forming are answered
+/// like any queued request — no client can ever see a bare `RecvError`.
+#[test]
+fn dead_pool_drains_every_m_bin_with_error_responses() {
+    struct PanicEngine;
+    impl BatchEngine for PanicEngine {
+        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+            panic!("injected");
+        }
+        fn preferred_batch(&self, _m: usize) -> usize {
+            4
+        }
+        fn name(&self) -> String {
+            "panic".into()
+        }
+    }
+    for sharded in [false, true] {
+        let svc = if sharded {
+            QrdService::start_sharded(
+                vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
+                BatchPolicy { max_batch: 4, max_wait_us: 2000 },
+                RestartPolicy { max_restarts: 0 },
+            )
+        } else {
+            QrdService::start_pool(
+                vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
+                BatchPolicy { max_batch: 4, max_wait_us: 2000 },
+            )
+        }
+        .with_max_m(8);
+        // interleaved sizes racing the first (panicking) batch: some
+        // land in the worker's forming batch, some in other bins, some
+        // behind the dead pool — every one must get a Response
+        let rxs: Vec<_> = (0..48)
+            .map(|k| {
+                let m = [2usize, 3, 5, 8][k % 4];
+                svc.submit_m(m, vec![0x3f80_0000u32; m * m])
+            })
+            .collect();
+        for (k, rx) in rxs.into_iter().enumerate() {
+            let resp = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap_or_else(|e| panic!("sharded={sharded} request {k}: RecvError ({e})"));
+            assert!(resp.error.is_some(), "sharded={sharded} request {k}: {resp:?}");
+        }
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn shutdown_answers_queued_mixed_m_requests() {
+    // a healthy pool: shutdown must serve (not error) everything queued
+    // across bins before joining
+    let svc = QrdService::start(
+        || Box::new(NativeEngine::flagship()),
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+    )
+    .with_max_m(8);
+    let eng = NativeEngine::flagship();
+    let items: Vec<(usize, Vec<u32>, _)> = (0..40)
+        .map(|k| {
+            let m = [2usize, 3, 4, 8][k % 4];
+            let a: Vec<u32> =
+                (0..m * m).map(|i| ((k + i) as f32 * 0.21 - 3.0).to_bits()).collect();
+            let rx = svc.submit_m(m, a.clone());
+            (m, a, rx)
+        })
+        .collect();
+    svc.shutdown();
+    for (k, (m, a, rx)) in items.into_iter().enumerate() {
+        let resp = rx.recv().expect("shutdown never drops a channel");
+        if resp.error.is_none() {
+            assert_eq!(resp.out, eng.qrd_bits_m(m, &a), "request {k}");
+        }
+        // an error response is acceptable only with the shutdown reason
+        if let Some(e) = &resp.error {
+            assert!(e.contains("shut down"), "request {k}: {e}");
+        }
+    }
 }
 
 #[test]

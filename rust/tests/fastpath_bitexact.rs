@@ -16,7 +16,8 @@
 
 use fp_givens::fp::FpFormat;
 use fp_givens::qrd::{
-    triangularize_tile, triangularize_ws, BatchWorkspace, QrdEngine, QrdWorkspace,
+    triangularize_blocked_ws, triangularize_tile, triangularize_ws, BatchWorkspace, QrdEngine,
+    QrdWorkspace,
 };
 use fp_givens::rotator::{FamilyOps, HubRotator, IeeeRotator, RotatorConfig, Val};
 use fp_givens::util::prop;
@@ -40,6 +41,26 @@ fn edge_pool() -> Vec<f64> {
         -3.0,
         4.0,
         0.15625,
+    ]
+}
+
+/// Edge bit patterns for the u32 wire-format tests (the bit-level
+/// analogue of [`edge_pool`]): zeros of both signs, extreme exponents,
+/// and a subnormal. One shared list so every wire-level suite exercises
+/// the same corners.
+fn wire_specials() -> Vec<u32> {
+    vec![
+        0x0000_0000, // +0
+        0x8000_0000, // −0
+        0x3f80_0000, // 1.0
+        0xbf80_0000, // −1.0
+        0x7f7f_ffff, // max finite
+        0xff7f_ffff, // −max finite
+        0x0080_0000, // min normal
+        0x8080_0000, // −min normal
+        0x0000_0001, // subnormal (treated as zero)
+        0x7f00_0000,
+        0x0100_0000,
     ]
 }
 
@@ -233,6 +254,124 @@ fn prop_hub_tile_path_is_bit_identical_to_reference() {
     }
 }
 
+/// Load one matrix's `[A | I]` into a (fresh) workspace buffer.
+fn load_augmented<F: FamilyOps>(
+    ws: &mut QrdWorkspace<F::Scalar>,
+    rot: &F,
+    m: usize,
+    scalars: &[F::Scalar],
+) {
+    let width = 2 * m;
+    let buf = ws.prepare(m, width);
+    for i in 0..m {
+        for j in 0..m {
+            buf[i * width + j] = scalars[i * m + j];
+        }
+        buf[i * width + m + i] = rot.one();
+    }
+}
+
+/// The blocked-schedule reference-oracle property: for one seeded
+/// matrix, the blocked wave execution must be **byte-identical** to the
+/// flat fast path — and, where the reference path is cheap enough
+/// (m ≤ 8), both must be byte-identical to the pre-refactor reference
+/// triangularization. The blocked schedule is a pure reordering of
+/// commuting rotations; this is the test that proves it on the real
+/// datapaths.
+fn check_blocked_vs_flat<F: FamilyOps>(
+    rot: &F,
+    eng: &QrdEngine,
+    flat_ws: &mut QrdWorkspace<F::Scalar>,
+    blk_ws: &mut QrdWorkspace<F::Scalar>,
+    wrap: impl Fn(F::Scalar) -> Val,
+    m: usize,
+    rng: &mut Rng,
+) {
+    let fmt = rot.cfg().fmt;
+    let pool = edge_pool();
+    let width = 2 * m;
+    let scalars: Vec<F::Scalar> =
+        (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
+    load_augmented(flat_ws, rot, m, &scalars);
+    load_augmented(blk_ws, rot, m, &scalars);
+    triangularize_ws(rot, flat_ws);
+    triangularize_blocked_ws(rot, blk_ws);
+    for i in 0..m {
+        for j in 0..width {
+            assert_eq!(
+                rot.to_bits(blk_ws.row(i)[j]),
+                rot.to_bits(flat_ws.row(i)[j]),
+                "{} m={m} ({i},{j}): blocked vs flat",
+                eng.rot.cfg.label()
+            );
+        }
+    }
+    if m <= 8 {
+        // anchor the chain to the pre-refactor reference path where it
+        // is affordable; larger m inherit the anchor transitively (the
+        // flat path has no m-dependent branches)
+        let mut rows: Vec<Vec<Val>> = (0..m)
+            .map(|i| {
+                let mut row: Vec<Val> = (0..m).map(|j| wrap(scalars[i * m + j])).collect();
+                row.extend((0..m).map(|j| if i == j { eng.rot.one() } else { eng.rot.zero() }));
+                row
+            })
+            .collect();
+        rows = eng.triangularize(rows, m);
+        for i in 0..m {
+            for j in 0..width {
+                assert_eq!(
+                    rot.to_bits(flat_ws.row(i)[j]),
+                    rows[i][j].to_bits(fmt),
+                    "{} m={m} ({i},{j}): flat vs reference",
+                    eng.rot.cfg.label()
+                );
+            }
+        }
+    }
+}
+
+/// Satellite suite: seeded generator sweeping
+/// m ∈ {2, 3, 5, 8, 16, 32} × HALF/SINGLE/DOUBLE × IEEE/HUB, asserting
+/// byte-identity of the blocked wave schedule against the flat fast
+/// path (and the reference path for the affordable sizes). Workspaces
+/// are reused across sizes, so the wave cache's m-invalidations are
+/// exercised too.
+#[test]
+fn prop_blocked_schedule_is_bit_identical_across_m_formats_families() {
+    let m_sweep = [2usize, 3, 5, 8, 16, 32];
+    for cfg in ieee_configs() {
+        let rot = IeeeRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        let mut flat_ws = QrdWorkspace::new();
+        let mut blk_ws = QrdWorkspace::new();
+        let mut rng = Rng::new(0xB10C_0000 ^ cfg.n as u64);
+        for &m in &m_sweep {
+            let cases = if m <= 8 { 4 } else { 1 };
+            for _ in 0..cases {
+                check_blocked_vs_flat(
+                    &rot, &eng, &mut flat_ws, &mut blk_ws, Val::Ieee, m, &mut rng,
+                );
+            }
+        }
+    }
+    for cfg in hub_configs() {
+        let rot = HubRotator::new(cfg);
+        let eng = QrdEngine::new(cfg);
+        let mut flat_ws = QrdWorkspace::new();
+        let mut blk_ws = QrdWorkspace::new();
+        let mut rng = Rng::new(0xB10C_1000 ^ cfg.n as u64);
+        for &m in &m_sweep {
+            let cases = if m <= 8 { 4 } else { 1 };
+            for _ in 0..cases {
+                check_blocked_vs_flat(
+                    &rot, &eng, &mut flat_ws, &mut blk_ws, Val::Hub, m, &mut rng,
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn decompose_matches_decompose_reference_exactly() {
     // the f64 API must decode the very same bits on both paths
@@ -259,21 +398,7 @@ fn bit_level_serving_path_matches_reference_on_edge_patterns() {
     use fp_givens::coordinator::NativeEngine;
     let eng = NativeEngine::flagship();
 
-    // hand-picked bit patterns: zeros, negative zeros, max-exponent
-    // words, minimum-exponent words, identity-looking rows
-    let specials: Vec<u32> = vec![
-        0x0000_0000, // +0
-        0x8000_0000, // −0
-        0x3f80_0000, // 1.0
-        0xbf80_0000, // −1.0
-        0x7f7f_ffff, // max finite
-        0xff7f_ffff, // −max finite
-        0x0080_0000, // min normal
-        0x8080_0000, // −min normal
-        0x0000_0001, // subnormal (treated as zero)
-        0x7f00_0000,
-        0x0100_0000,
-    ];
+    let specials = wire_specials();
     let mut rng = Rng::new(9);
     for case in 0..400 {
         let a: [u32; 16] = std::array::from_fn(|_| {
@@ -302,25 +427,9 @@ fn interleaved_wire_path_matches_reference_across_tile_sizes() {
     // on the 4×4 u32 wire format the service speaks
     let engines = vec![
         NativeEngine::flagship(),
-        NativeEngine {
-            eng: QrdEngine::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23)),
-            threads: 1,
-            tile: NativeEngine::DEFAULT_TILE,
-        },
+        NativeEngine::with_engine(QrdEngine::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23))),
     ];
-    let specials: Vec<u32> = vec![
-        0x0000_0000, // +0
-        0x8000_0000, // −0
-        0x3f80_0000, // 1.0
-        0xbf80_0000, // −1.0
-        0x7f7f_ffff, // max finite
-        0xff7f_ffff, // −max finite
-        0x0080_0000, // min normal
-        0x8080_0000, // −min normal
-        0x0000_0001, // subnormal (treated as zero)
-        0x7f00_0000,
-        0x0100_0000,
-    ];
+    let specials = wire_specials();
     for base in engines {
         let mut rng = Rng::new(77 + base.tile as u64);
         // edge-heavy batch: random matrices, special-laden matrices, a
@@ -342,17 +451,72 @@ fn interleaved_wire_path_matches_reference_across_tile_sizes() {
             mats.push([w; 16]);
         }
         let want: Vec<[u32; 32]> = mats.iter().map(|m| base.qrd_bits_reference(m)).collect();
+        let vecs: Vec<Vec<u32>> = mats.iter().map(|a| a.to_vec()).collect();
         // every tile size must reproduce the reference bits for every
         // matrix — 73 matrices ⇒ tiles 2/3/16/64 all hit a partial tail
         for tile in [1usize, 2, 3, 4, 16, 64, 128] {
-            let eng = NativeEngine {
-                eng: base.eng.clone(),
-                threads: 1,
-                tile,
-            };
-            let got = eng.run(&mats).unwrap();
+            let eng = NativeEngine::with_engine(base.eng.clone()).with_tile(tile);
+            let got = eng.run(4, &vecs).unwrap();
             for (k, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert_eq!(g, w, "tile={tile} matrix {k} [{}]", eng.eng.rot.cfg.label());
+            }
+        }
+    }
+}
+
+/// The acceptance-criterion test: the m×m wire path (`NativeEngine::run`
+/// on wire format v2) must be bit-identical to `qrd_bits_reference_m`
+/// for every m the service bins carry — across tile sizes (1/4/16, each
+/// hitting a partial tail on a 17-matrix batch) and both schedules
+/// (flat and blocked waves).
+#[test]
+fn variable_m_wire_path_matches_reference_across_m_tiles_and_schedules() {
+    use fp_givens::coordinator::{BatchEngine, NativeEngine};
+
+    let specials = wire_specials();
+    let bases = vec![
+        NativeEngine::flagship(),
+        NativeEngine::with_engine(QrdEngine::new(RotatorConfig::ieee(FpFormat::SINGLE, 26, 23))),
+    ];
+    for base in bases {
+        for &m in &[2usize, 3, 5, 8, 16, 32] {
+            let mut rng = Rng::new(0x5EED_0000 + m as u64);
+            // 17 matrices: not a multiple of 4 or 16, so both tile
+            // sizes exercise a partial tail; fewer for the big sizes
+            // (the reference path is the slow part)
+            let nb = if m <= 8 { 17 } else { 5 };
+            let mats: Vec<Vec<u32>> = (0..nb)
+                .map(|_| {
+                    (0..m * m)
+                        .map(|_| {
+                            if rng.below(4) == 0 {
+                                specials[rng.below(specials.len() as u64) as usize]
+                            } else {
+                                let s = 2f32.powf(rng.range(-20.0, 20.0) as f32);
+                                (rng.range(-1.0, 1.0) as f32 * s).to_bits()
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let want: Vec<Vec<u32>> =
+                mats.iter().map(|a| base.qrd_bits_reference_m(m, a)).collect();
+            for tile in [1usize, 4, 16] {
+                for blocked_min in [1usize, usize::MAX] {
+                    let eng = NativeEngine::with_engine(base.eng.clone())
+                        .with_tile(tile)
+                        .with_blocked(blocked_min);
+                    let got = eng.run(m, &mats).unwrap();
+                    assert_eq!(got.len(), want.len());
+                    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g,
+                            w,
+                            "m={m} tile={tile} blocked_min={blocked_min} matrix {k} [{}]",
+                            eng.eng.rot.cfg.label()
+                        );
+                    }
+                }
             }
         }
     }

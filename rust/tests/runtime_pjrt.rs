@@ -8,12 +8,12 @@ use fp_givens::util::rng::Rng;
 
 const ARTIFACT: &str = "artifacts/model.hlo.txt";
 
-fn random_mats(n: usize, seed: u64) -> Vec<[u32; 16]> {
+fn random_mats(n: usize, seed: u64) -> Vec<Vec<u32>> {
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|_| {
             let scale = 2f32.powf(rng.range(-5.0, 5.0) as f32);
-            std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
+            (0..16).map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits()).collect()
         })
         .collect()
 }
@@ -27,11 +27,15 @@ fn pjrt_artifact_matches_native_engine_bit_for_bit() {
     let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("load artifact");
     let native = NativeEngine::flagship();
     let mats = random_mats(64, 99);
-    let got = pjrt.run(&mats).expect("pjrt batch");
-    let want = native.run(&mats).expect("native batch");
+    let got = pjrt.run(4, &mats).expect("pjrt batch");
+    let want = native.run(4, &mats).expect("native batch");
     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
         assert_eq!(g, w, "matrix {i} differs between PJRT and native");
     }
+    // the artifact is shape-locked: every other m is a recoverable
+    // error, not a panic or a truncation
+    assert!(pjrt.run(3, &random_mats(2, 7).iter().map(|a| a[..9].to_vec()).collect::<Vec<_>>())
+        .is_err());
 }
 
 #[test]
@@ -44,9 +48,9 @@ fn pjrt_short_batches_pad_correctly() {
     let native = NativeEngine::flagship();
     for n in [1usize, 7, 255] {
         let mats = random_mats(n, n as u64);
-        let got = pjrt.run(&mats).expect("pjrt batch");
+        let got = pjrt.run(4, &mats).expect("pjrt batch");
         assert_eq!(got.len(), n);
-        let want = native.run(&mats).expect("native batch");
+        let want = native.run(4, &mats).expect("native batch");
         assert_eq!(got, want, "batch size {n}");
     }
 }
