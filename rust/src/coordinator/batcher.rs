@@ -86,6 +86,11 @@ impl<T> Batcher<T> {
 pub struct KeyedBatcher<T> {
     rx: Receiver<T>,
     key: fn(&T) -> usize,
+    /// Optional true-arrival accessor: when set, deadline anchoring
+    /// uses the item's own timestamp (e.g. the instant it entered the
+    /// ingress channel) instead of its stash time, closing the ~2×
+    /// `max_wait_us` worst case for items drained late into a bin.
+    arrival: Option<fn(&T) -> Instant>,
     /// Per-key FIFO bins of (arrival sequence, arrival time, item).
     bins: BTreeMap<usize, VecDeque<(u64, Instant, T)>>,
     /// Monotone arrival counter (assigns each item its age).
@@ -105,14 +110,26 @@ impl<T> KeyedBatcher<T> {
     pub fn new(rx: Receiver<T>, key: fn(&T) -> usize, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         let stash_bound = policy.max_batch.max(1) * 4;
-        KeyedBatcher { rx, key, bins: BTreeMap::new(), seq: 0, stash_bound, policy }
+        KeyedBatcher { rx, key, arrival: None, bins: BTreeMap::new(), seq: 0, stash_bound, policy }
+    }
+
+    /// Anchor batching deadlines at each item's own arrival timestamp
+    /// (e.g. `Request::enq`) instead of the instant it was stashed into
+    /// a bin. Without this, an item drained late in another key's fill
+    /// window can wait up to ~2× `max_wait_us` before emission; with
+    /// it, per-item wait is bounded by the window measured from true
+    /// channel arrival.
+    pub fn with_arrival(mut self, arrival: fn(&T) -> Instant) -> Self {
+        self.arrival = Some(arrival);
+        self
     }
 
     fn stash(&mut self, t: T) {
         let k = (self.key)(&t);
         let seq = self.seq;
         self.seq += 1;
-        self.bins.entry(k).or_default().push_back((seq, Instant::now(), t));
+        let at = self.arrival.map(|f| f(&t)).unwrap_or_else(Instant::now);
+        self.bins.entry(k).or_default().push_back((seq, at, t));
     }
 
     /// Key of the bin whose front item has waited longest.
@@ -137,13 +154,12 @@ impl<T> KeyedBatcher<T> {
     /// returns an empty batch.
     ///
     /// The batching deadline is anchored at the batch's **oldest
-    /// item's stash time**, so a request that sat in a bin across an
-    /// earlier call is emitted without paying a second full window
-    /// from scratch. (The stash time of an item drained late in
-    /// another bin's fill window trails its true channel arrival by up
-    /// to one window, so worst-case formation latency is bounded by
-    /// ~2× `max_wait_us`, not 1× — an age accessor on `T` would close
-    /// that gap if the tail ever matters.)
+    /// item's arrival**: its stash time by default, or its own
+    /// timestamp when [`Self::with_arrival`] is set (which the service
+    /// wires to `Request::enq`). With an arrival accessor, per-item
+    /// formation latency is bounded by one `max_wait_us` window from
+    /// true channel arrival; without one, an item drained late in
+    /// another bin's fill window can pay up to ~2× the window.
     pub fn next_batch_with(&mut self, cap_of: impl Fn(usize) -> usize) -> Option<(usize, Vec<T>)> {
         if self.bins.values().all(|q| q.is_empty()) {
             // nothing stashed: block for the first item
@@ -379,6 +395,34 @@ mod tests {
         assert_eq!(b.drain(), vec![301, 401, 302]);
         assert_eq!(b.pending(), 0);
         assert!(b.next_batch_with(|_| usize::MAX).is_none());
+    }
+
+    #[test]
+    fn arrival_anchor_bounds_rare_key_wait_at_one_window() {
+        // regression for the documented ~2× max_wait tail: an item
+        // whose true arrival already predates a full window must be
+        // emitted immediately, not after a fresh stash-anchored window.
+        // The item carries its own arrival Instant; the channel stays
+        // open (a live producer), so only the deadline can end the fill.
+        let w = Duration::from_millis(200);
+        let (tx, rx) = channel::<(i32, Instant)>();
+        tx.send((3, Instant::now() - w)).unwrap();
+        let mut b = KeyedBatcher::new(
+            rx,
+            |t: &(i32, Instant)| t.0 as usize,
+            BatchPolicy { max_batch: 64, max_wait_us: w.as_micros() as u64 },
+        )
+        .with_arrival(|t: &(i32, Instant)| t.1);
+        let t0 = Instant::now();
+        let (k, batch) = b.next_batch_with(|_| usize::MAX).unwrap();
+        let waited = t0.elapsed();
+        assert_eq!(k, 3);
+        assert_eq!(batch.len(), 1);
+        // rare-bin wait ≤ max_wait + epsilon, measured from arrival:
+        // the item is already past its window, so formation must not
+        // wait a second one (stash-anchored code would block ~200 ms)
+        assert!(waited < w / 2, "expired-on-arrival item waited {waited:?}");
+        drop(tx);
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! Fault-injecting load generator for the TCP ingress (`repro loadgen`).
+//!
+//! Drives many concurrent connections of mixed-m traffic at a
+//! [`super::net::NetServer`] and — with `--chaos` — makes a fraction of
+//! them hostile: truncated frames, garbage bytes, mid-request
+//! disconnects, stalled mid-frame reads (slow-loris), and half-closes.
+//! Every connection keeps a client-side ledger; at the end the run
+//! fetches the server's [`super::net::StatsSnapshot`] over the wire
+//! and **reconciles**: the socket-boundary identity must hold exactly
+//! (accepted = responded + deadline_timeouts + peer_vanished, per m),
+//! `frames_malformed` must equal the number of malformed-traffic
+//! connections injected, every connection must be closed, and reliable
+//! (clean/half-close) connections must have received exactly one
+//! response per request. Any unaccounted request fails the run.
+//!
+//! Fault classes are deterministic per connection index (seeded), so a
+//! run is reproducible. The clean arm doubles as a correctness probe:
+//! a sample of its responses is checked bit-exact against the
+//! reference triangularization.
+
+use super::net::NetClient;
+use super::frame::{read_frame, Frame, FrameKind, ReadOutcome, STATUS_OK};
+use super::NativeEngine;
+use crate::util::bench::{merge_json, BenchResult};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Load-generator knobs (`repro loadgen`).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address.
+    pub addr: String,
+    /// Concurrent connections to drive, total.
+    pub conns: usize,
+    /// Client worker threads (each runs connections off a shared
+    /// counter, so at most this many connections are live at once).
+    pub threads: usize,
+    /// Requests per well-behaved connection.
+    pub requests_per_conn: usize,
+    /// Mixed-m traffic samples m uniformly in `[2, max_m]`.
+    pub max_m: usize,
+    /// Enable the five fault classes (off = every connection clean).
+    pub chaos: bool,
+    /// Seed for the deterministic per-connection behavior.
+    pub seed: u64,
+    /// Order the server to shut down after a passing reconciliation.
+    pub shutdown: bool,
+    /// Merge a `connections × throughput × p99` entry into this bench
+    /// JSON file (same schema as `BENCH_qrd.json`).
+    pub bench_out: Option<String>,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7290".into(),
+            conns: 1000,
+            threads: 32,
+            requests_per_conn: 8,
+            max_m: 8,
+            chaos: false,
+            seed: 42,
+            shutdown: false,
+            bench_out: None,
+        }
+    }
+}
+
+/// The five chaos classes plus the well-behaved baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Class {
+    /// Send requests, read every response, close cleanly.
+    Clean,
+    /// Send requests, half-close (FIN), drain all responses to EOF.
+    HalfClose,
+    /// Send requests, read about half, vanish abruptly mid-request.
+    Disconnect,
+    /// Send a prefix of a valid frame, then FIN.
+    Truncated,
+    /// Send bytes that are not a frame at all, then FIN.
+    Garbage,
+    /// Send a partial frame, then stall with the socket open.
+    SlowLoris,
+}
+
+const CLASSES: [Class; 6] = [
+    Class::Clean,
+    Class::HalfClose,
+    Class::Disconnect,
+    Class::Truncated,
+    Class::Garbage,
+    Class::SlowLoris,
+];
+
+impl Class {
+    fn label(self) -> &'static str {
+        match self {
+            Class::Clean => "clean",
+            Class::HalfClose => "half-close",
+            Class::Disconnect => "disconnect",
+            Class::Truncated => "truncated",
+            Class::Garbage => "garbage",
+            Class::SlowLoris => "slow-loris",
+        }
+    }
+
+    fn index(self) -> usize {
+        CLASSES.iter().position(|c| *c == self).expect("listed class")
+    }
+
+    /// Deterministic class mix: half the connections stay clean, the
+    /// rest spread across the fault classes.
+    fn pick(rng: &mut Rng, chaos: bool) -> Class {
+        if !chaos {
+            return Class::Clean;
+        }
+        match rng.below(100) {
+            0..=49 => Class::Clean,
+            50..=64 => Class::HalfClose,
+            65..=79 => Class::Disconnect,
+            80..=86 => Class::Truncated,
+            87..=93 => Class::Garbage,
+            _ => Class::SlowLoris,
+        }
+    }
+}
+
+/// One connection's client-side ledger.
+struct ConnLedger {
+    class: Class,
+    /// Requests fully written to the socket.
+    sent: u64,
+    /// Request responses read back (any status).
+    received: u64,
+    /// Requests written, by m (index = m).
+    sent_per_m: Vec<u64>,
+    /// Round-trip seconds for clean-connection responses.
+    latencies: Vec<f64>,
+    /// Contract breaches observed client-side.
+    violations: Vec<String>,
+    /// Did the fault injection actually reach the server (connect +
+    /// write succeeded)? Gates the malformed-frame reconciliation.
+    injected: bool,
+}
+
+impl ConnLedger {
+    fn new(class: Class, max_m: usize) -> ConnLedger {
+        ConnLedger {
+            class,
+            sent: 0,
+            received: 0,
+            sent_per_m: vec![0; max_m + 1],
+            latencies: Vec::new(),
+            violations: Vec::new(),
+            injected: false,
+        }
+    }
+}
+
+/// A random well-formed request payload: m in `[2, max_m]`, a few
+/// binades of magnitude (the same distribution `serve_with` drives).
+fn random_request(rng: &mut Rng, max_m: usize) -> (usize, Vec<u32>) {
+    let m = 2 + rng.below((max_m.max(2) - 1) as u64) as usize;
+    let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+    let a = (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits()).collect();
+    (m, a)
+}
+
+/// Read frames until EOF, a broken stream, or `limit` elapses.
+/// Returns the request responses seen and whether the limit fired
+/// (the server failed to end the conversation).
+fn drain_to_eof(stream: &mut TcpStream, limit: Duration) -> (Vec<Frame>, bool) {
+    let deadline = Instant::now() + limit;
+    let mut frames = Vec::new();
+    loop {
+        match read_frame(stream) {
+            Ok(ReadOutcome::Frame(f)) => frames.push(f),
+            Ok(ReadOutcome::Eof) => return (frames, false),
+            // an abrupt server-side close can surface as a reset
+            // instead of EOF — still a definite end
+            Err(_) => return (frames, false),
+            Ok(ReadOutcome::Idle) => {
+                if Instant::now() >= deadline {
+                    return (frames, true);
+                }
+            }
+        }
+    }
+}
+
+/// Clean and half-close connections: pipeline every request, then read
+/// exactly one response per request, in order.
+fn run_reliable(
+    addr: &str,
+    rng: &mut Rng,
+    cfg: &LoadgenConfig,
+    reference: &NativeEngine,
+    half_close: bool,
+    led: &mut ConnLedger,
+) {
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            led.violations.push(format!("connect failed: {e}"));
+            return;
+        }
+    };
+    let mut sent_at = Vec::with_capacity(cfg.requests_per_conn);
+    let mut spots = Vec::new();
+    for i in 0..cfg.requests_per_conn {
+        let (m, a) = random_request(rng, cfg.max_m);
+        let id = (i + 1) as u64;
+        if i % 33 == 0 && !half_close {
+            spots.push((id, m, a.clone()));
+        }
+        if let Err(e) = client.send_request(id, m as u32, &a) {
+            led.violations.push(format!("send {id} failed: {e}"));
+            return;
+        }
+        led.sent += 1;
+        led.sent_per_m[m] += 1;
+        sent_at.push(Instant::now());
+    }
+    led.injected = true;
+    if half_close {
+        // FIN our write side: the server must still answer everything
+        // already accepted, then close
+        let _ = client.stream().shutdown(Shutdown::Write);
+    }
+    for i in 0..cfg.requests_per_conn {
+        let id = (i + 1) as u64;
+        match client.read_frame() {
+            Ok(Some(f)) if f.kind == FrameKind::Response => {
+                led.received += 1;
+                if f.id != id {
+                    led.violations.push(format!("response {} arrived out of order (want {id})", f.id));
+                    return;
+                }
+                if !half_close {
+                    led.latencies.push(sent_at[i].elapsed().as_secs_f64());
+                }
+                if f.status == STATUS_OK {
+                    if let Some((_, m, a)) = spots.iter().find(|(sid, _, _)| *sid == id) {
+                        let want = reference.qrd_bits_reference_m(*m, a);
+                        if f.words().as_deref() != Some(&want[..]) {
+                            led.violations
+                                .push(format!("response {id} diverged from the reference bits"));
+                        }
+                    }
+                }
+            }
+            Ok(Some(f)) => {
+                led.violations.push(format!("unexpected frame kind {:?} for {id}", f.kind));
+                return;
+            }
+            Ok(None) => {
+                led.violations.push(format!(
+                    "server closed after {} of {} responses",
+                    led.received, cfg.requests_per_conn
+                ));
+                return;
+            }
+            Err(e) => {
+                led.violations.push(format!("broken stream at response {id}: {e}"));
+                return;
+            }
+        }
+    }
+    if half_close {
+        // after the last response the server must close its side too
+        let (extra, timed_out) = drain_to_eof(client.stream(), Duration::from_secs(30));
+        if !extra.is_empty() {
+            led.violations.push(format!("{} frames after the final response", extra.len()));
+        }
+        if timed_out {
+            led.violations.push("no EOF after a drained half-close".into());
+        }
+    }
+}
+
+/// Disconnect connections: pipeline everything, read about half, then
+/// vanish without closing properly (the peer-vanished injection — the
+/// server owes these requests nothing but an accounted drop).
+fn run_disconnect(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnLedger) {
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            led.violations.push(format!("connect failed: {e}"));
+            return;
+        }
+    };
+    for i in 0..cfg.requests_per_conn {
+        let (m, a) = random_request(rng, cfg.max_m);
+        if client.send_request((i + 1) as u64, m as u32, &a).is_err() {
+            // the server may close on us at any point; not a violation
+            // for this class
+            return;
+        }
+        led.sent += 1;
+        led.sent_per_m[m] += 1;
+    }
+    led.injected = true;
+    for _ in 0..cfg.requests_per_conn / 2 {
+        match client.read_frame() {
+            Ok(Some(_)) => led.received += 1,
+            _ => break,
+        }
+    }
+    // dropping the stream with responses still unread closes abruptly
+    // (typically a reset) — exactly the vanish being injected
+}
+
+/// Truncated / garbage / slow-loris connections: deliver exactly one
+/// malformed frame and verify the server answers with an error (never
+/// an ok response) and definitely closes the connection.
+fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnLedger) {
+    let mut stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(e) => {
+            led.violations.push(format!("connect failed: {e}"));
+            return;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(1)));
+    let fin = match led.class {
+        Class::Truncated => {
+            // every truncation point of a valid frame is fair game
+            let (m, a) = random_request(rng, cfg.max_m);
+            let full = Frame::request(1, m as u32, &a).encode();
+            let cut = 1 + rng.below((full.len() - 1) as u64) as usize;
+            if stream.write_all(&full[..cut]).is_err() {
+                return;
+            }
+            true
+        }
+        Class::Garbage => {
+            let mut junk = [0u8; 64];
+            for b in junk.iter_mut() {
+                *b = rng.next_u64() as u8;
+            }
+            junk[0] = 0; // definitely not the magic
+            if stream.write_all(&junk).is_err() {
+                return;
+            }
+            true
+        }
+        Class::SlowLoris => {
+            // a partial frame, then silence with the socket open: the
+            // server's read timeout must cut us off
+            let (m, a) = random_request(rng, cfg.max_m);
+            let full = Frame::request(1, m as u32, &a).encode();
+            let cut = 1 + rng.below((full.len() - 1) as u64) as usize;
+            if stream.write_all(&full[..cut]).is_err() {
+                return;
+            }
+            false
+        }
+        _ => unreachable!("reliable classes handled elsewhere"),
+    };
+    led.injected = true;
+    if fin {
+        let _ = stream.shutdown(Shutdown::Write);
+    }
+    let (frames, timed_out) = drain_to_eof(&mut stream, Duration::from_secs(30));
+    if timed_out {
+        led.violations
+            .push(format!("{}: server never closed a malformed connection", led.class.label()));
+    }
+    for f in frames {
+        if f.kind == FrameKind::Response && f.status == STATUS_OK {
+            led.violations
+                .push(format!("{}: ok response to a malformed frame", led.class.label()));
+        }
+    }
+}
+
+fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLedger {
+    // per-connection deterministic stream: class and payloads depend
+    // only on (seed, idx)
+    let mut rng = Rng::new(cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let class = Class::pick(&mut rng, cfg.chaos);
+    let mut led = ConnLedger::new(class, cfg.max_m);
+    match class {
+        Class::Clean => run_reliable(&cfg.addr, &mut rng, cfg, reference, false, &mut led),
+        Class::HalfClose => run_reliable(&cfg.addr, &mut rng, cfg, reference, true, &mut led),
+        Class::Disconnect => run_disconnect(&cfg.addr, &mut rng, cfg, &mut led),
+        Class::Truncated | Class::Garbage | Class::SlowLoris => {
+            run_malformed(&cfg.addr, &mut rng, cfg, &mut led)
+        }
+    }
+    led
+}
+
+/// Drive the configured load, reconcile against the server's counters,
+/// and fail on any unaccounted request or client-side contract breach.
+pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.conns > 0, "--conns must be at least 1");
+    anyhow::ensure!(cfg.max_m >= 2, "--max-m must be at least 2");
+    // wait for the server to come up (CI starts it in the background)
+    let probe_deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match TcpStream::connect(&cfg.addr) {
+            Ok(_) => break,
+            Err(e) => {
+                anyhow::ensure!(
+                    Instant::now() < probe_deadline,
+                    "no server at {} within 10 s: {e}",
+                    cfg.addr
+                );
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+    let reference = NativeEngine::flagship();
+    let next = AtomicUsize::new(0);
+    let ledgers: Mutex<Vec<ConnLedger>> = Mutex::new(Vec::with_capacity(cfg.conns));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..cfg.threads.max(1).min(cfg.conns) {
+            s.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= cfg.conns {
+                    return;
+                }
+                let led = run_conn(idx, cfg, &reference);
+                ledgers.lock().unwrap_or_else(|p| p.into_inner()).push(led);
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let ledgers = ledgers.into_inner().unwrap_or_else(|p| p.into_inner());
+
+    // ---- client-side aggregation --------------------------------
+    let mut per_class = [(0u64, 0u64, 0u64, 0u64); CLASSES.len()]; // conns, sent, received, violations
+    let mut reliable_sent_per_m = vec![0u64; cfg.max_m + 1];
+    let mut disconnect_sent_per_m = vec![0u64; cfg.max_m + 1];
+    let mut malformed_injected = 0u64;
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+    for led in &ledgers {
+        let row = &mut per_class[led.class.index()];
+        row.0 += 1;
+        row.1 += led.sent;
+        row.2 += led.received;
+        row.3 += led.violations.len() as u64;
+        for v in &led.violations {
+            if failures.len() < 20 {
+                failures.push(format!("[{}] {v}", led.class.label()));
+            }
+        }
+        match led.class {
+            Class::Clean | Class::HalfClose => {
+                for (m, n) in led.sent_per_m.iter().enumerate() {
+                    reliable_sent_per_m[m] += n;
+                }
+            }
+            Class::Disconnect => {
+                for (m, n) in led.sent_per_m.iter().enumerate() {
+                    disconnect_sent_per_m[m] += n;
+                }
+            }
+            _ => {
+                if led.injected {
+                    malformed_injected += 1;
+                }
+            }
+        }
+        latencies.extend_from_slice(&led.latencies);
+    }
+    let received_total: u64 = per_class.iter().map(|r| r.2).sum();
+
+    // ---- server-side reconciliation -----------------------------
+    // poll the counters over the wire until every connection from the
+    // run has torn down (ours is the single open one) and the identity
+    // has settled, then hold the server to it
+    let mut sc = NetClient::connect(&cfg.addr)?;
+    let poll_deadline = Instant::now() + Duration::from_secs(30);
+    let mut stat_id = 1u64;
+    let snap = loop {
+        let s = sc.stats(stat_id)?;
+        stat_id += 1;
+        let settled = s.conn_opened == s.conn_closed + 1 && s.reconciles();
+        if settled || Instant::now() >= poll_deadline {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    };
+    if !snap.reconciles() {
+        failures.push(format!(
+            "identity broken: accepted {} != responded {} + timeouts {} + vanished {} \
+             ({} unaccounted; per-m rows {:?})",
+            snap.accepted,
+            snap.responded,
+            snap.deadline_timeouts,
+            snap.peer_vanished,
+            snap.unaccounted(),
+            snap.per_m,
+        ));
+    }
+    if snap.conn_opened != snap.conn_closed + 1 {
+        failures.push(format!(
+            "connection leak: {} opened, {} closed (want all but this stats connection down)",
+            snap.conn_opened, snap.conn_closed
+        ));
+    }
+    if snap.frames_malformed != malformed_injected {
+        failures.push(format!(
+            "malformed-frame ledger: server counted {}, clients injected {}",
+            snap.frames_malformed, malformed_injected
+        ));
+    }
+    // per-m bounds: the server must have accepted everything the
+    // reliable classes sent, and nothing beyond what was ever sent
+    for m in 0..=cfg.max_m {
+        let acc = snap
+            .per_m
+            .iter()
+            .find(|(mm, ..)| *mm == m as u64)
+            .map(|(_, a, ..)| *a)
+            .unwrap_or(0);
+        let lo = reliable_sent_per_m[m];
+        let hi = lo + disconnect_sent_per_m[m];
+        if acc < lo || acc > hi {
+            failures.push(format!(
+                "m={m}: server accepted {acc}, outside the sent bounds [{lo}, {hi}]"
+            ));
+        }
+    }
+    if received_total > snap.responded {
+        failures.push(format!(
+            "clients read {} responses but the server only wrote {}",
+            received_total, snap.responded
+        ));
+    }
+
+    // ---- report -------------------------------------------------
+    println!("loadgen           : {} conns × {} reqs, m ∈ [2, {}], chaos {}", cfg.conns,
+        cfg.requests_per_conn, cfg.max_m, if cfg.chaos { "on" } else { "off" });
+    println!("wall time         : {wall:.3} s");
+    for (i, c) in CLASSES.iter().enumerate() {
+        let (n, sent, recv, viol) = per_class[i];
+        if n > 0 {
+            println!(
+                "  {:<11}: {n:>5} conns, {sent:>6} sent, {recv:>6} received{}",
+                c.label(),
+                if viol == 0 { String::new() } else { format!(", {viol} VIOLATIONS") }
+            );
+        }
+    }
+    println!(
+        "server ledger     : {} accepted = {} responded + {} timeouts + {} vanished ({})",
+        snap.accepted,
+        snap.responded,
+        snap.deadline_timeouts,
+        snap.peer_vanished,
+        if snap.reconciles() { "exact" } else { "BROKEN" }
+    );
+    println!(
+        "connections       : {} opened, {} closed; {} malformed frames",
+        snap.conn_opened, snap.conn_closed, snap.frames_malformed
+    );
+    let throughput = snap.responded as f64 / wall.max(1e-9);
+    let p99 = if latencies.is_empty() {
+        0.0
+    } else {
+        let mut l = latencies.clone();
+        l.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        l[((0.99 * l.len() as f64).ceil() as usize).clamp(1, l.len()) - 1]
+    };
+    println!("throughput        : {throughput:.0} responses/s");
+    if !latencies.is_empty() {
+        println!("clean rtt p99     : {:.1} ms over {} samples", p99 * 1e3, latencies.len());
+    }
+
+    // ---- bench entry (connections × throughput × p99) -----------
+    if let Some(path) = &cfg.bench_out {
+        let tag = format!(
+            "net_loadgen/conns{} chaos={}",
+            cfg.conns,
+            if cfg.chaos { "on" } else { "off" }
+        );
+        let mut entries = vec![BenchResult::from_wall(
+            &format!("{tag} throughput"),
+            snap.responded as f64,
+            wall,
+        )];
+        if p99 > 0.0 {
+            entries.push(BenchResult::from_wall(&format!("{tag} p99"), 1.0, p99));
+        }
+        merge_json(path, &entries)?;
+        println!("bench entries     : merged into {path}");
+    }
+
+    // ---- optional remote shutdown -------------------------------
+    if cfg.shutdown {
+        sc.shutdown_server(stat_id)?;
+        println!("server shutdown   : ordered and acked");
+    }
+
+    if !failures.is_empty() {
+        anyhow::bail!(
+            "loadgen reconciliation failed ({} problems):\n  {}",
+            failures.len(),
+            failures.join("\n  ")
+        );
+    }
+    Ok(())
+}

@@ -130,6 +130,19 @@ pub struct Metrics {
     /// Batches executed per matrix size.
     m_batches: Vec<AtomicU64>,
     latency: LatencyHistogram,
+    // network-ingress lifecycle (coordinator::net) ------------------
+    conn_opened: AtomicU64,
+    conn_closed: AtomicU64,
+    frames_malformed: AtomicU64,
+    /// Requests accepted off a socket per matrix size.
+    net_accepted: Vec<AtomicU64>,
+    /// Responses (ok or error) written back to a peer per matrix size.
+    net_responded: Vec<AtomicU64>,
+    /// Deadline-timeout responses written per matrix size.
+    net_deadline_timeouts: Vec<AtomicU64>,
+    /// Accepted requests whose peer vanished before a response could be
+    /// written (deliberate, counted drops), per matrix size.
+    net_peer_vanished: Vec<AtomicU64>,
 }
 
 impl Default for Metrics {
@@ -160,6 +173,13 @@ impl Metrics {
             m_served: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
             m_batches: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
+            conn_opened: AtomicU64::new(0),
+            conn_closed: AtomicU64::new(0),
+            frames_malformed: AtomicU64::new(0),
+            net_accepted: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_responded: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_deadline_timeouts: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_peer_vanished: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -313,6 +333,123 @@ impl Metrics {
     pub fn latency(&self) -> &LatencyHistogram {
         &self.latency
     }
+
+    // network-ingress lifecycle ------------------------------------
+
+    /// Record an accepted TCP connection.
+    pub fn on_conn_opened(&self) {
+        self.conn_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a fully torn-down TCP connection (reader and writer both
+    /// done, socket shut).
+    pub fn on_conn_closed(&self) {
+        self.conn_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a malformed frame (bad magic/version/kind, oversize
+    /// payload, truncation, or a mid-frame stall) — each closes its
+    /// connection, so a peer contributes at most one per connection.
+    pub fn on_frame_malformed(&self) {
+        self.frames_malformed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request accepted off a socket for matrix size `m`.
+    /// From this point the connection owes the reconciliation identity
+    /// exactly one of: responded, deadline timeout, or peer vanished.
+    pub fn on_net_accepted(&self, m: usize) {
+        self.net_accepted[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a response (ok or error) written back to the peer.
+    pub fn on_net_responded(&self, m: usize) {
+        self.net_responded[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a deadline-timeout response written back to the peer.
+    pub fn on_deadline_timeout(&self, m: usize) {
+        self.net_deadline_timeouts[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an accepted request dropped because its peer vanished
+    /// (write failed or the connection died with the request in
+    /// flight) — the deliberate, counted drop class.
+    pub fn on_peer_vanished(&self, m: usize) {
+        self.net_peer_vanished[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Connections accepted.
+    pub fn conn_opened(&self) -> u64 {
+        self.conn_opened.load(Ordering::Relaxed)
+    }
+
+    /// Connections fully torn down.
+    pub fn conn_closed(&self) -> u64 {
+        self.conn_closed.load(Ordering::Relaxed)
+    }
+
+    /// Malformed frames observed.
+    pub fn frames_malformed(&self) -> u64 {
+        self.frames_malformed.load(Ordering::Relaxed)
+    }
+
+    /// Socket requests accepted for matrix size `m`.
+    pub fn net_accepted(&self, m: usize) -> u64 {
+        self.net_accepted[Self::m_bin(m)].load(Ordering::Relaxed)
+    }
+
+    /// Socket responses written for matrix size `m`.
+    pub fn net_responded(&self, m: usize) -> u64 {
+        self.net_responded[Self::m_bin(m)].load(Ordering::Relaxed)
+    }
+
+    /// Socket requests accepted, all sizes.
+    pub fn net_accepted_total(&self) -> u64 {
+        self.net_accepted.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Socket responses written, all sizes.
+    pub fn net_responded_total(&self) -> u64 {
+        self.net_responded.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Deadline-timeout responses written, all sizes.
+    pub fn deadline_timeouts(&self) -> u64 {
+        self.net_deadline_timeouts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Accepted requests dropped on a vanished peer, all sizes.
+    pub fn peer_vanished(&self) -> u64 {
+        self.net_peer_vanished.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Non-empty per-m network bins as `(m, accepted, responded,
+    /// deadline_timeouts, peer_vanished)` rows — the socket-boundary
+    /// reconciliation view.
+    pub fn per_m_net_bins(&self) -> Vec<(usize, u64, u64, u64, u64)> {
+        (0..M_BINS)
+            .filter_map(|m| {
+                let acc = self.net_accepted[m].load(Ordering::Relaxed);
+                let rsp = self.net_responded[m].load(Ordering::Relaxed);
+                let ddl = self.net_deadline_timeouts[m].load(Ordering::Relaxed);
+                let van = self.net_peer_vanished[m].load(Ordering::Relaxed);
+                (acc != 0 || rsp != 0 || ddl != 0 || van != 0).then_some((m, acc, rsp, ddl, van))
+            })
+            .collect()
+    }
+
+    /// The socket-boundary "no dropped requests" identity, checked per
+    /// m bin: `accepted == responded + deadline_timeouts +
+    /// peer_vanished` in every bin. Only meaningful once traffic has
+    /// quiesced (in-flight requests make `accepted` lead).
+    pub fn net_reconciles(&self) -> bool {
+        (0..M_BINS).all(|m| {
+            self.net_accepted[m].load(Ordering::Relaxed)
+                == self.net_responded[m].load(Ordering::Relaxed)
+                    + self.net_deadline_timeouts[m].load(Ordering::Relaxed)
+                    + self.net_peer_vanished[m].load(Ordering::Relaxed)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -381,6 +518,45 @@ mod tests {
         m.on_m_request(10_000);
         assert_eq!(m.m_requests(10_000), 1);
         assert_eq!(m.m_requests(M_BINS - 1), 1);
+    }
+
+    #[test]
+    fn net_lifecycle_counters_and_reconciliation() {
+        let m = Metrics::new(2);
+        assert!(m.net_reconciles(), "empty metrics reconcile trivially");
+        m.on_conn_opened();
+        m.on_conn_opened();
+        m.on_conn_closed();
+        m.on_frame_malformed();
+        assert_eq!(m.conn_opened(), 2);
+        assert_eq!(m.conn_closed(), 1);
+        assert_eq!(m.frames_malformed(), 1);
+        // three accepted at m=4: one served, one timed out, one vanished
+        m.on_net_accepted(4);
+        m.on_net_accepted(4);
+        m.on_net_accepted(4);
+        m.on_net_responded(4);
+        assert!(!m.net_reconciles(), "two requests still unaccounted");
+        m.on_deadline_timeout(4);
+        m.on_peer_vanished(4);
+        assert!(m.net_reconciles());
+        assert_eq!(m.net_accepted(4), 3);
+        assert_eq!(m.net_responded(4), 1);
+        assert_eq!(m.net_accepted_total(), 3);
+        assert_eq!(m.net_responded_total(), 1);
+        assert_eq!(m.deadline_timeouts(), 1);
+        assert_eq!(m.peer_vanished(), 1);
+        assert_eq!(m.per_m_net_bins(), vec![(4, 3, 1, 1, 1)]);
+        // identity is per-bin: totals matching across different bins
+        // must NOT reconcile
+        m.on_net_accepted(8);
+        m.on_net_responded(16);
+        assert!(!m.net_reconciles());
+        assert_eq!(m.per_m_net_bins().len(), 3);
+        // oversized bins clamp instead of panicking
+        m.on_net_accepted(10_000);
+        m.on_net_responded(10_000);
+        assert_eq!(m.net_accepted(M_BINS - 1), 1);
     }
 
     #[test]

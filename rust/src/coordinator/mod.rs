@@ -28,19 +28,25 @@
 
 mod batcher;
 mod engine;
+mod frame;
+mod loadgen;
 mod metrics;
+mod net;
 mod service;
 mod shard;
 
 pub use batcher::{BatchPolicy, Batcher, KeyedBatcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
+pub use frame::{read_frame, Frame, FrameError, FrameKind, ReadOutcome};
+pub use loadgen::{run_loadgen, LoadgenConfig};
 pub use metrics::{LatencyHistogram, Metrics};
+pub use net::{NetClient, NetConfig, NetServer, StatsSnapshot};
 pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy};
 pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
 use crate::util::rng::Rng;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Knobs for [`serve_with`] (the `repro serve` command).
 #[derive(Debug, Clone)]
@@ -129,10 +135,11 @@ pub fn serve_synthetic_with(
     })
 }
 
-/// Drive a synthetic client load through the configured pool topology
-/// and print a throughput/latency report (the `repro serve` command and
-/// the streaming_service example both land here).
-pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
+/// Build the batching service a [`ServeConfig`] describes — engine
+/// factories, pool topology, and the m gate — and return it with the
+/// engine's display name. Shared by the synthetic driver
+/// ([`serve_with`]) and the TCP frontend ([`serve_listen`]).
+fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
     let workers = if cfg.workers == 0 { par::threads() } else { cfg.workers };
     let policy = BatchPolicy { max_batch: cfg.max_batch, max_wait_us: 200 };
     let restart = RestartPolicy { max_restarts: cfg.max_restarts };
@@ -200,6 +207,14 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
     } else {
         svc.with_max_m(cfg.max_m)
     };
+    Ok((svc, name))
+}
+
+/// Drive a synthetic client load through the configured pool topology
+/// and print a throughput/latency report (the `repro serve` command and
+/// the streaming_service example both land here).
+pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
+    let (svc, name) = build_service(cfg)?;
 
     // synthetic load: deterministic random matrices, a few binades,
     // mixed m ∈ [2, max_m] (the PJRT artifact is shape-locked to 4×4,
@@ -329,5 +344,74 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
     if spot_failures > 0 {
         anyhow::bail!("{spot_failures} of {spot_checked} spot checks diverged from the reference");
     }
+    Ok(())
+}
+
+/// Serve the coordinator over TCP (`repro serve --listen ADDR`): bind
+/// the [`NetServer`] frontend on the configured pool, block until a
+/// client sends a shutdown frame (or the process is killed), then
+/// drain, print the socket-boundary ledger, and hold the run to the
+/// lifecycle invariants — the per-m identity
+/// `accepted = responded + deadline_timeouts + peer_vanished` and
+/// `conn_opened == conn_closed` both must hold exactly at exit, so a
+/// chaos run that leaks even one request fails the server process too.
+pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::Result<()> {
+    let (svc, name) = build_service(cfg)?;
+    let server = net::NetServer::bind(listen, svc, net)?;
+    println!("engine            : {name}");
+    println!(
+        "topology          : {}",
+        if cfg.sharded { "sharded ingress" } else { "shared-lock batcher" }
+    );
+    println!("listening         : {}", server.local_addr());
+    println!(
+        "transport         : window {} in-flight/conn, deadline {} ms, idle cutoff {} ms",
+        net.window,
+        net.deadline.as_millis(),
+        net.read_timeout.as_millis()
+    );
+    server.wait_shutdown(Duration::from_millis(50));
+    let m = server.shutdown();
+    println!(
+        "connections       : {} opened, {} closed; {} malformed frames",
+        m.conn_opened(),
+        m.conn_closed(),
+        m.frames_malformed()
+    );
+    println!(
+        "request ledger    : {} accepted = {} responded + {} timeouts + {} vanished",
+        m.net_accepted_total(),
+        m.net_responded_total(),
+        m.deadline_timeouts(),
+        m.peer_vanished()
+    );
+    for (bin_m, acc, rsp, ddl, van) in m.per_m_net_bins() {
+        println!(
+            "  m={bin_m:<3} net bin   : {acc} accepted, {rsp} responded, {ddl} timeouts, {van} vanished{}",
+            if acc == rsp + ddl + van { "" } else { "  ← UNACCOUNTED" }
+        );
+    }
+    let h = m.latency();
+    match (h.percentile_us(0.50), h.percentile_us(0.99)) {
+        (Some(p50), Some(p99)) => {
+            println!("service µs        : p50 {p50:.0}  p99 {p99:.0}  max {:.0}", h.max_us())
+        }
+        _ => println!("service µs        : (no completed requests)"),
+    }
+    anyhow::ensure!(
+        m.net_reconciles(),
+        "socket-boundary identity broken: {} accepted != {} responded + {} timeouts + {} vanished",
+        m.net_accepted_total(),
+        m.net_responded_total(),
+        m.deadline_timeouts(),
+        m.peer_vanished()
+    );
+    anyhow::ensure!(
+        m.conn_opened() == m.conn_closed(),
+        "connection leak: {} opened but {} closed",
+        m.conn_opened(),
+        m.conn_closed()
+    );
+    println!("lifecycle         : every request accounted, every connection closed");
     Ok(())
 }

@@ -1,0 +1,644 @@
+//! TCP ingress for the QRD service: wire format v2 frames over real
+//! sockets, with every connection-lifecycle failure a counted, handled
+//! path.
+//!
+//! One accepted connection gets a **reader/writer thread pair** joined
+//! by a bounded work channel — the per-connection in-flight window.
+//! The reader decodes frames and submits requests asynchronously; the
+//! writer waits each request out (against its arrival-stamped
+//! deadline) and streams responses back in FIFO order. When the window
+//! is full the reader's channel send blocks, which stops it reading
+//! from the socket: a slow or stalled client throttles *itself* (TCP
+//! backpressure) instead of growing an unbounded buffer server-side.
+//!
+//! The PR 3 "no dropped requests" invariant extends across the socket
+//! boundary as an accounting identity, kept per matrix size:
+//!
+//! ```text
+//! net_accepted == net_responded + deadline_timeouts + peer_vanished
+//! ```
+//!
+//! Every request read off a socket increments `net_accepted` and ends
+//! in exactly one bucket: a response written (ok or error), a
+//! deadline-timeout response written, or a counted drop because the
+//! peer vanished mid-flight. [`Metrics::net_reconciles`] checks the
+//! identity; the chaos load generator (`repro loadgen --chaos`) fails
+//! its run when it does not hold after quiescence.
+//!
+//! Malformed input (bad magic/version/kind, oversize, truncation, a
+//! mid-frame stall) bumps `frames_malformed`, earns the peer one error
+//! frame when it is still writable, and closes the connection; a
+//! transport fault (reset, broken pipe) just closes it. Neither can
+//! panic a server thread.
+
+use super::frame::{
+    read_frame, Frame, FrameError, FrameKind, ReadOutcome, STATUS_DEADLINE, STATUS_ERROR,
+};
+use super::metrics::Metrics;
+use super::service::{PendingResponse, QrdService, Response};
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Network-frontend knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Per-connection in-flight window: requests read off the socket
+    /// but not yet responded. A full window stops the reader (and so
+    /// the socket) — the backpressure bound.
+    pub window: usize,
+    /// Per-request deadline, stamped at socket arrival: a request not
+    /// served within it gets a `STATUS_DEADLINE` error response.
+    pub deadline: Duration,
+    /// Socket read timeout: bounds how long a slow-loris peer can hold
+    /// a reader mid-frame, and sets the idle poll tick for shutdown.
+    pub read_timeout: Duration,
+    /// Socket write timeout: bounds how long a stalled reader on the
+    /// peer side can hold the writer mid-response.
+    pub write_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            window: 64,
+            deadline: Duration::from_secs(2),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One unit handed from a connection's reader to its writer. The
+/// channel carrying these is bounded by [`NetConfig::window`].
+enum Work {
+    /// An accepted request in flight through the service.
+    Req { id: u64, m: usize, arrival: Instant, pending: PendingResponse },
+    /// A metrics-snapshot request.
+    Stats { id: u64 },
+    /// Acknowledge a shutdown order.
+    Ack { id: u64 },
+    /// Tell the peer its last frame was malformed, then hang up.
+    Fault { id: u64, reason: String },
+}
+
+/// A running TCP frontend: an acceptor thread plus a reader/writer
+/// pair per live connection, all draining into one [`QrdService`].
+pub struct NetServer {
+    local: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    svc: Arc<QrdService>,
+    metrics: Arc<Metrics>,
+}
+
+impl NetServer {
+    /// Bind and start serving. Port 0 picks a free port —
+    /// [`Self::local_addr`] reports the actual one.
+    pub fn bind<A: ToSocketAddrs>(addr: A, svc: QrdService, cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let metrics = svc.metrics();
+        let svc = Arc::new(svc);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (svc2, m2, sd2) = (svc.clone(), metrics.clone(), shutdown.clone());
+        let accept = std::thread::Builder::new()
+            .name("qrd-net-accept".into())
+            .spawn(move || {
+                let mut conns: Vec<JoinHandle<()>> = Vec::new();
+                for stream in listener.incoming() {
+                    // checked after each accept so the shutdown
+                    // self-connect wakes and ends this loop
+                    if sd2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = stream else { continue };
+                    m2.on_conn_opened();
+                    let (svc3, m3, sd3) = (svc2.clone(), m2.clone(), sd2.clone());
+                    let spawned = std::thread::Builder::new()
+                        .name("qrd-net-conn".into())
+                        .spawn(move || handle_conn(stream, svc3, m3, sd3, cfg));
+                    match spawned {
+                        Ok(h) => conns.push(h),
+                        // thread exhaustion: the stream is already
+                        // dropped (closed); balance the open count
+                        Err(_) => m2.on_conn_closed(),
+                    }
+                }
+                // graceful drain: joining every connection pair means
+                // every accepted request has hit one identity bucket
+                for h in conns {
+                    let _ = h.join();
+                }
+            })?;
+        Ok(NetServer { local, shutdown, accept: Some(accept), svc, metrics })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Shared metrics (same object the inner service updates).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Has a shutdown been ordered (via [`Self::shutdown`] or a
+    /// `Shutdown` frame from a client)?
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until a shutdown is ordered, polling every `poll`.
+    pub fn wait_shutdown(&self, poll: Duration) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(poll.max(Duration::from_millis(1)));
+        }
+    }
+
+    /// Graceful shutdown: stop accepting, drain every live connection
+    /// (each accepted request still gets its one response or counted
+    /// drop), then shut the inner service down. Returns the metrics so
+    /// callers can run the reconciliation check after quiescence.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // wake the acceptor out of its blocking accept; the woken
+        // iteration sees the flag and breaks before spawning anything
+        let _ = TcpStream::connect(self.local);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let metrics = self.metrics.clone();
+        // every connection thread has been joined through the acceptor,
+        // so this is the last reference and the pool can drain
+        if let Ok(svc) = Arc::try_unwrap(self.svc) {
+            svc.shutdown();
+        }
+        metrics
+    }
+}
+
+/// Build a [`PendingResponse`] that is already answered — for requests
+/// rejected at the socket layer (they still count as accepted, so the
+/// writer must still respond to keep the identity exact).
+fn immediate_error(m: usize, reason: &str) -> PendingResponse {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let _ = tx.send(Response {
+        m,
+        out: Vec::new(),
+        latency_us: 0.0,
+        error: Some(reason.to_string()),
+    });
+    PendingResponse::new(rx)
+}
+
+/// One connection: run the reader loop here, the writer in a sibling
+/// thread, and tear both down no matter how the peer behaves.
+fn handle_conn(
+    stream: TcpStream,
+    svc: Arc<QrdService>,
+    metrics: Arc<Metrics>,
+    shutdown: Arc<AtomicBool>,
+    cfg: NetConfig,
+) {
+    let _ = stream.set_nodelay(true);
+    // the read timeout turns a mid-frame stall into FrameError::Stalled
+    // and an idle wait into ReadOutcome::Idle (the shutdown poll tick)
+    let _ = stream.set_read_timeout(Some(cfg.read_timeout));
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            let _ = stream.shutdown(Shutdown::Both);
+            metrics.on_conn_closed();
+            return;
+        }
+    };
+    let _ = write_half.set_write_timeout(Some(cfg.write_timeout));
+    let (tx, rx) = sync_channel::<Work>(cfg.window.max(1));
+    let m2 = metrics.clone();
+    let deadline = cfg.deadline;
+    let writer = std::thread::Builder::new()
+        .name("qrd-net-writer".into())
+        .spawn(move || writer_loop(write_half, rx, &m2, deadline));
+    let mut read_half = stream;
+    reader_loop(&mut read_half, &tx, &svc, &metrics, &shutdown);
+    // closing the channel lets the writer drain the window, respond to
+    // everything in it, then exit — the half-close drain path
+    drop(tx);
+    if let Ok(w) = writer {
+        let _ = w.join();
+    }
+    let _ = read_half.shutdown(Shutdown::Both);
+    metrics.on_conn_closed();
+}
+
+/// Decode frames until the peer closes, breaks the stream, orders a
+/// shutdown, or the server shuts down. Every request frame is counted
+/// accepted before anything can fail, so the identity never leaks.
+fn reader_loop(
+    stream: &mut TcpStream,
+    tx: &SyncSender<Work>,
+    svc: &QrdService,
+    metrics: &Metrics,
+    shutdown: &AtomicBool,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match read_frame(stream) {
+            Ok(ReadOutcome::Frame(f)) => match f.kind {
+                FrameKind::Request => {
+                    let arrival = Instant::now();
+                    let m = f.m as usize;
+                    // a misaligned payload cannot even be viewed as
+                    // words; everything else (wrong length, bad m) is
+                    // the service's submit gate, which answers with an
+                    // immediate error Response itself
+                    let pending = match f.words() {
+                        Some(words) => svc.submit_async_m(m, words),
+                        None => {
+                            immediate_error(m, "payload is not a whole number of 32-bit words")
+                        }
+                    };
+                    metrics.on_net_accepted(m);
+                    // a full window blocks here — intentionally: the
+                    // socket stops being read, the peer's sends back up
+                    if tx.send(Work::Req { id: f.id, m, arrival, pending }).is_err() {
+                        // writer already died on this peer: the request
+                        // was accepted, so account the drop
+                        metrics.on_peer_vanished(m);
+                        return;
+                    }
+                }
+                FrameKind::Stats => {
+                    if tx.send(Work::Stats { id: f.id }).is_err() {
+                        return;
+                    }
+                }
+                FrameKind::Shutdown => {
+                    shutdown.store(true, Ordering::SeqCst);
+                    let _ = tx.send(Work::Ack { id: f.id });
+                    return;
+                }
+                FrameKind::Response | FrameKind::StatsResponse => {
+                    // server-to-client kinds arriving at the server are
+                    // protocol garbage
+                    metrics.on_frame_malformed();
+                    let _ = tx.send(Work::Fault {
+                        id: f.id,
+                        reason: "unexpected server-to-client frame kind".into(),
+                    });
+                    return;
+                }
+            },
+            // clean close or half-close: stop reading; the writer
+            // drains whatever is still in the window
+            Ok(ReadOutcome::Eof) => return,
+            // nothing arrived within the read timeout: healthy idle
+            // connection, loop to re-check the shutdown flag
+            Ok(ReadOutcome::Idle) => continue,
+            Err(e) if e.is_malformed() => {
+                metrics.on_frame_malformed();
+                let _ = tx.send(Work::Fault { id: 0, reason: e.to_string() });
+                return;
+            }
+            // transport fault (reset, broken pipe): not a malformed
+            // frame, just a gone peer
+            Err(_) => return,
+        }
+    }
+}
+
+/// Serve the window in FIFO order: wait each request out against its
+/// arrival-stamped deadline and write the response. After the first
+/// failed write the peer is gone — the rest of the window is drained
+/// as counted `peer_vanished` drops (never double-counted, never
+/// abandoned un-counted).
+fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, deadline: Duration) {
+    let mut peer_gone = false;
+    while let Ok(work) = rx.recv() {
+        match work {
+            Work::Req { id, m, arrival, mut pending } => {
+                if peer_gone {
+                    metrics.on_peer_vanished(m);
+                    continue;
+                }
+                let remaining = deadline.checked_sub(arrival.elapsed()).unwrap_or(Duration::ZERO);
+                match pending.wait_timeout(remaining) {
+                    Some(resp) => {
+                        let frame = match resp.result() {
+                            Ok(out) => Frame::response_ok(id, m as u32, out),
+                            Err(e) => Frame::response_error(id, m as u32, STATUS_ERROR, e),
+                        };
+                        if frame.write_to(&mut stream).is_ok() {
+                            metrics.on_net_responded(m);
+                        } else {
+                            metrics.on_peer_vanished(m);
+                            peer_gone = true;
+                        }
+                    }
+                    None => {
+                        // deadline exceeded: answer now and abandon the
+                        // in-flight computation (dropping the pending —
+                        // the pool's late send lands on a closed
+                        // channel, harmlessly)
+                        let frame =
+                            Frame::response_error(id, m as u32, STATUS_DEADLINE, "deadline exceeded");
+                        if frame.write_to(&mut stream).is_ok() {
+                            metrics.on_deadline_timeout(m);
+                        } else {
+                            metrics.on_peer_vanished(m);
+                            peer_gone = true;
+                        }
+                    }
+                }
+            }
+            Work::Stats { id } => {
+                if peer_gone {
+                    continue;
+                }
+                let snap = StatsSnapshot::from_metrics(metrics);
+                if Frame::stats_response(id, snap.encode()).write_to(&mut stream).is_err() {
+                    peer_gone = true;
+                }
+            }
+            Work::Ack { id } => {
+                if peer_gone {
+                    continue;
+                }
+                if Frame::response_ok(id, 0, &[]).write_to(&mut stream).is_err() {
+                    peer_gone = true;
+                }
+            }
+            Work::Fault { id, reason } => {
+                if peer_gone {
+                    continue;
+                }
+                if Frame::response_error(id, 0, STATUS_ERROR, &reason).write_to(&mut stream).is_err()
+                {
+                    peer_gone = true;
+                }
+            }
+        }
+    }
+    // FIN so a draining peer sees a definite end-of-responses
+    let _ = stream.shutdown(Shutdown::Write);
+}
+
+/// A point-in-time copy of the server-side lifecycle counters,
+/// encodable into a `StatsResponse` payload — how the load generator
+/// reconciles its client-side ledger against the server without
+/// sharing memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// Connections accepted.
+    pub conn_opened: u64,
+    /// Connections fully torn down.
+    pub conn_closed: u64,
+    /// Malformed frames observed.
+    pub frames_malformed: u64,
+    /// Requests accepted off sockets, all sizes.
+    pub accepted: u64,
+    /// Responses written back, all sizes.
+    pub responded: u64,
+    /// Deadline-timeout responses written, all sizes.
+    pub deadline_timeouts: u64,
+    /// Accepted requests dropped on vanished peers, all sizes.
+    pub peer_vanished: u64,
+    /// Requests the inner service accepted (socket + in-process).
+    pub service_requests: u64,
+    /// Per-m rows: `(m, accepted, responded, deadline_timeouts,
+    /// peer_vanished)`.
+    pub per_m: Vec<(u64, u64, u64, u64, u64)>,
+}
+
+impl StatsSnapshot {
+    /// Snapshot the live counters.
+    pub fn from_metrics(m: &Metrics) -> StatsSnapshot {
+        StatsSnapshot {
+            conn_opened: m.conn_opened(),
+            conn_closed: m.conn_closed(),
+            frames_malformed: m.frames_malformed(),
+            accepted: m.net_accepted_total(),
+            responded: m.net_responded_total(),
+            deadline_timeouts: m.deadline_timeouts(),
+            peer_vanished: m.peer_vanished(),
+            service_requests: m.requests(),
+            per_m: m
+                .per_m_net_bins()
+                .into_iter()
+                .map(|(mm, a, r, d, v)| (mm as u64, a, r, d, v))
+                .collect(),
+        }
+    }
+
+    /// Serialize as a flat LE u64 block (8 scalars, a row count, then
+    /// 5 u64 per row).
+    pub fn encode(&self) -> Vec<u8> {
+        let scalars = [
+            self.conn_opened,
+            self.conn_closed,
+            self.frames_malformed,
+            self.accepted,
+            self.responded,
+            self.deadline_timeouts,
+            self.peer_vanished,
+            self.service_requests,
+            self.per_m.len() as u64,
+        ];
+        let mut out = Vec::with_capacity(8 * (scalars.len() + 5 * self.per_m.len()));
+        for s in scalars {
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        for (m, a, r, d, v) in &self.per_m {
+            for s in [m, a, r, d, v] {
+                out.extend_from_slice(&s.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode an [`Self::encode`] block; `None` on a short or
+    /// inconsistent payload.
+    pub fn decode(bytes: &[u8]) -> Option<StatsSnapshot> {
+        if bytes.len() % 8 != 0 {
+            return None;
+        }
+        let words: Vec<u64> = bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .collect();
+        if words.len() < 9 {
+            return None;
+        }
+        let nrows = words[8] as usize;
+        if words.len() != 9 + 5 * nrows {
+            return None;
+        }
+        Some(StatsSnapshot {
+            conn_opened: words[0],
+            conn_closed: words[1],
+            frames_malformed: words[2],
+            accepted: words[3],
+            responded: words[4],
+            deadline_timeouts: words[5],
+            peer_vanished: words[6],
+            service_requests: words[7],
+            per_m: (0..nrows)
+                .map(|i| {
+                    let r = &words[9 + 5 * i..9 + 5 * i + 5];
+                    (r[0], r[1], r[2], r[3], r[4])
+                })
+                .collect(),
+        })
+    }
+
+    /// The socket-boundary identity, per m row and in total.
+    pub fn reconciles(&self) -> bool {
+        self.unaccounted() == 0
+            && self.per_m.iter().all(|(_, a, r, d, v)| *a == r + d + v)
+            && self.accepted == self.per_m.iter().map(|(_, a, ..)| a).sum::<u64>()
+    }
+
+    /// Requests accepted but in no outcome bucket (0 after quiescence
+    /// on a correct server; >0 means something was dropped silently).
+    pub fn unaccounted(&self) -> i64 {
+        self.accepted as i64
+            - (self.responded + self.deadline_timeouts + self.peer_vanished) as i64
+    }
+}
+
+/// A blocking v2-frame client: the load generator's clean-traffic arm,
+/// also handy for integration tests. Reads carry a generous timeout so
+/// a hung server fails a test instead of wedging it.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect with a 30 s read timeout.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(NetClient { stream })
+    }
+
+    /// The underlying stream (fault-injecting callers shape their own
+    /// bytes on it).
+    pub fn stream(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Send one request frame.
+    pub fn send_request(&mut self, id: u64, m: u32, words: &[u32]) -> io::Result<()> {
+        Frame::request(id, m, words).write_to(&mut self.stream)
+    }
+
+    /// Read one frame; `Ok(None)` on clean EOF.
+    pub fn read_frame(&mut self) -> Result<Option<Frame>, FrameError> {
+        loop {
+            match read_frame(&mut self.stream)? {
+                ReadOutcome::Frame(f) => return Ok(Some(f)),
+                ReadOutcome::Eof => return Ok(None),
+                ReadOutcome::Idle => continue,
+            }
+        }
+    }
+
+    /// One synchronous round trip.
+    pub fn request(&mut self, id: u64, m: u32, words: &[u32]) -> anyhow::Result<Frame> {
+        self.send_request(id, m, words)?;
+        match self.read_frame() {
+            Ok(Some(f)) => Ok(f),
+            Ok(None) => anyhow::bail!("server closed before responding to request {id}"),
+            Err(e) => anyhow::bail!("broken response stream: {e}"),
+        }
+    }
+
+    /// Fetch the server's counter snapshot.
+    pub fn stats(&mut self, id: u64) -> anyhow::Result<StatsSnapshot> {
+        Frame::stats_request(id).write_to(&mut self.stream)?;
+        match self.read_frame() {
+            Ok(Some(f)) if f.kind == FrameKind::StatsResponse => StatsSnapshot::decode(&f.payload)
+                .ok_or_else(|| anyhow::anyhow!("undecodable stats payload")),
+            Ok(Some(f)) => anyhow::bail!("expected a stats response, got {:?}", f.kind),
+            Ok(None) => anyhow::bail!("server closed before the stats response"),
+            Err(e) => anyhow::bail!("broken stats stream: {e}"),
+        }
+    }
+
+    /// Order the server to shut down; waits for the ack.
+    pub fn shutdown_server(&mut self, id: u64) -> anyhow::Result<()> {
+        Frame::shutdown(id).write_to(&mut self.stream)?;
+        match self.read_frame() {
+            Ok(Some(f)) if f.kind == FrameKind::Response => Ok(()),
+            Ok(Some(f)) => anyhow::bail!("expected a shutdown ack, got {:?}", f.kind),
+            Ok(None) => anyhow::bail!("server closed before acking shutdown"),
+            Err(e) => anyhow::bail!("broken ack stream: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_snapshot_round_trips() {
+        let snap = StatsSnapshot {
+            conn_opened: 10,
+            conn_closed: 9,
+            frames_malformed: 3,
+            accepted: 100,
+            responded: 90,
+            deadline_timeouts: 6,
+            peer_vanished: 4,
+            service_requests: 96,
+            per_m: vec![(2, 40, 36, 3, 1), (8, 60, 54, 3, 3)],
+        };
+        let back = StatsSnapshot::decode(&snap.encode()).expect("decode");
+        assert_eq!(back, snap);
+        assert!(back.reconciles());
+        assert_eq!(back.unaccounted(), 0);
+    }
+
+    #[test]
+    fn stats_snapshot_flags_unaccounted_requests() {
+        let mut snap = StatsSnapshot {
+            conn_opened: 1,
+            conn_closed: 1,
+            frames_malformed: 0,
+            accepted: 5,
+            responded: 4,
+            deadline_timeouts: 0,
+            peer_vanished: 0,
+            service_requests: 5,
+            per_m: vec![(4, 5, 4, 0, 0)],
+        };
+        assert!(!snap.reconciles());
+        assert_eq!(snap.unaccounted(), 1);
+        // totals balanced across the wrong bins must still fail
+        snap.responded = 5;
+        snap.per_m = vec![(4, 5, 4, 0, 0), (8, 0, 1, 0, 0)];
+        assert_eq!(snap.unaccounted(), 0);
+        assert!(!snap.reconciles(), "identity is per m bin, not just total");
+    }
+
+    #[test]
+    fn stats_snapshot_rejects_garbage() {
+        assert!(StatsSnapshot::decode(&[]).is_none());
+        assert!(StatsSnapshot::decode(&[0u8; 7]).is_none(), "not u64-aligned");
+        assert!(StatsSnapshot::decode(&[0u8; 64]).is_none(), "short of the scalar block");
+        // row count promising more rows than the payload carries
+        let mut bytes = vec![0u8; 72];
+        bytes[64..72].copy_from_slice(&9u64.to_le_bytes());
+        assert!(StatsSnapshot::decode(&bytes).is_none());
+    }
+}

@@ -155,6 +155,29 @@ impl PendingResponse {
                 .unwrap_or_else(|_| Response::failed(0, DEAD_POOL_MSG, 0.0)),
         }
     }
+
+    /// Block for at most `timeout`: `Some(response)` once served,
+    /// `None` if the window elapses first. A `None` consumes nothing —
+    /// the request stays in flight, and a later call (or poll) still
+    /// delivers the response when it lands, so a caller can bound each
+    /// wait (a wedged pool cannot hang it forever) without giving up
+    /// its claim on the answer. Like [`Self::try_result`], the response
+    /// is cached once observed.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<&Response> {
+        self.poll();
+        if self.got.is_none() {
+            match self.rx.recv_timeout(timeout) {
+                Ok(resp) => self.got = Some(resp),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => return None,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    // the service promises a Response before dropping
+                    // the sender; keep the promise even against a bug
+                    self.got = Some(Response::failed(0, DEAD_POOL_MSG, 0.0));
+                }
+            }
+        }
+        self.got.as_ref()
+    }
 }
 
 impl From<Receiver<Response>> for PendingResponse {
@@ -276,7 +299,12 @@ impl QrdService {
         assert!(!factories.is_empty(), "pool needs at least one engine factory");
         let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
         let metrics = Arc::new(Metrics::new(factories.len()));
-        let batcher = Arc::new(Mutex::new(KeyedBatcher::new(rx, |r: &Request| r.m, policy)));
+        // deadline anchoring at true channel arrival (`Request::enq`),
+        // not stash time: a rare-m request stashed during another bin's
+        // fill pays at most one max_wait window total
+        let batcher = Arc::new(Mutex::new(
+            KeyedBatcher::new(rx, |r: &Request| r.m, policy).with_arrival(|r: &Request| r.enq),
+        ));
         let state = Arc::new(PoolState {
             alive: AtomicUsize::new(factories.len()),
             dead: AtomicBool::new(false),
@@ -741,7 +769,17 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     let own = &sup.shards[slot];
     loop {
         let first_wait = steal_base.saturating_mul(1u32 << idle_streak.min(9)).min(steal_max);
-        let batch = match own.pop_batch_by(|r: &Request| r.m, &cap_of, max_wait, first_wait) {
+        // arrival-anchored batch formation: the fill deadline runs from
+        // the front request's `enq`, so a minority-m request that
+        // already waited behind another key's batch pays at most one
+        // max_wait window total
+        let batch = match own.pop_batch_by_arrival(
+            |r: &Request| r.m,
+            &cap_of,
+            |r: &Request| r.enq,
+            max_wait,
+            first_wait,
+        ) {
             Pop::Batch(b) => b,
             Pop::TimedOut => match steal_from_siblings(slot, sup, &cap_of) {
                 Some(b) => b,
@@ -984,11 +1022,25 @@ mod tests {
         assert!(resp.error.is_some());
         let resp = svc.submit_m(3, vec![0u32; 8]).recv().expect("response");
         assert!(resp.result().unwrap_err().contains("8 words"), "{resp:?}");
+        // the full wrong-length corpus around a valid m: one short, one
+        // long, empty, and absurdly oversized payloads all get error
+        // responses without reaching a queue
+        for bad_len in [0usize, 1, 8, 10, 1024] {
+            let resp = svc.submit_m(3, vec![0u32; bad_len]).recv().expect("response");
+            let err = resp.result().expect_err("payload/m mismatch must error");
+            assert!(err.contains("words"), "len {bad_len}: {err}");
+        }
+        // m just past the cap and far past it
+        for bad_m in [9usize, 64, usize::MAX / (1 << 32)] {
+            let resp = svc.submit_m(bad_m, Vec::new()).recv().expect("response");
+            assert!(resp.error.is_some(), "m={bad_m} must be rejected");
+        }
         // valid traffic still flows afterwards
         let resp = svc.submit_m(2, vec![0u32; 4]).recv().expect("response");
         assert!(resp.error.is_none(), "{:?}", resp.error);
         // rejected requests never hit the per-m accepted bins
         assert_eq!(svc.metrics().m_requests(9), 0);
+        assert_eq!(svc.metrics().m_requests(3), 0);
         assert_eq!(svc.metrics().m_requests(2), 1);
         svc.shutdown();
     }
@@ -1337,6 +1389,61 @@ mod tests {
         let again = pending.try_result().expect("still ready").out.clone();
         assert_eq!(again, eng.qrd_bits(&a));
         assert_eq!(pending.wait().out, eng.qrd_bits(&a));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_expires_then_still_completes() {
+        // single gated worker: the response provably cannot arrive
+        // while the gate is shut, so wait_timeout must expire — and the
+        // request must still complete after the gate opens
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new((Mutex::new(false), Condvar::new()));
+        let (g, e) = (gate.clone(), entered.clone());
+        let svc = QrdService::start(
+            move || {
+                Box::new(GateEngine {
+                    gate: g.clone(),
+                    entered: e.clone(),
+                    inner: NativeEngine::flagship(),
+                }) as Box<dyn BatchEngine>
+            },
+            BatchPolicy { max_batch: 1, max_wait_us: 50 },
+        );
+        let eng = NativeEngine::flagship();
+        let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.2 - 1.1).to_bits());
+        let mut pending = svc.submit_async(a);
+        {
+            let (lock, cv) = &*entered;
+            let guard = lock.lock().unwrap();
+            let (guard, timeout) = cv
+                .wait_timeout_while(guard, Duration::from_secs(30), |in_gate| !*in_gate)
+                .unwrap();
+            assert!(!timeout.timed_out() && *guard, "worker never entered the engine");
+        }
+        // timeout path: the window elapses, the call returns None after
+        // blocking roughly the requested time — and consumes nothing
+        let w = Duration::from_millis(50);
+        let t0 = Instant::now();
+        assert!(pending.wait_timeout(w).is_none(), "gated request cannot be ready");
+        assert!(t0.elapsed() >= w, "must block for the full window before giving up");
+        assert!(pending.wait_timeout(Duration::ZERO).is_none(), "still in flight");
+        // still-completes path: open the gate, a later bounded wait
+        // delivers the response, then caches it
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let resp = pending
+            .wait_timeout(Duration::from_secs(30))
+            .expect("response after the gate opens");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let out = resp.out.clone();
+        assert_eq!(out, eng.qrd_bits(&a));
+        // cached: a zero-duration wait now returns the same response
+        assert_eq!(pending.wait_timeout(Duration::ZERO).expect("cached").out, out);
+        assert_eq!(pending.wait().out, out);
         svc.shutdown();
     }
 

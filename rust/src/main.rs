@@ -10,6 +10,11 @@
 //!             [--shards S] [--max-restarts R]
 //!             [--max-m M] [--blocked-m M]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
+//!             [--listen ADDR [--window W] [--deadline-ms D]
+//!              [--read-timeout-ms T] [--write-timeout-ms T]]
+//! repro loadgen [--addr HOST:PORT] [--conns N] [--threads T]
+//!               [--requests R] [--max-m M] [--seed S]
+//!               [--chaos] [--shutdown] [--bench-out PATH]
 //! ```
 //!
 //! `--workers` is the number of persistent engine threads in the pool;
@@ -32,6 +37,18 @@
 //! `repro qrd --batch B` switches from the single-matrix walkthrough to
 //! a batch-interleaved throughput demo over B random m×m matrices
 //! (`--m` picks the size; the wire format is no longer 4×4-only).
+//!
+//! TCP ingress: `repro serve --listen ADDR` puts the wire format on an
+//! actual socket instead of the synthetic in-process load — one
+//! reader/writer pair per connection, a bounded in-flight `--window`
+//! per connection (a full window stops reading: backpressure, never an
+//! unbounded buffer), per-request deadlines stamped at arrival, and a
+//! drain-on-shutdown guarantee audited at exit (every accepted request
+//! answered or counted, every connection closed). `repro loadgen`
+//! drives it — with `--chaos`, a fifth of connections inject truncated
+//! frames, garbage bytes, mid-request disconnects, slow-loris stalls,
+//! and half-closes, and the run reconciles client ledgers against the
+//! server's counters, failing on any unaccounted request.
 
 use fp_givens::util::cli::Args;
 
@@ -39,7 +56,8 @@ const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--artifact PATH]";
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
+  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -161,7 +179,7 @@ fn main() -> anyhow::Result<()> {
                 "blocked-m",
                 fp_givens::coordinator::NativeEngine::DEFAULT_BLOCKED_MIN,
             );
-            fp_givens::coordinator::serve_with(&fp_givens::coordinator::ServeConfig {
+            let cfg = fp_givens::coordinator::ServeConfig {
                 engine,
                 requests,
                 max_batch: batch,
@@ -173,6 +191,43 @@ fn main() -> anyhow::Result<()> {
                 tile,
                 max_m,
                 blocked_m,
+            };
+            if args.has("listen") {
+                // TCP frontend: serve the wire format over a socket
+                // until a shutdown frame arrives, then audit the
+                // connection-lifecycle ledger
+                use std::time::Duration;
+                let listen = args.get("listen", "127.0.0.1:7290");
+                let defaults = fp_givens::coordinator::NetConfig::default();
+                let net = fp_givens::coordinator::NetConfig {
+                    window: args.get_as("window", defaults.window),
+                    deadline: Duration::from_millis(
+                        args.get_as("deadline-ms", defaults.deadline.as_millis() as u64),
+                    ),
+                    read_timeout: Duration::from_millis(
+                        args.get_as("read-timeout-ms", defaults.read_timeout.as_millis() as u64),
+                    ),
+                    write_timeout: Duration::from_millis(
+                        args.get_as("write-timeout-ms", defaults.write_timeout.as_millis() as u64),
+                    ),
+                };
+                fp_givens::coordinator::serve_listen(&cfg, &listen, net)?;
+            } else {
+                fp_givens::coordinator::serve_with(&cfg)?;
+            }
+        }
+        Some("loadgen") => {
+            let bench_out = args.get("bench-out", "");
+            fp_givens::coordinator::run_loadgen(&fp_givens::coordinator::LoadgenConfig {
+                addr: args.get("addr", "127.0.0.1:7290"),
+                conns: args.get_as("conns", 1000usize),
+                threads: args.get_as("threads", 32usize),
+                requests_per_conn: args.get_as("requests", 8usize),
+                max_m: args.get_as("max-m", 8usize),
+                chaos: args.has("chaos"),
+                seed: args.get_as("seed", 42u64),
+                shutdown: args.has("shutdown"),
+                bench_out: if bench_out.is_empty() { None } else { Some(bench_out) },
             })?;
         }
         _ => {

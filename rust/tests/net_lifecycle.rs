@@ -1,0 +1,376 @@
+//! Connection-lifecycle tests for the TCP ingress (`coordinator::net`).
+//!
+//! Every test binds a real `NetServer` on a loopback port and talks to
+//! it over actual sockets, then audits the socket-boundary identity:
+//! per m, `accepted == responded + deadline_timeouts + peer_vanished`,
+//! and every opened connection is closed. The malformed-input corpus
+//! from the in-process service level is replayed here on the wire:
+//! every truncation point of a valid frame, garbage bytes, half-closes,
+//! deadline expiry, window backpressure, remote shutdown, and a
+//! mini chaos run through the fault-injecting load generator.
+
+use fp_givens::coordinator::{
+    read_frame, BatchEngine, BatchPolicy, Frame, FrameKind, LoadgenConfig, Metrics, NativeEngine,
+    NetClient, NetConfig, NetServer, QrdService, ReadOutcome, RestartPolicy,
+};
+use std::io::Write;
+use std::net::{Shutdown, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+const STATUS_OK: u8 = 0;
+const STATUS_DEADLINE: u8 = 2;
+
+/// Two native workers on the sharded topology, m gate at 8.
+fn start_server(cfg: NetConfig) -> NetServer {
+    let factories: Vec<_> = (0..2)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy { max_restarts: 1 },
+    )
+    .with_max_m(8);
+    NetServer::bind("127.0.0.1:0", svc, cfg).expect("bind loopback")
+}
+
+fn fast_net() -> NetConfig {
+    NetConfig {
+        window: 16,
+        deadline: Duration::from_secs(10),
+        read_timeout: Duration::from_millis(200),
+        write_timeout: Duration::from_secs(2),
+    }
+}
+
+fn deterministic_matrix(m: usize, salt: u32) -> Vec<u32> {
+    (0..m * m)
+        .map(|i| {
+            let v = ((i as u32).wrapping_mul(2654435761).wrapping_add(salt) % 2000) as f32;
+            ((v - 1000.0) / 250.0).to_bits()
+        })
+        .collect()
+}
+
+/// Block until the counters settle or the deadline passes.
+fn wait_for(metrics: &Metrics, what: &str, cond: impl Fn(&Metrics) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while !cond(metrics) {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn assert_identity(metrics: &Metrics) {
+    assert!(
+        metrics.net_reconciles(),
+        "identity broken: {} accepted != {} responded + {} timeouts + {} vanished ({:?})",
+        metrics.net_accepted_total(),
+        metrics.net_responded_total(),
+        metrics.deadline_timeouts(),
+        metrics.peer_vanished(),
+        metrics.per_m_net_bins()
+    );
+    assert_eq!(metrics.conn_opened(), metrics.conn_closed(), "connection leak");
+}
+
+#[test]
+fn round_trip_mixed_m_over_tcp_is_bit_exact() {
+    let server = start_server(fast_net());
+    let reference = NativeEngine::flagship();
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    for (id, m) in (2..=6).enumerate() {
+        let a = deterministic_matrix(m, id as u32);
+        let resp = client.request(id as u64 + 1, m as u32, &a).expect("round trip");
+        assert_eq!(resp.kind, FrameKind::Response);
+        assert_eq!(resp.id, id as u64 + 1);
+        assert_eq!(resp.status, STATUS_OK, "unexpected error: {:?}", resp.text());
+        assert_eq!(
+            resp.words().expect("aligned payload"),
+            reference.qrd_bits_reference_m(m, &a),
+            "m={m} diverged from the reference bits over the wire"
+        );
+    }
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), 5);
+    assert_eq!(metrics.net_responded_total(), 5);
+    assert_identity(&metrics);
+}
+
+#[test]
+fn every_truncation_point_is_counted_and_survivable() {
+    let server = start_server(fast_net());
+    let metrics = server.metrics();
+    let full = Frame::request(7, 2, &deterministic_matrix(2, 9)).encode();
+    // every proper prefix of a valid request frame, delivered then FIN'd
+    for cut in 1..full.len() {
+        let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+        s.write_all(&full[..cut]).expect("send prefix");
+        s.shutdown(Shutdown::Write).expect("half-close");
+        // the server must answer with an error frame and close — drain
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut saw_ok = false;
+        loop {
+            match read_frame(&mut s) {
+                Ok(ReadOutcome::Frame(f)) => saw_ok |= f.status == STATUS_OK,
+                Ok(ReadOutcome::Idle) => continue,
+                Ok(ReadOutcome::Eof) | Err(_) => break,
+            }
+        }
+        assert!(!saw_ok, "cut={cut}: ok response to a truncated frame");
+    }
+    let want = (full.len() - 1) as u64;
+    wait_for(&metrics, "truncation teardown", |m| {
+        m.frames_malformed() == want && m.conn_opened() == m.conn_closed()
+    });
+    // no request was ever accepted, so the ledger is all zeros — and
+    // the server still serves clean traffic afterwards
+    assert_eq!(metrics.net_accepted_total(), 0);
+    let mut client = NetClient::connect(server.local_addr()).expect("connect after corpus");
+    let a = deterministic_matrix(3, 1);
+    let resp = client.request(1, 3, &a).expect("clean traffic after the corpus");
+    assert_eq!(resp.status, STATUS_OK);
+    drop(client);
+    assert_identity(&server.shutdown());
+}
+
+#[test]
+fn garbage_bytes_get_an_error_frame_then_eof() {
+    let server = start_server(fast_net());
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.write_all(&[0u8; 64]).expect("send garbage");
+    s.shutdown(Shutdown::Write).expect("half-close");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut error_frames = 0;
+    loop {
+        match read_frame(&mut s) {
+            Ok(ReadOutcome::Frame(f)) => {
+                assert_ne!(f.status, STATUS_OK, "garbage earned an ok response");
+                error_frames += 1;
+            }
+            Ok(ReadOutcome::Idle) => continue,
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        }
+    }
+    assert_eq!(error_frames, 1, "want exactly one error frame for garbage");
+    drop(s);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.frames_malformed(), 1);
+    assert_eq!(metrics.net_accepted_total(), 0);
+    assert_identity(&metrics);
+}
+
+#[test]
+fn half_close_still_drains_every_response() {
+    let server = start_server(fast_net());
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let n = 6usize;
+    for id in 1..=n {
+        let m = 2 + id % 3;
+        client
+            .send_request(id as u64, m as u32, &deterministic_matrix(m, id as u32))
+            .expect("pipelined send");
+    }
+    client.stream().shutdown(Shutdown::Write).expect("half-close");
+    // FIN is not abandonment: all n responses must still arrive
+    for id in 1..=n {
+        let f = client.read_frame().expect("stream intact").expect("no early EOF");
+        assert_eq!(f.id, id as u64);
+        assert_eq!(f.status, STATUS_OK);
+    }
+    match client.read_frame() {
+        Ok(None) | Err(_) => {}
+        Ok(Some(f)) => panic!("frame after the final response: {f:?}"),
+    }
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), n as u64);
+    assert_eq!(metrics.net_responded_total(), n as u64);
+    assert_identity(&metrics);
+}
+
+/// An engine that sits on every batch long enough to blow any small
+/// deadline, then answers correctly.
+struct SlowEngine {
+    inner: NativeEngine,
+    delay: Duration,
+}
+
+impl BatchEngine for SlowEngine {
+    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        std::thread::sleep(self.delay);
+        self.inner.run(m, mats)
+    }
+    fn preferred_batch(&self, _m: usize) -> usize {
+        usize::MAX
+    }
+    fn name(&self) -> String {
+        "slow".into()
+    }
+}
+
+#[test]
+fn expired_deadlines_are_counted_not_dropped() {
+    let factories: Vec<_> = (0..1)
+        .map(|_| {
+            || {
+                Box::new(SlowEngine {
+                    inner: NativeEngine::flagship(),
+                    delay: Duration::from_millis(150),
+                }) as Box<dyn BatchEngine>
+            }
+        })
+        .collect();
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy { max_restarts: 1 },
+    )
+    .with_max_m(8);
+    let net = NetConfig { deadline: Duration::from_millis(5), ..fast_net() };
+    let server = NetServer::bind("127.0.0.1:0", svc, net).expect("bind");
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let n = 4usize;
+    for id in 1..=n {
+        client
+            .send_request(id as u64, 3, &deterministic_matrix(3, id as u32))
+            .expect("send");
+    }
+    for id in 1..=n {
+        let f = client.read_frame().expect("stream intact").expect("a response, not silence");
+        assert_eq!(f.id, id as u64);
+        assert_eq!(f.status, STATUS_DEADLINE, "want a deadline verdict: {:?}", f.text());
+    }
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), n as u64);
+    assert_eq!(metrics.deadline_timeouts(), n as u64);
+    assert_eq!(metrics.net_responded_total(), 0);
+    assert_identity(&metrics);
+}
+
+/// An engine gated shut until the test opens it.
+struct GateEngine {
+    inner: NativeEngine,
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl BatchEngine for GateEngine {
+    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.inner.run(m, mats)
+    }
+    fn preferred_batch(&self, _m: usize) -> usize {
+        usize::MAX
+    }
+    fn name(&self) -> String {
+        "gate".into()
+    }
+}
+
+#[test]
+fn full_window_stops_reading_instead_of_buffering() {
+    let gate: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+    let g = gate.clone();
+    let factories: Vec<_> = vec![move || {
+        Box::new(GateEngine { inner: NativeEngine::flagship(), gate: g.clone() })
+            as Box<dyn BatchEngine>
+    }];
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy { max_restarts: 1 },
+    )
+    .with_max_m(8);
+    let window = 2usize;
+    let net = NetConfig {
+        window,
+        deadline: Duration::from_secs(30),
+        read_timeout: Duration::from_millis(100),
+        write_timeout: Duration::from_secs(5),
+    };
+    let server = NetServer::bind("127.0.0.1:0", svc, net).expect("bind");
+    let metrics = server.metrics();
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let n = 12usize;
+    for id in 1..=n {
+        client
+            .send_request(id as u64, 2, &deterministic_matrix(2, id as u32))
+            .expect("pipelined send");
+    }
+    // with the engine gated shut the writer cannot drain, so at most
+    // `window` requests sit queued plus one in the writer's hand and
+    // one in the reader's — everything else stays in the socket, unread
+    std::thread::sleep(Duration::from_millis(400));
+    let accepted_gated = metrics.net_accepted_total();
+    assert!(
+        accepted_gated <= (window + 2) as u64,
+        "reader overran the window: {accepted_gated} accepted with window {window}"
+    );
+    // open the gate: every request must now complete normally
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    for id in 1..=n {
+        let f = client.read_frame().expect("stream intact").expect("no early EOF");
+        assert_eq!(f.id, id as u64);
+        assert_eq!(f.status, STATUS_OK);
+    }
+    drop(client);
+    let m = server.shutdown();
+    assert_eq!(m.net_accepted_total(), n as u64);
+    assert_eq!(m.net_responded_total(), n as u64);
+    assert_identity(&m);
+}
+
+#[test]
+fn shutdown_frame_acks_drains_and_stops_the_server() {
+    let server = start_server(fast_net());
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    for id in 1..=2u64 {
+        let f = client.request(id, 2, &deterministic_matrix(2, id as u32)).expect("round trip");
+        assert_eq!(f.status, STATUS_OK);
+    }
+    client.shutdown_server(99).expect("shutdown acked");
+    assert!(server.shutdown_requested(), "shutdown frame must raise the flag");
+    server.wait_shutdown(Duration::from_millis(5));
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), 2);
+    assert_identity(&metrics);
+}
+
+#[test]
+fn chaos_loadgen_reconciles_against_the_server() {
+    let server = start_server(NetConfig {
+        window: 16,
+        deadline: Duration::from_secs(10),
+        read_timeout: Duration::from_millis(250),
+        write_timeout: Duration::from_secs(2),
+    });
+    let cfg = LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        conns: 60,
+        threads: 8,
+        requests_per_conn: 4,
+        max_m: 6,
+        chaos: true,
+        seed: 7,
+        shutdown: true,
+        bench_out: None,
+    };
+    fp_givens::coordinator::run_loadgen(&cfg).expect("chaos run must reconcile exactly");
+    // the loadgen ordered a shutdown; the server must wind down with
+    // the ledger still exact
+    server.wait_shutdown(Duration::from_millis(5));
+    assert_identity(&server.shutdown());
+}
