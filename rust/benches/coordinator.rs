@@ -1,10 +1,13 @@
 //! Coordinator benchmarks: end-to-end service throughput (native and,
 //! when built, PJRT engines), batching-policy sensitivity, the raw PJRT
-//! batch execution cost, and the worker-pool scaling sweep whose
-//! entries are merged into `BENCH_qrd.json` (CI greps for them).
+//! batch execution cost, the worker-pool scaling sweep, and the
+//! key-affine vs round-robin router comparison under skewed mixed-key
+//! traffic — entries are merged into `BENCH_qrd.json` (CI greps for
+//! them).
 
 use fp_givens::coordinator::{
-    BatchEngine, BatchPolicy, NativeEngine, PjrtEngine, QrdService, RestartPolicy,
+    BatchEngine, BatchPolicy, JobKey, NativeEngine, OpKind, PjrtEngine, QrdService, RestartPolicy,
+    RouterPolicy,
 };
 use fp_givens::util::bench::{bench, black_box, merge_json, BenchResult};
 use fp_givens::util::rng::Rng;
@@ -38,6 +41,47 @@ fn run_load(svc: &QrdService, clients: usize, per_client: usize) -> f64 {
                     let a: [u32; 16] =
                         std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits());
                     inflight.push_back(svc.submit(a));
+                    if inflight.len() >= 256 {
+                        black_box(inflight.pop_front().unwrap().recv().unwrap());
+                    }
+                }
+                for rx in inflight {
+                    black_box(rx.recv().unwrap());
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Skewed mixed-key traffic: three quarters of requests are `qrd/m4`,
+/// the rest spread across four minority keys — the distribution where
+/// routing policy decides whether uniform-key batches can fill.
+fn run_skewed_load(svc: &QrdService, clients: usize, per_client: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            s.spawn(move || {
+                let mut rng = Rng::new(7000 + c as u64);
+                let mut inflight = VecDeque::with_capacity(256);
+                for _ in 0..per_client {
+                    let key = match rng.below(16) {
+                        0 => JobKey::new(OpKind::Solve, 4),
+                        1 => JobKey::new(OpKind::Solve, 6),
+                        2 => JobKey::new(OpKind::AppendQr, 5),
+                        3 => JobKey::qrd(3),
+                        _ => JobKey::qrd(4),
+                    };
+                    let mut a: Vec<u32> = (0..key.request_words())
+                        .map(|_| (rng.range(-1.0, 1.0) as f32).to_bits())
+                        .collect();
+                    if key.op == OpKind::Solve {
+                        let m = key.m();
+                        for e in (0..m * m).step_by(m + 1) {
+                            a[e] = (f32::from_bits(a[e]) + 4.0).to_bits();
+                        }
+                    }
+                    inflight.push_back(svc.submit_key(key, a));
                     if inflight.len() >= 256 {
                         black_box(inflight.pop_front().unwrap().recv().unwrap());
                     }
@@ -135,6 +179,63 @@ fn main() {
             svc.shutdown();
         }
     }
+    // router policy comparison under skewed mixed-key traffic: affine
+    // routing concentrates each JobKey on its primary shard, so the
+    // uniform-key batches fill denser (higher mean batch size) than
+    // round-robin's key-scattered queues. CI greps for all four rows;
+    // the acceptance bar is affine's bin density strictly above
+    // round-robin's.
+    let per_client = 4096usize;
+    let total = (clients * per_client) as f64;
+    let mut densities = [0.0f64; 2];
+    for (pi, policy) in [RouterPolicy::RoundRobin, RouterPolicy::KeyAffine].into_iter().enumerate()
+    {
+        let factories: Vec<_> = (0..4)
+            .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+            .collect();
+        let svc = QrdService::start_sharded_with_router(
+            factories,
+            BatchPolicy { max_batch: 64, max_wait_us: 100 },
+            RestartPolicy::default(),
+            policy,
+        )
+        .with_max_m(8);
+        run_skewed_load(&svc, clients, 512);
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            best = best.min(run_skewed_load(&svc, clients, per_client));
+        }
+        let m = svc.metrics();
+        let density = m.mean_batch();
+        densities[pi] = density;
+        let label = match policy {
+            RouterPolicy::RoundRobin => "roundrobin",
+            RouterPolicy::KeyAffine => "affine",
+        };
+        let thr = BenchResult::from_wall(
+            &format!("router/{label} throughput x{} [skewed keys, workers=4, batch=64]", total as u64),
+            total,
+            best,
+        );
+        println!("{}", thr.report());
+        let dens = BenchResult::from_wall(
+            &format!("router/{label} bin-density [skewed keys, workers=4, batch=64]"),
+            density,
+            1.0,
+        );
+        println!("    mean uniform-key batch {density:.2}, per-worker batches {:?}, stolen {}",
+            m.worker_batch_counts(), m.stolen_requests());
+        results.push(thr);
+        results.push(dens);
+        svc.shutdown();
+    }
+    println!(
+        "router bin density: roundrobin {:.2} vs affine {:.2} ({})",
+        densities[0],
+        densities[1],
+        if densities[1] > densities[0] { "affine denser" } else { "AFFINE NOT DENSER" }
+    );
+
     match merge_json("BENCH_qrd.json", &results) {
         Ok(()) => println!("\nmerged {} topology-scaling entries into BENCH_qrd.json", results.len()),
         Err(e) => eprintln!("\ncould not update BENCH_qrd.json: {e}"),
@@ -145,7 +246,7 @@ fn main() {
         let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact");
         let mats_v2: Vec<Vec<u32>> = mats.iter().map(|a| a.to_vec()).collect();
         bench("pjrt execute batch=256", 256.0, || {
-            black_box(pjrt.run(4, &mats_v2).expect("pjrt batch"));
+            black_box(pjrt.run(JobKey::qrd(4), &mats_v2).expect("pjrt batch"));
         });
         let svc = QrdService::start(
             || Box::new(PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("artifact")),

@@ -4,7 +4,7 @@
 //! machine-readable PR over PR.
 
 use fp_givens::analysis::{run_mc, EngineSpec};
-use fp_givens::coordinator::{BatchEngine, NativeEngine};
+use fp_givens::coordinator::{BatchEngine, JobKey, NativeEngine, OpKind};
 use fp_givens::fp::FpFormat;
 use fp_givens::qrd::{FixedQrdEngine, QrdEngine};
 use fp_givens::rotator::RotatorConfig;
@@ -79,7 +79,7 @@ fn main() {
         .collect();
     let per_matrix = NativeEngine::flagship().with_tile(1);
     results.push(bench("qrd4 batch x1024 [native 1T, per-matrix]", 1024.0, || {
-        black_box(per_matrix.run(4, &big_batch).unwrap());
+        black_box(per_matrix.run(JobKey::qrd(4), &big_batch).unwrap());
     }));
     for tile in [4usize, 16, 64] {
         let eng = NativeEngine::flagship().with_tile(tile);
@@ -87,7 +87,7 @@ fn main() {
             &format!("qrd4 batch x1024 [native 1T, interleaved tile={tile}]"),
             1024.0,
             || {
-                black_box(eng.run(4, &big_batch).unwrap());
+                black_box(eng.run(JobKey::qrd(4), &big_batch).unwrap());
             },
         ));
     }
@@ -101,7 +101,7 @@ fn main() {
             &format!("qrd4 batch x1024 [native, threads={nt}]"),
             1024.0,
             || {
-                black_box(eng.run(4, &big_batch).unwrap());
+                black_box(eng.run(JobKey::qrd(4), &big_batch).unwrap());
             },
         ));
     }
@@ -122,16 +122,56 @@ fn main() {
             &format!("qrd{m} batch x{nb} [native 1T, flat schedule]"),
             nb as f64,
             || {
-                black_box(flat.run(m, &mats).unwrap());
+                black_box(flat.run(JobKey::qrd(m), &mats).unwrap());
             },
         ));
         results.push(bench(
             &format!("qrd{m} batch x{nb} [native 1T, blocked waves]"),
             nb as f64,
             || {
-                black_box(blocked.run(m, &mats).unwrap());
+                black_box(blocked.run(JobKey::qrd(m), &mats).unwrap());
             },
         ));
+    }
+
+    // the new op paths, batched through the same engine dispatch: the
+    // least-squares solve (factorize + back-substitute) and the
+    // incremental column-append QR. CI greps for both rows.
+    let op_eng = NativeEngine::flagship().with_tile(1);
+    for m in [4usize, 8] {
+        let nb = 256usize;
+        let solve_key = JobKey::new(OpKind::Solve, m);
+        let solve_jobs: Vec<Vec<u32>> = (0..nb)
+            .map(|_| {
+                let mut a: Vec<u32> = (0..solve_key.request_words())
+                    .map(|_| (rng.range(-1.0, 1.0) as f32).to_bits())
+                    .collect();
+                for e in (0..m * m).step_by(m + 1) {
+                    a[e] = (f32::from_bits(a[e]) + 4.0).to_bits();
+                }
+                a
+            })
+            .collect();
+        results.push(bench(&format!("solve{m} batch x{nb} [native 1T]"), nb as f64, || {
+            black_box(op_eng.run(solve_key, &solve_jobs).unwrap());
+        }));
+        let append_key = JobKey::new(OpKind::AppendQr, m);
+        let append_jobs: Vec<Vec<u32>> = (0..nb)
+            .map(|_| {
+                let mut a: Vec<u32> = (0..append_key.request_words())
+                    .map(|_| (rng.range(-1.0, 1.0) as f32).to_bits())
+                    .collect();
+                for i in 0..m - 2 {
+                    let t = rng.range(-3.0, 3.0);
+                    a[2 * i] = (t.cos() as f32).to_bits();
+                    a[2 * i + 1] = (t.sin() as f32).to_bits();
+                }
+                a
+            })
+            .collect();
+        results.push(bench(&format!("append_qr{m} batch x{nb} [native 1T]"), nb as f64, || {
+            black_box(op_eng.run(append_key, &append_jobs).unwrap());
+        }));
     }
 
     // one Monte-Carlo point (what fig8/9/10 sweeps pay per cell)

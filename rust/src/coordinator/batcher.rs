@@ -2,12 +2,13 @@
 //! deadline expires — whichever comes first (vLLM-router style).
 //!
 //! Two batchers live here: the [`KeyedBatcher`], which bins items by a
-//! caller-supplied key (the matrix size `m` in the service) and only
-//! ever emits **uniform-key batches** — mixed-m traffic on one ingress
-//! queue comes out as per-m batches, each clamped to its own per-bin
-//! cap — and the homogeneous [`Batcher`], a constant-key wrapper over
-//! it (every item batch-compatible with every other; the 4×4-only v1
-//! service shape, kept as the simple single-shape API).
+//! caller-supplied key (any `Copy + Ord` type — the service uses
+//! `JobKey { op, m }`) and only ever emits **uniform-key batches** —
+//! mixed-op × mixed-m traffic on one ingress queue comes out as
+//! per-key batches, each clamped to its own per-bin cap — and the
+//! homogeneous [`Batcher`], a constant-key wrapper over it (every item
+//! batch-compatible with every other; the 4×4-only v1 service shape,
+//! kept as the simple single-shape API).
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
@@ -82,17 +83,21 @@ impl<T> Batcher<T> {
 ///
 /// Bin selection is oldest-first: each call serves the bin whose front
 /// item has waited longest (arrival order is tracked per item), so a
-/// rare-m request cannot starve behind a busy majority bin.
-pub struct KeyedBatcher<T> {
+/// rare-key request cannot starve behind a busy majority bin.
+///
+/// The key type `K` defaults to `usize` (the v2-era raw-`m` shape the
+/// unit tests keep exercising); the service instantiates
+/// `KeyedBatcher<Request, JobKey>` so op and dimension bin together.
+pub struct KeyedBatcher<T, K = usize> {
     rx: Receiver<T>,
-    key: fn(&T) -> usize,
+    key: fn(&T) -> K,
     /// Optional true-arrival accessor: when set, deadline anchoring
     /// uses the item's own timestamp (e.g. the instant it entered the
     /// ingress channel) instead of its stash time, closing the ~2×
     /// `max_wait_us` worst case for items drained late into a bin.
     arrival: Option<fn(&T) -> Instant>,
     /// Per-key FIFO bins of (arrival sequence, arrival time, item).
-    bins: BTreeMap<usize, VecDeque<(u64, Instant, T)>>,
+    bins: BTreeMap<K, VecDeque<(u64, Instant, T)>>,
     /// Monotone arrival counter (assigns each item its age).
     seq: u64,
     /// Stashed-item ceiling: once this many items sit in bins, batch
@@ -104,10 +109,10 @@ pub struct KeyedBatcher<T> {
     pub policy: BatchPolicy,
 }
 
-impl<T> KeyedBatcher<T> {
+impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
     /// Wrap a receiver; `key` maps an item to its bin (the service uses
-    /// the request's matrix size `m`).
-    pub fn new(rx: Receiver<T>, key: fn(&T) -> usize, policy: BatchPolicy) -> Self {
+    /// the request's `JobKey`).
+    pub fn new(rx: Receiver<T>, key: fn(&T) -> K, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         let stash_bound = policy.max_batch.max(1) * 4;
         KeyedBatcher { rx, key, arrival: None, bins: BTreeMap::new(), seq: 0, stash_bound, policy }
@@ -133,7 +138,7 @@ impl<T> KeyedBatcher<T> {
     }
 
     /// Key of the bin whose front item has waited longest.
-    fn oldest_bin(&self) -> Option<usize> {
+    fn oldest_bin(&self) -> Option<K> {
         self.bins
             .iter()
             .filter_map(|(k, q)| q.front().map(|(s, _, _)| (*s, *k)))
@@ -148,7 +153,7 @@ impl<T> KeyedBatcher<T> {
 
     /// Block for the next **uniform-key** batch; returns the key and
     /// the batch. `cap_of(key)` is the per-bin size cap (the engine's
-    /// `preferred_batch(m)`): the effective cap is
+    /// `preferred_batch(key)`): the effective cap is
     /// `min(policy.max_batch, cap_of(key))`, at least 1. Returns `None`
     /// only when the channel is closed *and* every bin is empty. Never
     /// returns an empty batch.
@@ -160,7 +165,7 @@ impl<T> KeyedBatcher<T> {
     /// formation latency is bounded by one `max_wait_us` window from
     /// true channel arrival; without one, an item drained late in
     /// another bin's fill window can pay up to ~2× the window.
-    pub fn next_batch_with(&mut self, cap_of: impl Fn(usize) -> usize) -> Option<(usize, Vec<T>)> {
+    pub fn next_batch_with(&mut self, cap_of: impl Fn(K) -> usize) -> Option<(K, Vec<T>)> {
         if self.bins.values().all(|q| q.is_empty()) {
             // nothing stashed: block for the first item
             let first = self.rx.recv().ok()?;

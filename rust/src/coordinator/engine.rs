@@ -1,33 +1,36 @@
 //! Batch execution engines behind the coordinator.
 
+use super::key::{JobKey, OpKind};
 use crate::fp::{Family, Fp, FpFormat, HubFp};
 use crate::qrd::{
-    triangularize_blocked_ws, triangularize_tile, triangularize_ws, workspace, BatchWorkspace,
-    FastQrd, QrdEngine, QrdWorkspace,
+    append_column, triangularize_blocked_panel_ws, triangularize_tile, triangularize_ws,
+    workspace, BatchWorkspace, FastQrd, QrdEngine, QrdWorkspace,
 };
 use crate::rotator::{FamilyOps, RotatorConfig, Val};
 use crate::util::par;
 
-/// A backend that decomposes **uniform-m batches** of m×m matrices
-/// given as FP bit patterns (wire format v2: `m*m` words in, `m*2m`
-/// words out per matrix, `[R | G]` row-major).
+/// A backend that executes **uniform-key batches** of jobs given as FP
+/// bit patterns (wire format v3: `key.request_words()` words in,
+/// `key.response_words()` words out per job — m² → 2m² `[R | G]` for
+/// Qrd, m²+m → m for Solve, 3m−4 → m+2 for AppendQr).
 pub trait BatchEngine {
-    /// Execute one uniform-m batch. Every matrix must carry exactly
-    /// `m*m` words — a mixed-size batch reaching an engine is a
-    /// batching bug upstream and MUST be answered with `Err` (never
-    /// truncated or zero-padded). `Err` is a *recoverable* backend
-    /// failure (e.g. a PJRT execute error, an unsupported `m`): the
-    /// service answers the batch with error responses and keeps the
+    /// Execute one uniform-key batch. Every job must carry exactly
+    /// `key.request_words()` words — a mixed-shape batch reaching an
+    /// engine is a batching bug upstream and MUST be answered with
+    /// `Err` (never truncated or zero-padded). `Err` is a *recoverable*
+    /// backend failure (e.g. a PJRT execute error, an unsupported key):
+    /// the service answers the batch with error responses and keeps the
     /// worker — only a panic retires/respawns it. The native engine is
-    /// infallible for well-formed batches of any `m ≥ 1`.
-    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
+    /// infallible for well-formed batches of every op at any
+    /// `m ≥ key.min_m()`.
+    fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String>;
     /// Largest batch this backend can execute in one call **for the
-    /// given m** (the per-bin cap: the service clamps every worker's
+    /// given key** (the per-bin cap: the service clamps every worker's
     /// batches to `min(policy.max_batch, this)`). Fixed-shape backends
     /// (an AOT PJRT artifact) report their lowered batch size for the
-    /// `m` they were built for; shape-free backends return `usize::MAX`
+    /// key they were built for; shape-free backends return `usize::MAX`
     /// and let the batch policy govern alone.
-    fn preferred_batch(&self, m: usize) -> usize;
+    fn preferred_batch(&self, key: JobKey) -> usize;
     /// Display name.
     fn name(&self) -> String;
 }
@@ -51,6 +54,13 @@ pub struct NativeEngine {
     /// (the waves are a pure reordering of commuting rotations); only
     /// the sweep shapes change.
     pub blocked_min: usize,
+    /// Panel width for the blocked wave schedule: columns are zeroed
+    /// `panel` at a time (`0` = full wavefront, `1` = flat order as
+    /// singleton waves). Results are bit-identical for every width —
+    /// the knob trades batched-sweep width for working-set size
+    /// (`repro qrd --panel` upstream; `cargo bench --bench qrd_engine`
+    /// tracks the trade).
+    pub panel: usize,
 }
 
 impl NativeEngine {
@@ -84,6 +94,7 @@ impl NativeEngine {
             threads: 1,
             tile: Self::DEFAULT_TILE,
             blocked_min: Self::DEFAULT_BLOCKED_MIN,
+            panel: 0,
         }
     }
 
@@ -115,6 +126,15 @@ impl NativeEngine {
         self
     }
 
+    /// Set the blocked schedule's panel width (`0` = full wavefront,
+    /// `1` = flat order, `k` = zero `k` columns per panel). Results are
+    /// bit-identical for every width — locked by the blocked-vs-flat
+    /// byte-identity suite; only the wave shapes change.
+    pub fn with_panel(mut self, panel: usize) -> Self {
+        self.panel = panel;
+        self
+    }
+
     /// Decompose one m×m matrix at the bit level on the allocation-free
     /// monomorphized fast path (this thread's reusable workspace); `a`
     /// is `m*m` row-major words, the result `m*2m` words `[R | G]`.
@@ -124,9 +144,14 @@ impl NativeEngine {
     /// `fastpath_bitexact` suite).
     pub fn qrd_bits_m(&self, m: usize, a: &[u32]) -> Vec<u32> {
         let blocked = m >= self.blocked_min;
+        let panel = self.panel;
         match self.eng.fast() {
-            FastQrd::Hub(r) => workspace::with_hub_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked)),
-            FastQrd::Ieee(r) => workspace::with_ieee_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked)),
+            FastQrd::Hub(r) => {
+                workspace::with_hub_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked, panel))
+            }
+            FastQrd::Ieee(r) => {
+                workspace::with_ieee_ws(|ws| qrd_bits_flat(r, m, a, ws, blocked, panel))
+            }
         }
     }
 
@@ -201,32 +226,37 @@ impl NativeEngine {
 }
 
 /// The homogeneity audit shared by every engine: a batch reaching an
-/// engine must be uniform in m (exactly `m*m` words per matrix). A
-/// violation is a batching bug upstream and is reported as a
-/// recoverable `Err` naming the offender — never truncated or padded.
-fn check_uniform(m: usize, mats: &[Vec<u32>]) -> Result<(), String> {
-    if m == 0 {
-        return Err("m must be at least 1".into());
+/// engine must be uniform in key (exactly `key.request_words()` words
+/// per job, per that op's payload contract). A violation is a batching
+/// bug upstream and is reported as a recoverable `Err` naming the
+/// offender — never truncated or padded.
+fn check_uniform(key: JobKey, jobs: &[Vec<u32>]) -> Result<(), String> {
+    let m = key.m();
+    if m < key.min_m() {
+        return Err(format!("{} needs m ≥ {}, got m={m}", key.op.label(), key.min_m()));
     }
-    match mats.iter().position(|a| a.len() != m * m) {
+    let want = key.request_words();
+    match jobs.iter().position(|a| a.len() != want) {
         None => Ok(()),
         Some(i) => Err(format!(
-            "mixed-size batch: matrix {i} carries {} words, expected {} for m={m}",
-            mats[i].len(),
-            m * m
+            "mixed-shape batch: job {i} carries {} words, expected {want} for {}",
+            jobs[i].len(),
+            key.label()
         )),
     }
 }
 
 /// Load one m×m `[A | I]` into the workspace, triangularize on the fast
-/// path (flat schedule, or blocked waves when `blocked`), pack `[R | G]`
-/// bits. No heap allocation after warm-up except the returned vector.
+/// path (flat schedule, or blocked waves of `panel` columns when
+/// `blocked`), pack `[R | G]` bits. No heap allocation after warm-up
+/// except the returned vector.
 fn qrd_bits_flat<F: FamilyOps>(
     rot: &F,
     m: usize,
     a: &[u32],
     ws: &mut QrdWorkspace<F::Scalar>,
     blocked: bool,
+    panel: usize,
 ) -> Vec<u32> {
     assert_eq!(a.len(), m * m, "expected {} words for m={m}", m * m);
     let width = 2 * m;
@@ -238,7 +268,7 @@ fn qrd_bits_flat<F: FamilyOps>(
         buf[i * width + m + i] = rot.one();
     }
     if blocked {
-        triangularize_blocked_ws(rot, ws);
+        triangularize_blocked_panel_ws(rot, ws, panel);
     } else {
         triangularize_ws(rot, ws);
     }
@@ -281,13 +311,55 @@ fn qrd_bits_tile_flat<F: FamilyOps>(
     out
 }
 
-impl BatchEngine for NativeEngine {
-    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+impl NativeEngine {
+    /// One batched least-squares solve per job: the payload is `[A | b]`
+    /// in wire words (m² row-major matrix words, then m rhs words), the
+    /// answer the m solution words. Wraps [`QrdEngine::least_squares`]
+    /// — Givens triangularization of the augmented system plus back
+    /// substitution, f32 wire values widened to the engine's f64 entry.
+    fn run_solve(&self, m: usize, jobs: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        jobs.iter()
+            .map(|job| {
+                let a: Vec<Vec<f64>> = (0..m)
+                    .map(|i| {
+                        (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect()
+                    })
+                    .collect();
+                let b: Vec<f64> =
+                    job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
+                self.eng.least_squares(&a, &b).iter().map(|&x| (x as f32).to_bits()).collect()
+            })
+            .collect()
+    }
+
+    /// One incremental column-append QR update per job: the payload is
+    /// the k = m−2 stored rotations (interleaved `cs, sn` words) then
+    /// the new length-m column; the answer the updated column followed
+    /// by the fresh rotation — `[col'₀..col'ₘ₋₁, csₖ, snₖ]`. Wraps
+    /// [`append_column`], whose incremental update is locked bit-exact
+    /// against the full-recompute oracle.
+    fn run_append(&self, m: usize, jobs: &[Vec<u32>]) -> Vec<Vec<u32>> {
+        let k = m - 2;
+        jobs.iter()
+            .map(|job| {
+                let rots: Vec<(f32, f32)> = (0..k)
+                    .map(|i| (f32::from_bits(job[2 * i]), f32::from_bits(job[2 * i + 1])))
+                    .collect();
+                let mut col: Vec<f32> =
+                    job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
+                let (cs, sn) = append_column(&rots, &mut col);
+                let mut out: Vec<u32> = col.iter().map(|v| v.to_bits()).collect();
+                out.push(cs.to_bits());
+                out.push(sn.to_bits());
+                out
+            })
+            .collect()
+    }
+
+    /// The Qrd arm of [`BatchEngine::run`]: the pre-v3 batch body,
+    /// tile/blocked/thread heuristics unchanged.
+    fn run_qrd(&self, m: usize, mats: &[Vec<u32>]) -> Vec<Vec<u32>> {
         let n = mats.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        check_uniform(m, mats)?;
         // A 4×4 matrix is a few µs; a scoped-thread spawn is tens of µs
         // and fresh threads re-warm their thread-local workspaces, so
         // only fan out when every worker gets a meaty chunk. The gate
@@ -306,11 +378,11 @@ impl BatchEngine for NativeEngine {
             // sweeps up to ⌊m/2⌋×(row tail) lanes, and a tile of
             // several large matrices would blow the L1 working set the
             // tile default was sized for.
-            return Ok(if nt <= 1 {
+            return if nt <= 1 {
                 mats.iter().map(|a| self.qrd_bits_m(m, a)).collect()
             } else {
                 par::par_map_with(nt, n, |i| self.qrd_bits_m(m, &mats[i]))
-            });
+            };
         }
         // batch-interleaved path: chunk the batch into lane-major tiles
         // (the last tile may be partial) and fan the *tiles* out across
@@ -318,7 +390,7 @@ impl BatchEngine for NativeEngine {
         let tile = self.tile;
         let tiles = (n + tile - 1) / tile;
         let nt = nt.min(tiles);
-        Ok(if nt <= 1 {
+        if nt <= 1 {
             let mut out = Vec::with_capacity(n);
             for chunk in mats.chunks(tile) {
                 out.extend(self.qrd_bits_tile_m(m, chunk));
@@ -333,18 +405,33 @@ impl BatchEngine for NativeEngine {
             .into_iter()
             .flatten()
             .collect()
+        }
+    }
+}
+
+impl BatchEngine for NativeEngine {
+    fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        if jobs.is_empty() {
+            return Ok(Vec::new());
+        }
+        check_uniform(key, jobs)?;
+        let m = key.m();
+        Ok(match key.op {
+            OpKind::Qrd => self.run_qrd(m, jobs),
+            OpKind::Solve => self.run_solve(m, jobs),
+            OpKind::AppendQr => self.run_append(m, jobs),
         })
     }
 
-    fn preferred_batch(&self, _m: usize) -> usize {
+    fn preferred_batch(&self, _key: JobKey) -> usize {
         // no fixed shape: any batch the policy builds is executable at
-        // any m, so the service's per-bin clamp must never bind here
+        // any key, so the service's per-bin clamp must never bind here
         usize::MAX
     }
 
     fn name(&self) -> String {
         format!(
-            "native ({}, {} thread{}, {}, blocked m≥{})",
+            "native ({}, {} thread{}, {}, blocked m≥{}{})",
             self.eng.rot.cfg.label(),
             self.threads,
             if self.threads == 1 { "" } else { "s" },
@@ -354,6 +441,7 @@ impl BatchEngine for NativeEngine {
                 format!("tile {}", self.tile)
             },
             self.blocked_min,
+            if self.panel == 0 { String::new() } else { format!(" panel {}", self.panel) },
         )
     }
 }
@@ -371,8 +459,9 @@ impl PjrtEngine {
 
     /// Batch size `make artifacts` lowers the default artifact for.
     /// The single source of the magic number: the service clamps every
-    /// worker's batches per bin to `preferred_batch(m)` — which reports
-    /// this value for the artifact's own m and 1 for every other bin
+    /// worker's batches per bin to `preferred_batch(key)` — which
+    /// reports this value for the artifact's own key and 1 for every
+    /// other bin
     /// (those batches fail fast with per-request errors) — so nothing
     /// else needs to repeat it.
     pub const ARTIFACT_BATCH: usize = 256;
@@ -387,9 +476,19 @@ impl PjrtEngine {
 }
 
 impl BatchEngine for PjrtEngine {
-    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
-        // the artifact is lowered for one shape: refuse every other m
-        // (recoverable — the bin fails, the worker keeps serving m=4)
+    fn run(&self, key: JobKey, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        // the artifact is lowered for one shape: refuse every other key
+        // (recoverable — the bin fails, the worker keeps serving
+        // qrd/m4)
+        let m = key.m();
+        if key.op != OpKind::Qrd {
+            return Err(format!(
+                "pjrt artifact {} only serves {}, cannot serve {}",
+                self.path,
+                JobKey::qrd(Self::ARTIFACT_M).label(),
+                key.label()
+            ));
+        }
         if m != Self::ARTIFACT_M {
             return Err(format!(
                 "pjrt artifact {} is lowered for m={}, cannot serve m={m}",
@@ -397,7 +496,7 @@ impl BatchEngine for PjrtEngine {
                 Self::ARTIFACT_M
             ));
         }
-        check_uniform(m, mats)?;
+        check_uniform(key, mats)?;
         let words = m * m;
         // bits → f32 (the artifact bitcasts internally)
         let mut flat = Vec::with_capacity(mats.len() * words);
@@ -417,8 +516,8 @@ impl BatchEngine for PjrtEngine {
             .collect())
     }
 
-    fn preferred_batch(&self, m: usize) -> usize {
-        if m == Self::ARTIFACT_M {
+    fn preferred_batch(&self, key: JobKey) -> usize {
+        if key.op == OpKind::Qrd && key.m() == Self::ARTIFACT_M {
             self.rt.batch
         } else {
             // unsupported bins degrade to single-request batches so the
@@ -515,18 +614,122 @@ mod tests {
     }
 
     #[test]
-    fn mixed_size_batches_error_instead_of_truncating() {
+    fn mixed_shape_batches_error_instead_of_truncating() {
         let eng = NativeEngine::flagship();
         // one 3×3 matrix smuggled into an m=4 batch
         let mats = vec![vec![0u32; 16], vec![0u32; 9], vec![0u32; 16]];
-        let err = eng.run(4, &mats).expect_err("mixed batch must be rejected");
-        assert!(err.contains("matrix 1") && err.contains("9 words"), "{err}");
-        // m = 0 is malformed, not a panic
-        assert!(eng.run(0, &[vec![]]).is_err());
-        // the PJRT engine rejects every m but the artifact's
+        let err = eng.run(JobKey::qrd(4), &mats).expect_err("mixed batch must be rejected");
+        assert!(err.contains("job 1") && err.contains("9 words"), "{err}");
+        // m = 0 is malformed, not a panic — for every op
+        assert!(eng.run(JobKey::qrd(0), &[vec![]]).is_err());
+        assert!(eng.run(JobKey::new(OpKind::Solve, 0), &[vec![]]).is_err());
+        // append_qr needs a pivot pair: m = 1 is malformed too
+        let err = eng
+            .run(JobKey::new(OpKind::AppendQr, 1), &[vec![0]])
+            .expect_err("append_qr m=1 must be rejected");
+        assert!(err.contains("m ≥ 2"), "{err}");
+        // a solve batch with a qrd-sized payload is mixed-shape
+        let err = eng
+            .run(JobKey::new(OpKind::Solve, 4), &[vec![0u32; 16]])
+            .expect_err("solve payload must carry the rhs");
+        assert!(err.contains("expected 20") && err.contains("solve/m4"), "{err}");
+        // the PJRT engine rejects every key but the artifact's
         // (constructing one needs the artifact, so assert the constant
         // the service relies on instead)
         assert_eq!(PjrtEngine::ARTIFACT_M, 4);
+    }
+
+    #[test]
+    fn solve_batches_match_the_least_squares_oracle() {
+        let eng = NativeEngine::flagship();
+        let mut rng = crate::util::rng::Rng::new(911);
+        for m in [1usize, 2, 4, 7] {
+            let key = JobKey::new(OpKind::Solve, m);
+            let jobs: Vec<Vec<u32>> = (0..5)
+                .map(|k| {
+                    (0..m * m + m)
+                        .map(|e| {
+                            // diagonal dominance keeps the systems well
+                            // conditioned
+                            let base = rng.range(-1.0, 1.0) as f32;
+                            let v = if e < m * m && e % (m + 1) == 0 {
+                                base + 4.0 + k as f32
+                            } else {
+                                base
+                            };
+                            v.to_bits()
+                        })
+                        .collect()
+                })
+                .collect();
+            let got = eng.run(key, &jobs).unwrap();
+            assert_eq!(got.len(), jobs.len());
+            for (job, x) in jobs.iter().zip(&got) {
+                assert_eq!(x.len(), key.response_words());
+                // oracle: the f64 least-squares entry point on the same
+                // decoded system — the engine arm must agree bit for
+                // bit, being the same computation behind the wire codec
+                let a: Vec<Vec<f64>> = (0..m)
+                    .map(|i| (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect())
+                    .collect();
+                let b: Vec<f64> =
+                    job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
+                let want: Vec<u32> =
+                    eng.eng.least_squares(&a, &b).iter().map(|&v| (v as f32).to_bits()).collect();
+                assert_eq!(x, &want, "m={m}");
+                // and the solution actually solves the system
+                for (i, row) in a.iter().enumerate() {
+                    let ax: f64 = row
+                        .iter()
+                        .zip(x.iter())
+                        .map(|(&aij, &xj)| aij * f32::from_bits(xj) as f64)
+                        .sum();
+                    assert!((ax - b[i]).abs() < 1e-2 * b[i].abs().max(1.0), "m={m} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_qr_batches_match_the_incremental_kernel() {
+        let eng = NativeEngine::flagship();
+        let mut rng = crate::util::rng::Rng::new(747);
+        for m in [2usize, 3, 6, 12] {
+            let key = JobKey::new(OpKind::AppendQr, m);
+            let k = m - 2;
+            let jobs: Vec<Vec<u32>> = (0..4)
+                .map(|_| {
+                    // normalized (cs, sn) pairs then the new column
+                    let mut words = Vec::with_capacity(3 * m - 4);
+                    for _ in 0..k {
+                        let t = rng.range(-3.0, 3.0);
+                        words.push((t.cos() as f32).to_bits());
+                        words.push((t.sin() as f32).to_bits());
+                    }
+                    for _ in 0..m {
+                        words.push((rng.range(-2.0, 2.0) as f32).to_bits());
+                    }
+                    words
+                })
+                .collect();
+            let got = eng.run(key, &jobs).unwrap();
+            for (job, out) in jobs.iter().zip(&got) {
+                assert_eq!(out.len(), key.response_words());
+                // oracle: the append kernel on the decoded payload
+                let rots: Vec<(f32, f32)> = (0..k)
+                    .map(|i| (f32::from_bits(job[2 * i]), f32::from_bits(job[2 * i + 1])))
+                    .collect();
+                let mut col: Vec<f32> =
+                    job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
+                let (cs, sn) = append_column(&rots, &mut col);
+                let mut want: Vec<u32> = col.iter().map(|v| v.to_bits()).collect();
+                want.push(cs.to_bits());
+                want.push(sn.to_bits());
+                assert_eq!(out, &want, "m={m}");
+                // the updated column's last entry is the exact zero
+                assert_eq!(out[m - 1], 0.0f32.to_bits(), "m={m}: subdiagonal must zero");
+            }
+        }
     }
 
     #[test]
@@ -538,7 +741,8 @@ mod tests {
         let mats: Vec<Vec<u32>> = (0..200)
             .map(|_| (0..16).map(|_| (rng.range(-2.0, 2.0) as f32).to_bits()).collect())
             .collect();
-        assert_eq!(serial.run(4, &mats).unwrap(), parallel.run(4, &mats).unwrap());
+        let key = JobKey::qrd(4);
+        assert_eq!(serial.run(key, &mats).unwrap(), parallel.run(key, &mats).unwrap());
     }
 
     #[test]
@@ -583,7 +787,7 @@ mod tests {
                 for &tile in &[0usize, 1, 3, 4, 16, 64] {
                     let eng = NativeEngine::flagship().with_threads(threads).with_tile(tile);
                     assert_eq!(
-                        eng.run(4, &mats).unwrap(),
+                        eng.run(JobKey::qrd(4), &mats).unwrap(),
                         want,
                         "n={n} threads={threads} tile={tile}"
                     );
@@ -597,5 +801,28 @@ mod tests {
         assert!(NativeEngine::flagship().name().contains("tile 16"));
         assert!(NativeEngine::flagship().with_tile(0).name().contains("per-matrix"));
         assert!(NativeEngine::flagship().name().contains("blocked m≥16"));
+        assert!(!NativeEngine::flagship().name().contains("panel"));
+        assert!(NativeEngine::flagship().with_panel(4).name().contains("panel 4"));
+    }
+
+    #[test]
+    fn panel_widths_are_bit_identical_on_the_blocked_path() {
+        // the with_panel knob reshapes the waves but must never change
+        // a bit of output — blocked_min = 1 forces every m through the
+        // blocked path so the knob is actually exercised
+        let mut rng = crate::util::rng::Rng::new(808);
+        for m in [2usize, 5, 9] {
+            let a: Vec<u32> = (0..m * m)
+                .map(|_| {
+                    let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+                    (rng.range(-1.0, 1.0) as f32 * s).to_bits()
+                })
+                .collect();
+            let want = NativeEngine::flagship().with_blocked(1).qrd_bits_m(m, &a);
+            for panel in [1usize, 2, 3, m] {
+                let eng = NativeEngine::flagship().with_blocked(1).with_panel(panel);
+                assert_eq!(eng.qrd_bits_m(m, &a), want, "m={m} panel={panel}");
+            }
+        }
     }
 }

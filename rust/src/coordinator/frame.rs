@@ -1,40 +1,58 @@
-//! Length-prefixed wire framing for format v2 over a byte stream.
+//! Length-prefixed wire framing for format v3 over a byte stream.
 //!
-//! One frame carries one v2 message: a request (m×m matrix bits), a
-//! response (`[R | G]` bits or an error string), a metrics snapshot
-//! exchange, or a shutdown order. The layout is fixed little-endian:
+//! One frame carries one message: a request (one job for an op on the
+//! Givens datapath), a response (output words or an error string), a
+//! metrics snapshot exchange, or a shutdown order. The layout is fixed
+//! little-endian:
 //!
 //! ```text
 //! offset  size  field
 //! 0       4     magic      0x3244_5251 ("QRD2" as bytes on the wire)
-//! 4       1     version    2 (wire format v2)
+//! 4       1     version    3 (v2 frames are still accepted: op = 0)
 //! 5       1     kind       1 req | 2 resp | 3 stats | 4 stats-resp | 5 shutdown
 //! 6       1     status     responses: 0 ok | 1 error | 2 deadline-timeout
-//! 7       1     reserved   0
+//! 7       1     op         0 qrd | 1 solve | 2 append-qr (v2: reserved 0)
 //! 8       8     request id u64, echoed verbatim in the response
-//! 16      4     m          matrix dimension (0 for control frames)
+//! 16      4     m          job dimension (0 for control frames)
 //! 20      4     payload    byte length of the payload that follows
-//! 24      n     payload    request: m*m u32 words (LE); ok response:
-//!                          m*2m words; error response: UTF-8 reason;
-//!                          stats-resp: u64 counter block (see `net`)
+//! 24      n     payload    request/ok response: u32 words (LE), layout
+//!                          per op (see `coordinator::key`); error
+//!                          response: UTF-8 reason; stats-resp: u64
+//!                          counter block (see `net`)
 //! ```
+//!
+//! Version 2 of the format carried byte 7 as `reserved = 0`, which is
+//! exactly the `op = Qrd` encoding — so every v2 frame decodes as a
+//! QRD job and old clients keep working unchanged.
 //!
 //! Decoding distinguishes *how* a stream is broken, because the server
 //! accounts each differently: a clean EOF at a frame boundary is a
 //! normal close, EOF mid-frame is a truncated frame, a read timeout
 //! with zero bytes of the next frame is an idle (healthy) connection
 //! while a timeout mid-frame is a stalled (slow-loris) peer, and bad
-//! magic/version/kind/size is garbage. Every malformed variant is a
+//! magic/version/kind/op/size is garbage. Every malformed variant is a
 //! counted, handled path — never a panic, never an unbounded read
 //! (`MAX_PAYLOAD` caps allocation before any buffer is trusted).
+//!
+//! Request payloads whose length is a whole number of words are
+//! decoded **straight into a `Vec<u32>`** (the socket read lands in
+//! the word buffer's own storage — no intermediate byte buffer, no
+//! word-by-word re-copy); [`Frame::take_words`] then moves that vector
+//! out so the service's `Request` owns the very allocation the bytes
+//! arrived in.
 
+use super::key::OpKind;
 use std::io::{ErrorKind, Read, Write};
 
 /// Frame magic: the bytes `QRD2` on the wire (read back as one LE u32).
 pub const MAGIC: u32 = 0x3244_5251;
 
-/// Wire format version carried in every frame.
-pub const VERSION: u8 = 2;
+/// Wire format version written by this build.
+pub const VERSION: u8 = 3;
+
+/// Oldest wire format version still accepted (v2 = QRD-only, byte 7
+/// reserved as 0 — decoded as `op = Qrd`).
+pub const MIN_VERSION: u8 = 2;
 
 /// Fixed header length in bytes; the payload follows immediately.
 pub const HEADER_LEN: usize = 24;
@@ -55,7 +73,7 @@ pub const STATUS_DEADLINE: u8 = 2;
 /// What a frame is (header byte 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FrameKind {
-    /// Client → server: decompose one m×m matrix.
+    /// Client → server: run one job (op × m) on the datapath.
     Request,
     /// Server → client: the answer to one request (status qualifies).
     Response,
@@ -97,34 +115,51 @@ pub struct Frame {
     pub kind: FrameKind,
     /// Response status (`STATUS_*`); 0 on non-response frames.
     pub status: u8,
+    /// Operation discriminant (header byte 7): `OpKind::as_u8`.
+    /// Responses echo the request's op; control frames carry 0.
+    pub op: u8,
     /// Request id, echoed verbatim in the matching response.
     pub id: u64,
-    /// Matrix dimension (0 for control frames).
+    /// Job dimension (0 for control frames).
     pub m: u32,
     /// Raw payload bytes (interpretation depends on `kind`/`status`).
+    /// Empty when the payload was decoded into `words` instead.
     pub payload: Vec<u8>,
+    /// Word-aligned payload decoded in place (requests and word
+    /// constructors). Exactly one of `payload`/`words` carries data.
+    pub words: Option<Vec<u32>>,
 }
 
 impl Frame {
-    /// A request frame for one m×m matrix of FP bit words.
+    /// A QRD request frame for one m×m matrix of FP bit words (the
+    /// v2-era constructor; op = `OpKind::Qrd`).
     pub fn request(id: u64, m: u32, words: &[u32]) -> Frame {
+        Frame::request_op(id, OpKind::Qrd, m, words)
+    }
+
+    /// A request frame for one job of the given op.
+    pub fn request_op(id: u64, op: OpKind, m: u32, words: &[u32]) -> Frame {
         Frame {
             kind: FrameKind::Request,
             status: STATUS_OK,
+            op: op.as_u8(),
             id,
             m,
-            payload: words_to_bytes(words),
+            payload: Vec::new(),
+            words: Some(words.to_vec()),
         }
     }
 
-    /// An ok response carrying the `m × 2m` output words.
+    /// An ok response carrying the job's output words.
     pub fn response_ok(id: u64, m: u32, words: &[u32]) -> Frame {
         Frame {
             kind: FrameKind::Response,
             status: STATUS_OK,
+            op: 0,
             id,
             m,
-            payload: words_to_bytes(words),
+            payload: Vec::new(),
+            words: Some(words.to_vec()),
         }
     }
 
@@ -133,30 +168,70 @@ impl Frame {
         Frame {
             kind: FrameKind::Response,
             status,
+            op: 0,
             id,
             m,
             payload: reason.as_bytes().to_vec(),
+            words: None,
         }
     }
 
     /// A metrics-snapshot request.
     pub fn stats_request(id: u64) -> Frame {
-        Frame { kind: FrameKind::Stats, status: STATUS_OK, id, m: 0, payload: Vec::new() }
+        Frame {
+            kind: FrameKind::Stats,
+            status: STATUS_OK,
+            op: 0,
+            id,
+            m: 0,
+            payload: Vec::new(),
+            words: None,
+        }
     }
 
     /// A metrics-snapshot response carrying an encoded counter block.
     pub fn stats_response(id: u64, payload: Vec<u8>) -> Frame {
-        Frame { kind: FrameKind::StatsResponse, status: STATUS_OK, id, m: 0, payload }
+        Frame {
+            kind: FrameKind::StatsResponse,
+            status: STATUS_OK,
+            op: 0,
+            id,
+            m: 0,
+            payload,
+            words: None,
+        }
     }
 
     /// A server-shutdown order.
     pub fn shutdown(id: u64) -> Frame {
-        Frame { kind: FrameKind::Shutdown, status: STATUS_OK, id, m: 0, payload: Vec::new() }
+        Frame {
+            kind: FrameKind::Shutdown,
+            status: STATUS_OK,
+            op: 0,
+            id,
+            m: 0,
+            payload: Vec::new(),
+            words: None,
+        }
+    }
+
+    /// Builder: set the op byte (responses echo their request's op).
+    pub fn with_op(mut self, op: u8) -> Frame {
+        self.op = op;
+        self
+    }
+
+    /// Payload length in bytes, whichever representation carries it.
+    pub fn payload_len(&self) -> usize {
+        self.words.as_ref().map_or(self.payload.len(), |w| w.len() * 4)
     }
 
     /// Payload reinterpreted as LE u32 words; `None` when the length is
-    /// not a whole number of words (a malformed matrix payload).
+    /// not a whole number of words (a malformed job payload).
     pub fn words(&self) -> Option<Vec<u32>> {
+        if let Some(w) = &self.words {
+            return Some(w.clone());
+        }
         if self.payload.len() % 4 != 0 {
             return None;
         }
@@ -168,23 +243,61 @@ impl Frame {
         )
     }
 
-    /// Payload as (lossy) UTF-8 — the error-reason view.
-    pub fn text(&self) -> String {
-        String::from_utf8_lossy(&self.payload).into_owned()
+    /// Move the word view out of the frame without copying. Requests
+    /// decoded off the wire land here as the very `Vec<u32>` the socket
+    /// bytes were read into; the caller's `Request` takes ownership.
+    pub fn take_words(&mut self) -> Option<Vec<u32>> {
+        if self.words.is_some() {
+            return self.words.take();
+        }
+        self.words() // misaligned → None; byte-backed but aligned → copy
     }
 
-    /// Serialize to wire bytes (header + payload).
+    /// Payload as (lossy) UTF-8 — the error-reason view.
+    pub fn text(&self) -> String {
+        match &self.words {
+            Some(w) => {
+                let mut bytes = Vec::with_capacity(w.len() * 4);
+                for v in w {
+                    bytes.extend_from_slice(&v.to_le_bytes());
+                }
+                String::from_utf8_lossy(&bytes).into_owned()
+            }
+            None => String::from_utf8_lossy(&self.payload).into_owned(),
+        }
+    }
+
+    /// Serialize to wire bytes (header + payload), version 3.
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(HEADER_LEN + self.payload.len());
+        self.encode_version(VERSION)
+    }
+
+    /// Serialize as a v2 frame (byte 4 = 2, byte 7 = 0) — what an
+    /// old QRD-only client puts on the wire. Kept so the v2-compat
+    /// path stays testable end to end.
+    pub fn encode_v2(&self) -> Vec<u8> {
+        self.encode_version(2)
+    }
+
+    fn encode_version(&self, version: u8) -> Vec<u8> {
+        let plen = self.payload_len();
+        let mut out = Vec::with_capacity(HEADER_LEN + plen);
         out.extend_from_slice(&MAGIC.to_le_bytes());
-        out.push(VERSION);
+        out.push(version);
         out.push(self.kind.as_u8());
         out.push(self.status);
-        out.push(0); // reserved
+        out.push(if version == 2 { 0 } else { self.op }); // v2: reserved
         out.extend_from_slice(&self.id.to_le_bytes());
         out.extend_from_slice(&self.m.to_le_bytes());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&self.payload);
+        out.extend_from_slice(&(plen as u32).to_le_bytes());
+        match &self.words {
+            Some(w) => {
+                for v in w {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            None => out.extend_from_slice(&self.payload),
+        }
         out
     }
 
@@ -192,14 +305,6 @@ impl Frame {
     pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         w.write_all(&self.encode())
     }
-}
-
-fn words_to_bytes(words: &[u32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(words.len() * 4);
-    for w in words {
-        out.extend_from_slice(&w.to_le_bytes());
-    }
-    out
 }
 
 /// Successful outcomes of [`read_frame`] that are not a frame.
@@ -235,6 +340,9 @@ pub enum FrameError {
     BadVersion(u8),
     /// Unknown frame kind.
     BadKind(u8),
+    /// A v3 request carrying an op discriminant this build doesn't
+    /// know — a malformed frame, counted and answered like bad magic.
+    BadOp(u8),
     /// Declared payload length over [`MAX_PAYLOAD`].
     Oversize(u32),
     /// Transport-level failure (reset, broken pipe, …) — a connection
@@ -262,6 +370,7 @@ impl std::fmt::Display for FrameError {
             FrameError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
             FrameError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
             FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::BadOp(o) => write!(f, "unknown op discriminant {o}"),
             FrameError::Oversize(n) => {
                 write!(f, "payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
             }
@@ -318,6 +427,11 @@ fn fill<R: Read>(r: &mut R, buf: &mut [u8], already: usize) -> Result<Fill, Fram
 /// boundary; `Ok(Idle)` is a read timeout with no bytes of the next
 /// frame consumed (set a socket read timeout to get these); every
 /// broken-stream shape is a distinct [`FrameError`].
+///
+/// Accepts versions [`MIN_VERSION`]..=[`VERSION`]; a v2 frame (byte 7
+/// reserved) decodes with `op = 0` (= `OpKind::Qrd`). Word-aligned
+/// request payloads are read directly into the frame's `words` vector
+/// — no intermediate byte buffer exists to copy out of.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
     let mut hdr = [0u8; HEADER_LEN];
     match fill(r, &mut hdr, 0)? {
@@ -329,11 +443,19 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
     if magic != MAGIC {
         return Err(FrameError::BadMagic(magic));
     }
-    if hdr[4] != VERSION {
-        return Err(FrameError::BadVersion(hdr[4]));
+    let version = hdr[4];
+    if !(MIN_VERSION..=VERSION).contains(&version) {
+        return Err(FrameError::BadVersion(version));
     }
     let kind = FrameKind::from_u8(hdr[5]).ok_or(FrameError::BadKind(hdr[5]))?;
     let status = hdr[6];
+    // v2 wrote byte 7 as reserved-zero; decoding it as the op byte is
+    // exactly the compat story (0 = Qrd), so no version branch needed
+    // beyond validation: a v3 *request* must name an op we know.
+    let op = if version == 2 { 0 } else { hdr[7] };
+    if kind == FrameKind::Request && OpKind::from_u8(op).is_none() {
+        return Err(FrameError::BadOp(op));
+    }
     let id = u64::from_le_bytes([
         hdr[8], hdr[9], hdr[10], hdr[11], hdr[12], hdr[13], hdr[14], hdr[15],
     ]);
@@ -342,11 +464,37 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
     if plen as usize > MAX_PAYLOAD {
         return Err(FrameError::Oversize(plen));
     }
+    // CleanEof/IdleTimeout are unreachable in the payload fills:
+    // `already > 0` turns both into Truncated/Stalled errors
+    if kind == FrameKind::Request && plen % 4 == 0 {
+        // zero-copy path: land the payload bytes in the word vector's
+        // own storage, then fix endianness in place (a no-op on LE)
+        let mut words = vec![0u32; plen as usize / 4];
+        {
+            // SAFETY: a `[u32]`'s storage is valid for byte writes over
+            // its full length (len·4 bytes, alignment 4 ≥ 1), and the
+            // view dies before `words` is used again.
+            let bytes = unsafe {
+                std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, plen as usize)
+            };
+            let _ = fill(r, bytes, HEADER_LEN)?;
+        }
+        for w in words.iter_mut() {
+            *w = u32::from_le(*w);
+        }
+        return Ok(ReadOutcome::Frame(Frame {
+            kind,
+            status,
+            op,
+            id,
+            m,
+            payload: Vec::new(),
+            words: Some(words),
+        }));
+    }
     let mut payload = vec![0u8; plen as usize];
-    // CleanEof/IdleTimeout are unreachable here: `already > 0` turns
-    // both into Truncated/Stalled errors
     let _ = fill(r, &mut payload, HEADER_LEN)?;
-    Ok(ReadOutcome::Frame(Frame { kind, status, id, m, payload }))
+    Ok(ReadOutcome::Frame(Frame { kind, status, op, id, m, payload, words: None }))
 }
 
 #[cfg(test)]
@@ -370,8 +518,71 @@ mod tests {
         assert_eq!(back, f);
         assert_eq!(back.words().unwrap(), words);
         assert_eq!(back.kind, FrameKind::Request);
+        assert_eq!(back.op, OpKind::Qrd.as_u8());
         assert_eq!(back.id, 42);
         assert_eq!(back.m, 3);
+    }
+
+    #[test]
+    fn every_op_round_trips_with_its_discriminant() {
+        for op in OpKind::ALL {
+            let words: Vec<u32> = (0..8).map(|i| i * 7 + 1).collect();
+            let f = Frame::request_op(5, op, 4, &words);
+            let back = match decode(&f.encode()) {
+                Ok(ReadOutcome::Frame(b)) => b,
+                other => panic!("{op:?}: {other:?}"),
+            };
+            assert_eq!(back, f);
+            assert_eq!(OpKind::from_u8(back.op), Some(op));
+        }
+    }
+
+    #[test]
+    fn v2_frames_decode_as_qrd() {
+        // an old client writes version 2 with byte 7 reserved-zero; the
+        // decoder must accept it and hand back op = Qrd
+        let words: Vec<u32> = (0..4).map(|i| i + 10).collect();
+        let f = Frame::request(8, 2, &words);
+        let v2 = f.encode_v2();
+        assert_eq!(v2[4], 2, "version byte");
+        assert_eq!(v2[7], 0, "reserved byte");
+        let back = match decode(&v2) {
+            Ok(ReadOutcome::Frame(b)) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(OpKind::from_u8(back.op), Some(OpKind::Qrd));
+        assert_eq!(back.words().unwrap(), words);
+        assert_eq!(back, f, "a v2 request decodes identical to its v3 twin");
+    }
+
+    #[test]
+    fn unknown_op_on_a_request_is_rejected() {
+        let mut bad = Frame::request(1, 2, &[1, 2, 3, 4]).encode();
+        bad[7] = 9;
+        match decode(&bad) {
+            Err(FrameError::BadOp(9)) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(FrameError::BadOp(9).is_malformed());
+        // ...but a *response* echoing an op is never op-validated (the
+        // client asked for it; the server echoes bytes)
+        let mut resp = Frame::response_ok(1, 2, &[1, 2, 3, 4]).with_op(2).encode();
+        resp[7] = 9;
+        assert!(matches!(decode(&resp), Ok(ReadOutcome::Frame(_))));
+    }
+
+    #[test]
+    fn take_words_moves_the_decoded_buffer_out() {
+        let words: Vec<u32> = (0..16).map(|i| i * 3).collect();
+        let bytes = Frame::request(1, 4, &words).encode();
+        let mut f = match decode(&bytes) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(f.payload.is_empty(), "no intermediate byte buffer may survive decode");
+        let taken = f.take_words().expect("aligned payload");
+        assert_eq!(taken, words);
+        assert!(f.words.is_none(), "the buffer moved out, not copied");
     }
 
     #[test]
@@ -379,6 +590,7 @@ mod tests {
         let frames = [
             Frame::request(1, 4, &[0u32; 16]),
             Frame::response_ok(2, 4, &[7u32; 32]),
+            Frame::response_ok(8, 4, &[7u32; 32]).with_op(1),
             Frame::response_error(3, 5, STATUS_ERROR, "boom"),
             Frame::response_error(4, 5, STATUS_DEADLINE, "deadline exceeded"),
             Frame::stats_request(5),
@@ -390,7 +602,17 @@ mod tests {
                 Ok(ReadOutcome::Frame(b)) => b,
                 other => panic!("{other:?} for {f:?}"),
             };
-            assert_eq!(back, f);
+            // responses land byte-backed while constructors are
+            // word-backed; compare through the views, not the storage
+            assert_eq!(back.kind, f.kind);
+            assert_eq!(back.status, f.status);
+            assert_eq!(back.op, f.op);
+            assert_eq!(back.id, f.id);
+            assert_eq!(back.m, f.m);
+            assert_eq!(back.words(), f.words());
+            if f.words.is_none() {
+                assert_eq!(back.payload, f.payload);
+            }
         }
         let err = Frame::response_error(3, 5, STATUS_ERROR, "boom");
         assert_eq!(err.text(), "boom");
@@ -437,10 +659,13 @@ mod tests {
         let mut bad = Frame::shutdown(1).encode();
         bad[0] ^= 0xFF;
         assert!(matches!(decode(&bad), Err(FrameError::BadMagic(_))));
-        // wrong version
+        // wrong version (v2 and v3 both pass; anything else fails)
         let mut bad = Frame::shutdown(1).encode();
         bad[4] = 9;
         assert!(matches!(decode(&bad), Err(FrameError::BadVersion(9))));
+        let mut bad = Frame::shutdown(1).encode();
+        bad[4] = 1;
+        assert!(matches!(decode(&bad), Err(FrameError::BadVersion(1))));
         // unknown kind
         let mut bad = Frame::shutdown(1).encode();
         bad[5] = 77;
@@ -454,6 +679,7 @@ mod tests {
             FrameError::BadMagic(0),
             FrameError::BadVersion(0),
             FrameError::BadKind(0),
+            FrameError::BadOp(0),
             FrameError::Oversize(0),
             FrameError::Stalled { got: 1 },
         ] {
@@ -504,13 +730,21 @@ mod tests {
         let f = Frame {
             kind: FrameKind::Request,
             status: STATUS_OK,
+            op: 0,
             id: 1,
             m: 2,
             payload: vec![0u8; 15],
+            words: None,
         };
         assert!(f.words().is_none());
         // …but the frame itself still round-trips (the *transport* is
         // fine; rejecting the matrix is the service's job)
-        assert!(matches!(decode(&f.encode()), Ok(ReadOutcome::Frame(_))));
+        match decode(&f.encode()) {
+            Ok(ReadOutcome::Frame(back)) => {
+                assert!(back.words.is_none(), "misaligned payloads stay byte-backed");
+                assert_eq!(back.payload.len(), 15);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,0 +1,201 @@
+//! The batching/routing/accounting key: `JobKey { op, m }`.
+//!
+//! Every layer of the serving stack that used to speak a raw matrix
+//! dimension speaks a `JobKey` instead: the wire format carries the op
+//! in its header (byte 7), the batchers bin on the full key (engines
+//! only ever see uniform-key batches), the sharded router hashes the
+//! key to a home shard, and the metrics/net ledgers reconcile per key.
+//! Adding a workload to the datapath is adding an `OpKind` variant plus
+//! an engine arm — not a nine-module re-plumb.
+//!
+//! Payload contracts (u32 words of f32 bit patterns, little-endian on
+//! the wire), with k = m − 2 for AppendQr:
+//!
+//! | op       | request words            | ok-response words         |
+//! |----------|--------------------------|---------------------------|
+//! | Qrd      | m·m (row-major A)        | m·2m (`[R \| G]`)         |
+//! | Solve    | m·m + m (A then b)       | m (x)                     |
+//! | AppendQr | 2k + m (cs,sn pairs, col)| m + 2 (col', cs_k, sn_k)  |
+
+/// Which operation a job runs on the Givens datapath (wire byte 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    /// Full QR decomposition of one m×m matrix: `[A] → [R | G]`.
+    Qrd,
+    /// Batched least-squares solve `min ‖A·x − b‖₂` of an m×m system
+    /// (wraps `qrd::solve::least_squares`).
+    Solve,
+    /// Incremental column-append QR (the GMRES Hessenberg update):
+    /// replay k stored rotations on a new length-m column, append one
+    /// rotation zeroing its last entry.
+    AppendQr,
+}
+
+impl OpKind {
+    /// Every op, in wire-discriminant order.
+    pub const ALL: [OpKind; 3] = [OpKind::Qrd, OpKind::Solve, OpKind::AppendQr];
+
+    /// Decode the wire discriminant (header byte 7).
+    pub fn from_u8(b: u8) -> Option<OpKind> {
+        match b {
+            0 => Some(OpKind::Qrd),
+            1 => Some(OpKind::Solve),
+            2 => Some(OpKind::AppendQr),
+            _ => None,
+        }
+    }
+
+    /// The wire discriminant (header byte 7).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            OpKind::Qrd => 0,
+            OpKind::Solve => 1,
+            OpKind::AppendQr => 2,
+        }
+    }
+
+    /// Dense index for per-op metric arrays (`0..N_OPS`).
+    pub fn index(self) -> usize {
+        self.as_u8() as usize
+    }
+
+    /// Human label for reports and bench entry names.
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Qrd => "qrd",
+            OpKind::Solve => "solve",
+            OpKind::AppendQr => "append_qr",
+        }
+    }
+}
+
+/// Number of ops (size of the per-op metric dimension).
+pub const N_OPS: usize = OpKind::ALL.len();
+
+/// The single batching/routing/accounting key: one op × one dimension.
+///
+/// `Ord` makes it a `BTreeMap` bin key (the batcher), `Hash`/the
+/// explicit [`JobKey::shard_hash`] make it routable, `Copy` keeps it a
+/// plain value everywhere a raw `m: usize` used to travel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobKey {
+    /// The operation.
+    pub op: OpKind,
+    /// The job dimension (matrix/column size, op-specific meaning).
+    pub m: u32,
+}
+
+impl JobKey {
+    /// Key for one op × dimension.
+    pub fn new(op: OpKind, m: usize) -> JobKey {
+        JobKey { op, m: m as u32 }
+    }
+
+    /// The v2-era key: a plain QRD of dimension m.
+    pub fn qrd(m: usize) -> JobKey {
+        JobKey::new(OpKind::Qrd, m)
+    }
+
+    /// Dimension as the `usize` the engines index with.
+    pub fn m(&self) -> usize {
+        self.m as usize
+    }
+
+    /// Smallest dimension the op is defined for (AppendQr needs a
+    /// column of at least 2 to have a pivot pair).
+    pub fn min_m(&self) -> usize {
+        match self.op {
+            OpKind::Qrd | OpKind::Solve => 1,
+            OpKind::AppendQr => 2,
+        }
+    }
+
+    /// Request payload length in u32 words (the service gate and the
+    /// engines' uniform-batch audit both check against this).
+    pub fn request_words(&self) -> usize {
+        let m = self.m();
+        match self.op {
+            OpKind::Qrd => m * m,
+            OpKind::Solve => m * m + m,
+            OpKind::AppendQr => 3 * m - 4, // 2(m−2) rotation words + m column words
+        }
+    }
+
+    /// Ok-response payload length in u32 words.
+    pub fn response_words(&self) -> usize {
+        let m = self.m();
+        match self.op {
+            OpKind::Qrd => 2 * m * m,
+            OpKind::Solve => m,
+            OpKind::AppendQr => m + 2, // updated column + the new (cs, sn)
+        }
+    }
+
+    /// Stable hash for key-affine routing: same key → same home shard
+    /// (mod the slot count), distinct (op, m) pairs spread well even
+    /// over tiny slot counts. Fibonacci-style multiplicative mixing.
+    pub fn shard_hash(&self) -> u64 {
+        let x = ((self.op.index() as u64) << 32) | self.m as u64;
+        let h = x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^ (h >> 29)
+    }
+
+    /// `op/m` label for reports and bench entry names.
+    pub fn label(&self) -> String {
+        format!("{}/m{}", self.op.label(), self.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_discriminants_round_trip() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::from_u8(op.as_u8()), Some(op));
+        }
+        assert_eq!(OpKind::from_u8(3), None);
+        assert_eq!(OpKind::from_u8(255), None);
+        // Qrd must be discriminant 0: that is the v2 reserved byte
+        assert_eq!(OpKind::Qrd.as_u8(), 0);
+    }
+
+    #[test]
+    fn payload_contracts() {
+        assert_eq!(JobKey::qrd(4).request_words(), 16);
+        assert_eq!(JobKey::qrd(4).response_words(), 32);
+        assert_eq!(JobKey::new(OpKind::Solve, 3).request_words(), 12);
+        assert_eq!(JobKey::new(OpKind::Solve, 3).response_words(), 3);
+        // AppendQr m=2 degenerates to zero stored rotations
+        assert_eq!(JobKey::new(OpKind::AppendQr, 2).request_words(), 2);
+        assert_eq!(JobKey::new(OpKind::AppendQr, 2).response_words(), 4);
+        assert_eq!(JobKey::new(OpKind::AppendQr, 6).request_words(), 14);
+        assert_eq!(JobKey::new(OpKind::AppendQr, 6).response_words(), 8);
+    }
+
+    #[test]
+    fn keys_order_and_hash_distinctly() {
+        let a = JobKey::qrd(4);
+        let b = JobKey::new(OpKind::Solve, 4);
+        let c = JobKey::qrd(5);
+        assert!(a < b, "op is the major sort key");
+        assert!(a < c);
+        assert_ne!(a.shard_hash(), b.shard_hash());
+        assert_ne!(a.shard_hash(), c.shard_hash());
+        // same-key hashing is stable (the routing invariant)
+        assert_eq!(a.shard_hash(), JobKey::qrd(4).shard_hash());
+    }
+
+    #[test]
+    fn shard_hash_spreads_over_small_slot_counts() {
+        // distinct m of one op must not all collapse onto one slot
+        for slots in [2usize, 3, 4, 8] {
+            let mut seen = std::collections::BTreeSet::new();
+            for m in 2..=16 {
+                seen.insert(JobKey::qrd(m).shard_hash() as usize % slots);
+            }
+            assert!(seen.len() > 1, "{slots} slots: all keys on one shard");
+        }
+    }
+}

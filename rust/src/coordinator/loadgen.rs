@@ -1,28 +1,33 @@
 //! Fault-injecting load generator for the TCP ingress (`repro loadgen`).
 //!
-//! Drives many concurrent connections of mixed-m traffic at a
-//! [`super::net::NetServer`] and — with `--chaos` — makes a fraction of
-//! them hostile: truncated frames, garbage bytes, mid-request
-//! disconnects, stalled mid-frame reads (slow-loris), and half-closes.
-//! Every connection keeps a client-side ledger; at the end the run
-//! fetches the server's [`super::net::StatsSnapshot`] over the wire
-//! and **reconciles**: the socket-boundary identity must hold exactly
-//! (accepted = responded + deadline_timeouts + peer_vanished, per m),
-//! `frames_malformed` must equal the number of malformed-traffic
-//! connections injected, every connection must be closed, and reliable
-//! (clean/half-close) connections must have received exactly one
-//! response per request. Any unaccounted request fails the run.
+//! Drives many concurrent connections of mixed-op, mixed-m traffic
+//! (`--ops` picks the [`OpKind`] mix) at a [`super::net::NetServer`]
+//! and — with `--chaos` — makes a fraction of them hostile: truncated
+//! frames, garbage bytes, mid-request disconnects, stalled mid-frame
+//! reads (slow-loris), and half-closes. Every connection keeps a
+//! client-side ledger keyed by [`JobKey`]; at the end the run fetches
+//! the server's [`super::net::StatsSnapshot`] over the wire and
+//! **reconciles**: the socket-boundary identity must hold exactly
+//! (accepted = responded + deadline_timeouts + peer_vanished, per
+//! `JobKey`), `frames_malformed` must equal the number of
+//! malformed-traffic connections injected, every connection must be
+//! closed, and reliable (clean/half-close) connections must have
+//! received exactly one response per request — with the response frame
+//! echoing its request's op byte. Any unaccounted request fails the
+//! run.
 //!
 //! Fault classes are deterministic per connection index (seeded), so a
 //! run is reproducible. The clean arm doubles as a correctness probe:
 //! a sample of its responses is checked bit-exact against the
-//! reference triangularization.
+//! reference path for its op.
 
-use super::net::NetClient;
 use super::frame::{read_frame, Frame, FrameKind, ReadOutcome, STATUS_OK};
-use super::NativeEngine;
+use super::key::{JobKey, OpKind};
+use super::net::NetClient;
+use super::{BatchEngine, NativeEngine};
 use crate::util::bench::{merge_json, BenchResult};
 use crate::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,6 +48,9 @@ pub struct LoadgenConfig {
     pub requests_per_conn: usize,
     /// Mixed-m traffic samples m uniformly in `[2, max_m]`.
     pub max_m: usize,
+    /// Operation mix: each request samples its op uniformly from this
+    /// list (`--ops qrd,solve,append_qr`; repeats skew the mix).
+    pub ops: Vec<OpKind>,
     /// Enable the five fault classes (off = every connection clean).
     pub chaos: bool,
     /// Seed for the deterministic per-connection behavior.
@@ -62,6 +70,7 @@ impl Default for LoadgenConfig {
             threads: 32,
             requests_per_conn: 8,
             max_m: 8,
+            ops: vec![OpKind::Qrd],
             chaos: false,
             seed: 42,
             shutdown: false,
@@ -136,8 +145,8 @@ struct ConnLedger {
     sent: u64,
     /// Request responses read back (any status).
     received: u64,
-    /// Requests written, by m (index = m).
-    sent_per_m: Vec<u64>,
+    /// Requests written, by `JobKey`.
+    sent_per_key: BTreeMap<JobKey, u64>,
     /// Round-trip seconds for clean-connection responses.
     latencies: Vec<f64>,
     /// Contract breaches observed client-side.
@@ -148,12 +157,12 @@ struct ConnLedger {
 }
 
 impl ConnLedger {
-    fn new(class: Class, max_m: usize) -> ConnLedger {
+    fn new(class: Class) -> ConnLedger {
         ConnLedger {
             class,
             sent: 0,
             received: 0,
-            sent_per_m: vec![0; max_m + 1],
+            sent_per_key: BTreeMap::new(),
             latencies: Vec::new(),
             violations: Vec::new(),
             injected: false,
@@ -161,13 +170,47 @@ impl ConnLedger {
     }
 }
 
-/// A random well-formed request payload: m in `[2, max_m]`, a few
-/// binades of magnitude (the same distribution `serve_with` drives).
-fn random_request(rng: &mut Rng, max_m: usize) -> (usize, Vec<u32>) {
-    let m = 2 + rng.below((max_m.max(2) - 1) as u64) as usize;
+/// A random well-formed request: op from the configured mix, m in
+/// `[2, max_m]`, a few binades of magnitude (the same distribution
+/// `serve_with` drives). Solve payloads get a dominant diagonal so the
+/// synthetic systems stay well-conditioned; append payloads carry a
+/// plausible (cos, sin) rotation prefix.
+fn random_request(rng: &mut Rng, cfg: &LoadgenConfig) -> (JobKey, Vec<u32>) {
+    let m = 2 + rng.below((cfg.max_m.max(2) - 1) as u64) as usize;
+    let op = cfg.ops[rng.below(cfg.ops.len() as u64) as usize];
+    let key = JobKey::new(op, m);
     let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
-    let a = (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits()).collect();
-    (m, a)
+    let mut a: Vec<u32> = (0..key.request_words())
+        .map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
+        .collect();
+    match op {
+        OpKind::Qrd => {}
+        OpKind::Solve => {
+            for e in (0..m * m).step_by(m + 1) {
+                a[e] = (f32::from_bits(a[e]) + 4.0 * scale).to_bits();
+            }
+        }
+        OpKind::AppendQr => {
+            for i in 0..m - 2 {
+                let t = rng.range(-3.1, 3.1);
+                a[2 * i] = (t.cos() as f32).to_bits();
+                a[2 * i + 1] = (t.sin() as f32).to_bits();
+            }
+        }
+    }
+    (key, a)
+}
+
+/// The bit-exact expectation for one request: the independent reference
+/// triangularization for QRD; the native engine's own op path (already
+/// locked to its mathematical oracle in the engine tests) for the rest.
+fn expected_bits(reference: &NativeEngine, key: JobKey, a: &[u32]) -> Vec<u32> {
+    match key.op {
+        OpKind::Qrd => reference.qrd_bits_reference_m(key.m(), a),
+        OpKind::Solve | OpKind::AppendQr => {
+            reference.run(key, &[a.to_vec()]).expect("reference op")[0].clone()
+        }
+    }
 }
 
 /// Read frames until EOF, a broken stream, or `limit` elapses.
@@ -210,19 +253,21 @@ fn run_reliable(
         }
     };
     let mut sent_at = Vec::with_capacity(cfg.requests_per_conn);
+    let mut keys = Vec::with_capacity(cfg.requests_per_conn);
     let mut spots = Vec::new();
     for i in 0..cfg.requests_per_conn {
-        let (m, a) = random_request(rng, cfg.max_m);
+        let (key, a) = random_request(rng, cfg);
         let id = (i + 1) as u64;
         if i % 33 == 0 && !half_close {
-            spots.push((id, m, a.clone()));
+            spots.push((id, key, a.clone()));
         }
-        if let Err(e) = client.send_request(id, m as u32, &a) {
+        if let Err(e) = client.send_request_key(id, key, &a) {
             led.violations.push(format!("send {id} failed: {e}"));
             return;
         }
         led.sent += 1;
-        led.sent_per_m[m] += 1;
+        *led.sent_per_key.entry(key).or_insert(0) += 1;
+        keys.push(key);
         sent_at.push(Instant::now());
     }
     led.injected = true;
@@ -243,9 +288,16 @@ fn run_reliable(
                 if !half_close {
                     led.latencies.push(sent_at[i].elapsed().as_secs_f64());
                 }
+                if OpKind::from_u8(f.op) != Some(keys[i].op) {
+                    led.violations.push(format!(
+                        "response {id} echoed op byte {} for a {} request",
+                        f.op,
+                        keys[i].label()
+                    ));
+                }
                 if f.status == STATUS_OK {
-                    if let Some((_, m, a)) = spots.iter().find(|(sid, _, _)| *sid == id) {
-                        let want = reference.qrd_bits_reference_m(*m, a);
+                    if let Some((_, key, a)) = spots.iter().find(|(sid, _, _)| *sid == id) {
+                        let want = expected_bits(reference, *key, a);
                         if f.words().as_deref() != Some(&want[..]) {
                             led.violations
                                 .push(format!("response {id} diverged from the reference bits"));
@@ -294,14 +346,14 @@ fn run_disconnect(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut Conn
         }
     };
     for i in 0..cfg.requests_per_conn {
-        let (m, a) = random_request(rng, cfg.max_m);
-        if client.send_request((i + 1) as u64, m as u32, &a).is_err() {
+        let (key, a) = random_request(rng, cfg);
+        if client.send_request_key((i + 1) as u64, key, &a).is_err() {
             // the server may close on us at any point; not a violation
             // for this class
             return;
         }
         led.sent += 1;
-        led.sent_per_m[m] += 1;
+        *led.sent_per_key.entry(key).or_insert(0) += 1;
     }
     led.injected = true;
     for _ in 0..cfg.requests_per_conn / 2 {
@@ -330,8 +382,8 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
     let fin = match led.class {
         Class::Truncated => {
             // every truncation point of a valid frame is fair game
-            let (m, a) = random_request(rng, cfg.max_m);
-            let full = Frame::request(1, m as u32, &a).encode();
+            let (key, a) = random_request(rng, cfg);
+            let full = Frame::request_op(1, key.op, key.m() as u32, &a).encode();
             let cut = 1 + rng.below((full.len() - 1) as u64) as usize;
             if stream.write_all(&full[..cut]).is_err() {
                 return;
@@ -352,8 +404,8 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
         Class::SlowLoris => {
             // a partial frame, then silence with the socket open: the
             // server's read timeout must cut us off
-            let (m, a) = random_request(rng, cfg.max_m);
-            let full = Frame::request(1, m as u32, &a).encode();
+            let (key, a) = random_request(rng, cfg);
+            let full = Frame::request_op(1, key.op, key.m() as u32, &a).encode();
             let cut = 1 + rng.below((full.len() - 1) as u64) as usize;
             if stream.write_all(&full[..cut]).is_err() {
                 return;
@@ -384,7 +436,7 @@ fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLe
     // only on (seed, idx)
     let mut rng = Rng::new(cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let class = Class::pick(&mut rng, cfg.chaos);
-    let mut led = ConnLedger::new(class, cfg.max_m);
+    let mut led = ConnLedger::new(class);
     match class {
         Class::Clean => run_reliable(&cfg.addr, &mut rng, cfg, reference, false, &mut led),
         Class::HalfClose => run_reliable(&cfg.addr, &mut rng, cfg, reference, true, &mut led),
@@ -401,6 +453,7 @@ fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLe
 pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     anyhow::ensure!(cfg.conns > 0, "--conns must be at least 1");
     anyhow::ensure!(cfg.max_m >= 2, "--max-m must be at least 2");
+    anyhow::ensure!(!cfg.ops.is_empty(), "--ops needs at least one op");
     // wait for the server to come up (CI starts it in the background)
     let probe_deadline = Instant::now() + Duration::from_secs(10);
     loop {
@@ -437,8 +490,8 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
 
     // ---- client-side aggregation --------------------------------
     let mut per_class = [(0u64, 0u64, 0u64, 0u64); CLASSES.len()]; // conns, sent, received, violations
-    let mut reliable_sent_per_m = vec![0u64; cfg.max_m + 1];
-    let mut disconnect_sent_per_m = vec![0u64; cfg.max_m + 1];
+    let mut reliable_sent_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
+    let mut disconnect_sent_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
     let mut malformed_injected = 0u64;
     let mut latencies: Vec<f64> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
@@ -455,13 +508,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
         }
         match led.class {
             Class::Clean | Class::HalfClose => {
-                for (m, n) in led.sent_per_m.iter().enumerate() {
-                    reliable_sent_per_m[m] += n;
+                for (key, n) in &led.sent_per_key {
+                    *reliable_sent_per_key.entry(*key).or_insert(0) += n;
                 }
             }
             Class::Disconnect => {
-                for (m, n) in led.sent_per_m.iter().enumerate() {
-                    disconnect_sent_per_m[m] += n;
+                for (key, n) in &led.sent_per_key {
+                    *disconnect_sent_per_key.entry(*key).or_insert(0) += n;
                 }
             }
             _ => {
@@ -493,13 +546,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     if !snap.reconciles() {
         failures.push(format!(
             "identity broken: accepted {} != responded {} + timeouts {} + vanished {} \
-             ({} unaccounted; per-m rows {:?})",
+             ({} unaccounted; per-key rows {:?})",
             snap.accepted,
             snap.responded,
             snap.deadline_timeouts,
             snap.peer_vanished,
             snap.unaccounted(),
-            snap.per_m,
+            snap.per_key,
         ));
     }
     if snap.conn_opened != snap.conn_closed + 1 {
@@ -514,20 +567,31 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
             snap.frames_malformed, malformed_injected
         ));
     }
-    // per-m bounds: the server must have accepted everything the
-    // reliable classes sent, and nothing beyond what was ever sent
-    for m in 0..=cfg.max_m {
+    // per-key bounds: the server must have accepted everything the
+    // reliable classes sent, and nothing beyond what was ever sent —
+    // over the union of every key either side saw, so a key the server
+    // binned that no client sent (or vice versa) still fails
+    let mut all_keys: BTreeSet<JobKey> = BTreeSet::new();
+    all_keys.extend(reliable_sent_per_key.keys().copied());
+    all_keys.extend(disconnect_sent_per_key.keys().copied());
+    for &(op, m, ..) in &snap.per_key {
+        if let Some(op) = OpKind::from_u8(op as u8) {
+            all_keys.insert(JobKey::new(op, m as usize));
+        }
+    }
+    for key in all_keys {
         let acc = snap
-            .per_m
+            .per_key
             .iter()
-            .find(|(mm, ..)| *mm == m as u64)
-            .map(|(_, a, ..)| *a)
+            .find(|(op, m, ..)| *op == key.op.index() as u64 && *m == key.m() as u64)
+            .map(|(_, _, a, ..)| *a)
             .unwrap_or(0);
-        let lo = reliable_sent_per_m[m];
-        let hi = lo + disconnect_sent_per_m[m];
+        let lo = reliable_sent_per_key.get(&key).copied().unwrap_or(0);
+        let hi = lo + disconnect_sent_per_key.get(&key).copied().unwrap_or(0);
         if acc < lo || acc > hi {
             failures.push(format!(
-                "m={m}: server accepted {acc}, outside the sent bounds [{lo}, {hi}]"
+                "{}: server accepted {acc}, outside the sent bounds [{lo}, {hi}]",
+                key.label()
             ));
         }
     }
@@ -539,8 +603,9 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     }
 
     // ---- report -------------------------------------------------
-    println!("loadgen           : {} conns × {} reqs, m ∈ [2, {}], chaos {}", cfg.conns,
-        cfg.requests_per_conn, cfg.max_m, if cfg.chaos { "on" } else { "off" });
+    let ops_mix: Vec<&str> = cfg.ops.iter().map(|o| o.label()).collect();
+    println!("loadgen           : {} conns × {} reqs, ops {}, m ∈ [2, {}], chaos {}", cfg.conns,
+        cfg.requests_per_conn, ops_mix.join(","), cfg.max_m, if cfg.chaos { "on" } else { "off" });
     println!("wall time         : {wall:.3} s");
     for (i, c) in CLASSES.iter().enumerate() {
         let (n, sent, recv, viol) = per_class[i];

@@ -1,7 +1,13 @@
 //! Service metrics: request/batch counters, per-worker accounting, and
 //! a lock-free log-bucketed latency histogram so p50/p90/p99 come from
 //! the service itself rather than ad-hoc client-side math.
+//!
+//! Every dimensioned counter is binned by the full [`JobKey`] — op ×
+//! matrix size — so the "no dropped requests" reconciliation identity
+//! holds per (op, m) pair, not just per size: a Solve answered against
+//! a Qrd of the same m is an identity violation, not a wash.
 
+use super::key::{JobKey, OpKind, N_OPS};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of log-spaced histogram buckets (microsecond scale). Bucket 0
@@ -106,10 +112,14 @@ impl LatencyHistogram {
 }
 
 /// Per-m bin index cap: matrix sizes up to this get their own counter
-/// slot; anything larger shares the last slot. The service keeps this
-/// from ever binding: `QrdService::with_max_m` clamps its accept gate
-/// to [`Metrics::MAX_TRACKED_M`], so every accepted m has its own bin.
+/// slot per op; anything larger shares the op's last slot. The service
+/// keeps this from ever binding: `QrdService::with_max_m` clamps its
+/// accept gate to [`Metrics::MAX_TRACKED_M`], so every accepted key has
+/// its own bin.
 const M_BINS: usize = 65;
+
+/// One counter slot per (op, m) pair.
+const KEY_BINS: usize = N_OPS * M_BINS;
 
 /// Shared coordinator metrics (lock-free counters + histogram).
 #[derive(Debug)]
@@ -123,25 +133,25 @@ pub struct Metrics {
     engine_errors: AtomicU64,
     stolen_requests: AtomicU64,
     per_worker_batches: Vec<AtomicU64>,
-    /// Requests accepted per matrix size (wire format v2 bins).
-    m_requests: Vec<AtomicU64>,
-    /// Requests served with an ok response per matrix size.
-    m_served: Vec<AtomicU64>,
-    /// Batches executed per matrix size.
-    m_batches: Vec<AtomicU64>,
+    /// Requests accepted per job key (op × matrix size).
+    key_requests: Vec<AtomicU64>,
+    /// Requests served with an ok response per job key.
+    key_served: Vec<AtomicU64>,
+    /// Batches executed per job key.
+    key_batches: Vec<AtomicU64>,
     latency: LatencyHistogram,
     // network-ingress lifecycle (coordinator::net) ------------------
     conn_opened: AtomicU64,
     conn_closed: AtomicU64,
     frames_malformed: AtomicU64,
-    /// Requests accepted off a socket per matrix size.
+    /// Requests accepted off a socket per job key.
     net_accepted: Vec<AtomicU64>,
-    /// Responses (ok or error) written back to a peer per matrix size.
+    /// Responses (ok or error) written back to a peer per job key.
     net_responded: Vec<AtomicU64>,
-    /// Deadline-timeout responses written per matrix size.
+    /// Deadline-timeout responses written per job key.
     net_deadline_timeouts: Vec<AtomicU64>,
     /// Accepted requests whose peer vanished before a response could be
-    /// written (deliberate, counted drops), per matrix size.
+    /// written (deliberate, counted drops), per job key.
     net_peer_vanished: Vec<AtomicU64>,
 }
 
@@ -169,23 +179,29 @@ impl Metrics {
             engine_errors: AtomicU64::new(0),
             stolen_requests: AtomicU64::new(0),
             per_worker_batches: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
-            m_requests: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
-            m_served: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
-            m_batches: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            key_requests: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            key_served: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            key_batches: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
             latency: LatencyHistogram::default(),
             conn_opened: AtomicU64::new(0),
             conn_closed: AtomicU64::new(0),
             frames_malformed: AtomicU64::new(0),
-            net_accepted: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
-            net_responded: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
-            net_deadline_timeouts: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
-            net_peer_vanished: (0..M_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_accepted: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_responded: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_deadline_timeouts: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_peer_vanished: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
     #[inline]
-    fn m_bin(m: usize) -> usize {
-        m.min(M_BINS - 1)
+    fn key_bin(key: JobKey) -> usize {
+        key.op.index() * M_BINS + key.m().min(M_BINS - 1)
+    }
+
+    /// Reverse of [`Self::key_bin`]: the key a dense bin index stands
+    /// for (the last m slot aliases every clamped oversize).
+    fn bin_key(bin: usize) -> JobKey {
+        JobKey::new(OpKind::ALL[bin / M_BINS], bin % M_BINS)
     }
 
     /// Record an accepted request.
@@ -210,43 +226,44 @@ impl Metrics {
         self.latency.record(us);
     }
 
-    /// Record an accepted request for matrix size `m` (its bin).
-    pub fn on_m_request(&self, m: usize) {
-        self.m_requests[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    /// Record an accepted request for `key` (its op × m bin).
+    pub fn on_key_request(&self, key: JobKey) {
+        self.key_requests[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record one executed uniform-m batch serving `n` ok responses.
-    pub fn on_m_batch(&self, m: usize, n: usize) {
-        let bin = Self::m_bin(m);
-        self.m_batches[bin].fetch_add(1, Ordering::Relaxed);
-        self.m_served[bin].fetch_add(n as u64, Ordering::Relaxed);
+    /// Record one executed uniform-key batch serving `n` ok responses.
+    pub fn on_key_batch(&self, key: JobKey, n: usize) {
+        let bin = Self::key_bin(key);
+        self.key_batches[bin].fetch_add(1, Ordering::Relaxed);
+        self.key_served[bin].fetch_add(n as u64, Ordering::Relaxed);
     }
 
-    /// Requests accepted for matrix size `m`.
-    pub fn m_requests(&self, m: usize) -> u64 {
-        self.m_requests[Self::m_bin(m)].load(Ordering::Relaxed)
+    /// Requests accepted for `key`.
+    pub fn key_requests(&self, key: JobKey) -> u64 {
+        self.key_requests[Self::key_bin(key)].load(Ordering::Relaxed)
     }
 
-    /// Requests served with an ok response for matrix size `m`.
-    pub fn m_served(&self, m: usize) -> u64 {
-        self.m_served[Self::m_bin(m)].load(Ordering::Relaxed)
+    /// Requests served with an ok response for `key`.
+    pub fn key_served(&self, key: JobKey) -> u64 {
+        self.key_served[Self::key_bin(key)].load(Ordering::Relaxed)
     }
 
-    /// Uniform-m batches executed for matrix size `m`.
-    pub fn m_batches(&self, m: usize) -> u64 {
-        self.m_batches[Self::m_bin(m)].load(Ordering::Relaxed)
+    /// Uniform-key batches executed for `key`.
+    pub fn key_batches(&self, key: JobKey) -> u64 {
+        self.key_batches[Self::key_bin(key)].load(Ordering::Relaxed)
     }
 
-    /// Non-empty per-m bins as `(m, requests, served, batches)` rows —
-    /// the reconciliation view: a clean run has `requests == served`
-    /// in every row, and the served totals sum to `requests()`.
-    pub fn per_m_bins(&self) -> Vec<(usize, u64, u64, u64)> {
-        (0..M_BINS)
-            .filter_map(|m| {
-                let req = self.m_requests[m].load(Ordering::Relaxed);
-                let srv = self.m_served[m].load(Ordering::Relaxed);
-                let bat = self.m_batches[m].load(Ordering::Relaxed);
-                (req != 0 || srv != 0 || bat != 0).then_some((m, req, srv, bat))
+    /// Non-empty per-key bins as `(key, requests, served, batches)`
+    /// rows — the reconciliation view: a clean run has `requests ==
+    /// served` in every row, and the served totals sum to
+    /// `requests()`. Rows come out in `JobKey` order (op-major).
+    pub fn per_key_bins(&self) -> Vec<(JobKey, u64, u64, u64)> {
+        (0..KEY_BINS)
+            .filter_map(|b| {
+                let req = self.key_requests[b].load(Ordering::Relaxed);
+                let srv = self.key_served[b].load(Ordering::Relaxed);
+                let bat = self.key_batches[b].load(Ordering::Relaxed);
+                (req != 0 || srv != 0 || bat != 0).then_some((Self::bin_key(b), req, srv, bat))
             })
             .collect()
     }
@@ -354,28 +371,28 @@ impl Metrics {
         self.frames_malformed.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Record a request accepted off a socket for matrix size `m`.
-    /// From this point the connection owes the reconciliation identity
-    /// exactly one of: responded, deadline timeout, or peer vanished.
-    pub fn on_net_accepted(&self, m: usize) {
-        self.net_accepted[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    /// Record a request accepted off a socket for `key`. From this
+    /// point the connection owes the reconciliation identity exactly
+    /// one of: responded, deadline timeout, or peer vanished.
+    pub fn on_net_accepted(&self, key: JobKey) {
+        self.net_accepted[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a response (ok or error) written back to the peer.
-    pub fn on_net_responded(&self, m: usize) {
-        self.net_responded[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    pub fn on_net_responded(&self, key: JobKey) {
+        self.net_responded[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record a deadline-timeout response written back to the peer.
-    pub fn on_deadline_timeout(&self, m: usize) {
-        self.net_deadline_timeouts[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    pub fn on_deadline_timeout(&self, key: JobKey) {
+        self.net_deadline_timeouts[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record an accepted request dropped because its peer vanished
     /// (write failed or the connection died with the request in
     /// flight) — the deliberate, counted drop class.
-    pub fn on_peer_vanished(&self, m: usize) {
-        self.net_peer_vanished[Self::m_bin(m)].fetch_add(1, Ordering::Relaxed);
+    pub fn on_peer_vanished(&self, key: JobKey) {
+        self.net_peer_vanished[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Connections accepted.
@@ -393,61 +410,62 @@ impl Metrics {
         self.frames_malformed.load(Ordering::Relaxed)
     }
 
-    /// Socket requests accepted for matrix size `m`.
-    pub fn net_accepted(&self, m: usize) -> u64 {
-        self.net_accepted[Self::m_bin(m)].load(Ordering::Relaxed)
+    /// Socket requests accepted for `key`.
+    pub fn net_accepted(&self, key: JobKey) -> u64 {
+        self.net_accepted[Self::key_bin(key)].load(Ordering::Relaxed)
     }
 
-    /// Socket responses written for matrix size `m`.
-    pub fn net_responded(&self, m: usize) -> u64 {
-        self.net_responded[Self::m_bin(m)].load(Ordering::Relaxed)
+    /// Socket responses written for `key`.
+    pub fn net_responded(&self, key: JobKey) -> u64 {
+        self.net_responded[Self::key_bin(key)].load(Ordering::Relaxed)
     }
 
-    /// Socket requests accepted, all sizes.
+    /// Socket requests accepted, all keys.
     pub fn net_accepted_total(&self) -> u64 {
         self.net_accepted.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Socket responses written, all sizes.
+    /// Socket responses written, all keys.
     pub fn net_responded_total(&self) -> u64 {
         self.net_responded.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Deadline-timeout responses written, all sizes.
+    /// Deadline-timeout responses written, all keys.
     pub fn deadline_timeouts(&self) -> u64 {
         self.net_deadline_timeouts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Accepted requests dropped on a vanished peer, all sizes.
+    /// Accepted requests dropped on a vanished peer, all keys.
     pub fn peer_vanished(&self) -> u64 {
         self.net_peer_vanished.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Non-empty per-m network bins as `(m, accepted, responded,
+    /// Non-empty per-key network bins as `(key, accepted, responded,
     /// deadline_timeouts, peer_vanished)` rows — the socket-boundary
-    /// reconciliation view.
-    pub fn per_m_net_bins(&self) -> Vec<(usize, u64, u64, u64, u64)> {
-        (0..M_BINS)
-            .filter_map(|m| {
-                let acc = self.net_accepted[m].load(Ordering::Relaxed);
-                let rsp = self.net_responded[m].load(Ordering::Relaxed);
-                let ddl = self.net_deadline_timeouts[m].load(Ordering::Relaxed);
-                let van = self.net_peer_vanished[m].load(Ordering::Relaxed);
-                (acc != 0 || rsp != 0 || ddl != 0 || van != 0).then_some((m, acc, rsp, ddl, van))
+    /// reconciliation view, op-major key order.
+    pub fn per_key_net_bins(&self) -> Vec<(JobKey, u64, u64, u64, u64)> {
+        (0..KEY_BINS)
+            .filter_map(|b| {
+                let acc = self.net_accepted[b].load(Ordering::Relaxed);
+                let rsp = self.net_responded[b].load(Ordering::Relaxed);
+                let ddl = self.net_deadline_timeouts[b].load(Ordering::Relaxed);
+                let van = self.net_peer_vanished[b].load(Ordering::Relaxed);
+                (acc != 0 || rsp != 0 || ddl != 0 || van != 0)
+                    .then_some((Self::bin_key(b), acc, rsp, ddl, van))
             })
             .collect()
     }
 
     /// The socket-boundary "no dropped requests" identity, checked per
-    /// m bin: `accepted == responded + deadline_timeouts +
+    /// (op, m) bin: `accepted == responded + deadline_timeouts +
     /// peer_vanished` in every bin. Only meaningful once traffic has
     /// quiesced (in-flight requests make `accepted` lead).
     pub fn net_reconciles(&self) -> bool {
-        (0..M_BINS).all(|m| {
-            self.net_accepted[m].load(Ordering::Relaxed)
-                == self.net_responded[m].load(Ordering::Relaxed)
-                    + self.net_deadline_timeouts[m].load(Ordering::Relaxed)
-                    + self.net_peer_vanished[m].load(Ordering::Relaxed)
+        (0..KEY_BINS).all(|b| {
+            self.net_accepted[b].load(Ordering::Relaxed)
+                == self.net_responded[b].load(Ordering::Relaxed)
+                    + self.net_deadline_timeouts[b].load(Ordering::Relaxed)
+                    + self.net_peer_vanished[b].load(Ordering::Relaxed)
         })
     }
 }
@@ -501,23 +519,33 @@ mod tests {
     }
 
     #[test]
-    fn per_m_bins_reconcile() {
+    fn per_key_bins_reconcile() {
         let m = Metrics::new(2);
-        m.on_m_request(2);
-        m.on_m_request(2);
-        m.on_m_request(8);
-        m.on_m_batch(2, 2);
-        m.on_m_batch(8, 1);
-        assert_eq!(m.m_requests(2), 2);
-        assert_eq!(m.m_served(2), 2);
-        assert_eq!(m.m_batches(2), 1);
-        assert_eq!(m.m_requests(8), 1);
-        assert_eq!(m.per_m_bins(), vec![(2, 2, 2, 1), (8, 1, 1, 1)]);
-        assert_eq!(m.m_requests(5), 0);
+        let q2 = JobKey::qrd(2);
+        let q8 = JobKey::qrd(8);
+        m.on_key_request(q2);
+        m.on_key_request(q2);
+        m.on_key_request(q8);
+        m.on_key_batch(q2, 2);
+        m.on_key_batch(q8, 1);
+        assert_eq!(m.key_requests(q2), 2);
+        assert_eq!(m.key_served(q2), 2);
+        assert_eq!(m.key_batches(q2), 1);
+        assert_eq!(m.key_requests(q8), 1);
+        assert_eq!(m.per_key_bins(), vec![(q2, 2, 2, 1), (q8, 1, 1, 1)]);
+        assert_eq!(m.key_requests(JobKey::qrd(5)), 0);
+        // same m, different op: distinct bins
+        let s2 = JobKey::new(OpKind::Solve, 2);
+        assert_eq!(m.key_requests(s2), 0);
+        m.on_key_request(s2);
+        m.on_key_batch(s2, 1);
+        assert_eq!(m.key_requests(s2), 1);
+        assert_eq!(m.key_requests(q2), 2, "qrd bin untouched by solve traffic");
+        assert_eq!(m.per_key_bins(), vec![(q2, 2, 2, 1), (q8, 1, 1, 1), (s2, 1, 1, 1)]);
         // oversized bins clamp instead of panicking
-        m.on_m_request(10_000);
-        assert_eq!(m.m_requests(10_000), 1);
-        assert_eq!(m.m_requests(M_BINS - 1), 1);
+        m.on_key_request(JobKey::qrd(10_000));
+        assert_eq!(m.key_requests(JobKey::qrd(10_000)), 1);
+        assert_eq!(m.key_requests(JobKey::qrd(M_BINS - 1)), 1);
     }
 
     #[test]
@@ -531,32 +559,40 @@ mod tests {
         assert_eq!(m.conn_opened(), 2);
         assert_eq!(m.conn_closed(), 1);
         assert_eq!(m.frames_malformed(), 1);
-        // three accepted at m=4: one served, one timed out, one vanished
-        m.on_net_accepted(4);
-        m.on_net_accepted(4);
-        m.on_net_accepted(4);
-        m.on_net_responded(4);
+        // three accepted at qrd/m4: one served, one timed out, one
+        // vanished
+        let q4 = JobKey::qrd(4);
+        m.on_net_accepted(q4);
+        m.on_net_accepted(q4);
+        m.on_net_accepted(q4);
+        m.on_net_responded(q4);
         assert!(!m.net_reconciles(), "two requests still unaccounted");
-        m.on_deadline_timeout(4);
-        m.on_peer_vanished(4);
+        m.on_deadline_timeout(q4);
+        m.on_peer_vanished(q4);
         assert!(m.net_reconciles());
-        assert_eq!(m.net_accepted(4), 3);
-        assert_eq!(m.net_responded(4), 1);
+        assert_eq!(m.net_accepted(q4), 3);
+        assert_eq!(m.net_responded(q4), 1);
         assert_eq!(m.net_accepted_total(), 3);
         assert_eq!(m.net_responded_total(), 1);
         assert_eq!(m.deadline_timeouts(), 1);
         assert_eq!(m.peer_vanished(), 1);
-        assert_eq!(m.per_m_net_bins(), vec![(4, 3, 1, 1, 1)]);
+        assert_eq!(m.per_key_net_bins(), vec![(q4, 3, 1, 1, 1)]);
         // identity is per-bin: totals matching across different bins
         // must NOT reconcile
-        m.on_net_accepted(8);
-        m.on_net_responded(16);
+        m.on_net_accepted(JobKey::qrd(8));
+        m.on_net_responded(JobKey::qrd(16));
         assert!(!m.net_reconciles());
-        assert_eq!(m.per_m_net_bins().len(), 3);
+        assert_eq!(m.per_key_net_bins().len(), 3);
+        // …and the op is part of the bin: a Solve answered against a
+        // Qrd of the same m is an identity violation
+        let m2 = Metrics::new(2);
+        m2.on_net_accepted(JobKey::new(OpKind::Solve, 4));
+        m2.on_net_responded(JobKey::qrd(4));
+        assert!(!m2.net_reconciles(), "cross-op answers must not reconcile");
         // oversized bins clamp instead of panicking
-        m.on_net_accepted(10_000);
-        m.on_net_responded(10_000);
-        assert_eq!(m.net_accepted(M_BINS - 1), 1);
+        m.on_net_accepted(JobKey::qrd(10_000));
+        m.on_net_responded(JobKey::qrd(10_000));
+        assert_eq!(m.net_accepted(JobKey::qrd(M_BINS - 1)), 1);
     }
 
     #[test]

@@ -1,23 +1,27 @@
-//! Layer-3 streaming QRD coordinator.
+//! Layer-3 streaming coordinator for the Givens-rotation datapath.
 //!
-//! The deployable system around the rotation unit: clients submit m×m
-//! matrices (wire format v2 — the request carries its dimension, mixed
-//! sizes share one service), a dynamic batcher groups them (size +
-//! deadline policy, vLLM-router style) into **uniform-m bins**, a pool
-//! of persistent workers executes batches on either the bit-accurate
-//! native engine (any m; blocked wave schedules for large m) or the
-//! AOT-compiled PJRT artifact (shape-locked to 4×4), and responses
-//! stream back with per-request latency. Bounded queues give natural
-//! backpressure. Python is never on this path.
+//! The deployable system around the rotation unit: clients submit jobs
+//! keyed by [`JobKey`] — an operation ([`OpKind`]: full QR
+//! decomposition, batched least-squares solve, or incremental
+//! column-append QR) times a matrix dimension (wire format v3 carries
+//! both; v2 frames are still accepted as `op = Qrd`, and mixed traffic
+//! shares one service). A dynamic batcher groups requests (size +
+//! deadline policy, vLLM-router style) into **uniform-key bins**, a
+//! pool of persistent workers executes batches on either the
+//! bit-accurate native engine (any key; blocked wave schedules for
+//! large m) or the AOT-compiled PJRT artifact (shape-locked to
+//! qrd/m4), and responses stream back with per-request latency.
+//! Bounded queues give natural backpressure. Python is never on this
+//! path.
 //!
 //! Two pool topologies (see `service`): the baseline **shared-lock**
-//! pool (one per-m-binning `KeyedBatcher` behind a mutex) and the
+//! pool (one per-key-binning `KeyedBatcher` behind a mutex) and the
 //! **sharded** pool (per-worker `ShardQueue`s with keyed batch
-//! formation, round-robin routing, work stealing, supervised respawn
-//! of panicked workers) — the sharded topology
-//! mirrors the paper's fully pipelined datapath: no central arbiter on
-//! the request path, like the per-lane queues of the systolic QRD
-//! arrays (Rong '18; Merchant et al. '18).
+//! formation, key-affine routing with load-aware spill
+//! ([`RouterPolicy`]), work stealing, supervised respawn of panicked
+//! workers) — the sharded topology mirrors the paper's fully pipelined
+//! datapath: no central arbiter on the request path, like the per-lane
+//! queues of the systolic QRD arrays (Rong '18; Merchant et al. '18).
 //!
 //! Threading model: `std::thread` + blocking queues (the offline
 //! stand-in for tokio — request routing is CPU-bound here, so blocking
@@ -29,6 +33,7 @@
 mod batcher;
 mod engine;
 mod frame;
+mod key;
 mod loadgen;
 mod metrics;
 mod net;
@@ -38,10 +43,13 @@ mod shard;
 pub use batcher::{BatchPolicy, Batcher, KeyedBatcher};
 pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
 pub use frame::{read_frame, Frame, FrameError, FrameKind, ReadOutcome};
+pub use key::{JobKey, OpKind, N_OPS};
 pub use loadgen::{run_loadgen, LoadgenConfig};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use net::{NetClient, NetConfig, NetServer, StatsSnapshot};
-pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy};
+pub use service::{
+    PendingResponse, QrdService, Request, Response, RestartPolicy, RouterPolicy,
+};
 pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
@@ -71,14 +79,19 @@ pub struct ServeConfig {
     /// Batch-interleave tile size inside each native engine
     /// (`NativeEngine::with_tile`; 0/1 = per-matrix scalar path).
     pub tile: usize,
-    /// Largest matrix dimension the service accepts (wire format v2).
-    /// The synthetic load mixes m uniformly in `2..=max_m` (so the
-    /// default of 4 exercises m ∈ {2, 3, 4}); every per-m bin is
-    /// spot-checked bit-exact against `qrd_bits_reference_m`.
+    /// Largest matrix dimension the service accepts. The synthetic
+    /// load mixes m uniformly in `2..=max_m` (so the default of 4
+    /// exercises m ∈ {2, 3, 4}); every per-key bin is spot-checked
+    /// bit-exact against `qrd_bits_reference_m`.
     pub max_m: usize,
     /// Smallest m decomposed through the blocked wave schedule inside
     /// each native engine (`NativeEngine::with_blocked`).
     pub blocked_m: usize,
+    /// Wave panel width inside the blocked schedule
+    /// (`NativeEngine::with_panel`; 0 = full wavefront, 1 = flat
+    /// order). Every width is bit-identical — this is a
+    /// cache-shape/latency knob, not a numerics knob.
+    pub panel: usize,
 }
 
 impl Default for ServeConfig {
@@ -95,6 +108,7 @@ impl Default for ServeConfig {
             tile: NativeEngine::DEFAULT_TILE,
             max_m: 4,
             blocked_m: NativeEngine::DEFAULT_BLOCKED_MIN,
+            panel: 0,
         }
     }
 }
@@ -148,10 +162,12 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
             let threads = cfg.threads;
             let tile = cfg.tile;
             let blocked_m = cfg.blocked_m;
+            let panel = cfg.panel;
             let name = NativeEngine::flagship()
                 .with_threads(threads)
                 .with_tile(tile)
                 .with_blocked(blocked_m)
+                .with_panel(panel)
                 .name();
             // the factories are Fn, so one Vec serves either topology
             let factories: Vec<_> = (0..workers)
@@ -161,7 +177,8 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
                             NativeEngine::flagship()
                                 .with_threads(threads)
                                 .with_tile(tile)
-                                .with_blocked(blocked_m),
+                                .with_blocked(blocked_m)
+                                .with_panel(panel),
                         ) as Box<dyn BatchEngine>
                     }
                 })
@@ -300,10 +317,11 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
         m.worker_batch_counts()
     );
     println!("mean batch size   : {:.1}", m.mean_batch());
-    // per-m bin reconciliation: accepted vs served per matrix size
-    for (bin_m, req, srv, bat) in m.per_m_bins() {
+    // per-key bin reconciliation: accepted vs served per (op, m)
+    for (key, req, srv, bat) in m.per_key_bins() {
         println!(
-            "  m={bin_m:<3} bin       : {req} accepted, {srv} served, {bat} batches{}",
+            "  {:<12} bin  : {req} accepted, {srv} served, {bat} batches{}",
+            key.label(),
             if req == srv { "" } else { "  ← MISMATCH" }
         );
     }
@@ -351,7 +369,7 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
 /// the [`NetServer`] frontend on the configured pool, block until a
 /// client sends a shutdown frame (or the process is killed), then
 /// drain, print the socket-boundary ledger, and hold the run to the
-/// lifecycle invariants — the per-m identity
+/// lifecycle invariants — the per-key identity
 /// `accepted = responded + deadline_timeouts + peer_vanished` and
 /// `conn_opened == conn_closed` both must hold exactly at exit, so a
 /// chaos run that leaks even one request fails the server process too.
@@ -385,9 +403,10 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::
         m.deadline_timeouts(),
         m.peer_vanished()
     );
-    for (bin_m, acc, rsp, ddl, van) in m.per_m_net_bins() {
+    for (key, acc, rsp, ddl, van) in m.per_key_net_bins() {
         println!(
-            "  m={bin_m:<3} net bin   : {acc} accepted, {rsp} responded, {ddl} timeouts, {van} vanished{}",
+            "  {:<12} net  : {acc} accepted, {rsp} responded, {ddl} timeouts, {van} vanished{}",
+            key.label(),
             if acc == rsp + ddl + van { "" } else { "  ← UNACCOUNTED" }
         );
     }

@@ -1,18 +1,22 @@
-//! TCP ingress for the QRD service: wire format v2 frames over real
-//! sockets, with every connection-lifecycle failure a counted, handled
-//! path.
+//! TCP ingress for the QRD service: wire format v3 frames over real
+//! sockets (v2 frames still accepted as `op = Qrd`), with every
+//! connection-lifecycle failure a counted, handled path.
 //!
 //! One accepted connection gets a **reader/writer thread pair** joined
 //! by a bounded work channel — the per-connection in-flight window.
-//! The reader decodes frames and submits requests asynchronously; the
-//! writer waits each request out (against its arrival-stamped
-//! deadline) and streams responses back in FIFO order. When the window
-//! is full the reader's channel send blocks, which stops it reading
-//! from the socket: a slow or stalled client throttles *itself* (TCP
-//! backpressure) instead of growing an unbounded buffer server-side.
+//! The reader decodes frames — the word payload moves out of the frame
+//! without a copy ([`Frame::take_words`]) straight into the service's
+//! `Request` — and submits asynchronously; the writer waits each
+//! request out (against its arrival-stamped deadline) and streams
+//! responses back in FIFO order, each echoing its request's op byte.
+//! When the window is full the reader's channel send blocks, which
+//! stops it reading from the socket: a slow or stalled client
+//! throttles *itself* (TCP backpressure) instead of growing an
+//! unbounded buffer server-side.
 //!
 //! The PR 3 "no dropped requests" invariant extends across the socket
-//! boundary as an accounting identity, kept per matrix size:
+//! boundary as an accounting identity, kept per [`JobKey`]
+//! (operation × matrix size):
 //!
 //! ```text
 //! net_accepted == net_responded + deadline_timeouts + peer_vanished
@@ -25,7 +29,7 @@
 //! identity; the chaos load generator (`repro loadgen --chaos`) fails
 //! its run when it does not hold after quiescence.
 //!
-//! Malformed input (bad magic/version/kind, oversize, truncation, a
+//! Malformed input (bad magic/version/kind/op, oversize, truncation, a
 //! mid-frame stall) bumps `frames_malformed`, earns the peer one error
 //! frame when it is still writable, and closes the connection; a
 //! transport fault (reset, broken pipe) just closes it. Neither can
@@ -34,6 +38,7 @@
 use super::frame::{
     read_frame, Frame, FrameError, FrameKind, ReadOutcome, STATUS_DEADLINE, STATUS_ERROR,
 };
+use super::key::{JobKey, OpKind};
 use super::metrics::Metrics;
 use super::service::{PendingResponse, QrdService, Response};
 use std::io;
@@ -77,7 +82,7 @@ impl Default for NetConfig {
 /// channel carrying these is bounded by [`NetConfig::window`].
 enum Work {
     /// An accepted request in flight through the service.
-    Req { id: u64, m: usize, arrival: Instant, pending: PendingResponse },
+    Req { id: u64, key: JobKey, arrival: Instant, pending: PendingResponse },
     /// A metrics-snapshot request.
     Stats { id: u64 },
     /// Acknowledge a shutdown order.
@@ -186,10 +191,10 @@ impl NetServer {
 /// Build a [`PendingResponse`] that is already answered — for requests
 /// rejected at the socket layer (they still count as accepted, so the
 /// writer must still respond to keep the identity exact).
-fn immediate_error(m: usize, reason: &str) -> PendingResponse {
+fn immediate_error(key: JobKey, reason: &str) -> PendingResponse {
     let (tx, rx) = std::sync::mpsc::channel();
     let _ = tx.send(Response {
-        m,
+        key,
         out: Vec::new(),
         latency_us: 0.0,
         error: Some(reason.to_string()),
@@ -252,27 +257,40 @@ fn reader_loop(
             return;
         }
         match read_frame(stream) {
-            Ok(ReadOutcome::Frame(f)) => match f.kind {
+            Ok(ReadOutcome::Frame(mut f)) => match f.kind {
                 FrameKind::Request => {
                     let arrival = Instant::now();
-                    let m = f.m as usize;
+                    // the decoder already validated the op discriminant
+                    // (BadOp is a malformed frame); v2 frames land here
+                    // with op = 0 = Qrd
+                    let op = OpKind::from_u8(f.op).unwrap_or(OpKind::Qrd);
+                    let key = JobKey::new(op, f.m as usize);
                     // a misaligned payload cannot even be viewed as
                     // words; everything else (wrong length, bad m) is
                     // the service's submit gate, which answers with an
-                    // immediate error Response itself
-                    let pending = match f.words() {
-                        Some(words) => svc.submit_async_m(m, words),
+                    // immediate error Response itself. The aligned path
+                    // is zero-copy: the decoded word vector moves from
+                    // the frame into the service `Request` untouched.
+                    let pending = match f.take_words() {
+                        Some(words) => {
+                            debug_assert!(
+                                f.payload.is_empty(),
+                                "zero-copy request path: no intermediate byte buffer may \
+                                 survive take_words"
+                            );
+                            svc.submit_async_key(key, words)
+                        }
                         None => {
-                            immediate_error(m, "payload is not a whole number of 32-bit words")
+                            immediate_error(key, "payload is not a whole number of 32-bit words")
                         }
                     };
-                    metrics.on_net_accepted(m);
+                    metrics.on_net_accepted(key);
                     // a full window blocks here — intentionally: the
                     // socket stops being read, the peer's sends back up
-                    if tx.send(Work::Req { id: f.id, m, arrival, pending }).is_err() {
+                    if tx.send(Work::Req { id: f.id, key, arrival, pending }).is_err() {
                         // writer already died on this peer: the request
                         // was accepted, so account the drop
-                        metrics.on_peer_vanished(m);
+                        metrics.on_peer_vanished(key);
                         return;
                     }
                 }
@@ -324,22 +342,27 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
     let mut peer_gone = false;
     while let Ok(work) = rx.recv() {
         match work {
-            Work::Req { id, m, arrival, mut pending } => {
+            Work::Req { id, key, arrival, mut pending } => {
                 if peer_gone {
-                    metrics.on_peer_vanished(m);
+                    metrics.on_peer_vanished(key);
                     continue;
                 }
+                let m = key.m() as u32;
+                let op = key.op.as_u8();
                 let remaining = deadline.checked_sub(arrival.elapsed()).unwrap_or(Duration::ZERO);
                 match pending.wait_timeout(remaining) {
                     Some(resp) => {
+                        // responses echo the request's op byte so a
+                        // client multiplexing mixed-op traffic can
+                        // audit each answer against its ledger
                         let frame = match resp.result() {
-                            Ok(out) => Frame::response_ok(id, m as u32, out),
-                            Err(e) => Frame::response_error(id, m as u32, STATUS_ERROR, e),
+                            Ok(out) => Frame::response_ok(id, m, out).with_op(op),
+                            Err(e) => Frame::response_error(id, m, STATUS_ERROR, e).with_op(op),
                         };
                         if frame.write_to(&mut stream).is_ok() {
-                            metrics.on_net_responded(m);
+                            metrics.on_net_responded(key);
                         } else {
-                            metrics.on_peer_vanished(m);
+                            metrics.on_peer_vanished(key);
                             peer_gone = true;
                         }
                     }
@@ -348,12 +371,12 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                         // in-flight computation (dropping the pending —
                         // the pool's late send lands on a closed
                         // channel, harmlessly)
-                        let frame =
-                            Frame::response_error(id, m as u32, STATUS_DEADLINE, "deadline exceeded");
+                        let frame = Frame::response_error(id, m, STATUS_DEADLINE, "deadline exceeded")
+                            .with_op(op);
                         if frame.write_to(&mut stream).is_ok() {
-                            metrics.on_deadline_timeout(m);
+                            metrics.on_deadline_timeout(key);
                         } else {
-                            metrics.on_peer_vanished(m);
+                            metrics.on_peer_vanished(key);
                             peer_gone = true;
                         }
                     }
@@ -413,9 +436,10 @@ pub struct StatsSnapshot {
     pub peer_vanished: u64,
     /// Requests the inner service accepted (socket + in-process).
     pub service_requests: u64,
-    /// Per-m rows: `(m, accepted, responded, deadline_timeouts,
-    /// peer_vanished)`.
-    pub per_m: Vec<(u64, u64, u64, u64, u64)>,
+    /// Per-key rows: `(op discriminant, m, accepted, responded,
+    /// deadline_timeouts, peer_vanished)` — one row per `JobKey` that
+    /// saw traffic, so the identity is auditable op by op.
+    pub per_key: Vec<(u64, u64, u64, u64, u64, u64)>,
 }
 
 impl StatsSnapshot {
@@ -430,16 +454,18 @@ impl StatsSnapshot {
             deadline_timeouts: m.deadline_timeouts(),
             peer_vanished: m.peer_vanished(),
             service_requests: m.requests(),
-            per_m: m
-                .per_m_net_bins()
+            per_key: m
+                .per_key_net_bins()
                 .into_iter()
-                .map(|(mm, a, r, d, v)| (mm as u64, a, r, d, v))
+                .map(|(key, a, r, d, v)| {
+                    (key.op.index() as u64, key.m() as u64, a, r, d, v)
+                })
                 .collect(),
         }
     }
 
     /// Serialize as a flat LE u64 block (8 scalars, a row count, then
-    /// 5 u64 per row).
+    /// 6 u64 per row).
     pub fn encode(&self) -> Vec<u8> {
         let scalars = [
             self.conn_opened,
@@ -450,14 +476,14 @@ impl StatsSnapshot {
             self.deadline_timeouts,
             self.peer_vanished,
             self.service_requests,
-            self.per_m.len() as u64,
+            self.per_key.len() as u64,
         ];
-        let mut out = Vec::with_capacity(8 * (scalars.len() + 5 * self.per_m.len()));
+        let mut out = Vec::with_capacity(8 * (scalars.len() + 6 * self.per_key.len()));
         for s in scalars {
             out.extend_from_slice(&s.to_le_bytes());
         }
-        for (m, a, r, d, v) in &self.per_m {
-            for s in [m, a, r, d, v] {
+        for (op, m, a, r, d, v) in &self.per_key {
+            for s in [op, m, a, r, d, v] {
                 out.extend_from_slice(&s.to_le_bytes());
             }
         }
@@ -478,7 +504,7 @@ impl StatsSnapshot {
             return None;
         }
         let nrows = words[8] as usize;
-        if words.len() != 9 + 5 * nrows {
+        if words.len() != 9 + 6 * nrows {
             return None;
         }
         Some(StatsSnapshot {
@@ -490,20 +516,20 @@ impl StatsSnapshot {
             deadline_timeouts: words[5],
             peer_vanished: words[6],
             service_requests: words[7],
-            per_m: (0..nrows)
+            per_key: (0..nrows)
                 .map(|i| {
-                    let r = &words[9 + 5 * i..9 + 5 * i + 5];
-                    (r[0], r[1], r[2], r[3], r[4])
+                    let r = &words[9 + 6 * i..9 + 6 * i + 6];
+                    (r[0], r[1], r[2], r[3], r[4], r[5])
                 })
                 .collect(),
         })
     }
 
-    /// The socket-boundary identity, per m row and in total.
+    /// The socket-boundary identity, per `JobKey` row and in total.
     pub fn reconciles(&self) -> bool {
         self.unaccounted() == 0
-            && self.per_m.iter().all(|(_, a, r, d, v)| *a == r + d + v)
-            && self.accepted == self.per_m.iter().map(|(_, a, ..)| a).sum::<u64>()
+            && self.per_key.iter().all(|(_, _, a, r, d, v)| *a == r + d + v)
+            && self.accepted == self.per_key.iter().map(|(_, _, a, ..)| a).sum::<u64>()
     }
 
     /// Requests accepted but in no outcome bucket (0 after quiescence
@@ -536,9 +562,15 @@ impl NetClient {
         &mut self.stream
     }
 
-    /// Send one request frame.
+    /// Send one QRD request frame (v2 shape — [`Self::send_request_key`]
+    /// with `op = Qrd`).
     pub fn send_request(&mut self, id: u64, m: u32, words: &[u32]) -> io::Result<()> {
         Frame::request(id, m, words).write_to(&mut self.stream)
+    }
+
+    /// Send one request frame for any op (wire format v3).
+    pub fn send_request_key(&mut self, id: u64, key: JobKey, words: &[u32]) -> io::Result<()> {
+        Frame::request_op(id, key.op, key.m() as u32, words).write_to(&mut self.stream)
     }
 
     /// Read one frame; `Ok(None)` on clean EOF.
@@ -552,9 +584,19 @@ impl NetClient {
         }
     }
 
-    /// One synchronous round trip.
+    /// One synchronous QRD round trip (v2 shape).
     pub fn request(&mut self, id: u64, m: u32, words: &[u32]) -> anyhow::Result<Frame> {
         self.send_request(id, m, words)?;
+        self.read_one(id)
+    }
+
+    /// One synchronous round trip for any op (wire format v3).
+    pub fn request_key(&mut self, id: u64, key: JobKey, words: &[u32]) -> anyhow::Result<Frame> {
+        self.send_request_key(id, key, words)?;
+        self.read_one(id)
+    }
+
+    fn read_one(&mut self, id: u64) -> anyhow::Result<Frame> {
         match self.read_frame() {
             Ok(Some(f)) => Ok(f),
             Ok(None) => anyhow::bail!("server closed before responding to request {id}"),
@@ -592,6 +634,8 @@ mod tests {
 
     #[test]
     fn stats_snapshot_round_trips() {
+        // rows span ops: qrd/m2, solve/m8, append_qr/m8 — the op
+        // column keeps same-m bins distinct on the wire
         let snap = StatsSnapshot {
             conn_opened: 10,
             conn_closed: 9,
@@ -601,7 +645,7 @@ mod tests {
             deadline_timeouts: 6,
             peer_vanished: 4,
             service_requests: 96,
-            per_m: vec![(2, 40, 36, 3, 1), (8, 60, 54, 3, 3)],
+            per_key: vec![(0, 2, 40, 36, 3, 1), (1, 8, 40, 36, 2, 2), (2, 8, 20, 18, 1, 1)],
         };
         let back = StatsSnapshot::decode(&snap.encode()).expect("decode");
         assert_eq!(back, snap);
@@ -620,15 +664,15 @@ mod tests {
             deadline_timeouts: 0,
             peer_vanished: 0,
             service_requests: 5,
-            per_m: vec![(4, 5, 4, 0, 0)],
+            per_key: vec![(0, 4, 5, 4, 0, 0)],
         };
         assert!(!snap.reconciles());
         assert_eq!(snap.unaccounted(), 1);
         // totals balanced across the wrong bins must still fail
         snap.responded = 5;
-        snap.per_m = vec![(4, 5, 4, 0, 0), (8, 0, 1, 0, 0)];
+        snap.per_key = vec![(0, 4, 5, 4, 0, 0), (1, 4, 0, 1, 0, 0)];
         assert_eq!(snap.unaccounted(), 0);
-        assert!(!snap.reconciles(), "identity is per m bin, not just total");
+        assert!(!snap.reconciles(), "identity is per key bin, not just total");
     }
 
     #[test]

@@ -1,20 +1,26 @@
 //! The QRD service: two pool topologies behind one `QrdService` handle.
 //!
 //! **Shared-lock** (`start`/`start_pool`): one bounded ingress queue →
-//! one `KeyedBatcher` behind a mutex (binning requests by their matrix
-//! size, so every batch is uniform-m) → N persistent workers. Batch
-//! *formation* is serialized (microseconds of channel draining), batch
-//! *execution* overlaps. Kept as the baseline topology the benches
-//! compare against.
+//! one `KeyedBatcher` behind a mutex (binning requests by their
+//! [`JobKey`] — operation × matrix size — so every batch is uniform in
+//! both) → N persistent workers. Batch *formation* is serialized
+//! (microseconds of channel draining), batch *execution* overlaps. Kept
+//! as the baseline topology the benches compare against.
 //!
-//! **Sharded** (`start_sharded`): a lock-free round-robin router in
-//! `submit` feeds one bounded `ShardQueue` per worker; every worker
-//! forms batches from its own shard with zero shared locking, and an
-//! idle worker steals from a loaded sibling's queue so a slow shard
-//! cannot strand requests. A supervisor retains the engine factories
-//! and respawns a worker after an engine panic (bounded per-slot
-//! restarts, `Metrics::worker_respawns`), so a transient failure costs
-//! one batch instead of a pool slot.
+//! **Sharded** (`start_sharded`): a lock-free router in `submit` feeds
+//! one bounded `ShardQueue` per worker; every worker forms batches from
+//! its own shard with zero shared locking, and an idle worker steals
+//! from a loaded sibling's queue so a slow shard cannot strand
+//! requests. The router is key-affine by default
+//! ([`RouterPolicy::KeyAffine`]): a request's `JobKey` hashes to a
+//! primary shard, so same-key traffic lands on the same queue and
+//! forms dense uniform batches instead of being smeared round-robin
+//! across every shard; a dead or saturated primary spills to the
+//! least-loaded live shard. [`RouterPolicy::RoundRobin`] is kept
+//! selectable for the bench comparison. A supervisor retains the
+//! engine factories and respawns a worker after an engine panic
+//! (bounded per-slot restarts, `Metrics::worker_respawns`), so a
+//! transient failure costs one batch instead of a pool slot.
 //!
 //! Failure containment, both topologies: an engine panic fails only the
 //! in-flight batch (error `Response`s); a recoverable engine error
@@ -28,6 +34,7 @@
 
 use super::batcher::{BatchPolicy, KeyedBatcher};
 use super::engine::BatchEngine;
+use super::key::JobKey;
 use super::metrics::Metrics;
 use super::shard::{Pop, ShardQueue};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -40,14 +47,15 @@ use std::time::{Duration, Instant};
 const DEAD_POOL_MSG: &str = "service workers have exited";
 const SHUTDOWN_MSG: &str = "service shut down before the request was served";
 
-/// One client request (wire format v2): an m×m matrix as row-major FP
-/// bit patterns, with the dimension carried alongside. Mixed-m traffic
-/// shares one service; the batchers bin by `m` so engines only ever see
-/// uniform-m batches.
+/// One client request (wire format v3): an operation plus its payload
+/// as FP bit patterns, keyed by [`JobKey`] (op × matrix dimension).
+/// Mixed-op, mixed-m traffic shares one service; the batchers bin by
+/// `JobKey` so engines only ever see batches uniform in both.
 pub struct Request {
-    /// Matrix dimension (the wire carries it; nothing is hard-coded).
-    pub m: usize,
-    /// Row-major input bits, exactly `m*m` words.
+    /// Operation and matrix dimension (the wire carries both; nothing
+    /// is hard-coded).
+    pub key: JobKey,
+    /// Payload bits, exactly `key.request_words()` words.
     pub a: Vec<u32>,
     /// Response channel.
     pub tx: Sender<Response>,
@@ -55,15 +63,15 @@ pub struct Request {
     pub enq: Instant,
 }
 
-/// One response (wire format v2): `[R | G]` bits plus measured latency,
-/// or a service-side failure.
+/// One response (wire format v3): the operation's output bits plus
+/// measured latency, or a service-side failure.
 #[derive(Debug, Clone)]
 pub struct Response {
-    /// Matrix dimension of the request this answers (0 only when the
-    /// request never reached the service — e.g. a dropped channel).
-    pub m: usize,
-    /// Row-major output bits, `m` rows × `2m` columns; empty when
-    /// `error` is set.
+    /// Key of the request this answers (`qrd/m0` only when the request
+    /// never reached the service — e.g. a dropped channel).
+    pub key: JobKey,
+    /// Output bits, exactly `key.response_words()` words on success;
+    /// empty when `error` is set.
     pub out: Vec<u32>,
     /// Request latency in microseconds (enqueue → response send).
     pub latency_us: f64,
@@ -74,16 +82,20 @@ pub struct Response {
 }
 
 impl Response {
-    fn ok(m: usize, out: Vec<u32>, latency_us: f64) -> Response {
-        Response { m, out, latency_us, error: None }
+    fn ok(key: JobKey, out: Vec<u32>, latency_us: f64) -> Response {
+        Response { key, out, latency_us, error: None }
     }
 
-    fn failed(m: usize, reason: &str, latency_us: f64) -> Response {
-        Response { m, out: Vec::new(), latency_us, error: Some(reason.to_string()) }
+    fn failed(key: JobKey, reason: &str, latency_us: f64) -> Response {
+        Response { key, out: Vec::new(), latency_us, error: Some(reason.to_string()) }
     }
 
-    /// The decomposition bits (`m × 2m` words), or the service-side
-    /// failure reason.
+    /// Matrix dimension of the answered request.
+    pub fn m(&self) -> usize {
+        self.key.m()
+    }
+
+    /// The operation's output bits, or the service-side failure reason.
     pub fn result(&self) -> Result<&[u32], &str> {
         match &self.error {
             None => Ok(&self.out),
@@ -123,7 +135,7 @@ impl PendingResponse {
                 Err(std::sync::mpsc::TryRecvError::Disconnected) => {
                     // the service promises a Response before dropping
                     // the sender; keep the promise even against a bug
-                    self.got = Some(Response::failed(0, DEAD_POOL_MSG, 0.0));
+                    self.got = Some(Response::failed(JobKey::qrd(0), DEAD_POOL_MSG, 0.0));
                 }
             }
         }
@@ -152,7 +164,7 @@ impl PendingResponse {
             None => self
                 .rx
                 .recv()
-                .unwrap_or_else(|_| Response::failed(0, DEAD_POOL_MSG, 0.0)),
+                .unwrap_or_else(|_| Response::failed(JobKey::qrd(0), DEAD_POOL_MSG, 0.0)),
         }
     }
 
@@ -172,7 +184,7 @@ impl PendingResponse {
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                     // the service promises a Response before dropping
                     // the sender; keep the promise even against a bug
-                    self.got = Some(Response::failed(0, DEAD_POOL_MSG, 0.0));
+                    self.got = Some(Response::failed(JobKey::qrd(0), DEAD_POOL_MSG, 0.0));
                 }
             }
         }
@@ -189,7 +201,23 @@ impl From<Receiver<Response>> for PendingResponse {
 /// Answer a request with an error `Response` (never drop the channel).
 fn answer_failed(req: Request, reason: &str) {
     let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
-    let _ = req.tx.send(Response::failed(req.m, reason, latency_us));
+    let _ = req.tx.send(Response::failed(req.key, reason, latency_us));
+}
+
+/// How the sharded topology's `submit` picks a shard for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// Spray requests across shards in arrival order. Even load, but
+    /// same-key traffic is smeared over every queue, so each worker
+    /// forms thinner uniform batches.
+    RoundRobin,
+    /// Hash the request's [`JobKey`] to a primary shard
+    /// ([`JobKey::shard_hash`]), so same-key traffic lands on the same
+    /// queue and batches densely. A dead or saturated primary spills to
+    /// the least-loaded live shard (load-aware fallback), so a hot or
+    /// dying slot degrades to round-robin-like spreading instead of
+    /// blocking the submitter.
+    KeyAffine,
 }
 
 /// Restart budget for supervised (sharded-topology) workers.
@@ -217,9 +245,9 @@ struct SharedPool {
     /// The service handle keeps the batcher (and its receiver) alive so
     /// `ingress.send` cannot start failing while queued requests are
     /// still being drained — and so `submit`/`shutdown` can sweep
-    /// stranded requests (channel *and* per-m bins) into error
+    /// stranded requests (channel *and* per-key bins) into error
     /// responses.
-    batcher: Arc<Mutex<KeyedBatcher<Request>>>,
+    batcher: Arc<Mutex<KeyedBatcher<Request, JobKey>>>,
     state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
 }
@@ -235,6 +263,10 @@ struct Supervisor {
     alive: AtomicUsize,
     dead: AtomicBool,
     next: AtomicUsize,
+    router: RouterPolicy,
+    /// Per-shard queue bound — the key-affine router's saturation
+    /// threshold for spilling off a full primary.
+    ingress_bound: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
     handles: Mutex<Vec<JoinHandle<()>>>,
@@ -262,7 +294,7 @@ impl QrdService {
     /// Raise (or lower) the accepted matrix-size cap. Purely a submit
     /// gate — engines and batchers are dimension-agnostic. Clamped to
     /// [`Metrics::MAX_TRACKED_M`] so every accepted size keeps its own
-    /// reconciliation bin (no aliasing in `per_m_bins`).
+    /// reconciliation bin (no aliasing in `per_key_bins`).
     pub fn with_max_m(mut self, max_m: usize) -> Self {
         self.max_m = max_m.clamp(1, Metrics::MAX_TRACKED_M);
         self
@@ -300,10 +332,10 @@ impl QrdService {
         let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
         let metrics = Arc::new(Metrics::new(factories.len()));
         // deadline anchoring at true channel arrival (`Request::enq`),
-        // not stash time: a rare-m request stashed during another bin's
-        // fill pays at most one max_wait window total
+        // not stash time: a rare-key request stashed during another
+        // bin's fill pays at most one max_wait window total
         let batcher = Arc::new(Mutex::new(
-            KeyedBatcher::new(rx, |r: &Request| r.m, policy).with_arrival(|r: &Request| r.enq),
+            KeyedBatcher::new(rx, |r: &Request| r.key, policy).with_arrival(|r: &Request| r.enq),
         ));
         let state = Arc::new(PoolState {
             alive: AtomicUsize::new(factories.len()),
@@ -330,15 +362,32 @@ impl QrdService {
     }
 
     /// Start a sharded, supervised pool: one bounded ingress shard per
-    /// factory, one persistent worker per shard, round-robin routing in
-    /// `submit`, work stealing between shards, and bounded respawn of
-    /// panicked workers (`restart`). Factories are `Fn` (not `FnOnce`)
-    /// because the supervisor calls them again — always inside the new
-    /// worker thread, so non-`Send` engines keep working.
+    /// factory, one persistent worker per shard, key-affine routing in
+    /// `submit` ([`RouterPolicy::KeyAffine`] — see
+    /// [`Self::start_sharded_with_router`] to pick), work stealing
+    /// between shards, and bounded respawn of panicked workers
+    /// (`restart`). Factories are `Fn` (not `FnOnce`) because the
+    /// supervisor calls them again — always inside the new worker
+    /// thread, so non-`Send` engines keep working.
     pub fn start_sharded<F>(
         factories: Vec<F>,
         policy: BatchPolicy,
         restart: RestartPolicy,
+    ) -> QrdService
+    where
+        F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
+    {
+        Self::start_sharded_with_router(factories, policy, restart, RouterPolicy::KeyAffine)
+    }
+
+    /// [`Self::start_sharded`] with an explicit routing policy — the
+    /// benches start one pool per [`RouterPolicy`] variant to compare
+    /// batch densities under the same traffic.
+    pub fn start_sharded_with_router<F>(
+        factories: Vec<F>,
+        policy: BatchPolicy,
+        restart: RestartPolicy,
+        router: RouterPolicy,
     ) -> QrdService
     where
         F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
@@ -359,6 +408,8 @@ impl QrdService {
             alive: AtomicUsize::new(n),
             dead: AtomicBool::new(false),
             next: AtomicUsize::new(0),
+            router,
+            ingress_bound: bound,
             policy,
             metrics: metrics.clone(),
             handles: Mutex::new(Vec::with_capacity(n)),
@@ -376,33 +427,52 @@ impl QrdService {
         self.submit_m(4, a.to_vec())
     }
 
-    /// Submit one m×m matrix (wire format v2); returns the response
-    /// receiver. Blocks if the target queue is full (backpressure). A
-    /// malformed request (`m` of 0, over [`Self::max_m`], or a payload
-    /// that is not `m*m` words) is answered immediately with an error
-    /// `Response` and never reaches a queue. Every submitted request is
-    /// answered with a `Response` — an error `Response` if the pool has
-    /// died or dies while the request is queued — never a dropped
-    /// channel.
+    /// Submit one m×m QRD (wire format v2 shape) — [`Self::submit_key`]
+    /// with `op = Qrd`. Kept as the ergonomic entry point for v2
+    /// clients and tests.
     pub fn submit_m(&self, m: usize, a: Vec<u32>) -> Receiver<Response> {
+        self.submit_key(JobKey::qrd(m), a)
+    }
+
+    /// Submit one operation (wire format v3); returns the response
+    /// receiver. Blocks if the target queue is full (backpressure). A
+    /// malformed request (`m` under the op's minimum or over
+    /// [`Self::max_m`], or a payload that is not
+    /// [`JobKey::request_words`] words) is answered immediately with an
+    /// error `Response` and never reaches a queue. Every submitted
+    /// request is answered with a `Response` — an error `Response` if
+    /// the pool has died or dies while the request is queued — never a
+    /// dropped channel.
+    pub fn submit_key(&self, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
-        let req = Request { m, a, tx, enq: Instant::now() };
-        // validate before counting: `requests()` and the per-m bins
+        let m = key.m();
+        let req = Request { key, a, tx, enq: Instant::now() };
+        // validate before counting: `requests()` and the per-key bins
         // only see *accepted* requests, so accepted == served holds
         // bin by bin on a clean run (rejects get their error Response
         // but touch no counter)
-        if m == 0 || m > self.max_m {
-            answer_failed(req, &format!("m={m} outside the accepted range 1..={}", self.max_m));
+        if m < key.min_m() || m > self.max_m {
+            let reason = format!(
+                "m={m} outside the accepted range {}..={} for {}",
+                key.min_m(),
+                self.max_m,
+                key.op.label()
+            );
+            answer_failed(req, &reason);
             return rx;
         }
-        if req.a.len() != m * m {
-            let reason =
-                format!("payload carries {} words, m={m} needs {}", req.a.len(), m * m);
+        if req.a.len() != key.request_words() {
+            let reason = format!(
+                "payload carries {} words, {} needs {}",
+                req.a.len(),
+                key.label(),
+                key.request_words()
+            );
             answer_failed(req, &reason);
             return rx;
         }
         self.metrics.on_request();
-        self.metrics.on_m_request(m);
+        self.metrics.on_key_request(key);
         match &self.pool {
             Pool::Shared(p) => {
                 if p.state.dead.load(Ordering::SeqCst) {
@@ -441,6 +511,11 @@ impl QrdService {
     /// [`Self::submit_m`] returning a pollable [`PendingResponse`].
     pub fn submit_async_m(&self, m: usize, a: Vec<u32>) -> PendingResponse {
         PendingResponse::new(self.submit_m(m, a))
+    }
+
+    /// [`Self::submit_key`] returning a pollable [`PendingResponse`].
+    pub fn submit_async_key(&self, key: JobKey, a: Vec<u32>) -> PendingResponse {
+        PendingResponse::new(self.submit_key(key, a))
     }
 
     /// Shared metrics.
@@ -503,44 +578,48 @@ impl QrdService {
     }
 }
 
-/// Sweep the shared batcher's queue — channel and per-m bins — into
+/// Sweep the shared batcher's queue — channel and per-key bins — into
 /// error responses.
-fn drain_batcher(batcher: &Mutex<KeyedBatcher<Request>>, reason: &str) {
+fn drain_batcher(batcher: &Mutex<KeyedBatcher<Request, JobKey>>, reason: &str) {
     let stranded = batcher.lock().unwrap_or_else(|p| p.into_inner()).drain();
     for req in stranded {
         answer_failed(req, reason);
     }
 }
 
-/// Execute one **uniform-m** batch and answer its requests. The batchers
-/// guarantee uniformity; the engine's own homogeneity audit backstops it
-/// (a mixed batch comes back as `Err`, answered with error responses —
-/// never truncated). Returns `false` when the engine panicked — the
-/// caller must retire (or respawn) the worker; a recoverable `Err` from
-/// the engine fails the batch but keeps the worker.
+/// Execute one **uniform-key** batch and answer its requests. The
+/// batchers guarantee uniformity; the engine's own homogeneity audit
+/// backstops it (a mixed batch comes back as `Err`, answered with error
+/// responses — never truncated). Returns `false` when the engine
+/// panicked — the caller must retire (or respawn) the worker; a
+/// recoverable `Err` from the engine fails the batch but keeps the
+/// worker.
 fn execute_batch(
     id: usize,
     engine: &dyn BatchEngine,
     batch: Vec<Request>,
     metrics: &Metrics,
 ) -> bool {
-    let m = batch.first().map_or(0, |r| r.m);
-    // split payloads from repliers so the engine borrows the matrices
+    let key = match batch.first() {
+        Some(r) => r.key,
+        None => return true,
+    };
+    // split payloads from repliers so the engine borrows the payloads
     // without cloning the wire words
-    let mut mats = Vec::with_capacity(batch.len());
+    let mut jobs = Vec::with_capacity(batch.len());
     let mut repliers = Vec::with_capacity(batch.len());
     for req in batch {
-        mats.push(req.a);
-        repliers.push((req.m, req.tx, req.enq));
+        jobs.push(req.a);
+        repliers.push((req.key, req.tx, req.enq));
     }
-    let answer_all = |repliers: Vec<(usize, Sender<Response>, Instant)>, reason: &str| {
-        for (m, tx, enq) in repliers {
+    let answer_all = |repliers: Vec<(JobKey, Sender<Response>, Instant)>, reason: &str| {
+        for (key, tx, enq) in repliers {
             let latency_us = enq.elapsed().as_secs_f64() * 1e6;
-            let _ = tx.send(Response::failed(m, reason, latency_us));
+            let _ = tx.send(Response::failed(key, reason, latency_us));
         }
     };
     let t0 = Instant::now();
-    match catch_unwind(AssertUnwindSafe(|| engine.run(m, &mats))) {
+    match catch_unwind(AssertUnwindSafe(|| engine.run(key, &jobs))) {
         Ok(Ok(outs)) => {
             if outs.len() != repliers.len() {
                 // a backend shape bug must not strand the unmatched
@@ -558,12 +637,12 @@ fn execute_batch(
             }
             let dt = t0.elapsed();
             metrics.on_batch(id, repliers.len(), dt.as_nanos() as u64);
-            metrics.on_m_batch(m, repliers.len());
-            for ((m, tx, enq), out) in repliers.into_iter().zip(outs) {
+            metrics.on_key_batch(key, repliers.len());
+            for ((key, tx, enq), out) in repliers.into_iter().zip(outs) {
                 let latency_us = enq.elapsed().as_secs_f64() * 1e6;
                 metrics.on_latency_us(latency_us);
                 // receiver may have been dropped — the client's choice
-                let _ = tx.send(Response::ok(m, out, latency_us));
+                let _ = tx.send(Response::ok(key, out, latency_us));
             }
             true
         }
@@ -588,7 +667,7 @@ fn execute_batch(
 fn shared_worker_loop(
     id: usize,
     engine: Box<dyn BatchEngine>,
-    batcher: Arc<Mutex<KeyedBatcher<Request>>>,
+    batcher: Arc<Mutex<KeyedBatcher<Request, JobKey>>>,
     state: Arc<PoolState>,
     metrics: Arc<Metrics>,
 ) {
@@ -601,10 +680,10 @@ fn shared_worker_loop(
             let mut b = batcher.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
             // never hand this engine more than it prefers for the
             // batch's bin (fixed-shape PJRT artifacts reject oversized
-            // batches; the cap is per-m now)
-            b.next_batch_with(|m| engine.preferred_batch(m))
+            // batches; the cap is per-key now)
+            b.next_batch_with(|k| engine.preferred_batch(k))
         };
-        let Some((_m, batch)) = batch else {
+        let Some((_key, batch)) = batch else {
             // ingress closed and drained: clean exit (shutdown)
             retire_shared(&state, &batcher);
             return;
@@ -618,13 +697,13 @@ fn shared_worker_loop(
 
 /// One shared-lock worker is gone; if it was the last, mark the pool
 /// dead (so `submit` fails fast) and answer everything still queued —
-/// the channel *and* the per-m bins a batch-forming worker may have
+/// the channel *and* the per-key bins a batch-forming worker may have
 /// stashed into. The flag is set and the sweep runs under the batcher
 /// lock, so a submitter whose post-send re-check observes `dead` (and
 /// sweeps via the same lock) cannot interleave between them;
 /// `shutdown`'s final drain backstops any request that slips past both
 /// sweeps.
-fn retire_shared(state: &PoolState, batcher: &Mutex<KeyedBatcher<Request>>) {
+fn retire_shared(state: &PoolState, batcher: &Mutex<KeyedBatcher<Request, JobKey>>) {
     if state.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
         let mut b = batcher.lock().unwrap_or_else(|p| p.into_inner());
         state.dead.store(true, Ordering::SeqCst);
@@ -670,17 +749,55 @@ fn on_worker_death(sup: &Arc<Supervisor>, slot: usize) {
 }
 
 impl Supervisor {
-    /// Round-robin a request onto a live shard; blocking on a full
-    /// queue is the backpressure. A closed queue (the pool died under
-    /// us) hands the request back, and we try the remaining slots
-    /// before answering with an error — never dropping the channel.
+    /// Pick the shard a request should land on first.
+    ///
+    /// Round-robin: the next slot in arrival order. Key-affine: the
+    /// key's hash picks a stable primary, so same-key traffic lands on
+    /// one queue and batches densely; when the primary is dead or
+    /// saturated (at the queue bound) the request spills to the
+    /// least-loaded live shard instead of blocking behind the hot key.
+    fn route(&self, key: JobKey) -> usize {
+        let n = self.shards.len();
+        match self.router {
+            RouterPolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % n,
+            RouterPolicy::KeyAffine => {
+                let primary = (key.shard_hash() % n as u64) as usize;
+                if self.slot_alive[primary].load(Ordering::SeqCst)
+                    && self.shards[primary].len() < self.ingress_bound
+                {
+                    return primary;
+                }
+                // load-aware spill: least-loaded live shard (the len
+                // reads race with workers draining — fine, this is a
+                // heuristic, correctness comes from the push loop)
+                let mut best = primary;
+                let mut best_len = usize::MAX;
+                for slot in 0..n {
+                    if !self.slot_alive[slot].load(Ordering::SeqCst) {
+                        continue;
+                    }
+                    let len = self.shards[slot].len();
+                    if len < best_len {
+                        best = slot;
+                        best_len = len;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route a request onto a live shard; blocking on a full queue is
+    /// the backpressure. A closed queue (the pool died under us) hands
+    /// the request back, and we try the remaining slots before
+    /// answering with an error — never dropping the channel.
     fn submit(&self, mut req: Request) {
         if self.dead.load(Ordering::SeqCst) {
             answer_failed(req, DEAD_POOL_MSG);
             return;
         }
         let n = self.shards.len();
-        let mut k = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut k = self.route(req.key);
         for _ in 0..n {
             let slot = k % n;
             k = k.wrapping_add(1);
@@ -751,11 +868,11 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
             return WorkerExit::Died;
         }
     };
-    // per-bin batch cap: the engine's preference for the bin's m,
-    // clamped by the policy (evaluated per batch — mixed-m traffic
+    // per-bin batch cap: the engine's preference for the bin's key,
+    // clamped by the policy (evaluated per batch — mixed-key traffic
     // means the cap can differ batch to batch)
     let max_batch = sup.policy.max_batch.max(1);
-    let cap_of = |m: usize| engine.preferred_batch(m).max(1).min(max_batch);
+    let cap_of = |k: JobKey| engine.preferred_batch(k).max(1).min(max_batch);
     let max_wait = Duration::from_micros(sup.policy.max_wait_us);
     // how long to block on the own shard before sweeping siblings for
     // stealable work. A push to the own shard wakes the worker
@@ -770,11 +887,11 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     loop {
         let first_wait = steal_base.saturating_mul(1u32 << idle_streak.min(9)).min(steal_max);
         // arrival-anchored batch formation: the fill deadline runs from
-        // the front request's `enq`, so a minority-m request that
+        // the front request's `enq`, so a minority-key request that
         // already waited behind another key's batch pays at most one
         // max_wait window total
         let batch = match own.pop_batch_by_arrival(
-            |r: &Request| r.m,
+            |r: &Request| r.key,
             &cap_of,
             |r: &Request| r.enq,
             max_wait,
@@ -802,17 +919,17 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     }
 }
 
-/// Steal one uniform-m batch from the first loaded sibling shard (the
+/// Steal one uniform-key batch from the first loaded sibling shard (the
 /// keyed steal takes the sibling's oldest key, capped per bin).
 fn steal_from_siblings(
     slot: usize,
     sup: &Supervisor,
-    cap_of: &impl Fn(usize) -> usize,
+    cap_of: &impl Fn(JobKey) -> usize,
 ) -> Option<Vec<Request>> {
     let n = sup.shards.len();
     for off in 1..n {
         let j = (slot + off) % n;
-        let stolen = sup.shards[j].steal_by(|r: &Request| r.m, cap_of);
+        let stolen = sup.shards[j].steal_by(|r: &Request| r.key, cap_of);
         if !stolen.is_empty() {
             sup.metrics.on_steal(stolen.len());
             return Some(stolen);
@@ -824,6 +941,7 @@ fn steal_from_siblings(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::key::OpKind;
     use crate::coordinator::NativeEngine;
     use std::sync::Condvar;
 
@@ -942,10 +1060,10 @@ mod tests {
     struct PanicEngine;
 
     impl BatchEngine for PanicEngine {
-        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(&self, _key: JobKey, _jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             panic!("engine failure injected by test");
         }
-        fn preferred_batch(&self, _m: usize) -> usize {
+        fn preferred_batch(&self, _key: JobKey) -> usize {
             8
         }
         fn name(&self) -> String {
@@ -957,10 +1075,10 @@ mod tests {
     struct FailEngine;
 
     impl BatchEngine for FailEngine {
-        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(&self, _key: JobKey, _jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             Err("injected backend failure".into())
         }
-        fn preferred_batch(&self, _m: usize) -> usize {
+        fn preferred_batch(&self, _key: JobKey) -> usize {
             8
         }
         fn name(&self) -> String {
@@ -994,13 +1112,114 @@ mod tests {
             for (rx, (m, want)) in rxs.into_iter().zip(want) {
                 let resp = rx.recv().expect("response");
                 assert!(resp.error.is_none(), "sharded={sharded}: {:?}", resp.error);
-                assert_eq!(resp.m, m);
+                assert_eq!(resp.m(), m);
                 assert_eq!(resp.out, want, "sharded={sharded} m={m}");
             }
             let metrics = svc.metrics();
             for m in 2..=6usize {
-                assert_eq!(metrics.m_requests(m), 12, "sharded={sharded} m={m}");
-                assert_eq!(metrics.m_served(m), 12, "sharded={sharded} m={m}");
+                let key = JobKey::qrd(m);
+                assert_eq!(metrics.key_requests(key), 12, "sharded={sharded} m={m}");
+                assert_eq!(metrics.key_served(key), 12, "sharded={sharded} m={m}");
+            }
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn submit_key_serves_mixed_ops_on_both_topologies() {
+        // the tentpole invariant end to end: one pool serves
+        // interleaved Qrd/Solve/AppendQr traffic across sizes, every
+        // response bit-matches a direct engine call for its key, and
+        // the per-JobKey bins reconcile accepted == served exactly
+        let eng = NativeEngine::flagship();
+        for sharded in [false, true] {
+            let factories: Vec<_> = (0..2)
+                .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+                .collect();
+            let policy = BatchPolicy { max_batch: 8, max_wait_us: 100 };
+            let svc = if sharded {
+                QrdService::start_sharded(factories, policy, RestartPolicy::default())
+            } else {
+                QrdService::start_pool(factories, policy)
+            };
+            let mut rxs = Vec::new();
+            let mut want = Vec::new();
+            for k in 0..75u32 {
+                let op = OpKind::ALL[(k % 3) as usize];
+                let m = 2 + (k % 5) as usize; // 2..=6 interleaved
+                let key = JobKey::new(op, m);
+                let mut a: Vec<u32> = (0..key.request_words())
+                    .map(|i| ((k as f32 + 1.0) * (i as f32 - 3.5) * 0.11).to_bits())
+                    .collect();
+                if op == OpKind::Solve {
+                    // keep the solve systems well-conditioned
+                    for e in (0..m * m).step_by(m + 1) {
+                        a[e] = (f32::from_bits(a[e]) + 6.0).to_bits();
+                    }
+                }
+                want.push((key, eng.run(key, &[a.clone()]).expect("oracle")[0].clone()));
+                rxs.push(svc.submit_key(key, a));
+            }
+            for (rx, (key, want)) in rxs.into_iter().zip(want) {
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "sharded={sharded} {}: {:?}", key.label(), resp.error);
+                assert_eq!(resp.key, key);
+                assert_eq!(resp.out, want, "sharded={sharded} {}", key.label());
+            }
+            // 75 requests cycle through all 15 (op, m) keys: every bin
+            // is populated, distinct, and reconciles exactly
+            let metrics = svc.metrics();
+            let bins = metrics.per_key_bins();
+            assert_eq!(bins.len(), 15, "sharded={sharded}");
+            let mut total = 0;
+            for (key, req, served, batches) in bins {
+                assert_eq!(req, 5, "sharded={sharded} {}", key.label());
+                assert_eq!(served, 5, "sharded={sharded} {}", key.label());
+                assert!(batches >= 1, "sharded={sharded} {}", key.label());
+                total += req;
+            }
+            assert_eq!(total, 75);
+            svc.shutdown();
+        }
+    }
+
+    #[test]
+    fn both_router_policies_serve_mixed_key_traffic() {
+        // routing is a placement heuristic, never a correctness knob:
+        // the same mixed-key traffic is served bit-identically under
+        // both policies (bin-density comparison lives in the bench,
+        // where stealing is controlled for)
+        let eng = NativeEngine::flagship();
+        for router in [RouterPolicy::RoundRobin, RouterPolicy::KeyAffine] {
+            let factories: Vec<_> = (0..4)
+                .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+                .collect();
+            let svc = QrdService::start_sharded_with_router(
+                factories,
+                BatchPolicy { max_batch: 8, max_wait_us: 100 },
+                RestartPolicy::default(),
+                router,
+            );
+            let mut rxs = Vec::new();
+            let mut want = Vec::new();
+            for k in 0..80u32 {
+                // skewed traffic: most requests share one hot key
+                let m = if k % 4 == 0 { 3 + (k % 3) as usize } else { 4 };
+                let key = JobKey::qrd(m);
+                let a: Vec<u32> = (0..key.request_words())
+                    .map(|i| ((k as f32 + 0.5) * (i as f32 - 4.5) * 0.09).to_bits())
+                    .collect();
+                want.push(eng.run(key, &[a.clone()]).expect("oracle")[0].clone());
+                rxs.push(svc.submit_key(key, a));
+            }
+            for (rx, want) in rxs.into_iter().zip(want) {
+                let resp = rx.recv().expect("response");
+                assert!(resp.error.is_none(), "router={router:?}: {:?}", resp.error);
+                assert_eq!(resp.out, want, "router={router:?}");
+            }
+            let metrics = svc.metrics();
+            for (key, req, served, _) in metrics.per_key_bins() {
+                assert_eq!(req, served, "router={router:?} {}", key.label());
             }
             svc.shutdown();
         }
@@ -1035,13 +1254,30 @@ mod tests {
             let resp = svc.submit_m(bad_m, Vec::new()).recv().expect("response");
             assert!(resp.error.is_some(), "m={bad_m} must be rejected");
         }
+        // op-aware minimums: AppendQr needs at least two rows (one
+        // stored rotation target plus the new diagonal), so m=1 is
+        // rejected at submit even though qrd/m1 is fine
+        let resp = svc
+            .submit_key(JobKey::new(OpKind::AppendQr, 1), vec![0u32; 1])
+            .recv()
+            .expect("response");
+        let err = resp.result().expect_err("append_qr m=1 must be rejected");
+        assert!(err.contains("append_qr"), "{err}");
+        // and a solve payload must carry the rhs too: m*m words is short
+        let resp = svc
+            .submit_key(JobKey::new(OpKind::Solve, 3), vec![0u32; 9])
+            .recv()
+            .expect("response");
+        let err = resp.result().expect_err("solve without rhs must be rejected");
+        assert!(err.contains("solve/m3") && err.contains("12"), "{err}");
         // valid traffic still flows afterwards
         let resp = svc.submit_m(2, vec![0u32; 4]).recv().expect("response");
         assert!(resp.error.is_none(), "{:?}", resp.error);
-        // rejected requests never hit the per-m accepted bins
-        assert_eq!(svc.metrics().m_requests(9), 0);
-        assert_eq!(svc.metrics().m_requests(3), 0);
-        assert_eq!(svc.metrics().m_requests(2), 1);
+        // rejected requests never hit the per-key accepted bins
+        assert_eq!(svc.metrics().key_requests(JobKey::qrd(9)), 0);
+        assert_eq!(svc.metrics().key_requests(JobKey::qrd(3)), 0);
+        assert_eq!(svc.metrics().key_requests(JobKey::new(OpKind::Solve, 3)), 0);
+        assert_eq!(svc.metrics().key_requests(JobKey::qrd(2)), 1);
         svc.shutdown();
     }
 
@@ -1238,7 +1474,7 @@ mod tests {
     }
 
     impl BatchEngine for GateEngine {
-        fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             {
                 let (lock, cv) = &*self.entered;
                 *lock.lock().unwrap() = true;
@@ -1250,9 +1486,9 @@ mod tests {
                 open = cv.wait(open).unwrap();
             }
             drop(open);
-            self.inner.run(m, mats)
+            self.inner.run(key, jobs)
         }
-        fn preferred_batch(&self, _m: usize) -> usize {
+        fn preferred_batch(&self, _key: JobKey) -> usize {
             1
         }
         fn name(&self) -> String {

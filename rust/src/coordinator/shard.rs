@@ -126,7 +126,7 @@ impl<T> ShardQueue<T> {
     /// Steal up to `max` items from the front (oldest first) without
     /// blocking. Empty result means nothing to steal.
     pub fn steal(&self, max: usize) -> Vec<T> {
-        self.steal_by(|_| 0, |_| max)
+        self.steal_by(|_| 0usize, |_| max)
     }
 
     /// Keyed steal: take the key of the *oldest* queued item, then
@@ -135,11 +135,14 @@ impl<T> ShardQueue<T> {
     /// stolen batch is uniform in key — executable by the thief's
     /// engine in one call. Empty result means nothing to steal; a cap
     /// of 0 steals nothing (stealing is optional, unlike batch
-    /// formation — callers may use 0 to decline a key).
-    pub fn steal_by<K, C>(&self, key: K, cap_of: C) -> Vec<T>
+    /// formation — callers may use 0 to decline a key). The key type is
+    /// any plain value (`usize` in the unit tests, `JobKey` in the
+    /// service).
+    pub fn steal_by<J, K, C>(&self, key: K, cap_of: C) -> Vec<T>
     where
-        K: Fn(&T) -> usize,
-        C: Fn(usize) -> usize,
+        J: Copy + PartialEq,
+        K: Fn(&T) -> J,
+        C: Fn(J) -> usize,
     {
         let mut st = self.lock();
         let Some(front) = st.q.front() else {
@@ -163,16 +166,16 @@ impl<T> ShardQueue<T> {
     /// gather up to `cap` items until `max_wait` expires (the dynamic
     /// batching deadline, same policy the shared `Batcher` applies).
     pub fn pop_batch(&self, cap: usize, max_wait: Duration, first_wait: Duration) -> Pop<T> {
-        self.pop_batch_by(|_| 0, |_| cap, max_wait, first_wait)
+        self.pop_batch_by(|_| 0usize, |_| cap, max_wait, first_wait)
     }
 
     /// Keyed batch formation: the first item (FIFO front) fixes the
     /// batch's key; the batch then gathers only matching items — up to
     /// `cap_of(key)`, waiting out the batching deadline — while items
     /// of other keys stay queued in order for later pops. This is the
-    /// per-m binning of the sharded topology: one ingress queue per
-    /// worker, uniform-m batches out, nothing dropped and nothing
-    /// reordered within a key.
+    /// per-key binning of the sharded topology: one ingress queue per
+    /// worker, uniform-key batches out (the service keys on `JobKey`),
+    /// nothing dropped and nothing reordered within a key.
     ///
     /// The deadline is anchored at batch-formation start (the queue is
     /// generic and carries no arrival times), so a minority-key item
@@ -180,7 +183,7 @@ impl<T> ShardQueue<T> {
     /// extra window — formation latency is bounded by ~2×`max_wait`
     /// per key transition. [`Self::pop_batch_by_arrival`] closes that
     /// gap when items carry their own timestamps.
-    pub fn pop_batch_by<K, C>(
+    pub fn pop_batch_by<J, K, C>(
         &self,
         key: K,
         cap_of: C,
@@ -188,8 +191,9 @@ impl<T> ShardQueue<T> {
         first_wait: Duration,
     ) -> Pop<T>
     where
-        K: Fn(&T) -> usize,
-        C: Fn(usize) -> usize,
+        J: Copy + PartialEq,
+        K: Fn(&T) -> J,
+        C: Fn(J) -> usize,
     {
         self.pop_batch_anchored(key, cap_of, None, max_wait, first_wait)
     }
@@ -200,7 +204,7 @@ impl<T> ShardQueue<T> {
     /// that already waited behind another key's batch is emitted
     /// without paying a second window — per-item formation latency is
     /// bounded by one `max_wait` from true channel arrival.
-    pub fn pop_batch_by_arrival<K, C, A>(
+    pub fn pop_batch_by_arrival<J, K, C, A>(
         &self,
         key: K,
         cap_of: C,
@@ -209,14 +213,15 @@ impl<T> ShardQueue<T> {
         first_wait: Duration,
     ) -> Pop<T>
     where
-        K: Fn(&T) -> usize,
-        C: Fn(usize) -> usize,
+        J: Copy + PartialEq,
+        K: Fn(&T) -> J,
+        C: Fn(J) -> usize,
         A: Fn(&T) -> Instant,
     {
         self.pop_batch_anchored(key, cap_of, Some(&arrival), max_wait, first_wait)
     }
 
-    fn pop_batch_anchored<K, C>(
+    fn pop_batch_anchored<J, K, C>(
         &self,
         key: K,
         cap_of: C,
@@ -225,8 +230,9 @@ impl<T> ShardQueue<T> {
         first_wait: Duration,
     ) -> Pop<T>
     where
-        K: Fn(&T) -> usize,
-        C: Fn(usize) -> usize,
+        J: Copy + PartialEq,
+        K: Fn(&T) -> J,
+        C: Fn(J) -> usize,
     {
         let mut st = self.lock();
         // phase 1: the first item (or closed / timed out)
@@ -300,10 +306,10 @@ impl<T> ShardQueue<T> {
 /// by an earlier pass and are carried over without re-keying. One
 /// O(queue) partition pass through the reusable scratch buffer — no
 /// per-item shifting, no allocation once the scratch is warm.
-fn take_matching<T>(
+fn take_matching<T, J: Copy + PartialEq>(
     st: &mut State<T>,
-    key: &impl Fn(&T) -> usize,
-    k: usize,
+    key: &impl Fn(&T) -> J,
+    k: J,
     cap: usize,
     skip: usize,
     out: &mut Vec<T>,

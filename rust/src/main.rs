@@ -5,15 +5,16 @@
 //! repro report [--nmat N] [--seed S]     run every experiment
 //! repro qrd [--m 4] [--approach hub] [--n 26] [--r 4] [--seed 1]
 //!           [--batch B] [--tile T] [--threads T] [--blocked-m M]
+//!           [--panel P]
 //! repro serve [--engine native|pjrt] [--requests N] [--batch B]
 //!             [--workers W] [--threads T] [--tile T]
 //!             [--shards S] [--max-restarts R]
-//!             [--max-m M] [--blocked-m M]
+//!             [--max-m M] [--blocked-m M] [--panel P]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //!             [--listen ADDR [--window W] [--deadline-ms D]
 //!              [--read-timeout-ms T] [--write-timeout-ms T]]
 //! repro loadgen [--addr HOST:PORT] [--conns N] [--threads T]
-//!               [--requests R] [--max-m M] [--seed S]
+//!               [--requests R] [--max-m M] [--ops LIST] [--seed S]
 //!               [--chaos] [--shutdown] [--bench-out PATH]
 //! ```
 //!
@@ -29,10 +30,18 @@
 //!
 //! Variable-m serving (wire format v2): `--max-m M` raises the accepted
 //! matrix-size cap and the synthetic load mixes m uniformly in
-//! `[2, M]`; per-m bins are batched separately and reconciled in the
+//! `[2, M]`; per-key bins are batched separately and reconciled in the
 //! report, with spot checks bit-exact against the reference path.
 //! `--blocked-m M` sets the smallest m decomposed through the blocked
-//! wave schedule (`qrd::blocked`) inside each native engine.
+//! wave schedule (`qrd::blocked`) inside each native engine, and
+//! `--panel P` caps each blocked wave at P rotations (0 = the full
+//! wavefront) — a cache-residency knob that never changes output bits.
+//!
+//! Op-keyed serving (wire format v3): every request carries an op byte
+//! alongside m, and batching/routing/accounting all key on the
+//! `(op, m)` pair. `repro loadgen --ops qrd,solve,append_qr` mixes
+//! operations in one run (repeats skew the mix); v2 frames are still
+//! accepted and served as QRD.
 //!
 //! `repro qrd --batch B` switches from the single-matrix walkthrough to
 //! a batch-interleaved throughput demo over B random m×m matrices
@@ -55,9 +64,9 @@ use fp_givens::util::cli::Args;
 const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
-  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
-  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]";
+  repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M] [--panel P]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
+  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -100,17 +109,19 @@ fn main() -> anyhow::Result<()> {
                 // batch-interleaved throughput demo on the bit-level
                 // serving path (lane-major tiles through NativeEngine;
                 // any m — the wire format carries the dimension)
-                use fp_givens::coordinator::{BatchEngine, NativeEngine};
+                use fp_givens::coordinator::{BatchEngine, JobKey, NativeEngine};
                 use fp_givens::util::rng::Rng;
                 anyhow::ensure!(m >= 1, "--m must be at least 1");
                 let tile = args.get_as("tile", NativeEngine::DEFAULT_TILE);
                 let threads = args.get_as("threads", 1usize);
                 let blocked_m =
                     args.get_as("blocked-m", NativeEngine::DEFAULT_BLOCKED_MIN);
+                let panel = args.get_as("panel", 0usize);
                 let native = NativeEngine::with_engine(QrdEngine::new(cfg))
                     .with_threads(threads)
                     .with_tile(tile)
-                    .with_blocked(blocked_m);
+                    .with_blocked(blocked_m)
+                    .with_panel(panel);
                 let mut rng = Rng::new(seed);
                 let mats: Vec<Vec<u32>> = (0..batch)
                     .map(|_| {
@@ -121,7 +132,7 @@ fn main() -> anyhow::Result<()> {
                     })
                     .collect();
                 let t0 = std::time::Instant::now();
-                let out = native.run(m, &mats).map_err(anyhow::Error::msg)?;
+                let out = native.run(JobKey::qrd(m), &mats).map_err(anyhow::Error::msg)?;
                 let wall = t0.elapsed().as_secs_f64();
                 println!("engine    : {}", native.name());
                 println!(
@@ -179,6 +190,7 @@ fn main() -> anyhow::Result<()> {
                 "blocked-m",
                 fp_givens::coordinator::NativeEngine::DEFAULT_BLOCKED_MIN,
             );
+            let panel = args.get_as("panel", 0usize);
             let cfg = fp_givens::coordinator::ServeConfig {
                 engine,
                 requests,
@@ -191,6 +203,7 @@ fn main() -> anyhow::Result<()> {
                 tile,
                 max_m,
                 blocked_m,
+                panel,
             };
             if args.has("listen") {
                 // TCP frontend: serve the wire format over a socket
@@ -217,13 +230,28 @@ fn main() -> anyhow::Result<()> {
             }
         }
         Some("loadgen") => {
+            use fp_givens::coordinator::OpKind;
             let bench_out = args.get("bench-out", "");
+            let ops_arg = args.get("ops", "qrd");
+            let ops: Vec<OpKind> = ops_arg
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| match s.trim() {
+                    "qrd" => Ok(OpKind::Qrd),
+                    "solve" => Ok(OpKind::Solve),
+                    "append_qr" => Ok(OpKind::AppendQr),
+                    other => Err(anyhow::anyhow!(
+                        "unknown op {other} (want qrd, solve, or append_qr)"
+                    )),
+                })
+                .collect::<anyhow::Result<_>>()?;
             fp_givens::coordinator::run_loadgen(&fp_givens::coordinator::LoadgenConfig {
                 addr: args.get("addr", "127.0.0.1:7290"),
                 conns: args.get_as("conns", 1000usize),
                 threads: args.get_as("threads", 32usize),
                 requests_per_conn: args.get_as("requests", 8usize),
                 max_m: args.get_as("max-m", 8usize),
+                ops,
                 chaos: args.has("chaos"),
                 seed: args.get_as("seed", 42u64),
                 shutdown: args.has("shutdown"),

@@ -1,0 +1,175 @@
+//! Incremental column-append QR — the GMRES/Arnoldi Hessenberg update.
+//!
+//! Iterative Krylov solvers grow a Hessenberg matrix one column per
+//! iteration and keep it triangular *incrementally*: the k previously
+//! recorded Givens rotations are replayed down the new column, then one
+//! fresh rotation is computed from the (k, k+1) pivot pair and applied,
+//! zeroing the column's last entry. Column j arrives with j+2 entries,
+//! so a length-m column carries exactly k = m − 2 stored rotations.
+//!
+//! The arithmetic is plain f32 (the serving payload is f32 bit words),
+//! and **operation order is identical** between the incremental update
+//! and a from-scratch retriangularization of the whole Hessenberg —
+//! rotation i only ever reads rows (i, i+1), so replay-then-append is
+//! a no-op reordering. That makes the full recompute
+//! ([`append_qr_reference`]) a *bit-exact* oracle for the incremental
+//! path ([`append_column`]), the same locking discipline the blocked
+//! wave schedules use.
+
+/// One plane rotation `(cs, sn)` computed from the pivot pair `(a, b)`:
+/// `t = √(a² + b²)`, `cs = a/t`, `sn = b/t`. The degenerate all-zero
+/// pair yields the identity rotation `(1, 0)`.
+pub fn givens_pair(a: f32, b: f32) -> (f32, f32) {
+    let t = (a * a + b * b).sqrt();
+    if t == 0.0 {
+        (1.0, 0.0)
+    } else {
+        (a / t, b / t)
+    }
+}
+
+/// Apply one stored rotation to a row pair:
+/// `(cs·h0 + sn·h1, −sn·h0 + cs·h1)`.
+pub fn apply_pair(cs: f32, sn: f32, h0: f32, h1: f32) -> (f32, f32) {
+    (cs * h0 + sn * h1, -sn * h0 + cs * h1)
+}
+
+/// The incremental update (the serving hot path for `OpKind::AppendQr`):
+/// replay `rots` down `col`, compute and apply one new rotation on the
+/// final pair, zero the last entry, and return the new `(cs, sn)`.
+///
+/// `col.len()` must be `rots.len() + 2`.
+pub fn append_column(rots: &[(f32, f32)], col: &mut [f32]) -> (f32, f32) {
+    let k = rots.len();
+    assert_eq!(
+        col.len(),
+        k + 2,
+        "append_column: a column of {} entries carries {k} stored rotations, not {}",
+        k + 2,
+        col.len().saturating_sub(2)
+    );
+    for (i, &(cs, sn)) in rots.iter().enumerate() {
+        let (h0, h1) = apply_pair(cs, sn, col[i], col[i + 1]);
+        col[i] = h0;
+        col[i + 1] = h1;
+    }
+    let (cs, sn) = givens_pair(col[k], col[k + 1]);
+    col[k] = cs * col[k] + sn * col[k + 1];
+    col[k + 1] = 0.0;
+    (cs, sn)
+}
+
+/// Full-recompute reference: retriangularize the whole Hessenberg from
+/// scratch (column j has j + 2 entries) and return the transformed
+/// columns plus every rotation. Bit-identical to feeding the columns
+/// through [`append_column`] one at a time — the oracle the serving op
+/// is locked against.
+pub fn append_qr_reference(cols: &[Vec<f32>]) -> (Vec<Vec<f32>>, Vec<(f32, f32)>) {
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(cols.len());
+    let mut rots: Vec<(f32, f32)> = Vec::with_capacity(cols.len());
+    for (j, col) in cols.iter().enumerate() {
+        assert_eq!(col.len(), j + 2, "Hessenberg column {j} must have {} entries", j + 2);
+        let mut c = col.clone();
+        let r = append_column(&rots, &mut c);
+        rots.push(r);
+        out.push(c);
+    }
+    (out, rots)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_hessenberg(rng: &mut Rng, n: usize) -> Vec<Vec<f32>> {
+        (0..n)
+            .map(|j| {
+                let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
+                (0..j + 2).map(|_| rng.range(-1.0, 1.0) as f32 * s).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn incremental_update_is_bit_identical_to_full_recompute() {
+        let mut rng = Rng::new(17);
+        for n in [1usize, 2, 5, 14] {
+            let cols = random_hessenberg(&mut rng, n);
+            // incremental: one append_column per arriving column
+            let mut rots = Vec::new();
+            let mut inc = Vec::new();
+            for col in &cols {
+                let mut c = col.clone();
+                let r = append_column(&rots, &mut c);
+                rots.push(r);
+                inc.push(c);
+            }
+            // full recompute over the same columns
+            let (full, full_rots) = append_qr_reference(&cols);
+            for (j, (a, b)) in inc.iter().zip(&full).enumerate() {
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "n={n} column {j} diverged bitwise");
+            }
+            for (j, (a, b)) in rots.iter().zip(&full_rots).enumerate() {
+                assert_eq!(
+                    (a.0.to_bits(), a.1.to_bits()),
+                    (b.0.to_bits(), b.1.to_bits()),
+                    "n={n} rotation {j} diverged bitwise"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn each_column_ends_upper_triangular() {
+        // after processing, column j's entries below row j are zero —
+        // the triangularity the update exists to maintain
+        let mut rng = Rng::new(3);
+        let cols = random_hessenberg(&mut rng, 8);
+        let (out, rots) = append_qr_reference(&cols);
+        assert_eq!(rots.len(), 8);
+        for (j, col) in out.iter().enumerate() {
+            assert_eq!(col[j + 1], 0.0, "column {j}: subdiagonal entry must be zeroed");
+        }
+        // every rotation is a unit vector (cs² + sn² ≈ 1)
+        for (j, (cs, sn)) in rots.iter().enumerate() {
+            let norm = cs * cs + sn * sn;
+            assert!((norm - 1.0).abs() < 1e-5, "rotation {j}: cs²+sn² = {norm}");
+        }
+    }
+
+    #[test]
+    fn rotations_preserve_column_norm() {
+        let mut rng = Rng::new(29);
+        let cols = random_hessenberg(&mut rng, 6);
+        let (out, _) = append_qr_reference(&cols);
+        for (j, (before, after)) in cols.iter().zip(&out).enumerate() {
+            let n0: f64 = before.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            let n1: f64 = after.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            assert!(
+                (n0.sqrt() - n1.sqrt()).abs() < 1e-3 * n0.sqrt().max(1.0),
+                "column {j}: ‖·‖ {} → {}",
+                n0.sqrt(),
+                n1.sqrt()
+            );
+        }
+    }
+
+    #[test]
+    fn zero_pivot_pair_degenerates_to_identity() {
+        assert_eq!(givens_pair(0.0, 0.0), (1.0, 0.0));
+        let mut col = vec![0.0f32, 0.0];
+        let (cs, sn) = append_column(&[], &mut col);
+        assert_eq!((cs, sn), (1.0, 0.0));
+        assert_eq!(col, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "append_column")]
+    fn wrong_column_length_fails_loudly() {
+        let mut col = vec![1.0f32; 5];
+        append_column(&[(1.0, 0.0)], &mut col); // 1 rotation needs len 3
+    }
+}

@@ -45,10 +45,11 @@ pub fn waves(m: usize) -> Vec<Vec<RotationStep>> {
 /// `panel = 1` degenerates to the flat column-major order (singleton
 /// waves). Narrow panels trade wave width for a smaller working set —
 /// the software knob mirroring the blocked/systolic array shapes of
-/// Merchant et al. Schedule-level for now: the engine always executes
-/// the full wavefront ([`waves`]); every panel width is locked
-/// bit-identical on the real datapath by the unit tests below, so
-/// wiring a panel knob upward is pure plumbing.
+/// Merchant et al. The engine executes any panel width through
+/// [`triangularize_waves_panel`] (`NativeEngine::with_panel` /
+/// `repro qrd --panel` upstream); every width is locked bit-identical
+/// on the real datapath by the unit tests below and the
+/// `fastpath_bitexact` suite.
 pub fn panel_waves(m: usize, panel: usize) -> Vec<Vec<RotationStep>> {
     if m < 2 {
         return Vec::new();
@@ -78,8 +79,8 @@ pub fn panel_waves(m: usize, panel: usize) -> Vec<Vec<RotationStep>> {
 /// Reusable scratch for the blocked wave executor: per-wave gathers of
 /// the pivot pairs and the (padded) lane-major row tails, the batched
 /// kernels' [`TileScratch`], and a cache of the wave list keyed by the
-/// last matrix size — so repeated decompositions at one size are
-/// allocation-free after warm-up.
+/// last (matrix size, panel width) pair — so repeated decompositions at
+/// one shape are allocation-free after warm-up.
 #[derive(Debug, Clone, Default)]
 pub struct BlockedScratch<T> {
     tile: TileScratch,
@@ -89,6 +90,7 @@ pub struct BlockedScratch<T> {
     ys: Vec<T>,
     waves: Vec<Vec<RotationStep>>,
     waves_m: usize,
+    waves_panel: usize,
 }
 
 impl<T: Copy + Default> BlockedScratch<T> {
@@ -97,10 +99,11 @@ impl<T: Copy + Default> BlockedScratch<T> {
         BlockedScratch::default()
     }
 
-    fn waves_for(&mut self, m: usize) -> &[Vec<RotationStep>] {
-        if self.waves_m != m || (m >= 2 && self.waves.is_empty()) {
-            self.waves = waves(m);
+    fn waves_for(&mut self, m: usize, panel: usize) -> &[Vec<RotationStep>] {
+        if self.waves_m != m || self.waves_panel != panel || (m >= 2 && self.waves.is_empty()) {
+            self.waves = panel_waves(m, panel);
             self.waves_m = m;
+            self.waves_panel = panel;
         }
         &self.waves
     }
@@ -121,9 +124,26 @@ pub fn triangularize_waves<F: FamilyOps>(
     width: usize,
     sc: &mut BlockedScratch<F::Scalar>,
 ) {
+    triangularize_waves_panel(rot, buf, m, width, 0, sc)
+}
+
+/// [`triangularize_waves`] over the panel-wise schedule
+/// ([`panel_waves`]): columns are zeroed `panel` at a time, each
+/// panel's eliminations running as anti-diagonal waves. `panel = 0`
+/// selects the full wavefront; every width produces byte-identical
+/// `[R | G]` (pure reordering of commuting rotations) — only the wave
+/// shapes, and hence the working set per batched sweep, change.
+pub fn triangularize_waves_panel<F: FamilyOps>(
+    rot: &F,
+    buf: &mut [F::Scalar],
+    m: usize,
+    width: usize,
+    panel: usize,
+    sc: &mut BlockedScratch<F::Scalar>,
+) {
     assert!(width >= m, "augmented width must cover the matrix");
     assert_eq!(buf.len(), m * width, "buffer must be m×width");
-    sc.waves_for(m);
+    sc.waves_for(m, panel);
     // split the borrow: the cached wave list is read-only while the
     // gather buffers and tile scratch are mutated
     let BlockedScratch { tile, px, pz, xs, ys, waves, .. } = sc;
@@ -270,11 +290,10 @@ mod tests {
         use crate::fp::{FpFormat, HubFp};
         use crate::rotator::{HubRotator, RotatorConfig};
         let rot = HubRotator::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
-        let run = |wv: Vec<Vec<RotationStep>>, m: usize, init: &[HubFp]| -> Vec<u64> {
-            let mut sc: BlockedScratch<HubFp> =
-                BlockedScratch { waves: wv, waves_m: m, ..Default::default() };
+        let run = |panel: usize, m: usize, init: &[HubFp]| -> Vec<u64> {
+            let mut sc: BlockedScratch<HubFp> = BlockedScratch::new();
             let mut buf = init.to_vec();
-            triangularize_waves(&rot, &mut buf, m, 2 * m, &mut sc);
+            triangularize_waves_panel(&rot, &mut buf, m, 2 * m, panel, &mut sc);
             buf.iter().map(|&v| rot.to_bits(v)).collect()
         };
         for m in [2usize, 5, 9] {
@@ -287,9 +306,9 @@ mod tests {
                 }
                 init[i * width + m + i] = rot.one();
             }
-            let full = run(waves(m), m, &init);
+            let full = run(0, m, &init);
             for panel in 1..=m {
-                assert_eq!(run(panel_waves(m, panel), m, &init), full, "m={m} panel={panel}");
+                assert_eq!(run(panel, m, &init), full, "m={m} panel={panel}");
             }
         }
     }
@@ -304,13 +323,16 @@ mod tests {
     }
 
     #[test]
-    fn scratch_caches_waves_per_size() {
+    fn scratch_caches_waves_per_size_and_panel() {
         let mut sc: BlockedScratch<crate::fp::HubFp> = BlockedScratch::new();
-        assert_eq!(sc.waves_for(6).len(), 9);
+        assert_eq!(sc.waves_for(6, 0).len(), 9);
         let ptr = sc.waves.as_ptr();
-        assert_eq!(sc.waves_for(6).len(), 9);
-        assert_eq!(sc.waves.as_ptr(), ptr, "same size must reuse the cached list");
-        assert_eq!(sc.waves_for(4).len(), 5);
-        assert!(sc.waves_for(1).is_empty());
+        assert_eq!(sc.waves_for(6, 0).len(), 9);
+        assert_eq!(sc.waves.as_ptr(), ptr, "same shape must reuse the cached list");
+        assert_eq!(sc.waves_for(4, 0).len(), 5);
+        // a panel change at the same m invalidates the cache (panel 1 =
+        // flat order: one singleton wave per rotation)
+        assert_eq!(sc.waves_for(4, 1).len(), rotation_count(4));
+        assert!(sc.waves_for(1, 0).is_empty());
     }
 }

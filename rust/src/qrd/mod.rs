@@ -7,6 +7,7 @@
 //! the two rows. Feeding the identity alongside (`[A | I]`) accumulates
 //! G = Q^T (paper §5.1: the same rotations over the identity produce Q).
 
+pub mod append;
 pub mod blocked;
 mod fixed_engine;
 mod iterative;
@@ -15,13 +16,15 @@ mod schedule;
 pub mod solve;
 pub mod workspace;
 
+pub use append::{append_column, append_qr_reference, givens_pair};
 pub use blocked::{panel_waves, waves, BlockedScratch};
 pub use fixed_engine::FixedQrdEngine;
 pub use iterative::{IterativeQrd, IterativeRun};
 pub use rls::QrdRls;
 pub use schedule::{pair_op_count, rotation_count, schedule, RotationStep};
 pub use workspace::{
-    triangularize_blocked_ws, triangularize_tile, triangularize_ws, BatchWorkspace, QrdWorkspace,
+    triangularize_blocked_panel_ws, triangularize_blocked_ws, triangularize_tile,
+    triangularize_ws, BatchWorkspace, QrdWorkspace,
 };
 
 use crate::fp::Family;

@@ -247,8 +247,22 @@ pub fn triangularize_ws<F: FamilyOps>(rot: &F, ws: &mut QrdWorkspace<F::Scalar>)
 /// (locked by `tests/fastpath_bitexact.rs`). Allocation-free after
 /// warm-up at a fixed matrix size.
 pub fn triangularize_blocked_ws<F: FamilyOps>(rot: &F, ws: &mut QrdWorkspace<F::Scalar>) {
+    triangularize_blocked_panel_ws(rot, ws, 0)
+}
+
+/// [`triangularize_blocked_ws`] over the **panel-wise** wave schedule:
+/// columns are zeroed `panel` at a time (`0` = full wavefront, `1` =
+/// the flat order as singleton waves). Byte-identical output for every
+/// panel width — the knob only reshapes the waves, trading batched
+/// sweep width for working-set size (`NativeEngine::with_panel`
+/// upstream; locked by the `fastpath_bitexact` suite).
+pub fn triangularize_blocked_panel_ws<F: FamilyOps>(
+    rot: &F,
+    ws: &mut QrdWorkspace<F::Scalar>,
+    panel: usize,
+) {
     let QrdWorkspace { buf, blocked: scratch, m, width, .. } = ws;
-    blocked::triangularize_waves(rot, buf, *m, *width, scratch);
+    blocked::triangularize_waves_panel(rot, buf, *m, *width, panel, scratch);
 }
 
 /// Run the Givens schedule over a prepared lane-major tile in place,

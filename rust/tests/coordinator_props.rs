@@ -1,7 +1,10 @@
 //! Coordinator property tests: no request lost, order preserved,
-//! responses correct under concurrent clients, batch-size caps hold.
+//! responses correct under concurrent clients, batch-size caps hold —
+//! across the full `JobKey{op, m}` space, not just QRD.
 
-use fp_givens::coordinator::{BatchEngine, BatchPolicy, NativeEngine, QrdService, RestartPolicy};
+use fp_givens::coordinator::{
+    BatchEngine, BatchPolicy, JobKey, NativeEngine, OpKind, QrdService, RestartPolicy,
+};
 use fp_givens::util::prop;
 use fp_givens::util::rng::Rng;
 use std::sync::{Arc, Mutex};
@@ -9,6 +12,31 @@ use std::sync::{Arc, Mutex};
 fn random_matrix(rng: &mut Rng) -> [u32; 16] {
     let scale = 2f32.powf(rng.range(-6.0, 6.0) as f32);
     std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
+}
+
+/// A well-formed payload for any key: Solve systems get a dominant
+/// diagonal, append requests a plausible (cos, sin) rotation prefix.
+fn random_payload(rng: &mut Rng, key: JobKey) -> Vec<u32> {
+    let m = key.m();
+    let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
+    let mut a: Vec<u32> =
+        (0..key.request_words()).map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits()).collect();
+    match key.op {
+        OpKind::Qrd => {}
+        OpKind::Solve => {
+            for e in (0..m * m).step_by(m + 1) {
+                a[e] = (f32::from_bits(a[e]) + 4.0 * s).to_bits();
+            }
+        }
+        OpKind::AppendQr => {
+            for i in 0..m - 2 {
+                let t = rng.range(-3.0, 3.0);
+                a[2 * i] = (t.cos() as f32).to_bits();
+                a[2 * i + 1] = (t.sin() as f32).to_bits();
+            }
+        }
+    }
+    a
 }
 
 #[test]
@@ -191,14 +219,14 @@ fn per_shard_fifo_batch_formation_under_concurrent_submitters() {
     // (per-producer FIFO; the global interleaving is unspecified).
     struct RecordingEngine(Arc<Mutex<Vec<u32>>>);
     impl BatchEngine for RecordingEngine {
-        fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(&self, key: JobKey, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             let mut log = self.0.lock().unwrap();
             for a in mats {
                 log.push(a[0]);
             }
-            Ok(vec![vec![0u32; m * 2 * m]; mats.len()])
+            Ok(vec![vec![0u32; key.response_words()]; mats.len()])
         }
-        fn preferred_batch(&self, _m: usize) -> usize {
+        fn preferred_batch(&self, _key: JobKey) -> usize {
             8
         }
         fn name(&self) -> String {
@@ -246,13 +274,14 @@ fn per_shard_fifo_batch_formation_under_concurrent_submitters() {
     svc.shutdown();
 }
 
-/// Satellite suite: M concurrent submitters with a random m per request
-/// against one topology. Every response must pair with its own request
-/// (right m, right bits — the oracle is the fast path, itself locked to
-/// the reference by `fastpath_bitexact`), and the per-m bin metrics
-/// must reconcile: accepted == served in every bin, bins sum to the
-/// request total.
-fn mixed_m_stress(sharded: bool) {
+/// Satellite suite: M concurrent submitters with a random (op, m) per
+/// request against one topology. Every response must pair with its own
+/// request (right key, right bits — the oracle is the engine's own
+/// single-request path, itself locked to the mathematical references by
+/// the engine and fastpath suites), and the per-key bin metrics must
+/// reconcile: accepted == served in every bin, bins sum to the request
+/// total.
+fn mixed_key_stress(sharded: bool) {
     let workers = 3usize;
     let factories: Vec<_> = (0..workers)
         .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
@@ -273,22 +302,24 @@ fn mixed_m_stress(sharded: bool) {
         handles.push(std::thread::spawn(move || {
             let eng = NativeEngine::flagship();
             let mut rng = Rng::new(c as u64 * 7919 + 3);
-            let mut counts = vec![0u64; 17];
+            let mut counts: std::collections::BTreeMap<JobKey, u64> =
+                std::collections::BTreeMap::new();
             let mut inflight = std::collections::VecDeque::new();
-            let mut check = |(m, a, rx): (usize, Vec<u32>, _)| {
+            let mut check = |(key, a, rx): (JobKey, Vec<u32>, _)| {
                 let rx: std::sync::mpsc::Receiver<fp_givens::coordinator::Response> = rx;
                 let resp = rx.recv().expect("response");
-                assert!(resp.error.is_none(), "client {c} m={m}: {:?}", resp.error);
-                assert_eq!(resp.m, m, "client {c}");
-                assert_eq!(resp.out, eng.qrd_bits_m(m, &a), "client {c} m={m}");
+                assert!(resp.error.is_none(), "client {c} {}: {:?}", key.label(), resp.error);
+                assert_eq!(resp.key, key, "client {c}");
+                let want = eng.run(key, &[a]).expect("oracle").remove(0);
+                assert_eq!(resp.out, want, "client {c} {}", key.label());
             };
             for _ in 0..per_client {
                 let m = m_pool[rng.below(m_pool.len() as u64) as usize];
-                let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
-                let a: Vec<u32> =
-                    (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits()).collect();
-                counts[m] += 1;
-                inflight.push_back((m, a.clone(), svc.submit_m(m, a)));
+                let op = OpKind::ALL[rng.below(OpKind::ALL.len() as u64) as usize];
+                let key = JobKey::new(op, m);
+                let a = random_payload(&mut rng, key);
+                *counts.entry(key).or_insert(0) += 1;
+                inflight.push_back((key, a.clone(), svc.submit_key(key, a)));
                 if inflight.len() >= 24 {
                     check(inflight.pop_front().unwrap());
                 }
@@ -299,10 +330,10 @@ fn mixed_m_stress(sharded: bool) {
             counts
         }));
     }
-    let mut submitted = vec![0u64; 17];
+    let mut submitted: std::collections::BTreeMap<JobKey, u64> = std::collections::BTreeMap::new();
     for h in handles {
-        for (m, n) in h.join().unwrap().into_iter().enumerate() {
-            submitted[m] += n;
+        for (key, n) in h.join().unwrap() {
+            *submitted.entry(key).or_insert(0) += n;
         }
     }
     let total = (clients * per_client) as u64;
@@ -310,14 +341,15 @@ fn mixed_m_stress(sharded: bool) {
     assert_eq!(metrics.requests(), total);
     assert_eq!(metrics.latency().count(), total);
     assert_eq!(metrics.worker_batch_counts().iter().sum::<u64>(), metrics.batches());
-    // per-m reconciliation: every bin's accepted == served == what the
-    // clients actually submitted, and the bins sum to the total
-    let bins = metrics.per_m_bins();
+    // per-key reconciliation: every bin's accepted == served == what
+    // the clients actually submitted, and the bins sum to the total
+    let bins = metrics.per_key_bins();
     let mut bin_sum = 0u64;
-    for (m, req, srv, batches) in bins {
-        assert_eq!(req, submitted[m], "bin m={m} accepted");
-        assert_eq!(srv, submitted[m], "bin m={m} served");
-        assert!(batches >= 1 && batches <= req, "bin m={m} batches");
+    for (key, req, srv, batches) in bins {
+        let sent = submitted.get(&key).copied().unwrap_or(0);
+        assert_eq!(req, sent, "bin {} accepted", key.label());
+        assert_eq!(srv, sent, "bin {} served", key.label());
+        assert!(batches >= 1 && batches <= req, "bin {} batches", key.label());
         bin_sum += srv;
     }
     assert_eq!(bin_sum, total, "bins must cover every request");
@@ -327,26 +359,95 @@ fn mixed_m_stress(sharded: bool) {
 }
 
 #[test]
-fn mixed_m_stress_shared_lock_topology() {
-    mixed_m_stress(false);
+fn mixed_key_stress_shared_lock_topology() {
+    mixed_key_stress(false);
 }
 
 #[test]
-fn mixed_m_stress_sharded_topology() {
-    mixed_m_stress(true);
+fn mixed_key_stress_sharded_topology() {
+    mixed_key_stress(true);
 }
 
-/// Shutdown (and pool death) must drain **every per-m bin**: requests
-/// stashed in a non-matching bin while a batch was forming are answered
-/// like any queued request — no client can ever see a bare `RecvError`.
+/// Uniform-key batch audit: an auditing engine wraps the native one and
+/// asserts every batch it is handed is key-uniform — each payload the
+/// exact word count its key demands. Mixed-key traffic must never leak
+/// a foreign-key job into a batch on either topology.
 #[test]
-fn dead_pool_drains_every_m_bin_with_error_responses() {
+fn batches_stay_key_uniform_under_mixed_traffic() {
+    struct AuditEngine {
+        inner: NativeEngine,
+        violations: Arc<Mutex<Vec<String>>>,
+    }
+    impl BatchEngine for AuditEngine {
+        fn run(&self, key: JobKey, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+            for (i, a) in mats.iter().enumerate() {
+                if a.len() != key.request_words() {
+                    self.violations.lock().unwrap().push(format!(
+                        "batch keyed {} carries job {i} with {} words (want {})",
+                        key.label(),
+                        a.len(),
+                        key.request_words()
+                    ));
+                }
+            }
+            self.inner.run(key, mats)
+        }
+        fn preferred_batch(&self, key: JobKey) -> usize {
+            self.inner.preferred_batch(key)
+        }
+        fn name(&self) -> String {
+            "audit".into()
+        }
+    }
+    for sharded in [false, true] {
+        let violations = Arc::new(Mutex::new(Vec::new()));
+        let factories: Vec<_> = (0..2)
+            .map(|_| {
+                let violations = violations.clone();
+                move || {
+                    Box::new(AuditEngine {
+                        inner: NativeEngine::flagship(),
+                        violations: violations.clone(),
+                    }) as Box<dyn BatchEngine>
+                }
+            })
+            .collect();
+        let policy = BatchPolicy { max_batch: 8, max_wait_us: 200 };
+        let svc = if sharded {
+            QrdService::start_sharded(factories, policy, RestartPolicy::default())
+        } else {
+            QrdService::start_pool(factories, policy)
+        }
+        .with_max_m(8);
+        let mut rng = Rng::new(0xA0D1);
+        let rxs: Vec<_> = (0..160)
+            .map(|k| {
+                let key = JobKey::new(OpKind::ALL[k % 3], [2usize, 3, 4, 8][k % 4]);
+                svc.submit_key(key, random_payload(&mut rng, key))
+            })
+            .collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("response");
+            assert!(resp.error.is_none(), "sharded={sharded}: {:?}", resp.error);
+        }
+        svc.shutdown();
+        let v = violations.lock().unwrap();
+        assert!(v.is_empty(), "sharded={sharded}: {:?}", *v);
+    }
+}
+
+/// Shutdown (and pool death) must drain **every per-key bin** — all
+/// three op bins included: requests stashed in a non-matching bin while
+/// a batch was forming are answered like any queued request — no client
+/// can ever see a bare `RecvError`.
+#[test]
+fn dead_pool_drains_every_key_bin_with_error_responses() {
     struct PanicEngine;
     impl BatchEngine for PanicEngine {
-        fn run(&self, _m: usize, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        fn run(&self, _key: JobKey, _mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
             panic!("injected");
         }
-        fn preferred_batch(&self, _m: usize) -> usize {
+        fn preferred_batch(&self, _key: JobKey) -> usize {
             4
         }
         fn name(&self) -> String {
@@ -367,13 +468,13 @@ fn dead_pool_drains_every_m_bin_with_error_responses() {
             )
         }
         .with_max_m(8);
-        // interleaved sizes racing the first (panicking) batch: some
+        // interleaved keys racing the first (panicking) batch: some
         // land in the worker's forming batch, some in other bins, some
         // behind the dead pool — every one must get a Response
         let rxs: Vec<_> = (0..48)
             .map(|k| {
-                let m = [2usize, 3, 5, 8][k % 4];
-                svc.submit_m(m, vec![0x3f80_0000u32; m * m])
+                let key = JobKey::new(OpKind::ALL[k % 3], [2usize, 3, 5, 8][k % 4]);
+                svc.submit_key(key, vec![0x3f80_0000u32; key.request_words()])
             })
             .collect();
         for (k, rx) in rxs.into_iter().enumerate() {
@@ -387,29 +488,30 @@ fn dead_pool_drains_every_m_bin_with_error_responses() {
 }
 
 #[test]
-fn shutdown_answers_queued_mixed_m_requests() {
+fn shutdown_answers_queued_mixed_key_requests() {
     // a healthy pool: shutdown must serve (not error) everything queued
-    // across bins before joining
+    // across op and m bins before joining
     let svc = QrdService::start(
         || Box::new(NativeEngine::flagship()),
         BatchPolicy { max_batch: 8, max_wait_us: 100 },
     )
     .with_max_m(8);
     let eng = NativeEngine::flagship();
-    let items: Vec<(usize, Vec<u32>, _)> = (0..40)
+    let mut rng = Rng::new(0x5D0);
+    let items: Vec<(JobKey, Vec<u32>, _)> = (0..40)
         .map(|k| {
-            let m = [2usize, 3, 4, 8][k % 4];
-            let a: Vec<u32> =
-                (0..m * m).map(|i| ((k + i) as f32 * 0.21 - 3.0).to_bits()).collect();
-            let rx = svc.submit_m(m, a.clone());
-            (m, a, rx)
+            let key = JobKey::new(OpKind::ALL[k % 3], [2usize, 3, 4, 8][k % 4]);
+            let a = random_payload(&mut rng, key);
+            let rx = svc.submit_key(key, a.clone());
+            (key, a, rx)
         })
         .collect();
     svc.shutdown();
-    for (k, (m, a, rx)) in items.into_iter().enumerate() {
+    for (k, (key, a, rx)) in items.into_iter().enumerate() {
         let resp = rx.recv().expect("shutdown never drops a channel");
         if resp.error.is_none() {
-            assert_eq!(resp.out, eng.qrd_bits_m(m, &a), "request {k}");
+            let want = eng.run(key, &[a]).expect("oracle").remove(0);
+            assert_eq!(resp.out, want, "request {k} {}", key.label());
         }
         // an error response is acceptable only with the shutdown reason
         if let Some(e) = &resp.error {

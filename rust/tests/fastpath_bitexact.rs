@@ -421,7 +421,7 @@ fn bit_level_serving_path_matches_reference_on_edge_patterns() {
 
 #[test]
 fn interleaved_wire_path_matches_reference_across_tile_sizes() {
-    use fp_givens::coordinator::{BatchEngine, NativeEngine};
+    use fp_givens::coordinator::{BatchEngine, JobKey, NativeEngine};
 
     // the flagship HUB engine and a conventional-family engine, both
     // on the 4×4 u32 wire format the service speaks
@@ -456,7 +456,7 @@ fn interleaved_wire_path_matches_reference_across_tile_sizes() {
         // matrix — 73 matrices ⇒ tiles 2/3/16/64 all hit a partial tail
         for tile in [1usize, 2, 3, 4, 16, 64, 128] {
             let eng = NativeEngine::with_engine(base.eng.clone()).with_tile(tile);
-            let got = eng.run(4, &vecs).unwrap();
+            let got = eng.run(JobKey::qrd(4), &vecs).unwrap();
             for (k, (g, w)) in got.iter().zip(&want).enumerate() {
                 assert_eq!(g, w, "tile={tile} matrix {k} [{}]", eng.eng.rot.cfg.label());
             }
@@ -472,6 +472,8 @@ fn interleaved_wire_path_matches_reference_across_tile_sizes() {
 #[test]
 fn variable_m_wire_path_matches_reference_across_m_tiles_and_schedules() {
     use fp_givens::coordinator::{BatchEngine, NativeEngine};
+
+    use fp_givens::coordinator::JobKey;
 
     let specials = wire_specials();
     let bases = vec![
@@ -503,18 +505,24 @@ fn variable_m_wire_path_matches_reference_across_m_tiles_and_schedules() {
                 mats.iter().map(|a| base.qrd_bits_reference_m(m, a)).collect();
             for tile in [1usize, 4, 16] {
                 for blocked_min in [1usize, usize::MAX] {
-                    let eng = NativeEngine::with_engine(base.eng.clone())
-                        .with_tile(tile)
-                        .with_blocked(blocked_min);
-                    let got = eng.run(m, &mats).unwrap();
-                    assert_eq!(got.len(), want.len());
-                    for (k, (g, w)) in got.iter().zip(&want).enumerate() {
-                        assert_eq!(
-                            g,
-                            w,
-                            "m={m} tile={tile} blocked_min={blocked_min} matrix {k} [{}]",
-                            eng.eng.rot.cfg.label()
-                        );
+                    // panel only reorders the blocked schedule; it must
+                    // never change a single output bit
+                    for panel in [0usize, 1, 3] {
+                        let eng = NativeEngine::with_engine(base.eng.clone())
+                            .with_tile(tile)
+                            .with_blocked(blocked_min)
+                            .with_panel(panel);
+                        let got = eng.run(JobKey::qrd(m), &mats).unwrap();
+                        assert_eq!(got.len(), want.len());
+                        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                            assert_eq!(
+                                g,
+                                w,
+                                "m={m} tile={tile} blocked_min={blocked_min} panel={panel} \
+                                 matrix {k} [{}]",
+                                eng.eng.rot.cfg.label()
+                            );
+                        }
                     }
                 }
             }

@@ -2,16 +2,17 @@
 //!
 //! Every test binds a real `NetServer` on a loopback port and talks to
 //! it over actual sockets, then audits the socket-boundary identity:
-//! per m, `accepted == responded + deadline_timeouts + peer_vanished`,
-//! and every opened connection is closed. The malformed-input corpus
-//! from the in-process service level is replayed here on the wire:
-//! every truncation point of a valid frame, garbage bytes, half-closes,
-//! deadline expiry, window backpressure, remote shutdown, and a
+//! per `JobKey{op, m}`, `accepted == responded + deadline_timeouts +
+//! peer_vanished`, and every opened connection is closed. The
+//! malformed-input corpus from the in-process service level is replayed
+//! here on the wire: every truncation point of a valid frame, garbage
+//! bytes, half-closes, deadline expiry, window backpressure, remote
+//! shutdown, wire-format v2 compatibility, mixed-op round trips, and a
 //! mini chaos run through the fault-injecting load generator.
 
 use fp_givens::coordinator::{
-    read_frame, BatchEngine, BatchPolicy, Frame, FrameKind, LoadgenConfig, Metrics, NativeEngine,
-    NetClient, NetConfig, NetServer, QrdService, ReadOutcome, RestartPolicy,
+    read_frame, BatchEngine, BatchPolicy, Frame, FrameKind, JobKey, LoadgenConfig, Metrics,
+    NativeEngine, NetClient, NetConfig, NetServer, OpKind, QrdService, ReadOutcome, RestartPolicy,
 };
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
@@ -70,7 +71,7 @@ fn assert_identity(metrics: &Metrics) {
         metrics.net_responded_total(),
         metrics.deadline_timeouts(),
         metrics.peer_vanished(),
-        metrics.per_m_net_bins()
+        metrics.per_key_net_bins()
     );
     assert_eq!(metrics.conn_opened(), metrics.conn_closed(), "connection leak");
 }
@@ -199,11 +200,11 @@ struct SlowEngine {
 }
 
 impl BatchEngine for SlowEngine {
-    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(&self, key: JobKey, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
         std::thread::sleep(self.delay);
-        self.inner.run(m, mats)
+        self.inner.run(key, mats)
     }
-    fn preferred_batch(&self, _m: usize) -> usize {
+    fn preferred_batch(&self, _key: JobKey) -> usize {
         usize::MAX
     }
     fn name(&self) -> String {
@@ -258,16 +259,16 @@ struct GateEngine {
 }
 
 impl BatchEngine for GateEngine {
-    fn run(&self, m: usize, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+    fn run(&self, key: JobKey, mats: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
         let (lock, cv) = &*self.gate;
         let mut open = lock.lock().unwrap();
         while !*open {
             open = cv.wait(open).unwrap();
         }
         drop(open);
-        self.inner.run(m, mats)
+        self.inner.run(key, mats)
     }
-    fn preferred_batch(&self, _m: usize) -> usize {
+    fn preferred_batch(&self, _key: JobKey) -> usize {
         usize::MAX
     }
     fn name(&self) -> String {
@@ -332,6 +333,104 @@ fn full_window_stops_reading_instead_of_buffering() {
     assert_identity(&m);
 }
 
+/// Acceptance criterion: raw v2 bytes (version byte 2, reserved op
+/// byte) from a pre-op-keyed client must still be served end to end as
+/// `op = Qrd`, bit-exact, and land in the qrd net bin.
+#[test]
+fn v2_frames_are_served_as_qrd_end_to_end() {
+    let server = start_server(fast_net());
+    let reference = NativeEngine::flagship();
+    let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    for (id, m) in (2..=5).enumerate() {
+        let a = deterministic_matrix(m, 31 + id as u32);
+        let bytes = Frame::request(id as u64 + 1, m as u32, &a).encode_v2();
+        s.write_all(&bytes).expect("send v2 frame");
+        let f = loop {
+            match read_frame(&mut s) {
+                Ok(ReadOutcome::Frame(f)) => break f,
+                Ok(ReadOutcome::Idle) => continue,
+                other => panic!("no response to a v2 frame: {other:?}"),
+            }
+        };
+        assert_eq!(f.id, id as u64 + 1);
+        assert_eq!(f.status, STATUS_OK, "v2 m={m}: {:?}", f.text());
+        assert_eq!(f.op, OpKind::Qrd.as_u8(), "v2 response must carry the qrd op byte");
+        assert_eq!(
+            f.words().expect("aligned payload"),
+            reference.qrd_bits_reference_m(m, &a),
+            "v2 m={m} diverged from the reference bits over the wire"
+        );
+    }
+    drop(s);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), 4);
+    for (key, ..) in metrics.per_key_net_bins() {
+        assert_eq!(key.op, OpKind::Qrd, "v2 traffic must bin under qrd, got {}", key.label());
+    }
+    assert_identity(&metrics);
+}
+
+/// Mixed-op round trips on one connection: every response must echo its
+/// request's op byte, match the engine's bits for that op, and the
+/// per-key net ledger must carry one row per distinct key.
+#[test]
+fn round_trip_mixed_ops_over_tcp_is_bit_exact() {
+    let server = start_server(fast_net());
+    let reference = NativeEngine::flagship();
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let mut keys_used = std::collections::BTreeSet::new();
+    for (i, (op, m)) in [
+        (OpKind::Qrd, 3usize),
+        (OpKind::Solve, 3),
+        (OpKind::AppendQr, 4),
+        (OpKind::Solve, 5),
+        (OpKind::AppendQr, 2),
+        (OpKind::Qrd, 6),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let key = JobKey::new(op, m);
+        keys_used.insert(key);
+        let mut a: Vec<u32> = (0..key.request_words())
+            .map(|k| {
+                let v = ((k as u32).wrapping_mul(2654435761).wrapping_add(i as u32) % 2000) as f32;
+                ((v - 1000.0) / 250.0).to_bits()
+            })
+            .collect();
+        if op == OpKind::Solve {
+            for e in (0..m * m).step_by(m + 1) {
+                a[e] = (f32::from_bits(a[e]) + 5.0).to_bits();
+            }
+        }
+        let id = i as u64 + 1;
+        let resp = client.request_key(id, key, &a).expect("round trip");
+        assert_eq!(resp.kind, FrameKind::Response);
+        assert_eq!(resp.id, id);
+        assert_eq!(resp.status, STATUS_OK, "{}: {:?}", key.label(), resp.text());
+        assert_eq!(resp.op, op.as_u8(), "{}: response must echo the op byte", key.label());
+        let want = reference.run(key, &[a]).expect("oracle").remove(0);
+        assert_eq!(
+            resp.words().expect("aligned payload"),
+            want,
+            "{} diverged from the engine bits over the wire",
+            key.label()
+        );
+    }
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), 6);
+    assert_eq!(metrics.net_responded_total(), 6);
+    let bins = metrics.per_key_net_bins();
+    assert_eq!(bins.len(), keys_used.len(), "one net bin per distinct key: {bins:?}");
+    for (key, acc, rsp, ..) in bins {
+        assert!(keys_used.contains(&key), "stray bin {}", key.label());
+        assert_eq!(acc, rsp, "bin {} must reconcile", key.label());
+    }
+    assert_identity(&metrics);
+}
+
 #[test]
 fn shutdown_frame_acks_drains_and_stops_the_server() {
     let server = start_server(fast_net());
@@ -363,6 +462,7 @@ fn chaos_loadgen_reconciles_against_the_server() {
         threads: 8,
         requests_per_conn: 4,
         max_m: 6,
+        ops: vec![OpKind::Qrd, OpKind::Solve, OpKind::AppendQr],
         chaos: true,
         seed: 7,
         shutdown: true,

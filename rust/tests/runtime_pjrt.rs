@@ -3,7 +3,7 @@
 //! native Rust engine — the artifact and the native path must be
 //! bit-identical.
 
-use fp_givens::coordinator::{BatchEngine, NativeEngine, PjrtEngine};
+use fp_givens::coordinator::{BatchEngine, JobKey, NativeEngine, PjrtEngine};
 use fp_givens::util::rng::Rng;
 
 const ARTIFACT: &str = "artifacts/model.hlo.txt";
@@ -27,14 +27,18 @@ fn pjrt_artifact_matches_native_engine_bit_for_bit() {
     let pjrt = PjrtEngine::load(ARTIFACT, PjrtEngine::ARTIFACT_BATCH).expect("load artifact");
     let native = NativeEngine::flagship();
     let mats = random_mats(64, 99);
-    let got = pjrt.run(4, &mats).expect("pjrt batch");
-    let want = native.run(4, &mats).expect("native batch");
+    let got = pjrt.run(JobKey::qrd(4), &mats).expect("pjrt batch");
+    let want = native.run(JobKey::qrd(4), &mats).expect("native batch");
     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
         assert_eq!(g, w, "matrix {i} differs between PJRT and native");
     }
-    // the artifact is shape-locked: every other m is a recoverable
+    // the artifact is shape-locked: every other key is a recoverable
     // error, not a panic or a truncation
-    assert!(pjrt.run(3, &random_mats(2, 7).iter().map(|a| a[..9].to_vec()).collect::<Vec<_>>())
+    assert!(pjrt
+        .run(
+            JobKey::qrd(3),
+            &random_mats(2, 7).iter().map(|a| a[..9].to_vec()).collect::<Vec<_>>()
+        )
         .is_err());
 }
 
@@ -48,9 +52,9 @@ fn pjrt_short_batches_pad_correctly() {
     let native = NativeEngine::flagship();
     for n in [1usize, 7, 255] {
         let mats = random_mats(n, n as u64);
-        let got = pjrt.run(4, &mats).expect("pjrt batch");
+        let got = pjrt.run(JobKey::qrd(4), &mats).expect("pjrt batch");
         assert_eq!(got.len(), n);
-        let want = native.run(4, &mats).expect("native batch");
+        let want = native.run(JobKey::qrd(4), &mats).expect("native batch");
         assert_eq!(got, want, "batch size {n}");
     }
 }
