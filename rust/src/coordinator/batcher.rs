@@ -166,20 +166,30 @@ impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
     /// true channel arrival; without one, an item drained late in
     /// another bin's fill window can pay up to ~2× the window.
     pub fn next_batch_with(&mut self, cap_of: impl Fn(K) -> usize) -> Option<(K, Vec<T>)> {
-        if self.bins.values().all(|q| q.is_empty()) {
-            // nothing stashed: block for the first item
-            let first = self.rx.recv().ok()?;
-            self.stash(first);
-        }
-        let k = self.oldest_bin().expect("a bin is non-empty here");
+        // Block for the first item when every bin is empty; loop rather
+        // than assert so a spurious empty-bin state can only cost one
+        // more recv, never a panic under the service's batcher mutex.
+        let k = loop {
+            match self.oldest_bin() {
+                Some(k) => break k,
+                None => {
+                    let first = self.rx.recv().ok()?;
+                    self.stash(first);
+                }
+            }
+        };
         let cap = self.policy.max_batch.min(cap_of(k)).max(1);
         let mut batch = Vec::with_capacity(cap);
-        let bin = self.bins.get_mut(&k).expect("oldest bin exists");
-        let anchor = bin.front().map(|(_, at, _)| *at).unwrap_or_else(Instant::now);
-        while batch.len() < cap {
-            match bin.pop_front() {
-                Some((_, _, t)) => batch.push(t),
-                None => break,
+        let mut anchor = Instant::now();
+        if let Some(bin) = self.bins.get_mut(&k) {
+            if let Some((_, at, _)) = bin.front() {
+                anchor = *at;
+            }
+            while batch.len() < cap {
+                match bin.pop_front() {
+                    Some((_, _, t)) => batch.push(t),
+                    None => break,
+                }
             }
         }
         // fill toward the cap until the batching deadline (measured

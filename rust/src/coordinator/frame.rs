@@ -57,6 +57,27 @@ pub const MIN_VERSION: u8 = 2;
 /// Fixed header length in bytes; the payload follows immediately.
 pub const HEADER_LEN: usize = 24;
 
+// Header byte offsets. These are the single in-code statement of the
+// layout diagrammed above and in the README; `srclint`'s
+// wire-consistency rule cross-checks all three, so a layout change
+// that forgets one of them fails the lint, not a client.
+/// Byte offset of the magic word.
+pub const OFF_MAGIC: usize = 0;
+/// Byte offset of the version byte.
+pub const OFF_VERSION: usize = 4;
+/// Byte offset of the frame-kind byte.
+pub const OFF_KIND: usize = 5;
+/// Byte offset of the response-status byte.
+pub const OFF_STATUS: usize = 6;
+/// Byte offset of the op discriminant.
+pub const OFF_OP: usize = 7;
+/// Byte offset of the request id (u64 LE).
+pub const OFF_ID: usize = 8;
+/// Byte offset of the job dimension m (u32 LE).
+pub const OFF_M: usize = 16;
+/// Byte offset of the payload length (u32 LE).
+pub const OFF_LEN: usize = 20;
+
 /// Payload ceiling: decoding allocates nothing larger, so a hostile
 /// length field cannot balloon memory. Generous for the largest
 /// trackable response (m = 64 → 64·128 words = 32 KiB).
@@ -282,14 +303,23 @@ impl Frame {
     fn encode_version(&self, version: u8) -> Vec<u8> {
         let plen = self.payload_len();
         let mut out = Vec::with_capacity(HEADER_LEN + plen);
+        debug_assert_eq!(out.len(), OFF_MAGIC);
         out.extend_from_slice(&MAGIC.to_le_bytes());
+        debug_assert_eq!(out.len(), OFF_VERSION);
         out.push(version);
+        debug_assert_eq!(out.len(), OFF_KIND);
         out.push(self.kind.as_u8());
+        debug_assert_eq!(out.len(), OFF_STATUS);
         out.push(self.status);
+        debug_assert_eq!(out.len(), OFF_OP);
         out.push(if version == 2 { 0 } else { self.op }); // v2: reserved
+        debug_assert_eq!(out.len(), OFF_ID);
         out.extend_from_slice(&self.id.to_le_bytes());
+        debug_assert_eq!(out.len(), OFF_M);
         out.extend_from_slice(&self.m.to_le_bytes());
+        debug_assert_eq!(out.len(), OFF_LEN);
         out.extend_from_slice(&(plen as u32).to_le_bytes());
+        debug_assert_eq!(out.len(), HEADER_LEN);
         match &self.words {
             Some(w) => {
                 for v in w {
@@ -439,28 +469,45 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
         Fill::CleanEof => return Ok(ReadOutcome::Eof),
         Fill::IdleTimeout => return Ok(ReadOutcome::Idle),
     }
-    let magic = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]);
+    let magic = u32::from_le_bytes([
+        hdr[OFF_MAGIC],
+        hdr[OFF_MAGIC + 1],
+        hdr[OFF_MAGIC + 2],
+        hdr[OFF_MAGIC + 3],
+    ]);
     if magic != MAGIC {
         return Err(FrameError::BadMagic(magic));
     }
-    let version = hdr[4];
+    let version = hdr[OFF_VERSION];
     if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(FrameError::BadVersion(version));
     }
-    let kind = FrameKind::from_u8(hdr[5]).ok_or(FrameError::BadKind(hdr[5]))?;
-    let status = hdr[6];
+    let kind = FrameKind::from_u8(hdr[OFF_KIND]).ok_or(FrameError::BadKind(hdr[OFF_KIND]))?;
+    let status = hdr[OFF_STATUS];
     // v2 wrote byte 7 as reserved-zero; decoding it as the op byte is
     // exactly the compat story (0 = Qrd), so no version branch needed
     // beyond validation: a v3 *request* must name an op we know.
-    let op = if version == 2 { 0 } else { hdr[7] };
+    let op = if version == 2 { 0 } else { hdr[OFF_OP] };
     if kind == FrameKind::Request && OpKind::from_u8(op).is_none() {
         return Err(FrameError::BadOp(op));
     }
     let id = u64::from_le_bytes([
-        hdr[8], hdr[9], hdr[10], hdr[11], hdr[12], hdr[13], hdr[14], hdr[15],
+        hdr[OFF_ID],
+        hdr[OFF_ID + 1],
+        hdr[OFF_ID + 2],
+        hdr[OFF_ID + 3],
+        hdr[OFF_ID + 4],
+        hdr[OFF_ID + 5],
+        hdr[OFF_ID + 6],
+        hdr[OFF_ID + 7],
     ]);
-    let m = u32::from_le_bytes([hdr[16], hdr[17], hdr[18], hdr[19]]);
-    let plen = u32::from_le_bytes([hdr[20], hdr[21], hdr[22], hdr[23]]);
+    let m = u32::from_le_bytes([hdr[OFF_M], hdr[OFF_M + 1], hdr[OFF_M + 2], hdr[OFF_M + 3]]);
+    let plen = u32::from_le_bytes([
+        hdr[OFF_LEN],
+        hdr[OFF_LEN + 1],
+        hdr[OFF_LEN + 2],
+        hdr[OFF_LEN + 3],
+    ]);
     if plen as usize > MAX_PAYLOAD {
         return Err(FrameError::Oversize(plen));
     }

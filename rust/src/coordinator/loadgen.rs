@@ -117,8 +117,16 @@ impl Class {
         }
     }
 
+    /// Position in `CLASSES` (the report's column order).
     fn index(self) -> usize {
-        CLASSES.iter().position(|c| *c == self).expect("listed class")
+        match self {
+            Class::Clean => 0,
+            Class::HalfClose => 1,
+            Class::Disconnect => 2,
+            Class::Truncated => 3,
+            Class::Garbage => 4,
+            Class::SlowLoris => 5,
+        }
     }
 
     /// Deterministic class mix: half the connections stay clean, the
@@ -204,11 +212,13 @@ fn random_request(rng: &mut Rng, cfg: &LoadgenConfig) -> (JobKey, Vec<u32>) {
 /// The bit-exact expectation for one request: the independent reference
 /// triangularization for QRD; the native engine's own op path (already
 /// locked to its mathematical oracle in the engine tests) for the rest.
-fn expected_bits(reference: &NativeEngine, key: JobKey, a: &[u32]) -> Vec<u32> {
+/// `None` means the reference path itself failed — the caller records
+/// that as its own violation rather than crashing the generator.
+fn expected_bits(reference: &NativeEngine, key: JobKey, a: &[u32]) -> Option<Vec<u32>> {
     match key.op {
-        OpKind::Qrd => reference.qrd_bits_reference_m(key.m(), a),
+        OpKind::Qrd => Some(reference.qrd_bits_reference_m(key.m(), a)),
         OpKind::Solve | OpKind::AppendQr => {
-            reference.run(key, &[a.to_vec()]).expect("reference op")[0].clone()
+            reference.run(key, &[a.to_vec()]).ok().and_then(|mut v| v.pop())
         }
     }
 }
@@ -297,10 +307,12 @@ fn run_reliable(
                 }
                 if f.status == STATUS_OK {
                     if let Some((_, key, a)) = spots.iter().find(|(sid, _, _)| *sid == id) {
-                        let want = expected_bits(reference, *key, a);
-                        if f.words().as_deref() != Some(&want[..]) {
-                            led.violations
-                                .push(format!("response {id} diverged from the reference bits"));
+                        match expected_bits(reference, *key, a) {
+                            Some(want) if f.words().as_deref() == Some(&want[..]) => {}
+                            Some(_) => led.violations
+                                .push(format!("response {id} diverged from the reference bits")),
+                            None => led.violations
+                                .push(format!("reference path failed for request {id}")),
                         }
                     }
                 }
@@ -412,7 +424,10 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
             }
             false
         }
-        _ => unreachable!("reliable classes handled elsewhere"),
+        // reliable classes are driven by run_clean / run_half_close /
+        // run_disconnect; landing here with one is a dispatch bug, but
+        // a no-op beats a panic inside the harness
+        Class::Clean | Class::HalfClose | Class::Disconnect => return,
     };
     led.injected = true;
     if fin {
@@ -634,7 +649,7 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
         0.0
     } else {
         let mut l = latencies.clone();
-        l.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        l.sort_by(|a, b| a.total_cmp(b));
         l[((0.99 * l.len() as f64).ceil() as usize).clamp(1, l.len()) - 1]
     };
     println!("throughput        : {throughput:.0} responses/s");

@@ -46,7 +46,7 @@ impl Default for LatencyHistogram {
 impl LatencyHistogram {
     fn bucket_of(us: f64) -> usize {
         // NaN and sub-µs samples land in bucket 0
-        if !(us > 1.0) {
+        if us.is_nan() || us <= 1.0 {
             return 0;
         }
         (1 + (us.log2() * BUCKETS_PER_OCTAVE) as usize).min(HIST_BUCKETS - 1)
@@ -352,92 +352,101 @@ impl Metrics {
     }
 
     // network-ingress lifecycle ------------------------------------
+    //
+    // These counters feed the socket-boundary reconciliation identity
+    // `accepted == responded + deadline_timeouts + peer_vanished`, so
+    // the recorders publish with `Release` and the audit-path getters
+    // below read with `Acquire`: a snapshot taken after quiescence
+    // (thread joins) observes every increment that happened-before it
+    // on any core. `srclint`'s atomics-audit rule rejects a `Relaxed`
+    // load sneaking back into those getters. Hot-path histogram and
+    // batch counters elsewhere in this file stay `Relaxed` on purpose.
 
     /// Record an accepted TCP connection.
     pub fn on_conn_opened(&self) {
-        self.conn_opened.fetch_add(1, Ordering::Relaxed);
+        self.conn_opened.fetch_add(1, Ordering::Release);
     }
 
     /// Record a fully torn-down TCP connection (reader and writer both
     /// done, socket shut).
     pub fn on_conn_closed(&self) {
-        self.conn_closed.fetch_add(1, Ordering::Relaxed);
+        self.conn_closed.fetch_add(1, Ordering::Release);
     }
 
     /// Record a malformed frame (bad magic/version/kind, oversize
     /// payload, truncation, or a mid-frame stall) — each closes its
     /// connection, so a peer contributes at most one per connection.
     pub fn on_frame_malformed(&self) {
-        self.frames_malformed.fetch_add(1, Ordering::Relaxed);
+        self.frames_malformed.fetch_add(1, Ordering::Release);
     }
 
     /// Record a request accepted off a socket for `key`. From this
     /// point the connection owes the reconciliation identity exactly
     /// one of: responded, deadline timeout, or peer vanished.
     pub fn on_net_accepted(&self, key: JobKey) {
-        self.net_accepted[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
+        self.net_accepted[Self::key_bin(key)].fetch_add(1, Ordering::Release);
     }
 
     /// Record a response (ok or error) written back to the peer.
     pub fn on_net_responded(&self, key: JobKey) {
-        self.net_responded[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
+        self.net_responded[Self::key_bin(key)].fetch_add(1, Ordering::Release);
     }
 
     /// Record a deadline-timeout response written back to the peer.
     pub fn on_deadline_timeout(&self, key: JobKey) {
-        self.net_deadline_timeouts[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
+        self.net_deadline_timeouts[Self::key_bin(key)].fetch_add(1, Ordering::Release);
     }
 
     /// Record an accepted request dropped because its peer vanished
     /// (write failed or the connection died with the request in
     /// flight) — the deliberate, counted drop class.
     pub fn on_peer_vanished(&self, key: JobKey) {
-        self.net_peer_vanished[Self::key_bin(key)].fetch_add(1, Ordering::Relaxed);
+        self.net_peer_vanished[Self::key_bin(key)].fetch_add(1, Ordering::Release);
     }
 
     /// Connections accepted.
     pub fn conn_opened(&self) -> u64 {
-        self.conn_opened.load(Ordering::Relaxed)
+        self.conn_opened.load(Ordering::Acquire)
     }
 
     /// Connections fully torn down.
     pub fn conn_closed(&self) -> u64 {
-        self.conn_closed.load(Ordering::Relaxed)
+        self.conn_closed.load(Ordering::Acquire)
     }
 
     /// Malformed frames observed.
     pub fn frames_malformed(&self) -> u64 {
-        self.frames_malformed.load(Ordering::Relaxed)
+        self.frames_malformed.load(Ordering::Acquire)
     }
 
     /// Socket requests accepted for `key`.
     pub fn net_accepted(&self, key: JobKey) -> u64 {
-        self.net_accepted[Self::key_bin(key)].load(Ordering::Relaxed)
+        self.net_accepted[Self::key_bin(key)].load(Ordering::Acquire)
     }
 
     /// Socket responses written for `key`.
     pub fn net_responded(&self, key: JobKey) -> u64 {
-        self.net_responded[Self::key_bin(key)].load(Ordering::Relaxed)
+        self.net_responded[Self::key_bin(key)].load(Ordering::Acquire)
     }
 
     /// Socket requests accepted, all keys.
     pub fn net_accepted_total(&self) -> u64 {
-        self.net_accepted.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        self.net_accepted.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
     /// Socket responses written, all keys.
     pub fn net_responded_total(&self) -> u64 {
-        self.net_responded.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        self.net_responded.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
     /// Deadline-timeout responses written, all keys.
     pub fn deadline_timeouts(&self) -> u64 {
-        self.net_deadline_timeouts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        self.net_deadline_timeouts.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
     /// Accepted requests dropped on a vanished peer, all keys.
     pub fn peer_vanished(&self) -> u64 {
-        self.net_peer_vanished.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+        self.net_peer_vanished.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
     /// Non-empty per-key network bins as `(key, accepted, responded,
@@ -446,10 +455,10 @@ impl Metrics {
     pub fn per_key_net_bins(&self) -> Vec<(JobKey, u64, u64, u64, u64)> {
         (0..KEY_BINS)
             .filter_map(|b| {
-                let acc = self.net_accepted[b].load(Ordering::Relaxed);
-                let rsp = self.net_responded[b].load(Ordering::Relaxed);
-                let ddl = self.net_deadline_timeouts[b].load(Ordering::Relaxed);
-                let van = self.net_peer_vanished[b].load(Ordering::Relaxed);
+                let acc = self.net_accepted[b].load(Ordering::Acquire);
+                let rsp = self.net_responded[b].load(Ordering::Acquire);
+                let ddl = self.net_deadline_timeouts[b].load(Ordering::Acquire);
+                let van = self.net_peer_vanished[b].load(Ordering::Acquire);
                 (acc != 0 || rsp != 0 || ddl != 0 || van != 0)
                     .then_some((Self::bin_key(b), acc, rsp, ddl, van))
             })
@@ -462,10 +471,10 @@ impl Metrics {
     /// quiesced (in-flight requests make `accepted` lead).
     pub fn net_reconciles(&self) -> bool {
         (0..KEY_BINS).all(|b| {
-            self.net_accepted[b].load(Ordering::Relaxed)
-                == self.net_responded[b].load(Ordering::Relaxed)
-                    + self.net_deadline_timeouts[b].load(Ordering::Relaxed)
-                    + self.net_peer_vanished[b].load(Ordering::Relaxed)
+            self.net_accepted[b].load(Ordering::Acquire)
+                == self.net_responded[b].load(Ordering::Acquire)
+                    + self.net_deadline_timeouts[b].load(Ordering::Acquire)
+                    + self.net_peer_vanished[b].load(Ordering::Acquire)
         })
     }
 }

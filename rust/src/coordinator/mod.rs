@@ -202,6 +202,7 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
                     move || {
                         Box::new(
                             PjrtEngine::load(&path, PjrtEngine::ARTIFACT_BATCH)
+                                // srclint: allow(no-panic) the artifact was probed at boot; a load failure on respawn is unrecoverable
                                 .expect("artifact load"),
                         ) as Box<dyn BatchEngine>
                     }

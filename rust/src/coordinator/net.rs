@@ -498,7 +498,7 @@ impl StatsSnapshot {
         }
         let words: Vec<u64> = bytes
             .chunks_exact(8)
-            .map(|c| u64::from_le_bytes(c.try_into().expect("8-byte chunk")))
+            .filter_map(|c| <[u8; 8]>::try_from(c).ok().map(u64::from_le_bytes))
             .collect();
         if words.len() < 9 {
             return None;

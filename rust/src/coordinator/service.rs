@@ -344,14 +344,25 @@ impl QrdService {
         let workers = factories
             .into_iter()
             .enumerate()
-            .map(|(id, factory)| {
-                let batcher = batcher.clone();
+            .filter_map(|(id, factory)| {
+                let b = batcher.clone();
                 let m = metrics.clone();
-                let state = state.clone();
-                std::thread::Builder::new()
+                let s = state.clone();
+                match std::thread::Builder::new()
                     .name(format!("qrd-worker-{id}"))
-                    .spawn(move || shared_worker_loop(id, factory(), batcher, state, m))
-                    .expect("spawn qrd worker")
+                    .spawn(move || shared_worker_loop(id, factory(), b, s, m))
+                {
+                    Ok(h) => Some(h),
+                    Err(_) => {
+                        // a worker that never started is a worker that
+                        // died at birth: retire it so the alive count
+                        // stays exact and the last-man-out drain still
+                        // fires. Submits keep getting error Responses
+                        // instead of the process aborting at boot.
+                        retire_shared(&state, &batcher);
+                        None
+                    }
+                }
             })
             .collect();
         QrdService {
@@ -415,7 +426,14 @@ impl QrdService {
             handles: Mutex::new(Vec::with_capacity(n)),
         });
         for slot in 0..n {
-            spawn_worker(&sup, slot, 0).expect("spawn qrd shard worker");
+            if spawn_worker(&sup, slot, 0).is_err() {
+                // boot-time thread exhaustion: retire the slot like a
+                // dead worker instead of aborting. Its queue is empty
+                // (nothing submitted yet) so rehoming is a no-op, and if
+                // *every* spawn fails the pool marks itself dead and
+                // submits are answered with error Responses.
+                sup.retire_slot(slot);
+            }
         }
         QrdService { metrics, pool: Pool::Sharded(sup), max_m: Self::DEFAULT_MAX_M }
     }
@@ -714,9 +732,10 @@ fn retire_shared(state: &PoolState, batcher: &Mutex<KeyedBatcher<Request, JobKey
 }
 
 /// Spawn (or respawn) the worker for `slot`; the engine is built
-/// inside the new thread by the slot's retained factory. Startup
-/// `expect`s the error; the respawn path must not — see
-/// [`on_worker_death`].
+/// inside the new thread by the slot's retained factory. Both the
+/// startup and respawn paths convert a failed spawn into a retired
+/// slot (never a panic) — see [`on_worker_death`] and the boot loop in
+/// [`QrdService::start_sharded_with_router`].
 fn spawn_worker(sup: &Arc<Supervisor>, slot: usize, generation: u32) -> std::io::Result<()> {
     let sup2 = sup.clone();
     let h = std::thread::Builder::new()

@@ -235,9 +235,15 @@ impl<T> ShardQueue<T> {
         C: Fn(J) -> usize,
     {
         let mut st = self.lock();
-        // phase 1: the first item (or closed / timed out)
+        // phase 1: the first item (or closed / timed out) — the loop
+        // exits by yielding the front item's key and anchor directly,
+        // so "non-empty after phase 1" holds by construction instead of
+        // by assertion.
         let wait_deadline = Instant::now() + first_wait;
-        while st.q.is_empty() {
+        let (k, anchor) = loop {
+            if let Some(front) = st.q.front() {
+                break (key(front), arrival.map(|f| f(front)).unwrap_or_else(Instant::now));
+            }
             if st.closed {
                 return Pop::Closed;
             }
@@ -250,10 +256,7 @@ impl<T> ShardQueue<T> {
                 .wait_timeout(st, wait_deadline - now)
                 .unwrap_or_else(|p| p.into_inner());
             st = g;
-        }
-        let front = st.q.front().expect("non-empty after phase 1");
-        let k = key(front);
-        let anchor = arrival.map(|f| f(front)).unwrap_or_else(Instant::now);
+        };
         let cap = cap_of(k).max(1);
         // phase 2: fill toward the cap with matching items until the
         // batching deadline; other keys stay queued in order. The queue

@@ -66,7 +66,8 @@ const USAGE: &str = "usage:
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M] [--panel P]
   repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
-  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]";
+  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]
+  repro lint [--root DIR] [--skip no-panic|lock-order|atomics-audit|wire-consistency]";
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
@@ -257,6 +258,37 @@ fn main() -> anyhow::Result<()> {
                 shutdown: args.has("shutdown"),
                 bench_out: if bench_out.is_empty() { None } else { Some(bench_out) },
             })?;
+        }
+        Some("lint") => {
+            // In-tree invariant linter (see tools/srclint): panic-freedom
+            // in coordinator/*, lock-order acyclicity, the atomics audit,
+            // and wire/contract consistency across frame.rs / key.rs /
+            // README. CI gates on this next to build/test.
+            use srclint::{lint_tree, Rule, RuleSet};
+            let root = std::path::PathBuf::from(args.get("root", {
+                // `repro` may run from the repo root or from rust/.
+                if std::path::Path::new("src").is_dir() { "." } else { "rust" }
+            }));
+            let mut rules = RuleSet::all();
+            for slug in args.get("skip", "").split(',').filter(|s| !s.is_empty()) {
+                match Rule::from_slug(slug.trim()) {
+                    Some(r) => rules = rules.without(r),
+                    None => anyhow::bail!(
+                        "unknown rule `{slug}` (rules: {})",
+                        Rule::ALL.map(|r| r.slug()).join(", ")
+                    ),
+                }
+            }
+            let findings = lint_tree(&root, &rules)
+                .map_err(|e| anyhow::anyhow!("lint walk failed under {root:?}: {e}"))?;
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!("srclint: clean");
+            } else {
+                anyhow::bail!("srclint: {} finding(s)", findings.len());
+            }
         }
         _ => {
             eprintln!("{USAGE}");

@@ -1,0 +1,8 @@
+//! srclint fixture: the same seeded `unwrap` as
+//! `panic_in_coordinator.rs`, but waived by an allow marker with a
+//! reason — the linter must stay quiet here.
+
+pub fn read_config(path: &str) -> String {
+    // srclint: allow(no-panic) fixture exercising the waiver syntax
+    std::fs::read_to_string(path).unwrap()
+}

@@ -1,0 +1,19 @@
+//! srclint fixture: nothing to report. Locks nest in one order,
+//! fallible results are propagated, and the only atomic is a hot-path
+//! counter where `Relaxed` is the intended ordering.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn add(a: u32, b: u32) -> Option<u32> {
+    a.checked_add(b)
+}
+
+pub fn nested(queue: &Lock, stats: &Lock) {
+    let q = queue.lock();
+    let s = stats.lock();
+    drop((q, s));
+}
+
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}

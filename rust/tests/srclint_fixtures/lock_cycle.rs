@@ -1,0 +1,17 @@
+//! srclint fixture: `submit` acquires `queue` then `stats` while
+//! `drain` acquires `stats` then `queue` — opposite orders, so the
+//! cross-function lock graph has a cycle the `lock-order` rule must
+//! reject. Both guards are held to the end of the function, matching
+//! the rule's held-forever model.
+
+pub fn submit(queue: &Lock, stats: &Lock) {
+    let q = queue.lock();
+    let s = stats.lock();
+    drop((q, s));
+}
+
+pub fn drain(queue: &Lock, stats: &Lock) {
+    let s = stats.lock();
+    let q = queue.lock();
+    drop((q, s));
+}

@@ -1,0 +1,16 @@
+//! srclint fixture: a non-test `unwrap` inside `coordinator/` must trip
+//! the `no-panic` rule — and only that rule. The unwrap inside the test
+//! module must stay invisible to the linter.
+
+pub fn read_config(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Result<u8, ()> = Ok(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,25 @@
+//! srclint fixture: `conn_opened` is one of the identity-audit read
+//! points, so its `Relaxed` load must trip the `atomics-audit` rule.
+//! The `Release` increment in the recorder and the `Relaxed` load in
+//! the non-audit getter are both fine and must not fire.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct Stats {
+    opened: AtomicU64,
+    hist: AtomicU64,
+}
+
+impl Stats {
+    pub fn on_conn_opened(&self) {
+        self.opened.fetch_add(1, Ordering::Release);
+    }
+
+    pub fn conn_opened(&self) -> u64 {
+        self.opened.load(Ordering::Relaxed)
+    }
+
+    pub fn histogram_bin(&self) -> u64 {
+        self.hist.load(Ordering::Relaxed)
+    }
+}

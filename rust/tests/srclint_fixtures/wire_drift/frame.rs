@@ -1,0 +1,41 @@
+//! srclint fixture (wire_drift): a header module fully consistent with
+//! the sibling README — the drift is seeded in `key.rs`, which defines
+//! an `append_qr` op the README never learned about.
+
+pub const MAGIC: u32 = 0xAB;
+pub const VERSION: u8 = 3;
+pub const HEADER_LEN: usize = 24;
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_VERSION: usize = 4;
+pub const OFF_KIND: usize = 5;
+pub const OFF_STATUS: usize = 6;
+pub const OFF_OP: usize = 7;
+pub const OFF_ID: usize = 8;
+pub const OFF_M: usize = 16;
+pub const OFF_LEN: usize = 20;
+
+pub enum FrameKind {
+    Request,
+    Response,
+}
+
+impl FrameKind {
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b {
+            1 => Some(FrameKind::Request),
+            2 => Some(FrameKind::Response),
+            _ => None,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            FrameKind::Request => 1,
+            FrameKind::Response => 2,
+        }
+    }
+}
+
+fn read(op: u8) {
+    let _ = OpKind::from_u8(op);
+}

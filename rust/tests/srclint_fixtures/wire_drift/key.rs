@@ -1,0 +1,39 @@
+//! srclint fixture (wire_drift): the seeded drift. `AppendQr` is fully
+//! wired in code — variant, `ALL`, `from_u8`, `as_u8`, `label` — but
+//! the sibling README still documents only two ops, so the
+//! `wire-consistency` rule must fail the pair.
+
+pub enum OpKind {
+    Qrd,
+    Solve,
+    AppendQr,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 3] = [OpKind::Qrd, OpKind::Solve, OpKind::AppendQr];
+
+    pub fn from_u8(b: u8) -> Option<OpKind> {
+        match b {
+            0 => Some(OpKind::Qrd),
+            1 => Some(OpKind::Solve),
+            2 => Some(OpKind::AppendQr),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            OpKind::Qrd => 0,
+            OpKind::Solve => 1,
+            OpKind::AppendQr => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Qrd => "qrd",
+            OpKind::Solve => "solve",
+            OpKind::AppendQr => "append_qr",
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! The srclint fixture corpus: every rule catches its seeded violation
+//! (so no rule is vacuous), the allow marker waives with a reason,
+//! skipping a rule silences it, and — the gate the CI job leans on —
+//! the real tree under `src/` lints clean.
+
+use srclint::{lint_sources, lint_tree, Rule, RuleSet, SrcFile};
+
+/// Label a fixture as if it lived in the serving datapath, so the
+/// directory-scoped rules (`no-panic`) apply to it.
+fn coord(name: &str, text: &str) -> SrcFile {
+    SrcFile::new(&format!("src/coordinator/{name}"), text)
+}
+
+fn render(findings: &[srclint::Finding]) -> String {
+    findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn panic_fixture_trips_no_panic_only() {
+    let src = coord(
+        "panic_in_coordinator.rs",
+        include_str!("srclint_fixtures/panic_in_coordinator.rs"),
+    );
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert_eq!(f.len(), 1, "one seeded unwrap, test-mod unwrap masked:\n{}", render(&f));
+    assert_eq!(f[0].rule, Rule::NoPanic);
+}
+
+#[test]
+fn lock_cycle_fixture_trips_lock_order_only() {
+    let src = coord("lock_cycle.rs", include_str!("srclint_fixtures/lock_cycle.rs"));
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert!(!f.is_empty(), "opposite acquisition orders must be caught");
+    assert!(f.iter().all(|x| x.rule == Rule::LockOrder), "{}", render(&f));
+}
+
+#[test]
+fn relaxed_audit_read_trips_atomics_only() {
+    let src = coord(
+        "relaxed_audit_read.rs",
+        include_str!("srclint_fixtures/relaxed_audit_read.rs"),
+    );
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert_eq!(
+        f.len(),
+        1,
+        "only the audit getter's Relaxed load may fire — the Release \
+         increment and the histogram load must pass:\n{}",
+        render(&f)
+    );
+    assert_eq!(f[0].rule, Rule::AtomicsAudit);
+    assert!(f[0].message.contains("conn_opened"), "{}", f[0]);
+}
+
+#[test]
+fn wire_drift_fixture_trips_wire_consistency_only() {
+    let files = [
+        coord("frame.rs", include_str!("srclint_fixtures/wire_drift/frame.rs")),
+        coord("key.rs", include_str!("srclint_fixtures/wire_drift/key.rs")),
+    ];
+    let readme = include_str!("srclint_fixtures/wire_drift/README.md");
+    let f = lint_sources(&files, Some(("wire_drift/README.md", readme)), &RuleSet::all());
+    assert!(!f.is_empty(), "an op missing from the README must be caught");
+    assert!(f.iter().all(|x| x.rule == Rule::WireConsistency), "{}", render(&f));
+    assert!(
+        f.iter().any(|x| x.message.contains("append_qr") || x.message.contains("3")),
+        "the finding should point at the undocumented op:\n{}",
+        render(&f)
+    );
+}
+
+#[test]
+fn allow_marker_waives_the_finding() {
+    let src = coord("allow_marker.rs", include_str!("srclint_fixtures/allow_marker.rs"));
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert!(f.is_empty(), "a reasoned allow marker must waive:\n{}", render(&f));
+}
+
+#[test]
+fn marker_without_reason_still_fails() {
+    let stripped = include_str!("srclint_fixtures/allow_marker.rs")
+        .replace("allow(no-panic) fixture exercising the waiver syntax", "allow(no-panic)");
+    let src = coord("allow_marker.rs", &stripped);
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert!(
+        f.iter().any(|x| x.rule == Rule::BadMarker),
+        "a reasonless marker is itself a finding:\n{}",
+        render(&f)
+    );
+}
+
+#[test]
+fn clean_fixture_is_clean() {
+    let src = coord("clean.rs", include_str!("srclint_fixtures/clean.rs"));
+    let f = lint_sources(&[src], None, &RuleSet::all());
+    assert!(f.is_empty(), "{}", render(&f));
+}
+
+#[test]
+fn skipping_a_rule_silences_it() {
+    let src = coord(
+        "panic_in_coordinator.rs",
+        include_str!("srclint_fixtures/panic_in_coordinator.rs"),
+    );
+    let f = lint_sources(&[src], None, &RuleSet::all().without(Rule::NoPanic));
+    assert!(f.is_empty(), "{}", render(&f));
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    let f = lint_tree(root, &RuleSet::all()).expect("walk src/ under the crate root");
+    assert!(f.is_empty(), "`repro lint` must pass on the tree:\n{}", render(&f));
+}

@@ -1,0 +1,224 @@
+//! Rule `atomics-audit`: classify every `Ordering::` site and reject
+//! `Relaxed` *loads* at the identity-audit read points.
+//!
+//! The socket-boundary identity `accepted == responded + deadline_timeouts
+//! + peer_vanished` is reconciled from `StatsSnapshot` getters. Those
+//! reads must observe every recorder increment that happened-before the
+//! snapshot, so they pair `Acquire` loads with `Release` recorder
+//! increments. Everywhere else (histogram bins, hot-path counters)
+//! `Relaxed` is correct and cheaper — the rule only bites at the audit
+//! boundary, keyed by the reader function names below.
+
+use crate::lexer::{test_mask, Tok, Token};
+use crate::{Finding, Rule};
+
+/// Reader functions on the audit path: the `StatsSnapshot` getters that
+/// feed `accepted == responded + timeouts + vanished` reconciliation
+/// (including the per-key bins the loadgen ledger checks). Adding a new
+/// reconciled counter means adding its getter here.
+pub const AUDIT_READERS: &[&str] = &[
+    "conn_opened",
+    "conn_closed",
+    "frames_malformed",
+    "net_accepted",
+    "net_responded",
+    "net_accepted_total",
+    "net_responded_total",
+    "deadline_timeouts",
+    "peer_vanished",
+    "per_key_net_bins",
+    "net_reconciles",
+];
+
+/// Atomic methods that take an `Ordering` argument.
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// One classified `Ordering::` site.
+#[derive(Debug, Clone)]
+pub struct Site {
+    pub file: String,
+    pub line: u32,
+    /// The atomic method the ordering is an argument of, if resolvable.
+    pub method: Option<String>,
+    /// `Relaxed`, `Acquire`, `Release`, `AcqRel`, `SeqCst`.
+    pub ordering: String,
+    /// Innermost enclosing function, if any.
+    pub in_fn: Option<String>,
+    pub in_test: bool,
+}
+
+/// Classify all `Ordering::<X>` sites in one file.
+pub fn classify(file: &str, toks: &[Token]) -> Vec<Site> {
+    let mask = test_mask(toks);
+    let spans = fn_spans(toks);
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if !toks[i].kind.is_ident("Ordering") {
+            continue;
+        }
+        // Expect `Ordering :: <Ident>`.
+        let (Some(a), Some(b), Some(c)) = (toks.get(i + 1), toks.get(i + 2), toks.get(i + 3))
+        else {
+            continue;
+        };
+        if !(a.kind.is_sym(b':') && b.kind.is_sym(b':')) {
+            continue;
+        }
+        let Tok::Ident(ord) = &c.kind else { continue };
+        // Nearest preceding atomic-method call: ident followed by `(`.
+        let mut method = None;
+        let mut j = i;
+        while j > 0 {
+            j -= 1;
+            if let Tok::Ident(m) = &toks[j].kind {
+                if ATOMIC_METHODS.contains(&m.as_str())
+                    && toks.get(j + 1).map(|t| t.kind.is_sym(b'(')).unwrap_or(false)
+                {
+                    method = Some(m.clone());
+                    break;
+                }
+            }
+            // Don't walk past a statement boundary.
+            if toks[j].kind.is_sym(b';') || toks[j].kind.is_sym(b'{') {
+                break;
+            }
+        }
+        let in_fn = spans
+            .iter()
+            .filter(|s| s.open <= i && i < s.close)
+            .min_by_key(|s| s.close - s.open)
+            .map(|s| s.name.clone());
+        out.push(Site {
+            file: file.to_string(),
+            line: toks[i].line,
+            method,
+            ordering: ord.clone(),
+            in_fn,
+            in_test: mask[i],
+        });
+    }
+    out
+}
+
+pub fn check(file: &str, toks: &[Token]) -> Vec<Finding> {
+    classify(file, toks)
+        .into_iter()
+        .filter(|s| {
+            !s.in_test
+                && s.ordering == "Relaxed"
+                && s.method.as_deref() == Some("load")
+                && s.in_fn
+                    .as_deref()
+                    .map(|f| AUDIT_READERS.contains(&f))
+                    .unwrap_or(false)
+        })
+        .map(|s| {
+            Finding::new(
+                Rule::AtomicsAudit,
+                &s.file,
+                s.line,
+                format!(
+                    "Relaxed load in audit reader `{}` — identity reconciliation \
+                     requires Acquire here (paired with Release increments)",
+                    s.in_fn.as_deref().unwrap_or("?")
+                ),
+            )
+        })
+        .collect()
+}
+
+struct FnSpan {
+    name: String,
+    open: usize,
+    close: usize,
+}
+
+/// All `fn name { ... }` body spans (token indices), including nested fns.
+fn fn_spans(toks: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind.is_ident("fn") {
+            if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.kind) {
+                // Find body open brace (or `;` for bodyless decls).
+                let mut j = i + 2;
+                let mut found = None;
+                while j < toks.len() {
+                    match &toks[j].kind {
+                        Tok::Sym(b'{') => {
+                            found = Some(j);
+                            break;
+                        }
+                        Tok::Sym(b';') => break,
+                        _ => j += 1,
+                    }
+                }
+                if let Some(open) = found {
+                    let mut depth = 1usize;
+                    let mut k = open + 1;
+                    while k < toks.len() && depth > 0 {
+                        match &toks[k].kind {
+                            Tok::Sym(b'{') => depth += 1,
+                            Tok::Sym(b'}') => depth -= 1,
+                            _ => {}
+                        }
+                        k += 1;
+                    }
+                    out.push(FnSpan {
+                        name: name.clone(),
+                        open,
+                        close: k,
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn relaxed_load_in_audit_reader_flagged() {
+        let toks = lex(
+            "pub fn net_accepted(&self) -> u64 { self.acc.load(Ordering::Relaxed) }",
+        );
+        assert_eq!(check("metrics.rs", &toks).len(), 1);
+    }
+
+    #[test]
+    fn acquire_load_passes_and_relaxed_elsewhere_passes() {
+        let toks = lex(
+            "pub fn net_accepted(&self) -> u64 { self.acc.load(Ordering::Acquire) }\n\
+             pub fn hot(&self) { self.c.fetch_add(1, Ordering::Relaxed); }\n\
+             pub fn other(&self) -> u64 { self.c.load(Ordering::Relaxed) }",
+        );
+        assert!(check("metrics.rs", &toks).is_empty());
+    }
+
+    #[test]
+    fn classify_finds_method_and_fn() {
+        let toks = lex("fn f(&self) { self.c.fetch_add(1, Ordering::Release); }");
+        let sites = classify("m.rs", &toks);
+        assert_eq!(sites.len(), 1);
+        assert_eq!(sites[0].method.as_deref(), Some("fetch_add"));
+        assert_eq!(sites[0].in_fn.as_deref(), Some("f"));
+        assert_eq!(sites[0].ordering, "Release");
+    }
+}

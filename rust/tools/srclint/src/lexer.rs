@@ -1,0 +1,414 @@
+//! A minimal token-level lexer for Rust source.
+//!
+//! This is deliberately *not* a full Rust lexer: srclint only needs
+//! identifiers, punctuation, numeric literals, and accurate line numbers,
+//! while never being confused by the contents of strings or comments.
+//! Raw strings, char literals, lifetimes, and nested block comments are
+//! handled so that a `"..."` containing `unwrap(` or a commented-out
+//! `panic!` can never produce a finding.
+
+/// One lexed token with the 1-indexed source line it starts on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub line: u32,
+    pub kind: Tok,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `unwrap`, `Ordering`, ...).
+    Ident(String),
+    /// Numeric literal, verbatim (underscores retained: `0x3244_5251`).
+    Num(String),
+    /// String literal, carrying the raw (unescaped) contents — the wire
+    /// rule matches op labels like `"append_qr"` against the README.
+    Str(String),
+    /// Char literal.
+    Ch,
+    /// Lifetime (`'a`) — distinguished from a char literal.
+    Life,
+    /// Any single punctuation byte: `{ } ( ) [ ] . , ; : ! # = < > & * ...`
+    Sym(u8),
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(self, Tok::Ident(i) if i == s)
+    }
+    pub fn is_sym(&self, c: u8) -> bool {
+        matches!(self, Tok::Sym(b) if *b == c)
+    }
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Lex `src` into a token stream. Never fails: unrecognized bytes become
+/// `Sym` tokens, and unterminated literals simply run to end of input.
+pub fn lex(src: &str) -> Vec<Token> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                // Line comment: skip to end of line (newline handled above).
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'/' if i + 1 < b.len() && b[i + 1] == b'*' => {
+                // Block comment, possibly nested.
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => {
+                let start_line = line;
+                let content_start = i + 1;
+                i += 1;
+                while i < b.len() {
+                    match b[i] {
+                        b'\\' => i += 2,
+                        b'"' => break,
+                        b'\n' => {
+                            line += 1;
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+                let content_end = i.min(b.len());
+                if i < b.len() {
+                    i += 1; // past the closing quote
+                }
+                toks.push(Token {
+                    line: start_line,
+                    kind: Tok::Str(src[content_start..content_end].to_string()),
+                });
+            }
+            b'r' | b'b' if starts_raw_string(b, i) => {
+                let start_line = line;
+                // Skip prefix (r, br, rb) then count hashes.
+                let mut j = i;
+                while j < b.len() && (b[j] == b'r' || b[j] == b'b') {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while j < b.len() && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                // b[j] == b'"' guaranteed by starts_raw_string.
+                j += 1;
+                loop {
+                    if j >= b.len() {
+                        break;
+                    }
+                    if b[j] == b'\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if b[j] == b'"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < b.len() && b[k] == b'#' && seen < hashes {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                i = j;
+                // Raw/byte string contents are not needed by any rule.
+                toks.push(Token { line: start_line, kind: Tok::Str(String::new()) });
+            }
+            b'\'' => {
+                // Lifetime or char literal. A lifetime is `'` ident not
+                // followed by a closing `'`.
+                if i + 1 < b.len() && is_ident_start(b[i + 1]) {
+                    // Scan the ident; if the next byte is `'`, it was a
+                    // char literal like 'a'.
+                    let mut j = i + 1;
+                    while j < b.len() && is_ident_cont(b[j]) {
+                        j += 1;
+                    }
+                    if j < b.len() && b[j] == b'\'' {
+                        toks.push(Token { line, kind: Tok::Ch });
+                        i = j + 1;
+                    } else {
+                        toks.push(Token { line, kind: Tok::Life });
+                        i = j;
+                    }
+                } else {
+                    // Char literal with escape or punctuation: '\n', '\'', '('.
+                    let mut j = i + 1;
+                    if j < b.len() && b[j] == b'\\' {
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                    while j < b.len() && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    toks.push(Token { line, kind: Tok::Ch });
+                    i = (j + 1).min(b.len());
+                }
+            }
+            _ if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                toks.push(Token {
+                    line,
+                    kind: Tok::Ident(src[start..i].to_string()),
+                });
+            }
+            _ if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && (is_ident_cont(b[i])) {
+                    i += 1;
+                }
+                // Consume a fractional part only when `.` is followed by a
+                // digit, so `0..=49` lexes as Num(0) Sym(.) Sym(.) ...
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    i += 1;
+                    while i < b.len() && is_ident_cont(b[i]) {
+                        i += 1;
+                    }
+                }
+                toks.push(Token {
+                    line,
+                    kind: Tok::Num(src[start..i].to_string()),
+                });
+            }
+            _ => {
+                toks.push(Token { line, kind: Tok::Sym(c) });
+                i += 1;
+            }
+        }
+    }
+    toks
+}
+
+fn starts_raw_string(b: &[u8], i: usize) -> bool {
+    // r"..."  r#"..."#  br"..."  rb"..."  b"..." is handled as ident `b`
+    // followed by a plain string otherwise — but we catch b"..." here too
+    // so byte strings are skipped in one token.
+    let mut j = i;
+    let mut saw_r = false;
+    while j < b.len() && (b[j] == b'r' || b[j] == b'b') {
+        if b[j] == b'r' {
+            saw_r = true;
+        }
+        j += 1;
+        if j - i > 2 {
+            return false;
+        }
+    }
+    if j < b.len() && b[j] == b'"' {
+        // b"..." (no r): treat as raw-entry too; escapes in byte strings
+        // match normal string rules, but skipping to the bare closing
+        // quote is fine because `\"` never appears unescaped.
+        return saw_r || j == i + 1;
+    }
+    if !saw_r {
+        return false;
+    }
+    while j < b.len() && b[j] == b'#' {
+        j += 1;
+    }
+    j < b.len() && b[j] == b'"'
+}
+
+/// Parse a numeric literal token (as produced by [`lex`]) into a u64.
+/// Handles `_` separators and `0x`/`0o`/`0b` prefixes plus type suffixes
+/// (`u32`, `usize`, ...). Returns `None` for floats or malformed input.
+pub fn num_value(raw: &str) -> Option<u64> {
+    let s: String = raw.chars().filter(|c| *c != '_').collect();
+    let (radix, digits) = if let Some(rest) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        (16, rest)
+    } else if let Some(rest) = s.strip_prefix("0o") {
+        (8, rest)
+    } else if let Some(rest) = s.strip_prefix("0b") {
+        (2, rest)
+    } else {
+        (10, s.as_str())
+    };
+    // Trim a trailing type suffix (u8..u128, i8.., usize, isize).
+    let digits = digits
+        .find(|c: char| !c.is_digit(radix))
+        .map(|pos| &digits[..pos])
+        .unwrap_or(digits);
+    if digits.is_empty() {
+        return None;
+    }
+    u64::from_str_radix(digits, radix).ok()
+}
+
+/// Compute, per token, whether it sits inside test-only code: a
+/// `#[cfg(test)]`-attributed item or a `#[test]`-attributed function.
+/// The heuristic tracks the brace-delimited body following such an
+/// attribute. `cfg(not(test))` does not occur in this tree (srclint's
+/// wire rule would flag drift in any case), so the simple form suffices.
+pub fn test_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_test_attr(toks, i) {
+            // Find the `{` opening the attributed item's body, then mark
+            // through its matching `}`.
+            let mut j = i;
+            // Skip past the attribute itself: `#` `[` ... `]`.
+            j += 2; // past `#[`
+            let mut depth = 1usize;
+            while j < toks.len() && depth > 0 {
+                if toks[j].kind.is_sym(b'[') {
+                    depth += 1;
+                } else if toks[j].kind.is_sym(b']') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            // Now find the body `{`, skipping over any parenthesized
+            // parts (fn args, where clauses don't contain bare `{`).
+            while j < toks.len() && !toks[j].kind.is_sym(b'{') {
+                // A `;` before `{` means the item had no body (e.g. a
+                // `#[cfg(test)] use ...;`) — nothing to mask.
+                if toks[j].kind.is_sym(b';') {
+                    break;
+                }
+                j += 1;
+            }
+            if j < toks.len() && toks[j].kind.is_sym(b'{') {
+                let start = i;
+                let mut bd = 1usize;
+                let mut k = j + 1;
+                while k < toks.len() && bd > 0 {
+                    if toks[k].kind.is_sym(b'{') {
+                        bd += 1;
+                    } else if toks[k].kind.is_sym(b'}') {
+                        bd -= 1;
+                    }
+                    k += 1;
+                }
+                for m in mask.iter_mut().take(k).skip(start) {
+                    *m = true;
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// True when `toks[i..]` begins a `#[cfg(test)]`, `#[test]`, or
+/// `#[cfg(feature = ...)] mod tests`-style test attribute. We accept
+/// `#[test]` and any `#[cfg(...)]` whose argument list mentions the
+/// ident `test`.
+fn is_test_attr(toks: &[Token], i: usize) -> bool {
+    if !toks[i].kind.is_sym(b'#') {
+        return false;
+    }
+    if i + 2 >= toks.len() || !toks[i + 1].kind.is_sym(b'[') {
+        return false;
+    }
+    match &toks[i + 2].kind {
+        Tok::Ident(a) if a == "test" => true,
+        Tok::Ident(a) if a == "cfg" => {
+            // Scan to the closing `]` looking for ident `test`.
+            let mut j = i + 3;
+            let mut depth = 1usize;
+            while j < toks.len() && depth > 0 {
+                match &toks[j].kind {
+                    Tok::Sym(b'[') => depth += 1,
+                    Tok::Sym(b']') => depth -= 1,
+                    Tok::Ident(x) if x == "test" => return true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            false
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let toks = lex("let s = \"unwrap()\"; // panic!\n/* expect( */ x");
+        let idents: Vec<_> = toks
+            .iter()
+            .filter_map(|t| match &t.kind {
+                Tok::Ident(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(idents, vec!["let", "s", "x"]);
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let toks = lex("for i in 0..=49 {}");
+        assert!(toks.iter().any(|t| matches!(&t.kind, Tok::Num(n) if n == "0")));
+        assert!(toks.iter().any(|t| matches!(&t.kind, Tok::Num(n) if n == "49")));
+    }
+
+    #[test]
+    fn num_values() {
+        assert_eq!(num_value("0x3244_5251"), Some(0x3244_5251));
+        assert_eq!(num_value("24"), Some(24));
+        assert_eq!(num_value("20usize"), Some(20));
+        assert_eq!(num_value("1.5"), None);
+    }
+
+    #[test]
+    fn test_mask_covers_test_mod() {
+        let src = "fn a() { x.unwrap(); }\n#[cfg(test)]\nmod tests { fn b() { y.unwrap(); } }";
+        let toks = lex(src);
+        let mask = test_mask(&toks);
+        let unwraps: Vec<bool> = toks
+            .iter()
+            .zip(&mask)
+            .filter(|(t, _)| t.kind.is_ident("unwrap"))
+            .map(|(_, m)| *m)
+            .collect();
+        assert_eq!(unwraps, vec![false, true]);
+    }
+}

@@ -1,0 +1,360 @@
+//! srclint — the project's invariant linter for the serving datapath.
+//!
+//! A deliberately small, dependency-free, token-level scanner (no
+//! `syn`, no network deps — the build stays self-contained offline)
+//! that enforces the source invariants the test suite cannot see:
+//!
+//! | rule               | invariant                                          |
+//! |--------------------|----------------------------------------------------|
+//! | `no-panic`         | no `unwrap`/`expect`/`panic!`/`unreachable!` in non-test `coordinator/*` code |
+//! | `lock-order`       | the cross-module `.lock()` acquisition graph is acyclic |
+//! | `atomics-audit`    | no `Relaxed` load at an identity-audit read point  |
+//! | `wire-consistency` | `frame.rs` offsets, `key.rs` op contracts, and the README header diagram agree |
+//!
+//! Any site can be waived with an in-source marker on the offending
+//! line or the line above, reason required:
+//!
+//! ```text
+//! // srclint: allow(no-panic) the artifact was probed at boot
+//! ```
+//!
+//! Run as `repro lint` or `cargo run -p srclint` from `rust/`.
+
+pub mod atomics;
+pub mod lexer;
+pub mod lock_order;
+pub mod panic_freedom;
+pub mod wire;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// The lint rules, each independently toggleable and allowlistable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    NoPanic,
+    LockOrder,
+    AtomicsAudit,
+    WireConsistency,
+    /// Not toggleable: a malformed `// srclint:` marker is always an
+    /// error (a typo'd marker silently waiving nothing is worse than
+    /// either outcome it could have had).
+    BadMarker,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 4] = [
+        Rule::NoPanic,
+        Rule::LockOrder,
+        Rule::AtomicsAudit,
+        Rule::WireConsistency,
+    ];
+
+    pub fn slug(self) -> &'static str {
+        match self {
+            Rule::NoPanic => "no-panic",
+            Rule::LockOrder => "lock-order",
+            Rule::AtomicsAudit => "atomics-audit",
+            Rule::WireConsistency => "wire-consistency",
+            Rule::BadMarker => "bad-marker",
+        }
+    }
+
+    pub fn from_slug(s: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.slug() == s)
+    }
+}
+
+impl fmt::Display for Rule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.slug())
+    }
+}
+
+/// One lint violation.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: Rule, file: &str, line: u32, message: String) -> Finding {
+        Finding { rule, file: file.to_string(), line, message }
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// Which rules to run. Defaults to all of them.
+#[derive(Debug, Clone)]
+pub struct RuleSet {
+    enabled: Vec<Rule>,
+}
+
+impl Default for RuleSet {
+    fn default() -> Self {
+        RuleSet { enabled: Rule::ALL.to_vec() }
+    }
+}
+
+impl RuleSet {
+    pub fn all() -> RuleSet {
+        RuleSet::default()
+    }
+
+    pub fn only(rule: Rule) -> RuleSet {
+        RuleSet { enabled: vec![rule] }
+    }
+
+    pub fn without(mut self, rule: Rule) -> RuleSet {
+        self.enabled.retain(|r| *r != rule);
+        self
+    }
+
+    pub fn has(&self, rule: Rule) -> bool {
+        self.enabled.contains(&rule)
+    }
+}
+
+/// One source file handed to the linter: a display label (used in
+/// findings and for per-directory rule scoping, e.g. `no-panic` only
+/// fires on labels under `coordinator/`) plus its text.
+#[derive(Debug, Clone)]
+pub struct SrcFile {
+    pub label: String,
+    pub text: String,
+}
+
+impl SrcFile {
+    pub fn new(label: &str, text: &str) -> SrcFile {
+        SrcFile { label: label.to_string(), text: text.to_string() }
+    }
+}
+
+/// Allow markers for one file: rule -> lines carrying a marker.
+/// A marker suppresses matching findings on its own line and the next.
+struct Markers {
+    allowed: BTreeMap<Rule, Vec<u32>>,
+    bad: Vec<Finding>,
+}
+
+fn parse_markers(file: &SrcFile) -> Markers {
+    let mut m = Markers { allowed: BTreeMap::new(), bad: Vec::new() };
+    for (idx, line) in file.text.lines().enumerate() {
+        let lineno = idx as u32 + 1;
+        let Some(pos) = line.find("// srclint:") else { continue };
+        let rest = line[pos + "// srclint:".len()..].trim_start();
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            m.bad.push(Finding::new(
+                Rule::BadMarker,
+                &file.label,
+                lineno,
+                format!("unrecognized srclint marker: `{rest}` (want `allow(<rule>) <reason>`)"),
+            ));
+            continue;
+        };
+        let Some(close) = inner.find(')') else {
+            m.bad.push(Finding::new(
+                Rule::BadMarker,
+                &file.label,
+                lineno,
+                "unterminated srclint allow(...) marker".to_string(),
+            ));
+            continue;
+        };
+        let slug = inner[..close].trim();
+        let reason = inner[close + 1..].trim();
+        let Some(rule) = Rule::from_slug(slug) else {
+            m.bad.push(Finding::new(
+                Rule::BadMarker,
+                &file.label,
+                lineno,
+                format!("unknown rule `{slug}` in srclint allow marker"),
+            ));
+            continue;
+        };
+        if reason.is_empty() {
+            m.bad.push(Finding::new(
+                Rule::BadMarker,
+                &file.label,
+                lineno,
+                format!("srclint allow({slug}) marker needs a reason"),
+            ));
+            continue;
+        }
+        m.allowed.entry(rule).or_default().push(lineno);
+    }
+    m
+}
+
+/// Lint a set of in-memory sources. `readme`, when given, pairs a label
+/// with the README text and enables the wire-consistency cross-check
+/// (which also needs files labeled `…frame.rs` and `…key.rs` in
+/// `files`). This is the whole linter behind both `lint_tree` and the
+/// fixture tests.
+pub fn lint_sources(
+    files: &[SrcFile],
+    readme: Option<(&str, &str)>,
+    rules: &RuleSet,
+) -> Vec<Finding> {
+    let lexed: Vec<(usize, Vec<lexer::Token>)> =
+        files.iter().enumerate().map(|(i, f)| (i, lexer::lex(&f.text))).collect();
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut markers: Vec<Markers> = Vec::new();
+    for f in files {
+        markers.push(parse_markers(f));
+    }
+
+    if rules.has(Rule::NoPanic) {
+        for (i, toks) in &lexed {
+            if files[*i].label.contains("coordinator/") {
+                raw.extend(panic_freedom::check(&files[*i].label, toks));
+            }
+        }
+    }
+    if rules.has(Rule::LockOrder) {
+        let labeled: Vec<(String, Vec<lexer::Token>)> = lexed
+            .iter()
+            .map(|(i, t)| (files[*i].label.clone(), t.clone()))
+            .collect();
+        raw.extend(lock_order::check(&labeled));
+    }
+    if rules.has(Rule::AtomicsAudit) {
+        for (i, toks) in &lexed {
+            raw.extend(atomics::check(&files[*i].label, toks));
+        }
+    }
+    if rules.has(Rule::WireConsistency) {
+        if let Some((readme_label, readme_text)) = readme {
+            let frame = lexed
+                .iter()
+                .find(|(i, _)| files[*i].label.ends_with("frame.rs"));
+            let key = lexed.iter().find(|(i, _)| files[*i].label.ends_with("key.rs"));
+            if let (Some((fi, ftoks)), Some((ki, ktoks))) = (frame, key) {
+                raw.extend(wire::check(
+                    (&files[*fi].label, ftoks),
+                    (&files[*ki].label, ktoks),
+                    (readme_label, readme_text),
+                ));
+            }
+        }
+    }
+
+    // Apply allow markers: a finding on line N survives unless its file
+    // has a marker for its rule on line N or N-1.
+    let by_label: BTreeMap<&str, &Markers> = files
+        .iter()
+        .zip(&markers)
+        .map(|(f, m)| (f.label.as_str(), m))
+        .collect();
+    let mut out: Vec<Finding> = raw
+        .into_iter()
+        .filter(|f| {
+            let Some(m) = by_label.get(f.file.as_str()) else { return true };
+            let Some(lines) = m.allowed.get(&f.rule) else { return true };
+            !lines.iter().any(|l| *l == f.line || *l + 1 == f.line)
+        })
+        .collect();
+    for m in &markers {
+        out.extend(m.bad.iter().cloned());
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir`, labels relative to `root`.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(PathBuf, String)>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            let label = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push((p.clone(), label));
+        }
+    }
+    Ok(())
+}
+
+/// Lint the real tree: every `.rs` under `<root>/src` plus
+/// `<root>/README.md`, where `root` is the `rust/` crate directory.
+pub fn lint_tree(root: &Path, rules: &RuleSet) -> std::io::Result<Vec<Finding>> {
+    let src = root.join("src");
+    let mut paths = Vec::new();
+    collect_rs(root, &src, &mut paths)?;
+    let mut files = Vec::new();
+    for (p, label) in paths {
+        files.push(SrcFile { label, text: std::fs::read_to_string(&p)? });
+    }
+    let readme_path = root.join("README.md");
+    let readme_text = std::fs::read_to_string(&readme_path).unwrap_or_default();
+    let readme = if readme_text.is_empty() {
+        None
+    } else {
+        Some(("README.md", readme_text.as_str()))
+    };
+    Ok(lint_sources(&files, readme, rules))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_marker_suppresses_same_and_next_line() {
+        let src = SrcFile::new(
+            "src/coordinator/x.rs",
+            "fn f() {\n// srclint: allow(no-panic) boot-time probe already proved it\n\
+             x.unwrap();\n y.unwrap();\n}",
+        );
+        let f = lint_sources(&[src], None, &RuleSet::only(Rule::NoPanic));
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 4, "only the unmarked unwrap survives");
+    }
+
+    #[test]
+    fn marker_without_reason_is_a_finding() {
+        let src = SrcFile::new(
+            "src/coordinator/x.rs",
+            "// srclint: allow(no-panic)\nfn f() { x.unwrap(); }",
+        );
+        let f = lint_sources(&[src], None, &RuleSet::only(Rule::NoPanic));
+        assert!(f.iter().any(|x| x.rule == Rule::BadMarker), "{f:?}");
+    }
+
+    #[test]
+    fn unknown_rule_in_marker_is_a_finding() {
+        let src = SrcFile::new(
+            "src/a.rs",
+            "// srclint: allow(no-such-rule) because reasons\nfn f() {}",
+        );
+        let f = lint_sources(&[src], None, &RuleSet::all());
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::BadMarker);
+    }
+
+    #[test]
+    fn no_panic_scoped_to_coordinator() {
+        let src = SrcFile::new("src/qrd/fast.rs", "fn f() { x.unwrap(); }");
+        let f = lint_sources(&[src], None, &RuleSet::only(Rule::NoPanic));
+        assert!(f.is_empty(), "no-panic only applies under coordinator/");
+    }
+}

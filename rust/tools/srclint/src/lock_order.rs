@@ -1,0 +1,426 @@
+//! Rule `lock-order`: build the cross-module lock-acquisition graph and
+//! reject cycles as deadlock hazards.
+//!
+//! The model is deliberately conservative:
+//!
+//! * Each function body yields an ordered event stream of direct
+//!   `.lock()` acquisitions (named by receiver: `self.batcher.lock()`
+//!   acquires lock `batcher`) and plain calls (by callee name).
+//! * A lock, once acquired in a function — directly or through the
+//!   guard-returning `fn lock` wrapper — is assumed held for the rest
+//!   of that function ("held forever": guard drops are invisible at
+//!   token level, so we over-approximate). Other calls are treated as
+//!   balanced: they contribute `held → callee-lock` edges but release
+//!   before returning.
+//! * `self.foo()` and free/path calls are resolved transitively through
+//!   a name-keyed function table (same-name collisions union their lock
+//!   sets — over-approximate, never under). Method calls on any other
+//!   receiver are NOT resolved: `stream.shutdown(..)` sharing a name
+//!   with the service's `fn shutdown` must not alias them.
+//! * Every `held-lock → newly-acquired-lock` pair becomes a directed
+//!   edge; a cycle in the resulting graph is a finding.
+//!
+//! `self.lock()` (the `ShardQueue::lock` poison-recovering helper) is a
+//! call, not an acquisition of a lock named `self`: it resolves through
+//! the function table to the lock the helper actually takes.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::lexer::{test_mask, Tok, Token};
+use crate::{Finding, Rule};
+
+#[derive(Debug, Clone)]
+enum Event {
+    /// Direct `.lock()` on receiver `name`, at `line`.
+    Lock(String, u32),
+    /// Call to a function `name`, at `line`.
+    Call(String, u32),
+}
+
+#[derive(Debug, Default)]
+struct FnTable {
+    /// name -> one (file, event list) per definition sharing that name.
+    fns: BTreeMap<String, Vec<(String, Vec<Event>)>>,
+}
+
+/// Extract per-function event streams from one file's token stream.
+fn extract(file: &str, toks: &[Token], table: &mut FnTable) {
+    let mask = test_mask(toks);
+    // Stack of (fn name, token index just past the body's closing `}`).
+    let mut stack: Vec<(String, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        while let Some(top) = stack.last() {
+            if i >= top.1 {
+                stack.pop();
+            } else {
+                break;
+            }
+        }
+        if toks[i].kind.is_ident("fn") {
+            if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.kind) {
+                if mask[i] {
+                    // Test-only code never participates in the lock graph.
+                    if let Some((_, body_close)) = fn_body(toks, i + 2) {
+                        i = body_close;
+                        continue;
+                    }
+                }
+                if let Some((body_open, body_close)) = fn_body(toks, i + 2) {
+                    table
+                        .fns
+                        .entry(name.clone())
+                        .or_default()
+                        .push((file.to_string(), Vec::new()));
+                    stack.push((name.clone(), body_close));
+                    i = body_open + 1;
+                    continue;
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if let Some((name, _)) = stack.last() {
+            if let Tok::Ident(id) = &toks[i].kind {
+                let followed_by_paren =
+                    toks.get(i + 1).map(|t| t.kind.is_sym(b'(')).unwrap_or(false);
+                if followed_by_paren {
+                    let dotted = i > 0 && toks[i - 1].kind.is_sym(b'.');
+                    let ev = if id == "lock" && dotted {
+                        // Receiver is the ident before the dot.
+                        match toks.get(i.wrapping_sub(2)).map(|t| &t.kind) {
+                            Some(Tok::Ident(r)) if r == "self" => {
+                                // `self.lock()` — the helper method.
+                                Some(Event::Call("lock".to_string(), toks[i].line))
+                            }
+                            Some(Tok::Ident(r)) => {
+                                Some(Event::Lock(r.clone(), toks[i].line))
+                            }
+                            // `foo().lock()` etc: a unique per-site lock
+                            // node so it can never falsely alias.
+                            _ => Some(Event::Lock(
+                                format!("{file}:{}:<expr>", toks[i].line),
+                                toks[i].line,
+                            )),
+                        }
+                    } else if dotted {
+                        // A method call. Only `self.foo()` resolves
+                        // through the name-keyed table — on any other
+                        // receiver the bare name would falsely alias
+                        // unrelated impls (`stream.shutdown(..)` is not
+                        // the service's `fn shutdown`).
+                        match toks.get(i.wrapping_sub(2)).map(|t| &t.kind) {
+                            Some(Tok::Ident(r)) if r == "self" => {
+                                Some(Event::Call(id.clone(), toks[i].line))
+                            }
+                            _ => None,
+                        }
+                    } else {
+                        // Free or path-qualified call.
+                        Some(Event::Call(id.clone(), toks[i].line))
+                    };
+                    if let Some(ev) = ev {
+                        let name = name.clone();
+                        if let Some(lists) = table.fns.get_mut(&name) {
+                            if let Some((_, cur)) = lists.last_mut() {
+                                cur.push(ev);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Given the token index just past a `fn name`, find the body's opening
+/// and closing brace indices. Returns `None` for bodyless declarations.
+fn fn_body(toks: &[Token], from: usize) -> Option<(usize, usize)> {
+    let mut j = from;
+    while j < toks.len() {
+        match &toks[j].kind {
+            Tok::Sym(b'{') => break,
+            Tok::Sym(b';') => return None,
+            _ => j += 1,
+        }
+    }
+    if j >= toks.len() {
+        return None;
+    }
+    let open = j;
+    let mut depth = 1usize;
+    j += 1;
+    while j < toks.len() && depth > 0 {
+        match &toks[j].kind {
+            Tok::Sym(b'{') => depth += 1,
+            Tok::Sym(b'}') => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    Some((open, j))
+}
+
+pub struct LockGraph {
+    /// edge (from, to) -> provenance of the acquisition that closed it.
+    pub edges: BTreeMap<(String, String), Provenance>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Provenance {
+    pub file: String,
+    pub line: u32,
+    pub detail: String,
+}
+
+/// Build the lock graph across all files. `files` pairs a display label
+/// with source tokens.
+pub fn build(files: &[(String, Vec<Token>)]) -> LockGraph {
+    let mut table = FnTable::default();
+    for (label, toks) in files {
+        extract(label, toks, &mut table);
+    }
+
+    // Transitive lock sets per function name (union over same-name defs).
+    let mut locks_all: BTreeMap<String, BTreeSet<String>> = BTreeMap::new();
+    for (name, lists) in &table.fns {
+        let mut direct = BTreeSet::new();
+        for (_, evs) in lists {
+            for ev in evs {
+                if let Event::Lock(l, _) = ev {
+                    direct.insert(l.clone());
+                }
+            }
+        }
+        locks_all.insert(name.clone(), direct);
+    }
+    // Fixpoint over the call graph; bounded by total set growth.
+    loop {
+        let mut changed = false;
+        for (name, lists) in &table.fns {
+            let mut add = BTreeSet::new();
+            for (_, evs) in lists {
+                for ev in evs {
+                    if let Event::Call(c, _) = ev {
+                        if let Some(s) = locks_all.get(c) {
+                            add.extend(s.iter().cloned());
+                        }
+                    }
+                }
+            }
+            let cur = locks_all.entry(name.clone()).or_default();
+            for l in add {
+                if cur.insert(l) {
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Edges: replay each event list under the held-forever model.
+    let mut edges: BTreeMap<(String, String), Provenance> = BTreeMap::new();
+    for (name, lists) in &table.fns {
+        for (file, evs) in lists {
+            let mut held: Vec<String> = Vec::new();
+            for ev in evs {
+                match ev {
+                    Event::Lock(l, line) => {
+                        for h in &held {
+                            if h != l {
+                                edges.entry((h.clone(), l.clone())).or_insert_with(|| {
+                                    Provenance {
+                                        file: file.clone(),
+                                        line: *line,
+                                        detail: format!("fn {name}"),
+                                    }
+                                });
+                            }
+                        }
+                        if !held.iter().any(|h| h == l) {
+                            held.push(l.clone());
+                        }
+                    }
+                    Event::Call(c, line) => {
+                        if let Some(inner) = locks_all.get(c) {
+                            for m in inner {
+                                for h in &held {
+                                    if h != m {
+                                        edges.entry((h.clone(), m.clone())).or_insert_with(
+                                            || Provenance {
+                                                file: file.clone(),
+                                                line: *line,
+                                                detail: format!("fn {name} (via call to {c})"),
+                                            },
+                                        );
+                                    }
+                                }
+                            }
+                            // A guard-returning wrapper (`fn lock`)
+                            // leaves its lock held in the caller. Other
+                            // calls are balanced — retaining their locks
+                            // would make two sequential calls to the
+                            // same multi-lock callee a false cycle.
+                            if c == "lock" {
+                                for m in inner {
+                                    if !held.iter().any(|h| h == m) {
+                                        held.push(m.clone());
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    LockGraph { edges }
+}
+
+/// Detect cycles in the lock graph; one finding per cycle.
+pub fn check(files: &[(String, Vec<Token>)]) -> Vec<Finding> {
+    let graph = build(files);
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (from, to) in graph.edges.keys() {
+        adj.entry(from.as_str()).or_default().push(to.as_str());
+    }
+    let mut out = Vec::new();
+    // Iterative DFS with white/grey/black coloring; report the grey
+    // back-edge path as the cycle.
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for start in nodes {
+        if color.get(start).copied().unwrap_or(0) != 0 {
+            continue;
+        }
+        // path holds the grey chain.
+        let mut path: Vec<&str> = Vec::new();
+        // Each stack entry: (node, next-child index).
+        let mut stack: Vec<(&str, usize)> = vec![(start, 0)];
+        color.insert(start, 1);
+        path.push(start);
+        while let Some((node, idx)) = stack.last_mut() {
+            let kids = adj.get(*node).map(|v| v.as_slice()).unwrap_or(&[]);
+            if *idx < kids.len() {
+                let child = kids[*idx];
+                *idx += 1;
+                match color.get(child).copied().unwrap_or(0) {
+                    0 => {
+                        color.insert(child, 1);
+                        path.push(child);
+                        stack.push((child, 0));
+                    }
+                    1 => {
+                        // Cycle: path from `child` to current node.
+                        let pos = path.iter().position(|n| *n == child).unwrap_or(0);
+                        let mut cyc: Vec<&str> = path[pos..].to_vec();
+                        cyc.push(child);
+                        let (file, line, detail) = graph
+                            .edges
+                            .get(&(node.to_string(), child.to_string()))
+                            .map(|p| (p.file.clone(), p.line, p.detail.clone()))
+                            .unwrap_or_else(|| ("(lock graph)".to_string(), 0, String::new()));
+                        out.push(Finding::new(
+                            Rule::LockOrder,
+                            &file,
+                            line,
+                            format!(
+                                "lock-order cycle: {} (closing edge in {detail})",
+                                cyc.join(" -> ")
+                            ),
+                        ));
+                    }
+                    _ => {}
+                }
+            } else {
+                color.insert(node, 2);
+                path.pop();
+                stack.pop();
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn files(srcs: &[(&str, &str)]) -> Vec<(String, Vec<Token>)> {
+        srcs.iter()
+            .map(|(n, s)| (n.to_string(), lex(s)))
+            .collect()
+    }
+
+    #[test]
+    fn acyclic_nesting_passes() {
+        let f = files(&[(
+            "a.rs",
+            "fn f(&self) { let g = self.outer.lock(); let h = self.inner.lock(); }",
+        )]);
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn ab_ba_cycle_caught() {
+        let f = files(&[(
+            "a.rs",
+            "fn f(&self) { let g = self.a.lock(); let h = self.b.lock(); }\n\
+             fn g(&self) { let h = self.b.lock(); let g = self.a.lock(); }",
+        )]);
+        assert_eq!(check(&f).len(), 1);
+    }
+
+    #[test]
+    fn cycle_through_call_caught() {
+        let f = files(&[(
+            "a.rs",
+            "fn f(&self) { let g = self.a.lock(); self.takes_b(); }\n\
+             fn takes_b(&self) { let h = self.b.lock(); }\n\
+             fn g(&self) { let h = self.b.lock(); let g = self.a.lock(); }",
+        )]);
+        assert_eq!(check(&f).len(), 1);
+    }
+
+    #[test]
+    fn balanced_call_twice_is_not_a_cycle() {
+        // A call is acquire+release inside the callee; calling the same
+        // multi-lock helper twice must not fabricate reverse edges.
+        let f = files(&[(
+            "a.rs",
+            "fn helper(&self) { let a = self.a.lock(); let b = self.b.lock(); }\n\
+             fn caller(&self) { self.helper(); self.helper(); }",
+        )]);
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn non_self_method_call_does_not_alias() {
+        // `stream.shutdown()` shares a name with the two-lock `shutdown`
+        // below but is a different impl; uniting them would close a
+        // ledgers -> handles -> ledgers cycle no thread can deadlock on.
+        let f = files(&[(
+            "a.rs",
+            "fn shutdown(&self) { let g = self.handles.lock(); let s = self.state.lock(); }\n\
+             fn client(&self) { let l = self.ledgers.lock(); stream.shutdown(); }\n\
+             fn other(&self) { let h = self.handles.lock(); let l = self.ledgers.lock(); }",
+        )]);
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn self_lock_resolves_through_helper() {
+        let f = files(&[(
+            "a.rs",
+            "fn lock(&self) { self.state.lock() }\n\
+             fn f(&self) { let g = self.lock(); let h = self.other.lock(); }\n\
+             fn g(&self) { let h = self.other.lock(); let g = self.lock(); }",
+        )]);
+        // state -> other and other -> state: cycle.
+        assert_eq!(check(&f).len(), 1);
+    }
+}

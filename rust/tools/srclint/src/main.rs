@@ -1,0 +1,111 @@
+//! `srclint` CLI: lint the tree, print findings, exit nonzero on any.
+//!
+//! Usage (from the `rust/` crate directory, or pass `--root`):
+//!
+//! ```text
+//! cargo run --release -p srclint [-- --root DIR] [--skip RULE]... [--verbose]
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use srclint::{lexer, lint_tree, Rule, RuleSet};
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut rules = RuleSet::all();
+    let mut verbose = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => root = args.next().map(PathBuf::from),
+            "--skip" => match args.next().as_deref().and_then(Rule::from_slug) {
+                Some(r) => rules = rules.without(r),
+                None => {
+                    eprintln!("--skip wants one of: {}", slugs());
+                    return ExitCode::from(2);
+                }
+            },
+            "--verbose" | "-v" => verbose = true,
+            "--list-rules" => {
+                println!("{}", slugs());
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("unknown argument `{other}`");
+                eprintln!("usage: srclint [--root DIR] [--skip RULE]... [--verbose]");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(guess_root);
+    if !root.join("src").is_dir() {
+        eprintln!("srclint: no src/ under {} (pass --root)", root.display());
+        return ExitCode::from(2);
+    }
+
+    match lint_tree(&root, &rules) {
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if verbose {
+                print_atomics_summary(&root);
+            }
+            if findings.is_empty() {
+                println!("srclint: clean ({} rules)", Rule::ALL.len());
+                ExitCode::SUCCESS
+            } else {
+                println!("srclint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("srclint: i/o error walking {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn slugs() -> String {
+    Rule::ALL.map(|r| r.slug()).join(", ")
+}
+
+/// Run from `rust/` (src/ is here) or the repo root (rust/src is).
+fn guess_root() -> PathBuf {
+    let here = PathBuf::from(".");
+    if here.join("src").is_dir() {
+        here
+    } else {
+        PathBuf::from("rust")
+    }
+}
+
+/// `--verbose`: the atomics classification table — every `Ordering::`
+/// site bucketed by ordering × method, so an audit-path change shows up
+/// in review even when no rule fires.
+fn print_atomics_summary(root: &std::path::Path) {
+    use std::collections::BTreeMap;
+    let mut counts: BTreeMap<(String, String), usize> = BTreeMap::new();
+    let mut stack = vec![root.join("src")];
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&dir) else { continue };
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|x| x == "rs").unwrap_or(false) {
+                let Ok(text) = std::fs::read_to_string(&p) else { continue };
+                let toks = lexer::lex(&text);
+                for s in srclint::atomics::classify(&p.to_string_lossy(), &toks) {
+                    let m = s.method.unwrap_or_else(|| "?".to_string());
+                    *counts.entry((s.ordering, m)).or_default() += 1;
+                }
+            }
+        }
+    }
+    println!("atomics classification (ordering × method):");
+    for ((ord, method), n) in counts {
+        println!("  {ord:<8} {method:<22} {n}");
+    }
+}

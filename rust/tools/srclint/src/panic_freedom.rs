@@ -1,0 +1,79 @@
+//! Rule `no-panic`: non-test coordinator code must not contain
+//! `unwrap()`, `expect()`, `panic!`, or `unreachable!`.
+//!
+//! A dying worker must become error `Response`s, never an abort — the
+//! lifecycle invariants (drain-on-death, the socket identity audit)
+//! only hold if no thread can tear the process down mid-flight.
+//! `assert!`/`debug_assert!` are deliberately *not* in the token set:
+//! contract checks on internal invariants are allowed.
+
+use crate::lexer::{test_mask, Tok, Token};
+use crate::{Finding, Rule};
+
+/// Method calls flagged when they appear as `.name(` outside tests.
+const METHODS: &[&str] = &["unwrap", "expect"];
+/// Macros flagged when they appear as `name!` outside tests.
+const MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+pub fn check(file: &str, toks: &[Token]) -> Vec<Finding> {
+    let mask = test_mask(toks);
+    let mut out = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if mask[i] {
+            continue;
+        }
+        let name = match &t.kind {
+            Tok::Ident(s) => s.as_str(),
+            _ => continue,
+        };
+        // `.unwrap(` / `.expect(` — require the leading dot so free
+        // functions or idents named `unwrap` in other positions (none in
+        // this tree, but cheap to be precise) are not flagged, and the
+        // trailing `(` so `unwrap_or_else` (a different ident anyway)
+        // or doc references cannot match.
+        if METHODS.contains(&name)
+            && i > 0
+            && toks[i - 1].kind.is_sym(b'.')
+            && i + 1 < toks.len()
+            && toks[i + 1].kind.is_sym(b'(')
+        {
+            out.push(Finding::new(
+                Rule::NoPanic,
+                file,
+                t.line,
+                format!(".{name}() in non-test coordinator code"),
+            ));
+        }
+        // `panic!(` etc.
+        if MACROS.contains(&name) && i + 1 < toks.len() && toks[i + 1].kind.is_sym(b'!') {
+            out.push(Finding::new(
+                Rule::NoPanic,
+                file,
+                t.line,
+                format!("{name}! in non-test coordinator code"),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    #[test]
+    fn flags_unwrap_and_panic() {
+        let toks = lex("fn f() { x.unwrap(); panic!(\"boom\"); }");
+        let f = check("a.rs", &toks);
+        assert_eq!(f.len(), 2);
+    }
+
+    #[test]
+    fn ignores_tests_and_lookalikes() {
+        let toks = lex(
+            "fn f() { x.unwrap_or_else(|p| p.into_inner()); }\n#[test]\nfn t() { y.unwrap(); }",
+        );
+        assert!(check("a.rs", &toks).is_empty());
+    }
+}

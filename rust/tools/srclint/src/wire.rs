@@ -1,0 +1,719 @@
+//! Rule `wire-consistency`: the wire header layout exists in three
+//! places — `frame.rs` (constants + decode), `key.rs` (`OpKind`
+//! discriminants and labels), and the README header diagram / Ops
+//! table — and they must agree. Adding an `OpKind` variant without
+//! updating every arm, the README, and the frame validation hook is a
+//! lint failure, not a latent protocol bug.
+//!
+//! What is cross-checked:
+//!
+//! * `OpKind`: enum variants == `ALL` elements == `from_u8` arms ==
+//!   `as_u8` arms == `label` arms, with `from_u8`/`as_u8` inverse.
+//! * `FrameKind`: `from_u8`/`as_u8` arms inverse and same-sized.
+//! * `frame.rs` `OFF_*` header-offset constants match the README
+//!   diagram's offset column field by field, and `HEADER_LEN` equals
+//!   the payload row's offset.
+//! * README magic/version/min-version match `MAGIC`/`VERSION`/
+//!   `MIN_VERSION`; the diagram's kind and op lists match the enums
+//!   (both discriminant and label).
+//! * The README Ops table's `byte` column matches `OpKind::as_u8`.
+//! * `frame.rs` still validates the op byte through `OpKind::from_u8`.
+
+use std::collections::BTreeMap;
+
+use crate::lexer::{num_value, Tok, Token};
+use crate::{Finding, Rule};
+
+fn finding(file: &str, line: u32, msg: String) -> Finding {
+    Finding::new(Rule::WireConsistency, file, line, msg)
+}
+
+/// `const NAME: _ = <value>;` sites, with simple `a << b` evaluation.
+fn consts(toks: &[Token]) -> BTreeMap<String, (u64, u32)> {
+    let mut out = BTreeMap::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if toks[i].kind.is_ident("const") {
+            if let Some(Tok::Ident(name)) = toks.get(i + 1).map(|t| &t.kind) {
+                let line = toks[i].line;
+                // Scan to `=` then to `;`, collecting value tokens.
+                let mut j = i + 2;
+                while j < toks.len()
+                    && !toks[j].kind.is_sym(b'=')
+                    && !toks[j].kind.is_sym(b';')
+                {
+                    j += 1;
+                }
+                if j < toks.len() && toks[j].kind.is_sym(b'=') {
+                    let mut vals: Vec<&Tok> = Vec::new();
+                    let mut k = j + 1;
+                    while k < toks.len() && !toks[k].kind.is_sym(b';') {
+                        vals.push(&toks[k].kind);
+                        k += 1;
+                    }
+                    let v = match vals.as_slice() {
+                        [Tok::Num(n)] => num_value(n),
+                        [Tok::Num(a), Tok::Sym(b'<'), Tok::Sym(b'<'), Tok::Num(b)] => {
+                            match (num_value(a), num_value(b)) {
+                                (Some(a), Some(b)) if b < 64 => Some(a << b),
+                                _ => None,
+                            }
+                        }
+                        _ => None,
+                    };
+                    if let Some(v) = v {
+                        out.insert(name.clone(), (v, line));
+                    }
+                    i = k;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Match-arm maps for an enum `Enum`: `<num> => Some(Enum::V)` (from_u8
+/// shape) and `Enum::V => <num>` / `Enum::V => "<label>"` (as_u8/label
+/// shapes), collected anywhere in the file — arm shapes are distinctive
+/// enough that scoping to the enclosing fn is unnecessary.
+struct EnumMaps {
+    from_u8: BTreeMap<u64, String>,
+    as_u8: BTreeMap<String, u64>,
+    labels: BTreeMap<String, String>,
+    variants: Vec<String>,
+    all_len: Option<u64>,
+    all_elems: Vec<String>,
+}
+
+fn enum_maps(toks: &[Token], enum_name: &str) -> EnumMaps {
+    let mut m = EnumMaps {
+        from_u8: BTreeMap::new(),
+        as_u8: BTreeMap::new(),
+        labels: BTreeMap::new(),
+        variants: Vec::new(),
+        all_len: None,
+        all_elems: Vec::new(),
+    };
+    let mut i = 0usize;
+    // Innermost `fn` name seen so far — arms are only collected inside
+    // the correspondingly-named function, so `min_m`/`request_words`
+    // match arms can never be mistaken for discriminant arms.
+    let mut cur_fn = String::new();
+    while i < toks.len() {
+        match &toks[i].kind {
+            Tok::Ident(kw) if kw == "fn" => {
+                if let Some(Tok::Ident(n)) = toks.get(i + 1).map(|t| &t.kind) {
+                    cur_fn = n.clone();
+                }
+            }
+            // `enum <Name> { V1, V2(..), V3, }`
+            Tok::Ident(kw) if kw == "enum" => {
+                if let Some(Tok::Ident(n)) = toks.get(i + 1).map(|t| &t.kind) {
+                    if n == enum_name {
+                        let mut j = i + 2;
+                        while j < toks.len() && !toks[j].kind.is_sym(b'{') {
+                            j += 1;
+                        }
+                        let mut depth = 1usize;
+                        j += 1;
+                        let mut expect_variant = true;
+                        while j < toks.len() && depth > 0 {
+                            match &toks[j].kind {
+                                Tok::Sym(b'{') | Tok::Sym(b'(') | Tok::Sym(b'[') => depth += 1,
+                                Tok::Sym(b'}') | Tok::Sym(b')') | Tok::Sym(b']') => depth -= 1,
+                                Tok::Sym(b',') if depth == 1 => expect_variant = true,
+                                Tok::Ident(v) if depth == 1 && expect_variant => {
+                                    m.variants.push(v.clone());
+                                    expect_variant = false;
+                                }
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+            }
+            // `const ALL: [Enum; N] = [Enum::A, Enum::B];`
+            Tok::Ident(kw) if kw == "const" => {
+                if let Some(Tok::Ident(n)) = toks.get(i + 1).map(|t| &t.kind) {
+                    if n == "ALL" {
+                        // Scan to the statement's `;` at bracket depth 0
+                        // — the `;` inside the `[Enum; N]` type is the
+                        // declared length, not the end.
+                        let mut j = i + 2;
+                        let mut depth = 0i32;
+                        while j < toks.len() {
+                            match &toks[j].kind {
+                                Tok::Sym(b'[') => depth += 1,
+                                Tok::Sym(b']') => depth -= 1,
+                                Tok::Sym(b';') if depth == 0 => break,
+                                Tok::Num(num)
+                                    if m.all_len.is_none()
+                                        && j > 0
+                                        && toks[j - 1].kind.is_sym(b';') =>
+                                {
+                                    m.all_len = num_value(num);
+                                }
+                                Tok::Ident(e) if e == enum_name => {
+                                    if let Some(Tok::Ident(v)) =
+                                        toks.get(j + 3).map(|t| &t.kind)
+                                    {
+                                        if toks[j + 1].kind.is_sym(b':')
+                                            && toks[j + 2].kind.is_sym(b':')
+                                            && toks
+                                                .get(j + 4)
+                                                .map(|t| {
+                                                    t.kind.is_sym(b',') || t.kind.is_sym(b']')
+                                                })
+                                                .unwrap_or(false)
+                                        {
+                                            m.all_elems.push(v.clone());
+                                        }
+                                    }
+                                }
+                                _ => {}
+                            }
+                            j += 1;
+                        }
+                        i = j;
+                        continue;
+                    }
+                }
+            }
+            // `<num> => Some(Enum::V)` — only inside `fn from_u8`.
+            Tok::Num(num) if cur_fn == "from_u8" => {
+                if matches2(toks, i + 1, b'=', b'>')
+                    && toks.get(i + 3).map(|t| t.kind.is_ident("Some")).unwrap_or(false)
+                    && toks.get(i + 4).map(|t| t.kind.is_sym(b'(')).unwrap_or(false)
+                    && toks
+                        .get(i + 5)
+                        .map(|t| t.kind.is_ident(enum_name))
+                        .unwrap_or(false)
+                {
+                    if let (Some(v), Some(Tok::Ident(name))) =
+                        (num_value(num), toks.get(i + 8).map(|t| &t.kind))
+                    {
+                        m.from_u8.insert(v, name.clone());
+                    }
+                }
+            }
+            // `Enum::V => <num>` in `fn as_u8`, `Enum::V => "<label>"`
+            // in `fn label`.
+            Tok::Ident(e) if e == enum_name => {
+                if toks.get(i + 1).map(|t| t.kind.is_sym(b':')).unwrap_or(false)
+                    && toks.get(i + 2).map(|t| t.kind.is_sym(b':')).unwrap_or(false)
+                {
+                    if let Some(Tok::Ident(v)) = toks.get(i + 3).map(|t| &t.kind) {
+                        if matches2(toks, i + 4, b'=', b'>') {
+                            match toks.get(i + 6).map(|t| &t.kind) {
+                                Some(Tok::Num(num)) if cur_fn == "as_u8" => {
+                                    if let Some(n) = num_value(num) {
+                                        m.as_u8.insert(v.clone(), n);
+                                    }
+                                }
+                                Some(Tok::Str(s)) if cur_fn == "label" => {
+                                    m.labels.insert(v.clone(), s.clone());
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    m
+}
+
+fn matches2(toks: &[Token], i: usize, a: u8, b: u8) -> bool {
+    toks.get(i).map(|t| t.kind.is_sym(a)).unwrap_or(false)
+        && toks.get(i + 1).map(|t| t.kind.is_sym(b)).unwrap_or(false)
+}
+
+/// One parsed README header-diagram row.
+struct DiagRow {
+    offset: u64,
+    field: String,
+    rest: String,
+    line: u32,
+}
+
+/// Parse the `offset size field ...` diagram rows out of the README.
+fn readme_diagram(readme: &str) -> Vec<DiagRow> {
+    let mut out = Vec::new();
+    for (idx, l) in readme.lines().enumerate() {
+        let mut parts = l.split_whitespace();
+        let (Some(a), Some(b), Some(c)) = (parts.next(), parts.next(), parts.next()) else {
+            continue;
+        };
+        let (Ok(offset), ok_size) = (a.parse::<u64>(), b.parse::<u64>().is_ok() || b == "len")
+        else {
+            continue;
+        };
+        if !ok_size || !c.chars().all(|ch| ch.is_ascii_alphanumeric() || ch == '_') {
+            continue;
+        }
+        out.push(DiagRow {
+            offset,
+            field: c.to_string(),
+            rest: parts.collect::<Vec<_>>().join(" "),
+            line: idx as u32 + 1,
+        });
+    }
+    out
+}
+
+/// Parse `N=name` pairs from a diagram row's annotation.
+fn eq_pairs(rest: &str) -> Vec<(u64, String)> {
+    let mut out = Vec::new();
+    for tok in rest.split_whitespace() {
+        if let Some((n, name)) = tok.split_once('=') {
+            if let Ok(v) = n.parse::<u64>() {
+                if !name.is_empty()
+                    && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                {
+                    out.push((v, name.to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse the Ops markdown table: `| \`qrd\` | 0 | ... |` → label → byte.
+fn readme_ops_table(readme: &str) -> Vec<(String, u64, u32)> {
+    let mut out = Vec::new();
+    for (idx, l) in readme.lines().enumerate() {
+        let t = l.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = t.trim_matches('|').split('|').map(str::trim).collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let name = cells[0].trim_matches('`');
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            continue;
+        }
+        if let Ok(byte) = cells[1].parse::<u64>() {
+            out.push((name.to_string(), byte, idx as u32 + 1));
+        }
+    }
+    out
+}
+
+/// Names of the `OFF_*` constants, in on-wire order, with the README
+/// diagram field each must match.
+const OFFSET_FIELDS: &[(&str, &str)] = &[
+    ("OFF_MAGIC", "magic"),
+    ("OFF_VERSION", "version"),
+    ("OFF_KIND", "kind"),
+    ("OFF_STATUS", "status"),
+    ("OFF_OP", "op"),
+    ("OFF_ID", "id"),
+    ("OFF_M", "m"),
+    ("OFF_LEN", "len"),
+];
+
+/// Run the full cross-check. `frame`/`key` pair a display label with
+/// lexed tokens; `readme` is raw text with its own label.
+pub fn check(
+    frame: (&str, &[Token]),
+    key: (&str, &[Token]),
+    readme: (&str, &str),
+) -> Vec<Finding> {
+    let (frame_label, frame_toks) = frame;
+    let (key_label, key_toks) = key;
+    let (readme_label, readme_text) = readme;
+    let mut out = Vec::new();
+
+    let fconsts = consts(frame_toks);
+    let ops = enum_maps(key_toks, "OpKind");
+    let kinds = enum_maps(frame_toks, "FrameKind");
+    let diagram = readme_diagram(readme_text);
+
+    // ---- OpKind internal consistency -------------------------------
+    for v in &ops.variants {
+        if !ops.all_elems.contains(v) {
+            out.push(finding(key_label, 1, format!("OpKind::{v} missing from OpKind::ALL")));
+        }
+        if !ops.as_u8.contains_key(v) {
+            out.push(finding(key_label, 1, format!("OpKind::{v} has no as_u8 arm")));
+        }
+        if !ops.labels.contains_key(v) {
+            out.push(finding(key_label, 1, format!("OpKind::{v} has no label arm")));
+        }
+        if !ops.from_u8.values().any(|n| n == v) {
+            out.push(finding(key_label, 1, format!("OpKind::{v} has no from_u8 arm")));
+        }
+    }
+    if let Some(n) = ops.all_len {
+        if n != ops.variants.len() as u64 {
+            out.push(finding(
+                key_label,
+                1,
+                format!(
+                    "OpKind::ALL declares {n} ops but the enum has {} variants",
+                    ops.variants.len()
+                ),
+            ));
+        }
+    }
+    for (v, n) in &ops.as_u8 {
+        match ops.from_u8.get(n) {
+            Some(back) if back == v => {}
+            _ => out.push(finding(
+                key_label,
+                1,
+                format!("OpKind::{v} as_u8 = {n} does not round-trip through from_u8"),
+            )),
+        }
+    }
+
+    // ---- FrameKind internal consistency ----------------------------
+    for (v, n) in &kinds.as_u8 {
+        match kinds.from_u8.get(n) {
+            Some(back) if back == v => {}
+            _ => out.push(finding(
+                frame_label,
+                1,
+                format!("FrameKind::{v} as_u8 = {n} does not round-trip through from_u8"),
+            )),
+        }
+    }
+    if kinds.from_u8.len() != kinds.as_u8.len() {
+        out.push(finding(
+            frame_label,
+            1,
+            format!(
+                "FrameKind from_u8 has {} arms but as_u8 has {}",
+                kinds.from_u8.len(),
+                kinds.as_u8.len()
+            ),
+        ));
+    }
+
+    // ---- frame.rs offsets vs README diagram ------------------------
+    let row = |field: &str| diagram.iter().find(|r| r.field == field);
+    for (cname, field) in OFFSET_FIELDS {
+        let c = fconsts.get(*cname);
+        let r = row(field);
+        match (c, r) {
+            (Some((cv, cl)), Some(dr)) => {
+                if *cv != dr.offset {
+                    out.push(finding(
+                        frame_label,
+                        *cl,
+                        format!(
+                            "{cname} = {cv} but the README diagram puts `{field}` at \
+                             offset {} ({readme_label}:{})",
+                            dr.offset, dr.line
+                        ),
+                    ));
+                }
+            }
+            (None, _) => out.push(finding(
+                frame_label,
+                1,
+                format!("missing header-offset constant {cname} (srclint cross-checks it)"),
+            )),
+            (_, None) => out.push(finding(
+                readme_label,
+                1,
+                format!("README header diagram has no `{field}` row"),
+            )),
+        }
+    }
+    if let (Some((hl, hline)), Some(prow)) = (fconsts.get("HEADER_LEN"), row("payload")) {
+        if *hl != prow.offset {
+            out.push(finding(
+                frame_label,
+                *hline,
+                format!(
+                    "HEADER_LEN = {hl} but the README diagram starts the payload at \
+                     offset {} ({readme_label}:{})",
+                    prow.offset, prow.line
+                ),
+            ));
+        }
+    }
+
+    // ---- README magic / version vs frame.rs constants --------------
+    if let (Some((magic, mline)), Some(mrow)) = (fconsts.get("MAGIC"), row("magic")) {
+        let readme_magic = mrow
+            .rest
+            .split_whitespace()
+            .find(|w| w.starts_with("0x"))
+            .and_then(num_value);
+        if readme_magic != Some(*magic) {
+            out.push(finding(
+                frame_label,
+                *mline,
+                format!(
+                    "MAGIC = {magic:#x} but the README diagram's magic row says \
+                     {readme_magic:?} ({readme_label}:{})",
+                    mrow.line
+                ),
+            ));
+        }
+    }
+    if let (Some((ver, vline)), Some(vrow)) = (fconsts.get("VERSION"), row("version")) {
+        let readme_ver = vrow.rest.split_whitespace().next().and_then(num_value);
+        if readme_ver != Some(*ver) {
+            out.push(finding(
+                frame_label,
+                *vline,
+                format!(
+                    "VERSION = {ver} but the README diagram's version row says \
+                     {readme_ver:?} ({readme_label}:{})",
+                    vrow.line
+                ),
+            ));
+        }
+        // The `(N still accepted …)` annotation is the compat floor.
+        if let Some((minv, mline)) = fconsts.get("MIN_VERSION") {
+            let readme_min = vrow
+                .rest
+                .split_whitespace()
+                .find_map(|w| w.strip_prefix('('))
+                .and_then(num_value);
+            if readme_min != Some(*minv) {
+                out.push(finding(
+                    frame_label,
+                    *mline,
+                    format!(
+                        "MIN_VERSION = {minv} but the README version row's compat \
+                         note says {readme_min:?} ({readme_label}:{})",
+                        vrow.line
+                    ),
+                ));
+            }
+        }
+    }
+
+    // ---- README kind list vs FrameKind -----------------------------
+    if let Some(krow) = row("kind") {
+        let pairs = eq_pairs(&krow.rest);
+        for (n, name) in &pairs {
+            match kinds.from_u8.get(n) {
+                Some(v) if v == name => {}
+                other => out.push(finding(
+                    readme_label,
+                    krow.line,
+                    format!(
+                        "README kind list says {n}={name} but FrameKind::from_u8({n}) \
+                         is {other:?}"
+                    ),
+                )),
+            }
+        }
+        if pairs.len() != kinds.from_u8.len() {
+            out.push(finding(
+                readme_label,
+                krow.line,
+                format!(
+                    "README kind list names {} kinds but FrameKind has {}",
+                    pairs.len(),
+                    kinds.from_u8.len()
+                ),
+            ));
+        }
+    }
+
+    // ---- README op list + Ops table vs OpKind ----------------------
+    let code_ops: BTreeMap<u64, String> = ops
+        .as_u8
+        .iter()
+        .filter_map(|(v, n)| ops.labels.get(v).map(|l| (*n, l.clone())))
+        .collect();
+    if let Some(orow) = row("op") {
+        let pairs = eq_pairs(&orow.rest);
+        for (n, label) in &pairs {
+            match code_ops.get(n) {
+                Some(l) if l == label => {}
+                other => out.push(finding(
+                    readme_label,
+                    orow.line,
+                    format!(
+                        "README op list says {n}={label} but OpKind discriminant {n} \
+                         labels as {other:?}"
+                    ),
+                )),
+            }
+        }
+        if pairs.len() != code_ops.len() {
+            out.push(finding(
+                readme_label,
+                orow.line,
+                format!(
+                    "README op list names {} ops but OpKind defines {} — update the \
+                     header diagram when adding an op",
+                    pairs.len(),
+                    code_ops.len()
+                ),
+            ));
+        }
+    }
+    let table = readme_ops_table(readme_text);
+    let table_ops: BTreeMap<&str, (u64, u32)> =
+        table.iter().map(|(n, b, l)| (n.as_str(), (*b, *l))).collect();
+    for (byte, label) in &code_ops {
+        match table_ops.get(label.as_str()) {
+            Some((b, _)) if b == byte => {}
+            Some((b, l)) => out.push(finding(
+                readme_label,
+                *l,
+                format!("README Ops table gives `{label}` byte {b}, code says {byte}"),
+            )),
+            None => out.push(finding(
+                readme_label,
+                1,
+                format!(
+                    "README Ops table has no `{label}` row — update it when adding an op"
+                ),
+            )),
+        }
+    }
+
+    // ---- frame validation hook -------------------------------------
+    let validates = frame_toks
+        .windows(4)
+        .any(|w| {
+            w[0].kind.is_ident("OpKind")
+                && w[1].kind.is_sym(b':')
+                && w[2].kind.is_sym(b':')
+                && w[3].kind.is_ident("from_u8")
+        });
+    if !validates {
+        out.push(finding(
+            frame_label,
+            1,
+            "frame.rs no longer validates the op byte via OpKind::from_u8 — requests \
+             with unknown ops would pass the decoder"
+                .to_string(),
+        ));
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    const KEY_OK: &str = r#"
+pub enum OpKind { Qrd, Solve }
+impl OpKind {
+    pub const ALL: [OpKind; 2] = [OpKind::Qrd, OpKind::Solve];
+    pub fn from_u8(b: u8) -> Option<OpKind> {
+        match b { 0 => Some(OpKind::Qrd), 1 => Some(OpKind::Solve), _ => None }
+    }
+    pub fn as_u8(self) -> u8 {
+        match self { OpKind::Qrd => 0, OpKind::Solve => 1 }
+    }
+    pub fn label(self) -> &'static str {
+        match self { OpKind::Qrd => "qrd", OpKind::Solve => "solve" }
+    }
+}
+"#;
+
+    const FRAME_OK: &str = r#"
+pub const MAGIC: u32 = 0xAB;
+pub const VERSION: u8 = 3;
+pub const HEADER_LEN: usize = 24;
+pub const OFF_MAGIC: usize = 0;
+pub const OFF_VERSION: usize = 4;
+pub const OFF_KIND: usize = 5;
+pub const OFF_STATUS: usize = 6;
+pub const OFF_OP: usize = 7;
+pub const OFF_ID: usize = 8;
+pub const OFF_M: usize = 16;
+pub const OFF_LEN: usize = 20;
+pub enum FrameKind { Request, Response }
+impl FrameKind {
+    fn from_u8(b: u8) -> Option<FrameKind> {
+        match b { 1 => Some(FrameKind::Request), 2 => Some(FrameKind::Response), _ => None }
+    }
+    fn as_u8(self) -> u8 {
+        match self { FrameKind::Request => 1, FrameKind::Response => 2 }
+    }
+}
+fn read(op: u8) { let _ = OpKind::from_u8(op); }
+"#;
+
+    const README_OK: &str = "\
+```
+offset  size  field
+ 0       4    magic     0xAB
+ 4       1    version   3  (2 still accepted on read)
+ 5       1    kind      1=Request 2=Response
+ 6       1    status    0=ok
+ 7       1    op        0=qrd 1=solve
+ 8       8    id        echoed
+16       4    m         dimension
+20       4    len       payload bytes
+24     len    payload   words
+```
+
+| op      | byte | request |
+|---------|------|---------|
+| `qrd`   | 0    | m*m     |
+| `solve` | 1    | m*m+m   |
+";
+
+    fn run(frame: &str, key: &str, readme: &str) -> Vec<Finding> {
+        let f = lex(frame);
+        let k = lex(key);
+        check(("frame.rs", &f), ("key.rs", &k), ("README.md", readme))
+    }
+
+    #[test]
+    fn consistent_triple_passes() {
+        let f = run(FRAME_OK, KEY_OK, README_OK);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn new_variant_without_readme_is_caught() {
+        let key = KEY_OK
+            .replace("Qrd, Solve }", "Qrd, Solve, Svd }")
+            .replace(
+                "ALL: [OpKind; 2] = [OpKind::Qrd, OpKind::Solve]",
+                "ALL: [OpKind; 3] = [OpKind::Qrd, OpKind::Solve, OpKind::Svd]",
+            )
+            .replace(
+                "1 => Some(OpKind::Solve),",
+                "1 => Some(OpKind::Solve), 2 => Some(OpKind::Svd),",
+            )
+            .replace("OpKind::Solve => 1 }", "OpKind::Solve => 1, OpKind::Svd => 2 }")
+            .replace(
+                "OpKind::Solve => \"solve\" }",
+                "OpKind::Solve => \"solve\", OpKind::Svd => \"svd\" }",
+            );
+        let f = run(FRAME_OK, &key, README_OK);
+        assert!(!f.is_empty(), "a new op with stale docs must fail the lint");
+    }
+
+    #[test]
+    fn drifted_offset_constant_is_caught() {
+        let frame = FRAME_OK.replace("OFF_M: usize = 16", "OFF_M: usize = 12");
+        let f = run(&frame, KEY_OK, README_OK);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("OFF_M"));
+    }
+
+    #[test]
+    fn missing_from_u8_arm_is_caught() {
+        let key = KEY_OK.replace("1 => Some(OpKind::Solve),", "");
+        let f = run(FRAME_OK, &key, README_OK);
+        assert!(f.iter().any(|x| x.message.contains("from_u8")), "{f:?}");
+    }
+}
