@@ -6,13 +6,13 @@
 //! them).
 
 use fp_givens::coordinator::{
-    BatchEngine, BatchPolicy, JobKey, NativeEngine, OpKind, PjrtEngine, QrdService, RestartPolicy,
-    RouterPolicy,
+    AutoscaleConfig, BatchEngine, BatchPolicy, JobKey, NativeEngine, OpKind, PjrtEngine, QrdService,
+    RestartPolicy, RouterPolicy,
 };
 use fp_givens::util::bench::{bench, black_box, merge_json, BenchResult};
 use fp_givens::util::rng::Rng;
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const ARTIFACT: &str = "artifacts/model.hlo.txt";
 
@@ -213,7 +213,10 @@ fn main() {
             RouterPolicy::KeyAffine => "affine",
         };
         let thr = BenchResult::from_wall(
-            &format!("router/{label} throughput x{} [skewed keys, workers=4, batch=64]", total as u64),
+            &format!(
+                "router/{label} throughput x{} [skewed keys, workers=4, batch=64]",
+                total as u64
+            ),
             total,
             best,
         );
@@ -223,8 +226,11 @@ fn main() {
             density,
             1.0,
         );
-        println!("    mean uniform-key batch {density:.2}, per-worker batches {:?}, stolen {}",
-            m.worker_batch_counts(), m.stolen_requests());
+        println!(
+            "    mean uniform-key batch {density:.2}, per-worker batches {:?}, stolen {}",
+            m.worker_batch_counts(),
+            m.stolen_requests()
+        );
         results.push(thr);
         results.push(dens);
         svc.shutdown();
@@ -236,8 +242,56 @@ fn main() {
         if densities[1] > densities[0] { "affine denser" } else { "AFFINE NOT DENSER" }
     );
 
+    // closed-loop autoscaler under the same pipelined burst: boot at
+    // the one-worker floor with a ceiling of four, let the control
+    // thread react to queue depth, and record both the throughput and
+    // the control loop's observable motion. CI greps for the
+    // `autoscale/` rows.
+    let per_client = 8192usize;
+    let total = (clients * per_client) as f64;
+    let factories: Vec<_> = (0..4)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let autoscale =
+        AutoscaleConfig { min_workers: 1, max_workers: 4, ..AutoscaleConfig::default() };
+    let svc = QrdService::start_autoscaled(
+        factories,
+        BatchPolicy { max_batch: 64, max_wait_us: 100 },
+        RestartPolicy::default(),
+        autoscale,
+        Duration::from_millis(5),
+    );
+    run_load(&svc, clients, 512);
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        best = best.min(run_load(&svc, clients, per_client));
+    }
+    let m = svc.metrics();
+    let thr = BenchResult::from_wall(
+        &format!("autoscale/burst throughput x{} [native, min=1, max=4, batch=64]", total as u64),
+        total,
+        best,
+    );
+    println!("{}", thr.report());
+    println!(
+        "    scale-ups {}, scale-downs {}, workers alive {} ({})",
+        m.scale_ups(),
+        m.scale_downs(),
+        m.workers_alive(),
+        if m.scale_ups() > 0 { "scaled up under burst" } else { "NEVER SCALED UP" }
+    );
+    results.push(thr);
+    results.push(BenchResult::from_wall(
+        "autoscale/scale-ups [native, min=1, max=4, batch=64]",
+        m.scale_ups() as f64,
+        best,
+    ));
+    svc.shutdown();
+
     match merge_json("BENCH_qrd.json", &results) {
-        Ok(()) => println!("\nmerged {} topology-scaling entries into BENCH_qrd.json", results.len()),
+        Ok(()) => {
+            println!("\nmerged {} topology-scaling entries into BENCH_qrd.json", results.len())
+        }
         Err(e) => eprintln!("\ncould not update BENCH_qrd.json: {e}"),
     }
 

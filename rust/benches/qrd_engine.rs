@@ -182,7 +182,8 @@ fn main() {
 
     // larger matrices
     let eng7 = QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
-    let m7: Vec<Vec<f64>> = (0..7).map(|_| (0..7).map(|_| rng.range(-1.0, 1.0)).collect()).collect();
+    let m7: Vec<Vec<f64>> =
+        (0..7).map(|_| (0..7).map(|_| rng.range(-1.0, 1.0)).collect()).collect();
     results.push(bench("qrd7 decompose [hub single]", 1.0, || {
         black_box(eng7.decompose(&m7));
     }));

@@ -107,8 +107,7 @@ impl EngineInst {
 pub fn run_mc(spec: EngineSpec, m: usize, r: u32, nmat: usize, seed: u64) -> McPoint {
     let inst = EngineInst::build(&spec);
     let total: f64 = par::par_sum(nmat, |i| {
-        let a =
-            MatrixGen::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).matrix(m, r);
+        let a = MatrixGen::new(seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)).matrix(m, r);
         inst.snr(&a, r)
     });
     McPoint { r, snr_db: total / nmat as f64 }

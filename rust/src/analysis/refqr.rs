@@ -9,7 +9,8 @@
 /// Returns (Q, R) as f32-valued f64 matrices.
 pub fn householder_qr_f32(a: &[Vec<f64>]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
     let m = a.len();
-    let mut r: Vec<Vec<f32>> = a.iter().map(|row| row.iter().map(|&x| x as f32).collect()).collect();
+    let mut r: Vec<Vec<f32>> =
+        a.iter().map(|row| row.iter().map(|&x| x as f32).collect()).collect();
     // Q accumulated as identity transformed by the reflectors
     let mut q: Vec<Vec<f32>> = (0..m)
         .map(|i| (0..m).map(|j| if i == j { 1.0f32 } else { 0.0 }).collect())
@@ -106,11 +107,7 @@ mod tests {
 
     #[test]
     fn r_upper_triangular() {
-        let a = vec![
-            vec![1.0, 2.0, 3.0],
-            vec![4.0, 5.0, 6.0],
-            vec![7.0, 8.0, 10.0],
-        ];
+        let a = vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0], vec![7.0, 8.0, 10.0]];
         let (_q, r) = householder_qr_f32(&a);
         for i in 0..3 {
             for j in 0..i {

@@ -134,7 +134,11 @@ mod tests {
     fn our_rotator_close_to_paper_v5_numbers() {
         let ours = our_rotator_perf();
         let paper = published::perf_hub_rotator_paper();
-        assert!((ours.fmax_mhz - paper.fmax_mhz).abs() / paper.fmax_mhz < 0.15, "{}", ours.fmax_mhz);
+        assert!(
+            (ours.fmax_mhz - paper.fmax_mhz).abs() / paper.fmax_mhz < 0.15,
+            "{}",
+            ours.fmax_mhz
+        );
         assert!((ours.latency_cycles - paper.latency_cycles).abs() <= 4.0);
         assert_eq!(ours.ii_at_e8, paper.ii_at_e8);
     }

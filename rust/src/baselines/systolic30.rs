@@ -119,10 +119,7 @@ mod tests {
         for &v in &[0.25f64, 1.0, 2.0, 9.0, 1e6, 3.7e-3] {
             let got = s.rsqrt(v);
             let want = 1.0 / v.sqrt();
-            assert!(
-                ((got - want) / want).abs() < 1e-4,
-                "rsqrt({v}) = {got}, want {want}"
-            );
+            assert!(((got - want) / want).abs() < 1e-4, "rsqrt({v}) = {got}, want {want}");
         }
     }
 

@@ -16,13 +16,7 @@ use crate::fp::{FpFormat, HubFp};
 ///   ILSB, appending zeros, so the internal word is exact,
 /// - the aligned shift needs no rounding logic: truncating a HUB word
 ///   *is* round-to-nearest.
-pub fn input_convert_hub(
-    fmt: FpFormat,
-    n: u32,
-    x: HubFp,
-    y: HubFp,
-    opts: HubInputOpts,
-) -> BlockFp {
+pub fn input_convert_hub(fmt: FpFormat, n: u32, x: HubFp, y: HubFp, opts: HubInputOpts) -> BlockFp {
     let m = fmt.mbits;
     assert!(n > m, "internal width n={n} must exceed significand m={m}");
     let k = n - m - 1; // extension field width (may be 0 when n == m+1)

@@ -21,10 +21,7 @@ pub fn output_convert_hub(
     mexp: i64,
     unbiased: bool,
 ) -> (HubFp, HubFp) {
-    (
-        one_coord(fmt, n, w, xfix, mexp, unbiased),
-        one_coord(fmt, n, w, yfix, mexp, unbiased),
-    )
+    (one_coord(fmt, n, w, xfix, mexp, unbiased), one_coord(fmt, n, w, yfix, mexp, unbiased))
 }
 
 fn one_coord(fmt: FpFormat, n: u32, w: u32, v: i64, mexp: i64, unbiased: bool) -> HubFp {

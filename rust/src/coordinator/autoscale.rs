@@ -1,0 +1,298 @@
+//! Autoscaling and admission-control policy — the *decisions*, kept
+//! pure and synchronous so they unit-test without threads or clocks.
+//!
+//! Two policies live here:
+//!
+//! - [`AutoscalePolicy`]: the closed control loop over worker capacity.
+//!   Each tick it sees a [`LoadSignal`] (alive workers, aggregate queue
+//!   depth, p99 latency) and answers [`ScaleDecision`]: spawn one
+//!   worker, retire one, or hold. Flap-resistance is structural, not
+//!   tuned: the scale-up thresholds are strictly above the scale-down
+//!   thresholds (a hysteresis band where the only answer is `Hold`),
+//!   and every resize starts a cool-down of whole ticks during which
+//!   the policy refuses to move again.
+//! - [`ShedPolicy`]: the admission gate. When aggregate depth or p99
+//!   crosses its bound the ingress paths (`submit_key`, the TCP
+//!   reader) shed *new* work with a first-class overload outcome
+//!   instead of queue-bloating; already-admitted work is never touched.
+//!
+//! The control thread that samples real queues and actually
+//! spawns/retires workers lives in `coordinator::service`; everything
+//! here is arithmetic.
+
+/// What the control loop samples once per tick.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSignal {
+    /// Worker slots currently alive.
+    pub alive: usize,
+    /// Requests queued across the alive shards (aggregate depth).
+    pub queued: usize,
+    /// p99 request latency in µs, if any samples exist yet.
+    pub p99_us: Option<f64>,
+}
+
+/// One tick's verdict from the autoscaler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Spawn one worker (capacity is behind demand).
+    Up,
+    /// Retire one worker (capacity is ahead of demand).
+    Down,
+    /// Do nothing (in the hysteresis band, cooling down, or pinned at
+    /// a bound).
+    Hold,
+}
+
+/// Autoscaler tuning. `Default` is deliberately conservative: scale up
+/// at 8 queued requests per worker or a 50 ms p99, scale down only
+/// when the pool is near-idle (≤ 1 queued per worker), and hold three
+/// ticks after any resize.
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscaleConfig {
+    /// Fewest workers the pool may shrink to (≥ 1).
+    pub min_workers: usize,
+    /// Most workers the pool may grow to.
+    pub max_workers: usize,
+    /// Scale up when `queued / alive` reaches this.
+    pub up_depth_per_worker: f64,
+    /// Scale down only when `queued / alive` is at or below this.
+    /// Must be strictly below `up_depth_per_worker` — the gap is the
+    /// hysteresis band.
+    pub down_depth_per_worker: f64,
+    /// Also scale up when p99 latency reaches this many µs (0 disables
+    /// the latency trigger).
+    pub up_p99_us: f64,
+    /// Ticks to refuse further resizes after one fires.
+    pub cooldown_ticks: u32,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 4,
+            up_depth_per_worker: 8.0,
+            down_depth_per_worker: 1.0,
+            up_p99_us: 50_000.0,
+            cooldown_ticks: 3,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Clamp the knobs into a well-formed policy: bounds ordered, at
+    /// least one worker, and the scale-down threshold strictly below
+    /// the scale-up threshold so the hysteresis band is never empty.
+    pub fn normalized(mut self) -> AutoscaleConfig {
+        self.min_workers = self.min_workers.max(1);
+        self.max_workers = self.max_workers.max(self.min_workers);
+        if self.up_depth_per_worker.is_nan() || self.up_depth_per_worker <= 0.0 {
+            self.up_depth_per_worker = 8.0;
+        }
+        if self.down_depth_per_worker.is_nan()
+            || self.down_depth_per_worker < 0.0
+            || self.down_depth_per_worker >= self.up_depth_per_worker
+        {
+            self.down_depth_per_worker = self.up_depth_per_worker / 4.0;
+        }
+        self
+    }
+}
+
+/// The stateful (cool-down-carrying) autoscale policy. Pure arithmetic:
+/// feed it one [`LoadSignal`] per tick, act on the answer.
+#[derive(Debug)]
+pub struct AutoscalePolicy {
+    cfg: AutoscaleConfig,
+    cooldown_left: u32,
+}
+
+impl AutoscalePolicy {
+    /// Policy over a normalized config (see
+    /// [`AutoscaleConfig::normalized`]).
+    pub fn new(cfg: AutoscaleConfig) -> AutoscalePolicy {
+        AutoscalePolicy { cfg: cfg.normalized(), cooldown_left: 0 }
+    }
+
+    /// The (normalized) config this policy runs.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// One control tick. At most one worker moves per call, every
+    /// resize arms the cool-down, and signals inside the hysteresis
+    /// band always hold — the three properties the no-flap test pins.
+    pub fn decide(&mut self, sig: LoadSignal) -> ScaleDecision {
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return ScaleDecision::Hold;
+        }
+        let alive = sig.alive.max(1);
+        let depth_per_worker = sig.queued as f64 / alive as f64;
+        let hot_p99 = self.cfg.up_p99_us > 0.0
+            && sig.p99_us.is_some_and(|p| p >= self.cfg.up_p99_us);
+        if (depth_per_worker >= self.cfg.up_depth_per_worker || hot_p99)
+            && sig.alive < self.cfg.max_workers
+        {
+            self.cooldown_left = self.cfg.cooldown_ticks;
+            return ScaleDecision::Up;
+        }
+        if depth_per_worker <= self.cfg.down_depth_per_worker
+            && !hot_p99
+            && sig.alive > self.cfg.min_workers
+        {
+            self.cooldown_left = self.cfg.cooldown_ticks;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Admission-control thresholds. A request is shed when the aggregate
+/// queue depth reaches `depth` or p99 reaches `p99_us`; the overload
+/// response carries `retry_after_ms` as its retry hint. `depth == 0`
+/// disables shedding entirely (the default — overload control is
+/// opt-in).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShedPolicy {
+    /// Aggregate queued-request bound; 0 disables the gate.
+    pub depth: usize,
+    /// p99 latency bound in µs; 0 disables the latency trigger.
+    pub p99_us: f64,
+    /// Retry-after hint stamped into overload responses, ms.
+    pub retry_after_ms: u64,
+}
+
+impl ShedPolicy {
+    /// True when this policy can ever shed.
+    pub fn enabled(&self) -> bool {
+        self.depth > 0
+    }
+
+    /// Should a new request be shed given the current load?
+    pub fn should_shed(&self, queued: usize, p99_us: Option<f64>) -> bool {
+        if !self.enabled() {
+            return false;
+        }
+        queued >= self.depth || (self.p99_us > 0.0 && p99_us.is_some_and(|p| p >= self.p99_us))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sig(alive: usize, queued: usize, p99_us: Option<f64>) -> LoadSignal {
+        LoadSignal { alive, queued, p99_us }
+    }
+
+    fn policy(min: usize, max: usize) -> AutoscalePolicy {
+        AutoscalePolicy::new(AutoscaleConfig {
+            min_workers: min,
+            max_workers: max,
+            up_depth_per_worker: 8.0,
+            down_depth_per_worker: 1.0,
+            up_p99_us: 0.0,
+            cooldown_ticks: 2,
+        })
+    }
+
+    #[test]
+    fn scales_up_on_depth_and_respects_the_max() {
+        let mut p = policy(1, 3);
+        assert_eq!(p.decide(sig(1, 8, None)), ScaleDecision::Up);
+        // cool-down: the next two ticks hold even under pressure
+        assert_eq!(p.decide(sig(2, 64, None)), ScaleDecision::Hold);
+        assert_eq!(p.decide(sig(2, 64, None)), ScaleDecision::Hold);
+        assert_eq!(p.decide(sig(2, 64, None)), ScaleDecision::Up);
+        // pinned at max: pressure no longer moves it
+        for _ in 0..4 {
+            p.decide(sig(3, 0, None)); // drain cooldown
+        }
+        assert_eq!(p.decide(sig(3, 640, None)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn scales_down_when_idle_and_respects_the_min() {
+        let mut p = policy(1, 4);
+        assert_eq!(p.decide(sig(3, 0, None)), ScaleDecision::Down);
+        assert_eq!(p.decide(sig(2, 0, None)), ScaleDecision::Hold, "cooling");
+        assert_eq!(p.decide(sig(2, 0, None)), ScaleDecision::Hold, "cooling");
+        assert_eq!(p.decide(sig(2, 0, None)), ScaleDecision::Down);
+        for _ in 0..2 {
+            assert_eq!(p.decide(sig(1, 0, None)), ScaleDecision::Hold);
+        }
+        // pinned at min: idleness no longer shrinks it
+        assert_eq!(p.decide(sig(1, 0, None)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn hysteresis_band_always_holds() {
+        // any steady signal strictly between the thresholds must hold
+        // forever — the structural no-flap property
+        let mut p = policy(1, 4);
+        for queued_per_worker in [2usize, 4, 7] {
+            for _ in 0..50 {
+                assert_eq!(
+                    p.decide(sig(2, 2 * queued_per_worker, None)),
+                    ScaleDecision::Hold,
+                    "steady load of {queued_per_worker}/worker must never resize"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn p99_trigger_scales_up_and_blocks_scale_down() {
+        let mut p = AutoscalePolicy::new(AutoscaleConfig {
+            min_workers: 1,
+            max_workers: 4,
+            up_depth_per_worker: 8.0,
+            down_depth_per_worker: 1.0,
+            up_p99_us: 10_000.0,
+            cooldown_ticks: 0,
+        });
+        // empty queues but a hot p99: grow, don't shrink
+        assert_eq!(p.decide(sig(2, 0, Some(20_000.0))), ScaleDecision::Up);
+        assert_eq!(p.decide(sig(3, 0, Some(20_000.0))), ScaleDecision::Up);
+        assert_eq!(p.decide(sig(4, 0, Some(20_000.0))), ScaleDecision::Hold);
+        // cool p99 and empty queues: shrink again
+        assert_eq!(p.decide(sig(4, 0, Some(100.0))), ScaleDecision::Down);
+        // no samples at all never trips the latency trigger
+        assert_eq!(p.decide(sig(1, 0, None)), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn normalization_repairs_inverted_thresholds() {
+        let cfg = AutoscaleConfig {
+            min_workers: 0,
+            max_workers: 0,
+            up_depth_per_worker: 4.0,
+            down_depth_per_worker: 9.0, // inverted: would flap every tick
+            up_p99_us: 0.0,
+            cooldown_ticks: 0,
+        }
+        .normalized();
+        assert_eq!(cfg.min_workers, 1);
+        assert_eq!(cfg.max_workers, 1);
+        assert!(cfg.down_depth_per_worker < cfg.up_depth_per_worker);
+    }
+
+    #[test]
+    fn shed_policy_gates_on_depth_and_p99() {
+        let off = ShedPolicy::default();
+        assert!(!off.enabled());
+        assert!(!off.should_shed(usize::MAX, Some(f64::MAX)));
+        let p = ShedPolicy { depth: 64, p99_us: 5_000.0, retry_after_ms: 25 };
+        assert!(p.enabled());
+        assert!(!p.should_shed(63, None));
+        assert!(p.should_shed(64, None));
+        assert!(!p.should_shed(0, Some(4_999.0)));
+        assert!(p.should_shed(0, Some(5_000.0)));
+        assert!(!p.should_shed(0, None), "no latency samples, shallow queue");
+        // depth-only policy ignores p99 entirely
+        let d = ShedPolicy { depth: 8, p99_us: 0.0, retry_after_ms: 10 };
+        assert!(!d.should_shed(7, Some(f64::MAX / 2.0)));
+        assert!(d.should_shed(8, None));
+    }
+}

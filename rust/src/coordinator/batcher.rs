@@ -12,7 +12,9 @@
 
 use std::collections::BTreeMap;
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy knobs.
@@ -105,6 +107,12 @@ pub struct KeyedBatcher<T, K = usize> {
     /// own bound re-applies backpressure to submitters (bins + channel
     /// together stay bounded).
     stash_bound: usize,
+    /// Optional shared queue-depth gauge. Submitters increment it as
+    /// they send into the channel; the batcher decrements it as items
+    /// leave its custody (batch emission or drain), so the gauge counts
+    /// channel + bins exactly — the admission gate and autoscaler read
+    /// it without taking the batcher lock.
+    depth: Option<Arc<AtomicUsize>>,
     /// The policy in force.
     pub policy: BatchPolicy,
 }
@@ -115,7 +123,16 @@ impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
     pub fn new(rx: Receiver<T>, key: fn(&T) -> K, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         let stash_bound = policy.max_batch.max(1) * 4;
-        KeyedBatcher { rx, key, arrival: None, bins: BTreeMap::new(), seq: 0, stash_bound, policy }
+        KeyedBatcher {
+            rx,
+            key,
+            arrival: None,
+            bins: BTreeMap::new(),
+            seq: 0,
+            stash_bound,
+            depth: None,
+            policy,
+        }
     }
 
     /// Anchor batching deadlines at each item's own arrival timestamp
@@ -126,6 +143,16 @@ impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
     /// channel arrival.
     pub fn with_arrival(mut self, arrival: fn(&T) -> Instant) -> Self {
         self.arrival = Some(arrival);
+        self
+    }
+
+    /// Share a queue-depth gauge: callers increment it per item sent
+    /// into the channel, the batcher decrements it per item emitted
+    /// (batches and drains), so `gauge == channel + bins` holds at
+    /// every emission boundary. The service wires this to the shared
+    /// pool's depth counter for lock-free admission-control reads.
+    pub fn with_depth_gauge(mut self, depth: Arc<AtomicUsize>) -> Self {
+        self.depth = Some(depth);
         self
     }
 
@@ -228,6 +255,9 @@ impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
                 }
             }
         }
+        if let Some(d) = &self.depth {
+            d.fetch_sub(batch.len(), Ordering::Relaxed);
+        }
         Some((k, batch))
     }
 
@@ -242,6 +272,9 @@ impl<T, K: Copy + Ord> KeyedBatcher<T, K> {
         let mut all: Vec<(u64, Instant, T)> =
             self.bins.iter_mut().flat_map(|(_, q)| q.drain(..)).collect();
         all.sort_by_key(|(s, _, _)| *s);
+        if let Some(d) = &self.depth {
+            d.fetch_sub(all.len(), Ordering::Relaxed);
+        }
         all.into_iter().map(|(_, _, t)| t).collect()
     }
 }
@@ -438,6 +471,33 @@ mod tests {
         // wait a second one (stash-anchored code would block ~200 ms)
         assert!(waited < w / 2, "expired-on-arrival item waited {waited:?}");
         drop(tx);
+    }
+
+    #[test]
+    fn depth_gauge_tracks_channel_and_bins_to_zero() {
+        // submitter increments per send; the batcher must decrement per
+        // emitted item whether it leaves via a batch (including items
+        // that sat stashed in a foreign bin first) or via drain
+        let (tx, rx) = channel();
+        let depth = Arc::new(AtomicUsize::new(0));
+        for t in [201, 301, 202, 302, 401] {
+            depth.fetch_add(1, Ordering::Relaxed);
+            tx.send(t).unwrap();
+        }
+        drop(tx);
+        let mut b =
+            KeyedBatcher::new(rx, kb_key, BatchPolicy { max_batch: 8, max_wait_us: 500_000 })
+                .with_depth_gauge(depth.clone());
+        // forming the key-2 batch stashes 301, 302, 401 into bins: the
+        // gauge only drops by the two items actually emitted
+        let (k, batch) = b.next_batch_with(|_| usize::MAX).unwrap();
+        assert_eq!((k, batch.len()), (2, 2));
+        assert_eq!(depth.load(Ordering::Relaxed), 3);
+        // drain sweeps the stashed remainder and zeroes the gauge
+        assert_eq!(b.drain().len(), 3);
+        assert_eq!(depth.load(Ordering::Relaxed), 0);
+        assert!(b.next_batch_with(|_| usize::MAX).is_none());
+        assert_eq!(depth.load(Ordering::Relaxed), 0, "empty emissions leave the gauge alone");
     }
 
     #[test]

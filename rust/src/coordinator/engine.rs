@@ -35,6 +35,22 @@ pub trait BatchEngine {
     fn name(&self) -> String;
 }
 
+// a boxed engine is an engine (lets wrappers like `FaultEngine` layer
+// over an already-erased `Box<dyn BatchEngine>` from a factory)
+impl BatchEngine for Box<dyn BatchEngine> {
+    fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        (**self).run(key, jobs)
+    }
+
+    fn preferred_batch(&self, key: JobKey) -> usize {
+        (**self).preferred_batch(key)
+    }
+
+    fn name(&self) -> String {
+        (**self).name()
+    }
+}
+
 /// Bit-accurate native Rust engine (the reference implementation —
 /// byte-for-byte identical to the PJRT artifact's output on 4×4).
 pub struct NativeEngine {
@@ -194,8 +210,7 @@ impl NativeEngine {
         };
         let mut rows: Vec<Vec<Val>> = (0..m)
             .map(|i| {
-                let mut row: Vec<Val> =
-                    (0..m).map(|j| mk(a[i * m + j] as u64)).collect();
+                let mut row: Vec<Val> = (0..m).map(|j| mk(a[i * m + j] as u64)).collect();
                 row.extend((0..m).map(|j| {
                     if i == j {
                         self.eng.rot.one()
@@ -321,12 +336,9 @@ impl NativeEngine {
         jobs.iter()
             .map(|job| {
                 let a: Vec<Vec<f64>> = (0..m)
-                    .map(|i| {
-                        (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect()
-                    })
+                    .map(|i| (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect())
                     .collect();
-                let b: Vec<f64> =
-                    job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
+                let b: Vec<f64> = job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
                 self.eng.least_squares(&a, &b).iter().map(|&x| (x as f32).to_bits()).collect()
             })
             .collect()
@@ -345,8 +357,7 @@ impl NativeEngine {
                 let rots: Vec<(f32, f32)> = (0..k)
                     .map(|i| (f32::from_bits(job[2 * i]), f32::from_bits(job[2 * i + 1])))
                     .collect();
-                let mut col: Vec<f32> =
-                    job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
+                let mut col: Vec<f32> = job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
                 let (cs, sn) = append_column(&rots, &mut col);
                 let mut out: Vec<u32> = col.iter().map(|v| v.to_bits()).collect();
                 out.push(cs.to_bits());
@@ -510,10 +521,7 @@ impl BatchEngine for PjrtEngine {
             .rt
             .execute_padded(&flat, mats.len())
             .map_err(|e| format!("PJRT execution failed: {e}"))?;
-        Ok(out
-            .chunks_exact(2 * words)
-            .map(|c| c.iter().map(|v| v.to_bits()).collect())
-            .collect())
+        Ok(out.chunks_exact(2 * words).map(|c| c.iter().map(|v| v.to_bits()).collect()).collect())
     }
 
     fn preferred_batch(&self, key: JobKey) -> usize {
@@ -531,6 +539,118 @@ impl BatchEngine for PjrtEngine {
     }
 }
 
+/// Deterministic fault schedule for [`FaultEngine`]: each class fires
+/// on batches whose seeded hash lands on a multiple of its `*_every`
+/// knob (`0` disables that class). The schedule is a pure function of
+/// `(seed, batch index)` — two engines with the same plan fault on the
+/// same batch indices, so supervisor/autoscaler tests and the serve
+/// `--chaos` smoke replay identical fault sequences run after run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultPlan {
+    /// Seed for the per-batch hash (same seed ⇒ same schedule).
+    pub seed: u64,
+    /// Panic on ~1/N of batches (exercises supervised respawn and the
+    /// crash-loop backoff); `0` = never.
+    pub panic_every: u64,
+    /// Inject a recoverable `Err` on ~1/N of batches (the batch is
+    /// answered with error responses, the worker survives); `0` = never.
+    pub error_every: u64,
+    /// Stall ~1/N of batches by `delay_ms` before executing (drives
+    /// queue depth and p99 for the autoscaler/shed paths); `0` = never.
+    pub delay_every: u64,
+    /// Stall length for the latency class, milliseconds.
+    pub delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// The serve-side `--chaos` preset: frequent stalls, occasional
+    /// recoverable errors, rare panics — enough to exercise respawn
+    /// backoff and the autoscaler without reliably exhausting a slot's
+    /// restart budget inside one smoke run.
+    pub fn chaos(seed: u64) -> FaultPlan {
+        FaultPlan { seed, panic_every: 64, error_every: 16, delay_every: 8, delay_ms: 5 }
+    }
+}
+
+/// splitmix64 finalizer — the per-batch dice for [`FaultPlan`].
+fn fault_mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fault-injecting wrapper over any [`BatchEngine`]: panics, recoverable
+/// errors and latency stalls on a deterministic per-batch schedule (see
+/// [`FaultPlan`]). This is the server-side half of the chaos harness —
+/// `repro loadgen --chaos` injects transport faults from the client
+/// edge, `repro serve --chaos` wraps every worker's engine in one of
+/// these so the supervisor (respawn + backoff), the autoscaler and the
+/// request-conservation identity are exercised under backend failure
+/// too. Batch indices are assigned by a shared atomic counter, so a
+/// multi-worker pool draws from one global schedule.
+pub struct FaultEngine<E> {
+    inner: E,
+    plan: FaultPlan,
+    calls: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl<E> FaultEngine<E> {
+    /// Wrap `inner` with a private batch counter.
+    pub fn new(inner: E, plan: FaultPlan) -> Self {
+        FaultEngine { inner, plan, calls: Default::default() }
+    }
+
+    /// Wrap `inner` drawing batch indices from a shared counter — give
+    /// every engine in a pool a clone of one counter and the plan
+    /// schedules faults across the pool globally.
+    pub fn with_counter(
+        inner: E,
+        plan: FaultPlan,
+        calls: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    ) -> Self {
+        FaultEngine { inner, plan, calls }
+    }
+
+    /// Batches seen so far (across all engines sharing the counter).
+    pub fn calls(&self) -> u64 {
+        self.calls.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<E: BatchEngine> BatchEngine for FaultEngine<E> {
+    fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+        let n = self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let h = fault_mix(self.plan.seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if self.plan.panic_every > 0 && h % self.plan.panic_every == 0 {
+            panic!("fault injection: scheduled panic at batch {n}");
+        }
+        if self.plan.error_every > 0 && (h >> 8) % self.plan.error_every == 0 {
+            return Err(format!("fault injection: scheduled error at batch {n}"));
+        }
+        if self.plan.delay_every > 0 && (h >> 16) % self.plan.delay_every == 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.plan.delay_ms));
+        }
+        self.inner.run(key, jobs)
+    }
+
+    fn preferred_batch(&self, key: JobKey) -> usize {
+        self.inner.preferred_batch(key)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "fault(seed {}, panic 1/{}, error 1/{}, delay 1/{}×{}ms) over {}",
+            self.plan.seed,
+            self.plan.panic_every,
+            self.plan.error_every,
+            self.plan.delay_every,
+            self.plan.delay_ms,
+            self.inner.name()
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -542,8 +662,7 @@ mod tests {
     #[test]
     fn native_engine_is_deterministic() {
         let eng = NativeEngine::flagship();
-        let a: [u32; 16] =
-            std::array::from_fn(|i| (1.0f32 + i as f32 * 0.25).to_bits());
+        let a: [u32; 16] = std::array::from_fn(|i| (1.0f32 + i as f32 * 0.25).to_bits());
         assert_eq!(eng.qrd_bits(&a), eng.qrd_bits(&a));
     }
 
@@ -586,8 +705,7 @@ mod tests {
         let mut rng = crate::util::rng::Rng::new(321);
         for _ in 0..100 {
             let s = 2f32.powf(rng.range(-6.0, 6.0) as f32);
-            let a: [u32; 16] =
-                std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits());
+            let a: [u32; 16] = std::array::from_fn(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits());
             assert_eq!(eng.qrd_bits(&a), eng.qrd_bits_reference(&a));
         }
     }
@@ -672,8 +790,7 @@ mod tests {
                 let a: Vec<Vec<f64>> = (0..m)
                     .map(|i| (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect())
                     .collect();
-                let b: Vec<f64> =
-                    job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
+                let b: Vec<f64> = job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
                 let want: Vec<u32> =
                     eng.eng.least_squares(&a, &b).iter().map(|&v| (v as f32).to_bits()).collect();
                 assert_eq!(x, &want, "m={m}");
@@ -719,8 +836,7 @@ mod tests {
                 let rots: Vec<(f32, f32)> = (0..k)
                     .map(|i| (f32::from_bits(job[2 * i]), f32::from_bits(job[2 * i + 1])))
                     .collect();
-                let mut col: Vec<f32> =
-                    job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
+                let mut col: Vec<f32> = job[2 * k..].iter().map(|&w| f32::from_bits(w)).collect();
                 let (cs, sn) = append_column(&rots, &mut col);
                 let mut want: Vec<u32> = col.iter().map(|v| v.to_bits()).collect();
                 want.push(cs.to_bits());
@@ -824,5 +940,76 @@ mod tests {
                 assert_eq!(eng.qrd_bits_m(m, &a), want, "m={m} panel={panel}");
             }
         }
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_and_seed_sensitive() {
+        // same plan ⇒ identical fault indices; different seed ⇒ a
+        // different (but still reproducible) schedule
+        let plan = FaultPlan { seed: 42, error_every: 3, ..FaultPlan::default() };
+        let key = JobKey::qrd(4);
+        let job = vec![vec![0u32; 16]];
+        let schedule = |plan: FaultPlan| -> Vec<bool> {
+            let eng = FaultEngine::new(NativeEngine::flagship(), plan);
+            (0..64).map(|_| eng.run(key, &job).is_err()).collect()
+        };
+        let a = schedule(plan);
+        assert_eq!(a, schedule(plan), "same seed must replay the same faults");
+        assert!(a.iter().any(|&e| e), "1/3 error rate over 64 batches must fire");
+        assert!(a.iter().any(|&e| !e), "…and must not fire on every batch");
+        assert_ne!(a, schedule(FaultPlan { seed: 43, ..plan }), "seed changes the schedule");
+    }
+
+    #[test]
+    fn fault_classes_panic_error_and_delay_fire_as_configured() {
+        let key = JobKey::qrd(4);
+        let job = vec![vec![0u32; 16]];
+        // panic_every = 1: every batch panics (the supervisor's diet)
+        let eng = FaultEngine::new(
+            NativeEngine::flagship(),
+            FaultPlan { panic_every: 1, ..FaultPlan::default() },
+        );
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| eng.run(key, &job)));
+        assert!(r.is_err(), "scheduled panic must unwind");
+        // error_every = 1: every batch errs recoverably, naming itself
+        let eng = FaultEngine::new(
+            NativeEngine::flagship(),
+            FaultPlan { error_every: 1, ..FaultPlan::default() },
+        );
+        let err = eng.run(key, &job).expect_err("scheduled error");
+        assert!(err.contains("fault injection"), "{err}");
+        // delay_every = 1: every batch stalls, then answers correctly
+        let eng = FaultEngine::new(
+            NativeEngine::flagship(),
+            FaultPlan { delay_every: 1, delay_ms: 30, ..FaultPlan::default() },
+        );
+        let t0 = std::time::Instant::now();
+        let got = eng.run(key, &job).expect("delayed batch still executes");
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(30));
+        assert_eq!(got, NativeEngine::flagship().run(key, &job).unwrap());
+    }
+
+    #[test]
+    fn disabled_fault_plan_is_a_transparent_wrapper() {
+        let eng = FaultEngine::new(NativeEngine::flagship(), FaultPlan::default());
+        let key = JobKey::qrd(4);
+        let mats: Vec<Vec<u32>> =
+            (0..8).map(|i| (0..16).map(|j| ((i * 16 + j) as f32).to_bits()).collect()).collect();
+        assert_eq!(eng.run(key, &mats).unwrap(), NativeEngine::flagship().run(key, &mats).unwrap());
+        assert_eq!(eng.preferred_batch(key), usize::MAX);
+        assert!(eng.name().contains("native"), "{}", eng.name());
+        assert_eq!(eng.calls(), 1);
+        // a shared counter advances the schedule across engine clones
+        let calls = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let a = FaultEngine::with_counter(
+            NativeEngine::flagship(),
+            FaultPlan::default(),
+            calls.clone(),
+        );
+        let b = FaultEngine::with_counter(NativeEngine::flagship(), FaultPlan::default(), calls);
+        a.run(key, &mats).unwrap();
+        b.run(key, &mats).unwrap();
+        assert_eq!(a.calls(), 2);
+        assert_eq!(b.calls(), 2);
     }
 }

@@ -10,7 +10,7 @@
 //! 0       4     magic      0x3244_5251 ("QRD2" as bytes on the wire)
 //! 4       1     version    3 (v2 frames are still accepted: op = 0)
 //! 5       1     kind       1 req | 2 resp | 3 stats | 4 stats-resp | 5 shutdown
-//! 6       1     status     responses: 0 ok | 1 error | 2 deadline-timeout
+//! 6       1     status     responses: 0 ok | 1 error | 2 deadline-timeout | 3 overload
 //! 7       1     op         0 qrd | 1 solve | 2 append-qr (v2: reserved 0)
 //! 8       8     request id u64, echoed verbatim in the response
 //! 16      4     m          job dimension (0 for control frames)
@@ -90,6 +90,11 @@ pub const STATUS_ERROR: u8 = 1;
 /// Response status: the request's arrival-stamped deadline expired
 /// before a result was available; payload is the reason.
 pub const STATUS_DEADLINE: u8 = 2;
+/// Response status: the server shed the request at admission because it
+/// is overloaded; the payload is a reason that carries a retry-after
+/// hint readable back via [`Frame::retry_after_ms`]. The request was
+/// never queued — retrying after the hint is always safe.
+pub const STATUS_OVERLOAD: u8 = 3;
 
 /// What a frame is (header byte 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -195,6 +200,33 @@ impl Frame {
             payload: reason.as_bytes().to_vec(),
             words: None,
         }
+    }
+
+    /// An overload (shed-at-admission) response. The reason text doubles
+    /// as the machine-readable retry-after hint so the frame layout is
+    /// unchanged: every non-ok status carries a UTF-8 reason payload.
+    pub fn response_overload(id: u64, m: u32, retry_after_ms: u64) -> Frame {
+        Frame::response_error(
+            id,
+            m,
+            STATUS_OVERLOAD,
+            &format!("overloaded; retry in ~{retry_after_ms} ms"),
+        )
+    }
+
+    /// The retry-after hint (milliseconds) carried by an overload
+    /// response; `None` for every other status or an unparseable reason.
+    pub fn retry_after_ms(&self) -> Option<u64> {
+        if self.status != STATUS_OVERLOAD {
+            return None;
+        }
+        let text = self.text();
+        let digits: String = text
+            .chars()
+            .skip_while(|c| !c.is_ascii_digit())
+            .take_while(|c| c.is_ascii_digit())
+            .collect();
+        digits.parse().ok()
     }
 
     /// A metrics-snapshot request.
@@ -640,6 +672,7 @@ mod tests {
             Frame::response_ok(8, 4, &[7u32; 32]).with_op(1),
             Frame::response_error(3, 5, STATUS_ERROR, "boom"),
             Frame::response_error(4, 5, STATUS_DEADLINE, "deadline exceeded"),
+            Frame::response_overload(9, 4, 25),
             Frame::stats_request(5),
             Frame::stats_response(6, vec![1, 2, 3]),
             Frame::shutdown(7),
@@ -663,6 +696,22 @@ mod tests {
         }
         let err = Frame::response_error(3, 5, STATUS_ERROR, "boom");
         assert_eq!(err.text(), "boom");
+    }
+
+    #[test]
+    fn overload_responses_carry_a_parseable_retry_hint() {
+        let f = Frame::response_overload(11, 6, 40);
+        assert_eq!(f.status, STATUS_OVERLOAD);
+        assert_eq!(f.retry_after_ms(), Some(40));
+        let back = match decode(&f.encode()) {
+            Ok(ReadOutcome::Frame(b)) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.retry_after_ms(), Some(40), "hint survives the wire");
+        // the hint is status-gated: an error response with digits in its
+        // reason must not masquerade as a retry hint
+        let err = Frame::response_error(1, 2, STATUS_ERROR, "engine 3 failed");
+        assert_eq!(err.retry_after_ms(), None);
     }
 
     #[test]

@@ -8,20 +8,29 @@
 //! client-side ledger keyed by [`JobKey`]; at the end the run fetches
 //! the server's [`super::net::StatsSnapshot`] over the wire and
 //! **reconciles**: the socket-boundary identity must hold exactly
-//! (accepted = responded + deadline_timeouts + peer_vanished, per
-//! `JobKey`), `frames_malformed` must equal the number of
+//! (accepted = responded + deadline_timeouts + peer_vanished + shed,
+//! per `JobKey`), `frames_malformed` must equal the number of
 //! malformed-traffic connections injected, every connection must be
 //! closed, and reliable (clean/half-close) connections must have
 //! received exactly one response per request — with the response frame
 //! echoing its request's op byte. Any unaccounted request fails the
 //! run.
 //!
+//! With `--burst` the well-behaved arm goes **open-loop**: a writer
+//! streams every request without waiting while this thread tallies the
+//! response statuses, so the send rate is decoupled from the response
+//! rate and an overloaded server must answer with explicit overload
+//! frames (carrying a retry-after hint) rather than hanging or
+//! dropping the connection. Overload frames read back are kept per key
+//! and reconciled against the server's per-key `shed` column — exactly
+//! when chaos is off, within the disconnect-widened band otherwise.
+//!
 //! Fault classes are deterministic per connection index (seeded), so a
 //! run is reproducible. The clean arm doubles as a correctness probe:
 //! a sample of its responses is checked bit-exact against the
 //! reference path for its op.
 
-use super::frame::{read_frame, Frame, FrameKind, ReadOutcome, STATUS_OK};
+use super::frame::{read_frame, Frame, FrameKind, ReadOutcome, STATUS_OK, STATUS_OVERLOAD};
 use super::key::{JobKey, OpKind};
 use super::net::NetClient;
 use super::{BatchEngine, NativeEngine};
@@ -53,6 +62,9 @@ pub struct LoadgenConfig {
     pub ops: Vec<OpKind>,
     /// Enable the five fault classes (off = every connection clean).
     pub chaos: bool,
+    /// Open-loop burst mode: the well-behaved arm streams requests
+    /// without waiting for responses (overload probe).
+    pub burst: bool,
     /// Seed for the deterministic per-connection behavior.
     pub seed: u64,
     /// Order the server to shut down after a passing reconciliation.
@@ -72,6 +84,7 @@ impl Default for LoadgenConfig {
             max_m: 8,
             ops: vec![OpKind::Qrd],
             chaos: false,
+            burst: false,
             seed: 42,
             shutdown: false,
             bench_out: None,
@@ -94,10 +107,14 @@ enum Class {
     Garbage,
     /// Send a partial frame, then stall with the socket open.
     SlowLoris,
+    /// Open-loop (`--burst`): stream every request without waiting,
+    /// tally response statuses — sheds must be explicit frames.
+    Burst,
 }
 
-const CLASSES: [Class; 6] = [
+const CLASSES: [Class; 7] = [
     Class::Clean,
+    Class::Burst,
     Class::HalfClose,
     Class::Disconnect,
     Class::Truncated,
@@ -109,6 +126,7 @@ impl Class {
     fn label(self) -> &'static str {
         match self {
             Class::Clean => "clean",
+            Class::Burst => "burst",
             Class::HalfClose => "half-close",
             Class::Disconnect => "disconnect",
             Class::Truncated => "truncated",
@@ -121,22 +139,25 @@ impl Class {
     fn index(self) -> usize {
         match self {
             Class::Clean => 0,
-            Class::HalfClose => 1,
-            Class::Disconnect => 2,
-            Class::Truncated => 3,
-            Class::Garbage => 4,
-            Class::SlowLoris => 5,
+            Class::Burst => 1,
+            Class::HalfClose => 2,
+            Class::Disconnect => 3,
+            Class::Truncated => 4,
+            Class::Garbage => 5,
+            Class::SlowLoris => 6,
         }
     }
 
-    /// Deterministic class mix: half the connections stay clean, the
-    /// rest spread across the fault classes.
-    fn pick(rng: &mut Rng, chaos: bool) -> Class {
-        if !chaos {
-            return Class::Clean;
+    /// Deterministic class mix: half the connections stay well-behaved
+    /// (clean closed-loop, or open-loop with `--burst`), the rest
+    /// spread across the fault classes.
+    fn pick(rng: &mut Rng, cfg: &LoadgenConfig) -> Class {
+        let good = if cfg.burst { Class::Burst } else { Class::Clean };
+        if !cfg.chaos {
+            return good;
         }
         match rng.below(100) {
-            0..=49 => Class::Clean,
+            0..=49 => good,
             50..=64 => Class::HalfClose,
             65..=79 => Class::Disconnect,
             80..=86 => Class::Truncated,
@@ -155,6 +176,8 @@ struct ConnLedger {
     received: u64,
     /// Requests written, by `JobKey`.
     sent_per_key: BTreeMap<JobKey, u64>,
+    /// Overload (shed) frames read back, by `JobKey`.
+    shed_per_key: BTreeMap<JobKey, u64>,
     /// Round-trip seconds for clean-connection responses.
     latencies: Vec<f64>,
     /// Contract breaches observed client-side.
@@ -171,6 +194,7 @@ impl ConnLedger {
             sent: 0,
             received: 0,
             sent_per_key: BTreeMap::new(),
+            shed_per_key: BTreeMap::new(),
             latencies: Vec::new(),
             violations: Vec::new(),
             injected: false,
@@ -292,7 +316,7 @@ fn run_reliable(
             Ok(Some(f)) if f.kind == FrameKind::Response => {
                 led.received += 1;
                 if f.id != id {
-                    led.violations.push(format!("response {} arrived out of order (want {id})", f.id));
+                    led.violations.push(format!("response {} out of order (want {id})", f.id));
                     return;
                 }
                 if !half_close {
@@ -304,6 +328,12 @@ fn run_reliable(
                         f.op,
                         keys[i].label()
                     ));
+                }
+                if f.status == STATUS_OVERLOAD {
+                    if f.retry_after_ms().is_none() {
+                        led.violations.push(format!("overload response {id} has no retry hint"));
+                    }
+                    *led.shed_per_key.entry(keys[i]).or_insert(0) += 1;
                 }
                 if f.status == STATUS_OK {
                     if let Some((_, key, a)) = spots.iter().find(|(sid, _, _)| *sid == id) {
@@ -344,6 +374,104 @@ fn run_reliable(
             led.violations.push("no EOF after a drained half-close".into());
         }
     }
+}
+
+/// Burst connections (`--burst`): the open-loop overload probe. A
+/// writer thread streams every request without waiting for responses
+/// while this thread tallies statuses, so the send rate is decoupled
+/// from the response rate. The server may shed, but only as explicit
+/// overload frames carrying a retry hint — a hang, a dropped
+/// connection, or a silently swallowed request is a violation.
+fn run_burst(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnLedger) {
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            led.violations.push(format!("connect failed: {e}"));
+            return;
+        }
+    };
+    let reqs: Vec<(JobKey, Vec<u32>)> =
+        (0..cfg.requests_per_conn).map(|_| random_request(rng, cfg)).collect();
+    let mut wstream = match client.stream().try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            led.violations.push(format!("stream clone failed: {e}"));
+            return;
+        }
+    };
+    std::thread::scope(|s| {
+        let writer = s.spawn(|| {
+            let mut wrote = 0usize;
+            for (i, (key, a)) in reqs.iter().enumerate() {
+                let frame = Frame::request_op((i + 1) as u64, key.op, key.m() as u32, a);
+                if wstream.write_all(&frame.encode()).is_err() {
+                    break;
+                }
+                wrote += 1;
+            }
+            // FIN the write side: the server answers everything it
+            // accepted, then closes — the read loop runs to EOF
+            let _ = wstream.shutdown(Shutdown::Write);
+            wrote
+        });
+        let mut expect = 1u64;
+        loop {
+            match client.read_frame() {
+                Ok(Some(f)) if f.kind == FrameKind::Response => {
+                    led.received += 1;
+                    if f.id != expect {
+                        led.violations
+                            .push(format!("response {} out of order (want {expect})", f.id));
+                        break;
+                    }
+                    expect += 1;
+                    let Some((key, _)) = reqs.get(f.id as usize - 1) else {
+                        led.violations.push(format!("response {} was never requested", f.id));
+                        break;
+                    };
+                    if OpKind::from_u8(f.op) != Some(key.op) {
+                        led.violations.push(format!(
+                            "response {} echoed op byte {} for a {} request",
+                            f.id,
+                            f.op,
+                            key.label()
+                        ));
+                    }
+                    if f.status == STATUS_OVERLOAD {
+                        if f.retry_after_ms().is_none() {
+                            led.violations
+                                .push(format!("overload response {} has no retry hint", f.id));
+                        }
+                        *led.shed_per_key.entry(*key).or_insert(0) += 1;
+                    }
+                }
+                Ok(Some(f)) => {
+                    led.violations.push(format!("unexpected frame kind {:?}", f.kind));
+                    break;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    led.violations.push(format!("broken stream at response {expect}: {e}"));
+                    break;
+                }
+            }
+        }
+        let wrote = writer.join().unwrap_or(0);
+        led.sent = wrote as u64;
+        for (key, _) in &reqs[..wrote] {
+            *led.sent_per_key.entry(*key).or_insert(0) += 1;
+        }
+        led.injected = wrote > 0;
+        if wrote < cfg.requests_per_conn {
+            led.violations.push(format!("server broke the write side after {wrote} requests"));
+        }
+        if led.received != led.sent && led.violations.is_empty() {
+            led.violations.push(format!(
+                "burst conn: {} sent but only {} answered before EOF",
+                led.sent, led.received
+            ));
+        }
+    });
 }
 
 /// Disconnect connections: pipeline everything, read about half, then
@@ -424,10 +552,10 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
             }
             false
         }
-        // reliable classes are driven by run_clean / run_half_close /
+        // reliable classes are driven by run_reliable / run_burst /
         // run_disconnect; landing here with one is a dispatch bug, but
         // a no-op beats a panic inside the harness
-        Class::Clean | Class::HalfClose | Class::Disconnect => return,
+        Class::Clean | Class::Burst | Class::HalfClose | Class::Disconnect => return,
     };
     led.injected = true;
     if fin {
@@ -440,8 +568,7 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
     }
     for f in frames {
         if f.kind == FrameKind::Response && f.status == STATUS_OK {
-            led.violations
-                .push(format!("{}: ok response to a malformed frame", led.class.label()));
+            led.violations.push(format!("{}: ok response to malformed frame", led.class.label()));
         }
     }
 }
@@ -450,10 +577,11 @@ fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLe
     // per-connection deterministic stream: class and payloads depend
     // only on (seed, idx)
     let mut rng = Rng::new(cfg.seed ^ (idx as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-    let class = Class::pick(&mut rng, cfg.chaos);
+    let class = Class::pick(&mut rng, cfg);
     let mut led = ConnLedger::new(class);
     match class {
         Class::Clean => run_reliable(&cfg.addr, &mut rng, cfg, reference, false, &mut led),
+        Class::Burst => run_burst(&cfg.addr, &mut rng, cfg, &mut led),
         Class::HalfClose => run_reliable(&cfg.addr, &mut rng, cfg, reference, true, &mut led),
         Class::Disconnect => run_disconnect(&cfg.addr, &mut rng, cfg, &mut led),
         Class::Truncated | Class::Garbage | Class::SlowLoris => {
@@ -504,9 +632,11 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     let ledgers = ledgers.into_inner().unwrap_or_else(|p| p.into_inner());
 
     // ---- client-side aggregation --------------------------------
-    let mut per_class = [(0u64, 0u64, 0u64, 0u64); CLASSES.len()]; // conns, sent, received, violations
+    // per class: conns, sent, received, violations
+    let mut per_class = [(0u64, 0u64, 0u64, 0u64); CLASSES.len()];
     let mut reliable_sent_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
     let mut disconnect_sent_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
+    let mut shed_seen_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
     let mut malformed_injected = 0u64;
     let mut latencies: Vec<f64> = Vec::new();
     let mut failures: Vec<String> = Vec::new();
@@ -522,9 +652,12 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
             }
         }
         match led.class {
-            Class::Clean | Class::HalfClose => {
+            Class::Clean | Class::Burst | Class::HalfClose => {
                 for (key, n) in &led.sent_per_key {
                     *reliable_sent_per_key.entry(*key).or_insert(0) += n;
+                }
+                for (key, n) in &led.shed_per_key {
+                    *shed_seen_per_key.entry(*key).or_insert(0) += n;
                 }
             }
             Class::Disconnect => {
@@ -560,12 +693,13 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     };
     if !snap.reconciles() {
         failures.push(format!(
-            "identity broken: accepted {} != responded {} + timeouts {} + vanished {} \
+            "identity broken: accepted {} != responded {} + timeouts {} + vanished {} + shed {} \
              ({} unaccounted; per-key rows {:?})",
             snap.accepted,
             snap.responded,
             snap.deadline_timeouts,
             snap.peer_vanished,
+            snap.shed,
             snap.unaccounted(),
             snap.per_key,
         ));
@@ -610,17 +744,52 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
             ));
         }
     }
-    if received_total > snap.responded {
+    // shed ledger: every overload frame a reliable-class connection
+    // read back is a server-side shed; disconnect connections may have
+    // been shed without reading the frame, so their sends widen the
+    // band. With chaos off the band is tight and the match is exact.
+    let mut shed_keys: BTreeSet<JobKey> = shed_seen_per_key.keys().copied().collect();
+    for &(op, m, _, _, _, _, s) in &snap.per_key {
+        if s == 0 {
+            continue;
+        }
+        if let Some(op) = OpKind::from_u8(op as u8) {
+            shed_keys.insert(JobKey::new(op, m as usize));
+        }
+    }
+    for key in shed_keys {
+        let srv = snap
+            .per_key
+            .iter()
+            .find(|(op, m, ..)| *op == key.op.index() as u64 && *m == key.m() as u64)
+            .map(|&(.., s)| s)
+            .unwrap_or(0);
+        let lo = shed_seen_per_key.get(&key).copied().unwrap_or(0);
+        let hi = lo + disconnect_sent_per_key.get(&key).copied().unwrap_or(0);
+        if srv < lo || srv > hi {
+            failures.push(format!(
+                "{}: server shed {srv}, outside the client-observed bounds [{lo}, {hi}]",
+                key.label()
+            ));
+        }
+    }
+    if received_total > snap.responded + snap.shed {
         failures.push(format!(
-            "clients read {} responses but the server only wrote {}",
-            received_total, snap.responded
+            "clients read {} responses but the server only wrote {} (+{} shed)",
+            received_total, snap.responded, snap.shed
         ));
     }
 
     // ---- report -------------------------------------------------
     let ops_mix: Vec<&str> = cfg.ops.iter().map(|o| o.label()).collect();
-    println!("loadgen           : {} conns × {} reqs, ops {}, m ∈ [2, {}], chaos {}", cfg.conns,
-        cfg.requests_per_conn, ops_mix.join(","), cfg.max_m, if cfg.chaos { "on" } else { "off" });
+    println!(
+        "loadgen           : {} conns × {} reqs, ops {}, m ∈ [2, {}], chaos {}",
+        cfg.conns,
+        cfg.requests_per_conn,
+        ops_mix.join(","),
+        cfg.max_m,
+        if cfg.chaos { "on" } else { "off" }
+    );
     println!("wall time         : {wall:.3} s");
     for (i, c) in CLASSES.iter().enumerate() {
         let (n, sent, recv, viol) = per_class[i];
@@ -633,13 +802,21 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
         }
     }
     println!(
-        "server ledger     : {} accepted = {} responded + {} timeouts + {} vanished ({})",
+        "server ledger     : {} accepted = {} responded + {} timeouts + {} vanished + {} shed ({})",
         snap.accepted,
         snap.responded,
         snap.deadline_timeouts,
         snap.peer_vanished,
+        snap.shed,
         if snap.reconciles() { "exact" } else { "BROKEN" }
     );
+    if cfg.burst || snap.shed > 0 {
+        let seen: u64 = shed_seen_per_key.values().sum();
+        println!(
+            "overload shed     : {} shed by the server, {seen} overload frames read back",
+            snap.shed
+        );
+    }
     println!(
         "connections       : {} opened, {} closed; {} malformed frames",
         snap.conn_opened, snap.conn_closed, snap.frames_malformed
@@ -671,6 +848,19 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
         )];
         if p99 > 0.0 {
             entries.push(BenchResult::from_wall(&format!("{tag} p99"), 1.0, p99));
+        }
+        if cfg.burst {
+            let otag = format!(
+                "overload/burst conns{} chaos={}",
+                cfg.conns,
+                if cfg.chaos { "on" } else { "off" }
+            );
+            entries.push(BenchResult::from_wall(
+                &format!("{otag} answered"),
+                snap.responded as f64,
+                wall,
+            ));
+            entries.push(BenchResult::from_wall(&format!("{otag} shed"), snap.shed as f64, wall));
         }
         merge_json(path, &entries)?;
         println!("bench entries     : merged into {path}");

@@ -153,6 +153,17 @@ pub struct Metrics {
     /// Accepted requests whose peer vanished before a response could be
     /// written (deliberate, counted drops), per job key.
     net_peer_vanished: Vec<AtomicU64>,
+    /// Accepted requests shed at admission with an overload response
+    /// (never queued, answered immediately), per job key.
+    net_shed: Vec<AtomicU64>,
+    // autoscaler observability ---------------------------------------
+    /// Worker slots currently alive — a gauge the autoscaler publishes
+    /// on every resize so tests and benches can watch capacity move.
+    workers_alive: AtomicU64,
+    /// Autoscaler scale-up decisions taken.
+    scale_ups: AtomicU64,
+    /// Autoscaler scale-down decisions taken.
+    scale_downs: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -190,6 +201,10 @@ impl Metrics {
             net_responded: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
             net_deadline_timeouts: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
             net_peer_vanished: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            net_shed: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            workers_alive: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
         }
     }
 
@@ -354,8 +369,8 @@ impl Metrics {
     // network-ingress lifecycle ------------------------------------
     //
     // These counters feed the socket-boundary reconciliation identity
-    // `accepted == responded + deadline_timeouts + peer_vanished`, so
-    // the recorders publish with `Release` and the audit-path getters
+    // `accepted == responded + deadline_timeouts + peer_vanished +
+    // shed`, so the recorders publish with `Release` and the audit-path getters
     // below read with `Acquire`: a snapshot taken after quiescence
     // (thread joins) observes every increment that happened-before it
     // on any core. `srclint`'s atomics-audit rule rejects a `Relaxed`
@@ -404,6 +419,45 @@ impl Metrics {
         self.net_peer_vanished[Self::key_bin(key)].fetch_add(1, Ordering::Release);
     }
 
+    /// Record a request shed at admission with an overload response —
+    /// the fourth identity leg. A shed request is never queued: the
+    /// overload answer is written immediately, and it must NOT also be
+    /// counted as responded (that would double-account the request).
+    pub fn on_shed(&self, key: JobKey) {
+        self.net_shed[Self::key_bin(key)].fetch_add(1, Ordering::Release);
+    }
+
+    /// Publish the number of worker slots currently alive (autoscaler
+    /// gauge; also set once at pool boot).
+    pub fn set_workers_alive(&self, n: usize) {
+        self.workers_alive.store(n as u64, Ordering::Release);
+    }
+
+    /// Worker slots currently alive, as last published.
+    pub fn workers_alive(&self) -> u64 {
+        self.workers_alive.load(Ordering::Acquire)
+    }
+
+    /// Record one autoscaler scale-up decision.
+    pub fn on_scale_up(&self) {
+        self.scale_ups.fetch_add(1, Ordering::Release);
+    }
+
+    /// Record one autoscaler scale-down decision.
+    pub fn on_scale_down(&self) {
+        self.scale_downs.fetch_add(1, Ordering::Release);
+    }
+
+    /// Autoscaler scale-up decisions taken.
+    pub fn scale_ups(&self) -> u64 {
+        self.scale_ups.load(Ordering::Acquire)
+    }
+
+    /// Autoscaler scale-down decisions taken.
+    pub fn scale_downs(&self) -> u64 {
+        self.scale_downs.load(Ordering::Acquire)
+    }
+
     /// Connections accepted.
     pub fn conn_opened(&self) -> u64 {
         self.conn_opened.load(Ordering::Acquire)
@@ -449,32 +503,45 @@ impl Metrics {
         self.net_peer_vanished.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
+    /// Requests shed at admission for `key`.
+    pub fn shed(&self, key: JobKey) -> u64 {
+        self.net_shed[Self::key_bin(key)].load(Ordering::Acquire)
+    }
+
+    /// Requests shed at admission, all keys.
+    pub fn shed_total(&self) -> u64 {
+        self.net_shed.iter().map(|c| c.load(Ordering::Acquire)).sum()
+    }
+
     /// Non-empty per-key network bins as `(key, accepted, responded,
-    /// deadline_timeouts, peer_vanished)` rows — the socket-boundary
-    /// reconciliation view, op-major key order.
-    pub fn per_key_net_bins(&self) -> Vec<(JobKey, u64, u64, u64, u64)> {
+    /// deadline_timeouts, peer_vanished, shed)` rows — the
+    /// socket-boundary reconciliation view, op-major key order.
+    #[allow(clippy::type_complexity)]
+    pub fn per_key_net_bins(&self) -> Vec<(JobKey, u64, u64, u64, u64, u64)> {
         (0..KEY_BINS)
             .filter_map(|b| {
                 let acc = self.net_accepted[b].load(Ordering::Acquire);
                 let rsp = self.net_responded[b].load(Ordering::Acquire);
                 let ddl = self.net_deadline_timeouts[b].load(Ordering::Acquire);
                 let van = self.net_peer_vanished[b].load(Ordering::Acquire);
-                (acc != 0 || rsp != 0 || ddl != 0 || van != 0)
-                    .then_some((Self::bin_key(b), acc, rsp, ddl, van))
+                let shd = self.net_shed[b].load(Ordering::Acquire);
+                (acc != 0 || rsp != 0 || ddl != 0 || van != 0 || shd != 0)
+                    .then_some((Self::bin_key(b), acc, rsp, ddl, van, shd))
             })
             .collect()
     }
 
     /// The socket-boundary "no dropped requests" identity, checked per
     /// (op, m) bin: `accepted == responded + deadline_timeouts +
-    /// peer_vanished` in every bin. Only meaningful once traffic has
-    /// quiesced (in-flight requests make `accepted` lead).
+    /// peer_vanished + shed` in every bin. Only meaningful once traffic
+    /// has quiesced (in-flight requests make `accepted` lead).
     pub fn net_reconciles(&self) -> bool {
         (0..KEY_BINS).all(|b| {
             self.net_accepted[b].load(Ordering::Acquire)
                 == self.net_responded[b].load(Ordering::Acquire)
                     + self.net_deadline_timeouts[b].load(Ordering::Acquire)
                     + self.net_peer_vanished[b].load(Ordering::Acquire)
+                    + self.net_shed[b].load(Ordering::Acquire)
         })
     }
 }
@@ -585,7 +652,16 @@ mod tests {
         assert_eq!(m.net_responded_total(), 1);
         assert_eq!(m.deadline_timeouts(), 1);
         assert_eq!(m.peer_vanished(), 1);
-        assert_eq!(m.per_key_net_bins(), vec![(q4, 3, 1, 1, 1)]);
+        assert_eq!(m.per_key_net_bins(), vec![(q4, 3, 1, 1, 1, 0)]);
+        // a fourth accepted request shed at admission is the fourth
+        // identity leg — shed alone, never also responded
+        m.on_net_accepted(q4);
+        assert!(!m.net_reconciles());
+        m.on_shed(q4);
+        assert!(m.net_reconciles());
+        assert_eq!(m.shed(q4), 1);
+        assert_eq!(m.shed_total(), 1);
+        assert_eq!(m.per_key_net_bins(), vec![(q4, 4, 1, 1, 1, 1)]);
         // identity is per-bin: totals matching across different bins
         // must NOT reconcile
         m.on_net_accepted(JobKey::qrd(8));
@@ -602,6 +678,22 @@ mod tests {
         m.on_net_accepted(JobKey::qrd(10_000));
         m.on_net_responded(JobKey::qrd(10_000));
         assert_eq!(m.net_accepted(JobKey::qrd(M_BINS - 1)), 1);
+    }
+
+    #[test]
+    fn autoscaler_gauge_and_scale_counters() {
+        let m = Metrics::new(4);
+        assert_eq!(m.workers_alive(), 0, "gauge starts unset");
+        m.set_workers_alive(2);
+        assert_eq!(m.workers_alive(), 2);
+        m.on_scale_up();
+        m.set_workers_alive(3);
+        m.on_scale_down();
+        m.on_scale_down();
+        m.set_workers_alive(1);
+        assert_eq!(m.workers_alive(), 1);
+        assert_eq!(m.scale_ups(), 1);
+        assert_eq!(m.scale_downs(), 2);
     }
 
     #[test]

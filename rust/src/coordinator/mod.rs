@@ -29,7 +29,17 @@
 //! `workers`/`shards` is the number of persistent engine threads;
 //! `threads` is the intra-batch fan-out *inside* one native engine;
 //! `max_restarts` bounds supervised respawn per worker slot.
+//!
+//! Overload control (see `autoscale`): an optional closed control loop
+//! samples queue depth and p99 latency on a fixed tick and grows or
+//! drains the sharded pool between `min_workers` and `workers`
+//! (hysteresis + cool-down, retirement drains the shard first), while
+//! an admission gate sheds new work with an overload response carrying
+//! a retry-after hint once depth or p99 crosses its bound. Every shed
+//! is audited per key: accepted = responded + timeouts + vanished +
+//! shed must hold exactly at exit.
 
+mod autoscale;
 mod batcher;
 mod engine;
 mod frame;
@@ -40,20 +50,24 @@ mod net;
 mod service;
 mod shard;
 
+pub use autoscale::{AutoscaleConfig, AutoscalePolicy, LoadSignal, ScaleDecision, ShedPolicy};
 pub use batcher::{BatchPolicy, Batcher, KeyedBatcher};
-pub use engine::{BatchEngine, NativeEngine, PjrtEngine};
-pub use frame::{read_frame, Frame, FrameError, FrameKind, ReadOutcome};
+pub use engine::{BatchEngine, FaultEngine, FaultPlan, NativeEngine, PjrtEngine};
+pub use frame::{
+    read_frame, Frame, FrameError, FrameKind, ReadOutcome, STATUS_DEADLINE, STATUS_ERROR,
+    STATUS_OK, STATUS_OVERLOAD,
+};
 pub use key::{JobKey, OpKind, N_OPS};
 pub use loadgen::{run_loadgen, LoadgenConfig};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use net::{NetClient, NetConfig, NetServer, StatsSnapshot};
-pub use service::{
-    PendingResponse, QrdService, Request, Response, RestartPolicy, RouterPolicy,
-};
+pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy, RouterPolicy};
 pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
 use crate::util::rng::Rng;
+use std::sync::atomic::AtomicU64;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Knobs for [`serve_with`] (the `repro serve` command).
@@ -92,6 +106,31 @@ pub struct ServeConfig {
     /// order). Every width is bit-identical — this is a
     /// cache-shape/latency knob, not a numerics knob.
     pub panel: usize,
+    /// Autoscaler floor: with the sharded topology, a nonzero value
+    /// starts only this many workers and lets the supervisor's control
+    /// loop grow the pool up to `workers` under load, then drain back
+    /// down when it clears (0 = fixed pool, no control loop).
+    pub min_workers: usize,
+    /// Autoscaler sampling tick, in milliseconds.
+    pub tick_ms: u64,
+    /// Admission control: shed new work with an overload response once
+    /// the aggregate queued depth crosses this bound (0 = admit all).
+    pub shed_depth: usize,
+    /// Admission control: also shed once the service p99 crosses this
+    /// bound, in milliseconds (0 = depth-only shedding).
+    pub shed_p99_ms: u64,
+    /// Retry-after hint carried by overload responses, in milliseconds.
+    pub retry_after_ms: u64,
+    /// Respawn backoff: delay before a slot's first respawn in
+    /// milliseconds, doubling per respawn up to `backoff_cap_ms`
+    /// (0 = respawn immediately, the pre-backoff behavior).
+    pub backoff_ms: u64,
+    /// Ceiling on any single respawn delay, in milliseconds.
+    pub backoff_cap_ms: u64,
+    /// Wrap every engine in the deterministic fault injector
+    /// ([`FaultEngine`]): scheduled panics, errors, and latency spikes
+    /// that drive the supervisor, backoff, and autoscaler for real.
+    pub chaos: bool,
 }
 
 impl Default for ServeConfig {
@@ -109,6 +148,14 @@ impl Default for ServeConfig {
             max_m: 4,
             blocked_m: NativeEngine::DEFAULT_BLOCKED_MIN,
             panel: 0,
+            min_workers: 0,
+            tick_ms: 25,
+            shed_depth: 0,
+            shed_p99_ms: 0,
+            retry_after_ms: 50,
+            backoff_ms: 25,
+            backoff_cap_ms: 1_000,
+            chaos: false,
         }
     }
 }
@@ -149,15 +196,25 @@ pub fn serve_synthetic_with(
     })
 }
 
+/// A boxed engine factory: every topology takes a vector of these and
+/// builds one engine per worker slot (respawns and autoscaler
+/// scale-ups call the same factory again).
+type EngineFactory = Box<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static>;
+
 /// Build the batching service a [`ServeConfig`] describes — engine
-/// factories, pool topology, and the m gate — and return it with the
-/// engine's display name. Shared by the synthetic driver
+/// factories (fault-wrapped under `--chaos`), pool topology (fixed or
+/// autoscaled), admission policy, and the m gate — and return it with
+/// the engine's display name. Shared by the synthetic driver
 /// ([`serve_with`]) and the TCP frontend ([`serve_listen`]).
 fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
     let workers = if cfg.workers == 0 { par::threads() } else { cfg.workers };
     let policy = BatchPolicy { max_batch: cfg.max_batch, max_wait_us: 200 };
-    let restart = RestartPolicy { max_restarts: cfg.max_restarts };
-    let (svc, name) = match cfg.engine.as_str() {
+    let restart = RestartPolicy {
+        max_restarts: cfg.max_restarts,
+        backoff_base_ms: cfg.backoff_ms,
+        backoff_cap_ms: cfg.backoff_cap_ms,
+    };
+    let (factories, name): (Vec<EngineFactory>, String) = match cfg.engine.as_str() {
         "native" => {
             let threads = cfg.threads;
             let tile = cfg.tile;
@@ -169,10 +226,10 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
                 .with_blocked(blocked_m)
                 .with_panel(panel)
                 .name();
-            // the factories are Fn, so one Vec serves either topology
-            let factories: Vec<_> = (0..workers)
+            // the factories are Fn, so one Vec serves every topology
+            let factories = (0..workers)
                 .map(|_| {
-                    move || {
+                    Box::new(move || {
                         Box::new(
                             NativeEngine::flagship()
                                 .with_threads(threads)
@@ -180,15 +237,10 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
                                 .with_blocked(blocked_m)
                                 .with_panel(panel),
                         ) as Box<dyn BatchEngine>
-                    }
+                    }) as EngineFactory
                 })
                 .collect();
-            let svc = if cfg.sharded {
-                QrdService::start_sharded(factories, policy, restart)
-            } else {
-                QrdService::start_pool(factories, policy)
-            };
-            (svc, name)
+            (factories, name)
         }
         "pjrt" => {
             // probe the artifact on this thread so load errors surface
@@ -196,27 +248,59 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
             let probe = PjrtEngine::load(&cfg.artifact, PjrtEngine::ARTIFACT_BATCH)?;
             let name = probe.name();
             drop(probe);
-            let factories: Vec<_> = (0..workers)
+            let factories = (0..workers)
                 .map(|_| {
                     let path = cfg.artifact.clone();
-                    move || {
+                    Box::new(move || {
                         Box::new(
                             PjrtEngine::load(&path, PjrtEngine::ARTIFACT_BATCH)
                                 // srclint: allow(no-panic) the artifact was probed at boot; a load failure on respawn is unrecoverable
                                 .expect("artifact load"),
                         ) as Box<dyn BatchEngine>
-                    }
+                    }) as EngineFactory
                 })
                 .collect();
-            let svc = if cfg.sharded {
-                QrdService::start_sharded(factories, policy, restart)
-            } else {
-                QrdService::start_pool(factories, policy)
-            };
-            (svc, name)
+            (factories, name)
         }
         other => anyhow::bail!("unknown engine '{other}' (native|pjrt)"),
     };
+    // --chaos wraps every engine in the deterministic fault injector;
+    // the shared batch counter keeps one global schedule across the
+    // pool, so respawned and scaled-up workers keep advancing it
+    let factories: Vec<EngineFactory> = if cfg.chaos {
+        let plan = FaultPlan::chaos(0x5EED);
+        let calls = Arc::new(AtomicU64::new(0));
+        factories
+            .into_iter()
+            .map(|f| {
+                let calls = calls.clone();
+                Box::new(move || {
+                    let eng = FaultEngine::with_counter(f(), plan, calls.clone());
+                    Box::new(eng) as Box<dyn BatchEngine>
+                }) as EngineFactory
+            })
+            .collect()
+    } else {
+        factories
+    };
+    let svc = if cfg.sharded && cfg.min_workers > 0 {
+        let autoscale = AutoscaleConfig {
+            min_workers: cfg.min_workers,
+            max_workers: workers,
+            ..AutoscaleConfig::default()
+        };
+        let tick = Duration::from_millis(cfg.tick_ms.max(1));
+        QrdService::start_autoscaled(factories, policy, restart, autoscale, tick)
+    } else if cfg.sharded {
+        QrdService::start_sharded(factories, policy, restart)
+    } else {
+        QrdService::start_pool(factories, policy)
+    };
+    let svc = svc.with_shed(ShedPolicy {
+        depth: cfg.shed_depth,
+        p99_us: cfg.shed_p99_ms as f64 * 1000.0,
+        retry_after_ms: cfg.retry_after_ms,
+    });
     // the PJRT artifact serves exactly m=4, so its gate must admit 4;
     // the native gate honours the operator's --max-m verbatim (the
     // builder still clamps to Metrics::MAX_TRACKED_M)
@@ -306,17 +390,10 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
             format!("shared-lock batcher, {} worker(s)", m.workers())
         }
     );
-    println!(
-        "requests          : {} ({errors} errored), m ∈ [{m_lo}, {m_hi}]",
-        cfg.requests
-    );
+    println!("requests          : {} ({errors} errored), m ∈ [{m_lo}, {m_hi}]", cfg.requests);
     println!("wall time         : {wall:.3} s");
     println!("throughput        : {:.0} QRD/s", cfg.requests as f64 / wall);
-    println!(
-        "batches executed  : {} (per worker: {:?})",
-        m.batches(),
-        m.worker_batch_counts()
-    );
+    println!("batches executed  : {} (per worker: {:?})", m.batches(), m.worker_batch_counts());
     println!("mean batch size   : {:.1}", m.mean_batch());
     // per-key bin reconciliation: accepted vs served per (op, m)
     for (key, req, srv, bat) in m.per_key_bins() {
@@ -371,16 +448,23 @@ pub fn serve_with(cfg: &ServeConfig) -> anyhow::Result<()> {
 /// client sends a shutdown frame (or the process is killed), then
 /// drain, print the socket-boundary ledger, and hold the run to the
 /// lifecycle invariants — the per-key identity
-/// `accepted = responded + deadline_timeouts + peer_vanished` and
-/// `conn_opened == conn_closed` both must hold exactly at exit, so a
-/// chaos run that leaks even one request fails the server process too.
+/// `accepted = responded + deadline_timeouts + peer_vanished + shed`
+/// and `conn_opened == conn_closed` both must hold exactly at exit, so
+/// a chaos or overload run that leaks even one request fails the
+/// server process too.
 pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::Result<()> {
     let (svc, name) = build_service(cfg)?;
     let server = net::NetServer::bind(listen, svc, net)?;
     println!("engine            : {name}");
     println!(
         "topology          : {}",
-        if cfg.sharded { "sharded ingress" } else { "shared-lock batcher" }
+        if cfg.sharded && cfg.min_workers > 0 {
+            "autoscaled sharded ingress"
+        } else if cfg.sharded {
+            "sharded ingress"
+        } else {
+            "shared-lock batcher"
+        }
     );
     println!("listening         : {}", server.local_addr());
     println!(
@@ -398,17 +482,26 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::
         m.frames_malformed()
     );
     println!(
-        "request ledger    : {} accepted = {} responded + {} timeouts + {} vanished",
+        "request ledger    : {} accepted = {} responded + {} timeouts + {} vanished + {} shed",
         m.net_accepted_total(),
         m.net_responded_total(),
         m.deadline_timeouts(),
-        m.peer_vanished()
+        m.peer_vanished(),
+        m.shed_total()
     );
-    for (key, acc, rsp, ddl, van) in m.per_key_net_bins() {
+    for (key, acc, rsp, ddl, van, shd) in m.per_key_net_bins() {
         println!(
-            "  {:<12} net  : {acc} accepted, {rsp} responded, {ddl} timeouts, {van} vanished{}",
+            "  {:<12} net  : {acc} accepted, {rsp} responded, {ddl} timeouts, {van} vanished, {shd} shed{}",
             key.label(),
-            if acc == rsp + ddl + van { "" } else { "  ← UNACCOUNTED" }
+            if acc == rsp + ddl + van + shd { "" } else { "  ← UNACCOUNTED" }
+        );
+    }
+    if m.scale_ups() + m.scale_downs() > 0 {
+        println!(
+            "autoscale         : {} scale-ups, {} scale-downs, {} workers at exit",
+            m.scale_ups(),
+            m.scale_downs(),
+            m.workers_alive()
         );
     }
     let h = m.latency();
@@ -420,11 +513,12 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::
     }
     anyhow::ensure!(
         m.net_reconciles(),
-        "socket-boundary identity broken: {} accepted != {} responded + {} timeouts + {} vanished",
+        "socket-boundary identity broken: {} accepted != {} responded + {} timeouts + {} vanished + {} shed",
         m.net_accepted_total(),
         m.net_responded_total(),
         m.deadline_timeouts(),
-        m.peer_vanished()
+        m.peer_vanished(),
+        m.shed_total()
     );
     anyhow::ensure!(
         m.conn_opened() == m.conn_closed(),

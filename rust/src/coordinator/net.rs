@@ -19,15 +19,19 @@
 //! (operation × matrix size):
 //!
 //! ```text
-//! net_accepted == net_responded + deadline_timeouts + peer_vanished
+//! net_accepted == net_responded + deadline_timeouts + peer_vanished + shed
 //! ```
 //!
 //! Every request read off a socket increments `net_accepted` and ends
 //! in exactly one bucket: a response written (ok or error), a
-//! deadline-timeout response written, or a counted drop because the
-//! peer vanished mid-flight. [`Metrics::net_reconciles`] checks the
-//! identity; the chaos load generator (`repro loadgen --chaos`) fails
-//! its run when it does not hold after quiescence.
+//! deadline-timeout response written, a counted drop because the peer
+//! vanished mid-flight, or an audited overload shed — when the
+//! service's [`ShedPolicy`](super::autoscale::ShedPolicy) trips, the
+//! reader never submits the request to the pool and the writer answers
+//! it with a `STATUS_OVERLOAD` frame carrying a retry-after hint
+//! instead. [`Metrics::net_reconciles`] checks the identity; the chaos
+//! load generator (`repro loadgen --chaos`) fails its run when it does
+//! not hold after quiescence.
 //!
 //! Malformed input (bad magic/version/kind/op, oversize, truncation, a
 //! mid-frame stall) bumps `frames_malformed`, earns the peer one error
@@ -83,6 +87,9 @@ impl Default for NetConfig {
 enum Work {
     /// An accepted request in flight through the service.
     Req { id: u64, key: JobKey, arrival: Instant, pending: PendingResponse },
+    /// A request refused at admission: never submitted to the pool, to
+    /// be answered with a `STATUS_OVERLOAD` frame and counted `shed`.
+    Shed { id: u64, key: JobKey, retry_after_ms: u64 },
     /// A metrics-snapshot request.
     Stats { id: u64 },
     /// Acknowledge a shutdown order.
@@ -104,7 +111,11 @@ pub struct NetServer {
 impl NetServer {
     /// Bind and start serving. Port 0 picks a free port —
     /// [`Self::local_addr`] reports the actual one.
-    pub fn bind<A: ToSocketAddrs>(addr: A, svc: QrdService, cfg: NetConfig) -> io::Result<NetServer> {
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        svc: QrdService,
+        cfg: NetConfig,
+    ) -> io::Result<NetServer> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let metrics = svc.metrics();
@@ -265,12 +276,28 @@ fn reader_loop(
                     // with op = 0 = Qrd
                     let op = OpKind::from_u8(f.op).unwrap_or(OpKind::Qrd);
                     let key = JobKey::new(op, f.m as usize);
+                    // admission control: under overload the request is
+                    // accepted (counted) but never submitted — the
+                    // writer sheds it with a STATUS_OVERLOAD frame and
+                    // a retry-after hint, keeping the queues bounded by
+                    // policy instead of by the in-flight window alone
+                    if let Some(retry_after_ms) = svc.overload_hint() {
+                        metrics.on_net_accepted(key);
+                        if tx.send(Work::Shed { id: f.id, key, retry_after_ms }).is_err() {
+                            metrics.on_peer_vanished(key);
+                            return;
+                        }
+                        continue;
+                    }
                     // a misaligned payload cannot even be viewed as
                     // words; everything else (wrong length, bad m) is
                     // the service's submit gate, which answers with an
                     // immediate error Response itself. The aligned path
                     // is zero-copy: the decoded word vector moves from
                     // the frame into the service `Request` untouched.
+                    // The admitted variant skips the service's own
+                    // overload gate — admission was decided above, and
+                    // one request must never be gated twice.
                     let pending = match f.take_words() {
                         Some(words) => {
                             debug_assert!(
@@ -278,7 +305,7 @@ fn reader_loop(
                                 "zero-copy request path: no intermediate byte buffer may \
                                  survive take_words"
                             );
-                            svc.submit_async_key(key, words)
+                            svc.submit_async_key_admitted(key, words)
                         }
                         None => {
                             immediate_error(key, "payload is not a whole number of 32-bit words")
@@ -371,8 +398,9 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                         // in-flight computation (dropping the pending —
                         // the pool's late send lands on a closed
                         // channel, harmlessly)
-                        let frame = Frame::response_error(id, m, STATUS_DEADLINE, "deadline exceeded")
-                            .with_op(op);
+                        let frame =
+                            Frame::response_error(id, m, STATUS_DEADLINE, "deadline exceeded")
+                                .with_op(op);
                         if frame.write_to(&mut stream).is_ok() {
                             metrics.on_deadline_timeout(key);
                         } else {
@@ -380,6 +408,23 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                             peer_gone = true;
                         }
                     }
+                }
+            }
+            Work::Shed { id, key, retry_after_ms } => {
+                if peer_gone {
+                    metrics.on_peer_vanished(key);
+                    continue;
+                }
+                // exactly one bucket per accepted request: `shed` when
+                // the overload frame reaches the peer, `peer_vanished`
+                // when it does not — never `responded`
+                let frame = Frame::response_overload(id, key.m() as u32, retry_after_ms)
+                    .with_op(key.op.as_u8());
+                if frame.write_to(&mut stream).is_ok() {
+                    metrics.on_shed(key);
+                } else {
+                    metrics.on_peer_vanished(key);
+                    peer_gone = true;
                 }
             }
             Work::Stats { id } => {
@@ -403,7 +448,9 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                 if peer_gone {
                     continue;
                 }
-                if Frame::response_error(id, 0, STATUS_ERROR, &reason).write_to(&mut stream).is_err()
+                if Frame::response_error(id, 0, STATUS_ERROR, &reason)
+                    .write_to(&mut stream)
+                    .is_err()
                 {
                     peer_gone = true;
                 }
@@ -434,12 +481,15 @@ pub struct StatsSnapshot {
     pub deadline_timeouts: u64,
     /// Accepted requests dropped on vanished peers, all sizes.
     pub peer_vanished: u64,
+    /// Accepted requests refused at admission with a `STATUS_OVERLOAD`
+    /// response, all sizes.
+    pub shed: u64,
     /// Requests the inner service accepted (socket + in-process).
     pub service_requests: u64,
     /// Per-key rows: `(op discriminant, m, accepted, responded,
-    /// deadline_timeouts, peer_vanished)` — one row per `JobKey` that
-    /// saw traffic, so the identity is auditable op by op.
-    pub per_key: Vec<(u64, u64, u64, u64, u64, u64)>,
+    /// deadline_timeouts, peer_vanished, shed)` — one row per `JobKey`
+    /// that saw traffic, so the identity is auditable op by op.
+    pub per_key: Vec<(u64, u64, u64, u64, u64, u64, u64)>,
 }
 
 impl StatsSnapshot {
@@ -453,19 +503,20 @@ impl StatsSnapshot {
             responded: m.net_responded_total(),
             deadline_timeouts: m.deadline_timeouts(),
             peer_vanished: m.peer_vanished(),
+            shed: m.shed_total(),
             service_requests: m.requests(),
             per_key: m
                 .per_key_net_bins()
                 .into_iter()
-                .map(|(key, a, r, d, v)| {
-                    (key.op.index() as u64, key.m() as u64, a, r, d, v)
+                .map(|(key, a, r, d, v, s)| {
+                    (key.op.index() as u64, key.m() as u64, a, r, d, v, s)
                 })
                 .collect(),
         }
     }
 
-    /// Serialize as a flat LE u64 block (8 scalars, a row count, then
-    /// 6 u64 per row).
+    /// Serialize as a flat LE u64 block (9 scalars, a row count, then
+    /// 7 u64 per row).
     pub fn encode(&self) -> Vec<u8> {
         let scalars = [
             self.conn_opened,
@@ -475,16 +526,17 @@ impl StatsSnapshot {
             self.responded,
             self.deadline_timeouts,
             self.peer_vanished,
+            self.shed,
             self.service_requests,
             self.per_key.len() as u64,
         ];
-        let mut out = Vec::with_capacity(8 * (scalars.len() + 6 * self.per_key.len()));
+        let mut out = Vec::with_capacity(8 * (scalars.len() + 7 * self.per_key.len()));
         for s in scalars {
             out.extend_from_slice(&s.to_le_bytes());
         }
-        for (op, m, a, r, d, v) in &self.per_key {
-            for s in [op, m, a, r, d, v] {
-                out.extend_from_slice(&s.to_le_bytes());
+        for (op, m, a, r, d, v, s) in &self.per_key {
+            for w in [op, m, a, r, d, v, s] {
+                out.extend_from_slice(&w.to_le_bytes());
             }
         }
         out
@@ -500,11 +552,11 @@ impl StatsSnapshot {
             .chunks_exact(8)
             .filter_map(|c| <[u8; 8]>::try_from(c).ok().map(u64::from_le_bytes))
             .collect();
-        if words.len() < 9 {
+        if words.len() < 10 {
             return None;
         }
-        let nrows = words[8] as usize;
-        if words.len() != 9 + 6 * nrows {
+        let nrows = words[9] as usize;
+        if words.len() != 10 + 7 * nrows {
             return None;
         }
         Some(StatsSnapshot {
@@ -515,11 +567,12 @@ impl StatsSnapshot {
             responded: words[4],
             deadline_timeouts: words[5],
             peer_vanished: words[6],
-            service_requests: words[7],
+            shed: words[7],
+            service_requests: words[8],
             per_key: (0..nrows)
                 .map(|i| {
-                    let r = &words[9 + 6 * i..9 + 6 * i + 6];
-                    (r[0], r[1], r[2], r[3], r[4], r[5])
+                    let r = &words[10 + 7 * i..10 + 7 * i + 7];
+                    (r[0], r[1], r[2], r[3], r[4], r[5], r[6])
                 })
                 .collect(),
         })
@@ -528,7 +581,7 @@ impl StatsSnapshot {
     /// The socket-boundary identity, per `JobKey` row and in total.
     pub fn reconciles(&self) -> bool {
         self.unaccounted() == 0
-            && self.per_key.iter().all(|(_, _, a, r, d, v)| *a == r + d + v)
+            && self.per_key.iter().all(|(_, _, a, r, d, v, s)| *a == r + d + v + s)
             && self.accepted == self.per_key.iter().map(|(_, _, a, ..)| a).sum::<u64>()
     }
 
@@ -536,7 +589,7 @@ impl StatsSnapshot {
     /// on a correct server; >0 means something was dropped silently).
     pub fn unaccounted(&self) -> i64 {
         self.accepted as i64
-            - (self.responded + self.deadline_timeouts + self.peer_vanished) as i64
+            - (self.responded + self.deadline_timeouts + self.peer_vanished + self.shed) as i64
     }
 }
 
@@ -635,17 +688,23 @@ mod tests {
     #[test]
     fn stats_snapshot_round_trips() {
         // rows span ops: qrd/m2, solve/m8, append_qr/m8 — the op
-        // column keeps same-m bins distinct on the wire
+        // column keeps same-m bins distinct on the wire — and the shed
+        // bucket participates in the per-row identity
         let snap = StatsSnapshot {
             conn_opened: 10,
             conn_closed: 9,
             frames_malformed: 3,
             accepted: 100,
-            responded: 90,
+            responded: 84,
             deadline_timeouts: 6,
             peer_vanished: 4,
+            shed: 6,
             service_requests: 96,
-            per_key: vec![(0, 2, 40, 36, 3, 1), (1, 8, 40, 36, 2, 2), (2, 8, 20, 18, 1, 1)],
+            per_key: vec![
+                (0, 2, 40, 33, 3, 1, 3),
+                (1, 8, 40, 33, 2, 2, 3),
+                (2, 8, 20, 18, 1, 1, 0),
+            ],
         };
         let back = StatsSnapshot::decode(&snap.encode()).expect("decode");
         assert_eq!(back, snap);
@@ -663,14 +722,21 @@ mod tests {
             responded: 4,
             deadline_timeouts: 0,
             peer_vanished: 0,
+            shed: 0,
             service_requests: 5,
-            per_key: vec![(0, 4, 5, 4, 0, 0)],
+            per_key: vec![(0, 4, 5, 4, 0, 0, 0)],
         };
         assert!(!snap.reconciles());
         assert_eq!(snap.unaccounted(), 1);
+        // a shed fills the hole: the identity holds again
+        snap.shed = 1;
+        snap.per_key = vec![(0, 4, 5, 4, 0, 0, 1)];
+        assert_eq!(snap.unaccounted(), 0);
+        assert!(snap.reconciles(), "shed is a first-class outcome bucket");
         // totals balanced across the wrong bins must still fail
+        snap.shed = 0;
         snap.responded = 5;
-        snap.per_key = vec![(0, 4, 5, 4, 0, 0), (1, 4, 0, 1, 0, 0)];
+        snap.per_key = vec![(0, 4, 5, 4, 0, 0, 0), (1, 4, 0, 1, 0, 0, 0)];
         assert_eq!(snap.unaccounted(), 0);
         assert!(!snap.reconciles(), "identity is per key bin, not just total");
     }
@@ -679,10 +745,10 @@ mod tests {
     fn stats_snapshot_rejects_garbage() {
         assert!(StatsSnapshot::decode(&[]).is_none());
         assert!(StatsSnapshot::decode(&[0u8; 7]).is_none(), "not u64-aligned");
-        assert!(StatsSnapshot::decode(&[0u8; 64]).is_none(), "short of the scalar block");
+        assert!(StatsSnapshot::decode(&[0u8; 72]).is_none(), "short of the scalar block");
         // row count promising more rows than the payload carries
-        let mut bytes = vec![0u8; 72];
-        bytes[64..72].copy_from_slice(&9u64.to_le_bytes());
+        let mut bytes = vec![0u8; 80];
+        bytes[72..80].copy_from_slice(&9u64.to_le_bytes());
         assert!(StatsSnapshot::decode(&bytes).is_none());
     }
 }

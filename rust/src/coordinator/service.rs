@@ -32,6 +32,7 @@
 //! explicitly not promised — each request carries its own response
 //! channel. Per-shard batch formation is FIFO per producer.
 
+use super::autoscale::{AutoscaleConfig, AutoscalePolicy, LoadSignal, ScaleDecision, ShedPolicy};
 use super::batcher::{BatchPolicy, KeyedBatcher};
 use super::engine::BatchEngine;
 use super::key::JobKey;
@@ -220,17 +221,47 @@ pub enum RouterPolicy {
     KeyAffine,
 }
 
-/// Restart budget for supervised (sharded-topology) workers.
+/// Restart budget and respawn pacing for supervised (sharded-topology)
+/// workers.
 #[derive(Debug, Clone, Copy)]
 pub struct RestartPolicy {
     /// Engine panics each worker slot survives before it is retired
     /// for good (0 = never respawn).
     pub max_restarts: u32,
+    /// Delay before a slot's first respawn, in milliseconds; each
+    /// further respawn of the same slot doubles it. Deterministic — no
+    /// jitter — so tests can sum the schedule exactly. 0 disables the
+    /// backoff (the pre-backoff tight-loop behavior).
+    pub backoff_base_ms: u64,
+    /// Ceiling on any single respawn delay, in milliseconds.
+    pub backoff_cap_ms: u64,
 }
 
 impl Default for RestartPolicy {
     fn default() -> Self {
-        RestartPolicy { max_restarts: 2 }
+        RestartPolicy { max_restarts: 2, backoff_base_ms: 25, backoff_cap_ms: 1_000 }
+    }
+}
+
+impl RestartPolicy {
+    /// [`Default`] pacing with a different restart budget — the common
+    /// customization.
+    pub fn with_max_restarts(max_restarts: u32) -> RestartPolicy {
+        RestartPolicy { max_restarts, ..RestartPolicy::default() }
+    }
+
+    /// The deterministic delay before the `used + 1`-th respawn of a
+    /// slot: `backoff_base_ms << used`, capped at `backoff_cap_ms`.
+    /// A persistently failing factory therefore takes at least the
+    /// summed schedule to exhaust its budget instead of burning it in
+    /// a tight crash loop.
+    pub fn backoff(&self, used: u32) -> Duration {
+        if self.backoff_base_ms == 0 {
+            return Duration::ZERO;
+        }
+        let factor = 1u64 << used.min(20);
+        let cap = self.backoff_cap_ms.max(self.backoff_base_ms);
+        Duration::from_millis(self.backoff_base_ms.saturating_mul(factor).min(cap))
     }
 }
 
@@ -250,6 +281,10 @@ struct SharedPool {
     batcher: Arc<Mutex<KeyedBatcher<Request, JobKey>>>,
     state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
+    /// Exact queued-request gauge (channel + stashed bins): `submit`
+    /// increments, the batcher decrements on emission/drain. The
+    /// admission gate reads it without taking the batcher lock.
+    depth: Arc<AtomicUsize>,
 }
 
 /// Supervisor for the sharded topology: owns the shards, the
@@ -258,6 +293,11 @@ struct Supervisor {
     shards: Vec<Arc<ShardQueue<Request>>>,
     factories: Vec<Arc<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>>,
     slot_alive: Vec<AtomicBool>,
+    /// Slot retired by the autoscaler (scale-down) and eligible for a
+    /// later scale-up — distinct from a dead slot (`slot_alive` false,
+    /// `paused` false), which stays retired for good. A paused slot
+    /// holds its shard closed and its factory retained.
+    paused: Vec<AtomicBool>,
     restarts_used: Vec<AtomicU32>,
     restart: RestartPolicy,
     alive: AtomicUsize,
@@ -284,6 +324,13 @@ pub struct QrdService {
     /// Largest matrix dimension `submit_m` accepts; oversized requests
     /// get an immediate error `Response` (they never reach a queue).
     max_m: usize,
+    /// Admission gate ([`Self::with_shed`]): when armed, `submit_key`
+    /// sheds new work once aggregate queue depth or p99 latency
+    /// crosses the policy's bounds. Default never sheds.
+    shed: ShedPolicy,
+    /// The autoscaler control thread when started via
+    /// [`Self::start_autoscaled`]: stop flag + join handle.
+    autoscaler: Option<(Arc<AtomicBool>, JoinHandle<()>)>,
 }
 
 impl QrdService {
@@ -331,11 +378,15 @@ impl QrdService {
         assert!(!factories.is_empty(), "pool needs at least one engine factory");
         let (tx, rx) = sync_channel::<Request>(policy.max_batch.max(1) * 4);
         let metrics = Arc::new(Metrics::new(factories.len()));
+        metrics.set_workers_alive(factories.len());
+        let depth = Arc::new(AtomicUsize::new(0));
         // deadline anchoring at true channel arrival (`Request::enq`),
         // not stash time: a rare-key request stashed during another
         // bin's fill pays at most one max_wait window total
         let batcher = Arc::new(Mutex::new(
-            KeyedBatcher::new(rx, |r: &Request| r.key, policy).with_arrival(|r: &Request| r.enq),
+            KeyedBatcher::new(rx, |r: &Request| r.key, policy)
+                .with_arrival(|r: &Request| r.enq)
+                .with_depth_gauge(depth.clone()),
         ));
         let state = Arc::new(PoolState {
             alive: AtomicUsize::new(factories.len()),
@@ -359,7 +410,7 @@ impl QrdService {
                         // stays exact and the last-man-out drain still
                         // fires. Submits keep getting error Responses
                         // instead of the process aborting at boot.
-                        retire_shared(&state, &batcher);
+                        retire_shared(&state, &batcher, &metrics);
                         None
                     }
                 }
@@ -367,8 +418,10 @@ impl QrdService {
             .collect();
         QrdService {
             metrics,
-            pool: Pool::Shared(SharedPool { ingress: tx, batcher, state, workers }),
+            pool: Pool::Shared(SharedPool { ingress: tx, batcher, state, workers, depth }),
             max_m: Self::DEFAULT_MAX_M,
+            shed: ShedPolicy::default(),
+            autoscaler: None,
         }
     }
 
@@ -403,8 +456,61 @@ impl QrdService {
     where
         F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
     {
+        Self::start_sharded_inner(factories, policy, restart, router, None, Duration::ZERO)
+    }
+
+    /// Start a sharded pool under a closed-loop autoscaler. `factories`
+    /// provides one retained factory per *potential* worker slot
+    /// (`autoscale.max_workers` is clamped to the factory count); the
+    /// pool boots with `autoscale.min_workers` live workers, and a
+    /// control thread samples aggregate queue depth and p99 latency
+    /// every `tick`, resuming a paused slot on [`ScaleDecision::Up`]
+    /// and retiring the highest live slot on [`ScaleDecision::Down`].
+    /// Scale-down drains the retiring shard through the existing
+    /// close/sweep path, so the no-dropped-request invariant holds
+    /// across every resize; hysteresis and cool-down live in
+    /// [`AutoscalePolicy`], which provably holds under steady load.
+    pub fn start_autoscaled<F>(
+        factories: Vec<F>,
+        policy: BatchPolicy,
+        restart: RestartPolicy,
+        autoscale: AutoscaleConfig,
+        tick: Duration,
+    ) -> QrdService
+    where
+        F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
+    {
+        Self::start_sharded_inner(
+            factories,
+            policy,
+            restart,
+            RouterPolicy::KeyAffine,
+            Some(autoscale),
+            tick,
+        )
+    }
+
+    fn start_sharded_inner<F>(
+        factories: Vec<F>,
+        policy: BatchPolicy,
+        restart: RestartPolicy,
+        router: RouterPolicy,
+        autoscale: Option<AutoscaleConfig>,
+        tick: Duration,
+    ) -> QrdService
+    where
+        F: Fn() -> Box<dyn BatchEngine> + Send + Sync + 'static,
+    {
         assert!(!factories.is_empty(), "pool needs at least one engine factory");
         let n = factories.len();
+        // without an autoscaler every slot boots live (initial == n)
+        let autoscale = autoscale.map(|cfg| {
+            let mut cfg = cfg.normalized();
+            cfg.max_workers = cfg.max_workers.min(n);
+            cfg.min_workers = cfg.min_workers.min(cfg.max_workers);
+            cfg
+        });
+        let initial = autoscale.as_ref().map_or(n, |cfg| cfg.min_workers);
         let metrics = Arc::new(Metrics::new(n));
         let bound = policy.max_batch.max(1) * 4;
         let sup = Arc::new(Supervisor {
@@ -413,10 +519,11 @@ impl QrdService {
                 .into_iter()
                 .map(|f| Arc::new(f) as Arc<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>)
                 .collect(),
-            slot_alive: (0..n).map(|_| AtomicBool::new(true)).collect(),
+            slot_alive: (0..n).map(|s| AtomicBool::new(s < initial)).collect(),
+            paused: (0..n).map(|s| AtomicBool::new(s >= initial)).collect(),
             restarts_used: (0..n).map(|_| AtomicU32::new(0)).collect(),
             restart,
-            alive: AtomicUsize::new(n),
+            alive: AtomicUsize::new(initial),
             dead: AtomicBool::new(false),
             next: AtomicUsize::new(0),
             router,
@@ -425,7 +532,14 @@ impl QrdService {
             metrics: metrics.clone(),
             handles: Mutex::new(Vec::with_capacity(n)),
         });
-        for slot in 0..n {
+        // paused slots hold their shards closed so neither the router's
+        // spill scan nor a stray push can strand work on a worker-less
+        // queue; `resume_slot` reopens before spawning
+        for slot in initial..n {
+            sup.shards[slot].close();
+        }
+        metrics.set_workers_alive(initial);
+        for slot in 0..initial {
             if spawn_worker(&sup, slot, 0).is_err() {
                 // boot-time thread exhaustion: retire the slot like a
                 // dead worker instead of aborting. Its queue is empty
@@ -435,7 +549,32 @@ impl QrdService {
                 sup.retire_slot(slot);
             }
         }
-        QrdService { metrics, pool: Pool::Sharded(sup), max_m: Self::DEFAULT_MAX_M }
+        let autoscaler = autoscale.and_then(|cfg| {
+            let stop = Arc::new(AtomicBool::new(false));
+            spawn_autoscaler(sup.clone(), cfg, tick, stop.clone()).map(|h| (stop, h))
+        });
+        QrdService {
+            metrics,
+            pool: Pool::Sharded(sup),
+            max_m: Self::DEFAULT_MAX_M,
+            shed: ShedPolicy::default(),
+            autoscaler,
+        }
+    }
+
+    /// Arm the admission gate: new submissions are shed with an
+    /// immediate overload error `Response` (and `STATUS_OVERLOAD` on
+    /// the wire — the TCP reader consults [`Self::overload_hint`])
+    /// once aggregate queue depth or p99 latency crosses the policy's
+    /// bounds. The default [`ShedPolicy`] never sheds.
+    pub fn with_shed(mut self, shed: ShedPolicy) -> Self {
+        self.shed = shed;
+        self
+    }
+
+    /// The admission policy in force.
+    pub fn shed_policy(&self) -> ShedPolicy {
+        self.shed
     }
 
     /// Submit one 4×4 matrix on the v1 wire shape ([`Self::submit_m`]
@@ -457,11 +596,26 @@ impl QrdService {
     /// malformed request (`m` under the op's minimum or over
     /// [`Self::max_m`], or a payload that is not
     /// [`JobKey::request_words`] words) is answered immediately with an
-    /// error `Response` and never reaches a queue. Every submitted
-    /// request is answered with a `Response` — an error `Response` if
-    /// the pool has died or dies while the request is queued — never a
-    /// dropped channel.
+    /// error `Response` and never reaches a queue, and when the
+    /// admission gate is armed ([`Self::with_shed`]) an overloaded
+    /// service sheds the request the same way — an immediate error
+    /// `Response` carrying a retry-after hint. Every submitted request
+    /// is answered with a `Response` — an error `Response` if the pool
+    /// has died or dies while the request is queued — never a dropped
+    /// channel.
     pub fn submit_key(&self, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
+        self.submit_key_inner(key, a, true)
+    }
+
+    /// [`Self::submit_key`] minus the admission gate, for callers that
+    /// already ran it (the TCP reader sheds *before* counting a
+    /// request as accepted, so a shed is first-class in the socket
+    /// ledger instead of a responded-with-error).
+    pub(crate) fn submit_key_admitted(&self, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
+        self.submit_key_inner(key, a, false)
+    }
+
+    fn submit_key_inner(&self, key: JobKey, a: Vec<u32>, gate: bool) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
         let m = key.m();
         let req = Request { key, a, tx, enq: Instant::now() };
@@ -489,6 +643,17 @@ impl QrdService {
             answer_failed(req, &reason);
             return rx;
         }
+        // shed at admission, before counting: like a reject, a shed
+        // request touches no accepted counter, so accepted == served
+        // keeps holding bin by bin. (The socket path gates earlier and
+        // counts sheds itself — `Metrics::on_shed` — answering with
+        // STATUS_OVERLOAD instead of this error Response.)
+        if gate {
+            if let Some(retry_ms) = self.overload_hint() {
+                answer_failed(req, &format!("overloaded; retry in ~{retry_ms} ms"));
+                return rx;
+            }
+        }
         self.metrics.on_request();
         self.metrics.on_key_request(key);
         match &self.pool {
@@ -497,8 +662,14 @@ impl QrdService {
                     answer_failed(req, DEAD_POOL_MSG);
                     return rx;
                 }
+                // gauge up before the send so a worker's decrement (on
+                // emission) can never observe the counter at zero first
+                p.depth.fetch_add(1, Ordering::Relaxed);
                 match p.ingress.send(req) {
-                    Err(dead) => answer_failed(dead.0, DEAD_POOL_MSG),
+                    Err(dead) => {
+                        p.depth.fetch_sub(1, Ordering::Relaxed);
+                        answer_failed(dead.0, DEAD_POOL_MSG)
+                    }
                     Ok(()) => {
                         // The pool may have died while we were
                         // enqueueing. The dying worker sets `dead`
@@ -536,6 +707,38 @@ impl QrdService {
         PendingResponse::new(self.submit_key(key, a))
     }
 
+    /// [`Self::submit_key_admitted`] returning a pollable
+    /// [`PendingResponse`] — the TCP reader's entry point.
+    pub(crate) fn submit_async_key_admitted(&self, key: JobKey, a: Vec<u32>) -> PendingResponse {
+        PendingResponse::new(self.submit_key_admitted(key, a))
+    }
+
+    /// Requests currently queued and not yet executing: aggregate shard
+    /// depth on the sharded topology, channel + stashed bins on the
+    /// shared one. The autoscaler and the admission gate both read this
+    /// signal.
+    pub fn queued_depth(&self) -> usize {
+        match &self.pool {
+            Pool::Shared(p) => p.depth.load(Ordering::Relaxed),
+            Pool::Sharded(sup) => sup.queued_total(),
+        }
+    }
+
+    /// Admission check: `Some(retry_after_ms)` when the service would
+    /// shed a new request right now (aggregate depth or p99 latency
+    /// over the armed [`ShedPolicy`]'s bounds), `None` when it would
+    /// admit. The TCP reader consults this *before* counting a request
+    /// as accepted, so a shed stays first-class in the socket ledger
+    /// (`accepted == responded + deadline_timeouts + peer_vanished +
+    /// shed`).
+    pub fn overload_hint(&self) -> Option<u64> {
+        if !self.shed.enabled() {
+            return None;
+        }
+        let p99 = self.metrics.latency().percentile_us(0.99);
+        self.shed.should_shed(self.queued_depth(), p99).then_some(self.shed.retry_after_ms)
+    }
+
     /// Shared metrics.
     pub fn metrics(&self) -> Arc<Metrics> {
         self.metrics.clone()
@@ -562,10 +765,16 @@ impl QrdService {
     /// already queued, join them, then answer anything still stranded
     /// (e.g. behind a dead slot) with error responses.
     pub fn shutdown(self) {
-        let QrdService { metrics: _, pool, max_m: _ } = self;
+        let QrdService { metrics: _, pool, max_m: _, shed: _, autoscaler } = self;
+        if let Some((stop, h)) = autoscaler {
+            // stop the control loop before tearing the pool down so a
+            // late tick cannot respawn a worker into closing shards
+            stop.store(true, Ordering::SeqCst);
+            let _ = h.join();
+        }
         match pool {
             Pool::Shared(p) => {
-                let SharedPool { ingress, batcher, state: _, workers } = p;
+                let SharedPool { ingress, batcher, state: _, workers, depth: _ } = p;
                 drop(ingress);
                 for w in workers {
                     let _ = w.join();
@@ -703,11 +912,11 @@ fn shared_worker_loop(
         };
         let Some((_key, batch)) = batch else {
             // ingress closed and drained: clean exit (shutdown)
-            retire_shared(&state, &batcher);
+            retire_shared(&state, &batcher, &metrics);
             return;
         };
         if !execute_batch(id, engine.as_ref(), batch, &metrics) {
-            retire_shared(&state, &batcher);
+            retire_shared(&state, &batcher, &metrics);
             return;
         }
     }
@@ -721,8 +930,14 @@ fn shared_worker_loop(
 /// sweeps via the same lock) cannot interleave between them;
 /// `shutdown`'s final drain backstops any request that slips past both
 /// sweeps.
-fn retire_shared(state: &PoolState, batcher: &Mutex<KeyedBatcher<Request, JobKey>>) {
-    if state.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
+fn retire_shared(
+    state: &PoolState,
+    batcher: &Mutex<KeyedBatcher<Request, JobKey>>,
+    metrics: &Metrics,
+) {
+    let prev = state.alive.fetch_sub(1, Ordering::SeqCst);
+    metrics.set_workers_alive(prev.saturating_sub(1));
+    if prev == 1 {
         let mut b = batcher.lock().unwrap_or_else(|p| p.into_inner());
         state.dead.store(true, Ordering::SeqCst);
         for req in b.drain() {
@@ -751,16 +966,33 @@ fn spawn_worker(sup: &Arc<Supervisor>, slot: usize, generation: u32) -> std::io:
 /// unwind the dying worker's thread with the slot still marked alive,
 /// leaking it and its queue forever.
 fn on_worker_death(sup: &Arc<Supervisor>, slot: usize) {
+    if sup.paused[slot].load(Ordering::SeqCst) {
+        // the autoscaler retired this slot while its worker was dying:
+        // don't respawn into a paused slot — rehome anything the
+        // worker's own drain missed, exactly like a non-last retirement
+        for req in sup.shards[slot].drain() {
+            sup.submit(req);
+        }
+        return;
+    }
     if !sup.dead.load(Ordering::SeqCst) {
         let used = sup.restarts_used[slot].fetch_add(1, Ordering::SeqCst);
         if used < sup.restart.max_restarts {
-            // count before spawning so the counter is visible by the
-            // time the replacement serves anything (overcounts by one
-            // only if the spawn itself fails — the pool is in thread
-            // exhaustion at that point anyway)
-            sup.metrics.on_worker_respawn();
-            if spawn_worker(sup, slot, used + 1).is_ok() {
-                return;
+            // crash-loop safety: deterministic exponential backoff
+            // before the respawn. Sleeping here is safe — this runs on
+            // the dying worker's own thread — and the slot's shard
+            // stays open the whole time, so siblings keep stealing its
+            // queue while the slot cools off.
+            std::thread::sleep(sup.restart.backoff(used));
+            if !sup.dead.load(Ordering::SeqCst) {
+                // count before spawning so the counter is visible by
+                // the time the replacement serves anything (overcounts
+                // by one only if the spawn itself fails — the pool is
+                // in thread exhaustion at that point anyway)
+                sup.metrics.on_worker_respawn();
+                if spawn_worker(sup, slot, used + 1).is_ok() {
+                    return;
+                }
             }
         }
     }
@@ -841,9 +1073,15 @@ impl Supervisor {
     /// Queues only admit pushes *before* `close`, so neither drain
     /// misses anything.
     fn retire_slot(&self, slot: usize) {
-        self.slot_alive[slot].store(false, Ordering::SeqCst);
+        // claim-or-bail: a slot the autoscaler already paused (or that
+        // was retired before us) has had `alive` adjusted by whoever
+        // claimed it first — adjusting again would double-count
+        if !self.slot_alive[slot].swap(false, Ordering::SeqCst) {
+            return;
+        }
         if self.alive.fetch_sub(1, Ordering::SeqCst) == 1 {
             self.dead.store(true, Ordering::SeqCst);
+            self.metrics.set_workers_alive(0);
             for q in &self.shards {
                 q.close();
             }
@@ -854,6 +1092,7 @@ impl Supervisor {
             }
             return;
         }
+        self.metrics.set_workers_alive(self.alive.load(Ordering::SeqCst));
         self.shards[slot].close();
         for req in self.shards[slot].drain() {
             // same routing as a fresh submit: live slots round-robin,
@@ -862,6 +1101,125 @@ impl Supervisor {
             self.submit(req);
         }
     }
+
+    /// Scale-down: retire a live slot *without* burning it. Claims the
+    /// slot exactly like [`Self::retire_slot`] (so a racing worker
+    /// death cannot double-adjust `alive`), flags it `paused` — a later
+    /// scale-up may resume it — and closes its shard. The worker then
+    /// drains everything still queued through the normal close/sweep
+    /// pop path before exiting, so scale-down preserves the
+    /// no-dropped-request invariant; its Clean exit's `retire_slot`
+    /// call bails at the claim guard. Returns whether the slot was
+    /// actually paused.
+    fn pause_slot(&self, slot: usize) -> bool {
+        if self.dead.load(Ordering::SeqCst) {
+            return false;
+        }
+        if !self.slot_alive[slot].swap(false, Ordering::SeqCst) {
+            return false;
+        }
+        self.paused[slot].store(true, Ordering::SeqCst);
+        self.alive.fetch_sub(1, Ordering::SeqCst);
+        self.metrics.set_workers_alive(self.alive.load(Ordering::SeqCst));
+        self.shards[slot].close();
+        true
+    }
+
+    /// Aggregate queued depth across the shards — the autoscaler's and
+    /// the admission gate's load signal. Paused and dead slots hold
+    /// drained, closed shards, so summing everything stays exact.
+    fn queued_total(&self) -> usize {
+        self.shards.iter().map(|q| q.len()).sum()
+    }
+}
+
+/// Scale-up: resume a slot that [`Supervisor::pause_slot`] retired.
+/// Reopens the shard, marks the slot live (restoring its `alive`
+/// share), and spawns a fresh worker from the slot's retained factory.
+/// The restart budget carries over — a crash-looping factory does not
+/// earn a fresh budget by being scaled away and back. A failed spawn
+/// rolls back through the normal retire path (the slot is then burned,
+/// exactly like a boot-time spawn failure).
+fn resume_slot(sup: &Arc<Supervisor>, slot: usize) -> bool {
+    if sup.dead.load(Ordering::SeqCst) || !sup.paused[slot].load(Ordering::SeqCst) {
+        return false;
+    }
+    sup.shards[slot].reopen();
+    sup.paused[slot].store(false, Ordering::SeqCst);
+    sup.alive.fetch_add(1, Ordering::SeqCst);
+    sup.slot_alive[slot].store(true, Ordering::SeqCst);
+    sup.metrics.set_workers_alive(sup.alive.load(Ordering::SeqCst));
+    let generation = sup.restarts_used[slot].load(Ordering::SeqCst);
+    if spawn_worker(sup, slot, generation).is_ok() {
+        return true;
+    }
+    sup.retire_slot(slot);
+    false
+}
+
+/// The autoscaler control thread: one [`AutoscalePolicy`] tick per
+/// `tick` of wall clock, acting on the supervisor (resume a paused
+/// slot on `Up`, pause the highest live slot on `Down`). Exits when
+/// the service shuts down (`stop`) or the pool dies.
+fn spawn_autoscaler(
+    sup: Arc<Supervisor>,
+    cfg: AutoscaleConfig,
+    tick: Duration,
+    stop: Arc<AtomicBool>,
+) -> Option<JoinHandle<()>> {
+    let tick = tick.max(Duration::from_millis(1));
+    std::thread::Builder::new()
+        .name("qrd-autoscaler".into())
+        .spawn(move || {
+            let mut policy = AutoscalePolicy::new(cfg);
+            let mut last_samples = 0u64;
+            loop {
+                std::thread::sleep(tick);
+                if stop.load(Ordering::SeqCst) || sup.dead.load(Ordering::SeqCst) {
+                    return;
+                }
+                let alive = sup.alive.load(Ordering::SeqCst);
+                let queued = sup.queued_total();
+                // the histogram is cumulative, so only let its p99
+                // argue for capacity while new samples are arriving —
+                // a long-gone burst must not pin the pool at max
+                let samples = sup.metrics.latency().count();
+                let p99_us = if samples > last_samples {
+                    sup.metrics.latency().percentile_us(0.99)
+                } else {
+                    None
+                };
+                last_samples = samples;
+                match policy.decide(LoadSignal { alive, queued, p99_us }) {
+                    ScaleDecision::Up => {
+                        let paused =
+                            (0..sup.shards.len()).find(|&s| sup.paused[s].load(Ordering::SeqCst));
+                        if let Some(slot) = paused {
+                            if resume_slot(&sup, slot) {
+                                sup.metrics.on_scale_up();
+                            }
+                        }
+                    }
+                    ScaleDecision::Down => {
+                        // re-check against min with a fresh read: a
+                        // worker death since the sample must not let a
+                        // pause take the pool below the floor
+                        if sup.alive.load(Ordering::SeqCst) > policy.config().min_workers {
+                            let victim = (0..sup.shards.len())
+                                .rev()
+                                .find(|&s| sup.slot_alive[s].load(Ordering::SeqCst));
+                            if let Some(slot) = victim {
+                                if sup.pause_slot(slot) {
+                                    sup.metrics.on_scale_down();
+                                }
+                            }
+                        }
+                    }
+                    ScaleDecision::Hold => {}
+                }
+            }
+        })
+        .ok()
 }
 
 enum WorkerExit {
@@ -966,10 +1324,7 @@ mod tests {
 
     #[test]
     fn all_requests_answered_in_order_of_submission() {
-        let svc = QrdService::start(
-            || Box::new(NativeEngine::flagship()),
-            BatchPolicy::default(),
-        );
+        let svc = QrdService::start(|| Box::new(NativeEngine::flagship()), BatchPolicy::default());
         let eng = NativeEngine::flagship();
         let mut expected = Vec::new();
         let mut rxs = Vec::new();
@@ -993,10 +1348,7 @@ mod tests {
 
     #[test]
     fn shutdown_joins_cleanly() {
-        let svc = QrdService::start(
-            || Box::new(NativeEngine::flagship()),
-            BatchPolicy::default(),
-        );
+        let svc = QrdService::start(|| Box::new(NativeEngine::flagship()), BatchPolicy::default());
         let rx = svc.submit([0u32; 16]);
         let _ = rx.recv().unwrap();
         svc.shutdown();
@@ -1007,10 +1359,8 @@ mod tests {
         let factories: Vec<_> = (0..3)
             .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
             .collect();
-        let svc = QrdService::start_pool(
-            factories,
-            BatchPolicy { max_batch: 8, max_wait_us: 100 },
-        );
+        let policy = BatchPolicy { max_batch: 8, max_wait_us: 100 };
+        let svc = QrdService::start_pool(factories, policy);
         assert_eq!(svc.pool_size(), 3);
         let eng = NativeEngine::flagship();
         let mut rxs = Vec::new();
@@ -1181,7 +1531,12 @@ mod tests {
             }
             for (rx, (key, want)) in rxs.into_iter().zip(want) {
                 let resp = rx.recv().expect("response");
-                assert!(resp.error.is_none(), "sharded={sharded} {}: {:?}", key.label(), resp.error);
+                assert!(
+                    resp.error.is_none(),
+                    "sharded={sharded} {}: {:?}",
+                    key.label(),
+                    resp.error
+                );
                 assert_eq!(resp.key, key);
                 assert_eq!(resp.out, want, "sharded={sharded} {}", key.label());
             }
@@ -1246,11 +1601,8 @@ mod tests {
 
     #[test]
     fn malformed_submissions_get_immediate_error_responses() {
-        let svc = QrdService::start(
-            || Box::new(NativeEngine::flagship()),
-            BatchPolicy::default(),
-        )
-        .with_max_m(8);
+        let svc = QrdService::start(|| Box::new(NativeEngine::flagship()), BatchPolicy::default())
+            .with_max_m(8);
         assert_eq!(svc.max_m(), 8);
         // m over the cap, m = 0, and a payload/m mismatch: all answered,
         // none reaches a queue (no worker involvement needed)
@@ -1333,8 +1685,7 @@ mod tests {
             Box::new(|| Box::new(PanicEngine) as Box<dyn BatchEngine>),
             Box::new(|| Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>),
         ];
-        let svc =
-            QrdService::start_pool(factories, BatchPolicy { max_batch: 4, max_wait_us: 50 });
+        let svc = QrdService::start_pool(factories, BatchPolicy { max_batch: 4, max_wait_us: 50 });
         let eng = NativeEngine::flagship();
         let mut served = 0usize;
         let mut errored = 0usize;
@@ -1372,7 +1723,7 @@ mod tests {
         let svc = QrdService::start_sharded(
             vec![factory],
             BatchPolicy { max_batch: 4, max_wait_us: 50 },
-            RestartPolicy { max_restarts: 2 },
+            RestartPolicy::with_max_restarts(2),
         );
         // the first request hits the panicking engine: its batch fails…
         let resp = svc.submit([0u32; 16]).recv().expect("response");
@@ -1402,7 +1753,7 @@ mod tests {
         let svc = QrdService::start_sharded(
             vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
             BatchPolicy { max_batch: 2, max_wait_us: 50 },
-            RestartPolicy { max_restarts: 0 },
+            RestartPolicy::with_max_restarts(0),
         );
         let rxs: Vec<_> = (0..32).map(|_| svc.submit([0u32; 16])).collect();
         for rx in rxs {
@@ -1433,7 +1784,7 @@ mod tests {
         let svc = QrdService::start_sharded(
             factories,
             BatchPolicy { max_batch: 4, max_wait_us: 50 },
-            RestartPolicy { max_restarts: 0 },
+            RestartPolicy::with_max_restarts(0),
         );
         let eng = NativeEngine::flagship();
         let mats: Vec<[u32; 16]> = (0..80)
@@ -1468,7 +1819,7 @@ mod tests {
         let svc = QrdService::start_sharded(
             vec![|| Box::new(FailEngine) as Box<dyn BatchEngine>],
             BatchPolicy { max_batch: 4, max_wait_us: 50 },
-            RestartPolicy { max_restarts: 0 },
+            RestartPolicy::with_max_restarts(0),
         );
         for _ in 0..3 {
             let resp = svc.submit([0u32; 16]).recv().expect("response");
@@ -1710,7 +2061,7 @@ mod tests {
         let svc = QrdService::start_sharded(
             vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
             BatchPolicy { max_batch: 2, max_wait_us: 50 },
-            RestartPolicy { max_restarts: 0 },
+            RestartPolicy::with_max_restarts(0),
         );
         let mut pendings: Vec<_> = (0..8).map(|_| svc.submit_async([0u32; 16])).collect();
         let deadline = Instant::now() + Duration::from_secs(30);
@@ -1726,6 +2077,308 @@ mod tests {
             assert!(resp.error.is_some(), "{resp:?}");
             assert!(resp.result().is_err());
         }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backoff_schedule_is_deterministic_and_capped() {
+        let p = RestartPolicy { max_restarts: 10, backoff_base_ms: 25, backoff_cap_ms: 200 };
+        assert_eq!(p.backoff(0), Duration::from_millis(25));
+        assert_eq!(p.backoff(1), Duration::from_millis(50));
+        assert_eq!(p.backoff(2), Duration::from_millis(100));
+        assert_eq!(p.backoff(3), Duration::from_millis(200));
+        assert_eq!(p.backoff(4), Duration::from_millis(200), "capped");
+        assert_eq!(p.backoff(63), Duration::from_millis(200), "no shift overflow");
+        let off = RestartPolicy { max_restarts: 1, backoff_base_ms: 0, backoff_cap_ms: 100 };
+        assert_eq!(off.backoff(5), Duration::ZERO, "base 0 disables the backoff");
+    }
+
+    #[test]
+    fn respawn_backoff_paces_a_crash_loop() {
+        // an always-panicking factory with budget 2 and a 60 ms base:
+        // exhausting the budget requires the two respawn delays (60 ms
+        // then 120 ms), so the crash loop provably cannot burn its
+        // budget faster than the summed schedule
+        let svc = QrdService::start_sharded(
+            vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
+            BatchPolicy { max_batch: 2, max_wait_us: 50 },
+            RestartPolicy { max_restarts: 2, backoff_base_ms: 60, backoff_cap_ms: 10_000 },
+        );
+        let t0 = Instant::now();
+        // enough queued work that every respawned generation finds a
+        // batch to panic on (each panic consumes at most max_batch)
+        let rxs: Vec<_> = (0..12).map(|_| svc.submit([0u32; 16])).collect();
+        for rx in rxs {
+            let resp = rx.recv().expect("answered, not dropped");
+            assert!(resp.error.is_some(), "{resp:?}");
+        }
+        // the final drain runs only after the budget exhausts, which
+        // the backoff schedule places at ≥ 60 + 120 ms after the first
+        // panic
+        assert!(
+            t0.elapsed() >= Duration::from_millis(180),
+            "budget burned in {:?}; the backoff schedule requires ≥ 180 ms",
+            t0.elapsed()
+        );
+        let m = svc.metrics();
+        assert_eq!(m.worker_panics(), 3, "one panic per generation");
+        assert_eq!(m.worker_respawns(), 2);
+        assert_eq!(svc.alive_workers(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn scale_down_drains_the_retiring_shard_exactly_once() {
+        // trap both workers inside gated engines, queue work on both
+        // shards, then pause slot 1 while its requests are still
+        // queued: the retiring worker must drain its closed shard
+        // before exiting, so every request gets exactly one response
+        let gates: Vec<Arc<(Mutex<bool>, Condvar)>> =
+            (0..2).map(|_| Arc::new((Mutex::new(false), Condvar::new()))).collect();
+        let entered: Vec<Arc<(Mutex<bool>, Condvar)>> =
+            (0..2).map(|_| Arc::new((Mutex::new(false), Condvar::new()))).collect();
+        type Factory = Box<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>;
+        let factories: Vec<Factory> = (0..2)
+            .map(|s| {
+                let (g, e) = (gates[s].clone(), entered[s].clone());
+                Box::new(move || {
+                    Box::new(GateEngine {
+                        gate: g.clone(),
+                        entered: e.clone(),
+                        inner: NativeEngine::flagship(),
+                    }) as Box<dyn BatchEngine>
+                }) as Factory
+            })
+            .collect();
+        let svc = QrdService::start_sharded_with_router(
+            factories,
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy::default(),
+            RouterPolicy::RoundRobin,
+        );
+        // occupy both workers: keep probing until each is trapped
+        let probe: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.1 + 0.5).to_bits());
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let mut probe_rxs = Vec::new();
+        for e in &entered {
+            loop {
+                let (lock, cv) = &**e;
+                let guard = lock.lock().unwrap();
+                let (guard, _) = cv
+                    .wait_timeout_while(guard, Duration::from_millis(50), |in_gate| !*in_gate)
+                    .unwrap();
+                if *guard {
+                    break;
+                }
+                drop(guard);
+                assert!(Instant::now() < deadline, "a worker never entered its engine");
+                probe_rxs.push(svc.submit(probe));
+            }
+        }
+        // both workers are stuck inside run(): these all queue (round-
+        // robin spreads them over both shards, nobody can pop or steal)
+        let eng = NativeEngine::flagship();
+        let mats: Vec<[u32; 16]> = (0..20)
+            .map(|k| {
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.05).to_bits())
+            })
+            .collect();
+        let rxs: Vec<_> = mats.iter().map(|m| svc.submit(*m)).collect();
+        let Pool::Sharded(sup) = &svc.pool else { unreachable!("sharded service") };
+        assert!(svc.queued_depth() > 0, "requests must be queued before the scale-down");
+        // scale down slot 1 with its shard still loaded
+        assert!(sup.pause_slot(1), "slot 1 must pause");
+        assert_eq!(svc.alive_workers(), 1);
+        assert_eq!(svc.metrics().workers_alive(), 1);
+        // open both gates: the retiring worker finishes its trapped
+        // batch, drains its closed shard, and exits without retiring
+        // the slot a second time
+        for g in &gates {
+            let (lock, cv) = &**g;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        for (rx, m) in rxs.into_iter().zip(&mats) {
+            let resp = rx
+                .recv_timeout(Duration::from_secs(30))
+                .expect("exactly one response per request across the scale-down");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.out, &eng.qrd_bits(m));
+        }
+        for rx in probe_rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("probe answered");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+        }
+        assert_eq!(svc.alive_workers(), 1, "still scaled down after the drain");
+        // scale back up: the slot resumes from its retained factory
+        // (the gate is already open, so the fresh engine serves)
+        assert!(resume_slot(sup, 1), "paused slot must resume");
+        assert_eq!(svc.alive_workers(), 2);
+        assert_eq!(svc.metrics().workers_alive(), 2);
+        let resp = svc.submit(probe).recv_timeout(Duration::from_secs(30)).expect("served");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        svc.shutdown();
+    }
+
+    /// Engine that sleeps per batch — slow capacity, so queues build
+    /// under load and the autoscaler has something to react to.
+    struct SlowEngine {
+        delay: Duration,
+        inner: NativeEngine,
+    }
+
+    impl BatchEngine for SlowEngine {
+        fn run(&self, key: JobKey, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
+            std::thread::sleep(self.delay);
+            self.inner.run(key, jobs)
+        }
+        fn preferred_batch(&self, _key: JobKey) -> usize {
+            1
+        }
+        fn name(&self) -> String {
+            "slow-test".into()
+        }
+    }
+
+    #[test]
+    fn autoscaler_scales_up_under_load_and_back_down_without_flapping() {
+        type Factory = Box<dyn Fn() -> Box<dyn BatchEngine> + Send + Sync>;
+        let factories: Vec<Factory> = (0..3)
+            .map(|_| {
+                Box::new(|| {
+                    Box::new(SlowEngine {
+                        delay: Duration::from_millis(3),
+                        inner: NativeEngine::flagship(),
+                    }) as Box<dyn BatchEngine>
+                }) as Factory
+            })
+            .collect();
+        let svc = QrdService::start_autoscaled(
+            factories,
+            BatchPolicy { max_batch: 4, max_wait_us: 50 },
+            RestartPolicy::default(),
+            AutoscaleConfig {
+                min_workers: 1,
+                max_workers: 3,
+                up_depth_per_worker: 3.0,
+                down_depth_per_worker: 0.5,
+                up_p99_us: 0.0,
+                cooldown_ticks: 1,
+            },
+            Duration::from_millis(5),
+        );
+        assert_eq!(svc.alive_workers(), 1, "boots at min_workers");
+        assert_eq!(svc.metrics().workers_alive(), 1);
+        assert_eq!(svc.pool_size(), 3, "max slots retained for scale-up");
+        // sustained burst: the slow engine keeps the queue well over
+        // the scale-up threshold until the pool grows to max
+        let eng = NativeEngine::flagship();
+        let mats: Vec<[u32; 16]> = (0..240)
+            .map(|k| {
+                std::array::from_fn(|i| ((k as f32 + 1.0) * (i as f32 - 7.5) * 0.03).to_bits())
+            })
+            .collect();
+        // submit from a scoped thread (bounded shards make `submit`
+        // block, which is what keeps the backlog deep) and watch the
+        // worker-count gauge climb to max while the burst is in flight
+        let rxs = std::thread::scope(|s| {
+            let submitter = s.spawn(|| mats.iter().map(|m| svc.submit(*m)).collect::<Vec<_>>());
+            let deadline = Instant::now() + Duration::from_secs(30);
+            while svc.metrics().workers_alive() < 3 {
+                assert!(Instant::now() < deadline, "never scaled up to max under burst");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            submitter.join().expect("submitter")
+        });
+        assert!(svc.metrics().scale_ups() >= 2);
+        // every request is served across the resizes
+        for (rx, m) in rxs.into_iter().zip(&mats) {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("served across resizes");
+            assert!(resp.error.is_none(), "{:?}", resp.error);
+            assert_eq!(&resp.out, &eng.qrd_bits(m));
+        }
+        // burst over: the pool must drain back down to min_workers
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while svc.metrics().workers_alive() > 1 {
+            assert!(Instant::now() < deadline, "never scaled back down after the burst");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(svc.metrics().scale_downs() >= 2);
+        assert_eq!(svc.alive_workers(), 1);
+        // no-flap: idle at min_workers is inside the hysteresis band,
+        // so ~40 further ticks must not move the pool at all
+        let (ups, downs) = (svc.metrics().scale_ups(), svc.metrics().scale_downs());
+        std::thread::sleep(Duration::from_millis(200));
+        assert_eq!(svc.metrics().scale_ups(), ups, "idle pool must not scale up");
+        assert_eq!(svc.metrics().scale_downs(), downs, "idle pool must not flap");
+        assert_eq!(svc.metrics().workers_alive(), 1);
+        // still serves after settling
+        let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.2 + 1.0).to_bits());
+        let resp = svc.submit(a).recv_timeout(Duration::from_secs(30)).expect("served");
+        assert_eq!(resp.result().expect("ok"), &eng.qrd_bits(&a));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn admission_gate_sheds_past_the_depth_bound() {
+        // one gated worker, shed bound 2: trap the worker, queue two
+        // requests (depth == bound), and the third submission must be
+        // shed immediately with a retry hint — while the queued two
+        // are still served once the gate opens
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new((Mutex::new(false), Condvar::new()));
+        let (g, e) = (gate.clone(), entered.clone());
+        let svc = QrdService::start_sharded(
+            vec![move || {
+                Box::new(GateEngine {
+                    gate: g.clone(),
+                    entered: e.clone(),
+                    inner: NativeEngine::flagship(),
+                }) as Box<dyn BatchEngine>
+            }],
+            BatchPolicy { max_batch: 1, max_wait_us: 50 },
+            RestartPolicy::default(),
+        )
+        .with_shed(ShedPolicy { depth: 2, p99_us: 0.0, retry_after_ms: 40 });
+        let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.1 + 0.5).to_bits());
+        let probe_rx = svc.submit(a);
+        {
+            let (lock, cv) = &*entered;
+            let guard = lock.lock().unwrap();
+            let (guard, timeout) = cv
+                .wait_timeout_while(guard, Duration::from_secs(30), |in_gate| !*in_gate)
+                .unwrap();
+            assert!(!timeout.timed_out() && *guard, "worker never entered the engine");
+        }
+        // the worker is trapped: these two sit in the shard queue
+        let queued: Vec<_> = (0..2).map(|_| svc.submit(a)).collect();
+        assert_eq!(svc.queued_depth(), 2);
+        assert_eq!(svc.overload_hint(), Some(40));
+        // third submission: shed at admission, never queued
+        let resp = svc.submit(a).recv().expect("shed response, not a hang");
+        let err = resp.result().expect_err("over the bound must shed");
+        assert!(err.contains("overloaded; retry in ~40 ms"), "{err}");
+        // a shed is a reject: only the three admitted requests counted
+        assert_eq!(svc.metrics().requests(), 3);
+        // open the gate: everything admitted is still served
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        let eng = NativeEngine::flagship();
+        for rx in queued.into_iter().chain([probe_rx]) {
+            let resp = rx.recv_timeout(Duration::from_secs(30)).expect("served");
+            assert_eq!(resp.result().expect("admitted requests are served"), &eng.qrd_bits(&a));
+        }
+        // load gone ⇒ gate disarms: new submissions are admitted again
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while svc.overload_hint().is_some() {
+            assert!(Instant::now() < deadline, "gate never disarmed after the drain");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let resp = svc.submit(a).recv_timeout(Duration::from_secs(30)).expect("served");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
         svc.shutdown();
     }
 }

@@ -110,6 +110,20 @@ impl<T> ShardQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Reopen a closed queue so pushes succeed again — the scale-up
+    /// half of worker-slot reuse: a slot retired by the autoscaler
+    /// closes its shard (drain semantics unchanged), and reactivating
+    /// the slot reopens it before the fresh worker spawns. A no-op on
+    /// an open queue. Callers must guarantee the retiring consumer is
+    /// gone before reopening (the supervisor does: retire drains the
+    /// shard and the slot's alive flag gates routing).
+    pub fn reopen(&self) {
+        let mut st = self.lock();
+        st.closed = false;
+        drop(st);
+        self.not_full.notify_all();
+    }
+
     /// Take everything queued right now (shutdown / last-worker-death
     /// sweep: the caller answers each item with an error `Response`).
     pub fn drain(&self) -> Vec<T> {
@@ -379,6 +393,39 @@ mod tests {
         q.close();
         assert_eq!(batch_of(q.pop_batch(8, MS, MS)), vec![1, 2]);
         assert!(matches!(q.pop_batch(8, MS, MS), Pop::Closed));
+    }
+
+    #[test]
+    fn reopen_reverses_close() {
+        let q = ShardQueue::bounded(8);
+        q.close();
+        assert!(q.push(1).is_err());
+        q.reopen();
+        q.push(2).unwrap();
+        assert_eq!(batch_of(q.pop_batch(8, MS, MS)), vec![2]);
+        // close → drain → reopen is the autoscaler's retire/reactivate
+        // cycle; contents survive it untouched
+        q.push(3).unwrap();
+        q.close();
+        assert_eq!(q.drain(), vec![3]);
+        q.reopen();
+        q.push(4).unwrap();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn reopen_wakes_a_blocked_pusher_into_success() {
+        let q = Arc::new(ShardQueue::bounded(1));
+        q.push(1).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(2));
+        std::thread::sleep(Duration::from_millis(20));
+        // drain + reopen while a pusher is blocked at the bound: the
+        // pusher must land its item in the reopened queue
+        q.drain();
+        q.reopen();
+        pusher.join().unwrap().unwrap();
+        assert_eq!(q.drain(), vec![2]);
     }
 
     #[test]

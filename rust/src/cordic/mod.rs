@@ -238,11 +238,7 @@ mod tests {
         let before = ((x * x + y * y) as f64).sqrt();
         let after = ((xr * xr + yr * yr) as f64).sqrt();
         let k = c.gain();
-        assert!(
-            (after / before - k).abs() < 1e-4,
-            "norm ratio {} vs K {k}",
-            after / before
-        );
+        assert!((after / before - k).abs() < 1e-4, "norm ratio {} vs K {k}", after / before);
         let _ = n;
     }
 

@@ -19,10 +19,7 @@ pub fn ablate(nmat: usize, seed: u64) -> anyhow::Result<()> {
 /// Guard-bit sweep: why the paper appends exactly 2 integer bits.
 fn guard_bits(nmat: usize, seed: u64) -> anyhow::Result<()> {
     println!("Ablation: CORDIC integer guard bits (HUB single N=26, it=24)");
-    println!(
-        "{:>6} | {:>10} | {:>9} | {}",
-        "guard", "SNR (dB)", "LUTs", "note"
-    );
+    println!("{:>6} | {:>10} | {:>9} | {}", "guard", "SNR (dB)", "LUTs", "note");
     let t = Tech::virtex6();
     for guard in 0..=3u32 {
         let mut cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);

@@ -16,10 +16,7 @@ use crate::rotator::RotatorConfig;
 pub fn fig10(nmat: usize, seed: u64) -> anyhow::Result<()> {
     println!("Fig 10: mean SNR (dB) over r=1..20 vs N, 4x4 single QRD, {nmat} matrices/point");
     let variants: Vec<(&str, Box<dyn Fn(u32) -> RotatorConfig>)> = vec![
-        (
-            "IEEETrunc",
-            Box::new(|n| RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3)),
-        ),
+        ("IEEETrunc", Box::new(|n| RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3))),
         (
             "IEEERound",
             Box::new(|n| {
@@ -55,10 +52,7 @@ pub fn fig10(nmat: usize, seed: u64) -> anyhow::Result<()> {
                 c
             }),
         ),
-        (
-            "HUBFull",
-            Box::new(|n| RotatorConfig::hub(FpFormat::SINGLE, n, n - 2)),
-        ),
+        ("HUBFull", Box::new(|n| RotatorConfig::hub(FpFormat::SINGLE, n, n - 2))),
     ];
 
     print!("{:>3}", "N");

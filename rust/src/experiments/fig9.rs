@@ -13,7 +13,7 @@ use crate::rotator::RotatorConfig;
 pub fn fig9(nmat: usize, seed: u64) -> anyhow::Result<()> {
     // The paper sweeps "different numbers of CORDIC microrotations";
     // N−6 … N−1 brackets both optima.
-    println!("Fig 9: mean SNR (dB) over r=1..20 vs microrotations, 4x4 single QRD, {nmat} matrices/point");
+    println!("Fig 9: mean SNR (dB) over r=1..20 vs microrotations, 4x4 QRD, {nmat} matrices/point");
     for n in 25u32..=30 {
         println!("\n  N = {n}");
         println!("  {:>6} | {:>10} | {:>10}", "niter", "IEEE", "HUB");

@@ -152,8 +152,9 @@ mod tests {
             for &b in &vals {
                 for shift in 0..8u32 {
                     for &sub in &[false, true] {
-                        let exact = hub_to_f64(a, n)
-                            + if sub { -1.0 } else { 1.0 } * hub_to_f64(b, n) / 2f64.powi(shift as i32);
+                        let sign = if sub { -1.0 } else { 1.0 };
+                        let exact =
+                            hub_to_f64(a, n) + sign * hub_to_f64(b, n) / 2f64.powi(shift as i32);
                         let got = hub_to_f64(hub_addsub(a, b, shift, sub, n), n);
                         let ulp = 2f64.powi(-(n as i32 - 1)) * 2.0;
                         assert!(

@@ -197,10 +197,8 @@ pub fn rotator_cost(cfg: &RotatorConfig, t: &Tech) -> RotatorCost {
     let (in_c, in_delay, in_regs) = input_converter(t, cfg);
     let (out_c, out_delay, out_crit, out_regs) = output_converter(t, cfg);
 
-    let luts =
-        (cordic_luts + flip.luts + in_c.luts + out_c.luts) * LUT_OVERHEAD;
-    let regs_total =
-        (cordic_regs + flip_regs as f64 + in_regs.regs + out_regs.regs) * REG_PACKING;
+    let luts = (cordic_luts + flip.luts + in_c.luts + out_c.luts) * LUT_OVERHEAD;
+    let regs_total = (cordic_regs + flip_regs as f64 + in_regs.regs + out_regs.regs) * REG_PACKING;
 
     let (delay_ns, critical) = [
         (stage_delay, "cordic-stage"),

@@ -10,12 +10,15 @@
 //!             [--workers W] [--threads T] [--tile T]
 //!             [--shards S] [--max-restarts R]
 //!             [--max-m M] [--blocked-m M] [--panel P]
+//!             [--min-workers W] [--max-workers W] [--tick-ms T]
+//!             [--shed-depth D] [--shed-p99-ms P] [--retry-after-ms R]
+//!             [--backoff-ms B] [--backoff-cap-ms C] [--chaos]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //!             [--listen ADDR [--window W] [--deadline-ms D]
 //!              [--read-timeout-ms T] [--write-timeout-ms T]]
 //! repro loadgen [--addr HOST:PORT] [--conns N] [--threads T]
 //!               [--requests R] [--max-m M] [--ops LIST] [--seed S]
-//!               [--chaos] [--shutdown] [--bench-out PATH]
+//!               [--chaos] [--burst] [--shutdown] [--bench-out PATH]
 //! ```
 //!
 //! `--workers` is the number of persistent engine threads in the pool;
@@ -58,6 +61,18 @@
 //! frames, garbage bytes, mid-request disconnects, slow-loris stalls,
 //! and half-closes, and the run reconciles client ledgers against the
 //! server's counters, failing on any unaccounted request.
+//!
+//! Overload control: `--min-workers`/`--max-workers` turn the sharded
+//! pool into a closed-loop autoscaler (queue depth and p99 sampled
+//! every `--tick-ms`, hysteresis plus cool-down, scale-down drains the
+//! retiring shard first); `--shed-depth`/`--shed-p99-ms` add an
+//! admission gate that answers excess work with an overload frame
+//! carrying a `--retry-after-ms` hint; `--backoff-ms` and
+//! `--backoff-cap-ms` pace supervised respawn so a crash-looping
+//! engine cannot spin the supervisor. `serve --chaos` injects
+//! deterministic engine faults (panic/error/latency), and
+//! `loadgen --burst` drives open-loop overload, reconciling the
+//! client-side shed ledger against the server's per-key counters.
 
 use fp_givens::util::cli::Args;
 
@@ -65,8 +80,8 @@ const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M] [--panel P]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
-  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--shutdown] [--bench-out PATH]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--min-workers W] [--max-workers W] [--tick-ms T] [--shed-depth D] [--shed-p99-ms P] [--retry-after-ms R] [--backoff-ms B] [--backoff-cap-ms C] [--chaos] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
+  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--burst] [--shutdown] [--bench-out PATH]
   repro lint [--root DIR] [--skip no-panic|lock-order|atomics-audit|wire-consistency]";
 
 fn main() -> anyhow::Result<()> {
@@ -115,8 +130,7 @@ fn main() -> anyhow::Result<()> {
                 anyhow::ensure!(m >= 1, "--m must be at least 1");
                 let tile = args.get_as("tile", NativeEngine::DEFAULT_TILE);
                 let threads = args.get_as("threads", 1usize);
-                let blocked_m =
-                    args.get_as("blocked-m", NativeEngine::DEFAULT_BLOCKED_MIN);
+                let blocked_m = args.get_as("blocked-m", NativeEngine::DEFAULT_BLOCKED_MIN);
                 let panel = args.get_as("panel", 0usize);
                 let native = NativeEngine::with_engine(QrdEngine::new(cfg))
                     .with_threads(threads)
@@ -127,9 +141,7 @@ fn main() -> anyhow::Result<()> {
                 let mats: Vec<Vec<u32>> = (0..batch)
                     .map(|_| {
                         let s = 2f32.powf(rng.range(-4.0, 4.0) as f32);
-                        (0..m * m)
-                            .map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits())
-                            .collect()
+                        (0..m * m).map(|_| (rng.range(-1.0, 1.0) as f32 * s).to_bits()).collect()
                     })
                     .collect();
                 let t0 = std::time::Instant::now();
@@ -182,29 +194,47 @@ fn main() -> anyhow::Result<()> {
             let shards = args.get_as("shards", 0usize);
             let sharded = !args.has("shards") || shards > 0;
             let max_restarts = args.get_as("max-restarts", 2u32);
-            let tile = args.get_as(
-                "tile",
-                fp_givens::coordinator::NativeEngine::DEFAULT_TILE,
-            );
+            let tile = args.get_as("tile", fp_givens::coordinator::NativeEngine::DEFAULT_TILE);
             let max_m = args.get_as("max-m", 4usize);
             let blocked_m = args.get_as(
                 "blocked-m",
                 fp_givens::coordinator::NativeEngine::DEFAULT_BLOCKED_MIN,
             );
             let panel = args.get_as("panel", 0usize);
+            // --max-workers is the autoscaler's ceiling (it overrides
+            // --workers/--shards for the slot count); --min-workers
+            // defaults to 1 once a ceiling is given, turning the
+            // control loop on
+            let max_workers = args.get_as("max-workers", 0usize);
+            let min_workers =
+                args.get_as("min-workers", if max_workers > 0 { 1usize } else { 0usize });
             let cfg = fp_givens::coordinator::ServeConfig {
                 engine,
                 requests,
                 max_batch: batch,
                 artifact,
                 threads,
-                workers: if shards > 0 { shards } else { workers },
+                workers: if max_workers > 0 {
+                    max_workers
+                } else if shards > 0 {
+                    shards
+                } else {
+                    workers
+                },
                 sharded,
                 max_restarts,
                 tile,
                 max_m,
                 blocked_m,
                 panel,
+                min_workers,
+                tick_ms: args.get_as("tick-ms", 25u64),
+                shed_depth: args.get_as("shed-depth", 0usize),
+                shed_p99_ms: args.get_as("shed-p99-ms", 0u64),
+                retry_after_ms: args.get_as("retry-after-ms", 50u64),
+                backoff_ms: args.get_as("backoff-ms", 25u64),
+                backoff_cap_ms: args.get_as("backoff-cap-ms", 1_000u64),
+                chaos: args.has("chaos"),
             };
             if args.has("listen") {
                 // TCP frontend: serve the wire format over a socket
@@ -254,6 +284,7 @@ fn main() -> anyhow::Result<()> {
                 max_m: args.get_as("max-m", 8usize),
                 ops,
                 chaos: args.has("chaos"),
+                burst: args.has("burst"),
                 seed: args.get_as("seed", 42u64),
                 shutdown: args.has("shutdown"),
                 bench_out: if bench_out.is_empty() { None } else { Some(bench_out) },

@@ -316,8 +316,7 @@ mod tests {
     #[test]
     fn panel_width_one_degenerates_to_the_flat_order() {
         for m in [2usize, 3, 6, 9] {
-            let concat: Vec<RotationStep> =
-                panel_waves(m, 1).into_iter().flatten().collect();
+            let concat: Vec<RotationStep> = panel_waves(m, 1).into_iter().flatten().collect();
             assert_eq!(concat, schedule(m), "m={m}");
         }
     }

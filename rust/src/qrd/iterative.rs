@@ -106,9 +106,7 @@ mod tests {
     use crate::fp::FpFormat;
 
     fn sample(m: usize) -> Vec<Vec<f64>> {
-        (0..m)
-            .map(|i| (0..m).map(|j| ((i * 7 + j * 3) as f64).sin()).collect())
-            .collect()
+        (0..m).map(|i| (0..m).map(|j| ((i * 7 + j * 3) as f64).sin()).collect()).collect()
     }
 
     #[test]
@@ -132,11 +130,7 @@ mod tests {
         let fmt = cfg.fmt;
         for i in 0..4 {
             for j in 0..8 {
-                assert_eq!(
-                    run.rows[i][j].to_bits(fmt),
-                    want[i][j].to_bits(fmt),
-                    "({i},{j})"
-                );
+                assert_eq!(run.rows[i][j].to_bits(fmt), want[i][j].to_bits(fmt), "({i},{j})");
             }
         }
     }

@@ -178,8 +178,7 @@ impl QrdEngine {
         for step in schedule(m) {
             let (pr, zr, c) = (step.pivot_row, step.zero_row, step.col);
             // vectoring on the pivot pair
-            let (newx, _ylow, ang) =
-                self.rot.vector(rows[pr][c], rows[zr][c]);
+            let (newx, _ylow, ang) = self.rot.vector(rows[pr][c], rows[zr][c]);
             rows[pr][c] = newx;
             // the zeroed element is known-zero by construction and is not
             // stored (the paper's unit emits it but the QRD datapath

@@ -39,8 +39,7 @@ impl QrdResult {
             self.qt.len(),
             self.qt.len()
         );
-        let gb: Vec<f64> =
-            (0..m).map(|i| (0..m).map(|k| self.qt[i][k] * b[k]).sum()).collect();
+        let gb: Vec<f64> = (0..m).map(|i| (0..m).map(|k| self.qt[i][k] * b[k]).sum()).collect();
         back_substitute(&self.r, &gb)
     }
 
@@ -140,8 +139,7 @@ mod tests {
             vec![0.5, 0.0, 0.3, 1.5],
         ];
         let x_true = [1.0, -2.0, 0.5, 3.0];
-        let b: Vec<f64> =
-            (0..4).map(|i| (0..4).map(|j| a[i][j] * x_true[j]).sum()).collect();
+        let b: Vec<f64> = (0..4).map(|i| (0..4).map(|j| a[i][j] * x_true[j]).sum()).collect();
         let x = engine().solve(&a, &b);
         for (got, want) in x.iter().zip(&x_true) {
             assert!((got - want).abs() < 1e-4, "{got} vs {want}");
@@ -150,11 +148,7 @@ mod tests {
 
     #[test]
     fn inverse_times_a_is_identity() {
-        let a = vec![
-            vec![2.0, 0.5, -1.0],
-            vec![0.5, 3.0, 0.2],
-            vec![-1.0, 0.2, 1.8],
-        ];
+        let a = vec![vec![2.0, 0.5, -1.0], vec![0.5, 3.0, 0.2], vec![-1.0, 0.2, 1.8]];
         let inv = engine().decompose(&a).inverse();
         for i in 0..3 {
             for j in 0..3 {
@@ -180,12 +174,7 @@ mod tests {
     fn least_squares_minimizes_residual() {
         // inconsistent system: compare residual against the normal-
         // equations solution in f64
-        let a = vec![
-            vec![1.0, 0.0],
-            vec![1.0, 1.0],
-            vec![1.0, 2.0],
-            vec![1.0, 3.0],
-        ];
+        let a = vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![1.0, 2.0], vec![1.0, 3.0]];
         let b = vec![0.9, 2.1, 2.9, 4.2];
         let x = engine().least_squares(&a, &b);
         // normal equations (2x2) solved exactly
@@ -240,11 +229,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "solve: R is 3×3 but the rhs has 2 entries")]
     fn solve_rejects_mismatched_rhs_length() {
-        let a = vec![
-            vec![2.0, 0.5, -1.0],
-            vec![0.5, 3.0, 0.2],
-            vec![-1.0, 0.2, 1.8],
-        ];
+        let a = vec![vec![2.0, 0.5, -1.0], vec![0.5, 3.0, 0.2], vec![-1.0, 0.2, 1.8]];
         engine().decompose(&a).solve(&[1.0, 2.0]);
     }
 }

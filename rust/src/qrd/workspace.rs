@@ -282,8 +282,7 @@ pub fn triangularize_tile<F: FamilyOps>(rot: &F, ws: &mut BatchWorkspace<F::Scal
     }
     for col in 0..m.saturating_sub(1) {
         for zero_row in (col + 1)..m {
-            let (pivot, ptail, zelem, ztail) =
-                tile_step_mut(buf, width, b, col, zero_row, col);
+            let (pivot, ptail, zelem, ztail) = tile_step_mut(buf, width, b, col, zero_row, col);
             // B vectorings in one stage-outer sweep; records one angle
             // per matrix in the scratch and zeroes the eliminated lanes
             rot.vector_tile(pivot, zelem, scratch);
@@ -437,7 +436,10 @@ mod tests {
         let mats: Vec<Vec<HubFp>> = (0..b)
             .map(|k| {
                 (0..m * m)
-                    .map(|e| rot.encode(((e + k) as f64 - 7.5) * 0.31 * if e % 3 == 0 { -1.0 } else { 1.0 }))
+                    .map(|e| {
+                        let sign = if e % 3 == 0 { -1.0 } else { 1.0 };
+                        rot.encode(((e + k) as f64 - 7.5) * 0.31 * sign)
+                    })
                     .collect()
             })
             .collect();
@@ -461,11 +463,7 @@ mod tests {
             triangularize_ws(&rot, &mut ws);
             for i in 0..m {
                 for j in 0..width {
-                    assert_eq!(
-                        tws.lanes(i, j)[lane],
-                        ws.row(i)[j],
-                        "matrix {lane} ({i},{j})"
-                    );
+                    assert_eq!(tws.lanes(i, j)[lane], ws.row(i)[j], "matrix {lane} ({i},{j})");
                 }
             }
         }

@@ -164,7 +164,12 @@ pub trait FamilyOps: Clone + Send + Sync {
     /// family's canonical zero in `ys[b]`. Per matrix this is
     /// bit-identical to [`Self::vector`] followed by zeroing `ys[b]` —
     /// exactly what one schedule step does to the pivot column.
-    fn vector_tile(&self, xs: &mut [Self::Scalar], ys: &mut [Self::Scalar], scratch: &mut TileScratch);
+    fn vector_tile(
+        &self,
+        xs: &mut [Self::Scalar],
+        ys: &mut [Self::Scalar],
+        scratch: &mut TileScratch,
+    );
 
     /// Batch-interleaved row replay: `xs`/`ys` hold the two rows' tail
     /// elements of the whole tile in lane-major order (all B copies of
@@ -175,7 +180,12 @@ pub trait FamilyOps: Clone + Send + Sync {
     /// this is bit-identical to [`Self::rotate`] (with the same
     /// both-zero skip rule as [`Self::rotate_row`]), executed as one
     /// contiguous B×tail stage-outer sweep.
-    fn rotate_tile(&self, xs: &mut [Self::Scalar], ys: &mut [Self::Scalar], scratch: &mut TileScratch);
+    fn rotate_tile(
+        &self,
+        xs: &mut [Self::Scalar],
+        ys: &mut [Self::Scalar],
+        scratch: &mut TileScratch,
+    );
 }
 
 macro_rules! rotator {
@@ -373,11 +383,7 @@ macro_rules! family_ops {
                     }
                 }
                 let lanes = scratch.idx.len();
-                self.core.rotate_lanes(
-                    &mut scratch.x[..lanes],
-                    &mut scratch.y[..lanes],
-                    ang,
-                );
+                self.core.rotate_lanes(&mut scratch.x[..lanes], &mut scratch.y[..lanes], ang);
                 for k in 0..lanes {
                     let (xo, yo) = self.finish(scratch.x[k], scratch.y[k], scratch.exp[k]);
                     let l = scratch.idx[k] as usize;

@@ -237,8 +237,7 @@ impl GivensRotator {
     pub fn output_convert(&self, x: i64, y: i64, exp: i64) -> (Val, Val) {
         match self.cfg.family {
             Family::Conventional => {
-                let (a, b) =
-                    output_convert_ieee(self.cfg.fmt, self.cfg.n, self.cfg.w(), x, y, exp);
+                let (a, b) = output_convert_ieee(self.cfg.fmt, self.cfg.n, self.cfg.w(), x, y, exp);
                 (Val::Ieee(a), Val::Ieee(b))
             }
             Family::Hub => {

@@ -459,7 +459,7 @@ fn dead_pool_drains_every_key_bin_with_error_responses() {
             QrdService::start_sharded(
                 vec![|| Box::new(PanicEngine) as Box<dyn BatchEngine>],
                 BatchPolicy { max_batch: 4, max_wait_us: 2000 },
-                RestartPolicy { max_restarts: 0 },
+                RestartPolicy::with_max_restarts(0),
             )
         } else {
             QrdService::start_pool(

@@ -91,8 +91,7 @@ fn check_one<F: FamilyOps>(
     let width = 2 * m;
 
     // identical inputs into both paths
-    let scalars: Vec<F::Scalar> =
-        (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
+    let scalars: Vec<F::Scalar> = (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
 
     let buf = ws.prepare(m, width);
     for i in 0..m {
@@ -105,8 +104,7 @@ fn check_one<F: FamilyOps>(
 
     let mut rows: Vec<Vec<Val>> = (0..m)
         .map(|i| {
-            let mut row: Vec<Val> =
-                (0..m).map(|j| wrap(scalars[i * m + j])).collect();
+            let mut row: Vec<Val> = (0..m).map(|j| wrap(scalars[i * m + j])).collect();
             row.extend((0..m).map(|j| if i == j { eng.rot.one() } else { eng.rot.zero() }));
             row
         })
@@ -290,8 +288,7 @@ fn check_blocked_vs_flat<F: FamilyOps>(
     let fmt = rot.cfg().fmt;
     let pool = edge_pool();
     let width = 2 * m;
-    let scalars: Vec<F::Scalar> =
-        (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
+    let scalars: Vec<F::Scalar> = (0..m * m).map(|_| rot.encode(entry(rng, &pool))).collect();
     load_augmented(flat_ws, rot, m, &scalars);
     load_augmented(blk_ws, rot, m, &scalars);
     triangularize_ws(rot, flat_ws);
@@ -364,9 +361,7 @@ fn prop_blocked_schedule_is_bit_identical_across_m_formats_families() {
         for &m in &m_sweep {
             let cases = if m <= 8 { 4 } else { 1 };
             for _ in 0..cases {
-                check_blocked_vs_flat(
-                    &rot, &eng, &mut flat_ws, &mut blk_ws, Val::Hub, m, &mut rng,
-                );
+                check_blocked_vs_flat(&rot, &eng, &mut flat_ws, &mut blk_ws, Val::Hub, m, &mut rng);
             }
         }
     }

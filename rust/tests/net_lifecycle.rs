@@ -13,6 +13,7 @@
 use fp_givens::coordinator::{
     read_frame, BatchEngine, BatchPolicy, Frame, FrameKind, JobKey, LoadgenConfig, Metrics,
     NativeEngine, NetClient, NetConfig, NetServer, OpKind, QrdService, ReadOutcome, RestartPolicy,
+    ShedPolicy,
 };
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
@@ -21,6 +22,7 @@ use std::time::{Duration, Instant};
 
 const STATUS_OK: u8 = 0;
 const STATUS_DEADLINE: u8 = 2;
+const STATUS_OVERLOAD: u8 = 3;
 
 /// Two native workers on the sharded topology, m gate at 8.
 fn start_server(cfg: NetConfig) -> NetServer {
@@ -30,7 +32,7 @@ fn start_server(cfg: NetConfig) -> NetServer {
     let svc = QrdService::start_sharded(
         factories,
         BatchPolicy { max_batch: 8, max_wait_us: 100 },
-        RestartPolicy { max_restarts: 1 },
+        RestartPolicy::with_max_restarts(1),
     )
     .with_max_m(8);
     NetServer::bind("127.0.0.1:0", svc, cfg).expect("bind loopback")
@@ -66,11 +68,12 @@ fn wait_for(metrics: &Metrics, what: &str, cond: impl Fn(&Metrics) -> bool) {
 fn assert_identity(metrics: &Metrics) {
     assert!(
         metrics.net_reconciles(),
-        "identity broken: {} accepted != {} responded + {} timeouts + {} vanished ({:?})",
+        "identity broken: {} accepted != {} responded + {} timeouts + {} vanished + {} shed ({:?})",
         metrics.net_accepted_total(),
         metrics.net_responded_total(),
         metrics.deadline_timeouts(),
         metrics.peer_vanished(),
+        metrics.shed_total(),
         metrics.per_key_net_bins()
     );
     assert_eq!(metrics.conn_opened(), metrics.conn_closed(), "connection leak");
@@ -227,7 +230,7 @@ fn expired_deadlines_are_counted_not_dropped() {
     let svc = QrdService::start_sharded(
         factories,
         BatchPolicy { max_batch: 8, max_wait_us: 100 },
-        RestartPolicy { max_restarts: 1 },
+        RestartPolicy::with_max_restarts(1),
     )
     .with_max_m(8);
     let net = NetConfig { deadline: Duration::from_millis(5), ..fast_net() };
@@ -235,9 +238,7 @@ fn expired_deadlines_are_counted_not_dropped() {
     let mut client = NetClient::connect(server.local_addr()).expect("connect");
     let n = 4usize;
     for id in 1..=n {
-        client
-            .send_request(id as u64, 3, &deterministic_matrix(3, id as u32))
-            .expect("send");
+        client.send_request(id as u64, 3, &deterministic_matrix(3, id as u32)).expect("send");
     }
     for id in 1..=n {
         let f = client.read_frame().expect("stream intact").expect("a response, not silence");
@@ -287,7 +288,7 @@ fn full_window_stops_reading_instead_of_buffering() {
     let svc = QrdService::start_sharded(
         factories,
         BatchPolicy { max_batch: 8, max_wait_us: 100 },
-        RestartPolicy { max_restarts: 1 },
+        RestartPolicy::with_max_restarts(1),
     )
     .with_max_m(8);
     let window = 2usize;
@@ -431,6 +432,67 @@ fn round_trip_mixed_ops_over_tcp_is_bit_exact() {
     assert_identity(&metrics);
 }
 
+/// Admission control end to end: with the only worker gated shut and a
+/// tight shed depth, pipelined requests past the bound must earn
+/// `STATUS_OVERLOAD` frames carrying a parseable retry hint — never a
+/// hang or a silent drop — and the shed bucket must keep the socket
+/// ledger exact.
+#[test]
+fn overload_sheds_with_retry_hint_and_reconciles() {
+    let gate: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+    let g = gate.clone();
+    let factories: Vec<_> = vec![move || {
+        Box::new(GateEngine { inner: NativeEngine::flagship(), gate: g.clone() })
+            as Box<dyn BatchEngine>
+    }];
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 2, max_wait_us: 100 },
+        RestartPolicy::with_max_restarts(1),
+    )
+    .with_max_m(8)
+    .with_shed(ShedPolicy { depth: 2, p99_us: 0.0, retry_after_ms: 17 });
+    let server = NetServer::bind("127.0.0.1:0", svc, fast_net()).expect("bind");
+    let metrics = server.metrics();
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    let n = 12usize;
+    for id in 1..=n {
+        client
+            .send_request(id as u64, 3, &deterministic_matrix(3, id as u32))
+            .expect("pipelined send");
+    }
+    // with the worker gated shut the queue can only grow, so the reader
+    // must classify every request before the gate opens: admitted until
+    // the depth bound, shed past it
+    wait_for(&metrics, "all requests classified", |m| m.net_accepted_total() == n as u64);
+    {
+        let (lock, cv) = &*gate;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+    let mut ok = 0u64;
+    let mut shed = 0u64;
+    for id in 1..=n {
+        let f = client.read_frame().expect("stream intact").expect("a verdict, not silence");
+        assert_eq!(f.id, id as u64, "responses must stay in request order");
+        if f.status == STATUS_OVERLOAD {
+            assert_eq!(f.retry_after_ms(), Some(17), "overload frame must carry the hint");
+            shed += 1;
+        } else {
+            assert_eq!(f.status, STATUS_OK, "unexpected verdict: {:?}", f.text());
+            ok += 1;
+        }
+    }
+    assert!(shed >= 1, "the shed gate never tripped with depth 2 and {n} pipelined requests");
+    assert!(ok >= 1, "admission stopped admitting entirely");
+    drop(client);
+    let m = server.shutdown();
+    assert_eq!(m.net_accepted_total(), n as u64);
+    assert_eq!(m.shed_total(), shed);
+    assert_eq!(m.net_responded_total(), ok);
+    assert_identity(&m);
+}
+
 #[test]
 fn shutdown_frame_acks_drains_and_stops_the_server() {
     let server = start_server(fast_net());
@@ -464,6 +526,7 @@ fn chaos_loadgen_reconciles_against_the_server() {
         max_m: 6,
         ops: vec![OpKind::Qrd, OpKind::Solve, OpKind::AppendQr],
         chaos: true,
+        burst: false,
         seed: 7,
         shutdown: true,
         bench_out: None,

@@ -23,12 +23,7 @@ fn check_engine(cfg: RotatorConfig, m: usize, r: u32, min_snr: f64) {
 #[test]
 fn all_single_precision_configs_reconstruct() {
     for n in [25u32, 26, 28, 30] {
-        check_engine(
-            RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3),
-            4,
-            6,
-            100.0,
-        );
+        check_engine(RotatorConfig::ieee(FpFormat::SINGLE, n, n - 3), 4, 6, 100.0);
         check_engine(RotatorConfig::hub(FpFormat::SINGLE, n, n - 2), 4, 6, 100.0);
     }
 }

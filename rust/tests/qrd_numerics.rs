@@ -29,14 +29,11 @@ use fp_givens::rotator::RotatorConfig;
 /// measures the rotation datapath alone, not input quantization.
 fn round_to_format(eng: &QrdEngine, a: &[Vec<f64>]) -> Vec<Vec<f64>> {
     let fmt = eng.rot.cfg.fmt;
-    a.iter()
-        .map(|row| row.iter().map(|&v| eng.rot.encode(v).to_f64(fmt)).collect())
-        .collect()
+    a.iter().map(|row| row.iter().map(|&v| eng.rot.encode(v).to_f64(fmt)).collect()).collect()
 }
 
 fn backward_snr(eng: &QrdEngine, a: &[Vec<f64>], blocked: bool) -> f64 {
-    let res: QrdResult =
-        if blocked { eng.decompose_blocked(a) } else { eng.decompose(a) };
+    let res: QrdResult = if blocked { eng.decompose_blocked(a) } else { eng.decompose(a) };
     snr_db(a, &res.reconstruct())
 }
 
@@ -102,8 +99,7 @@ fn orthogonality_defect_stays_bounded_for_large_m() {
         let mut gen = MatrixGen::new(31 + m as u64);
         let a = round_to_format(&eng, &gen.matrix(m, 4));
         for blocked in [false, true] {
-            let res =
-                if blocked { eng.decompose_blocked(&a) } else { eng.decompose(&a) };
+            let res = if blocked { eng.decompose_blocked(&a) } else { eng.decompose(&a) };
             let defect = res.orthogonality_defect();
             // per-entry error ~ m · 2⁻²⁴; 1e-3 at m=32 is ~250× slack
             let bound = 1e-3 * (m as f64 / 32.0);

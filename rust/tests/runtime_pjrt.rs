@@ -34,12 +34,8 @@ fn pjrt_artifact_matches_native_engine_bit_for_bit() {
     }
     // the artifact is shape-locked: every other key is a recoverable
     // error, not a panic or a truncation
-    assert!(pjrt
-        .run(
-            JobKey::qrd(3),
-            &random_mats(2, 7).iter().map(|a| a[..9].to_vec()).collect::<Vec<_>>()
-        )
-        .is_err());
+    let trimmed: Vec<_> = random_mats(2, 7).iter().map(|a| a[..9].to_vec()).collect();
+    assert!(pjrt.run(JobKey::qrd(3), &trimmed).is_err());
 }
 
 #[test]

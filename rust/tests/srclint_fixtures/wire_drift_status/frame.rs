@@ -1,10 +1,15 @@
-//! srclint fixture (wire_drift): a header module fully consistent with
-//! the sibling README — the drift is seeded in `key.rs`, which defines
-//! an `append_qr` op the README never learned about.
+//! srclint fixture (wire_drift_status): the seeded drift. The code
+//! grew a fourth response status — `STATUS_OVERLOAD = 3` — but the
+//! sibling README's status row still lists only three, so the
+//! `wire-consistency` rule must fail the pair. Everything else
+//! (offsets, kinds, ops) is consistent on purpose.
 
 pub const MAGIC: u32 = 0xAB;
 pub const VERSION: u8 = 3;
 pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERROR: u8 = 1;
+pub const STATUS_DEADLINE: u8 = 2;
+pub const STATUS_OVERLOAD: u8 = 3;
 pub const HEADER_LEN: usize = 24;
 pub const OFF_MAGIC: usize = 0;
 pub const OFF_VERSION: usize = 4;

@@ -1,0 +1,35 @@
+//! srclint fixture (wire_drift_status): a key module fully consistent
+//! with the sibling README — the drift is seeded in `frame.rs`, which
+//! defines a `STATUS_OVERLOAD` constant the README's status row never
+//! learned about.
+
+pub enum OpKind {
+    Qrd,
+    Solve,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 2] = [OpKind::Qrd, OpKind::Solve];
+
+    pub fn from_u8(b: u8) -> Option<OpKind> {
+        match b {
+            0 => Some(OpKind::Qrd),
+            1 => Some(OpKind::Solve),
+            _ => None,
+        }
+    }
+
+    pub fn as_u8(self) -> u8 {
+        match self {
+            OpKind::Qrd => 0,
+            OpKind::Solve => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Qrd => "qrd",
+            OpKind::Solve => "solve",
+        }
+    }
+}

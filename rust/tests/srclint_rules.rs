@@ -70,6 +70,19 @@ fn wire_drift_fixture_trips_wire_consistency_only() {
 }
 
 #[test]
+fn stale_status_fixture_trips_wire_consistency_only() {
+    let files = [
+        coord("frame.rs", include_str!("srclint_fixtures/wire_drift_status/frame.rs")),
+        coord("key.rs", include_str!("srclint_fixtures/wire_drift_status/key.rs")),
+    ];
+    let readme = include_str!("srclint_fixtures/wire_drift_status/README.md");
+    let f = lint_sources(&files, Some(("wire_drift_status/README.md", readme)), &RuleSet::all());
+    assert_eq!(f.len(), 1, "exactly the stale status row must fire:\n{}", render(&f));
+    assert_eq!(f[0].rule, Rule::WireConsistency);
+    assert!(f[0].message.contains("STATUS_*"), "{}", f[0]);
+}
+
+#[test]
 fn allow_marker_waives_the_finding() {
     let src = coord("allow_marker.rs", include_str!("srclint_fixtures/allow_marker.rs"));
     let f = lint_sources(&[src], None, &RuleSet::all());

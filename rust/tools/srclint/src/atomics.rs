@@ -119,10 +119,7 @@ pub fn check(file: &str, toks: &[Token]) -> Vec<Finding> {
             !s.in_test
                 && s.ordering == "Relaxed"
                 && s.method.as_deref() == Some("load")
-                && s.in_fn
-                    .as_deref()
-                    .map(|f| AUDIT_READERS.contains(&f))
-                    .unwrap_or(false)
+                && s.in_fn.as_deref().map(|f| AUDIT_READERS.contains(&f)).unwrap_or(false)
         })
         .map(|s| {
             Finding::new(
@@ -176,11 +173,7 @@ fn fn_spans(toks: &[Token]) -> Vec<FnSpan> {
                         }
                         k += 1;
                     }
-                    out.push(FnSpan {
-                        name: name.clone(),
-                        open,
-                        close: k,
-                    });
+                    out.push(FnSpan { name: name.clone(), open, close: k });
                 }
             }
         }
@@ -196,9 +189,7 @@ mod tests {
 
     #[test]
     fn relaxed_load_in_audit_reader_flagged() {
-        let toks = lex(
-            "pub fn net_accepted(&self) -> u64 { self.acc.load(Ordering::Relaxed) }",
-        );
+        let toks = lex("pub fn net_accepted(&self) -> u64 { self.acc.load(Ordering::Relaxed) }");
         assert_eq!(check("metrics.rs", &toks).len(), 1);
     }
 

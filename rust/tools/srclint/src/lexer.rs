@@ -189,10 +189,7 @@ pub fn lex(src: &str) -> Vec<Token> {
                 while i < b.len() && is_ident_cont(b[i]) {
                     i += 1;
                 }
-                toks.push(Token {
-                    line,
-                    kind: Tok::Ident(src[start..i].to_string()),
-                });
+                toks.push(Token { line, kind: Tok::Ident(src[start..i].to_string()) });
             }
             _ if c.is_ascii_digit() => {
                 let start = i;
@@ -207,10 +204,7 @@ pub fn lex(src: &str) -> Vec<Token> {
                         i += 1;
                     }
                 }
-                toks.push(Token {
-                    line,
-                    kind: Tok::Num(src[start..i].to_string()),
-                });
+                toks.push(Token { line, kind: Tok::Num(src[start..i].to_string()) });
             }
             _ => {
                 toks.push(Token { line, kind: Tok::Sym(c) });
@@ -256,7 +250,8 @@ fn starts_raw_string(b: &[u8], i: usize) -> bool {
 /// (`u32`, `usize`, ...). Returns `None` for floats or malformed input.
 pub fn num_value(raw: &str) -> Option<u64> {
     let s: String = raw.chars().filter(|c| *c != '_').collect();
-    let (radix, digits) = if let Some(rest) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+    let hex = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X"));
+    let (radix, digits) = if let Some(rest) = hex {
         (16, rest)
     } else if let Some(rest) = s.strip_prefix("0o") {
         (8, rest)

@@ -89,11 +89,7 @@ impl Finding {
 
 impl fmt::Display for Finding {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(
-            f,
-            "{}:{}: [{}] {}",
-            self.file, self.line, self.rule, self.message
-        )
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
     }
 }
 
@@ -238,9 +234,7 @@ pub fn lint_sources(
     }
     if rules.has(Rule::WireConsistency) {
         if let Some((readme_label, readme_text)) = readme {
-            let frame = lexed
-                .iter()
-                .find(|(i, _)| files[*i].label.ends_with("frame.rs"));
+            let frame = lexed.iter().find(|(i, _)| files[*i].label.ends_with("frame.rs"));
             let key = lexed.iter().find(|(i, _)| files[*i].label.ends_with("key.rs"));
             if let (Some((fi, ftoks)), Some((ki, ktoks))) = (frame, key) {
                 raw.extend(wire::check(
@@ -283,11 +277,7 @@ fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(PathBuf, String)>) -> std:
         if p.is_dir() {
             collect_rs(root, &p, out)?;
         } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
-            let label = p
-                .strip_prefix(root)
-                .unwrap_or(&p)
-                .to_string_lossy()
-                .replace('\\', "/");
+            let label = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
             out.push((p.clone(), label));
         }
     }

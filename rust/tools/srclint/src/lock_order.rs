@@ -67,11 +67,8 @@ fn extract(file: &str, toks: &[Token], table: &mut FnTable) {
                     }
                 }
                 if let Some((body_open, body_close)) = fn_body(toks, i + 2) {
-                    table
-                        .fns
-                        .entry(name.clone())
-                        .or_default()
-                        .push((file.to_string(), Vec::new()));
+                    let fns = table.fns.entry(name.clone()).or_default();
+                    fns.push((file.to_string(), Vec::new()));
                     stack.push((name.clone(), body_close));
                     i = body_open + 1;
                     continue;
@@ -351,9 +348,7 @@ mod tests {
     use crate::lexer::lex;
 
     fn files(srcs: &[(&str, &str)]) -> Vec<(String, Vec<Token>)> {
-        srcs.iter()
-            .map(|(n, s)| (n.to_string(), lex(s)))
-            .collect()
+        srcs.iter().map(|(n, s)| (n.to_string(), lex(s))).collect()
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //!   `MIN_VERSION`; the diagram's kind and op lists match the enums
 //!   (both discriminant and label).
 //! * The README Ops table's `byte` column matches `OpKind::as_u8`.
+//! * The README diagram's status list (`N=name` pairs on the `status`
+//!   row) matches the `STATUS_*` constants in `frame.rs` value by
+//!   value — `STATUS_FOO = n` must appear as `n=foo` — and neither
+//!   side may name a status the other lacks.
 //! * `frame.rs` still validates the op byte through `OpKind::from_u8`.
 
 use std::collections::BTreeMap;
@@ -38,10 +42,7 @@ fn consts(toks: &[Token]) -> BTreeMap<String, (u64, u32)> {
                 let line = toks[i].line;
                 // Scan to `=` then to `;`, collecting value tokens.
                 let mut j = i + 2;
-                while j < toks.len()
-                    && !toks[j].kind.is_sym(b'=')
-                    && !toks[j].kind.is_sym(b';')
-                {
+                while j < toks.len() && !toks[j].kind.is_sym(b'=') && !toks[j].kind.is_sym(b';') {
                     j += 1;
                 }
                 if j < toks.len() && toks[j].kind.is_sym(b'=') {
@@ -189,10 +190,7 @@ fn enum_maps(toks: &[Token], enum_name: &str) -> EnumMaps {
                 if matches2(toks, i + 1, b'=', b'>')
                     && toks.get(i + 3).map(|t| t.kind.is_ident("Some")).unwrap_or(false)
                     && toks.get(i + 4).map(|t| t.kind.is_sym(b'(')).unwrap_or(false)
-                    && toks
-                        .get(i + 5)
-                        .map(|t| t.kind.is_ident(enum_name))
-                        .unwrap_or(false)
+                    && toks.get(i + 5).map(|t| t.kind.is_ident(enum_name)).unwrap_or(false)
                 {
                     if let (Some(v), Some(Tok::Ident(name))) =
                         (num_value(num), toks.get(i + 8).map(|t| &t.kind))
@@ -324,11 +322,7 @@ const OFFSET_FIELDS: &[(&str, &str)] = &[
 
 /// Run the full cross-check. `frame`/`key` pair a display label with
 /// lexed tokens; `readme` is raw text with its own label.
-pub fn check(
-    frame: (&str, &[Token]),
-    key: (&str, &[Token]),
-    readme: (&str, &str),
-) -> Vec<Finding> {
+pub fn check(frame: (&str, &[Token]), key: (&str, &[Token]), readme: (&str, &str)) -> Vec<Finding> {
     let (frame_label, frame_toks) = frame;
     let (key_label, key_toks) = key;
     let (readme_label, readme_text) = readme;
@@ -575,11 +569,47 @@ pub fn check(
             None => out.push(finding(
                 readme_label,
                 1,
-                format!(
-                    "README Ops table has no `{label}` row — update it when adding an op"
-                ),
+                format!("README Ops table has no `{label}` row — update it when adding an op"),
             )),
         }
+    }
+
+    // ---- README status list vs frame.rs STATUS_* constants ---------
+    let status_consts: BTreeMap<u64, String> = fconsts
+        .iter()
+        .filter_map(|(name, (v, _))| {
+            name.strip_prefix("STATUS_").map(|s| (*v, s.to_ascii_lowercase()))
+        })
+        .collect();
+    if let Some(srow) = row("status") {
+        let pairs = eq_pairs(&srow.rest);
+        for (n, name) in &pairs {
+            let got = status_consts.get(n).map(String::as_str);
+            if got != Some(name.as_str()) {
+                out.push(finding(
+                    readme_label,
+                    srow.line,
+                    format!(
+                        "README status list says {n}={name} but frame.rs STATUS_* \
+                         value {n} is {got:?}"
+                    ),
+                ));
+            }
+        }
+        if pairs.len() != status_consts.len() {
+            out.push(finding(
+                readme_label,
+                srow.line,
+                format!(
+                    "README status list names {} statuses but frame.rs defines {} \
+                     STATUS_* constants — update the diagram when adding a status",
+                    pairs.len(),
+                    status_consts.len()
+                ),
+            ));
+        }
+    } else if !status_consts.is_empty() {
+        out.push(finding(readme_label, 1, "README diagram has no `status` row".to_string()));
     }
 
     // ---- frame validation hook -------------------------------------
@@ -628,6 +658,8 @@ impl OpKind {
     const FRAME_OK: &str = r#"
 pub const MAGIC: u32 = 0xAB;
 pub const VERSION: u8 = 3;
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_ERROR: u8 = 1;
 pub const HEADER_LEN: usize = 24;
 pub const OFF_MAGIC: usize = 0;
 pub const OFF_VERSION: usize = 4;
@@ -655,7 +687,7 @@ offset  size  field
  0       4    magic     0xAB
  4       1    version   3  (2 still accepted on read)
  5       1    kind      1=Request 2=Response
- 6       1    status    0=ok
+ 6       1    status    0=ok 1=error
  7       1    op        0=qrd 1=solve
  8       8    id        echoed
 16       4    m         dimension
@@ -715,5 +747,27 @@ offset  size  field
         let key = KEY_OK.replace("1 => Some(OpKind::Solve),", "");
         let f = run(FRAME_OK, &key, README_OK);
         assert!(f.iter().any(|x| x.message.contains("from_u8")), "{f:?}");
+    }
+
+    #[test]
+    fn stale_status_list_is_caught() {
+        // a new STATUS_* constant the README status row never learned
+        let frame = FRAME_OK.replace(
+            "pub const STATUS_ERROR: u8 = 1;",
+            "pub const STATUS_ERROR: u8 = 1;\npub const STATUS_OVERLOAD: u8 = 3;",
+        );
+        let f = run(&frame, KEY_OK, README_OK);
+        assert!(
+            f.iter().any(|x| x.message.contains("STATUS_*")),
+            "a status constant with a stale README row must fail the lint: {f:?}"
+        );
+    }
+
+    #[test]
+    fn renamed_status_is_caught() {
+        // value matches, name does not — the pair check must fire
+        let readme = README_OK.replace("0=ok 1=error", "0=ok 1=failed");
+        let f = run(FRAME_OK, KEY_OK, &readme);
+        assert!(f.iter().any(|x| x.message.contains("1=failed")), "{f:?}");
     }
 }
