@@ -1,133 +1,159 @@
-//! Adaptive beamforming via QRD-RLS — the application class the paper's
-//! introduction motivates (refs [14][17]: linear QR arrays for single
-//! chip adaptive beamformers).
+//! Adaptive beamforming via a **live QRD-RLS streaming session** — the
+//! application class the paper's introduction motivates (refs [14][17]:
+//! linear QR arrays for single-chip adaptive beamformers), now driven
+//! end-to-end through the serving stack.
 //!
 //! A 4-element antenna array receives a desired signal plus a strong
-//! interferer and noise. The classic QRD-RLS solution triangularizes the
-//! (regularized) covariance snapshot with Givens rotations and solves
-//! R·w = Qᵀ·d by back-substitution. We do the rotations with the
-//! paper's HUB FP Givens rotation unit and compare the resulting beam
-//! pattern with a double-precision solution.
+//! interferer whose bearing *drifts* over time. Instead of one offline
+//! covariance solve, the beamformer holds a stateful session on an
+//! in-process [`NetServer`]: `rls_open` installs a per-session QRD-RLS
+//! triangle (forgetting factor λ < 1 so old bearings fade), every
+//! snapshot goes out as an `rls_update` frame (wire format v4, the
+//! session key riding above `JobKey`), and each response carries the
+//! evolving weight vector. The served weights are checked **bit-exact**
+//! against an offline [`QrdRls`] replay of the same updates — the
+//! serving datapath adds nothing to the math — and the final beam
+//! pattern must null the interferer at its *drifted* bearing.
 //!
 //! Run: `cargo run --release --example beamforming`
 
+use fp_givens::coordinator::{
+    BatchEngine, BatchPolicy, JobKey, NativeEngine, NetClient, NetConfig, NetServer, OpKind,
+    QrdService, RestartPolicy,
+};
+use fp_givens::coordinator::{STATUS_OK, STATUS_OVERLOAD};
 use fp_givens::fp::FpFormat;
-use fp_givens::qrd::QrdEngine;
+use fp_givens::qrd::QrdRls;
 use fp_givens::rotator::RotatorConfig;
 use fp_givens::util::rng::Rng;
 
-const M: usize = 4; // antenna elements
-const SNAPSHOTS: usize = 64;
+const M: usize = 4; // antenna elements (RLS taps)
+const SNAPSHOTS: usize = 240;
+const SESSION: u64 = 0xBEA4_F0C5; // client-chosen, nonzero
+const LAMBDA: f32 = 0.96; // forget old bearings fast enough to track
+const DELTA: f32 = 1e-2; // initial triangle regularization
 
-fn main() {
-    // array geometry: half-wavelength linear array; steering vector for
-    // angle θ has phase 2π·(d/λ)·sin θ per element — we work with real
-    // signals (in-phase component) to stay in the real Givens domain
+fn main() -> anyhow::Result<()> {
+    // ---- the server: a sharded pool behind a TCP listener ---------
+    let factories: Vec<_> = (0..2)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc =
+        QrdService::start_sharded(factories, BatchPolicy::default(), RestartPolicy::default());
+    let server = NetServer::bind("127.0.0.1:0", svc, NetConfig::default())?;
+    let addr = server.local_addr().to_string();
+    println!("QRD-RLS adaptive beamformer over a live session at {addr}\n");
+
+    // ---- the channel: desired at a fixed bearing, interferer drifting
+    // array geometry: half-wavelength linear array; the steering vector
+    // for bearing θ has phase π·k·sin θ per element — real signals
+    // (in-phase component) keep us in the real Givens domain
     let steer = |theta: f64| -> Vec<f64> {
         (0..M).map(|k| (std::f64::consts::PI * k as f64 * theta.sin()).cos()).collect()
     };
     let desired_dir = 0.35f64; // ~20°
-    let interferer_dir = -0.52f64; // ~-30°
+    let drift = |t: usize| -> f64 {
+        // the interferer sweeps ~17° over the run: the stale bearing's
+        // null must decay (λ < 1) while a new one forms
+        -0.52 + 0.30 * t as f64 / SNAPSHOTS as f64
+    };
     let s_des = steer(desired_dir);
-    let s_int = steer(interferer_dir);
 
-    // build the data matrix X [SNAPSHOTS × M] and desired response d
+    // ---- the session: open, stream updates, close -----------------
+    let mut client = NetClient::connect(&addr)?;
+    let open = client.request_session(
+        1,
+        SESSION,
+        JobKey::new(OpKind::RlsOpen, M),
+        &[LAMBDA.to_bits(), DELTA.to_bits()],
+    )?;
+    anyhow::ensure!(open.status == STATUS_OK, "rls_open failed (status {})", open.status);
+
+    // offline oracle: the same flagship unit config the server's
+    // session table runs, fed the identical (f32-quantized) updates
+    let mut replay =
+        QrdRls::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24), M, LAMBDA as f64, DELTA as f64);
+
     let mut rng = Rng::new(7);
-    let mut x = vec![vec![0.0f64; M]; SNAPSHOTS];
-    let mut d = vec![0.0f64; SNAPSHOTS];
+    let mut w_bits: Vec<u32> = vec![0; M];
+    let mut mismatches = 0usize;
+    let mut applied = 0usize;
     for t in 0..SNAPSHOTS {
+        let s_int = steer(drift(t));
         let a_des = (0.2 * t as f64).sin();
         let a_int = 4.0 * (0.37 * t as f64 + 1.0).cos(); // 12 dB stronger
-        for k in 0..M {
-            x[t][k] = a_des * s_des[k] + a_int * s_int[k] + 0.05 * rng.range(-1.0, 1.0);
+        // quantize the snapshot to the f32 wire words first, so client
+        // and server see bit-identical inputs
+        let row: Vec<f32> = (0..M)
+            .map(|k| (a_des * s_des[k] + a_int * s_int[k] + 0.05 * rng.range(-1.0, 1.0)) as f32)
+            .collect();
+        let d = a_des as f32;
+        let mut words: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        words.push(d.to_bits());
+        let key = JobKey::new(OpKind::RlsUpdate, M);
+        let resp = client.request_session((t + 2) as u64, SESSION, key, &words)?;
+        anyhow::ensure!(resp.session == SESSION, "response lost the session key");
+        if resp.status == STATUS_OVERLOAD {
+            // shed at admission: applied on neither side, replay stays
+            // aligned — a real client would back off and resend
+            continue;
         }
-        d[t] = a_des;
-    }
-
-    // normal-equations snapshot: Φ = XᵀX + δI (M×M), z = Xᵀd
-    let mut phi = vec![vec![0.0f64; M]; M];
-    let mut z = vec![0.0f64; M];
-    for i in 0..M {
-        for j in 0..M {
-            phi[i][j] = (0..SNAPSHOTS).map(|t| x[t][i] * x[t][j]).sum::<f64>();
+        anyhow::ensure!(resp.status == STATUS_OK, "update {t} failed (status {})", resp.status);
+        let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
+        replay.update(&x, d as f64);
+        let want: Vec<u32> =
+            replay.weights()?.iter().map(|&wi| (wi as f32).to_bits()).collect();
+        w_bits = resp.words().unwrap_or_default();
+        if w_bits != want {
+            mismatches += 1;
         }
-        phi[i][i] += 1e-3;
-        z[i] = (0..SNAPSHOTS).map(|t| x[t][i] * d[t]).sum::<f64>();
+        applied += 1;
+        if (t + 1) % 60 == 0 {
+            let w: Vec<f64> = w_bits.iter().map(|&b| f32::from_bits(b) as f64).collect();
+            let y: f64 = w.iter().zip(&x).map(|(wi, xi)| wi * xi).sum();
+            println!(
+                "snapshot {:>3}: interferer at {:>6.3} rad, |d − ŷ| = {:.2e}",
+                t + 1,
+                drift(t),
+                (d as f64 - y).abs()
+            );
+        }
     }
+    let close = client.request_session(
+        (SNAPSHOTS + 2) as u64,
+        SESSION,
+        JobKey::new(OpKind::RlsClose, M),
+        &[],
+    )?;
+    anyhow::ensure!(close.status == STATUS_OK, "rls_close failed (status {})", close.status);
 
-    // QRD-RLS: triangularize Φ with the paper's unit, w = R⁻¹·(G·z)
-    let eng = QrdEngine::new(RotatorConfig::hub(FpFormat::SINGLE, 26, 24));
-    let res = eng.decompose(&phi);
-    let gz: Vec<f64> = (0..M)
-        .map(|i| (0..M).map(|k| res.qt[i][k] * z[k]).sum())
-        .collect();
-    let w = back_substitute(&res.r, &gz);
+    // ---- verdicts -------------------------------------------------
+    println!("\nserved weight vectors : {applied} ({mismatches} diverged from the offline replay)");
+    assert_eq!(mismatches, 0, "served weights must replay the offline QrdRls bit-exactly");
 
-    // reference weights in double precision
-    let w_ref = solve_f64(&phi, &z);
-
-    println!("QRD-RLS adaptive beamformer (HUB FP Givens rotation unit)\n");
-    println!("weights (unit)     : {:?}", round4(&w));
-    println!("weights (f64 ref)  : {:?}", round4(&w_ref));
-    let werr = w
-        .iter()
-        .zip(&w_ref)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f64, f64::max);
-    println!("max weight error   : {werr:.2e}\n");
-
-    // beam pattern: gain toward desired vs interferer
-    let gain = |w: &[f64], dir: f64| -> f64 {
+    let w: Vec<f64> = w_bits.iter().map(|&b| f32::from_bits(b) as f64).collect();
+    let gain = |dir: f64| -> f64 {
         let s = steer(dir);
         w.iter().zip(&s).map(|(a, b)| a * b).sum::<f64>().abs()
     };
-    let g_des = gain(&w, desired_dir);
-    let g_int = gain(&w, interferer_dir);
-    println!("gain toward desired    : {g_des:.4}");
-    println!("gain toward interferer : {g_int:.4}");
-    println!("null depth             : {:.1} dB", 20.0 * (g_int / g_des).log10());
-    assert!(g_int / g_des < 0.15, "interferer should be nulled");
-    assert!(werr < 1e-3, "unit weights should match the f64 reference");
-    println!("\nbeamforming OK: interferer nulled, weights at single-precision accuracy");
-}
+    let g_des = gain(desired_dir);
+    let g_int = gain(drift(SNAPSHOTS - 1));
+    let g_old = gain(drift(0));
+    println!("gain toward desired              : {g_des:.4}");
+    println!("gain toward interferer (drifted) : {g_int:.4}");
+    println!("gain toward interferer (stale)   : {g_old:.4}");
+    println!("null depth at the drifted bearing: {:.1} dB", 20.0 * (g_int / g_des).log10());
+    assert!(g_int / g_des < 0.2, "the drifted interferer should be nulled");
 
-fn back_substitute(r: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
-    let m = b.len();
-    let mut w = vec![0.0; m];
-    for i in (0..m).rev() {
-        let mut acc = b[i];
-        for j in (i + 1)..m {
-            acc -= r[i][j] * w[j];
-        }
-        w[i] = acc / r[i][i];
-    }
-    w
-}
-
-fn solve_f64(a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
-    // Gaussian elimination with partial pivoting (double precision)
-    let m = b.len();
-    let mut aug: Vec<Vec<f64>> =
-        a.iter().zip(b).map(|(row, &bi)| {
-            let mut r = row.clone();
-            r.push(bi);
-            r
-        }).collect();
-    for c in 0..m {
-        let piv = (c..m).max_by(|&i, &j| aug[i][c].abs().partial_cmp(&aug[j][c].abs()).unwrap()).unwrap();
-        aug.swap(c, piv);
-        for r in (c + 1)..m {
-            let f = aug[r][c] / aug[c][c];
-            for k in c..=m {
-                aug[r][k] -= f * aug[c][k];
-            }
-        }
-    }
-    let rmat: Vec<Vec<f64>> = aug.iter().map(|r| r[..m].to_vec()).collect();
-    let rhs: Vec<f64> = aug.iter().map(|r| r[m]).collect();
-    back_substitute(&rmat, &rhs)
-}
-
-fn round4(v: &[f64]) -> Vec<f64> {
-    v.iter().map(|x| (x * 1e4).round() / 1e4).collect()
+    let metrics = server.shutdown();
+    println!(
+        "\nsession ledger: {} opened = {} closed + {} evicted + {} live",
+        metrics.sessions_opened(),
+        metrics.sessions_closed(),
+        metrics.sessions_evicted(),
+        metrics.sessions_live()
+    );
+    assert!(metrics.sessions_reconcile(), "session lifecycle identity must hold at exit");
+    println!("beamforming OK: live session bit-exact with the offline replay, interferer tracked");
+    Ok(())
 }

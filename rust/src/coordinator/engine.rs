@@ -10,7 +10,7 @@ use crate::rotator::{FamilyOps, RotatorConfig, Val};
 use crate::util::par;
 
 /// A backend that executes **uniform-key batches** of jobs given as FP
-/// bit patterns (wire format v3: `key.request_words()` words in,
+/// bit patterns (the stateless wire shape: `key.request_words()` words in,
 /// `key.response_words()` words out per job — m² → 2m² `[R | G]` for
 /// Qrd, m²+m → m for Solve, 3m−4 → m+2 for AppendQr).
 pub trait BatchEngine {
@@ -332,14 +332,18 @@ impl NativeEngine {
     /// answer the m solution words. Wraps [`QrdEngine::least_squares`]
     /// — Givens triangularization of the augmented system plus back
     /// substitution, f32 wire values widened to the engine's f64 entry.
-    fn run_solve(&self, m: usize, jobs: &[Vec<u32>]) -> Vec<Vec<u32>> {
+    /// A singular system is a *recoverable* error naming the offending
+    /// job and rank-dropped column — never silently-zero solutions.
+    fn run_solve(&self, m: usize, jobs: &[Vec<u32>]) -> Result<Vec<Vec<u32>>, String> {
         jobs.iter()
-            .map(|job| {
+            .enumerate()
+            .map(|(i, job)| {
                 let a: Vec<Vec<f64>> = (0..m)
                     .map(|i| (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect())
                     .collect();
                 let b: Vec<f64> = job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
-                self.eng.least_squares(&a, &b).iter().map(|&x| (x as f32).to_bits()).collect()
+                let x = self.eng.least_squares(&a, &b).map_err(|e| format!("job {i}: {e}"))?;
+                Ok(x.iter().map(|&x| (x as f32).to_bits()).collect())
             })
             .collect()
     }
@@ -429,8 +433,14 @@ impl BatchEngine for NativeEngine {
         let m = key.m();
         Ok(match key.op {
             OpKind::Qrd => self.run_qrd(m, jobs),
-            OpKind::Solve => self.run_solve(m, jobs),
+            OpKind::Solve => self.run_solve(m, jobs)?,
             OpKind::AppendQr => self.run_append(m, jobs),
+            // session ops are served from the coordinator's session
+            // table, never batched into an engine — reaching one is a
+            // dispatch bug upstream and a recoverable error here
+            OpKind::RlsOpen | OpKind::RlsUpdate | OpKind::RlsClose => {
+                return Err(format!("{} is a session op, not an engine op", key.op.label()));
+            }
         })
     }
 
@@ -791,8 +801,13 @@ mod tests {
                     .map(|i| (0..m).map(|j| f32::from_bits(job[i * m + j]) as f64).collect())
                     .collect();
                 let b: Vec<f64> = job[m * m..].iter().map(|&w| f32::from_bits(w) as f64).collect();
-                let want: Vec<u32> =
-                    eng.eng.least_squares(&a, &b).iter().map(|&v| (v as f32).to_bits()).collect();
+                let want: Vec<u32> = eng
+                    .eng
+                    .least_squares(&a, &b)
+                    .expect("well-conditioned system")
+                    .iter()
+                    .map(|&v| (v as f32).to_bits())
+                    .collect();
                 assert_eq!(x, &want, "m={m}");
                 // and the solution actually solves the system
                 for (i, row) in a.iter().enumerate() {
@@ -805,6 +820,24 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn singular_solve_batch_errors_naming_the_column() {
+        let eng = NativeEngine::flagship();
+        // column 1 is exactly zero — it stays exactly zero through the
+        // rotations, so back-substitution must refuse the system (the
+        // old path answered it with silent zeros)
+        let key = JobKey::new(OpKind::Solve, 2);
+        let job: Vec<u32> =
+            [1.0f32, 0.0, 3.0, 0.0, 1.0, 1.0].iter().map(|v| v.to_bits()).collect();
+        let err = eng.run(key, &[job]).expect_err("singular system must error");
+        assert!(err.contains("job 0") && err.contains("column 1"), "{err}");
+        // session ops are served from the session table, never an engine
+        let err = eng
+            .run(JobKey::new(OpKind::RlsUpdate, 2), &[vec![0u32; 3]])
+            .expect_err("session op must never reach an engine");
+        assert!(err.contains("session op"), "{err}");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Length-prefixed wire framing for format v3 over a byte stream.
+//! Length-prefixed wire framing for format v4 over a byte stream.
 //!
 //! One frame carries one message: a request (one job for an op on the
 //! Givens datapath), a response (output words or an error string), a
@@ -8,14 +8,17 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic      0x3244_5251 ("QRD2" as bytes on the wire)
-//! 4       1     version    3 (v2 frames are still accepted: op = 0)
+//! 4       1     version    4 (v3/v2 frames are still accepted)
 //! 5       1     kind       1 req | 2 resp | 3 stats | 4 stats-resp | 5 shutdown
 //! 6       1     status     responses: 0 ok | 1 error | 2 deadline-timeout | 3 overload
-//! 7       1     op         0 qrd | 1 solve | 2 append-qr (v2: reserved 0)
+//! 7       1     op         0 qrd | 1 solve | 2 append-qr | 3 rls-open |
+//!                          4 rls-update | 5 rls-close (v2: reserved 0)
 //! 8       8     request id u64, echoed verbatim in the response
 //! 16      4     m          job dimension (0 for control frames)
 //! 20      4     payload    byte length of the payload that follows
-//! 24      n     payload    request/ok response: u32 words (LE), layout
+//! 24      8     session    u64 session key — nonzero iff the op is a
+//!                          stateful rls_* op (v3/v2: absent, reads 0)
+//! 32      n     payload    request/ok response: u32 words (LE), layout
 //!                          per op (see `coordinator::key`); error
 //!                          response: UTF-8 reason; stats-resp: u64
 //!                          counter block (see `net`)
@@ -23,23 +26,29 @@
 //!
 //! Version 2 of the format carried byte 7 as `reserved = 0`, which is
 //! exactly the `op = Qrd` encoding — so every v2 frame decodes as a
-//! QRD job and old clients keep working unchanged.
+//! QRD job and old clients keep working unchanged. Versions 2 and 3
+//! both end their header at byte 24 ([`LEGACY_HEADER_LEN`]) and decode
+//! with `session = 0` — which is why stateful ops *require* a nonzero
+//! session: a legacy frame can never smuggle one in ([`FrameError::
+//! BadSession`] rejects the mismatch either way).
 //!
 //! Decoding distinguishes *how* a stream is broken, because the server
 //! accounts each differently: a clean EOF at a frame boundary is a
 //! normal close, EOF mid-frame is a truncated frame, a read timeout
 //! with zero bytes of the next frame is an idle (healthy) connection
 //! while a timeout mid-frame is a stalled (slow-loris) peer, and bad
-//! magic/version/kind/op/size is garbage. Every malformed variant is a
-//! counted, handled path — never a panic, never an unbounded read
-//! (`MAX_PAYLOAD` caps allocation before any buffer is trusted).
+//! magic/version/kind/op/session/size is garbage. Every malformed
+//! variant is a counted, handled path — never a panic, never an
+//! unbounded read (`MAX_PAYLOAD` caps allocation before any buffer is
+//! trusted).
 //!
-//! Request payloads whose length is a whole number of words are
-//! decoded **straight into a `Vec<u32>`** (the socket read lands in
-//! the word buffer's own storage — no intermediate byte buffer, no
-//! word-by-word re-copy); [`Frame::take_words`] then moves that vector
-//! out so the service's `Request` owns the very allocation the bytes
-//! arrived in.
+//! Request and response payloads whose length is a whole number of
+//! words are decoded **straight into a `Vec<u32>`** (the socket read
+//! lands in the word buffer's own storage — no intermediate byte
+//! buffer, no word-by-word re-copy); [`Frame::take_words`] then moves
+//! that vector out so the owner — the service's `Request`, or a
+//! client reconciling response words — holds the very allocation the
+//! bytes arrived in.
 
 use super::key::OpKind;
 use std::io::{ErrorKind, Read, Write};
@@ -48,14 +57,18 @@ use std::io::{ErrorKind, Read, Write};
 pub const MAGIC: u32 = 0x3244_5251;
 
 /// Wire format version written by this build.
-pub const VERSION: u8 = 3;
+pub const VERSION: u8 = 4;
 
 /// Oldest wire format version still accepted (v2 = QRD-only, byte 7
 /// reserved as 0 — decoded as `op = Qrd`).
 pub const MIN_VERSION: u8 = 2;
 
-/// Fixed header length in bytes; the payload follows immediately.
-pub const HEADER_LEN: usize = 24;
+/// Fixed v4 header length in bytes; the payload follows immediately.
+pub const HEADER_LEN: usize = 32;
+
+/// Header length of the still-accepted v2/v3 formats (no session
+/// word — those frames decode with `session = 0`).
+pub const LEGACY_HEADER_LEN: usize = 24;
 
 // Header byte offsets. These are the single in-code statement of the
 // layout diagrammed above and in the README; `srclint`'s
@@ -77,6 +90,8 @@ pub const OFF_ID: usize = 8;
 pub const OFF_M: usize = 16;
 /// Byte offset of the payload length (u32 LE).
 pub const OFF_LEN: usize = 20;
+/// Byte offset of the session key (u64 LE, v4 only).
+pub const OFF_SESSION: usize = 24;
 
 /// Payload ceiling: decoding allocates nothing larger, so a hostile
 /// length field cannot balloon memory. Generous for the largest
@@ -148,6 +163,9 @@ pub struct Frame {
     pub id: u64,
     /// Job dimension (0 for control frames).
     pub m: u32,
+    /// Session key (v4): nonzero iff the op is stateful. Responses
+    /// echo the request's session; v2/v3 frames decode as 0.
+    pub session: u64,
     /// Raw payload bytes (interpretation depends on `kind`/`status`).
     /// Empty when the payload was decoded into `words` instead.
     pub payload: Vec<u8>,
@@ -171,6 +189,7 @@ impl Frame {
             op: op.as_u8(),
             id,
             m,
+            session: 0,
             payload: Vec::new(),
             words: Some(words.to_vec()),
         }
@@ -184,6 +203,7 @@ impl Frame {
             op: 0,
             id,
             m,
+            session: 0,
             payload: Vec::new(),
             words: Some(words.to_vec()),
         }
@@ -197,6 +217,7 @@ impl Frame {
             op: 0,
             id,
             m,
+            session: 0,
             payload: reason.as_bytes().to_vec(),
             words: None,
         }
@@ -237,6 +258,7 @@ impl Frame {
             op: 0,
             id,
             m: 0,
+            session: 0,
             payload: Vec::new(),
             words: None,
         }
@@ -250,6 +272,7 @@ impl Frame {
             op: 0,
             id,
             m: 0,
+            session: 0,
             payload,
             words: None,
         }
@@ -263,6 +286,7 @@ impl Frame {
             op: 0,
             id,
             m: 0,
+            session: 0,
             payload: Vec::new(),
             words: None,
         }
@@ -271,6 +295,13 @@ impl Frame {
     /// Builder: set the op byte (responses echo their request's op).
     pub fn with_op(mut self, op: u8) -> Frame {
         self.op = op;
+        self
+    }
+
+    /// Builder: set the session key (requests of stateful ops carry a
+    /// nonzero one; responses echo their request's session).
+    pub fn with_session(mut self, session: u64) -> Frame {
+        self.session = session;
         self
     }
 
@@ -320,7 +351,7 @@ impl Frame {
         }
     }
 
-    /// Serialize to wire bytes (header + payload), version 3.
+    /// Serialize to wire bytes (header + payload), version 4.
     pub fn encode(&self) -> Vec<u8> {
         self.encode_version(VERSION)
     }
@@ -330,6 +361,13 @@ impl Frame {
     /// path stays testable end to end.
     pub fn encode_v2(&self) -> Vec<u8> {
         self.encode_version(2)
+    }
+
+    /// Serialize as a v3 frame (op-keyed, 24-byte header, no session
+    /// word) — what a pre-session client puts on the wire. Kept so the
+    /// v3-compat path stays testable end to end.
+    pub fn encode_v3(&self) -> Vec<u8> {
+        self.encode_version(3)
     }
 
     fn encode_version(&self, version: u8) -> Vec<u8> {
@@ -351,7 +389,12 @@ impl Frame {
         out.extend_from_slice(&self.m.to_le_bytes());
         debug_assert_eq!(out.len(), OFF_LEN);
         out.extend_from_slice(&(plen as u32).to_le_bytes());
-        debug_assert_eq!(out.len(), HEADER_LEN);
+        debug_assert_eq!(out.len(), LEGACY_HEADER_LEN);
+        if version >= 4 {
+            debug_assert_eq!(out.len(), OFF_SESSION);
+            out.extend_from_slice(&self.session.to_le_bytes());
+            debug_assert_eq!(out.len(), HEADER_LEN);
+        }
         match &self.words {
             Some(w) => {
                 for v in w {
@@ -402,9 +445,19 @@ pub enum FrameError {
     BadVersion(u8),
     /// Unknown frame kind.
     BadKind(u8),
-    /// A v3 request carrying an op discriminant this build doesn't
+    /// A v3/v4 request carrying an op discriminant this build doesn't
     /// know — a malformed frame, counted and answered like bad magic.
     BadOp(u8),
+    /// A request whose session key contradicts its op: a stateful
+    /// `rls_*` op with `session = 0` (which is also what any v2/v3
+    /// frame naming a stateful op decodes to — legacy formats cannot
+    /// carry sessions), or a stateless op with a nonzero session.
+    BadSession {
+        /// The request's op discriminant.
+        op: u8,
+        /// The offending session key.
+        session: u64,
+    },
     /// Declared payload length over [`MAX_PAYLOAD`].
     Oversize(u32),
     /// Transport-level failure (reset, broken pipe, …) — a connection
@@ -433,6 +486,9 @@ impl std::fmt::Display for FrameError {
             FrameError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
             FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
             FrameError::BadOp(o) => write!(f, "unknown op discriminant {o}"),
+            FrameError::BadSession { op, session } => {
+                write!(f, "session key {session} contradicts op {op}")
+            }
             FrameError::Oversize(n) => {
                 write!(f, "payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
             }
@@ -491,11 +547,12 @@ fn fill<R: Read>(r: &mut R, buf: &mut [u8], already: usize) -> Result<Fill, Fram
 /// broken-stream shape is a distinct [`FrameError`].
 ///
 /// Accepts versions [`MIN_VERSION`]..=[`VERSION`]; a v2 frame (byte 7
-/// reserved) decodes with `op = 0` (= `OpKind::Qrd`). Word-aligned
-/// request payloads are read directly into the frame's `words` vector
-/// — no intermediate byte buffer exists to copy out of.
+/// reserved) decodes with `op = 0` (= `OpKind::Qrd`), and v2/v3 frames
+/// (24-byte header) decode with `session = 0`. Word-aligned request
+/// and response payloads are read directly into the frame's `words`
+/// vector — no intermediate byte buffer exists to copy out of.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
-    let mut hdr = [0u8; HEADER_LEN];
+    let mut hdr = [0u8; LEGACY_HEADER_LEN];
     match fill(r, &mut hdr, 0)? {
         Fill::Done => {}
         Fill::CleanEof => return Ok(ReadOutcome::Eof),
@@ -543,9 +600,26 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
     if plen as usize > MAX_PAYLOAD {
         return Err(FrameError::Oversize(plen));
     }
-    // CleanEof/IdleTimeout are unreachable in the payload fills:
-    // `already > 0` turns both into Truncated/Stalled errors
-    if kind == FrameKind::Request && plen % 4 == 0 {
+    // v4 carries the session word after the legacy header; v2/v3 end
+    // at byte 24 and decode as session 0. CleanEof/IdleTimeout are
+    // unreachable in every fill below: `already > 0` turns both into
+    // Truncated/Stalled errors.
+    let (session, consumed) = if version >= 4 {
+        let mut sess = [0u8; 8];
+        let _ = fill(r, &mut sess, LEGACY_HEADER_LEN)?;
+        (u64::from_le_bytes(sess), HEADER_LEN)
+    } else {
+        (0, LEGACY_HEADER_LEN)
+    };
+    // a stateful op needs a session identity; a stateless op must not
+    // carry one — reject the contradiction before touching the payload
+    if kind == FrameKind::Request {
+        let stateful = OpKind::from_u8(op).is_some_and(OpKind::is_session);
+        if stateful != (session != 0) {
+            return Err(FrameError::BadSession { op, session });
+        }
+    }
+    if matches!(kind, FrameKind::Request | FrameKind::Response) && plen % 4 == 0 {
         // zero-copy path: land the payload bytes in the word vector's
         // own storage, then fix endianness in place (a no-op on LE)
         let mut words = vec![0u32; plen as usize / 4];
@@ -556,7 +630,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
             let bytes = unsafe {
                 std::slice::from_raw_parts_mut(words.as_mut_ptr() as *mut u8, plen as usize)
             };
-            let _ = fill(r, bytes, HEADER_LEN)?;
+            let _ = fill(r, bytes, consumed)?;
         }
         for w in words.iter_mut() {
             *w = u32::from_le(*w);
@@ -567,13 +641,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<ReadOutcome, FrameError> {
             op,
             id,
             m,
+            session,
             payload: Vec::new(),
             words: Some(words),
         }));
     }
     let mut payload = vec![0u8; plen as usize];
-    let _ = fill(r, &mut payload, HEADER_LEN)?;
-    Ok(ReadOutcome::Frame(Frame { kind, status, op, id, m, payload, words: None }))
+    let _ = fill(r, &mut payload, consumed)?;
+    Ok(ReadOutcome::Frame(Frame { kind, status, op, id, m, session, payload, words: None }))
 }
 
 #[cfg(test)]
@@ -606,7 +681,9 @@ mod tests {
     fn every_op_round_trips_with_its_discriminant() {
         for op in OpKind::ALL {
             let words: Vec<u32> = (0..8).map(|i| i * 7 + 1).collect();
-            let f = Frame::request_op(5, op, 4, &words);
+            // stateful ops must carry a session key; stateless must not
+            let f = Frame::request_op(5, op, 4, &words)
+                .with_session(if op.is_session() { 0xBEEF } else { 0 });
             let back = match decode(&f.encode()) {
                 Ok(ReadOutcome::Frame(b)) => b,
                 other => panic!("{op:?}: {other:?}"),
@@ -614,6 +691,64 @@ mod tests {
             assert_eq!(back, f);
             assert_eq!(OpKind::from_u8(back.op), Some(op));
         }
+    }
+
+    #[test]
+    fn v4_sessions_round_trip_and_legacy_headers_read_zero() {
+        let f = Frame::request_op(1, OpKind::RlsUpdate, 3, &[1, 2, 3, 4]).with_session(0xABCD);
+        let bytes = f.encode();
+        assert_eq!(bytes.len(), HEADER_LEN + 16);
+        assert_eq!(bytes[OFF_VERSION], VERSION);
+        assert_eq!(&bytes[OFF_SESSION..OFF_SESSION + 8], &0xABCDu64.to_le_bytes());
+        let back = match decode(&bytes) {
+            Ok(ReadOutcome::Frame(b)) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.session, 0xABCD);
+        assert_eq!(back, f);
+        // a response echoes the session through the v4 header too
+        let r = Frame::response_ok(1, 3, &[9, 9, 9]).with_op(4).with_session(0xABCD);
+        let back = match decode(&r.encode()) {
+            Ok(ReadOutcome::Frame(b)) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.session, 0xABCD);
+        // a v3 frame has the 24-byte header and decodes as session 0
+        let v3 = Frame::request(2, 2, &[1, 2, 3, 4]).encode_v3();
+        assert_eq!(v3.len(), LEGACY_HEADER_LEN + 16);
+        assert_eq!(v3[OFF_VERSION], 3);
+        let back = match decode(&v3) {
+            Ok(ReadOutcome::Frame(b)) => b,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(back.session, 0);
+        assert_eq!(back.words().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn session_op_contradictions_are_rejected() {
+        // a stateful op with no session key is malformed on v4...
+        let open = Frame::request_op(1, OpKind::RlsOpen, 4, &[0, 0]);
+        match decode(&open.encode()) {
+            Err(FrameError::BadSession { op: 3, session: 0 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // ...and on v3, which cannot carry a session at all — the
+        // legacy formats stay qrd/solve/append_qr-only
+        match decode(&open.encode_v3()) {
+            Err(FrameError::BadSession { op: 3, session: 0 }) => {}
+            other => panic!("{other:?}"),
+        }
+        // a stateless op smuggling a session key is equally malformed
+        let qrd = Frame::request(1, 2, &[1, 2, 3, 4]).with_session(9);
+        match decode(&qrd.encode()) {
+            Err(FrameError::BadSession { op: 0, session: 9 }) => {}
+            other => panic!("{other:?}"),
+        }
+        assert!(FrameError::BadSession { op: 3, session: 0 }.is_malformed());
+        // responses are never session-validated (the server echoes)
+        let r = Frame::response_ok(1, 4, &[1, 2, 3, 4]).with_op(4).with_session(9);
+        assert!(matches!(decode(&r.encode()), Ok(ReadOutcome::Frame(_))));
     }
 
     #[test]
@@ -682,20 +817,56 @@ mod tests {
                 Ok(ReadOutcome::Frame(b)) => b,
                 other => panic!("{other:?} for {f:?}"),
             };
-            // responses land byte-backed while constructors are
-            // word-backed; compare through the views, not the storage
+            // storage differs across the wire (word-aligned request and
+            // response payloads decode word-backed, everything else
+            // byte-backed); compare through the views, not the storage
             assert_eq!(back.kind, f.kind);
             assert_eq!(back.status, f.status);
             assert_eq!(back.op, f.op);
             assert_eq!(back.id, f.id);
             assert_eq!(back.m, f.m);
+            assert_eq!(back.session, f.session);
             assert_eq!(back.words(), f.words());
-            if f.words.is_none() {
+            let word_path = matches!(f.kind, FrameKind::Request | FrameKind::Response)
+                && f.payload_len() % 4 == 0;
+            if f.words.is_none() && !word_path {
                 assert_eq!(back.payload, f.payload);
             }
         }
         let err = Frame::response_error(3, 5, STATUS_ERROR, "boom");
         assert_eq!(err.text(), "boom");
+    }
+
+    #[test]
+    fn response_payloads_decode_zero_copy() {
+        // ok responses: the client's reconciliation owns the very
+        // allocation the socket bytes landed in
+        let words: Vec<u32> = (0..32).map(|i| i * 5 + 2).collect();
+        let bytes = Frame::response_ok(7, 4, &words).with_op(1).encode();
+        let mut back = match decode(&bytes) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(back.payload.is_empty(), "no intermediate byte buffer may survive decode");
+        assert_eq!(back.take_words().expect("aligned payload"), words);
+        // a word-aligned error reason rides the word path too; text()
+        // reads it back through the word view
+        let bytes = Frame::response_error(3, 5, STATUS_ERROR, "boom").encode();
+        let back = match decode(&bytes) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(back.words.is_some(), "aligned error payloads decode word-backed");
+        assert_eq!(back.text(), "boom");
+        // stats responses stay byte-backed even when aligned: the
+        // snapshot decoder consumes bytes, not words
+        let bytes = Frame::stats_response(6, vec![1, 2, 3, 4, 5, 6, 7, 8]).encode();
+        let back = match decode(&bytes) {
+            Ok(ReadOutcome::Frame(f)) => f,
+            other => panic!("{other:?}"),
+        };
+        assert!(back.words.is_none());
+        assert_eq!(back.payload, vec![1, 2, 3, 4, 5, 6, 7, 8]);
     }
 
     #[test]
@@ -829,6 +1000,7 @@ mod tests {
             op: 0,
             id: 1,
             m: 2,
+            session: 0,
             payload: vec![0u8; 15],
             words: None,
         };

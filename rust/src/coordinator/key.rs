@@ -9,13 +9,17 @@
 //! an engine arm — not a nine-module re-plumb.
 //!
 //! Payload contracts (u32 words of f32 bit patterns, little-endian on
-//! the wire), with k = m − 2 for AppendQr:
+//! the wire), with k = m − 2 for AppendQr; the three `rls_*` ops are
+//! stateful (wire v4 carries a nonzero `SessionKey`, m = filter taps):
 //!
-//! | op       | request words            | ok-response words         |
-//! |----------|--------------------------|---------------------------|
-//! | Qrd      | m·m (row-major A)        | m·2m (`[R \| G]`)         |
-//! | Solve    | m·m + m (A then b)       | m (x)                     |
-//! | AppendQr | 2k + m (cs,sn pairs, col)| m + 2 (col', cs_k, sn_k)  |
+//! | op        | request words            | ok-response words         |
+//! |-----------|--------------------------|---------------------------|
+//! | Qrd       | m·m (row-major A)        | m·2m (`[R \| G]`)         |
+//! | Solve     | m·m + m (A then b)       | m (x)                     |
+//! | AppendQr  | 2k + m (cs,sn pairs, col)| m + 2 (col', cs_k, sn_k)  |
+//! | RlsOpen   | 2 (λ, δ)                 | 0                         |
+//! | RlsUpdate | m + 1 (row x, desired d) | m (weights)               |
+//! | RlsClose  | 0                        | 0                         |
 
 /// Which operation a job runs on the Givens datapath (wire byte 7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -29,11 +33,26 @@ pub enum OpKind {
     /// replay k stored rotations on a new length-m column, append one
     /// rotation zeroing its last entry.
     AppendQr,
+    /// Open a QRD-RLS session: m = taps, payload (λ, δ). Stateful —
+    /// requires a nonzero `SessionKey` (wire v4).
+    RlsOpen,
+    /// Absorb one observation row into an open session's triangle and
+    /// answer the evolving weight vector. Stateful.
+    RlsUpdate,
+    /// Close a session and free its triangle. Stateful.
+    RlsClose,
 }
 
 impl OpKind {
     /// Every op, in wire-discriminant order.
-    pub const ALL: [OpKind; 3] = [OpKind::Qrd, OpKind::Solve, OpKind::AppendQr];
+    pub const ALL: [OpKind; 6] = [
+        OpKind::Qrd,
+        OpKind::Solve,
+        OpKind::AppendQr,
+        OpKind::RlsOpen,
+        OpKind::RlsUpdate,
+        OpKind::RlsClose,
+    ];
 
     /// Decode the wire discriminant (header byte 7).
     pub fn from_u8(b: u8) -> Option<OpKind> {
@@ -41,6 +60,9 @@ impl OpKind {
             0 => Some(OpKind::Qrd),
             1 => Some(OpKind::Solve),
             2 => Some(OpKind::AppendQr),
+            3 => Some(OpKind::RlsOpen),
+            4 => Some(OpKind::RlsUpdate),
+            5 => Some(OpKind::RlsClose),
             _ => None,
         }
     }
@@ -51,6 +73,9 @@ impl OpKind {
             OpKind::Qrd => 0,
             OpKind::Solve => 1,
             OpKind::AppendQr => 2,
+            OpKind::RlsOpen => 3,
+            OpKind::RlsUpdate => 4,
+            OpKind::RlsClose => 5,
         }
     }
 
@@ -59,12 +84,22 @@ impl OpKind {
         self.as_u8() as usize
     }
 
+    /// Stateful session ops: these require a nonzero `SessionKey` on
+    /// the wire, route by session (not job) hash, and dispatch to the
+    /// session table instead of a batch engine.
+    pub fn is_session(self) -> bool {
+        matches!(self, OpKind::RlsOpen | OpKind::RlsUpdate | OpKind::RlsClose)
+    }
+
     /// Human label for reports and bench entry names.
     pub fn label(self) -> &'static str {
         match self {
             OpKind::Qrd => "qrd",
             OpKind::Solve => "solve",
             OpKind::AppendQr => "append_qr",
+            OpKind::RlsOpen => "rls_open",
+            OpKind::RlsUpdate => "rls_update",
+            OpKind::RlsClose => "rls_close",
         }
     }
 }
@@ -107,6 +142,7 @@ impl JobKey {
         match self.op {
             OpKind::Qrd | OpKind::Solve => 1,
             OpKind::AppendQr => 2,
+            OpKind::RlsOpen | OpKind::RlsUpdate | OpKind::RlsClose => 1,
         }
     }
 
@@ -118,6 +154,9 @@ impl JobKey {
             OpKind::Qrd => m * m,
             OpKind::Solve => m * m + m,
             OpKind::AppendQr => 3 * m - 4, // 2(m−2) rotation words + m column words
+            OpKind::RlsOpen => 2,          // λ, δ (m carries the tap count)
+            OpKind::RlsUpdate => m + 1,    // regressor row + desired output
+            OpKind::RlsClose => 0,
         }
     }
 
@@ -128,6 +167,8 @@ impl JobKey {
             OpKind::Qrd => 2 * m * m,
             OpKind::Solve => m,
             OpKind::AppendQr => m + 2, // updated column + the new (cs, sn)
+            OpKind::RlsOpen | OpKind::RlsClose => 0,
+            OpKind::RlsUpdate => m, // the evolving weight vector
         }
     }
 
@@ -146,6 +187,33 @@ impl JobKey {
     }
 }
 
+/// A client-chosen stream identity riding above `JobKey` on wire v4.
+///
+/// `0` is reserved for "no session" (what v2/v3 frames decode to), so
+/// every stateful request carries a nonzero key. Session ops route by
+/// `SessionKey::shard_hash` instead of the job hash: one session's
+/// whole lifetime lands on one shard (session affinity ⇒ the session
+/// table never migrates state across shards).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionKey(pub u64);
+
+impl SessionKey {
+    /// The reserved "no session" value carried by stateless frames.
+    pub const NONE: SessionKey = SessionKey(0);
+
+    /// True for a real (nonzero) session identity.
+    pub fn is_some(&self) -> bool {
+        self.0 != 0
+    }
+
+    /// Stable hash for session-affine routing (same mixer family as
+    /// [`JobKey::shard_hash`], applied to the raw session id).
+    pub fn shard_hash(&self) -> u64 {
+        let h = self.0.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        h ^ (h >> 29)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,10 +223,14 @@ mod tests {
         for op in OpKind::ALL {
             assert_eq!(OpKind::from_u8(op.as_u8()), Some(op));
         }
-        assert_eq!(OpKind::from_u8(3), None);
+        assert_eq!(OpKind::from_u8(6), None);
         assert_eq!(OpKind::from_u8(255), None);
         // Qrd must be discriminant 0: that is the v2 reserved byte
         assert_eq!(OpKind::Qrd.as_u8(), 0);
+        // the stateful/stateless split drives routing and dispatch
+        for op in OpKind::ALL {
+            assert_eq!(op.is_session(), op.as_u8() >= 3, "{op:?}");
+        }
     }
 
     #[test]
@@ -172,6 +244,14 @@ mod tests {
         assert_eq!(JobKey::new(OpKind::AppendQr, 2).response_words(), 4);
         assert_eq!(JobKey::new(OpKind::AppendQr, 6).request_words(), 14);
         assert_eq!(JobKey::new(OpKind::AppendQr, 6).response_words(), 8);
+        // session ops: open carries (λ, δ), update a row + desired,
+        // close nothing; only update answers payload (the weights)
+        assert_eq!(JobKey::new(OpKind::RlsOpen, 4).request_words(), 2);
+        assert_eq!(JobKey::new(OpKind::RlsOpen, 4).response_words(), 0);
+        assert_eq!(JobKey::new(OpKind::RlsUpdate, 4).request_words(), 5);
+        assert_eq!(JobKey::new(OpKind::RlsUpdate, 4).response_words(), 4);
+        assert_eq!(JobKey::new(OpKind::RlsClose, 4).request_words(), 0);
+        assert_eq!(JobKey::new(OpKind::RlsClose, 4).response_words(), 0);
     }
 
     #[test]
@@ -185,6 +265,22 @@ mod tests {
         assert_ne!(a.shard_hash(), c.shard_hash());
         // same-key hashing is stable (the routing invariant)
         assert_eq!(a.shard_hash(), JobKey::qrd(4).shard_hash());
+    }
+
+    #[test]
+    fn session_keys_hash_stably_and_spread() {
+        assert!(!SessionKey::NONE.is_some());
+        assert!(SessionKey(7).is_some());
+        // same-key hashing is stable (the affinity invariant) and
+        // consecutive client-chosen ids must not collapse onto one slot
+        assert_eq!(SessionKey(7).shard_hash(), SessionKey(7).shard_hash());
+        for slots in [2usize, 3, 4, 8] {
+            let mut seen = std::collections::BTreeSet::new();
+            for s in 1..=16u64 {
+                seen.insert(SessionKey(s).shard_hash() as usize % slots);
+            }
+            assert!(seen.len() > 1, "{slots} slots: every session on one shard");
+        }
     }
 
     #[test]

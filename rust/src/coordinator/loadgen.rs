@@ -29,11 +29,23 @@
 //! run is reproducible. The clean arm doubles as a correctness probe:
 //! a sample of its responses is checked bit-exact against the
 //! reference path for its op.
+//!
+//! With `rls_update` in the op mix, a share of the well-behaved
+//! connections run whole streaming-session lifecycles instead:
+//! `rls_open` (λ, δ), a closed-loop stream of `rls_update` round
+//! trips, then `rls_close` — each against a client-side [`QrdRls`]
+//! replay of exactly the updates the server admitted, weight vectors
+//! compared bit-for-bit.
 
-use super::frame::{read_frame, Frame, FrameKind, ReadOutcome, STATUS_OK, STATUS_OVERLOAD};
+use super::frame::{
+    read_frame, Frame, FrameKind, ReadOutcome, STATUS_ERROR, STATUS_OK, STATUS_OVERLOAD,
+};
 use super::key::{JobKey, OpKind};
 use super::net::NetClient;
 use super::{BatchEngine, NativeEngine};
+use crate::fp::FpFormat;
+use crate::qrd::QrdRls;
+use crate::rotator::RotatorConfig;
 use crate::util::bench::{merge_json, BenchResult};
 use crate::util::rng::Rng;
 use std::collections::{BTreeMap, BTreeSet};
@@ -58,7 +70,11 @@ pub struct LoadgenConfig {
     /// Mixed-m traffic samples m uniformly in `[2, max_m]`.
     pub max_m: usize,
     /// Operation mix: each request samples its op uniformly from this
-    /// list (`--ops qrd,solve,append_qr`; repeats skew the mix).
+    /// list (`--ops qrd,solve,append_qr,rls_update`; repeats skew the
+    /// mix). `rls_update` stands for the whole session lifecycle — it
+    /// routes a share of the well-behaved connections through
+    /// open → update* → close streams verified against an offline
+    /// [`QrdRls`] replay.
     pub ops: Vec<OpKind>,
     /// Enable the five fault classes (off = every connection clean).
     pub chaos: bool,
@@ -110,11 +126,15 @@ enum Class {
     /// Open-loop (`--burst`): stream every request without waiting,
     /// tally response statuses — sheds must be explicit frames.
     Burst,
+    /// One whole QRD-RLS streaming session (open → update* → close),
+    /// closed-loop, verified against the offline replay bit-for-bit.
+    Session,
 }
 
-const CLASSES: [Class; 7] = [
+const CLASSES: [Class; 8] = [
     Class::Clean,
     Class::Burst,
+    Class::Session,
     Class::HalfClose,
     Class::Disconnect,
     Class::Truncated,
@@ -127,6 +147,7 @@ impl Class {
         match self {
             Class::Clean => "clean",
             Class::Burst => "burst",
+            Class::Session => "session",
             Class::HalfClose => "half-close",
             Class::Disconnect => "disconnect",
             Class::Truncated => "truncated",
@@ -140,24 +161,37 @@ impl Class {
         match self {
             Class::Clean => 0,
             Class::Burst => 1,
-            Class::HalfClose => 2,
-            Class::Disconnect => 3,
-            Class::Truncated => 4,
-            Class::Garbage => 5,
-            Class::SlowLoris => 6,
+            Class::Session => 2,
+            Class::HalfClose => 3,
+            Class::Disconnect => 4,
+            Class::Truncated => 5,
+            Class::Garbage => 6,
+            Class::SlowLoris => 7,
         }
     }
 
     /// Deterministic class mix: half the connections stay well-behaved
-    /// (clean closed-loop, or open-loop with `--burst`), the rest
+    /// (clean closed-loop, or open-loop with `--burst`; session
+    /// lifecycles take half of that arm when the op mix asks for
+    /// sessions, all of it when the mix is sessions-only), the rest
     /// spread across the fault classes.
     fn pick(rng: &mut Rng, cfg: &LoadgenConfig) -> Class {
-        let good = if cfg.burst { Class::Burst } else { Class::Clean };
+        let sessions = cfg.ops.iter().any(|o| o.is_session());
+        let stateless = cfg.ops.iter().any(|o| !o.is_session());
+        let good = |rng: &mut Rng| {
+            if sessions && (!stateless || rng.below(2) == 0) {
+                Class::Session
+            } else if cfg.burst {
+                Class::Burst
+            } else {
+                Class::Clean
+            }
+        };
         if !cfg.chaos {
-            return good;
+            return good(rng);
         }
         match rng.below(100) {
-            0..=49 => good,
+            0..=49 => good(rng),
             50..=64 => Class::HalfClose,
             65..=79 => Class::Disconnect,
             80..=86 => Class::Truncated,
@@ -185,6 +219,9 @@ struct ConnLedger {
     /// Did the fault injection actually reach the server (connect +
     /// write succeeded)? Gates the malformed-frame reconciliation.
     injected: bool,
+    /// Session-class only: served weight vectors that matched the
+    /// offline replay bit-for-bit.
+    weights_verified: u64,
 }
 
 impl ConnLedger {
@@ -198,6 +235,7 @@ impl ConnLedger {
             latencies: Vec::new(),
             violations: Vec::new(),
             injected: false,
+            weights_verified: 0,
         }
     }
 }
@@ -209,14 +247,23 @@ impl ConnLedger {
 /// plausible (cos, sin) rotation prefix.
 fn random_request(rng: &mut Rng, cfg: &LoadgenConfig) -> (JobKey, Vec<u32>) {
     let m = 2 + rng.below((cfg.max_m.max(2) - 1) as u64) as usize;
-    let op = cfg.ops[rng.below(cfg.ops.len() as u64) as usize];
+    // session ops never come from here — `run_session` drives them as
+    // whole lifecycles — so sample the stateless subset (qrd is the
+    // fallback when the mix is sessions-only, for the fault classes
+    // that just need bytes shaped like a frame)
+    let stateless: Vec<OpKind> = cfg.ops.iter().copied().filter(|o| !o.is_session()).collect();
+    let op = if stateless.is_empty() {
+        OpKind::Qrd
+    } else {
+        stateless[rng.below(stateless.len() as u64) as usize]
+    };
     let key = JobKey::new(op, m);
     let scale = 2f32.powf(rng.range(-4.0, 4.0) as f32);
     let mut a: Vec<u32> = (0..key.request_words())
         .map(|_| (rng.range(-1.0, 1.0) as f32 * scale).to_bits())
         .collect();
     match op {
-        OpKind::Qrd => {}
+        OpKind::Qrd | OpKind::RlsOpen | OpKind::RlsUpdate | OpKind::RlsClose => {}
         OpKind::Solve => {
             for e in (0..m * m).step_by(m + 1) {
                 a[e] = (f32::from_bits(a[e]) + 4.0 * scale).to_bits();
@@ -372,6 +419,195 @@ fn run_reliable(
         }
         if timed_out {
             led.violations.push("no EOF after a drained half-close".into());
+        }
+    }
+}
+
+/// Session connections: one whole QRD-RLS streaming lifecycle —
+/// `rls_open` (λ, δ), a closed-loop stream of `rls_update` round
+/// trips, then `rls_close` — checked against a client-side [`QrdRls`]
+/// replay built with the same flagship unit config the server's
+/// session table runs. Every ok response must carry the replay's
+/// weight bits exactly; a shed request is applied on neither side, so
+/// the replay stays aligned through overload.
+fn run_session(addr: &str, idx: usize, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnLedger) {
+    let mut client = match NetClient::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            led.violations.push(format!("connect failed: {e}"));
+            return;
+        }
+    };
+    let taps = 2 + rng.below((cfg.max_m.max(2) - 1) as u64) as usize;
+    // client-chosen, nonzero, unique per connection index
+    let session = ((idx as u64) << 20) | 0xBEE5;
+    let lambda = rng.range(0.9, 1.0) as f32;
+    let delta = rng.range(0.1, 2.0) as f32;
+    let open_key = JobKey::new(OpKind::RlsOpen, taps);
+    let update_key = JobKey::new(OpKind::RlsUpdate, taps);
+    let close_key = JobKey::new(OpKind::RlsClose, taps);
+
+    // ---- open ---------------------------------------------------
+    let open_words = [lambda.to_bits(), delta.to_bits()];
+    if let Err(e) = client.send_request_session(1, session, open_key, &open_words) {
+        led.violations.push(format!("send open failed: {e}"));
+        return;
+    }
+    led.sent += 1;
+    *led.sent_per_key.entry(open_key).or_insert(0) += 1;
+    led.injected = true;
+    let mut opened = false;
+    match client.read_frame() {
+        Ok(Some(f)) if f.kind == FrameKind::Response => {
+            led.received += 1;
+            if f.id != 1 {
+                led.violations.push(format!("open response id {} (want 1)", f.id));
+                return;
+            }
+            if f.session != session {
+                led.violations.push(format!(
+                    "open response echoed session {:#x} (want {session:#x})",
+                    f.session
+                ));
+            }
+            match f.status {
+                STATUS_OK => opened = true,
+                STATUS_OVERLOAD => {
+                    if f.retry_after_ms().is_none() {
+                        led.violations.push("overload open response has no retry hint".into());
+                    }
+                    *led.shed_per_key.entry(open_key).or_insert(0) += 1;
+                }
+                s => led.violations.push(format!("open answered status {s}")),
+            }
+        }
+        Ok(Some(f)) => {
+            led.violations.push(format!("unexpected frame kind {:?} for the open", f.kind));
+            return;
+        }
+        Ok(None) => {
+            led.violations.push("server closed before answering the open".into());
+            return;
+        }
+        Err(e) => {
+            led.violations.push(format!("broken stream at the open: {e}"));
+            return;
+        }
+    }
+
+    // the offline oracle: same unit config as the server's table, fed
+    // only the updates the server actually admitted
+    let hub = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+    let mut replay = QrdRls::new(hub, taps, lambda as f64, delta as f64);
+
+    // ---- closed-loop updates ------------------------------------
+    for i in 0..cfg.requests_per_conn {
+        let id = (i + 2) as u64;
+        let scale = 2f32.powf(rng.range(-2.0, 2.0) as f32);
+        let row: Vec<f32> = (0..taps).map(|_| rng.range(-1.0, 1.0) as f32 * scale).collect();
+        let desired = rng.range(-1.0, 1.0) as f32 * scale;
+        let mut words: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        words.push(desired.to_bits());
+        if let Err(e) = client.send_request_session(id, session, update_key, &words) {
+            led.violations.push(format!("send update {id} failed: {e}"));
+            return;
+        }
+        led.sent += 1;
+        *led.sent_per_key.entry(update_key).or_insert(0) += 1;
+        let sent_at = Instant::now();
+        match client.read_frame() {
+            Ok(Some(f)) if f.kind == FrameKind::Response => {
+                led.received += 1;
+                if f.id != id {
+                    led.violations.push(format!("response {} out of order (want {id})", f.id));
+                    return;
+                }
+                match f.status {
+                    STATUS_OK => {
+                        led.latencies.push(sent_at.elapsed().as_secs_f64());
+                        let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
+                        replay.update(&x, desired as f64);
+                        let want: Vec<u32> = match replay.weights() {
+                            Ok(w) => w.iter().map(|&wi| (wi as f32).to_bits()).collect(),
+                            Err(e) => {
+                                led.violations.push(format!("client replay went singular: {e}"));
+                                return;
+                            }
+                        };
+                        if f.words().as_deref() != Some(&want[..]) {
+                            led.violations.push(format!(
+                                "update {id}: served weights diverged from the offline replay"
+                            ));
+                            return;
+                        }
+                        led.weights_verified += 1;
+                    }
+                    STATUS_OVERLOAD => {
+                        if f.retry_after_ms().is_none() {
+                            led.violations
+                                .push(format!("overload response {id} has no retry hint"));
+                        }
+                        *led.shed_per_key.entry(update_key).or_insert(0) += 1;
+                    }
+                    STATUS_ERROR if opened => {
+                        led.violations
+                            .push(format!("update {id} answered an error on a live session"));
+                    }
+                    // an error after a shed open (unknown session) or a
+                    // deadline under pathological load: applied on
+                    // neither side, the replay stays aligned
+                    _ => {}
+                }
+            }
+            Ok(Some(f)) => {
+                led.violations.push(format!("unexpected frame kind {:?} for {id}", f.kind));
+                return;
+            }
+            Ok(None) => {
+                led.violations.push(format!(
+                    "server closed after {} of {} session responses",
+                    led.received,
+                    cfg.requests_per_conn + 2
+                ));
+                return;
+            }
+            Err(e) => {
+                led.violations.push(format!("broken stream at response {id}: {e}"));
+                return;
+            }
+        }
+    }
+
+    // ---- close --------------------------------------------------
+    let close_id = cfg.requests_per_conn as u64 + 2;
+    if let Err(e) = client.send_request_session(close_id, session, close_key, &[]) {
+        led.violations.push(format!("send close failed: {e}"));
+        return;
+    }
+    led.sent += 1;
+    *led.sent_per_key.entry(close_key).or_insert(0) += 1;
+    match client.read_frame() {
+        Ok(Some(f)) if f.kind == FrameKind::Response => {
+            led.received += 1;
+            if f.id != close_id {
+                led.violations.push(format!("close response id {} (want {close_id})", f.id));
+            } else if f.status == STATUS_OVERLOAD {
+                *led.shed_per_key.entry(close_key).or_insert(0) += 1;
+            } else if opened && f.status != STATUS_OK {
+                led.violations
+                    .push(format!("close of a live session answered status {}", f.status));
+            } else if !opened && f.status == STATUS_OK {
+                led.violations.push("close of a never-opened session answered ok".into());
+            }
+        }
+        Ok(Some(f)) => {
+            led.violations.push(format!("unexpected frame kind {:?} for the close", f.kind));
+        }
+        Ok(None) => {
+            led.violations.push("server closed before answering the close".into());
+        }
+        Err(e) => {
+            led.violations.push(format!("broken stream at the close: {e}"));
         }
     }
 }
@@ -553,9 +789,11 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
             false
         }
         // reliable classes are driven by run_reliable / run_burst /
-        // run_disconnect; landing here with one is a dispatch bug, but
-        // a no-op beats a panic inside the harness
-        Class::Clean | Class::Burst | Class::HalfClose | Class::Disconnect => return,
+        // run_session / run_disconnect; landing here with one is a
+        // dispatch bug, but a no-op beats a panic inside the harness
+        Class::Clean | Class::Burst | Class::Session | Class::HalfClose | Class::Disconnect => {
+            return
+        }
     };
     led.injected = true;
     if fin {
@@ -573,6 +811,16 @@ fn run_malformed(addr: &str, rng: &mut Rng, cfg: &LoadgenConfig, led: &mut ConnL
     }
 }
 
+/// p99 of a round-trip sample, in seconds (0 when empty).
+fn p99_of(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut l = samples.to_vec();
+    l.sort_by(|a, b| a.total_cmp(b));
+    l[((0.99 * l.len() as f64).ceil() as usize).clamp(1, l.len()) - 1]
+}
+
 fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLedger {
     // per-connection deterministic stream: class and payloads depend
     // only on (seed, idx)
@@ -582,6 +830,7 @@ fn run_conn(idx: usize, cfg: &LoadgenConfig, reference: &NativeEngine) -> ConnLe
     match class {
         Class::Clean => run_reliable(&cfg.addr, &mut rng, cfg, reference, false, &mut led),
         Class::Burst => run_burst(&cfg.addr, &mut rng, cfg, &mut led),
+        Class::Session => run_session(&cfg.addr, idx, &mut rng, cfg, &mut led),
         Class::HalfClose => run_reliable(&cfg.addr, &mut rng, cfg, reference, true, &mut led),
         Class::Disconnect => run_disconnect(&cfg.addr, &mut rng, cfg, &mut led),
         Class::Truncated | Class::Garbage | Class::SlowLoris => {
@@ -639,6 +888,10 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
     let mut shed_seen_per_key: BTreeMap<JobKey, u64> = BTreeMap::new();
     let mut malformed_injected = 0u64;
     let mut latencies: Vec<f64> = Vec::new();
+    let mut session_latencies: Vec<f64> = Vec::new();
+    let mut session_conns = 0u64;
+    let mut session_recv = 0u64;
+    let mut weights_verified = 0u64;
     let mut failures: Vec<String> = Vec::new();
     for led in &ledgers {
         let row = &mut per_class[led.class.index()];
@@ -652,7 +905,12 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
             }
         }
         match led.class {
-            Class::Clean | Class::Burst | Class::HalfClose => {
+            Class::Clean | Class::Burst | Class::Session | Class::HalfClose => {
+                if led.class == Class::Session {
+                    session_conns += 1;
+                    session_recv += led.received;
+                    weights_verified += led.weights_verified;
+                }
                 for (key, n) in &led.sent_per_key {
                     *reliable_sent_per_key.entry(*key).or_insert(0) += n;
                 }
@@ -671,7 +929,11 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
                 }
             }
         }
-        latencies.extend_from_slice(&led.latencies);
+        if led.class == Class::Session {
+            session_latencies.extend_from_slice(&led.latencies);
+        } else {
+            latencies.extend_from_slice(&led.latencies);
+        }
     }
     let received_total: u64 = per_class.iter().map(|r| r.2).sum();
 
@@ -817,21 +1079,29 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
             snap.shed
         );
     }
+    if session_conns > 0 {
+        println!(
+            "sessions          : {session_conns} lifecycles, {weights_verified} weight vectors \
+             bit-exact vs the offline replay"
+        );
+    }
     println!(
         "connections       : {} opened, {} closed; {} malformed frames",
         snap.conn_opened, snap.conn_closed, snap.frames_malformed
     );
     let throughput = snap.responded as f64 / wall.max(1e-9);
-    let p99 = if latencies.is_empty() {
-        0.0
-    } else {
-        let mut l = latencies.clone();
-        l.sort_by(|a, b| a.total_cmp(b));
-        l[((0.99 * l.len() as f64).ceil() as usize).clamp(1, l.len()) - 1]
-    };
+    let p99 = p99_of(&latencies);
     println!("throughput        : {throughput:.0} responses/s");
     if !latencies.is_empty() {
         println!("clean rtt p99     : {:.1} ms over {} samples", p99 * 1e3, latencies.len());
+    }
+    let session_p99 = p99_of(&session_latencies);
+    if !session_latencies.is_empty() {
+        println!(
+            "session rtt p99   : {:.1} ms over {} samples",
+            session_p99 * 1e3,
+            session_latencies.len()
+        );
     }
 
     // ---- bench entry (connections × throughput × p99) -----------
@@ -861,6 +1131,17 @@ pub fn run_loadgen(cfg: &LoadgenConfig) -> anyhow::Result<()> {
                 wall,
             ));
             entries.push(BenchResult::from_wall(&format!("{otag} shed"), snap.shed as f64, wall));
+        }
+        if session_conns > 0 {
+            let stag = format!("rls_session/conns{}", cfg.conns);
+            entries.push(BenchResult::from_wall(
+                &format!("{stag} throughput"),
+                session_recv as f64,
+                wall,
+            ));
+            if session_p99 > 0.0 {
+                entries.push(BenchResult::from_wall(&format!("{stag} p99"), 1.0, session_p99));
+            }
         }
         merge_json(path, &entries)?;
         println!("bench entries     : merged into {path}");

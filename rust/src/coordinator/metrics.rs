@@ -156,6 +156,16 @@ pub struct Metrics {
     /// Accepted requests shed at admission with an overload response
     /// (never queued, answered immediately), per job key.
     net_shed: Vec<AtomicU64>,
+    // streaming-session lifecycle (coordinator::session) -------------
+    /// RLS sessions opened (`rls_open` served, including reopens).
+    sessions_opened: AtomicU64,
+    /// RLS sessions closed by an explicit `rls_close`.
+    sessions_closed: AtomicU64,
+    /// RLS sessions evicted (LRU cap, idle deadline, or shutdown).
+    sessions_evicted: AtomicU64,
+    /// RLS sessions currently resident — a gauge the session table
+    /// republishes on every open/close/evict.
+    sessions_live: AtomicU64,
     // autoscaler observability ---------------------------------------
     /// Worker slots currently alive — a gauge the autoscaler publishes
     /// on every resize so tests and benches can watch capacity move.
@@ -202,6 +212,10 @@ impl Metrics {
             net_deadline_timeouts: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
             net_peer_vanished: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
             net_shed: (0..KEY_BINS).map(|_| AtomicU64::new(0)).collect(),
+            sessions_opened: AtomicU64::new(0),
+            sessions_closed: AtomicU64::new(0),
+            sessions_evicted: AtomicU64::new(0),
+            sessions_live: AtomicU64::new(0),
             workers_alive: AtomicU64::new(0),
             scale_ups: AtomicU64::new(0),
             scale_downs: AtomicU64::new(0),
@@ -425,6 +439,62 @@ impl Metrics {
     /// counted as responded (that would double-account the request).
     pub fn on_shed(&self, key: JobKey) {
         self.net_shed[Self::key_bin(key)].fetch_add(1, Ordering::Release);
+    }
+
+    // streaming-session lifecycle ----------------------------------
+    //
+    // Session counts feed the exit-time audit (`opened == closed +
+    // evicted` once traffic quiesces) and the serve-loop stats line,
+    // so like the net-lifecycle family above the recorders publish
+    // with `Release` and the getters read with `Acquire`.
+
+    /// Record an `rls_open` creating (or replacing) a session.
+    pub fn on_session_opened(&self) {
+        self.sessions_opened.fetch_add(1, Ordering::Release);
+    }
+
+    /// Record an explicit `rls_close` retiring a session.
+    pub fn on_session_closed(&self) {
+        self.sessions_closed.fetch_add(1, Ordering::Release);
+    }
+
+    /// Record a session evicted by the LRU cap, the idle deadline, or
+    /// shutdown.
+    pub fn on_session_evicted(&self) {
+        self.sessions_evicted.fetch_add(1, Ordering::Release);
+    }
+
+    /// Publish the number of sessions currently resident.
+    pub fn set_sessions_live(&self, n: usize) {
+        self.sessions_live.store(n as u64, Ordering::Release);
+    }
+
+    /// Sessions opened (including reopens of a live key).
+    pub fn sessions_opened(&self) -> u64 {
+        self.sessions_opened.load(Ordering::Acquire)
+    }
+
+    /// Sessions retired by an explicit `rls_close`.
+    pub fn sessions_closed(&self) -> u64 {
+        self.sessions_closed.load(Ordering::Acquire)
+    }
+
+    /// Sessions evicted (cap, idle deadline, or shutdown).
+    pub fn sessions_evicted(&self) -> u64 {
+        self.sessions_evicted.load(Ordering::Acquire)
+    }
+
+    /// Sessions currently resident, as last published.
+    pub fn sessions_live(&self) -> u64 {
+        self.sessions_live.load(Ordering::Acquire)
+    }
+
+    /// The session-lifecycle conservation identity, meaningful once
+    /// traffic has quiesced: every session ever opened was either
+    /// explicitly closed, evicted, or is still resident.
+    pub fn sessions_reconcile(&self) -> bool {
+        self.sessions_opened()
+            == self.sessions_closed() + self.sessions_evicted() + self.sessions_live()
     }
 
     /// Publish the number of worker slots currently alive (autoscaler
@@ -678,6 +748,27 @@ mod tests {
         m.on_net_accepted(JobKey::qrd(10_000));
         m.on_net_responded(JobKey::qrd(10_000));
         assert_eq!(m.net_accepted(JobKey::qrd(M_BINS - 1)), 1);
+    }
+
+    #[test]
+    fn session_lifecycle_counters_reconcile() {
+        let m = Metrics::new(2);
+        assert!(m.sessions_reconcile(), "empty metrics reconcile trivially");
+        m.on_session_opened();
+        m.on_session_opened();
+        m.on_session_opened();
+        m.set_sessions_live(3);
+        assert!(m.sessions_reconcile());
+        m.on_session_closed();
+        m.set_sessions_live(2);
+        m.on_session_evicted();
+        assert!(!m.sessions_reconcile(), "stale gauge must not reconcile");
+        m.set_sessions_live(1);
+        assert!(m.sessions_reconcile());
+        assert_eq!(m.sessions_opened(), 3);
+        assert_eq!(m.sessions_closed(), 1);
+        assert_eq!(m.sessions_evicted(), 1);
+        assert_eq!(m.sessions_live(), 1);
     }
 
     #[test]

@@ -2,11 +2,13 @@
 //!
 //! The deployable system around the rotation unit: clients submit jobs
 //! keyed by [`JobKey`] — an operation ([`OpKind`]: full QR
-//! decomposition, batched least-squares solve, or incremental
-//! column-append QR) times a matrix dimension (wire format v3 carries
-//! both; v2 frames are still accepted as `op = Qrd`, and mixed traffic
-//! shares one service). A dynamic batcher groups requests (size +
-//! deadline policy, vLLM-router style) into **uniform-key bins**, a
+//! decomposition, batched least-squares solve, incremental
+//! column-append QR, or the stateful QRD-RLS session ops) times a
+//! matrix dimension (wire format v4 carries both plus a [`SessionKey`];
+//! v3 and v2 frames are still accepted, decoding to `session = 0`, and
+//! mixed traffic shares one service). A dynamic batcher groups requests
+//! (size + deadline policy, vLLM-router style) into **uniform-key
+//! bins**, a
 //! pool of persistent workers executes batches on either the
 //! bit-accurate native engine (any key; blocked wave schedules for
 //! large m) or the AOT-compiled PJRT artifact (shape-locked to
@@ -48,6 +50,7 @@ mod loadgen;
 mod metrics;
 mod net;
 mod service;
+mod session;
 mod shard;
 
 pub use autoscale::{AutoscaleConfig, AutoscalePolicy, LoadSignal, ScaleDecision, ShedPolicy};
@@ -57,11 +60,12 @@ pub use frame::{
     read_frame, Frame, FrameError, FrameKind, ReadOutcome, STATUS_DEADLINE, STATUS_ERROR,
     STATUS_OK, STATUS_OVERLOAD,
 };
-pub use key::{JobKey, OpKind, N_OPS};
+pub use key::{JobKey, OpKind, SessionKey, N_OPS};
 pub use loadgen::{run_loadgen, LoadgenConfig};
 pub use metrics::{LatencyHistogram, Metrics};
 pub use net::{NetClient, NetConfig, NetServer, StatsSnapshot};
 pub use service::{PendingResponse, QrdService, Request, Response, RestartPolicy, RouterPolicy};
+pub use session::{SessionTable, DEFAULT_MAX_SESSIONS, DEFAULT_SESSION_IDLE_MS};
 pub use shard::{Pop, ShardQueue};
 
 use crate::util::par;
@@ -131,6 +135,12 @@ pub struct ServeConfig {
     /// ([`FaultEngine`]): scheduled panics, errors, and latency spikes
     /// that drive the supervisor, backoff, and autoscaler for real.
     pub chaos: bool,
+    /// Resident-session cap for the stateful RLS ops: at the cap, an
+    /// `rls_open` evicts the least-recently-used session on its shard.
+    pub max_sessions: usize,
+    /// Idle deadline before a session is evicted, in milliseconds
+    /// (0 = never idle-evict).
+    pub session_idle_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -156,6 +166,8 @@ impl Default for ServeConfig {
             backoff_ms: 25,
             backoff_cap_ms: 1_000,
             chaos: false,
+            max_sessions: DEFAULT_MAX_SESSIONS,
+            session_idle_ms: DEFAULT_SESSION_IDLE_MS,
         }
     }
 }
@@ -309,6 +321,7 @@ fn build_service(cfg: &ServeConfig) -> anyhow::Result<(QrdService, String)> {
     } else {
         svc.with_max_m(cfg.max_m)
     };
+    let svc = svc.with_sessions(cfg.max_sessions, Duration::from_millis(cfg.session_idle_ms));
     Ok((svc, name))
 }
 
@@ -496,6 +509,15 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::
             if acc == rsp + ddl + van + shd { "" } else { "  ← UNACCOUNTED" }
         );
     }
+    if m.sessions_opened() > 0 {
+        println!(
+            "session ledger    : {} opened = {} closed + {} evicted + {} live at exit",
+            m.sessions_opened(),
+            m.sessions_closed(),
+            m.sessions_evicted(),
+            m.sessions_live()
+        );
+    }
     if m.scale_ups() + m.scale_downs() > 0 {
         println!(
             "autoscale         : {} scale-ups, {} scale-downs, {} workers at exit",
@@ -525,6 +547,14 @@ pub fn serve_listen(cfg: &ServeConfig, listen: &str, net: NetConfig) -> anyhow::
         "connection leak: {} opened but {} closed",
         m.conn_opened(),
         m.conn_closed()
+    );
+    anyhow::ensure!(
+        m.sessions_reconcile(),
+        "session lifecycle broken: {} opened != {} closed + {} evicted + {} live",
+        m.sessions_opened(),
+        m.sessions_closed(),
+        m.sessions_evicted(),
+        m.sessions_live()
     );
     println!("lifecycle         : every request accounted, every connection closed");
     Ok(())

@@ -1,6 +1,10 @@
-//! TCP ingress for the QRD service: wire format v3 frames over real
-//! sockets (v2 frames still accepted as `op = Qrd`), with every
-//! connection-lifecycle failure a counted, handled path.
+//! TCP ingress for the QRD service: wire format v4 frames over real
+//! sockets (v3 frames still accepted with `session = 0`, v2 frames as
+//! `op = Qrd`), with every connection-lifecycle failure a counted,
+//! handled path. The v4 session key rides every request into the
+//! service untouched and is echoed on the response, so a client
+//! multiplexing many streaming RLS sessions can audit each answer
+//! against the right per-session ledger.
 //!
 //! One accepted connection gets a **reader/writer thread pair** joined
 //! by a bounded work channel — the per-connection in-flight window.
@@ -85,11 +89,13 @@ impl Default for NetConfig {
 /// One unit handed from a connection's reader to its writer. The
 /// channel carrying these is bounded by [`NetConfig::window`].
 enum Work {
-    /// An accepted request in flight through the service.
-    Req { id: u64, key: JobKey, arrival: Instant, pending: PendingResponse },
+    /// An accepted request in flight through the service. `session` is
+    /// the v4 frame's session key (0 on stateless ops and legacy
+    /// frames), echoed verbatim on the response.
+    Req { id: u64, key: JobKey, session: u64, arrival: Instant, pending: PendingResponse },
     /// A request refused at admission: never submitted to the pool, to
     /// be answered with a `STATUS_OVERLOAD` frame and counted `shed`.
-    Shed { id: u64, key: JobKey, retry_after_ms: u64 },
+    Shed { id: u64, key: JobKey, session: u64, retry_after_ms: u64 },
     /// A metrics-snapshot request.
     Stats { id: u64 },
     /// Acknowledge a shutdown order.
@@ -276,6 +282,9 @@ fn reader_loop(
                     // with op = 0 = Qrd
                     let op = OpKind::from_u8(f.op).unwrap_or(OpKind::Qrd);
                     let key = JobKey::new(op, f.m as usize);
+                    // v4 session key (0 on stateless ops; the decoder's
+                    // BadSession rule already rejected contradictions)
+                    let session = f.session;
                     // admission control: under overload the request is
                     // accepted (counted) but never submitted — the
                     // writer sheds it with a STATUS_OVERLOAD frame and
@@ -283,7 +292,8 @@ fn reader_loop(
                     // policy instead of by the in-flight window alone
                     if let Some(retry_after_ms) = svc.overload_hint() {
                         metrics.on_net_accepted(key);
-                        if tx.send(Work::Shed { id: f.id, key, retry_after_ms }).is_err() {
+                        let shed = Work::Shed { id: f.id, key, session, retry_after_ms };
+                        if tx.send(shed).is_err() {
                             metrics.on_peer_vanished(key);
                             return;
                         }
@@ -305,7 +315,7 @@ fn reader_loop(
                                 "zero-copy request path: no intermediate byte buffer may \
                                  survive take_words"
                             );
-                            svc.submit_async_key_admitted(key, words)
+                            svc.submit_async_session_admitted(key, session, words)
                         }
                         None => {
                             immediate_error(key, "payload is not a whole number of 32-bit words")
@@ -314,7 +324,7 @@ fn reader_loop(
                     metrics.on_net_accepted(key);
                     // a full window blocks here — intentionally: the
                     // socket stops being read, the peer's sends back up
-                    if tx.send(Work::Req { id: f.id, key, arrival, pending }).is_err() {
+                    if tx.send(Work::Req { id: f.id, key, session, arrival, pending }).is_err() {
                         // writer already died on this peer: the request
                         // was accepted, so account the drop
                         metrics.on_peer_vanished(key);
@@ -369,7 +379,7 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
     let mut peer_gone = false;
     while let Ok(work) = rx.recv() {
         match work {
-            Work::Req { id, key, arrival, mut pending } => {
+            Work::Req { id, key, session, arrival, mut pending } => {
                 if peer_gone {
                     metrics.on_peer_vanished(key);
                     continue;
@@ -379,13 +389,15 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                 let remaining = deadline.checked_sub(arrival.elapsed()).unwrap_or(Duration::ZERO);
                 match pending.wait_timeout(remaining) {
                     Some(resp) => {
-                        // responses echo the request's op byte so a
-                        // client multiplexing mixed-op traffic can
-                        // audit each answer against its ledger
+                        // responses echo the request's op byte and
+                        // session key so a client multiplexing mixed-op
+                        // (and multi-session) traffic can audit each
+                        // answer against the right ledger
                         let frame = match resp.result() {
                             Ok(out) => Frame::response_ok(id, m, out).with_op(op),
                             Err(e) => Frame::response_error(id, m, STATUS_ERROR, e).with_op(op),
                         };
+                        let frame = frame.with_session(session);
                         if frame.write_to(&mut stream).is_ok() {
                             metrics.on_net_responded(key);
                         } else {
@@ -400,7 +412,8 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                         // channel, harmlessly)
                         let frame =
                             Frame::response_error(id, m, STATUS_DEADLINE, "deadline exceeded")
-                                .with_op(op);
+                                .with_op(op)
+                                .with_session(session);
                         if frame.write_to(&mut stream).is_ok() {
                             metrics.on_deadline_timeout(key);
                         } else {
@@ -410,7 +423,7 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                     }
                 }
             }
-            Work::Shed { id, key, retry_after_ms } => {
+            Work::Shed { id, key, session, retry_after_ms } => {
                 if peer_gone {
                     metrics.on_peer_vanished(key);
                     continue;
@@ -419,7 +432,8 @@ fn writer_loop(mut stream: TcpStream, rx: Receiver<Work>, metrics: &Metrics, dea
                 // the overload frame reaches the peer, `peer_vanished`
                 // when it does not — never `responded`
                 let frame = Frame::response_overload(id, key.m() as u32, retry_after_ms)
-                    .with_op(key.op.as_u8());
+                    .with_op(key.op.as_u8())
+                    .with_session(session);
                 if frame.write_to(&mut stream).is_ok() {
                     metrics.on_shed(key);
                 } else {
@@ -621,9 +635,24 @@ impl NetClient {
         Frame::request(id, m, words).write_to(&mut self.stream)
     }
 
-    /// Send one request frame for any op (wire format v3).
+    /// Send one request frame for any stateless op (v4 encoding,
+    /// `session = 0`).
     pub fn send_request_key(&mut self, id: u64, key: JobKey, words: &[u32]) -> io::Result<()> {
         Frame::request_op(id, key.op, key.m() as u32, words).write_to(&mut self.stream)
+    }
+
+    /// Send one stateful session-op request frame (wire format v4):
+    /// `rls_open` / `rls_update` / `rls_close` for `session`.
+    pub fn send_request_session(
+        &mut self,
+        id: u64,
+        session: u64,
+        key: JobKey,
+        words: &[u32],
+    ) -> io::Result<()> {
+        Frame::request_op(id, key.op, key.m() as u32, words)
+            .with_session(session)
+            .write_to(&mut self.stream)
     }
 
     /// Read one frame; `Ok(None)` on clean EOF.
@@ -643,9 +672,21 @@ impl NetClient {
         self.read_one(id)
     }
 
-    /// One synchronous round trip for any op (wire format v3).
+    /// One synchronous round trip for any stateless op.
     pub fn request_key(&mut self, id: u64, key: JobKey, words: &[u32]) -> anyhow::Result<Frame> {
         self.send_request_key(id, key, words)?;
+        self.read_one(id)
+    }
+
+    /// One synchronous session-op round trip (wire format v4).
+    pub fn request_session(
+        &mut self,
+        id: u64,
+        session: u64,
+        key: JobKey,
+        words: &[u32],
+    ) -> anyhow::Result<Frame> {
+        self.send_request_session(id, session, key, words)?;
         self.read_one(id)
     }
 

@@ -35,8 +35,9 @@
 use super::autoscale::{AutoscaleConfig, AutoscalePolicy, LoadSignal, ScaleDecision, ShedPolicy};
 use super::batcher::{BatchPolicy, KeyedBatcher};
 use super::engine::BatchEngine;
-use super::key::JobKey;
+use super::key::{JobKey, SessionKey};
 use super::metrics::Metrics;
+use super::session::{SessionTable, DEFAULT_MAX_SESSIONS, DEFAULT_SESSION_IDLE_MS};
 use super::shard::{Pop, ShardQueue};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicUsize, Ordering};
@@ -48,7 +49,7 @@ use std::time::{Duration, Instant};
 const DEAD_POOL_MSG: &str = "service workers have exited";
 const SHUTDOWN_MSG: &str = "service shut down before the request was served";
 
-/// One client request (wire format v3): an operation plus its payload
+/// One client request (wire format v4): an operation plus its payload
 /// as FP bit patterns, keyed by [`JobKey`] (op × matrix dimension).
 /// Mixed-op, mixed-m traffic shares one service; the batchers bin by
 /// `JobKey` so engines only ever see batches uniform in both.
@@ -56,6 +57,9 @@ pub struct Request {
     /// Operation and matrix dimension (the wire carries both; nothing
     /// is hard-coded).
     pub key: JobKey,
+    /// Session key for the stateful RLS ops; 0 on stateless requests
+    /// (the wire's `BadSession` rule makes the two mutually exclusive).
+    pub session: u64,
     /// Payload bits, exactly `key.request_words()` words.
     pub a: Vec<u32>,
     /// Response channel.
@@ -64,7 +68,7 @@ pub struct Request {
     pub enq: Instant,
 }
 
-/// One response (wire format v3): the operation's output bits plus
+/// One response: the operation's output bits plus
 /// measured latency, or a service-side failure.
 #[derive(Debug, Clone)]
 pub struct Response {
@@ -309,6 +313,10 @@ struct Supervisor {
     ingress_bound: usize,
     policy: BatchPolicy,
     metrics: Arc<Metrics>,
+    /// The session store every worker serves the stateful RLS ops
+    /// from — worker-independent, so a respawned or rehomed worker
+    /// finds a session's triangle exactly where it was left.
+    sessions: Arc<SessionTable>,
     handles: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -321,6 +329,10 @@ enum Pool {
 pub struct QrdService {
     metrics: Arc<Metrics>,
     pool: Pool,
+    /// Per-[`SessionKey`] RLS state, sharded by the same hash the
+    /// key-affine router applies (session affinity ⇒ no cross-shard
+    /// state). Shared with every worker.
+    sessions: Arc<SessionTable>,
     /// Largest matrix dimension `submit_m` accepts; oversized requests
     /// get an immediate error `Response` (they never reach a queue).
     max_m: usize,
@@ -392,6 +404,12 @@ impl QrdService {
             alive: AtomicUsize::new(factories.len()),
             dead: AtomicBool::new(false),
         });
+        let sessions = Arc::new(SessionTable::new(
+            factories.len(),
+            DEFAULT_MAX_SESSIONS,
+            Duration::from_millis(DEFAULT_SESSION_IDLE_MS),
+            metrics.clone(),
+        ));
         let workers = factories
             .into_iter()
             .enumerate()
@@ -399,9 +417,10 @@ impl QrdService {
                 let b = batcher.clone();
                 let m = metrics.clone();
                 let s = state.clone();
+                let sess = sessions.clone();
                 match std::thread::Builder::new()
                     .name(format!("qrd-worker-{id}"))
-                    .spawn(move || shared_worker_loop(id, factory(), b, s, m))
+                    .spawn(move || shared_worker_loop(id, factory(), b, s, m, sess))
                 {
                     Ok(h) => Some(h),
                     Err(_) => {
@@ -419,6 +438,7 @@ impl QrdService {
         QrdService {
             metrics,
             pool: Pool::Shared(SharedPool { ingress: tx, batcher, state, workers, depth }),
+            sessions,
             max_m: Self::DEFAULT_MAX_M,
             shed: ShedPolicy::default(),
             autoscaler: None,
@@ -513,6 +533,12 @@ impl QrdService {
         let initial = autoscale.as_ref().map_or(n, |cfg| cfg.min_workers);
         let metrics = Arc::new(Metrics::new(n));
         let bound = policy.max_batch.max(1) * 4;
+        let sessions = Arc::new(SessionTable::new(
+            n,
+            DEFAULT_MAX_SESSIONS,
+            Duration::from_millis(DEFAULT_SESSION_IDLE_MS),
+            metrics.clone(),
+        ));
         let sup = Arc::new(Supervisor {
             shards: (0..n).map(|_| Arc::new(ShardQueue::bounded(bound))).collect(),
             factories: factories
@@ -530,6 +556,7 @@ impl QrdService {
             ingress_bound: bound,
             policy,
             metrics: metrics.clone(),
+            sessions: sessions.clone(),
             handles: Mutex::new(Vec::with_capacity(n)),
         });
         // paused slots hold their shards closed so neither the router's
@@ -556,6 +583,7 @@ impl QrdService {
         QrdService {
             metrics,
             pool: Pool::Sharded(sup),
+            sessions,
             max_m: Self::DEFAULT_MAX_M,
             shed: ShedPolicy::default(),
             autoscaler,
@@ -577,6 +605,22 @@ impl QrdService {
         self.shed
     }
 
+    /// Retune the session-residency limits (`--max-sessions`,
+    /// `--session-idle-ms`): at most `max_sessions` resident RLS
+    /// triangles (LRU-evicted per shard at the cap), idle-evicted after
+    /// `idle`. The limits live inside the shared [`SessionTable`], so
+    /// workers already running pick them up on their next open/sweep.
+    pub fn with_sessions(self, max_sessions: usize, idle: Duration) -> Self {
+        self.sessions.set_limits(max_sessions, idle);
+        self
+    }
+
+    /// The session store (lifecycle gauges, affinity witnesses, manual
+    /// sweeps — the serve loop's periodic idle tick uses this).
+    pub fn sessions(&self) -> Arc<SessionTable> {
+        self.sessions.clone()
+    }
+
     /// Submit one 4×4 matrix on the v1 wire shape ([`Self::submit_m`]
     /// with `m = 4`). Kept as the ergonomic entry point for the
     /// fixed-shape toolchain and tests.
@@ -591,7 +635,7 @@ impl QrdService {
         self.submit_key(JobKey::qrd(m), a)
     }
 
-    /// Submit one operation (wire format v3); returns the response
+    /// Submit one stateless operation; returns the response
     /// receiver. Blocks if the target queue is full (backpressure). A
     /// malformed request (`m` under the op's minimum or over
     /// [`Self::max_m`], or a payload that is not
@@ -604,7 +648,18 @@ impl QrdService {
     /// has died or dies while the request is queued — never a dropped
     /// channel.
     pub fn submit_key(&self, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
-        self.submit_key_inner(key, a, true)
+        self.submit_inner(key, 0, a, true)
+    }
+
+    /// Submit one stateful session op (`rls_open` / `rls_update` /
+    /// `rls_close`, wire format v4) for `session` — the library-side
+    /// mirror of a v4 frame. Stateless ops go through
+    /// [`Self::submit_key`]; a session op with `session == 0` (or a
+    /// stateless op submitted here with a nonzero key) is answered with
+    /// an immediate error `Response`, mirroring the wire's `BadSession`
+    /// rule.
+    pub fn submit_session(&self, session: u64, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
+        self.submit_inner(key, session, a, true)
     }
 
     /// [`Self::submit_key`] minus the admission gate, for callers that
@@ -612,13 +667,19 @@ impl QrdService {
     /// request as accepted, so a shed is first-class in the socket
     /// ledger instead of a responded-with-error).
     pub(crate) fn submit_key_admitted(&self, key: JobKey, a: Vec<u32>) -> Receiver<Response> {
-        self.submit_key_inner(key, a, false)
+        self.submit_inner(key, 0, a, false)
     }
 
-    fn submit_key_inner(&self, key: JobKey, a: Vec<u32>, gate: bool) -> Receiver<Response> {
+    fn submit_inner(
+        &self,
+        key: JobKey,
+        session: u64,
+        a: Vec<u32>,
+        gate: bool,
+    ) -> Receiver<Response> {
         let (tx, rx) = std::sync::mpsc::channel();
         let m = key.m();
-        let req = Request { key, a, tx, enq: Instant::now() };
+        let req = Request { key, session, a, tx, enq: Instant::now() };
         // validate before counting: `requests()` and the per-key bins
         // only see *accepted* requests, so accepted == served holds
         // bin by bin on a clean run (rejects get their error Response
@@ -640,6 +701,18 @@ impl QrdService {
                 key.label(),
                 key.request_words()
             );
+            answer_failed(req, &reason);
+            return rx;
+        }
+        // the library-side BadSession rule: stateful ops carry a
+        // nonzero session key, stateless ops carry none — same
+        // exclusivity the v4 frame decoder enforces on the wire
+        if key.op.is_session() != (session != 0) {
+            let reason = if key.op.is_session() {
+                format!("{} requires a nonzero session key", key.op.label())
+            } else {
+                format!("session key {session:#x} contradicts op {}", key.op.label())
+            };
             answer_failed(req, &reason);
             return rx;
         }
@@ -713,6 +786,19 @@ impl QrdService {
         PendingResponse::new(self.submit_key_admitted(key, a))
     }
 
+    /// Session-aware [`Self::submit_async_key_admitted`]: the TCP
+    /// reader passes the v4 frame's session key verbatim (0 on
+    /// stateless ops — v2/v3 frames decode to 0, so one entry point
+    /// serves every wire version).
+    pub(crate) fn submit_async_session_admitted(
+        &self,
+        key: JobKey,
+        session: u64,
+        a: Vec<u32>,
+    ) -> PendingResponse {
+        PendingResponse::new(self.submit_inner(key, session, a, false))
+    }
+
     /// Requests currently queued and not yet executing: aggregate shard
     /// depth on the sharded topology, channel + stashed bins on the
     /// shared one. The autoscaler and the admission gate both read this
@@ -765,7 +851,7 @@ impl QrdService {
     /// already queued, join them, then answer anything still stranded
     /// (e.g. behind a dead slot) with error responses.
     pub fn shutdown(self) {
-        let QrdService { metrics: _, pool, max_m: _, shed: _, autoscaler } = self;
+        let QrdService { metrics: _, pool, sessions, max_m: _, shed: _, autoscaler } = self;
         if let Some((stop, h)) = autoscaler {
             // stop the control loop before tearing the pool down so a
             // late tick cannot respawn a worker into closing shards
@@ -802,6 +888,10 @@ impl QrdService {
                 }
             }
         }
+        // every queued update has been answered (served or error) by
+        // now; evicting what remains keeps the lifecycle identity
+        // `opened == closed + evicted + live` exact at exit
+        sessions.drain();
     }
 }
 
@@ -826,11 +916,20 @@ fn execute_batch(
     engine: &dyn BatchEngine,
     batch: Vec<Request>,
     metrics: &Metrics,
+    sessions: &SessionTable,
 ) -> bool {
     let key = match batch.first() {
         Some(r) => r.key,
         None => return true,
     };
+    if key.op.is_session() {
+        // stateful ops bypass the engine: each request is served
+        // in FIFO order against the shared session table (per-session
+        // ordering holds because the router pins a session's requests
+        // to one shard and siblings decline to steal session bins)
+        serve_session_batch(id, sessions, key, batch, metrics);
+        return true;
+    }
     // split payloads from repliers so the engine borrows the payloads
     // without cloning the wire words
     let mut jobs = Vec::with_capacity(batch.len());
@@ -891,12 +990,42 @@ fn execute_batch(
     }
 }
 
+/// Serve one uniform-key batch of session ops against the shared
+/// table, answering each request individually (a session error — an
+/// evicted key, a taps mismatch, a singular triangle — fails that
+/// request alone, never the batch). Counted like an engine batch so
+/// the per-key `accepted == served` audit holds across op kinds.
+fn serve_session_batch(
+    id: usize,
+    sessions: &SessionTable,
+    key: JobKey,
+    batch: Vec<Request>,
+    metrics: &Metrics,
+) {
+    let n = batch.len();
+    let t0 = Instant::now();
+    for req in batch {
+        let served = sessions.serve(id, SessionKey(req.session), req.key, &req.a);
+        let latency_us = req.enq.elapsed().as_secs_f64() * 1e6;
+        metrics.on_latency_us(latency_us);
+        let resp = match served {
+            Ok(out) => Response::ok(req.key, out, latency_us),
+            Err(reason) => Response::failed(req.key, &reason, latency_us),
+        };
+        // receiver may have been dropped — the client's choice
+        let _ = req.tx.send(resp);
+    }
+    metrics.on_batch(id, n, t0.elapsed().as_nanos() as u64);
+    metrics.on_key_batch(key, n);
+}
+
 fn shared_worker_loop(
     id: usize,
     engine: Box<dyn BatchEngine>,
     batcher: Arc<Mutex<KeyedBatcher<Request, JobKey>>>,
     state: Arc<PoolState>,
     metrics: Arc<Metrics>,
+    sessions: Arc<SessionTable>,
 ) {
     loop {
         let batch = {
@@ -915,7 +1044,7 @@ fn shared_worker_loop(
             retire_shared(&state, &batcher, &metrics);
             return;
         };
-        if !execute_batch(id, engine.as_ref(), batch, &metrics) {
+        if !execute_batch(id, engine.as_ref(), batch, &metrics, &sessions) {
             retire_shared(&state, &batcher, &metrics);
             return;
         }
@@ -1007,8 +1136,22 @@ impl Supervisor {
     /// one queue and batches densely; when the primary is dead or
     /// saturated (at the queue bound) the request spills to the
     /// least-loaded live shard instead of blocking behind the hot key.
-    fn route(&self, key: JobKey) -> usize {
+    fn route(&self, key: JobKey, session: u64) -> usize {
         let n = self.shards.len();
+        // session ops are *strictly* affine — on both router policies —
+        // because per-session update ordering depends on one queue
+        // feeding one worker: the session's hash picks the same shard
+        // the session table stores its triangle on, and a full primary
+        // applies backpressure instead of spilling (spilling would let
+        // two workers serve one session's updates concurrently and
+        // reorder them). Only a dead primary falls through to the
+        // spill scan — rehomed traffic still serves, order best-effort.
+        if key.op.is_session() {
+            let primary = self.sessions.shard_of(SessionKey(session)) % n;
+            if self.slot_alive[primary].load(Ordering::SeqCst) {
+                return primary;
+            }
+        }
         match self.router {
             RouterPolicy::RoundRobin => self.next.fetch_add(1, Ordering::Relaxed) % n,
             RouterPolicy::KeyAffine => {
@@ -1048,7 +1191,7 @@ impl Supervisor {
             return;
         }
         let n = self.shards.len();
-        let mut k = self.route(req.key);
+        let mut k = self.route(req.key, req.session);
         for _ in 0..n {
             let slot = k % n;
             k = k.wrapping_add(1);
@@ -1250,6 +1393,12 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
     // means the cap can differ batch to batch)
     let max_batch = sup.policy.max_batch.max(1);
     let cap_of = |k: JobKey| engine.preferred_batch(k).max(1).min(max_batch);
+    // stealing declines session bins (cap 0): a stolen session batch
+    // would run concurrently with the primary worker's own, and
+    // per-session update order is a correctness property, not a
+    // preference. A session op stuck behind a dead slot is rehomed by
+    // the supervisor's drain instead.
+    let steal_cap = |k: JobKey| if k.op.is_session() { 0 } else { cap_of(k) };
     let max_wait = Duration::from_micros(sup.policy.max_wait_us);
     // how long to block on the own shard before sweeping siblings for
     // stealable work. A push to the own shard wakes the worker
@@ -1275,7 +1424,7 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
             first_wait,
         ) {
             Pop::Batch(b) => b,
-            Pop::TimedOut => match steal_from_siblings(slot, sup, &cap_of) {
+            Pop::TimedOut => match steal_from_siblings(slot, sup, &steal_cap) {
                 Some(b) => b,
                 None => {
                     idle_streak = idle_streak.saturating_add(1);
@@ -1284,13 +1433,13 @@ fn run_sharded_worker(slot: usize, sup: &Supervisor) -> WorkerExit {
             },
             // own shard closed (shutdown, pool death, or this slot was
             // retired): sweep the siblings' leftovers, then exit
-            Pop::Closed => match steal_from_siblings(slot, sup, &cap_of) {
+            Pop::Closed => match steal_from_siblings(slot, sup, &steal_cap) {
                 Some(b) => b,
                 None => return WorkerExit::Clean,
             },
         };
         idle_streak = 0;
-        if !execute_batch(slot, engine.as_ref(), batch, &sup.metrics) {
+        if !execute_batch(slot, engine.as_ref(), batch, &sup.metrics, &sup.sessions) {
             return WorkerExit::Died;
         }
     }
@@ -2316,6 +2465,52 @@ mod tests {
         let a: [u32; 16] = std::array::from_fn(|i| (i as f32 * 0.2 + 1.0).to_bits());
         let resp = svc.submit(a).recv_timeout(Duration::from_secs(30)).expect("served");
         assert_eq!(resp.result().expect("ok"), &eng.qrd_bits(&a));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_session_enforces_the_library_side_bad_session_rule() {
+        // the library mirror of the wire's `BadSession` rule: stateful
+        // ops need a nonzero session identity, stateless ops must not
+        // carry one — both contradictions are rejected before any
+        // queue, touching no accepted counter
+        let svc = QrdService::start_sharded(
+            vec![|| Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>],
+            BatchPolicy::default(),
+            RestartPolicy::default(),
+        );
+        let open = JobKey::new(OpKind::RlsOpen, 2);
+        let params = vec![1.0f32.to_bits(), 1e-3f32.to_bits()];
+        let resp = svc
+            .submit_session(0, open, params.clone())
+            .recv()
+            .expect("an error response, not a dropped channel");
+        let err = resp.result().expect_err("a sessionless open must be rejected");
+        assert!(err.contains("nonzero session key"), "{err}");
+        let resp = svc
+            .submit_session(0xBAD, JobKey::qrd(2), vec![0u32; 4])
+            .recv()
+            .expect("an error response, not a dropped channel");
+        let err = resp.result().expect_err("qrd smuggling a session key must be rejected");
+        assert!(err.contains("contradicts op"), "{err}");
+        assert_eq!(svc.metrics().requests(), 0, "rejects must touch no accepted counter");
+        // the well-formed lifecycle serves end to end with the session
+        // ledger exact at shutdown
+        let s = 0xD00D;
+        let resp = svc.submit_session(s, open, params).recv().expect("open served");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let upd = JobKey::new(OpKind::RlsUpdate, 2);
+        let words = vec![1.0f32.to_bits(), 0.5f32.to_bits(), 0.2f32.to_bits()];
+        let resp = svc.submit_session(s, upd, words).recv().expect("update served");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.out.len(), 2, "an update answers the weight vector");
+        let close = JobKey::new(OpKind::RlsClose, 2);
+        let resp = svc.submit_session(s, close, Vec::new()).recv().expect("close served");
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        let m = svc.metrics();
+        assert_eq!(m.sessions_opened(), 1);
+        assert_eq!(m.sessions_closed(), 1);
+        assert!(m.sessions_reconcile(), "session lifecycle identity must hold");
         svc.shutdown();
     }
 

@@ -1,0 +1,450 @@
+//! Stateful QRD-RLS streaming sessions: the per-`SessionKey` triangle
+//! store behind the `rls_open` / `rls_update` / `rls_close` ops.
+//!
+//! The table is sharded by [`SessionKey::shard_hash`] — the *same* hash
+//! the key-affine router uses to place session requests on worker
+//! slots, so a session's updates and its state meet on one shard and
+//! never contend across workers (session affinity ⇒ no cross-shard
+//! state). The table itself is worker-independent (one `Arc` shared by
+//! every worker): a supervised respawn or a rehomed queue finds the
+//! triangle exactly where the dead worker left it.
+//!
+//! Residency is bounded two ways so millions of idle sessions cannot
+//! pin memory: a `max_sessions` cap enforced per shard by LRU eviction
+//! at open, and an idle deadline swept lazily on shard access. An
+//! evicted session is not a silent drop: every later update for its key
+//! is answered with an explicit `unknown session` error response, and
+//! the eviction itself is counted (`sessions_evicted`) so the lifecycle
+//! identity `opened == closed + evicted + live` stays auditable.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::key::{JobKey, OpKind, SessionKey};
+use super::metrics::Metrics;
+use crate::fp::FpFormat;
+use crate::qrd::QrdRls;
+use crate::rotator::RotatorConfig;
+
+/// Default cap on resident sessions across the whole table
+/// (`repro serve --max-sessions`).
+pub const DEFAULT_MAX_SESSIONS: usize = 1024;
+
+/// Default idle deadline before a session is evicted
+/// (`repro serve --session-idle-ms`).
+pub const DEFAULT_SESSION_IDLE_MS: u64 = 60_000;
+
+/// Sweep throttle: a shard rescans for idle sessions at most this often
+/// (and at most every `idle / 4`), so the lazy sweep stays O(1)
+/// amortized on the update hot path.
+const SWEEP_EVERY: Duration = Duration::from_secs(1);
+
+/// One resident session: the RLS triangle plus the bookkeeping the
+/// eviction policy and the affinity proof need.
+struct Session {
+    rls: QrdRls,
+    last_used: Instant,
+    /// Worker slots that ever served this session, in first-touch
+    /// order — the affinity tests' witness (key-affine routing keeps
+    /// this at one entry unless a slot died or its queue spilled).
+    touched_by: Vec<usize>,
+}
+
+/// One lock's worth of sessions.
+struct Shard {
+    sessions: HashMap<u64, Session>,
+    last_sweep: Instant,
+}
+
+/// The sharded session store. Shared by every worker as one `Arc`.
+///
+/// The residency limits are atomics so [`Self::set_limits`] can retune
+/// a table the workers already hold — the service constructors build
+/// the table with defaults and the `with_sessions` builder mutates it
+/// in place after the pool is running.
+pub struct SessionTable {
+    shards: Vec<Mutex<Shard>>,
+    /// Total residency cap, split `div_ceil` across shards on use.
+    max_sessions: AtomicUsize,
+    /// Idle deadline in milliseconds (0 = never idle-evict).
+    idle_ms: AtomicU64,
+    metrics: Arc<Metrics>,
+    live: AtomicUsize,
+}
+
+impl SessionTable {
+    /// A table sharded `n_shards` ways (one per worker slot) holding at
+    /// most `max_sessions` triangles, idle-evicting after `idle`.
+    pub fn new(
+        n_shards: usize,
+        max_sessions: usize,
+        idle: Duration,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        let n = n_shards.max(1);
+        let now = Instant::now();
+        SessionTable {
+            shards: (0..n)
+                .map(|_| Mutex::new(Shard { sessions: HashMap::new(), last_sweep: now }))
+                .collect(),
+            max_sessions: AtomicUsize::new(max_sessions.max(1)),
+            idle_ms: AtomicU64::new(idle.as_millis() as u64),
+            metrics,
+            live: AtomicUsize::new(0),
+        }
+    }
+
+    /// Retune the residency limits in place (the `with_sessions`
+    /// builder's backend — workers share this table by `Arc`, so the
+    /// new limits apply from the next open/sweep on).
+    pub fn set_limits(&self, max_sessions: usize, idle: Duration) {
+        self.max_sessions.store(max_sessions.max(1), Ordering::Release);
+        self.idle_ms.store(idle.as_millis() as u64, Ordering::Release);
+    }
+
+    fn cap_per_shard(&self) -> usize {
+        self.max_sessions.load(Ordering::Acquire).div_ceil(self.shards.len()).max(1)
+    }
+
+    fn idle(&self) -> Duration {
+        let ms = self.idle_ms.load(Ordering::Acquire);
+        if ms == 0 {
+            Duration::from_secs(u64::MAX / 1_000)
+        } else {
+            Duration::from_millis(ms)
+        }
+    }
+
+    /// The shard a session lives on — the same mapping the key-affine
+    /// router uses, which is what makes session affinity hold.
+    pub fn shard_of(&self, session: SessionKey) -> usize {
+        (session.shard_hash() % self.shards.len() as u64) as usize
+    }
+
+    /// Sessions currently resident.
+    pub fn live(&self) -> usize {
+        self.live.load(Ordering::Acquire)
+    }
+
+    /// Worker slots that ever served `session` (first-touch order), or
+    /// `None` if it is not resident — the affinity proof's read side.
+    pub fn touched_by(&self, session: SessionKey) -> Option<Vec<usize>> {
+        let shard = self.shards[self.shard_of(session)].lock().unwrap();
+        shard.sessions.get(&session.0).map(|s| s.touched_by.clone())
+    }
+
+    fn bump_live(&self, delta: isize) {
+        let live = if delta >= 0 {
+            self.live.fetch_add(delta as usize, Ordering::AcqRel) + delta as usize
+        } else {
+            self.live.fetch_sub((-delta) as usize, Ordering::AcqRel) - (-delta) as usize
+        };
+        self.metrics.set_sessions_live(live);
+    }
+
+    /// Evict every session idle past the deadline in one shard.
+    fn sweep_shard(&self, shard: &mut Shard, now: Instant) {
+        let idle = self.idle();
+        if now.duration_since(shard.last_sweep) < SWEEP_EVERY.min(idle / 4) {
+            return;
+        }
+        shard.last_sweep = now;
+        let before = shard.sessions.len();
+        shard.sessions.retain(|_, s| now.duration_since(s.last_used) < idle);
+        let evicted = before - shard.sessions.len();
+        for _ in 0..evicted {
+            self.metrics.on_session_evicted();
+        }
+        if evicted > 0 {
+            self.bump_live(-(evicted as isize));
+        }
+    }
+
+    /// Force an idle sweep of every shard now (the serve loop's
+    /// periodic tick; per-request sweeps are lazy and throttled).
+    pub fn sweep_idle(&self) {
+        let now = Instant::now();
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            shard.last_sweep = now - SWEEP_EVERY; // defeat the throttle
+            self.sweep_shard(&mut shard, now);
+        }
+    }
+
+    /// Evict everything (shutdown). Resident triangles are dropped and
+    /// counted as evictions; requests still queued behind this are
+    /// answered by the pool drain's error responses.
+    pub fn drain(&self) {
+        for shard in &self.shards {
+            let mut shard = shard.lock().unwrap();
+            let n = shard.sessions.len();
+            shard.sessions.clear();
+            for _ in 0..n {
+                self.metrics.on_session_evicted();
+            }
+            if n > 0 {
+                self.bump_live(-(n as isize));
+            }
+        }
+    }
+
+    /// Serve one session-op request on behalf of worker `worker`.
+    /// Payload contracts (f32 bit patterns, per `JobKey::request_words`
+    /// / `response_words` with `m = taps`):
+    ///
+    /// * `rls_open`:   `[λ, δ]` → `[]` (replaces any live session)
+    /// * `rls_update`: `[x₀..xₘ₋₁, d]` → `[w₀..wₘ₋₁]`
+    /// * `rls_close`:  `[]` → `[]`
+    ///
+    /// Errors are recoverable strings the wire answers as
+    /// `STATUS_ERROR`: unknown/evicted session, taps mismatch, invalid
+    /// open parameters, or a singular triangle naming its rank-dropped
+    /// column.
+    pub fn serve(
+        &self,
+        worker: usize,
+        session: SessionKey,
+        key: JobKey,
+        words: &[u32],
+    ) -> Result<Vec<u32>, String> {
+        debug_assert!(key.op.is_session());
+        debug_assert!(session.is_some(), "frame decode rejects sessionless session ops");
+        let m = key.m();
+        if words.len() != key.request_words() {
+            return Err(format!(
+                "{} payload carries {} words, expected {}",
+                key.label(),
+                words.len(),
+                key.request_words()
+            ));
+        }
+        let now = Instant::now();
+        let mut shard = self.shards[self.shard_of(session)].lock().unwrap();
+        self.sweep_shard(&mut shard, now);
+        match key.op {
+            OpKind::RlsOpen => {
+                let lambda = f32::from_bits(words[0]) as f64;
+                let delta = f32::from_bits(words[1]) as f64;
+                if !(lambda > 0.0 && lambda <= 1.0) {
+                    return Err(format!("rls_open: forgetting factor λ={lambda} not in (0, 1]"));
+                }
+                if !(delta.is_finite() && delta >= 0.0) {
+                    return Err(format!("rls_open: regularization δ={delta} must be finite ≥ 0"));
+                }
+                // replacing a live session is an idempotent reopen —
+                // the old triangle is dropped, not evicted
+                let replaced = shard.sessions.remove(&session.0).is_some();
+                if shard.sessions.len() >= self.cap_per_shard() {
+                    // at the cap: evict the least-recently-used session
+                    // to make room (its owner learns via `unknown
+                    // session` errors on later updates — never silence)
+                    let lru =
+                        shard.sessions.iter().min_by_key(|(_, s)| s.last_used).map(|(&k, _)| k);
+                    if let Some(lru) = lru {
+                        shard.sessions.remove(&lru);
+                        self.metrics.on_session_evicted();
+                        self.bump_live(-1);
+                    }
+                }
+                // the served filter runs the flagship unit config — the
+                // same one `QrdRls` tests and the client oracle use, so
+                // served weights replay bit-exactly
+                let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+                let rls = QrdRls::new(cfg, m, lambda, delta);
+                shard
+                    .sessions
+                    .insert(session.0, Session { rls, last_used: now, touched_by: vec![worker] });
+                self.metrics.on_session_opened();
+                if !replaced {
+                    self.bump_live(1);
+                }
+                Ok(Vec::new())
+            }
+            OpKind::RlsUpdate => {
+                let entry = shard.sessions.get_mut(&session.0).ok_or_else(|| {
+                    format!("unknown session {:#x} (never opened, evicted, or closed)", session.0)
+                })?;
+                if entry.rls.taps() != m {
+                    return Err(format!(
+                        "session {:#x} has {} taps, update came as m={m}",
+                        session.0,
+                        entry.rls.taps()
+                    ));
+                }
+                let x: Vec<f64> = words[..m].iter().map(|&w| f32::from_bits(w) as f64).collect();
+                let d = f32::from_bits(words[m]) as f64;
+                entry.rls.update(&x, d);
+                entry.last_used = now;
+                if !entry.touched_by.contains(&worker) {
+                    entry.touched_by.push(worker);
+                }
+                let w = entry.rls.weights().map_err(|e| e.to_string())?;
+                Ok(w.iter().map(|&wi| (wi as f32).to_bits()).collect())
+            }
+            OpKind::RlsClose => {
+                if shard.sessions.remove(&session.0).is_none() {
+                    return Err(format!(
+                        "unknown session {:#x} (never opened, evicted, or closed)",
+                        session.0
+                    ));
+                }
+                self.metrics.on_session_closed();
+                self.bump_live(-1);
+                Ok(Vec::new())
+            }
+            _ => Err(format!("{} is not a session op", key.op.label())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RotatorConfig {
+        RotatorConfig::hub(FpFormat::SINGLE, 26, 24)
+    }
+
+    fn table(shards: usize, cap: usize, idle_ms: u64) -> SessionTable {
+        SessionTable::new(shards, cap, Duration::from_millis(idle_ms), Arc::new(Metrics::new(1)))
+    }
+
+    fn open(t: &SessionTable, s: u64, taps: usize, lambda: f32, delta: f32) {
+        let key = JobKey::new(OpKind::RlsOpen, taps);
+        t.serve(0, SessionKey(s), key, &[lambda.to_bits(), delta.to_bits()]).expect("open");
+    }
+
+    fn update(t: &SessionTable, s: u64, row: &[f32], d: f32) -> Result<Vec<u32>, String> {
+        let key = JobKey::new(OpKind::RlsUpdate, row.len());
+        let mut words: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+        words.push(d.to_bits());
+        t.serve(0, SessionKey(s), key, &words)
+    }
+
+    #[test]
+    fn session_weights_replay_the_offline_oracle_bit_exactly() {
+        let t = table(3, 64, 60_000);
+        open(&t, 0xA1, 3, 1.0, 1e-4);
+        let mut oracle = QrdRls::new(cfg(), 3, 1.0, 1e-4);
+        let mut last = Vec::new();
+        for k in 0..40 {
+            let row =
+                [(k as f32 * 0.37).sin(), (k as f32 * 0.61).cos(), (k as f32 * 0.13).sin() - 0.2];
+            let d = 0.8 * row[0] - 0.4 * row[1] + 0.25 * row[2];
+            oracle.update(&row.map(|v| v as f64), d as f64);
+            last = update(&t, 0xA1, &row, d).expect("update");
+        }
+        let want: Vec<u32> = oracle
+            .weights()
+            .expect("full-rank oracle")
+            .iter()
+            .map(|&w| (w as f32).to_bits())
+            .collect();
+        assert_eq!(last, want, "served weights must replay the offline QrdRls bit-exactly");
+        // close retires it; a second close and further updates error
+        let close = JobKey::new(OpKind::RlsClose, 3);
+        t.serve(0, SessionKey(0xA1), close, &[]).expect("close");
+        assert_eq!(t.live(), 0);
+        let err = t.serve(0, SessionKey(0xA1), close, &[]).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+        let err = update(&t, 0xA1, &[0.0; 3], 0.0).unwrap_err();
+        assert!(err.contains("unknown session") && err.contains("0xa1"), "{err}");
+    }
+
+    #[test]
+    fn open_validates_parameters_and_update_checks_taps() {
+        let t = table(1, 8, 60_000);
+        let openk = JobKey::new(OpKind::RlsOpen, 2);
+        let bad = t
+            .serve(0, SessionKey(1), openk, &[1.5f32.to_bits(), 0.0f32.to_bits()])
+            .unwrap_err();
+        assert!(bad.contains("λ"), "{bad}");
+        let bad = t
+            .serve(0, SessionKey(1), openk, &[1.0f32.to_bits(), (-1.0f32).to_bits()])
+            .unwrap_err();
+        assert!(bad.contains("δ"), "{bad}");
+        open(&t, 1, 2, 1.0, 1e-3);
+        // a 3-tap update against the 2-tap session is a taps mismatch,
+        // not a corruption
+        let err = update(&t, 1, &[0.1, 0.2, 0.3], 0.4).unwrap_err();
+        assert!(err.contains("2 taps") && err.contains("m=3"), "{err}");
+        // a singular triangle names its column instead of silent zeros
+        open(&t, 2, 3, 1.0, 0.0);
+        let err = update(&t, 2, &[1.0, 0.0, 0.0], 1.0).unwrap_err();
+        assert!(err.contains("column"), "{err}");
+    }
+
+    #[test]
+    fn lru_eviction_enforces_the_cap_and_reopen_is_idempotent() {
+        // one shard, cap 2: the third open evicts the least recently
+        // used session, whose later updates answer explicit errors
+        let t = table(1, 2, 60_000);
+        open(&t, 10, 2, 1.0, 1e-3);
+        open(&t, 20, 2, 1.0, 1e-3);
+        assert_eq!(t.live(), 2);
+        update(&t, 10, &[1.0, 0.5], 0.2).expect("session 10 refreshed");
+        open(&t, 30, 2, 1.0, 1e-3); // evicts 20 (LRU), not 10
+        assert_eq!(t.live(), 2);
+        update(&t, 10, &[1.0, 0.5], 0.2).expect("survivor still serves");
+        update(&t, 30, &[1.0, 0.5], 0.2).expect("newcomer serves");
+        let err = update(&t, 20, &[1.0, 0.5], 0.2).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+        // reopening a live key replaces in place — no eviction, no
+        // double-count of residency
+        open(&t, 10, 3, 1.0, 1e-3);
+        assert_eq!(t.live(), 2);
+        update(&t, 10, &[1.0, 0.5, 0.25], 0.2).expect("reopened with 3 taps");
+    }
+
+    #[test]
+    fn idle_sessions_are_swept_and_counted() {
+        let metrics = Arc::new(Metrics::new(1));
+        let t = SessionTable::new(2, 64, Duration::from_millis(1), metrics.clone());
+        open(&t, 7, 2, 1.0, 1e-3);
+        open(&t, 8, 2, 1.0, 1e-3);
+        assert_eq!(t.live(), 2);
+        std::thread::sleep(Duration::from_millis(5));
+        t.sweep_idle();
+        assert_eq!(t.live(), 0);
+        assert_eq!(metrics.sessions_evicted(), 2);
+        assert!(metrics.sessions_reconcile());
+        let err = update(&t, 7, &[0.0, 0.0], 0.0).unwrap_err();
+        assert!(err.contains("unknown session"), "{err}");
+    }
+
+    #[test]
+    fn drain_evicts_everything_and_the_identity_holds() {
+        let metrics = Arc::new(Metrics::new(1));
+        let t = SessionTable::new(3, 64, Duration::from_secs(60), metrics.clone());
+        for s in 1..=5u64 {
+            let key = JobKey::new(OpKind::RlsOpen, 2);
+            t.serve(0, SessionKey(s), key, &[1.0f32.to_bits(), 1e-3f32.to_bits()]).expect("open");
+        }
+        let close = JobKey::new(OpKind::RlsClose, 2);
+        t.serve(0, SessionKey(3), close, &[]).expect("close");
+        t.drain();
+        assert_eq!(t.live(), 0);
+        assert_eq!(metrics.sessions_opened(), 5);
+        assert_eq!(metrics.sessions_closed(), 1);
+        assert_eq!(metrics.sessions_evicted(), 4);
+        assert!(metrics.sessions_reconcile());
+    }
+
+    #[test]
+    fn touched_by_records_the_serving_workers_in_order() {
+        let t = table(4, 64, 60_000);
+        let s = SessionKey(0xC0FFEE);
+        let openk = JobKey::new(OpKind::RlsOpen, 2);
+        t.serve(2, s, openk, &[1.0f32.to_bits(), 1e-3f32.to_bits()]).expect("open");
+        let upd = JobKey::new(OpKind::RlsUpdate, 2);
+        let words = [1.0f32.to_bits(), 0.5f32.to_bits(), 0.2f32.to_bits()];
+        t.serve(2, s, upd, &words).expect("update");
+        t.serve(2, s, upd, &words).expect("update");
+        assert_eq!(t.touched_by(s), Some(vec![2]), "affine traffic touches one worker");
+        t.serve(0, s, upd, &words).expect("stolen/rehomed update still serves");
+        assert_eq!(t.touched_by(s), Some(vec![2, 0]));
+        assert_eq!(t.touched_by(SessionKey(999)), None);
+    }
+}

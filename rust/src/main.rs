@@ -13,6 +13,7 @@
 //!             [--min-workers W] [--max-workers W] [--tick-ms T]
 //!             [--shed-depth D] [--shed-p99-ms P] [--retry-after-ms R]
 //!             [--backoff-ms B] [--backoff-cap-ms C] [--chaos]
+//!             [--max-sessions N] [--session-idle-ms T]
 //!             [--artifact artifacts/qrd4_hub.hlo.txt]
 //!             [--listen ADDR [--window W] [--deadline-ms D]
 //!              [--read-timeout-ms T] [--write-timeout-ms T]]
@@ -40,11 +41,22 @@
 //! `--panel P` caps each blocked wave at P rotations (0 = the full
 //! wavefront) — a cache-residency knob that never changes output bits.
 //!
-//! Op-keyed serving (wire format v3): every request carries an op byte
+//! Op-keyed serving (since wire format v3): every request carries an op byte
 //! alongside m, and batching/routing/accounting all key on the
 //! `(op, m)` pair. `repro loadgen --ops qrd,solve,append_qr` mixes
 //! operations in one run (repeats skew the mix); v2 frames are still
 //! accepted and served as QRD.
+//!
+//! Streaming sessions (wire format v4): the stateful QRD-RLS ops
+//! (`rls_open`, `rls_update`, `rls_close`) carry a client-chosen
+//! session key in the v4 header; per-session triangular state lives in
+//! a server-side table sharded by the same hash the key-affine router
+//! uses (session affinity), capped by `--max-sessions` (LRU eviction)
+//! and `--session-idle-ms` (idle eviction). `repro loadgen --ops
+//! rls_update` drives sessions through the socket, verifying served
+//! weights bit-exactly against a client-side `QrdRls` replay; mixing
+//! e.g. `--ops qrd,solve,rls_update` interleaves stateless and
+//! stateful traffic in one run.
 //!
 //! `repro qrd --batch B` switches from the single-matrix walkthrough to
 //! a batch-interleaved throughput demo over B random m×m matrices
@@ -80,8 +92,8 @@ const USAGE: &str = "usage:
   repro exp <fig8|fig9|fig10|fig11|tab1..tab7|all> [--nmat N] [--seed S]
   repro report [--nmat N] [--seed S]
   repro qrd [--m 4] [--approach ieee|hub] [--n 26] [--r 4] [--seed 1] [--batch B] [--tile T] [--threads T] [--blocked-m M] [--panel P]
-  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--min-workers W] [--max-workers W] [--tick-ms T] [--shed-depth D] [--shed-p99-ms P] [--retry-after-ms R] [--backoff-ms B] [--backoff-cap-ms C] [--chaos] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
-  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr] [--seed S] [--chaos] [--burst] [--shutdown] [--bench-out PATH]
+  repro serve [--engine native|pjrt] [--requests N] [--batch B] [--workers W] [--threads T] [--tile T] [--shards S] [--max-restarts R] [--max-m M] [--blocked-m M] [--panel P] [--min-workers W] [--max-workers W] [--tick-ms T] [--shed-depth D] [--shed-p99-ms P] [--retry-after-ms R] [--backoff-ms B] [--backoff-cap-ms C] [--chaos] [--max-sessions N] [--session-idle-ms T] [--artifact PATH] [--listen ADDR [--window W] [--deadline-ms D] [--read-timeout-ms T] [--write-timeout-ms T]]
+  repro loadgen [--addr HOST:PORT] [--conns N] [--threads T] [--requests R] [--max-m M] [--ops qrd,solve,append_qr,rls_update] [--seed S] [--chaos] [--burst] [--shutdown] [--bench-out PATH]
   repro lint [--root DIR] [--skip no-panic|lock-order|atomics-audit|wire-consistency]";
 
 fn main() -> anyhow::Result<()> {
@@ -235,6 +247,10 @@ fn main() -> anyhow::Result<()> {
                 backoff_ms: args.get_as("backoff-ms", 25u64),
                 backoff_cap_ms: args.get_as("backoff-cap-ms", 1_000u64),
                 chaos: args.has("chaos"),
+                max_sessions: args
+                    .get_as("max-sessions", fp_givens::coordinator::DEFAULT_MAX_SESSIONS),
+                session_idle_ms: args
+                    .get_as("session-idle-ms", fp_givens::coordinator::DEFAULT_SESSION_IDLE_MS),
             };
             if args.has("listen") {
                 // TCP frontend: serve the wire format over a socket
@@ -271,8 +287,11 @@ fn main() -> anyhow::Result<()> {
                     "qrd" => Ok(OpKind::Qrd),
                     "solve" => Ok(OpKind::Solve),
                     "append_qr" => Ok(OpKind::AppendQr),
+                    // rls_update stands for the whole session lifecycle:
+                    // the loadgen opens, streams updates, and closes
+                    "rls_update" | "rls" => Ok(OpKind::RlsUpdate),
                     other => Err(anyhow::anyhow!(
-                        "unknown op {other} (want qrd, solve, or append_qr)"
+                        "unknown op {other} (want qrd, solve, append_qr, or rls_update)"
                     )),
                 })
                 .collect::<anyhow::Result<_>>()?;

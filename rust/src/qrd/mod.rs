@@ -22,6 +22,7 @@ pub use fixed_engine::FixedQrdEngine;
 pub use iterative::{IterativeQrd, IterativeRun};
 pub use rls::QrdRls;
 pub use schedule::{pair_op_count, rotation_count, schedule, RotationStep};
+pub use solve::{back_substitute, Singular};
 pub use workspace::{
     triangularize_blocked_panel_ws, triangularize_blocked_ws, triangularize_tile,
     triangularize_ws, BatchWorkspace, QrdWorkspace,

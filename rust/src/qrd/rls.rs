@@ -9,7 +9,9 @@
 //! exactly the vectoring + e-rotation pattern the pipelined unit
 //! executes at one pair per cycle.
 
-use crate::qrd::solve::back_substitute;
+use std::cell::{Cell, RefCell};
+
+use crate::qrd::solve::{back_substitute, Singular};
 use crate::rotator::{GivensRotator, RotatorConfig, Val};
 
 /// A QRD-RLS filter of order `taps` running on one rotation unit.
@@ -20,6 +22,13 @@ pub struct QrdRls {
     sqrt_lambda: f64,
     /// `[R | z]` rows in the unit's number format (taps × (taps+1))
     tri: Vec<Vec<Val>>,
+    /// memoized weight vector: `weights`/`predict` are the session
+    /// endpoint's per-request hot path, and the O(taps²)
+    /// back-substitution only changes when the triangle does — any
+    /// `update` invalidates
+    weights_memo: RefCell<Option<Vec<f64>>>,
+    /// back-substitutions actually performed (cache observability)
+    solves: Cell<u64>,
 }
 
 impl QrdRls {
@@ -34,7 +43,19 @@ impl QrdRls {
                     .collect()
             })
             .collect();
-        QrdRls { rot, taps, sqrt_lambda: lambda.sqrt(), tri }
+        QrdRls {
+            rot,
+            taps,
+            sqrt_lambda: lambda.sqrt(),
+            tri,
+            weights_memo: RefCell::new(None),
+            solves: Cell::new(0),
+        }
+    }
+
+    /// Filter order.
+    pub fn taps(&self) -> usize {
+        self.taps
     }
 
     /// Absorb one observation: regressor row `x` with desired output
@@ -71,21 +92,38 @@ impl QrdRls {
                 new_row[k] = b;
             }
         }
+        *self.weights_memo.borrow_mut() = None;
     }
 
-    /// Current weight vector w = R⁻¹·z.
-    pub fn weights(&self) -> Vec<f64> {
+    /// Current weight vector w = R⁻¹·z. A degenerate triangle (zero
+    /// pivot — e.g. a dead regressor channel) surfaces as an error
+    /// naming the rank-dropped column instead of flowing silent zeros
+    /// into predictions.
+    pub fn weights(&self) -> Result<Vec<f64>, Singular> {
+        if let Some(w) = self.weights_memo.borrow().as_ref() {
+            return Ok(w.clone());
+        }
         let fmt = self.rot.cfg.fmt;
         let r: Vec<Vec<f64>> = (0..self.taps)
             .map(|i| (0..self.taps).map(|j| self.tri[i][j].to_f64(fmt)).collect())
             .collect();
         let z: Vec<f64> = (0..self.taps).map(|i| self.tri[i][self.taps].to_f64(fmt)).collect();
-        back_substitute(&r, &z)
+        self.solves.set(self.solves.get() + 1);
+        let w = back_substitute(&r, &z)?;
+        *self.weights_memo.borrow_mut() = Some(w.clone());
+        Ok(w)
     }
 
     /// A-priori prediction for a regressor row.
-    pub fn predict(&self, x: &[f64]) -> f64 {
-        self.weights().iter().zip(x).map(|(w, xi)| w * xi).sum()
+    pub fn predict(&self, x: &[f64]) -> Result<f64, Singular> {
+        Ok(self.weights()?.iter().zip(x).map(|(w, xi)| w * xi).sum())
+    }
+
+    /// How many O(taps²) back-substitutions have actually run — the
+    /// observable face of the weight memo (`weights`/`predict` between
+    /// two updates cost one solve, not one per call).
+    pub fn weight_solves(&self) -> u64 {
+        self.solves.get()
     }
 
     /// Rotation-unit pair-operations consumed per update (for
@@ -120,7 +158,7 @@ mod tests {
             let d: f64 = h.iter().zip(&xbuf).map(|(a, b)| a * b).sum();
             rls.update(&xbuf, d);
         }
-        let w = rls.weights();
+        let w = rls.weights().expect("persistently excited filter");
         for (got, want) in w.iter().zip(&h) {
             assert!((got - want).abs() < 1e-3, "{w:?}");
         }
@@ -141,7 +179,7 @@ mod tests {
         };
         run(&mut rls, [1.0, 0.5], 150);
         run(&mut rls, [-0.3, 0.9], 200); // system changes
-        let w = rls.weights();
+        let w = rls.weights().expect("persistently excited filter");
         assert!((w[0] + 0.3).abs() < 0.05, "{w:?}");
         assert!((w[1] - 0.9).abs() < 0.05, "{w:?}");
     }
@@ -165,7 +203,37 @@ mod tests {
             }
         }
         // and the filter still converges on data it has seen
-        assert!(rls.weights().iter().all(|w| w.is_finite()));
+        assert!(rls.weights().expect("full-rank triangle").iter().all(|w| w.is_finite()));
+    }
+
+    #[test]
+    fn weights_are_cached_until_an_update_busts_the_memo() {
+        let mut rls = QrdRls::new(cfg(), 3, 1.0, 1e-4);
+        rls.update(&[1.0, 0.5, -0.25], 0.75);
+        assert_eq!(rls.weight_solves(), 0);
+        let w1 = rls.weights().expect("regularized triangle");
+        let w2 = rls.weights().expect("regularized triangle");
+        assert_eq!(w1, w2);
+        let p = rls.predict(&[1.0, 0.0, 0.0]).expect("regularized triangle");
+        assert_eq!(p, w1[0]);
+        // three reads, one back-substitution: the memo held
+        assert_eq!(rls.weight_solves(), 1);
+        // an update changes the triangle and must bust the memo
+        rls.update(&[-0.5, 1.0, 0.5], -0.25);
+        let w3 = rls.weights().expect("regularized triangle");
+        assert_eq!(rls.weight_solves(), 2);
+        assert_ne!(w1, w3, "update left the served weights stale");
+    }
+
+    #[test]
+    fn degenerate_triangle_surfaces_as_an_error() {
+        // no updates and δ = 0: the triangle diagonal is exactly zero,
+        // so the weight solve must name the rank drop (the old path
+        // returned silent zeros here)
+        let rls = QrdRls::new(cfg(), 3, 1.0, 0.0);
+        let err = rls.weights().unwrap_err();
+        assert_eq!(err.col, 2, "back-substitution hits the last pivot first");
+        assert!(rls.predict(&[1.0, 1.0, 1.0]).is_err());
     }
 
     #[test]
@@ -187,7 +255,7 @@ mod tests {
             xbuf.rotate_right(1);
             xbuf[0] = rng.range(-1.0, 1.0);
             let d: f64 = h.iter().zip(&xbuf).map(|(a, b)| a * b).sum();
-            let e = (rls.predict(&xbuf) - d).abs();
+            let e = (rls.predict(&xbuf).expect("regularized triangle") - d).abs();
             if t < 10 {
                 early_err += e;
             } else if t >= 190 {

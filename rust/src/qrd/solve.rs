@@ -5,9 +5,29 @@
 
 use super::{QrdEngine, QrdResult};
 
+/// The triangle has a zero pivot: R·x = b has no unique solution, and
+/// the column of the offending diagonal entry names the rank drop.
+/// Before this was surfaced, a singular system silently solved to
+/// `x[i] = 0.0` — confidently-wrong zeros on the served `solve` path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Singular {
+    /// Column index (0-based) of the zero diagonal entry.
+    pub col: usize,
+}
+
+impl std::fmt::Display for Singular {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "singular triangle — zero diagonal at column {}", self.col)
+    }
+}
+
+impl std::error::Error for Singular {}
+
 /// Solve the upper-triangular system R·x = b by back-substitution
 /// (double precision — the unit produced R; the solve is host-side).
-pub fn back_substitute(r: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+/// A zero diagonal entry is a rank drop: the error names its column
+/// instead of substituting a silent 0.0.
+pub fn back_substitute(r: &[Vec<f64>], b: &[f64]) -> Result<Vec<f64>, Singular> {
     let m = b.len();
     let mut x = vec![0.0; m];
     for i in (0..m).rev() {
@@ -15,52 +35,45 @@ pub fn back_substitute(r: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
         for j in (i + 1)..m {
             acc -= r[i][j] * x[j];
         }
-        x[i] = if r[i][i] != 0.0 { acc / r[i][i] } else { 0.0 };
+        if r[i][i] == 0.0 {
+            return Err(Singular { col: i });
+        }
+        x[i] = acc / r[i][i];
     }
-    x
+    Ok(x)
 }
 
 impl QrdResult {
     /// Solve A·x = b using this decomposition: x = R⁻¹·(G·b)
     /// (G = Qᵀ was accumulated by the rotations).
-    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, Singular> {
         let m = b.len();
-        assert_eq!(
-            self.r.len(),
-            m,
-            "solve: R is {}×{} but the rhs has {m} entries",
-            self.r.len(),
-            self.r.len()
-        );
-        assert_eq!(
-            self.qt.len(),
-            m,
-            "solve: Qᵀ is {}×{} but the rhs has {m} entries",
-            self.qt.len(),
-            self.qt.len()
-        );
+        let (r_rows, r_cols) = (self.r.len(), self.r.first().map_or(0, Vec::len));
+        assert_eq!(r_rows, m, "solve: R is {r_rows}×{r_cols} but the rhs has {m} entries");
+        let (qt_rows, qt_cols) = (self.qt.len(), self.qt.first().map_or(0, Vec::len));
+        assert_eq!(qt_rows, m, "solve: Qᵀ is {qt_rows}×{qt_cols} but the rhs has {m} entries");
         let gb: Vec<f64> = (0..m).map(|i| (0..m).map(|k| self.qt[i][k] * b[k]).sum()).collect();
         back_substitute(&self.r, &gb)
     }
 
     /// Invert A column by column (A⁻¹ = R⁻¹·G).
-    pub fn inverse(&self) -> Vec<Vec<f64>> {
+    pub fn inverse(&self) -> Result<Vec<Vec<f64>>, Singular> {
         let m = self.r.len();
         let mut inv = vec![vec![0.0; m]; m];
         for c in 0..m {
             let col: Vec<f64> = (0..m).map(|i| self.qt[i][c]).collect();
-            let x = back_substitute(&self.r, &col);
+            let x = back_substitute(&self.r, &col)?;
             for i in 0..m {
                 inv[i][c] = x[i];
             }
         }
-        inv
+        Ok(inv)
     }
 }
 
 impl QrdEngine {
     /// Solve the square system A·x = b through the rotation unit.
-    pub fn solve(&self, a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    pub fn solve(&self, a: &[Vec<f64>], b: &[f64]) -> Result<Vec<f64>, Singular> {
         self.decompose(a).solve(b)
     }
 
@@ -69,7 +82,7 @@ impl QrdEngine {
     /// Givens rotations (the rotator never needs Q explicitly — the
     /// right-hand side rides along as an extra column, the classic
     /// QRD-LS formulation the systolic arrays of refs [14][17] use).
-    pub fn least_squares(&self, a: &[Vec<f64>], b: &[f64]) -> Vec<f64> {
+    pub fn least_squares(&self, a: &[Vec<f64>], b: &[f64]) -> Result<Vec<f64>, Singular> {
         let rows = a.len();
         assert!(rows > 0, "least_squares: system has no rows");
         let cols = a[0].len();
@@ -140,7 +153,7 @@ mod tests {
         ];
         let x_true = [1.0, -2.0, 0.5, 3.0];
         let b: Vec<f64> = (0..4).map(|i| (0..4).map(|j| a[i][j] * x_true[j]).sum()).collect();
-        let x = engine().solve(&a, &b);
+        let x = engine().solve(&a, &b).expect("well-conditioned system");
         for (got, want) in x.iter().zip(&x_true) {
             assert!((got - want).abs() < 1e-4, "{got} vs {want}");
         }
@@ -149,7 +162,7 @@ mod tests {
     #[test]
     fn inverse_times_a_is_identity() {
         let a = vec![vec![2.0, 0.5, -1.0], vec![0.5, 3.0, 0.2], vec![-1.0, 0.2, 1.8]];
-        let inv = engine().decompose(&a).inverse();
+        let inv = engine().decompose(&a).inverse().expect("well-conditioned system");
         for i in 0..3 {
             for j in 0..3 {
                 let dot: f64 = (0..3).map(|k| inv[i][k] * a[k][j]).sum();
@@ -165,7 +178,7 @@ mod tests {
         let ts: Vec<f64> = (0..8).map(|t| t as f64 * 0.25).collect();
         let a: Vec<Vec<f64>> = ts.iter().map(|&t| vec![1.0, t]).collect();
         let b: Vec<f64> = ts.iter().map(|&t| 2.0 + 3.0 * t).collect();
-        let x = engine().least_squares(&a, &b);
+        let x = engine().least_squares(&a, &b).expect("full-rank system");
         assert!((x[0] - 2.0).abs() < 1e-4, "{:?}", x);
         assert!((x[1] - 3.0).abs() < 1e-4, "{:?}", x);
     }
@@ -176,7 +189,7 @@ mod tests {
         // equations solution in f64
         let a = vec![vec![1.0, 0.0], vec![1.0, 1.0], vec![1.0, 2.0], vec![1.0, 3.0]];
         let b = vec![0.9, 2.1, 2.9, 4.2];
-        let x = engine().least_squares(&a, &b);
+        let x = engine().least_squares(&a, &b).expect("full-rank system");
         // normal equations (2x2) solved exactly
         let (s00, s01, s11) = (4.0, 6.0, 14.0);
         let (t0, t1) = (
@@ -190,10 +203,30 @@ mod tests {
     }
 
     #[test]
-    fn back_substitute_handles_zero_diagonal() {
+    fn back_substitute_names_the_zero_diagonal_column() {
+        // rank-deficient triangle: the old code silently substituted
+        // x[1] = 0.0 here; now the rank drop surfaces as an error
+        // naming the offending column
         let r = vec![vec![1.0, 1.0], vec![0.0, 0.0]];
-        let x = back_substitute(&r, &[2.0, 0.0]);
-        assert_eq!(x, vec![2.0, 0.0]); // rank-deficient: free var = 0
+        let err = back_substitute(&r, &[2.0, 0.0]).unwrap_err();
+        assert_eq!(err, Singular { col: 1 });
+        assert_eq!(err.to_string(), "singular triangle — zero diagonal at column 1");
+        // a full-rank triangle still solves
+        let full = vec![vec![1.0, 1.0], vec![0.0, 2.0]];
+        assert_eq!(back_substitute(&full, &[3.0, 4.0]).unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_system_errors_through_every_solver() {
+        // an exactly-zero column stays exactly zero through the
+        // rotations, so pivot 1 collapses and every solver on top of
+        // back_substitute must surface the rank drop
+        let a = vec![vec![1.0, 0.0], vec![3.0, 0.0]];
+        let eng = engine();
+        let err = eng.solve(&a, &[1.0, 3.0]).unwrap_err();
+        assert_eq!(err.col, 1);
+        assert!(eng.decompose(&a).inverse().is_err());
+        assert_eq!(eng.least_squares(&a, &[1.0, 3.0]).unwrap_err().col, 1);
     }
 
     // Dimension guards: malformed systems must fail loudly with a
@@ -203,33 +236,42 @@ mod tests {
     #[test]
     #[should_panic(expected = "system has no rows")]
     fn least_squares_rejects_empty_system() {
-        engine().least_squares(&[], &[]);
+        let _ = engine().least_squares(&[], &[]);
     }
 
     #[test]
     #[should_panic(expected = "ragged system")]
     fn least_squares_rejects_ragged_rows() {
         let a = vec![vec![1.0, 2.0], vec![3.0]];
-        engine().least_squares(&a, &[1.0, 2.0]);
+        let _ = engine().least_squares(&a, &[1.0, 2.0]);
     }
 
     #[test]
     #[should_panic(expected = "rows 1 < cols 2")]
     fn least_squares_rejects_underdetermined_system() {
-        engine().least_squares(&[vec![1.0, 2.0]], &[1.0]);
+        let _ = engine().least_squares(&[vec![1.0, 2.0]], &[1.0]);
     }
 
     #[test]
     #[should_panic(expected = "rhs has 3 entries for 2 rows")]
     fn least_squares_rejects_mismatched_rhs() {
         let a = vec![vec![1.0], vec![2.0]];
-        engine().least_squares(&a, &[1.0, 2.0, 3.0]);
+        let _ = engine().least_squares(&a, &[1.0, 2.0, 3.0]);
     }
 
     #[test]
     #[should_panic(expected = "solve: R is 3×3 but the rhs has 2 entries")]
     fn solve_rejects_mismatched_rhs_length() {
         let a = vec![vec![2.0, 0.5, -1.0], vec![0.5, 3.0, 0.2], vec![-1.0, 0.2, 1.8]];
-        engine().decompose(&a).solve(&[1.0, 2.0]);
+        let _ = engine().decompose(&a).solve(&[1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "solve: R is 2×3 but the rhs has 3 entries")]
+    fn solve_reports_real_dims_on_non_square_r() {
+        // a genuinely non-square R used to be reported as rows×rows;
+        // the message must carry the real row and column counts
+        let res = QrdResult { r: vec![vec![0.0; 3]; 2], qt: vec![vec![0.0; 3]; 3] };
+        let _ = res.solve(&[1.0, 2.0, 3.0]);
     }
 }

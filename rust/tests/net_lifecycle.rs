@@ -8,19 +8,28 @@
 //! here on the wire: every truncation point of a valid frame, garbage
 //! bytes, half-closes, deadline expiry, window backpressure, remote
 //! shutdown, wire-format v2 compatibility, mixed-op round trips, and a
-//! mini chaos run through the fault-injecting load generator.
+//! mini chaos run through the fault-injecting load generator. The v4
+//! streaming-session surface gets the same treatment: a full
+//! open/update/close lifecycle checked bit-exact against the offline
+//! [`QrdRls`] replay, `BadSession` contradictions in the malformed
+//! taxonomy, cap eviction answering with explicit errors, and the
+//! singular-solve verdict naming its rank-dropped column end to end.
 
 use fp_givens::coordinator::{
     read_frame, BatchEngine, BatchPolicy, Frame, FrameKind, JobKey, LoadgenConfig, Metrics,
     NativeEngine, NetClient, NetConfig, NetServer, OpKind, QrdService, ReadOutcome, RestartPolicy,
-    ShedPolicy,
+    SessionKey, ShedPolicy,
 };
+use fp_givens::fp::FpFormat;
+use fp_givens::qrd::QrdRls;
+use fp_givens::rotator::RotatorConfig;
 use std::io::Write;
 use std::net::{Shutdown, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 const STATUS_OK: u8 = 0;
+const STATUS_ERROR: u8 = 1;
 const STATUS_DEADLINE: u8 = 2;
 const STATUS_OVERLOAD: u8 = 3;
 
@@ -536,4 +545,230 @@ fn chaos_loadgen_reconciles_against_the_server() {
     // the ledger still exact
     server.wait_shutdown(Duration::from_millis(5));
     assert_identity(&server.shutdown());
+}
+
+/// Acceptance criterion for the streaming-session tentpole: a full
+/// `rls_open` → `rls_update`* → `rls_close` lifecycle over real
+/// sockets, every served weight vector bit-identical to a client-side
+/// [`QrdRls`] replay of the same (f32-quantized) updates, every
+/// response echoing the session key, the triangle touched by exactly
+/// one worker slot (session affinity), and the lifecycle ledger exact
+/// at shutdown.
+#[test]
+fn streaming_session_round_trip_is_bit_exact_with_the_offline_replay() {
+    // built by hand instead of `start_server` so the session table
+    // stays observable for the affinity proof
+    let factories: Vec<_> = (0..2)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy::with_max_restarts(1),
+    )
+    .with_max_m(8);
+    let sessions = svc.sessions();
+    let server = NetServer::bind("127.0.0.1:0", svc, fast_net()).expect("bind loopback");
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+
+    const TAPS: usize = 4;
+    const S: u64 = 0xFEED_0001;
+    let (lambda, delta) = (0.95f32, 1e-2f32);
+    let open = client
+        .request_session(
+            1,
+            S,
+            JobKey::new(OpKind::RlsOpen, TAPS),
+            &[lambda.to_bits(), delta.to_bits()],
+        )
+        .expect("open round trip");
+    assert_eq!(open.status, STATUS_OK, "open failed: {}", open.text());
+    assert_eq!(open.session, S, "the open response must echo the session key");
+    assert_eq!(open.op, OpKind::RlsOpen.as_u8(), "the response must echo the op byte");
+
+    // the offline oracle: same flagship unit config the session table
+    // runs, fed the identical f32-quantized updates
+    let cfg = RotatorConfig::hub(FpFormat::SINGLE, 26, 24);
+    let mut replay = QrdRls::new(cfg, TAPS, lambda as f64, delta as f64);
+    let upd = JobKey::new(OpKind::RlsUpdate, TAPS);
+    let n = 32usize;
+    for t in 0..n {
+        let row: Vec<f32> = (0..TAPS).map(|k| ((t * TAPS + k) as f32 * 0.37).sin()).collect();
+        let d = (t as f32 * 0.61).cos();
+        let mut words: Vec<u32> = row.iter().map(|v| v.to_bits()).collect();
+        words.push(d.to_bits());
+        let f = client.request_session(t as u64 + 2, S, upd, &words).expect("update round trip");
+        assert_eq!(f.status, STATUS_OK, "update {t}: {}", f.text());
+        assert_eq!(f.session, S, "update {t}: the response must echo the session key");
+        let x: Vec<f64> = row.iter().map(|&v| v as f64).collect();
+        replay.update(&x, d as f64);
+        let want: Vec<u32> = replay
+            .weights()
+            .expect("regularized triangle stays full-rank")
+            .iter()
+            .map(|&w| (w as f32).to_bits())
+            .collect();
+        assert_eq!(
+            f.words().expect("aligned payload"),
+            want,
+            "update {t}: served weights diverged from the offline replay"
+        );
+    }
+    // affinity: the key-affine router pins a session's updates to one
+    // shard and stealing declines session bins, so exactly one worker
+    // slot ever touched the triangle
+    let touched = sessions.touched_by(SessionKey(S)).expect("session resident before close");
+    assert_eq!(touched.len(), 1, "session affinity broken: slots {touched:?}");
+    let close = client
+        .request_session(n as u64 + 2, S, JobKey::new(OpKind::RlsClose, TAPS), &[])
+        .expect("close round trip");
+    assert_eq!(close.status, STATUS_OK, "close failed: {}", close.text());
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.sessions_opened(), 1);
+    assert_eq!(metrics.sessions_closed(), 1);
+    assert!(metrics.sessions_reconcile(), "session lifecycle identity must hold at exit");
+    assert_eq!(metrics.net_accepted_total(), n as u64 + 2);
+    assert_eq!(metrics.net_responded_total(), n as u64 + 2);
+    assert_identity(&metrics);
+}
+
+/// `BadSession` contradictions — a stateful op with no session key (on
+/// v4 and on v3, which cannot carry one) and a stateless op smuggling a
+/// nonzero key — are malformed frames: one error frame, connection
+/// closed, counted, never accepted.
+#[test]
+fn bad_session_frames_join_the_malformed_taxonomy() {
+    let server = start_server(fast_net());
+    let metrics = server.metrics();
+    let corpus: Vec<Vec<u8>> = vec![
+        Frame::request_op(1, OpKind::RlsUpdate, 2, &[0u32; 3]).encode(),
+        Frame::request_op(1, OpKind::RlsUpdate, 2, &[0u32; 3]).encode_v3(),
+        Frame::request(1, 2, &deterministic_matrix(2, 3)).with_session(0xBAD).encode(),
+    ];
+    let cases = corpus.len() as u64;
+    for (i, bytes) in corpus.into_iter().enumerate() {
+        let mut s = TcpStream::connect(server.local_addr()).expect("connect");
+        s.write_all(&bytes).expect("send bad-session frame");
+        s.shutdown(Shutdown::Write).expect("half-close");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut error_frames = 0;
+        loop {
+            match read_frame(&mut s) {
+                Ok(ReadOutcome::Frame(f)) => {
+                    assert_ne!(f.status, STATUS_OK, "case {i}: a bad session earned an ok");
+                    error_frames += 1;
+                }
+                Ok(ReadOutcome::Idle) => continue,
+                Ok(ReadOutcome::Eof) | Err(_) => break,
+            }
+        }
+        assert_eq!(error_frames, 1, "case {i}: want exactly one error frame");
+    }
+    wait_for(&metrics, "bad-session teardown", |m| {
+        m.frames_malformed() == cases && m.conn_opened() == m.conn_closed()
+    });
+    // rejected at decode: nothing was accepted, no session was opened,
+    // and a well-formed lifecycle still serves afterwards
+    assert_eq!(metrics.net_accepted_total(), 0);
+    assert_eq!(metrics.sessions_opened(), 0);
+    let mut client = NetClient::connect(server.local_addr()).expect("connect after corpus");
+    let f = client
+        .request_session(
+            1,
+            0xC1EA_u64,
+            JobKey::new(OpKind::RlsOpen, 2),
+            &[1.0f32.to_bits(), 1e-3f32.to_bits()],
+        )
+        .expect("clean open after the corpus");
+    assert_eq!(f.status, STATUS_OK, "{}", f.text());
+    drop(client);
+    let m = server.shutdown();
+    assert!(m.sessions_reconcile(), "the drained open must land in the eviction bucket");
+    assert_identity(&m);
+}
+
+/// At the `--max-sessions` cap the LRU session is evicted to make room;
+/// its owner learns through explicit `unknown session` errors (echoing
+/// the session key) on later updates — never silence — while the
+/// survivor keeps serving and the lifecycle ledger stays exact.
+#[test]
+fn cap_eviction_answers_later_updates_with_explicit_errors() {
+    let factories: Vec<_> = (0..2)
+        .map(|_| || Box::new(NativeEngine::flagship()) as Box<dyn BatchEngine>)
+        .collect();
+    let svc = QrdService::start_sharded(
+        factories,
+        BatchPolicy { max_batch: 8, max_wait_us: 100 },
+        RestartPolicy::with_max_restarts(1),
+    )
+    .with_max_m(8)
+    .with_sessions(1, Duration::from_secs(60));
+    let sessions = svc.sessions();
+    let server = NetServer::bind("127.0.0.1:0", svc, fast_net()).expect("bind loopback");
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    // two keys on the same table shard, so the second open must evict
+    // the first at the cap of one resident triangle per shard
+    let a = 0x51u64;
+    let b = (a + 1..a + 256)
+        .find(|&c| sessions.shard_of(SessionKey(c)) == sessions.shard_of(SessionKey(a)))
+        .expect("a colliding session key among 255 candidates");
+    for (i, s) in [a, b].into_iter().enumerate() {
+        let f = client
+            .request_session(
+                i as u64 + 1,
+                s,
+                JobKey::new(OpKind::RlsOpen, 2),
+                &[1.0f32.to_bits(), 1e-3f32.to_bits()],
+            )
+            .expect("open round trip");
+        assert_eq!(f.status, STATUS_OK, "open {s:#x}: {}", f.text());
+    }
+    let upd = JobKey::new(OpKind::RlsUpdate, 2);
+    let words = [1.0f32.to_bits(), 0.5f32.to_bits(), 0.2f32.to_bits()];
+    let f = client.request_session(3, a, upd, &words).expect("a verdict, not silence");
+    assert_eq!(f.status, STATUS_ERROR, "an evicted session must error, not serve");
+    assert_eq!(f.session, a, "the error must still echo the session key");
+    let text = f.text();
+    assert!(text.contains("unknown session"), "{text}");
+    let f = client.request_session(4, b, upd, &words).expect("update round trip");
+    assert_eq!(f.status, STATUS_OK, "the survivor must keep serving: {}", f.text());
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.sessions_opened(), 2);
+    // one eviction at the cap, one in the shutdown drain
+    assert_eq!(metrics.sessions_evicted(), 2);
+    assert!(metrics.sessions_reconcile(), "session lifecycle identity must hold at exit");
+    assert_identity(&metrics);
+}
+
+/// Satellite regression on the wire: a rank-deficient solve answers
+/// `STATUS_ERROR` naming the rank-dropped column (a batch of one, so
+/// the verdict is this job's), the worker survives the recoverable
+/// error, and the socket ledger still reconciles — error responses are
+/// responses.
+#[test]
+fn singular_solve_over_tcp_answers_an_error_naming_the_column() {
+    let server = start_server(fast_net());
+    let mut client = NetClient::connect(server.local_addr()).expect("connect");
+    // column 1 is exactly zero: it stays exactly zero through the
+    // rotations, so back substitution must refuse the system
+    let key = JobKey::new(OpKind::Solve, 2);
+    let a: Vec<u32> = [1.0f32, 0.0, 3.0, 0.0, 1.0, 1.0].iter().map(|v| v.to_bits()).collect();
+    let f = client.request_key(1, key, &a).expect("a verdict, not silence");
+    assert_eq!(f.status, STATUS_ERROR, "a singular solve must error: {}", f.text());
+    let text = f.text();
+    assert!(
+        text.contains("singular triangle — zero diagonal at column 1"),
+        "the error must name the rank-dropped column: {text}"
+    );
+    // recoverable, not fatal: a full-rank solve on the same connection
+    let good: Vec<u32> = [2.0f32, 0.0, 0.0, 2.0, 2.0, 4.0].iter().map(|v| v.to_bits()).collect();
+    let f = client.request_key(2, key, &good).expect("round trip");
+    assert_eq!(f.status, STATUS_OK, "full-rank solve after the error: {}", f.text());
+    drop(client);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.net_accepted_total(), 2);
+    assert_eq!(metrics.net_responded_total(), 2);
+    assert_identity(&metrics);
 }

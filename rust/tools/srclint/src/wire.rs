@@ -318,6 +318,7 @@ const OFFSET_FIELDS: &[(&str, &str)] = &[
     ("OFF_ID", "id"),
     ("OFF_M", "m"),
     ("OFF_LEN", "len"),
+    ("OFF_SESSION", "session"),
 ];
 
 /// Run the full cross-check. `frame`/`key` pair a display label with
@@ -660,7 +661,7 @@ pub const MAGIC: u32 = 0xAB;
 pub const VERSION: u8 = 3;
 pub const STATUS_OK: u8 = 0;
 pub const STATUS_ERROR: u8 = 1;
-pub const HEADER_LEN: usize = 24;
+pub const HEADER_LEN: usize = 32;
 pub const OFF_MAGIC: usize = 0;
 pub const OFF_VERSION: usize = 4;
 pub const OFF_KIND: usize = 5;
@@ -669,6 +670,7 @@ pub const OFF_OP: usize = 7;
 pub const OFF_ID: usize = 8;
 pub const OFF_M: usize = 16;
 pub const OFF_LEN: usize = 20;
+pub const OFF_SESSION: usize = 24;
 pub enum FrameKind { Request, Response }
 impl FrameKind {
     fn from_u8(b: u8) -> Option<FrameKind> {
@@ -692,7 +694,8 @@ offset  size  field
  8       8    id        echoed
 16       4    m         dimension
 20       4    len       payload bytes
-24     len    payload   words
+24       8    session   0 on stateless requests
+32     len    payload   words
 ```
 
 | op      | byte | request |
